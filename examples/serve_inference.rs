@@ -1,0 +1,101 @@
+//! End-to-end serving driver (the repo's E2E validation — EXPERIMENTS.md §E2E).
+//!
+//! Loads the trained model zoo, starts the L3 coordinator with RNS-analog
+//! workers whose modular MVMs execute through the AOT-compiled pallas
+//! kernel via PJRT, streams the frozen evaluation sets through as batched
+//! requests, and reports accuracy + latency/throughput.  This proves all
+//! three layers compose: rust coordinator -> PJRT runtime -> pallas HLO.
+//!
+//! Run: cargo run --release --example serve_inference [-- --requests=96 --backend=rns]
+//!   --backend=rns-pjrt uses the PJRT engine on the hot path (slower but
+//!   exercises the full AOT stack; default for the first 16 requests).
+
+use std::collections::HashMap;
+
+use rns_analog::analog::NoiseModel;
+use rns_analog::coordinator::{BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
+use rns_analog::nn::dataset::{dataset_for_model, load_eval_set};
+use rns_analog::nn::models::Batch;
+use rns_analog::runtime::default_artifacts_dir;
+use rns_analog::tensor::Nhwc;
+use rns_analog::util::cli::Args;
+
+fn main() {
+    let mut args = Args::parse_from(std::env::args().skip(1)).expect("args");
+    let artifacts = args.get_or("artifacts-dir", &default_artifacts_dir());
+    let requests_per_model = args.get_parsed::<usize>("requests", 48).unwrap();
+    let bits = args.get_parsed::<u32>("bits", 6).unwrap();
+    let backend = match args.get_or("backend", "rns-pjrt").as_str() {
+        "rns" => BackendKind::Rns { bits, redundant: 0, attempts: 1, noise: NoiseModel::None },
+        "rns-pjrt" => {
+            BackendKind::RnsPjrt { bits, redundant: 0, attempts: 1, noise: NoiseModel::None }
+        }
+        "fixed" => BackendKind::FixedPoint { bits },
+        _ => BackendKind::Fp32,
+    };
+    println!("serving with backend {backend:?}, {requests_per_model} requests/model\n");
+
+    let mut cfg = CoordinatorConfig::new(backend, &artifacts);
+    cfg.workers = 2;
+    cfg.batcher = BatcherConfig { max_batch: 8, ..Default::default() };
+    let coord = Coordinator::start(cfg);
+
+    // stream single-sample requests for two models, interleaved, and track
+    // the ground-truth label of every request id
+    let mut truth: HashMap<u64, i64> = HashMap::new();
+    let mut expected = 0usize;
+    for model in ["mlp", "bert"] {
+        let eval = load_eval_set(&artifacts, dataset_for_model(model)).expect("eval set");
+        for i in 0..requests_per_model.min(eval.len()) {
+            let input = match &eval.input {
+                Batch::Images(t) => {
+                    let stride = t.h * t.w * t.c;
+                    Batch::Images(Nhwc::from_vec(
+                        1,
+                        t.h,
+                        t.w,
+                        t.c,
+                        t.data[i * stride..(i + 1) * stride].to_vec(),
+                    ))
+                }
+                Batch::Tokens { tokens, seq, .. } => Batch::Tokens {
+                    tokens: tokens[i * seq..(i + 1) * seq].to_vec(),
+                    batch: 1,
+                    seq: *seq,
+                },
+            };
+            let id = coord.submit(model, input);
+            truth.insert(id, eval.labels[i]);
+            expected += 1;
+        }
+    }
+
+    // collect + score
+    let mut correct = 0usize;
+    let mut failures = 0usize;
+    for _ in 0..expected {
+        let resp = coord.recv().expect("response");
+        match &resp.result {
+            Ok(logits) => {
+                let pred = logits
+                    .row(0)
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i64)
+                    .unwrap();
+                if pred == truth[&resp.id] {
+                    correct += 1;
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("request {} failed: {e}", resp.id);
+            }
+        }
+    }
+    println!("accuracy over served requests: {}/{} = {:.1}%", correct, expected,
+             100.0 * correct as f64 / expected as f64);
+    assert_eq!(failures, 0, "no request may fail");
+    println!("\n--- coordinator report ---\n{}", coord.shutdown());
+}

@@ -1,0 +1,6 @@
+"""Build-time python package: L1 pallas kernels + L2 jax models + AOT export.
+
+Nothing in here runs at serving time — `make artifacts` lowers the jitted
+entry points to HLO text and trains/exports the small evaluation models;
+the rust coordinator consumes only the files under artifacts/.
+"""

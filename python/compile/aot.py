@@ -1,0 +1,119 @@
+"""AOT export: lower the L2 entry points to HLO *text* for the rust runtime.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exported per bit-width b in 4..8 (Table-I moduli, h = 128):
+  rns_mvm_b{b}.hlo.txt     — the pallas modular matmul alone:
+                             (x_res f32[n,B,K], w_res f32[n,K,N]) -> f32[n,B,N]
+  rns_gemm_b{b}.hlo.txt    — the full Fig. 2 pipeline:
+                             (x f32[B,K], w f32[K,N]) -> f32[B,N]
+  fixed_point_b{b}.hlo.txt — the baseline core with ADC truncation.
+  model.hlo.txt            — alias of rns_gemm_b6 (the paper's headline
+                             configuration) for the Makefile contract.
+  manifest.txt             — key=value metadata the rust loader parses
+                             (shapes, moduli, batch) without needing serde.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import RnsGemmConfig, fixed_point_gemm, rns_gemm
+from .kernels.rns_matmul import rns_matmul
+
+BATCH = 8
+H = 128
+BITS = range(4, 9)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_rns_mvm(cfg: RnsGemmConfig):
+    mods = jnp.asarray(cfg.moduli, jnp.float32)
+
+    def fn(x_res, w_res):
+        return (rns_matmul(x_res, w_res, mods),)
+
+    n = len(cfg.moduli)
+    xs = jax.ShapeDtypeStruct((n, BATCH, H), jnp.float32)
+    ws = jax.ShapeDtypeStruct((n, H, H), jnp.float32)
+    return jax.jit(fn).lower(xs, ws)
+
+
+def lower_rns_gemm(cfg: RnsGemmConfig):
+    def fn(x, w):
+        return (rns_gemm(x, w, cfg),)
+
+    xs = jax.ShapeDtypeStruct((BATCH, H), jnp.float32)
+    ws = jax.ShapeDtypeStruct((H, H), jnp.float32)
+    return jax.jit(fn).lower(xs, ws)
+
+
+def lower_fixed_point(bits: int):
+    def fn(x, w):
+        return (fixed_point_gemm(x, w, bits, H),)
+
+    xs = jax.ShapeDtypeStruct((BATCH, H), jnp.float32)
+    ws = jax.ShapeDtypeStruct((H, H), jnp.float32)
+    return jax.jit(fn).lower(xs, ws)
+
+
+def export(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[str] = [f"batch={BATCH}", f"h={H}"]
+    for b in BITS:
+        cfg = RnsGemmConfig.for_bits(b, H)
+        n = len(cfg.moduli)
+        manifest.append(f"moduli_b{b}={','.join(str(m) for m in cfg.moduli)}")
+        for name, lowered in (
+            (f"rns_mvm_b{b}", lower_rns_mvm(cfg)),
+            (f"rns_gemm_b{b}", lower_rns_gemm(cfg)),
+            (f"fixed_point_b{b}", lower_fixed_point(b)),
+        ):
+            text = to_hlo_text(lowered)
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  wrote {path} ({len(text)} chars, n={n})")
+    # Makefile contract: artifacts/model.hlo.txt is the headline config.
+    import shutil
+
+    shutil.copyfile(
+        os.path.join(out_dir, "rns_gemm_b6.hlo.txt"), os.path.join(out_dir, "model.hlo.txt")
+    )
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true", help="HLO export only")
+    args = ap.parse_args()
+    export(args.out)
+    from .export_golden import export as export_golden
+
+    export_golden(args.out)
+    if not args.skip_train:
+        from .train import export_all
+
+        export_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

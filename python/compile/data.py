@@ -1,0 +1,138 @@
+"""Synthetic datasets (offline image: no downloads — see DESIGN.md §5).
+
+Three tasks mirroring the paper's benchmark mix:
+  * digits : 28x28x1 procedurally rendered digits (MNIST stand-in) for the
+             MLP and the two-layer CNN of Fig. 1.
+  * shapes : 16x16x3 colored geometric patterns, 10 classes, for MiniResNet
+             (ResNet50/ImageNet stand-in).
+  * tokens : length-32 integer sequences, 4-way majority-group
+             classification, for TinyBert (BERT-large stand-in).
+
+All generators are deterministic in the seed so the rust side and the
+python side can regenerate identical evaluation sets.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# 5x7 bitmap font for digits 0-9 (rows of 5 bits, MSB left).
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["11110", "00001", "00001", "01110", "00001", "00001", "11110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["01110", "10000", "11110", "10001", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00001", "01110"],
+}
+
+
+def _glyph(d: int) -> np.ndarray:
+    return np.array([[int(c) for c in row] for row in _FONT[d]], dtype=np.float32)
+
+
+def digits_dataset(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (images (n,28,28,1) f32 in [0,1], labels (n,) int64)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n)
+    imgs = np.zeros((n, 28, 28, 1), dtype=np.float32)
+    for i, lab in enumerate(labels):
+        g = _glyph(int(lab))
+        scale = int(rng.integers(2, 4))  # 2x or 3x upscale
+        big = np.kron(g, np.ones((scale, scale), dtype=np.float32))
+        # random stroke thickening: OR with a 1-px shifted copy
+        if rng.random() < 0.5:
+            shifted = np.zeros_like(big)
+            shifted[:, 1:] = big[:, :-1]
+            big = np.maximum(big, shifted)
+        gh, gw = big.shape
+        oy = int(rng.integers(0, 28 - gh + 1))
+        ox = int(rng.integers(0, 28 - gw + 1))
+        canvas = np.zeros((28, 28), dtype=np.float32)
+        canvas[oy : oy + gh, ox : ox + gw] = big
+        intensity = 0.7 + 0.3 * rng.random()
+        canvas *= intensity
+        canvas += rng.normal(0, 0.08, canvas.shape).astype(np.float32)
+        imgs[i, :, :, 0] = np.clip(canvas, 0.0, 1.0)
+    return imgs, labels.astype(np.int64)
+
+
+def _shape_pattern(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One 16x16 binary pattern for class `cls` in [0, 10)."""
+    yy, xx = np.mgrid[0:16, 0:16].astype(np.float32)
+    cy, cx = 7.5 + rng.uniform(-1.5, 1.5), 7.5 + rng.uniform(-1.5, 1.5)
+    r = 4.0 + rng.uniform(-1.0, 1.5)
+    d2 = (yy - cy) ** 2 + (xx - cx) ** 2
+    if cls == 0:  # disk
+        return (d2 <= r * r).astype(np.float32)
+    if cls == 1:  # ring
+        return ((d2 <= r * r) & (d2 >= (r - 2) ** 2)).astype(np.float32)
+    if cls == 2:  # square
+        return ((np.abs(yy - cy) <= r * 0.8) & (np.abs(xx - cx) <= r * 0.8)).astype(np.float32)
+    if cls == 3:  # diamond
+        return ((np.abs(yy - cy) + np.abs(xx - cx)) <= r).astype(np.float32)
+    if cls == 4:  # horizontal stripes
+        period = int(rng.integers(3, 5))
+        return ((yy.astype(np.int64) // period) % 2 == 0).astype(np.float32)
+    if cls == 5:  # vertical stripes
+        period = int(rng.integers(3, 5))
+        return ((xx.astype(np.int64) // period) % 2 == 0).astype(np.float32)
+    if cls == 6:  # checkerboard
+        period = int(rng.integers(3, 5))
+        return (((yy.astype(np.int64) // period) + (xx.astype(np.int64) // period)) % 2 == 0).astype(np.float32)
+    if cls == 7:  # diagonal band
+        off = rng.uniform(-3, 3)
+        return (np.abs(yy - xx + off) <= 2.5).astype(np.float32)
+    if cls == 8:  # cross
+        return ((np.abs(yy - cy) <= 1.5) | (np.abs(xx - cx) <= 1.5)).astype(np.float32)
+    # cls == 9: corner gradient
+    return ((yy + xx) / 30.0).astype(np.float32)
+
+
+def shapes_dataset(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (images (n,16,16,3) f32 in [0,1], labels (n,) int64)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=n)
+    imgs = np.zeros((n, 16, 16, 3), dtype=np.float32)
+    for i, lab in enumerate(labels):
+        pat = _shape_pattern(int(lab), rng)
+        color = rng.uniform(0.5, 1.0, size=3).astype(np.float32)
+        bg = rng.uniform(0.0, 0.25, size=3).astype(np.float32)
+        img = pat[:, :, None] * color[None, None, :] + (1 - pat[:, :, None]) * bg[None, None, :]
+        img += rng.normal(0, 0.05, img.shape).astype(np.float32)
+        imgs[i] = np.clip(img, 0.0, 1.0)
+    return imgs, labels.astype(np.int64)
+
+
+def tokens_dataset(n: int, seed: int, vocab: int = 32, seq: int = 32, classes: int = 4):
+    """Majority-group token classification.
+
+    Tokens are split into `classes` groups by `token % classes`; the label
+    is the group with the highest count in the sequence (ties -> smallest
+    group id).  Requires aggregation over the whole sequence, which
+    exercises attention + pooling.
+    """
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, vocab, size=(n, seq))
+    # bias each sequence toward a random group so classes are learnable
+    for i in range(n):
+        g = int(rng.integers(0, classes))
+        mask = rng.random(seq) < 0.35
+        group_tokens = np.arange(vocab)[np.arange(vocab) % classes == g]
+        toks[i, mask] = rng.choice(group_tokens, size=int(mask.sum()))
+    counts = np.zeros((n, classes), dtype=np.int64)
+    for g in range(classes):
+        counts[:, g] = ((toks % classes) == g).sum(axis=1)
+    labels = counts.argmax(axis=1)
+    return toks.astype(np.int64), labels.astype(np.int64)
+
+
+DATASETS = {
+    "digits": digits_dataset,
+    "shapes": shapes_dataset,
+    "tokens": tokens_dataset,
+}

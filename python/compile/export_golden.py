@@ -1,0 +1,93 @@
+"""Golden cross-check exporter: pins the python and rust implementations of
+the RNS substrate to each other.
+
+Writes artifacts/golden.rt (RNSTORE1) containing, for each Table-I bit
+width:
+  * random signed values + their residues (forward-conversion goldens)
+  * CRT reconstruction results (crt goldens)
+  * quantization cases: float matrix -> quantized ints + scales
+  * RRNS decode cases: corrupted codewords + expected decoded value
+    (-2^62 sentinel marks "Detected")
+
+The rust test `integration_golden.rs` loads this file and asserts its own
+implementations produce identical results — catching any silent divergence
+between python/compile/rnsmath.py and rust/src/rns/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from . import tensorstore as TS
+from .rnsmath import PAPER_TABLE1, RnsContext, extend_moduli
+from .rrns import RrnsCode
+
+DETECTED_SENTINEL = -(2**62)
+
+
+def export(out_dir: str, seed: int = 20240711, cases: int = 256) -> str:
+    rng = np.random.default_rng(seed)
+    tensors: dict[str, np.ndarray] = {}
+    for bits, moduli in PAPER_TABLE1.items():
+        ctx = RnsContext(moduli)
+        half = ctx.big_m // 2
+        vals = rng.integers(-(half - 1), half, size=cases, dtype=np.int64)
+        res = ctx.forward_array(vals)  # (cases, n)
+        tensors[f"b{bits}.moduli"] = np.asarray(moduli, dtype=np.int64)
+        tensors[f"b{bits}.values"] = vals
+        tensors[f"b{bits}.residues"] = res.astype(np.int64)
+        # crt goldens: reconstruct from residues (must equal vals)
+        rec = ctx.crt_signed_array(res.T)
+        assert np.array_equal(rec, vals)
+        tensors[f"b{bits}.crt"] = rec
+
+    # quantization goldens (b = 8): matrix + expected q + scales
+    from . import quantize as q
+    import jax.numpy as jnp
+
+    x = rng.normal(0, 2, size=(8, 32)).astype(np.float32)
+    xq, s = q.quantize_activations(jnp.asarray(x), 8)
+    tensors["quant.x"] = x
+    tensors["quant.xq"] = np.asarray(xq).astype(np.int64)
+    tensors["quant.scales"] = np.asarray(s).reshape(-1).astype(np.float32)
+
+    # RRNS decode goldens (b = 8 + 2 redundant)
+    all_moduli = extend_moduli(PAPER_TABLE1[8], 2)
+    code = RrnsCode(all_moduli, len(PAPER_TABLE1[8]))
+    half = code.legitimate_range // 2
+    words = []
+    expected = []
+    for _ in range(cases):
+        v = int(rng.integers(-(half - 1), half))
+        res = code.encode(v)
+        n_err = int(rng.integers(0, 3))  # 0, 1 or 2 errors
+        idxs = rng.choice(code.n, size=n_err, replace=False)
+        for i in idxs:
+            m = all_moduli[i]
+            res[i] = int((res[i] + 1 + rng.integers(0, m - 1)) % m)
+        out = code.decode(res)
+        words.append(res)
+        expected.append(DETECTED_SENTINEL if out is None else out[0])
+    tensors["rrns.moduli"] = np.asarray(all_moduli, dtype=np.int64)
+    tensors["rrns.k"] = np.asarray([code.k], dtype=np.int64)
+    tensors["rrns.words"] = np.asarray(words, dtype=np.int64)
+    tensors["rrns.expected"] = np.asarray(expected, dtype=np.int64)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "golden.rt")
+    TS.save(path, tensors)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    print(f"wrote {export(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import ref, rns_matmul  # noqa: F401

@@ -1,0 +1,44 @@
+"""Pure reference oracles for the L1 kernels.
+
+Two tiers:
+  * numpy int64 — the ground truth (exact integer arithmetic, no float).
+  * pure-jnp    — a jit-able float reference used for HLO-size comparisons
+                  and as the paper's "FP32 ground truth" when measuring
+                  dot-product error (Fig. 3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def modular_matmul_ref(
+    x_res: np.ndarray,  # (n, B, K) integer residues
+    w_res: np.ndarray,  # (n, K, N)
+    moduli: np.ndarray,  # (n,)
+) -> np.ndarray:  # (n, B, N) int64
+    """Exact per-channel (X_i @ W_i) mod m_i in int64."""
+    x = np.asarray(x_res, dtype=np.int64)
+    w = np.asarray(w_res, dtype=np.int64)
+    out = np.empty((x.shape[0], x.shape[1], w.shape[2]), dtype=np.int64)
+    for i, m in enumerate(np.asarray(moduli, dtype=np.int64)):
+        out[i] = (x[i] @ w[i]) % m
+    return out
+
+
+def fixed_point_matmul_ref(
+    x: np.ndarray,  # (B, K) integer-valued
+    w: np.ndarray,  # (K, N)
+    dropped_bits: int,
+) -> np.ndarray:
+    """Exact MVM then symmetric truncation of `dropped_bits` LSBs."""
+    y = np.asarray(x, dtype=np.int64) @ np.asarray(w, dtype=np.int64)
+    scale = np.int64(1) << np.int64(dropped_bits)
+    trunc = np.sign(y) * (np.abs(y) // scale)
+    return trunc * scale
+
+
+def matmul_fp32_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """The paper's FP32 ground truth for error measurements."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))

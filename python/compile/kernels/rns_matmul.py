@@ -1,0 +1,224 @@
+"""L1 — Pallas kernel for the RNS modular matmul (the paper's hot spot).
+
+Each residue channel i computes  out_i = (X_i @ W_i) mod m_i  where X_i and
+W_i hold the residues of the quantized activations/weights w.r.t. modulus
+m_i.  This is the digital twin of the paper's per-modulus analog MVM unit
+(Fig. 2): the per-block `mod m_i` folded into the accumulation loop plays
+the role of the analog-domain modulo (ring oscillator / optical phase) that
+keeps the output inside [0, m_i) so a b-bit ADC loses no information.
+
+Hardware adaptation (see DESIGN.md §3): the paper tiles DNN layers onto a
+fixed h×h analog array; here the BlockSpec tiles the same computation for
+VMEM — one (block_b, block_k)x(block_k, block_n) MXU-shaped tile per grid
+step, channel-major grid so the n residue channels stay independent
+(no carry propagation, exactly as in the RNS).
+
+Exactness: residues < 2^8 so products < 2^16 and a K-block of <=256
+products sums below 2^24 — the exact-integer range of f32.  Reducing
+`mod m` after every block keeps every intermediate exactly representable,
+making this f32 kernel bit-identical to the int64 oracle in ref.py.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both the python tests
+and the rust runtime can run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Maximum K-block that keeps a block-sum of 8-bit residue products below
+# 2^24 (f32 exact-integer range): 255^2 * 256 = 16.6M < 2^24? No: 2^24 =
+# 16.78M and 255^2*256 = 16.65M — inside, but without headroom for the
+# carried accumulator (< m <= 255).  128 gives 2x headroom; it also matches
+# the paper's h=128 analog array height.
+MAX_KBLOCK = 128
+
+
+def exact_mod(x: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """`x mod m` for non-negative integer-valued f32 x < 2^24.
+
+    f32 division can round the quotient across a multiple-of-m boundary, so
+    floor(x/m) may be off by one in either direction; one correction step
+    each way restores the exact remainder.
+    """
+    q = jnp.floor(x / m)
+    r = x - q * m
+    r = jnp.where(r >= m, r - m, r)
+    r = jnp.where(r < 0, r + m, r)
+    return r
+
+
+def _rns_matmul_kernel(m_ref, x_ref, w_ref, o_ref, *, kblock: int):
+    """Grid = (n_channels,). Refs carry a leading channel dim of size 1.
+
+    x_ref: (1, B, K) residues of the activations for this channel
+    w_ref: (1, K, N) residues of the weights for this channel
+    m_ref: (1,)      the channel's modulus (f32-encoded integer)
+    o_ref: (1, B, N) output residues in [0, m)
+    """
+    m = m_ref[0]
+    x = x_ref[0]
+    w = w_ref[0]
+    k_total = x.shape[1]
+    nblocks = k_total // kblock
+
+    def body(j, acc):
+        xb = lax.dynamic_slice_in_dim(x, j * kblock, kblock, axis=1)
+        wb = lax.dynamic_slice_in_dim(w, j * kblock, kblock, axis=0)
+        # block partial sums < kblock * (m-1)^2 <= 2^23; acc < m adds < 2^8.
+        return exact_mod(acc + jnp.dot(xb, wb), m)
+
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    acc = lax.fori_loop(0, nblocks, body, acc)
+    rem = k_total - nblocks * kblock
+    if rem:  # static tail (shapes are static at trace time)
+        xb = lax.dynamic_slice_in_dim(x, nblocks * kblock, rem, axis=1)
+        wb = lax.dynamic_slice_in_dim(w, nblocks * kblock, rem, axis=0)
+        acc = exact_mod(acc + jnp.dot(xb, wb), m)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("kblock",))
+def rns_matmul(
+    x_res: jnp.ndarray,  # f32 (n, B, K), integer-valued residues
+    w_res: jnp.ndarray,  # f32 (n, K, N)
+    moduli: jnp.ndarray,  # f32 (n,)
+    kblock: int = MAX_KBLOCK,
+) -> jnp.ndarray:  # f32 (n, B, N)
+    """Channel-parallel modular matmul via pallas (interpret mode)."""
+    n, b, k = x_res.shape
+    _, _, nn = w_res.shape
+    if kblock > MAX_KBLOCK:
+        raise ValueError(f"kblock {kblock} > MAX_KBLOCK {MAX_KBLOCK} breaks f32 exactness")
+    return pl.pallas_call(
+        functools.partial(_rns_matmul_kernel, kblock=min(kblock, k) or 1),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, b, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k, nn), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, nn), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b, nn), jnp.float32),
+        interpret=True,
+    )(moduli, x_res, w_res)
+
+
+def _fixed_point_kernel(x_ref, w_ref, o_ref, *, shift: float, kblock: int):
+    """Baseline fixed-point analog MVM with ADC truncation (MSB-keep).
+
+    Computes y = X @ W exactly, then models a b_adc-bit ADC reading only the
+    MSBs: out = floor(y / 2^shift) (sign-symmetric, toward zero, matching
+    how a truncated two's-complement readout drops LSBs of |y|).
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    k_total = x.shape[1]
+    nblocks = (k_total + kblock - 1) // kblock
+
+    def body(j, acc):
+        xb = lax.dynamic_slice_in_dim(x, j * kblock, kblock, axis=1)
+        wb = lax.dynamic_slice_in_dim(w, j * kblock, kblock, axis=0)
+        return acc + jnp.dot(xb, wb)
+
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    acc = lax.fori_loop(0, nblocks, body, acc) if k_total % kblock == 0 else x @ w
+    scale = 2.0**shift
+    trunc = jnp.sign(acc) * jnp.floor(jnp.abs(acc) / scale)
+    o_ref[...] = trunc * scale
+
+
+@functools.partial(jax.jit, static_argnames=("dropped_bits", "kblock"))
+def fixed_point_matmul(
+    x: jnp.ndarray,  # f32 (B, K) integer-valued quantized activations
+    w: jnp.ndarray,  # f32 (K, N) integer-valued quantized weights
+    dropped_bits: int,
+    kblock: int = MAX_KBLOCK,
+) -> jnp.ndarray:
+    """Regular fixed-point analog core: exact MVM then drop b_out - b_adc LSBs.
+
+    NOTE exactness: the *untruncated* accumulator can exceed 2^24 for b=8,
+    K=128 (b_out = 22).  2^22 < 2^24, so f32 stays exact for every Table-I
+    configuration (b<=8, h<=128 -> b_out <= 22); guarded in tests.
+    """
+    b, k = x.shape
+    _, n = w.shape
+    return pl.pallas_call(
+        functools.partial(
+            _fixed_point_kernel, shift=float(dropped_bits), kblock=min(kblock, k) or 1
+        ),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Grid-accumulation variant: K-blocks as a grid dimension
+# ---------------------------------------------------------------------------
+#
+# `rns_matmul` holds a whole (B, K) x (K, N) channel tile in VMEM and loops
+# over K-blocks *inside* the kernel.  For K larger than VMEM allows, the
+# canonical TPU pattern instead makes the K-block a grid dimension and
+# lets the BlockSpec index_map stream one (B, kblock) x (kblock, N) pair
+# per step while the output block stays resident and accumulates — the
+# explicit HBM<->VMEM schedule the paper expresses with its h-tall analog
+# array.  Both variants are bit-exact against ref.py; aot.py exports the
+# first (smaller HLO), and the tests pin them to each other.
+
+
+def _rns_matmul_grid_kernel(m_ref, x_ref, w_ref, o_ref):
+    """Grid = (n_channels, K // kblock); o_ref revisited across dim 1."""
+    k_idx = pl.program_id(1)
+    m = m_ref[0]
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[0] = jnp.zeros_like(o_ref[0])
+
+    acc = o_ref[0] + jnp.dot(x_ref[0], w_ref[0])
+    o_ref[0] = exact_mod(acc, m)
+
+
+@functools.partial(jax.jit, static_argnames=("kblock",))
+def rns_matmul_grid(
+    x_res: jnp.ndarray,  # f32 (n, B, K)
+    w_res: jnp.ndarray,  # f32 (n, K, N)
+    moduli: jnp.ndarray,  # f32 (n,)
+    kblock: int = MAX_KBLOCK,
+) -> jnp.ndarray:
+    """K-streamed modular matmul: one (kblock) slab in VMEM per grid step."""
+    n, b, k = x_res.shape
+    _, _, nn = w_res.shape
+    kblock = min(kblock, k)
+    if kblock > MAX_KBLOCK:
+        raise ValueError(f"kblock {kblock} > MAX_KBLOCK {MAX_KBLOCK} breaks f32 exactness")
+    if k % kblock != 0:
+        # pad K with zero residues (exact: zero rows contribute nothing)
+        pad = kblock - (k % kblock)
+        x_res = jnp.pad(x_res, ((0, 0), (0, 0), (0, pad)))
+        w_res = jnp.pad(w_res, ((0, 0), (0, pad), (0, 0)))
+        k += pad
+    return pl.pallas_call(
+        _rns_matmul_grid_kernel,
+        grid=(n, k // kblock),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, b, kblock), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, kblock, nn), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, nn), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b, nn), jnp.float32),
+        interpret=True,
+    )(moduli, x_res, w_res)

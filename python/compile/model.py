@@ -1,0 +1,280 @@
+"""L2 — jax compute graphs: the RNS GEMM pipeline and the evaluation models.
+
+Two roles:
+  1. `rns_gemm` / `fixed_point_gemm`: the paper's Fig. 2 dataflow as a
+     single jitted graph (quantize -> residues -> pallas modular matmul ->
+     CRT -> dequantize).  `aot.py` lowers these to HLO text for the rust
+     runtime.
+  2. Plain-f32 model definitions (MLP / TwoLayerCnn / MiniResNet /
+     TinyBert) used by `train.py` to produce the trained weights that the
+     rust accuracy experiments (Figs. 1, 4, 6) evaluate.
+
+CRT needs exact integer arithmetic up to M^2-ish magnitudes (~2^32 for
+Table-I sets), beyond f32's 2^24 window, so x64 is enabled and the CRT runs
+in f64 (exact below 2^53).  Training code pins f32 explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize as q
+from .kernels.rns_matmul import exact_mod, fixed_point_matmul, rns_matmul
+from .rnsmath import RnsContext, required_output_bits, select_moduli
+
+
+# --------------------------------------------------------------------------
+# The paper's RNS GEMM pipeline (Fig. 2)
+# --------------------------------------------------------------------------
+
+
+class RnsGemmConfig(NamedTuple):
+    bits: int
+    moduli: tuple[int, ...]
+
+    @classmethod
+    def for_bits(cls, bits: int, h: int = 128) -> "RnsGemmConfig":
+        return cls(bits=bits, moduli=tuple(select_moduli(bits, h)))
+
+
+def crt_f64(res: jnp.ndarray, ctx: RnsContext) -> jnp.ndarray:
+    """Eq. (1) in f64: residues (n, ...) -> signed integers (...).
+
+    Every intermediate stays below n * m_max * M < 2^34 << 2^53, so f64
+    arithmetic is exact; `exact_mod` guards the one division."""
+    coeff = jnp.asarray(ctx.crt_coeff, jnp.float64)
+    big_m = float(ctx.big_m)
+    acc = jnp.zeros(res.shape[1:], jnp.float64)
+    for i in range(ctx.n):
+        acc = exact_mod(acc + res[i].astype(jnp.float64) * coeff[i], big_m)
+    return jnp.where(acc > big_m // 2, acc - big_m, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def rns_gemm(x: jnp.ndarray, w: jnp.ndarray, cfg: RnsGemmConfig) -> jnp.ndarray:
+    """Full RNS analog-core dataflow: f32 (B,K) x (K,N) -> f32 (B,N).
+
+    The modular matmul (the analog part) runs in the pallas kernel; the
+    scaling, forward conversion, CRT and rescale are the digital wrapper
+    exactly as in Fig. 2.
+    """
+    ctx = RnsContext(list(cfg.moduli))
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    xq, s_in = q.quantize_activations(x, cfg.bits)
+    wq, s_w = q.quantize_weights(w, cfg.bits)
+    mods = jnp.asarray(cfg.moduli, jnp.float32)
+    xr = q.to_residues(xq, mods)                      # (n, B, K)
+    wr = q.to_residues(wq, mods)                      # (n, K, N)
+    out_res = rns_matmul(xr, wr, mods)                # (n, B, N) in [0, m_i)
+    y_si = crt_f64(out_res, ctx)                      # signed integers
+    return q.dequantize(y_si.astype(jnp.float32), s_in, s_w, cfg.bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "h"))
+def fixed_point_gemm(x: jnp.ndarray, w: jnp.ndarray, bits: int, h: int | None = None) -> jnp.ndarray:
+    """Baseline: regular fixed-point analog core with b_adc = bits ADCs.
+
+    Drops b_out - bits LSBs of every partial dot product (paper Table I,
+    right half)."""
+    k = x.shape[-1]
+    b_out = required_output_bits(bits, bits, h or k)
+    dropped = max(b_out - bits, 0)
+    xq, s_in = q.quantize_activations(x.astype(jnp.float32), bits)
+    wq, s_w = q.quantize_weights(w.astype(jnp.float32), bits)
+    y = fixed_point_matmul(xq, wq, dropped)
+    return q.dequantize(y, s_in, s_w, bits)
+
+
+# --------------------------------------------------------------------------
+# Evaluation models (trained in f32 by train.py, evaluated in rust)
+# --------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in: int, fan_out: int):
+    wkey, _ = jax.random.split(key)
+    scale = float(np.sqrt(2.0 / fan_in))
+    return {
+        "w": (jax.random.normal(wkey, (fan_in, fan_out)) * scale).astype(jnp.float32),
+        "b": jnp.zeros((fan_out,), jnp.float32),
+    }
+
+
+def _conv_init(key, kh: int, kw: int, cin: int, cout: int):
+    scale = float(np.sqrt(2.0 / (kh * kw * cin)))
+    return {
+        "w": (jax.random.normal(key, (kh, kw, cin, cout)) * scale).astype(jnp.float32),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def conv2d(x: jnp.ndarray, p: dict, stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    """NHWC conv with HWIO weights — the layout the rust im2col mirrors."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def layernorm(x: jnp.ndarray, p: dict, eps: float = 1e-5) -> jnp.ndarray:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["b"]
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    # tanh approximation — matches the rust implementation bit-for-bit
+    # closely enough for accuracy experiments.
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+# ---- MLP (digits) ----------------------------------------------------------
+
+MLP_DIMS = (784, 256, 128, 10)
+
+
+def mlp_init(key):
+    keys = jax.random.split(key, len(MLP_DIMS) - 1)
+    return {f"fc{i}": _dense_init(k, MLP_DIMS[i], MLP_DIMS[i + 1]) for i, k in enumerate(keys)}
+
+
+def mlp_apply(params, x):
+    h = x.reshape((x.shape[0], -1)).astype(jnp.float32)
+    for i in range(len(MLP_DIMS) - 2):
+        p = params[f"fc{i}"]
+        h = jax.nn.relu(h @ p["w"] + p["b"])
+    p = params[f"fc{len(MLP_DIMS) - 2}"]
+    return h @ p["w"] + p["b"]
+
+
+# ---- Two-layer CNN (paper Fig. 1 "MNIST" model) ----------------------------
+
+
+def cnn_init(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv1": _conv_init(k1, 3, 3, 1, 8),
+        "conv2": _conv_init(k2, 3, 3, 8, 16),
+        "fc": _dense_init(k3, 7 * 7 * 16, 10),
+    }
+
+
+def cnn_apply(params, x):
+    """x: (B, 28, 28, 1) -> logits (B, 10)."""
+    h = jax.nn.relu(conv2d(x.astype(jnp.float32), params["conv1"]))
+    h = maxpool2(h)                                  # 14x14x8
+    h = jax.nn.relu(conv2d(h, params["conv2"]))
+    h = maxpool2(h)                                  # 7x7x16
+    h = h.reshape((h.shape[0], -1))
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+# ---- MiniResNet (stand-in for ResNet50 — see DESIGN.md §5) -----------------
+
+RESNET_WIDTH = 16
+RESNET_BLOCKS = 3
+
+
+def resnet_init(key):
+    keys = jax.random.split(key, 2 + 2 * RESNET_BLOCKS)
+    params = {"stem": _conv_init(keys[0], 3, 3, 3, RESNET_WIDTH)}
+    for b in range(RESNET_BLOCKS):
+        params[f"block{b}_conv1"] = _conv_init(keys[1 + 2 * b], 3, 3, RESNET_WIDTH, RESNET_WIDTH)
+        params[f"block{b}_conv2"] = _conv_init(keys[2 + 2 * b], 3, 3, RESNET_WIDTH, RESNET_WIDTH)
+    params["fc"] = _dense_init(keys[-1], RESNET_WIDTH, 10)
+    return params
+
+
+def resnet_apply(params, x):
+    """x: (B, 16, 16, 3) -> logits (B, 10). Residual adds after every block
+    make the network depth-sensitive to quantization error, the property
+    Fig. 1 relies on."""
+    h = jax.nn.relu(conv2d(x.astype(jnp.float32), params["stem"]))
+    for b in range(RESNET_BLOCKS):
+        r = jax.nn.relu(conv2d(h, params[f"block{b}_conv1"]))
+        r = conv2d(r, params[f"block{b}_conv2"])
+        h = jax.nn.relu(h + r)
+    h = h.mean(axis=(1, 2))                          # global average pool
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+# ---- TinyBert (stand-in for BERT-large — see DESIGN.md §5) -----------------
+
+BERT_VOCAB = 32
+BERT_SEQ = 32
+BERT_DIM = 64
+BERT_HEADS = 4
+BERT_FFN = 128
+BERT_LAYERS = 2
+BERT_CLASSES = 4
+
+
+def bert_init(key):
+    keys = jax.random.split(key, 2 + 6 * BERT_LAYERS)
+    params = {
+        "embed": (jax.random.normal(keys[0], (BERT_VOCAB, BERT_DIM)) * 0.05).astype(jnp.float32),
+        "pos": (jax.random.normal(keys[1], (BERT_SEQ, BERT_DIM)) * 0.05).astype(jnp.float32),
+    }
+    for l in range(BERT_LAYERS):
+        k = keys[2 + 6 * l : 8 + 6 * l]
+        params[f"l{l}_wq"] = _dense_init(k[0], BERT_DIM, BERT_DIM)
+        params[f"l{l}_wk"] = _dense_init(k[1], BERT_DIM, BERT_DIM)
+        params[f"l{l}_wv"] = _dense_init(k[2], BERT_DIM, BERT_DIM)
+        params[f"l{l}_wo"] = _dense_init(k[3], BERT_DIM, BERT_DIM)
+        params[f"l{l}_ffn1"] = _dense_init(k[4], BERT_DIM, BERT_FFN)
+        params[f"l{l}_ffn2"] = _dense_init(k[5], BERT_FFN, BERT_DIM)
+        params[f"l{l}_ln1"] = {"g": jnp.ones((BERT_DIM,)), "b": jnp.zeros((BERT_DIM,))}
+        params[f"l{l}_ln2"] = {"g": jnp.ones((BERT_DIM,)), "b": jnp.zeros((BERT_DIM,))}
+    params["cls"] = _dense_init(jax.random.split(key)[0], BERT_DIM, BERT_CLASSES)
+    return params
+
+
+def _attention(h, params, l):
+    b, s, d = h.shape
+    hd = d // BERT_HEADS
+
+    def proj(name):
+        p = params[f"l{l}_{name}"]
+        return (h @ p["w"] + p["b"]).reshape(b, s, BERT_HEADS, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = proj("wq"), proj("wk"), proj("wv")
+    att = jax.nn.softmax(qh @ kh.transpose(0, 1, 3, 2) / np.sqrt(hd), axis=-1)
+    out = (att @ vh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    p = params[f"l{l}_wo"]
+    return out @ p["w"] + p["b"]
+
+
+def bert_apply(params, tokens):
+    """tokens: int (B, SEQ) -> logits (B, BERT_CLASSES)."""
+    h = params["embed"][tokens] + params["pos"][None, :, :]
+    for l in range(BERT_LAYERS):
+        h = layernorm(h + _attention(h, params, l), params[f"l{l}_ln1"])
+        p1, p2 = params[f"l{l}_ffn1"], params[f"l{l}_ffn2"]
+        ffn = gelu(h @ p1["w"] + p1["b"]) @ p2["w"] + p2["b"]
+        h = layernorm(h + ffn, params[f"l{l}_ln2"])
+    pooled = h.mean(axis=1)
+    p = params["cls"]
+    return pooled @ p["w"] + p["b"]
+
+
+MODELS = {
+    "mlp": (mlp_init, mlp_apply),
+    "cnn": (cnn_init, cnn_apply),
+    "resnet": (resnet_init, resnet_apply),
+    "bert": (bert_init, bert_apply),
+}

@@ -1,0 +1,59 @@
+"""Paper §III-B scaling + quantization (build-time jax implementation).
+
+Mirrors rust/src/quant/.  The dataflow (Fig. 2):
+
+  s_in  = max(|X_HP|)                      (one scalar per input vector)
+  s_w[r] = max(|W_HP[r,:]|)                (one scalar per weight row)
+  X_LP = round(X_HP / s_in  * (2^(b-1)-1))  in [-(2^(b-1)-1), 2^(b-1)-1]
+  W_LP = round(W_HP / s_w   * (2^(b-1)-1))
+  residues = X_LP mod m_i   (negatives wrap through M)
+  ... modular matmul ... CRT ...
+  Y[k] = Y_SI[k] * s_in * s_w[k] / (2^(b-1)-1)^2
+
+Note the convention: the MVM here is X @ W with W of shape (K, N); the
+paper's per-row scaling of the h x h weight matrix corresponds to scaling
+per *output* column in this layout (each output neuron k has scale s_w[k]),
+matching `Y[k] = Y_SI[k] * s_in * s_w[k]`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> float:
+    """Largest symmetric quantized magnitude: 2^(b-1) - 1."""
+    return float((1 << (bits - 1)) - 1)
+
+
+def quantize_activations(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-vector symmetric quantization.  x: (B, K) -> (q, s_in) with
+    q integer-valued f32 in [-qmax, qmax] and s_in: (B, 1)."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.where(s == 0, 1.0, s)
+    q = jnp.round(x / s * qmax(bits))
+    return q, s
+
+
+def quantize_weights(w: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-column symmetric quantization.  w: (K, N) -> (q, s_w) with
+    s_w: (1, N) (paper: one scale per row of the h x h matrix = per output)."""
+    s = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    s = jnp.where(s == 0, 1.0, s)
+    q = jnp.round(w / s * qmax(bits))
+    return q, s
+
+
+def to_residues(q: jnp.ndarray, moduli: jnp.ndarray) -> jnp.ndarray:
+    """Signed integer-valued f32 -> residue channels, shape (n, *q.shape).
+
+    Negative values wrap: a_i = ((q mod m_i) + m_i) mod m_i.  Exact for
+    |q| < 2^23 (true for quantized values, |q| <= 127)."""
+    m = moduli.reshape((-1,) + (1,) * q.ndim)
+    r = jnp.mod(q[None], m)
+    return jnp.where(r < 0, r + m, r)
+
+
+def dequantize(y_si: jnp.ndarray, s_in: jnp.ndarray, s_w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Y_SI (B, N) integer-valued -> float output, undoing both scalings."""
+    return y_si * s_in * s_w / (qmax(bits) ** 2)

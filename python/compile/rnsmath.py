@@ -1,0 +1,184 @@
+"""RNS math shared by the kernels, the L2 model, and the tests.
+
+Everything here is plain python / numpy over exact integers; it mirrors the
+rust `rns` crate module (rust/src/rns/) and the two are cross-checked by the
+golden files exported at artifact-build time.
+
+Paper mapping (Demirkiran et al., 2023):
+  - moduli selection     -> Table I ("minimum number of moduli that
+    guarantees Eq. (4) for h while keeping the moduli under bit width b")
+  - forward conversion   -> Eq. (3) inner `|.|_M` operations
+  - CRT reconstruction   -> Eq. (1)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def gcd(a: int, b: int) -> int:
+    while b:
+        a, b = b, a % b
+    return a
+
+
+def egcd(a: int, b: int) -> tuple[int, int, int]:
+    """Extended euclid: returns (g, x, y) with a*x + b*y = g."""
+    if b == 0:
+        return a, 1, 0
+    g, x, y = egcd(b, a % b)
+    return g, y, x - (a // b) * y
+
+
+def mod_inverse(a: int, m: int) -> int:
+    g, x, _ = egcd(a % m, m)
+    if g != 1:
+        raise ValueError(f"{a} has no inverse mod {m}")
+    return x % m
+
+
+def pairwise_coprime(moduli: list[int]) -> bool:
+    for i in range(len(moduli)):
+        for j in range(i + 1, len(moduli)):
+            if gcd(moduli[i], moduli[j]) != 1:
+                return False
+    return True
+
+
+def required_output_bits(b_in: int, b_w: int, h: int) -> int:
+    """Eq. (4): b_out = b_in + b_w + log2(h) - 1 for an h-element dot product."""
+    return b_in + b_w + int(math.ceil(math.log2(h))) - 1
+
+
+def _best_coprime_subset(cands: list[int], n: int) -> tuple[int, list[int]]:
+    """Max-product pairwise-coprime subset of size n (branch and bound).
+
+    `cands` must be sorted descending.  Returns (product, subset)."""
+    best_prod = 0
+    best: list[int] = []
+
+    def dfs(start: int, chosen: list[int], prod: int) -> None:
+        nonlocal best_prod, best
+        if len(chosen) == n:
+            if prod > best_prod:
+                best_prod, best = prod, list(chosen)
+            return
+        remaining = n - len(chosen)
+        for i in range(start, len(cands) - remaining + 1):
+            c = cands[i]
+            # upper bound: fill remaining slots with copies of c
+            if prod * (c**remaining) <= best_prod:
+                return  # cands are descending: no later branch can beat best
+            if all(gcd(c, x) == 1 for x in chosen):
+                chosen.append(c)
+                dfs(i + 1, chosen, prod * c)
+                chosen.pop()
+
+    dfs(0, [], 1)
+    return best_prod, best
+
+
+def select_moduli(bits: int, h: int) -> list[int]:
+    """Table-I moduli selection: minimal number of moduli n such that a
+    pairwise-coprime set below 2^bits covers Eq. (4), choosing the
+    max-product set for that n (ties in the paper resolve the same way).
+
+    Reproduces the paper's example sets for h = 128:
+      b=4 -> {15, 14, 13, 11}      b=5 -> {31, 29, 28, 27}
+      b=6 -> {63, 62, 61, 59}      b=7 -> {127, 126, 125}
+      b=8 -> {255, 254, 253}
+    """
+    b_out = required_output_bits(bits, bits, h)
+    target = 1 << b_out
+    cands = list(range((1 << bits) - 1, 1, -1))
+    for n in range(1, 16):
+        prod, subset = _best_coprime_subset(cands, n)
+        if prod >= target:
+            return subset
+    raise ValueError(f"cannot cover {b_out} bits with {bits}-bit moduli")
+
+
+def extend_moduli(moduli: list[int], extra: int) -> list[int]:
+    """Append `extra` redundant moduli (next largest coprime values below the
+    smallest existing modulus) for RRNS(n, k) with n = k + extra."""
+    out = list(moduli)
+    cand = min(moduli) - 1
+    for _ in range(extra):
+        while cand >= 2 and not all(gcd(cand, x) == 1 for x in out):
+            cand -= 1
+        if cand < 2:
+            raise ValueError("ran out of coprime candidates for redundancy")
+        out.append(cand)
+        cand -= 1
+    return out
+
+
+@dataclass
+class RnsContext:
+    """Precomputed CRT constants for one moduli set (paper Eq. (1))."""
+
+    moduli: list[int]
+    big_m: int = field(init=False)
+    m_i: list[int] = field(init=False)       # M_i = M / m_i
+    t_i: list[int] = field(init=False)       # T_i = (M_i)^-1 mod m_i
+    crt_coeff: list[int] = field(init=False)  # |M_i * T_i|_M
+
+    def __post_init__(self) -> None:
+        if not pairwise_coprime(self.moduli):
+            raise ValueError(f"moduli {self.moduli} are not pairwise coprime")
+        self.big_m = math.prod(self.moduli)
+        self.m_i = [self.big_m // m for m in self.moduli]
+        self.t_i = [mod_inverse(mi, m) for mi, m in zip(self.m_i, self.moduli)]
+        self.crt_coeff = [(mi * ti) % self.big_m for mi, ti in zip(self.m_i, self.t_i)]
+
+    @property
+    def n(self) -> int:
+        return len(self.moduli)
+
+    def forward(self, a: int) -> list[int]:
+        """Signed integer -> residues. Negative values map to M - |a| (mod M)."""
+        return [a % m for m in self.moduli]
+
+    def forward_array(self, a: np.ndarray) -> np.ndarray:
+        """Vectorized forward conversion -> int64 array [..., n]."""
+        a = np.asarray(a, dtype=np.int64)
+        mods = np.array(self.moduli, dtype=np.int64)
+        return np.mod(a[..., None], mods)
+
+    def crt(self, residues: list[int]) -> int:
+        """Eq. (1): unsigned reconstruction in [0, M)."""
+        acc = 0
+        for r, c in zip(residues, self.crt_coeff):
+            acc = (acc + (r % self.big_m) * c) % self.big_m
+        return acc
+
+    def crt_signed(self, residues: list[int]) -> int:
+        """Reconstruction into the symmetric range (-M/2, M/2]."""
+        v = self.crt(residues)
+        return v - self.big_m if v > self.big_m // 2 else v
+
+    def crt_signed_array(self, residues: np.ndarray) -> np.ndarray:
+        """Vectorized signed CRT. residues: int64 [n, ...] -> int64 [...].
+
+        Uses python-object arithmetic when M^2 might overflow int64; with the
+        paper's moduli (M < 2^25) everything fits comfortably in int64.
+        """
+        residues = np.asarray(residues, dtype=np.int64)
+        coeff = np.array(self.crt_coeff, dtype=np.int64)
+        acc = np.zeros(residues.shape[1:], dtype=np.int64)
+        for i in range(self.n):
+            acc = (acc + residues[i] * coeff[i]) % self.big_m
+        return np.where(acc > self.big_m // 2, acc - self.big_m, acc)
+
+
+# The exact Table-I sets from the paper, used as golden values in tests.
+PAPER_TABLE1 = {
+    4: [15, 14, 13, 11],
+    5: [31, 29, 28, 27],
+    6: [63, 62, 61, 59],
+    7: [127, 126, 125],
+    8: [255, 254, 253],
+}

@@ -1,0 +1,81 @@
+"""Redundant RNS (paper §IV) — python mirror of rust/src/rns/rrns.rs.
+
+Used for (a) python-side unit tests of the coding theory, and (b) the
+golden cross-check files (`export_golden.py`) that pin the rust and python
+implementations to each other: both decoders must agree on every exported
+(codeword, corruption) case.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from itertools import combinations
+
+from .rnsmath import RnsContext, pairwise_coprime
+
+
+@dataclass
+class RrnsCode:
+    """RRNS(n, k) with consistency-threshold (maximum-likelihood) decoding.
+
+    Decode contract (mirrors rust): try each k-group CRT candidate within
+    the legitimate range; accept the first whose residue disagreements
+    number <= t = (n-k)//2.  Returns (value, suspects) or None (detected).
+    """
+
+    moduli: list[int]
+    k: int
+    full: RnsContext = field(init=False)
+    groups: list[tuple[int, ...]] = field(init=False)
+    group_ctxs: list[RnsContext] = field(init=False)
+    legitimate_range: int = field(init=False)
+
+    def __post_init__(self) -> None:
+        n = len(self.moduli)
+        if not (0 < self.k <= n):
+            raise ValueError(f"invalid k={self.k} for n={n}")
+        if not pairwise_coprime(self.moduli):
+            raise ValueError("moduli not pairwise coprime")
+        self.full = RnsContext(self.moduli)
+        self.groups = list(combinations(range(n), self.k))
+        self.group_ctxs = [RnsContext([self.moduli[i] for i in g]) for g in self.groups]
+        self.legitimate_range = min(ctx.big_m for ctx in self.group_ctxs)
+
+    @property
+    def n(self) -> int:
+        return len(self.moduli)
+
+    @property
+    def correctable(self) -> int:
+        return (self.n - self.k) // 2
+
+    def encode(self, a: int) -> list[int]:
+        assert abs(a) <= self.legitimate_range // 2
+        return self.full.forward(a)
+
+    def decode(self, residues: list[int]) -> tuple[int, list[int]] | None:
+        t = self.correctable
+        half = self.legitimate_range // 2
+        seen: set[int] = set()
+        for g, ctx in zip(self.groups, self.group_ctxs):
+            v = ctx.crt_signed([residues[i] for i in g])
+            if v > half or v < -(half - 1) or v in seen:
+                continue
+            seen.add(v)
+            suspects = [i for i, m in enumerate(self.moduli) if residues[i] != v % m]
+            if len(suspects) <= t:
+                return v, suspects
+        return None
+
+    def decode_best_effort(self, residues: list[int]) -> int:
+        """Most-consistent candidate (mirror of rust decode_best_effort)."""
+        half = self.legitimate_range // 2
+        best_v, best_c = 0, -1
+        for g, ctx in zip(self.groups, self.group_ctxs):
+            v = ctx.crt_signed([residues[i] for i in g])
+            if v > half or v < -(half - 1):
+                continue
+            c = sum(1 for i, m in enumerate(self.moduli) if residues[i] == v % m)
+            if c > best_c:
+                best_c, best_v = c, v
+        return best_v

@@ -1,0 +1,59 @@
+"""Tiny binary tensor container shared with rust (`rust/src/nn/store.rs`).
+
+Format "RNSTORE1" (all little-endian):
+    magic   : 8 bytes b"RNSTORE1"
+    count   : u32
+    per tensor:
+        name_len : u32, name bytes (utf-8)
+        dtype    : u8  (0 = f32, 1 = i64, 2 = u8)
+        ndim     : u32
+        dims     : ndim x u32
+        data     : product(dims) elements, native width, little-endian
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"RNSTORE1"
+_DTYPES = {0: np.float32, 1: np.int64, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int64): 1, np.dtype(np.uint8): 2}
+
+
+def save(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _CODES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def load(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(8) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dt = np.dtype(_DTYPES[code]).newbyteorder("<")
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(n * dt.itemsize), dtype=dt).reshape(dims)
+            out[name] = arr.astype(_DTYPES[code])
+    return out

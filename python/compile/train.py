@@ -1,0 +1,145 @@
+"""Build-time training of the evaluation model zoo (hand-rolled Adam).
+
+Runs once under `make artifacts`; exports trained weights + frozen eval
+sets in the RNSTORE1 format that the rust nn substrate loads.  Python never
+runs at serving time — these artifacts are the only hand-off.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import tensorstore as TS
+
+EVAL_N = 512
+TRAIN_SEED = 1234
+EVAL_SEED = 999
+
+
+def flatten_params(params, prefix: str = "") -> dict[str, np.ndarray]:
+    flat: dict[str, np.ndarray] = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            flat.update(flatten_params(v, f"{prefix}{k}." if prefix or True else k))
+    else:
+        flat[prefix[:-1]] = np.asarray(params, dtype=np.float32)
+    return flat
+
+
+def unflatten_params(flat: dict[str, np.ndarray]):
+    tree: dict = {}
+    for name, arr in flat.items():
+        parts = name.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+    return tree
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+TASKS = {
+    # model -> (dataset, train_n, steps, batch)
+    "mlp": ("digits", 8192, 400, 64),
+    "cnn": ("digits", 8192, 400, 64),
+    "resnet": ("shapes", 8192, 600, 64),
+    "bert": ("tokens", 8192, 600, 64),
+}
+
+
+def train_model(name: str, verbose: bool = True):
+    dataset, train_n, steps, batch = TASKS[name]
+    init_fn, apply_fn = M.MODELS[name]
+    xs, ys = D.DATASETS[dataset](train_n, TRAIN_SEED)
+    params = init_fn(jax.random.PRNGKey(42))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, bx, by):
+        def loss_fn(p):
+            return cross_entropy(apply_fn(p, bx), by)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_step(params, grads, opt)
+        return params, opt, loss
+
+    rng = np.random.default_rng(7)
+    t0 = time.time()
+    for s in range(steps):
+        idx = rng.integers(0, train_n, size=batch)
+        bx = jnp.asarray(xs[idx])
+        by = jnp.asarray(ys[idx])
+        params, opt, loss = step(params, opt, bx, by)
+        if verbose and (s % 100 == 0 or s == steps - 1):
+            print(f"  [{name}] step {s:4d} loss {float(loss):.4f}  ({time.time()-t0:.1f}s)")
+    return params
+
+
+def eval_accuracy(name: str, params, xs, ys) -> float:
+    _, apply_fn = M.MODELS[name]
+    preds = np.asarray(jnp.argmax(apply_fn(params, jnp.asarray(xs)), axis=-1))
+    return float((preds == ys).mean())
+
+
+def export_all(out_dir: str, models: list[str] | None = None) -> dict[str, float]:
+    os.makedirs(os.path.join(out_dir, "models"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "data"), exist_ok=True)
+    accs: dict[str, float] = {}
+    exported_sets: set[str] = set()
+    for name in models or list(TASKS):
+        dataset = TASKS[name][0]
+        exs, eys = D.DATASETS[dataset](EVAL_N, EVAL_SEED)
+        if dataset not in exported_sets:
+            dt = {"x": exs.astype(np.float32) if exs.dtype != np.int64 else exs, "y": eys}
+            TS.save(os.path.join(out_dir, "data", f"{dataset}_eval.rt"), dt)
+            exported_sets.add(dataset)
+        params = train_model(name)
+        acc = eval_accuracy(name, params, exs, eys)
+        accs[name] = acc
+        flat = flatten_params(params)
+        flat["__fp32_eval_acc"] = np.array([acc], dtype=np.float32)
+        TS.save(os.path.join(out_dir, "models", f"{name}.rt"), flat)
+        print(f"  [{name}] fp32 eval accuracy = {acc:.4f}")
+    return accs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=None)
+    args = ap.parse_args()
+    export_all(args.out, args.models)
+
+
+if __name__ == "__main__":
+    main()

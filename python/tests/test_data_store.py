@@ -1,0 +1,106 @@
+"""Datasets (determinism, learnability) + tensorstore round-trip + training
+machinery smoke tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import tensorstore as TS
+from compile import train as T
+from compile import model as M
+
+
+class TestDatasets:
+    @pytest.mark.parametrize("name", ["digits", "shapes", "tokens"])
+    def test_deterministic_in_seed(self, name):
+        a = D.DATASETS[name](32, 5)
+        b = D.DATASETS[name](32, 5)
+        c = D.DATASETS[name](32, 6)
+        assert np.array_equal(a[0], b[0]) and np.array_equal(a[1], b[1])
+        assert not np.array_equal(a[0], c[0])
+
+    def test_digits_shapes_ranges(self):
+        x, y = D.digits_dataset(64, 0)
+        assert x.shape == (64, 28, 28, 1) and x.min() >= 0 and x.max() <= 1
+        assert set(np.unique(y)).issubset(set(range(10)))
+
+    def test_shapes_shapes(self):
+        x, y = D.shapes_dataset(64, 0)
+        assert x.shape == (64, 16, 16, 3)
+        assert y.min() >= 0 and y.max() < 10
+
+    def test_tokens_label_rule(self):
+        x, y = D.tokens_dataset(128, 0)
+        counts = np.stack([((x % 4) == g).sum(axis=1) for g in range(4)], axis=1)
+        assert np.array_equal(y, counts.argmax(axis=1))
+
+    def test_all_classes_present(self):
+        for name in ("digits", "shapes", "tokens"):
+            _, y = D.DATASETS[name](512, 1)
+            assert len(np.unique(y)) >= 4
+
+
+class TestTensorStore:
+    def test_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        tensors = {
+            "a.w": rng.normal(size=(3, 4)).astype(np.float32),
+            "labels": rng.integers(0, 10, size=(7,)).astype(np.int64),
+            "bytes": rng.integers(0, 255, size=(2, 2, 2)).astype(np.uint8),
+            "scalarish": np.array([1.5], dtype=np.float32),
+        }
+        p = os.path.join(tmp_path, "t.rt")
+        TS.save(p, tensors)
+        back = TS.load(p)
+        assert set(back) == set(tensors)
+        for k in tensors:
+            assert back[k].dtype == tensors[k].dtype
+            assert np.array_equal(back[k], tensors[k])
+
+    def test_bad_magic(self, tmp_path):
+        p = os.path.join(tmp_path, "bad.rt")
+        with open(p, "wb") as f:
+            f.write(b"NOTMAGIC" + b"\x00" * 16)
+        with pytest.raises(ValueError):
+            TS.load(p)
+
+    def test_rejects_unsupported_dtype(self, tmp_path):
+        with pytest.raises(TypeError):
+            TS.save(os.path.join(tmp_path, "x.rt"), {"a": np.zeros(3, np.complex64)})
+
+
+class TestTraining:
+    def test_flatten_unflatten_roundtrip(self):
+        params = M.mlp_init(jax.random.PRNGKey(0))
+        flat = T.flatten_params(params)
+        assert "fc0.w" in flat
+        tree = T.unflatten_params(flat)
+        for k in params:
+            assert np.array_equal(np.asarray(params[k]["w"]), np.asarray(tree[k]["w"]))
+
+    def test_adam_decreases_loss(self):
+        """A few Adam steps on the MLP reduce the training loss."""
+        xs, ys = D.digits_dataset(256, 0)
+        params = M.mlp_init(jax.random.PRNGKey(0))
+        opt = T.adam_init(params)
+        bx, by = jnp.asarray(xs), jnp.asarray(ys)
+
+        def loss_fn(p):
+            return T.cross_entropy(M.mlp_apply(p, bx), by)
+
+        l0 = float(loss_fn(params))
+        for _ in range(20):
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt = T.adam_step(params, grads, opt, lr=3e-3)
+        assert float(loss_fn(params)) < l0 * 0.8
+
+    def test_cross_entropy_matches_manual(self):
+        logits = jnp.asarray([[2.0, 0.0], [0.0, 2.0]])
+        labels = jnp.asarray([0, 1])
+        got = float(T.cross_entropy(logits, labels))
+        want = float(-np.log(np.exp(2) / (np.exp(2) + 1)))
+        assert abs(got - want) < 1e-6

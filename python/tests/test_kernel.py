@@ -1,0 +1,188 @@
+"""L1 correctness: the pallas kernels vs the exact int64 oracles.
+
+This is the CORE correctness signal for the compute hot path — hypothesis
+sweeps shapes and bit-widths and requires *bit-exact* agreement.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rns_matmul import MAX_KBLOCK, exact_mod, fixed_point_matmul, rns_matmul
+from compile.rnsmath import PAPER_TABLE1, RnsContext, required_output_bits
+
+
+def _residues(ctx, arr):
+    """int array (..., ) -> f32 residue channels (n, ...)."""
+    r = ctx.forward_array(arr)
+    return np.moveaxis(r, -1, 0).astype(np.float32)
+
+
+class TestExactMod:
+    @given(st.integers(0, (1 << 24) - 1), st.integers(2, 255))
+    @settings(max_examples=200, deadline=None)
+    def test_matches_integer_mod(self, x, m):
+        got = float(exact_mod(jnp.float32(x), jnp.float32(m)))
+        assert got == x % m
+
+    def test_boundary_multiples(self):
+        # exact multiples of m are the rounding hazard for floor(x/m)
+        for m in (3, 59, 127, 255):
+            for k in (1, 2, 1000, 65535):
+                if k * m < (1 << 24):
+                    assert float(exact_mod(jnp.float32(k * m), jnp.float32(m))) == 0.0
+
+
+class TestRnsMatmulKernel:
+    @pytest.mark.parametrize("bits", [4, 5, 6, 7, 8])
+    def test_bit_exact_vs_oracle_table1(self, bits):
+        ctx = RnsContext(PAPER_TABLE1[bits])
+        rng = np.random.default_rng(bits)
+        qm = (1 << (bits - 1)) - 1
+        x = rng.integers(-qm, qm + 1, (4, 128))
+        w = rng.integers(-qm, qm + 1, (128, 64))
+        xr, wr = _residues(ctx, x), _residues(ctx, w)
+        mods = np.asarray(ctx.moduli, np.float32)
+        out = np.asarray(rns_matmul(jnp.asarray(xr), jnp.asarray(wr), jnp.asarray(mods)))
+        oracle = ref.modular_matmul_ref(xr, wr, ctx.moduli)
+        assert np.array_equal(out.astype(np.int64), oracle)
+
+    @given(data=st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_shape_sweep(self, data):
+        bits = data.draw(st.sampled_from([4, 6, 8]))
+        b = data.draw(st.integers(1, 5))
+        k = data.draw(st.sampled_from([1, 3, 8, 33, 128, 200, 256]))
+        n_out = data.draw(st.sampled_from([1, 7, 32]))
+        kblock = data.draw(st.sampled_from([16, 100, MAX_KBLOCK]))
+        ctx = RnsContext(PAPER_TABLE1[bits])
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        qm = (1 << (bits - 1)) - 1
+        x = rng.integers(-qm, qm + 1, (b, k))
+        w = rng.integers(-qm, qm + 1, (k, n_out))
+        xr, wr = _residues(ctx, x), _residues(ctx, w)
+        mods = np.asarray(ctx.moduli, np.float32)
+        out = np.asarray(
+            rns_matmul(jnp.asarray(xr), jnp.asarray(wr), jnp.asarray(mods), kblock=kblock)
+        )
+        assert np.array_equal(out.astype(np.int64), ref.modular_matmul_ref(xr, wr, ctx.moduli))
+
+    def test_crt_recovers_exact_dot_product(self):
+        """End-to-end: kernel residues + CRT == exact integer matmul (the
+        paper's 'no information loss' claim, §III-B)."""
+        ctx = RnsContext(PAPER_TABLE1[6])
+        rng = np.random.default_rng(0)
+        x = rng.integers(-31, 32, (8, 128))
+        w = rng.integers(-31, 32, (128, 128))
+        xr, wr = _residues(ctx, x), _residues(ctx, w)
+        mods = np.asarray(ctx.moduli, np.float32)
+        out = np.asarray(rns_matmul(jnp.asarray(xr), jnp.asarray(wr), jnp.asarray(mods)))
+        rec = ctx.crt_signed_array(out.astype(np.int64))
+        assert np.array_equal(rec, x.astype(np.int64) @ w.astype(np.int64))
+
+    def test_kblock_guard(self):
+        ctx = RnsContext(PAPER_TABLE1[4])
+        xr = jnp.zeros((4, 1, 8), jnp.float32)
+        wr = jnp.zeros((4, 8, 1), jnp.float32)
+        with pytest.raises(ValueError):
+            rns_matmul(xr, wr, jnp.asarray(ctx.moduli, jnp.float32), kblock=MAX_KBLOCK * 4)
+
+    def test_zero_inputs(self):
+        ctx = RnsContext(PAPER_TABLE1[6])
+        xr = jnp.zeros((4, 2, 16), jnp.float32)
+        wr = jnp.zeros((4, 16, 3), jnp.float32)
+        out = rns_matmul(xr, wr, jnp.asarray(ctx.moduli, jnp.float32))
+        assert np.all(np.asarray(out) == 0)
+
+
+class TestFixedPointKernel:
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_truncation_matches_oracle(self, bits):
+        rng = np.random.default_rng(bits)
+        qm = (1 << (bits - 1)) - 1
+        x = rng.integers(-qm, qm + 1, (4, 128))
+        w = rng.integers(-qm, qm + 1, (128, 32))
+        dropped = required_output_bits(bits, bits, 128) - bits
+        out = np.asarray(
+            fixed_point_matmul(jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32), dropped)
+        )
+        assert np.array_equal(out.astype(np.int64), ref.fixed_point_matmul_ref(x, w, dropped))
+
+    def test_zero_dropped_bits_is_exact(self):
+        rng = np.random.default_rng(1)
+        x = rng.integers(-7, 8, (2, 16))
+        w = rng.integers(-7, 8, (16, 4))
+        out = np.asarray(fixed_point_matmul(jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32), 0))
+        assert np.array_equal(out.astype(np.int64), x.astype(np.int64) @ w.astype(np.int64))
+
+    def test_truncation_loses_information(self):
+        """Sanity: with the Table-I number of dropped bits the baseline's
+        error is nonzero (the loss the RNS core eliminates)."""
+        rng = np.random.default_rng(2)
+        x = rng.integers(-127, 128, (8, 128))
+        w = rng.integers(-127, 128, (128, 8))
+        dropped = required_output_bits(8, 8, 128) - 8  # 14 bits
+        out = np.asarray(
+            fixed_point_matmul(jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32), dropped)
+        )
+        exact = x.astype(np.int64) @ w.astype(np.int64)
+        assert not np.array_equal(out.astype(np.int64), exact)
+        # but the kept MSBs are consistent: |err| < 2^dropped
+        assert np.abs(out - exact).max() < (1 << dropped)
+
+
+class TestGridVariant:
+    """The K-streamed grid-accumulation kernel must match both the in-kernel
+    loop variant and the int64 oracle bit-for-bit."""
+
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_bit_exact_vs_oracle(self, bits):
+        from compile.kernels.rns_matmul import rns_matmul_grid
+
+        ctx = RnsContext(PAPER_TABLE1[bits])
+        rng = np.random.default_rng(100 + bits)
+        qm = (1 << (bits - 1)) - 1
+        x = rng.integers(-qm, qm + 1, (3, 256))
+        w = rng.integers(-qm, qm + 1, (256, 32))
+        xr, wr = _residues(ctx, x), _residues(ctx, w)
+        mods = np.asarray(ctx.moduli, np.float32)
+        out = np.asarray(
+            rns_matmul_grid(jnp.asarray(xr), jnp.asarray(wr), jnp.asarray(mods), kblock=64)
+        )
+        assert np.array_equal(out.astype(np.int64), ref.modular_matmul_ref(xr, wr, ctx.moduli))
+
+    @given(data=st.data())
+    @settings(max_examples=15, deadline=None)
+    def test_agrees_with_loop_variant(self, data):
+        from compile.kernels.rns_matmul import rns_matmul_grid
+
+        bits = data.draw(st.sampled_from([4, 8]))
+        k = data.draw(st.sampled_from([1, 16, 100, 128, 192, 256]))
+        kblock = data.draw(st.sampled_from([16, 64, 128]))
+        b = data.draw(st.integers(1, 4))
+        ctx = RnsContext(PAPER_TABLE1[bits])
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        qm = (1 << (bits - 1)) - 1
+        x = rng.integers(-qm, qm + 1, (b, k))
+        w = rng.integers(-qm, qm + 1, (k, 8))
+        xr, wr = _residues(ctx, x), _residues(ctx, w)
+        mods = np.asarray(ctx.moduli, np.float32)
+        a = np.asarray(rns_matmul(jnp.asarray(xr), jnp.asarray(wr), jnp.asarray(mods)))
+        g = np.asarray(
+            rns_matmul_grid(jnp.asarray(xr), jnp.asarray(wr), jnp.asarray(mods), kblock=kblock)
+        )
+        assert np.array_equal(a, g)
+
+    def test_kblock_guard(self):
+        from compile.kernels.rns_matmul import MAX_KBLOCK, rns_matmul_grid
+
+        ctx = RnsContext(PAPER_TABLE1[4])
+        xr = jnp.zeros((4, 1, 512), jnp.float32)
+        wr = jnp.zeros((4, 512, 1), jnp.float32)
+        with pytest.raises(ValueError):
+            rns_matmul_grid(xr, wr, jnp.asarray(ctx.moduli, jnp.float32), kblock=512)

@@ -1,0 +1,103 @@
+"""L2 tests: the RNS GEMM pipeline and the model zoo forward passes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.rnsmath import PAPER_TABLE1, RnsContext
+
+
+class TestRnsGemmPipeline:
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_tracks_fp32_matmul(self, bits):
+        rng = np.random.default_rng(bits)
+        x = rng.normal(0, 1, (8, 128)).astype(np.float32)
+        w = rng.normal(0, 0.2, (128, 64)).astype(np.float32)
+        cfg = M.RnsGemmConfig.for_bits(bits, 128)
+        got = np.asarray(M.rns_gemm(jnp.asarray(x), jnp.asarray(w), cfg))
+        want = x @ w
+        # quantization is the ONLY error source (no ADC truncation);
+        # error scale ~ h * s_in*s_w/qmax — tolerance scales with bits.
+        qm = float((1 << (bits - 1)) - 1)
+        scale = np.abs(x).max() * np.abs(w).max(0) * 128
+        tol = (scale * (1.5 / qm)).max()
+        assert np.abs(got - want).max() < tol
+
+    def test_rns_beats_fixed_point(self):
+        """Fig. 3's claim at GEMM level: RNS error << fixed-point error."""
+        rng = np.random.default_rng(7)
+        x = rng.normal(0, 1, (8, 128)).astype(np.float32)
+        w = rng.normal(0, 0.2, (128, 64)).astype(np.float32)
+        want = x @ w
+        for bits in (4, 6, 8):
+            cfg = M.RnsGemmConfig.for_bits(bits, 128)
+            rns_err = np.abs(np.asarray(M.rns_gemm(jnp.asarray(x), jnp.asarray(w), cfg)) - want).mean()
+            fp_err = np.abs(
+                np.asarray(M.fixed_point_gemm(jnp.asarray(x), jnp.asarray(w), bits, 128)) - want
+            ).mean()
+            assert fp_err > 2.0 * rns_err, f"bits={bits}: fp {fp_err} vs rns {rns_err}"
+
+    def test_crt_f64_matches_integer_crt(self):
+        ctx = RnsContext(PAPER_TABLE1[6])
+        rng = np.random.default_rng(1)
+        vals = rng.integers(-(ctx.big_m // 2), ctx.big_m // 2, size=256)
+        res = ctx.forward_array(vals).T.astype(np.float64)  # (n, 256)
+        got = np.asarray(M.crt_f64(jnp.asarray(res), ctx)).astype(np.int64)
+        assert np.array_equal(got, vals)
+
+    def test_identity_weight(self):
+        cfg = M.RnsGemmConfig.for_bits(8, 64)
+        x = jnp.asarray(np.linspace(-1, 1, 64, dtype=np.float32).reshape(1, 64))
+        w = jnp.eye(64, dtype=jnp.float32)
+        got = np.asarray(M.rns_gemm(x, w, cfg))
+        np.testing.assert_allclose(got[0], np.asarray(x)[0], atol=2e-2)
+
+
+class TestModels:
+    @pytest.mark.parametrize(
+        "name,shape",
+        [("mlp", (2, 28, 28, 1)), ("cnn", (2, 28, 28, 1)), ("resnet", (2, 16, 16, 3))],
+    )
+    def test_forward_shapes(self, name, shape):
+        init, apply = M.MODELS[name]
+        params = init(jax.random.PRNGKey(0))
+        x = jnp.zeros(shape, jnp.float32)
+        out = apply(params, x)
+        n_classes = 10
+        assert out.shape == (shape[0], n_classes)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_bert_forward(self):
+        init, apply = M.MODELS["bert"]
+        params = init(jax.random.PRNGKey(0))
+        toks = jnp.zeros((3, M.BERT_SEQ), jnp.int64)
+        out = apply(params, toks)
+        assert out.shape == (3, M.BERT_CLASSES)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_models_differentiable(self):
+        init, apply = M.MODELS["mlp"]
+        params = init(jax.random.PRNGKey(1))
+        x = jnp.ones((4, 28, 28, 1), jnp.float32)
+        y = jnp.asarray([0, 1, 2, 3])
+
+        def loss(p):
+            logits = apply(p, x)
+            return -jax.nn.log_softmax(logits)[jnp.arange(4), y].mean()
+
+        g = jax.grad(loss)(params)
+        leaf = g["fc0"]["w"]
+        assert float(jnp.abs(leaf).sum()) > 0.0
+
+    def test_resnet_residual_path(self):
+        """Zeroing the residual branches must reduce to stem+head behaviour."""
+        init, apply = M.MODELS["resnet"]
+        params = init(jax.random.PRNGKey(2))
+        for b in range(M.RESNET_BLOCKS):
+            params[f"block{b}_conv2"]["w"] = jnp.zeros_like(params[f"block{b}_conv2"]["w"])
+            params[f"block{b}_conv2"]["b"] = jnp.zeros_like(params[f"block{b}_conv2"]["b"])
+        x = jnp.asarray(np.random.default_rng(0).random((1, 16, 16, 3)), jnp.float32)
+        out = apply(params, x)
+        assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,73 @@
+"""Tests for the paper §III-B quantization / scaling scheme."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quantize as q
+from compile.rnsmath import PAPER_TABLE1, RnsContext
+
+
+class TestQuantize:
+    @given(st.integers(2, 8))
+    def test_qmax(self, bits):
+        assert q.qmax(bits) == (1 << (bits - 1)) - 1
+
+    @given(data=st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_activation_bounds(self, data):
+        bits = data.draw(st.sampled_from([4, 6, 8]))
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, 3, (4, 32)).astype(np.float32))
+        xq, s = q.quantize_activations(x, bits)
+        assert np.abs(np.asarray(xq)).max() <= q.qmax(bits)
+        assert np.array_equal(np.asarray(xq), np.round(np.asarray(xq)))  # integers
+        assert s.shape == (4, 1)
+
+    def test_weight_scale_per_output(self):
+        w = jnp.asarray(np.array([[1.0, 10.0], [2.0, -20.0], [0.5, 5.0]], np.float32))
+        wq, s = q.quantize_weights(w, 8)
+        assert s.shape == (1, 2)
+        assert float(s[0, 0]) == 2.0 and float(s[0, 1]) == 20.0
+
+    def test_zero_vector_scale_guard(self):
+        xq, s = q.quantize_activations(jnp.zeros((2, 8)), 6)
+        assert np.all(np.asarray(s) == 1.0)
+        assert np.all(np.asarray(xq) == 0.0)
+
+    def test_quantization_error_bound(self):
+        """|dequant(quant(x)) - x| <= s / (2 qmax) elementwise (round-half)."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 1, (8, 64)).astype(np.float32)
+        xq, s = q.quantize_activations(jnp.asarray(x), 8)
+        recon = np.asarray(xq) * np.asarray(s) / q.qmax(8)
+        assert np.abs(recon - x).max() <= np.asarray(s).max() / (2 * q.qmax(8)) + 1e-6
+
+
+class TestResidueMapping:
+    @given(data=st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_signed_wraps_and_roundtrips(self, data):
+        bits = data.draw(st.sampled_from([4, 6, 8]))
+        ctx = RnsContext(PAPER_TABLE1[bits])
+        qm = int(q.qmax(bits))
+        seed = data.draw(st.integers(0, 2**31))
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(-qm, qm + 1, (3, 7))
+        res = q.to_residues(jnp.asarray(vals, jnp.float32), jnp.asarray(ctx.moduli, jnp.float32))
+        r = np.asarray(res).astype(np.int64)
+        mods = np.array(ctx.moduli)
+        assert (r >= 0).all()
+        assert (r < mods.reshape(-1, 1, 1)).all()
+        rec = ctx.crt_signed_array(r.reshape(ctx.n, -1)).reshape(vals.shape)
+        assert np.array_equal(rec, vals)
+
+    def test_dequantize_inverts_scales(self):
+        y = jnp.asarray(np.array([[100.0, -200.0]], np.float32))
+        s_in = jnp.asarray([[2.0]])
+        s_w = jnp.asarray([[3.0, 4.0]])
+        out = np.asarray(q.dequantize(y, s_in, s_w, 8))
+        qm = q.qmax(8)
+        np.testing.assert_allclose(out, [[100 * 6 / qm**2, -200 * 8 / qm**2]], rtol=1e-6)

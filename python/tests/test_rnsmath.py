@@ -1,0 +1,134 @@
+"""Unit + property tests for the RNS math substrate (python side)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.rnsmath import (
+    PAPER_TABLE1,
+    RnsContext,
+    egcd,
+    extend_moduli,
+    gcd,
+    mod_inverse,
+    pairwise_coprime,
+    required_output_bits,
+    select_moduli,
+)
+
+
+class TestBasics:
+    def test_gcd(self):
+        assert gcd(12, 18) == 6
+        assert gcd(17, 13) == 1
+        assert gcd(0, 5) == 5
+
+    @given(st.integers(1, 10**6), st.integers(1, 10**6))
+    def test_egcd_identity(self, a, b):
+        g, x, y = egcd(a, b)
+        assert a * x + b * y == g
+        assert g == math.gcd(a, b)
+
+    @given(st.integers(2, 10**4))
+    def test_mod_inverse(self, m):
+        for a in range(2, min(m, 20)):
+            if math.gcd(a, m) == 1:
+                assert (a * mod_inverse(a, m)) % m == 1
+
+    def test_mod_inverse_rejects_noncoprime(self):
+        with pytest.raises(ValueError):
+            mod_inverse(6, 9)
+
+
+class TestModuliSelection:
+    @pytest.mark.parametrize("bits", [4, 5, 6, 7, 8])
+    def test_matches_paper_table1(self, bits):
+        assert select_moduli(bits, 128) == PAPER_TABLE1[bits]
+
+    @pytest.mark.parametrize("bits,h", [(4, 16), (5, 64), (6, 256), (8, 64)])
+    def test_range_covers_bout(self, bits, h):
+        mods = select_moduli(bits, h)
+        assert pairwise_coprime(mods)
+        assert all(m < (1 << bits) for m in mods)
+        assert math.prod(mods) >= (1 << required_output_bits(bits, bits, h))
+
+    def test_minimality(self):
+        # One fewer modulus cannot cover the range for the b=6, h=128 set.
+        mods = select_moduli(6, 128)
+        best_small = math.prod(sorted(mods, reverse=True)[: len(mods) - 1])
+        assert best_small < (1 << required_output_bits(6, 6, 128))
+
+    def test_extend_moduli_coprime(self):
+        base = PAPER_TABLE1[8]
+        ext = extend_moduli(base, 3)
+        assert ext[: len(base)] == base
+        assert len(ext) == len(base) + 3
+        assert pairwise_coprime(ext)
+
+
+class TestCrt:
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    @given(data=st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_unsigned(self, bits, data):
+        ctx = RnsContext(PAPER_TABLE1[bits])
+        a = data.draw(st.integers(0, ctx.big_m - 1))
+        assert ctx.crt(ctx.forward(a)) == a
+
+    @given(data=st.data())
+    @settings(max_examples=100, deadline=None)
+    def test_roundtrip_signed(self, data):
+        ctx = RnsContext(PAPER_TABLE1[6])
+        # representable signed range is (-M/2, M/2]: for even M the values
+        # -M/2 and +M/2 share residues, so -M/2 is excluded.
+        half = ctx.big_m // 2
+        a = data.draw(st.integers(-(half - 1), half))
+        assert ctx.crt_signed(ctx.forward(a)) == a
+
+    @given(data=st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_homomorphism(self, data):
+        """RNS is closed under + and *: residue-wise ops match integer ops."""
+        ctx = RnsContext(PAPER_TABLE1[6])
+        bound = int(math.isqrt(ctx.big_m)) - 1
+        a = data.draw(st.integers(0, bound))
+        b = data.draw(st.integers(0, bound))
+        ra, rb = ctx.forward(a), ctx.forward(b)
+        mul = [(x * y) % m for x, y, m in zip(ra, rb, ctx.moduli)]
+        add = [(x + y) % m for x, y, m in zip(ra, rb, ctx.moduli)]
+        assert ctx.crt(mul) == a * b
+        assert ctx.crt(add) == a + b
+
+    def test_array_matches_scalar(self):
+        ctx = RnsContext(PAPER_TABLE1[5])
+        rng = np.random.default_rng(3)
+        vals = rng.integers(-(ctx.big_m // 2), ctx.big_m // 2, size=100)
+        res = ctx.forward_array(vals).T  # (n, 100)
+        rec = ctx.crt_signed_array(res)
+        assert np.array_equal(rec, vals)
+        for v in vals[:10]:
+            assert ctx.crt_signed(ctx.forward(int(v))) == v
+
+    def test_crt_coeff_property(self):
+        ctx = RnsContext(PAPER_TABLE1[7])
+        for c, m in zip(ctx.crt_coeff, ctx.moduli):
+            # |M_i T_i|_{m_i} == 1 and == 0 mod every other modulus
+            assert c % m == 1
+            for other in ctx.moduli:
+                if other != m:
+                    assert c % other == 0
+
+    def test_non_coprime_rejected(self):
+        with pytest.raises(ValueError):
+            RnsContext([6, 9, 5])
+
+
+class TestEq4:
+    def test_bout_formula(self):
+        # b_out = b_in + b_w + log2(h) - 1 (paper Eq. 4)
+        assert required_output_bits(4, 4, 128) == 14
+        assert required_output_bits(6, 6, 128) == 18
+        assert required_output_bits(8, 8, 128) == 22

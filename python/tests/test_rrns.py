@@ -1,0 +1,105 @@
+"""Python-side RRNS tests + cross-checks against the golden exporter."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.rnsmath import PAPER_TABLE1, extend_moduli
+from compile.rrns import RrnsCode
+from compile import export_golden
+
+
+def make_code(bits=8, extra=2):
+    return RrnsCode(extend_moduli(PAPER_TABLE1[bits], extra), len(PAPER_TABLE1[bits]))
+
+
+class TestRrns:
+    def test_parameters(self):
+        code = make_code()
+        assert code.n == 5
+        assert code.correctable == 1
+        assert code.legitimate_range <= min(
+            np.prod([code.moduli[i] for i in g]) for g in code.groups
+        )
+
+    @given(data=st.data())
+    @settings(max_examples=100, deadline=None)
+    def test_clean_roundtrip(self, data):
+        code = make_code()
+        half = code.legitimate_range // 2
+        v = data.draw(st.integers(-(half - 1), half))
+        out = code.decode(code.encode(v))
+        assert out is not None
+        assert out[0] == v and out[1] == []
+
+    @given(data=st.data())
+    @settings(max_examples=100, deadline=None)
+    def test_single_error_corrected(self, data):
+        code = make_code()
+        half = code.legitimate_range // 2
+        v = data.draw(st.integers(-(half - 1), half))
+        res = code.encode(v)
+        i = data.draw(st.integers(0, code.n - 1))
+        delta = data.draw(st.integers(1, code.moduli[i] - 1))
+        res[i] = (res[i] + delta) % code.moduli[i]
+        out = code.decode(res)
+        assert out is not None, "single error must be correctable"
+        assert out[0] == v
+        assert out[1] == [i]
+
+    def test_two_errors_mostly_detected(self):
+        code = make_code()
+        rng = np.random.default_rng(0)
+        half = code.legitimate_range // 2
+        detected = 0
+        for _ in range(200):
+            v = int(rng.integers(-(half - 1), half))
+            res = code.encode(v)
+            for i in rng.choice(code.n, size=2, replace=False):
+                m = code.moduli[i]
+                res[i] = int((res[i] + 1 + rng.integers(0, m - 1)) % m)
+            if code.decode(res) is None:
+                detected += 1
+        assert detected > 160
+
+    def test_best_effort_prefers_consistency(self):
+        code = make_code()
+        v = 123_456
+        res = code.encode(v)
+        res[0] = (res[0] + 7) % code.moduli[0]
+        assert code.decode_best_effort(res) == v
+
+    def test_invalid_params(self):
+        with pytest.raises(ValueError):
+            RrnsCode([255, 254, 253], 0)
+        with pytest.raises(ValueError):
+            RrnsCode([6, 9, 5], 2)
+
+
+class TestGoldenExport:
+    def test_export_is_self_consistent(self, tmp_path):
+        path = export_golden.export(str(tmp_path), seed=1, cases=64)
+        from compile import tensorstore as TS
+
+        t = TS.load(path)
+        # forward goldens hold for every bit width
+        for bits, moduli in PAPER_TABLE1.items():
+            assert np.array_equal(t[f"b{bits}.moduli"], np.asarray(moduli))
+            vals = t[f"b{bits}.values"]
+            res = t[f"b{bits}.residues"]
+            assert np.array_equal(np.mod(vals[:, None], np.asarray(moduli)), res)
+            assert np.array_equal(t[f"b{bits}.crt"], vals)
+        # rrns goldens decode to the recorded expectations
+        code = RrnsCode(list(t["rrns.moduli"]), int(t["rrns.k"][0]))
+        for word, want in zip(t["rrns.words"], t["rrns.expected"]):
+            got = code.decode([int(r) for r in word])
+            if want == export_golden.DETECTED_SENTINEL:
+                assert got is None
+            else:
+                assert got is not None and got[0] == want
+
+    def test_deterministic(self, tmp_path):
+        p1 = export_golden.export(str(tmp_path / "a"), seed=5, cases=16)
+        p2 = export_golden.export(str(tmp_path / "b"), seed=5, cases=16)
+        assert open(p1, "rb").read() == open(p2, "rb").read()

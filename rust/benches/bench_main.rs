@@ -1,0 +1,261 @@
+//! `cargo bench` entrypoint (harness = false; the image vendors no
+//! criterion, so this uses the in-house `bench::Bencher`).
+//!
+//! Two tiers:
+//!   1. hot-path micro benches (modular GEMM, Barrett vs `%`, CRT, RRNS
+//!      decode, quantization) — the §Perf optimization targets;
+//!   2. one end-to-end bench per paper table/figure regenerator plus the
+//!      serving path — the "regenerate the evaluation" deliverable, timed.
+//!
+//! Filter: cargo bench -- <substring>    Quick mode: cargo bench -- --quick
+
+use rns_analog::analog::{FixedPointCore, NoiseModel, RnsCore, RnsCoreConfig};
+use rns_analog::bench::Bencher;
+use rns_analog::coordinator::{BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
+use rns_analog::exp;
+use rns_analog::nn::dataset::random_gemm_pair;
+use rns_analog::nn::models::Batch;
+use rns_analog::quant::{quantize_activations, quantize_weights};
+use rns_analog::rns::fault_model::estimate_case_probs;
+use rns_analog::rns::moduli::{extend_moduli, paper_table1};
+use rns_analog::rns::rrns::RrnsCode;
+use rns_analog::rns::{BarrettReducer, RnsContext};
+use rns_analog::runtime::{default_artifacts_dir, ModularGemmEngine, NativeEngine, PjrtEngine, PjrtRuntime};
+use rns_analog::tensor::gemm::{gemm_f32, gemm_i64, gemm_mod};
+use rns_analog::tensor::MatI;
+use rns_analog::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--bench")).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let filter: Vec<&String> = args.iter().filter(|a| !a.starts_with("--")).collect();
+    let want = |name: &str| filter.is_empty() || filter.iter().any(|f| name.contains(f.as_str()));
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    micro_benches(&mut b, &want);
+    figure_benches(&mut b, &want, quick);
+
+    println!("\n{}", b.report());
+}
+
+fn micro_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
+    let mut rng = Rng::seed_from(1);
+    let h = 128usize;
+    let m = 63u64;
+    let x = MatI::from_vec(8, h, (0..8 * h).map(|_| rng.gen_range(m) as i64).collect());
+    let w = MatI::from_vec(h, h, (0..h * h).map(|_| rng.gen_range(m) as i64).collect());
+    let macs = (8 * h * h) as f64;
+
+    if want("micro/gemm_mod") {
+        b.bench_with_rate("micro/gemm_mod 8x128x128 (1 channel)", macs, "MAC/s", || {
+            gemm_mod(&x, &w, m)
+        });
+    }
+    if want("micro/gemm_i64") {
+        b.bench_with_rate("micro/gemm_i64 8x128x128", macs, "MAC/s", || gemm_i64(&x, &w));
+    }
+    if want("micro/gemm_f32") {
+        let (xf, wf) = random_gemm_pair(&mut rng, 8, h, h, 1.0);
+        b.bench_with_rate("micro/gemm_f32 8x128x128", macs, "MAC/s", || gemm_f32(&xf, &wf));
+    }
+    if want("micro/barrett") {
+        let red = BarrettReducer::new(63);
+        let vals: Vec<u64> = (0..4096).map(|_| rng.next_u64() >> 1).collect();
+        b.bench_with_rate("micro/barrett reduce x4096", 4096.0, "Op/s", || {
+            vals.iter().map(|&v| red.reduce(v)).sum::<u64>()
+        });
+        b.bench_with_rate("micro/native %% x4096", 4096.0, "Op/s", || {
+            vals.iter().map(|&v| v % 63).sum::<u64>()
+        });
+    }
+    if want("micro/crt") {
+        let ctx = RnsContext::new(paper_table1(6).unwrap()).unwrap();
+        let residues: Vec<Vec<u64>> =
+            (0..1024).map(|_| ctx.forward(rng.gen_range_i64(-7_000_000, 7_000_000))).collect();
+        b.bench_with_rate("micro/crt_signed x1024", 1024.0, "Op/s", || {
+            residues.iter().map(|r| ctx.crt_signed(r)).sum::<i128>()
+        });
+    }
+    if want("micro/rrns_decode") {
+        let all = extend_moduli(paper_table1(8).unwrap(), 2).unwrap();
+        let code = RrnsCode::new(&all, 3).unwrap();
+        let words: Vec<Vec<u64>> = (0..256)
+            .map(|_| {
+                let mut res = code.encode(rng.gen_range_i64(-1_000_000, 1_000_000));
+                if rng.bernoulli(0.1) {
+                    res[1] = (res[1] + 3) % all[1];
+                }
+                res
+            })
+            .collect();
+        b.bench_with_rate("micro/rrns decode x256 (10% errors)", 256.0, "Op/s", || {
+            words.iter().map(|w| matches!(code.decode(w), rns_analog::rns::Decode::Ok { .. }) as u64).sum::<u64>()
+        });
+    }
+    if want("micro/quantize") {
+        let (xf, wf) = random_gemm_pair(&mut rng, 8, 512, 512, 1.0);
+        b.bench_with_rate("micro/quantize acts+weights 8x512,512x512", (8 * 512 + 512 * 512) as f64, "elem/s", || {
+            (quantize_activations(&xf, 8), quantize_weights(&wf, 8))
+        });
+    }
+    if want("micro/rns_core_gemm") {
+        let (xf, wf) = random_gemm_pair(&mut rng, 8, 256, 64, 1.0);
+        let mut core = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        b.bench_with_rate("micro/rns_core gemm 8x256x64 (4ch)", (8 * 256 * 64 * 4) as f64, "MAC/s", || {
+            core.gemm_quantized(&xf, &wf)
+        });
+        let mut fxp = FixedPointCore::new(6, 128, NoiseModel::None, 0);
+        b.bench_with_rate("micro/fxp_core gemm 8x256x64", (8 * 256 * 64) as f64, "MAC/s", || {
+            fxp.gemm_quantized(&xf, &wf)
+        });
+    }
+    if want("micro/rrns_core_noisy") {
+        let (xf, wf) = random_gemm_pair(&mut rng, 8, 128, 32, 1.0);
+        let mut core = RnsCore::new(
+            RnsCoreConfig::for_bits(8, 128)
+                .with_noise(NoiseModel::ResidueFlip { p: 0.01 })
+                .with_rrns(2, 3),
+        )
+        .unwrap();
+        b.bench_with_rate("micro/rrns_core noisy gemm 8x128x32", (8 * 128 * 32 * 5) as f64, "MAC/s", || {
+            core.gemm_quantized(&xf, &wf)
+        });
+    }
+    if want("micro/pjrt_engine") {
+        let artifacts = default_artifacts_dir();
+        if let Ok(rt) = PjrtRuntime::cpu() {
+            if let Ok(mut engine) = PjrtEngine::load(&rt, &artifacts, 6) {
+                let moduli = engine.moduli.clone();
+                let xr: Vec<MatI> = moduli
+                    .iter()
+                    .map(|&mm| MatI::from_vec(8, 128, (0..8 * 128).map(|_| rng.gen_range(mm) as i64).collect()))
+                    .collect();
+                let wr: Vec<MatI> = moduli
+                    .iter()
+                    .map(|&mm| MatI::from_vec(128, 128, (0..128 * 128).map(|_| rng.gen_range(mm) as i64).collect()))
+                    .collect();
+                b.bench_with_rate(
+                    "micro/pjrt pallas-kernel tile 8x128x128 (4ch)",
+                    (8 * 128 * 128 * 4) as f64,
+                    "MAC/s",
+                    || engine.matmul_mod(&xr, &wr, &moduli),
+                );
+                b.bench_with_rate(
+                    "micro/native engine tile 8x128x128 (4ch)",
+                    (8 * 128 * 128 * 4) as f64,
+                    "MAC/s",
+                    || NativeEngine.matmul_mod(&xr, &wr, &moduli),
+                );
+            }
+        }
+    }
+}
+
+fn figure_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool, quick: bool) {
+    let artifacts = default_artifacts_dir();
+    let have_models = std::path::Path::new(&format!("{artifacts}/models/mlp.rt")).exists();
+    let samples = if quick { 16 } else { 48 };
+
+    if want("exp/table1") {
+        b.bench("exp/table1 regenerate", || exp::table1::run(128));
+    }
+    if want("exp/fig3") {
+        let cfg = exp::fig3::Fig3Config {
+            pairs: if quick { 100 } else { 500 },
+            bits: vec![4, 6, 8],
+            ..Default::default()
+        };
+        b.bench_with_rate("exp/fig3 error-dist (500 pairs x 3b)", (cfg.pairs * 3) as f64, "pair/s", || {
+            exp::fig3::compute(&cfg)
+        });
+    }
+    if want("exp/fig5") {
+        let cfg = exp::fig5::Fig5Config {
+            trials: if quick { 500 } else { 4000 },
+            redundancies: vec![2],
+            attempts: vec![1, 3],
+            ps: vec![1e-2, 1e-1],
+            ..Default::default()
+        };
+        b.bench("exp/fig5 p_err MC (2 p-points)", || exp::fig5::compute(&cfg));
+    }
+    if want("exp/fig7") {
+        b.bench("exp/fig7 energy model", || exp::fig7::compute(128));
+    }
+    if have_models {
+        if want("exp/fig1") {
+            let cfg = exp::fig1::Fig1Config {
+                models: vec!["cnn".into()],
+                bits: vec![6],
+                hs: vec![128],
+                samples,
+                ..exp::fig1::Fig1Config::new(&artifacts)
+            };
+            b.bench_with_rate(&format!("exp/fig1 cnn b=6 h=128 ({samples} imgs)"), samples as f64, "img/s", || {
+                exp::fig1::compute(&cfg).unwrap()
+            });
+        }
+        if want("exp/fig4") {
+            let cfg = exp::fig4::Fig4Config {
+                models: vec!["mlp".into()],
+                bits: vec![6],
+                samples,
+                ..exp::fig4::Fig4Config::new(&artifacts)
+            };
+            b.bench_with_rate(&format!("exp/fig4 mlp b=6 fxp+rns ({samples} imgs)"), (2 * samples) as f64, "img/s", || {
+                exp::fig4::compute(&cfg).unwrap()
+            });
+        }
+        if want("exp/fig6") {
+            let cfg = exp::fig6::Fig6Config {
+                models: vec!["resnet".into()],
+                redundancies: vec![2],
+                attempts: vec![2],
+                ps: vec![1e-2],
+                samples: samples.min(24),
+                ..exp::fig6::Fig6Config::new(&artifacts)
+            };
+            b.bench("exp/fig6 resnet rrns 1 cell (24 imgs)", || exp::fig6::compute(&cfg).unwrap());
+        }
+        if want("serve/") {
+            b.bench_with_rate("serve/coordinator 32 reqs fp32 2 workers", 32.0, "req/s", || {
+                let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, &artifacts);
+                cfg.workers = 2;
+                cfg.batcher = BatcherConfig::default();
+                let coord = Coordinator::start(cfg);
+                for _ in 0..32 {
+                    coord.submit(
+                        "mlp",
+                        Batch::Images(rns_analog::tensor::Nhwc::zeros(1, 28, 28, 1)),
+                    );
+                }
+                let r = coord.collect(32);
+                coord.shutdown();
+                r.len()
+            });
+            b.bench_with_rate("serve/coordinator 16 reqs rns-b6 2 workers", 16.0, "req/s", || {
+                let mut cfg = CoordinatorConfig::new(
+                    BackendKind::Rns { bits: 6, redundant: 0, attempts: 1, noise: NoiseModel::None },
+                    &artifacts,
+                );
+                cfg.workers = 2;
+                let coord = Coordinator::start(cfg);
+                for _ in 0..16 {
+                    coord.submit(
+                        "mlp",
+                        Batch::Images(rns_analog::tensor::Nhwc::zeros(1, 28, 28, 1)),
+                    );
+                }
+                let r = coord.collect(16);
+                coord.shutdown();
+                r.len()
+            });
+        }
+    }
+    if want("exp/fig5_decode_throughput") {
+        // standalone decode-rate datum used in EXPERIMENTS.md §Perf
+        let all = extend_moduli(paper_table1(8).unwrap(), 2).unwrap();
+        let code = RrnsCode::new(&all, 3).unwrap();
+        b.bench("exp/fig5 case-prob MC 2000 trials", || estimate_case_probs(&code, 0.05, 2000, 1));
+    }
+}

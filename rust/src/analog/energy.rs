@@ -1,0 +1,126 @@
+//! Data-converter energy models (paper §V, Eqs. (6)-(7), after Murmann).
+//!
+//!   E_DAC = ENOB^2 * C_u * V_DD^2          (C_u = 0.5 fF, V_DD = 1 V)
+//!   E_ADC = k1 * ENOB + k2 * 4^ENOB        (k1 ≈ 100 fJ, k2 ≈ 1 aJ)
+//!
+//! The exponential ADC term dominates above ~10 bits — the entire reason
+//! the paper's low-ENOB RNS design wins by orders of magnitude.
+
+/// Unit capacitance (F).
+pub const C_U: f64 = 0.5e-15;
+/// Supply voltage (V).
+pub const V_DD: f64 = 1.0;
+/// ADC linear coefficient (J/bit).
+pub const K1: f64 = 100e-15;
+/// ADC exponential coefficient (J).
+pub const K2: f64 = 1e-18;
+/// Digital CRT + forward-conversion cost per output element (J) — the
+/// paper's ASAP7 synthesis bound ("≤ 0.1 pJ per conversion, negligible").
+pub const E_CRT_DIGITAL: f64 = 0.1e-12;
+
+/// Eq. (6): DAC energy per conversion (J).
+pub fn dac_energy(enob: u32) -> f64 {
+    (enob as f64).powi(2) * C_U * V_DD * V_DD
+}
+
+/// Eq. (7): ADC energy per conversion (J).
+pub fn adc_energy(enob: u32) -> f64 {
+    K1 * enob as f64 + K2 * 4f64.powi(enob as i32)
+}
+
+/// Running energy/conversion counters for one simulated core.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyMeter {
+    pub dac_conversions: u64,
+    pub adc_conversions: u64,
+    pub dac_joules: f64,
+    pub adc_joules: f64,
+    pub digital_joules: f64,
+}
+
+impl EnergyMeter {
+    pub fn record_dac(&mut self, count: u64, enob: u32) {
+        self.dac_conversions += count;
+        self.dac_joules += count as f64 * dac_energy(enob);
+    }
+
+    pub fn record_adc(&mut self, count: u64, enob: u32) {
+        self.adc_conversions += count;
+        self.adc_joules += count as f64 * adc_energy(enob);
+    }
+
+    pub fn record_crt(&mut self, count: u64) {
+        self.digital_joules += count as f64 * E_CRT_DIGITAL;
+    }
+
+    pub fn total_joules(&self) -> f64 {
+        self.dac_joules + self.adc_joules + self.digital_joules
+    }
+
+    pub fn merge(&mut self, other: &EnergyMeter) {
+        self.dac_conversions += other.dac_conversions;
+        self.adc_conversions += other.adc_conversions;
+        self.dac_joules += other.dac_joules;
+        self.adc_joules += other.adc_joules;
+        self.digital_joules += other.digital_joules;
+    }
+
+    pub fn reset(&mut self) {
+        *self = EnergyMeter::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq6_dac_values() {
+        // 8-bit DAC: 64 * 0.5fF * 1V^2 = 32 fJ
+        assert!((dac_energy(8) - 32e-15).abs() < 1e-20);
+        assert_eq!(dac_energy(0), 0.0);
+    }
+
+    #[test]
+    fn eq7_adc_values() {
+        // 6-bit: 600 fJ + 4^6 aJ = 600fJ + 4.096fJ
+        let e6 = adc_energy(6);
+        assert!((e6 - (600e-15 + 4096e-18)).abs() < 1e-20);
+        // exponential term dominates by 14 bits: 4^14 aJ = 268 nJ >> k1*14
+        assert!(adc_energy(14) > 100.0 * adc_energy(8));
+    }
+
+    #[test]
+    fn adc_exponential_growth_factor() {
+        // paper: "roughly 4x increase for each additional output bit" at
+        // high ENOB where the exponential dominates
+        let r = adc_energy(16) / adc_energy(15);
+        assert!((r - 4.0).abs() < 0.1, "ratio {r}");
+    }
+
+    #[test]
+    fn meter_accumulates_and_merges() {
+        let mut m = EnergyMeter::default();
+        m.record_dac(10, 8);
+        m.record_adc(5, 6);
+        m.record_crt(5);
+        assert_eq!(m.dac_conversions, 10);
+        assert!((m.dac_joules - 10.0 * dac_energy(8)).abs() < 1e-25);
+        let mut m2 = EnergyMeter::default();
+        m2.record_adc(5, 6);
+        m2.merge(&m);
+        assert_eq!(m2.adc_conversions, 10);
+        assert!(m2.total_joules() > 0.0);
+        m2.reset();
+        assert_eq!(m2.total_joules(), 0.0);
+    }
+
+    #[test]
+    fn rns_vs_fixed_point_headline_ratio() {
+        // Fig. 7 structure: b=8 RNS (3 ADC conversions @ 8 bits) vs fixed
+        // point (1 ADC @ b_out = 22 bits): ratio must be >= 5 orders.
+        let rns = 3.0 * adc_energy(8);
+        let fixed = adc_energy(22);
+        assert!(fixed / rns > 1e5, "ratio {}", fixed / rns);
+    }
+}

@@ -1,0 +1,141 @@
+//! The baseline: a regular fixed-point analog core with `b_ADC < b_out`
+//! (paper Table I right half, Fig. 1, and the "fixed-point" series in
+//! Figs. 3-4).
+//!
+//! GEMMs with K > h are tiled into K/h column chunks (the paper's
+//! "standard tiling methods"); each tile's partial output is captured by
+//! the truncating ADC *before* being accumulated digitally — exactly the
+//! mechanism that loses `b_out - b_ADC` LSBs per partial and degrades
+//! accuracy.
+
+use crate::analog::energy::EnergyMeter;
+use crate::analog::mvm_unit::FixedPointMvmUnit;
+use crate::analog::noise::NoiseModel;
+use crate::analog::GemmBackend;
+use crate::quant::{dequantize, quantize_activations, quantize_weights};
+use crate::tensor::{MatF, MatI};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FixedPointCore {
+    pub bits: u32,
+    /// Analog array height (dot-product length per tile).
+    pub h: usize,
+    unit: FixedPointMvmUnit,
+    pub meter: EnergyMeter,
+    rng: Rng,
+}
+
+impl FixedPointCore {
+    pub fn new(bits: u32, h: usize, noise: NoiseModel, seed: u64) -> Self {
+        assert!(h > 0);
+        FixedPointCore {
+            bits,
+            h,
+            unit: FixedPointMvmUnit::new(bits, bits, h, noise),
+            meter: EnergyMeter::default(),
+            rng: Rng::seed_from(seed),
+        }
+    }
+
+    /// Full quantized GEMM through the simulated core.
+    pub fn gemm_quantized(&mut self, x: &MatF, w: &MatF) -> MatF {
+        assert_eq!(x.cols, w.rows, "gemm shape mismatch");
+        let qa = quantize_activations(x, self.bits);
+        let qw = quantize_weights(w, self.bits);
+        let mut acc = MatI::zeros(x.rows, w.cols);
+        let k = x.cols;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + self.h).min(k);
+            let xt = qa.q.slice_cols(k0, k1);
+            let wt = qw.q.slice_rows(k0, k1);
+            let part = self.unit.execute(&xt, &wt, &mut self.rng, &mut self.meter);
+            for (a, &p) in acc.data.iter_mut().zip(&part.data) {
+                *a += p; // digital accumulation of truncated partials
+            }
+            k0 = k1;
+        }
+        dequantize(&acc, &qa, &qw)
+    }
+}
+
+impl GemmBackend for FixedPointCore {
+    fn gemm(&mut self, x: &MatF, w: &MatF) -> MatF {
+        self.gemm_quantized(x, w)
+    }
+    fn name(&self) -> String {
+        format!("fixed-point-b{}", self.bits)
+    }
+    fn meter(&self) -> Option<EnergyMeter> {
+        Some(self.meter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm::gemm_f32;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(seed: u64, rows: usize, cols: usize, scale: f32) -> MatF {
+        let mut rng = Rng::seed_from(seed);
+        MatF::from_vec(rows, cols, (0..rows * cols).map(|_| rng.uniform_f32(-scale, scale)).collect())
+    }
+
+    #[test]
+    fn error_grows_as_bits_shrink() {
+        let x = rand_mat(1, 4, 128, 1.0);
+        let w = rand_mat(2, 128, 16, 0.5);
+        let want = gemm_f32(&x, &w);
+        let mut errs = Vec::new();
+        for bits in [8u32, 6, 4] {
+            let mut core = FixedPointCore::new(bits, 128, NoiseModel::None, 0);
+            let got = core.gemm_quantized(&x, &w);
+            let err: f32 = got
+                .data
+                .iter()
+                .zip(&want.data)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+                / want.data.len() as f32;
+            errs.push(err);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "errors {errs:?}");
+    }
+
+    #[test]
+    fn smaller_array_drops_fewer_bits() {
+        // the ADC range is sized for the array height h (Eq. 4): a 64-tall
+        // array loses one fewer LSB than a 128-tall one on the same K=64
+        // GEMM, so its error is no larger.
+        let x = rand_mat(3, 2, 64, 1.0);
+        let w = rand_mat(4, 64, 4, 1.0);
+        let want = gemm_f32(&x, &w);
+        let err = |m: &MatF| {
+            m.data.iter().zip(&want.data).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+        };
+        let mut small = FixedPointCore::new(6, 64, NoiseModel::None, 0);
+        let mut large = FixedPointCore::new(6, 128, NoiseModel::None, 0);
+        let e_small = err(&small.gemm_quantized(&x, &w));
+        let e_large = err(&large.gemm_quantized(&x, &w));
+        assert!(e_small <= e_large, "h=64 err {e_small} vs h=128 err {e_large}");
+    }
+
+    #[test]
+    fn energy_accounting_per_tile() {
+        let x = rand_mat(5, 2, 256, 1.0);
+        let w = rand_mat(6, 256, 3, 1.0);
+        let mut core = FixedPointCore::new(6, 128, NoiseModel::None, 0);
+        core.gemm_quantized(&x, &w);
+        // 2 tiles: DAC = 2*(2*128 + 128*3) ; ADC = 2 tiles * 2*3 outputs
+        assert_eq!(core.meter.dac_conversions, 2 * (2 * 128 + 128 * 3));
+        assert_eq!(core.meter.adc_conversions, 12);
+    }
+
+    #[test]
+    fn backend_name() {
+        let core = FixedPointCore::new(4, 128, NoiseModel::None, 0);
+        assert_eq!(GemmBackend::name(&core), "fixed-point-b4");
+    }
+}

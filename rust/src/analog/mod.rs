@@ -1,0 +1,64 @@
+//! Analog accelerator simulator: data-converter energy models (§V), noise
+//! models (§IV), per-tile MVM units, and the two competing cores — the
+//! regular fixed-point core and the paper's RNS-based core (Fig. 2).
+
+pub mod energy;
+pub mod fixed_point_core;
+pub mod modulo_hw;
+pub mod mvm_unit;
+pub mod noise;
+pub mod rns_core;
+pub mod snr;
+
+pub use energy::EnergyMeter;
+pub use fixed_point_core::FixedPointCore;
+pub use noise::NoiseModel;
+pub use rns_core::{FaultStats, RnsCore, RnsCoreConfig};
+
+use crate::tensor::gemm::gemm_f32;
+use crate::tensor::MatF;
+
+/// A GEMM execution backend: the FP32 reference, the fixed-point analog
+/// core, or the RNS analog core.  The nn layer routes every GEMM in a
+/// model through one of these, which is how the accuracy experiments swap
+/// hardware under an unchanged model.
+pub trait GemmBackend {
+    fn gemm(&mut self, x: &MatF, w: &MatF) -> MatF;
+    fn name(&self) -> String;
+    /// Energy meter, if this backend models hardware.
+    fn meter(&self) -> Option<EnergyMeter> {
+        None
+    }
+    /// RRNS fault counters, if this backend runs the fault-tolerant core.
+    fn fault_stats(&self) -> Option<rns_core::FaultStats> {
+        None
+    }
+}
+
+/// The FP32 ground-truth backend (the paper's normalization baseline).
+#[derive(Default, Clone, Copy)]
+pub struct Fp32Backend;
+
+impl GemmBackend for Fp32Backend {
+    fn gemm(&mut self, x: &MatF, w: &MatF) -> MatF {
+        gemm_f32(x, w)
+    }
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_backend_is_exact_gemm() {
+        let x = MatF::from_vec(1, 2, vec![1.0, 2.0]);
+        let w = MatF::from_vec(2, 1, vec![3.0, 4.0]);
+        let mut b = Fp32Backend;
+        assert_eq!(b.gemm(&x, &w).data, vec![11.0]);
+        assert_eq!(b.name(), "fp32");
+        assert!(b.meter().is_none());
+    }
+}

@@ -1,0 +1,181 @@
+//! Analog-domain modulo implementations (paper §V, last paragraph).
+//!
+//! The paper sketches two physical realizations of the in-analog modulo
+//! that keeps residue outputs inside `[0, m)`:
+//!
+//!   * **Ring oscillator** (electrical): an odd chain of `m` inverters;
+//!     the position of the travelling edge after a time proportional to
+//!     `x` is `x mod m`.  Discrete position readout -> exact modulo, with
+//!     edge-jitter noise modeled as a small Gaussian on the dwell time.
+//!   * **Optical phase** (photonic): accumulating phase wraps at 2π, so
+//!     scaling values by `2π/m` makes phase accumulation a modular adder.
+//!     Continuous phase -> modulo with Gaussian phase noise, then readout
+//!     rounds to the nearest code.
+//!
+//! Both are *models for the simulator* — they produce `x mod m` plus a
+//! technology-flavored error process, and expose an energy estimate so the
+//! ablation experiments can compare the paper's "modulo is essentially
+//! free" claim across realizations.
+
+use crate::util::rng::Rng;
+
+/// Energy of one inverter transition at 7nm-class nodes (J) — order of
+/// magnitude consistent with the paper's "a set of inverters is trivial
+/// circuitry" remark.
+const E_INVERTER: f64 = 1e-17;
+
+/// A physical modulo stage.
+pub trait AnalogModulo {
+    /// Compute `x mod m` under the stage's noise process.
+    fn modulo(&self, x: u64, rng: &mut Rng) -> u64;
+    /// Energy per modulo operation (J).
+    fn energy_per_op(&self) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// Ring-oscillator modulo: exact winding position + edge jitter.
+#[derive(Clone, Debug)]
+pub struct RingOscillatorModulo {
+    pub m: u64,
+    /// Std of the edge-position jitter, in inverter stages (0 = ideal).
+    pub jitter_stages: f64,
+    /// Oscillation cycles needed to integrate the input (energy model).
+    cycles_per_op: f64,
+}
+
+impl RingOscillatorModulo {
+    pub fn new(m: u64, jitter_stages: f64) -> Self {
+        // rough order-of-magnitude model: the edge winds a fraction of the
+        // dot-product integration window through the m-stage ring
+        RingOscillatorModulo { m, jitter_stages, cycles_per_op: m as f64 / 8.0 }
+    }
+}
+
+impl AnalogModulo for RingOscillatorModulo {
+    fn modulo(&self, x: u64, rng: &mut Rng) -> u64 {
+        let ideal = x % self.m;
+        if self.jitter_stages == 0.0 {
+            return ideal;
+        }
+        let noisy = ideal as f64 + rng.normal() * self.jitter_stages;
+        noisy.rem_euclid(self.m as f64).round() as u64 % self.m
+    }
+
+    fn energy_per_op(&self) -> f64 {
+        // m inverters transitioning for cycles_per_op laps
+        self.m as f64 * self.cycles_per_op * E_INVERTER
+    }
+
+    fn name(&self) -> &'static str {
+        "ring-oscillator"
+    }
+}
+
+/// Optical-phase modulo: values scaled by 2π/m, phase wraps at 2π.
+#[derive(Clone, Debug)]
+pub struct OpticalPhaseModulo {
+    pub m: u64,
+    /// Phase-noise std in radians (0 = ideal).
+    pub phase_noise_rad: f64,
+}
+
+impl OpticalPhaseModulo {
+    pub fn new(m: u64, phase_noise_rad: f64) -> Self {
+        OpticalPhaseModulo { m, phase_noise_rad }
+    }
+}
+
+impl AnalogModulo for OpticalPhaseModulo {
+    fn modulo(&self, x: u64, rng: &mut Rng) -> u64 {
+        let two_pi = std::f64::consts::TAU;
+        let scale = two_pi / self.m as f64;
+        let phase = (x as f64 * scale) % two_pi;
+        let noisy = phase + rng.normal() * self.phase_noise_rad;
+        let wrapped = noisy.rem_euclid(two_pi);
+        ((wrapped / scale).round() as u64) % self.m
+    }
+
+    fn energy_per_op(&self) -> f64 {
+        // phase accumulates in passive shifters: no added energy beyond the
+        // existing optical path (the paper: "without any additional cost")
+        0.0
+    }
+
+    fn name(&self) -> &'static str {
+        "optical-phase"
+    }
+}
+
+/// The effective per-residue error probability a modulo stage introduces
+/// (measured empirically over `trials` random inputs).
+pub fn measure_error_rate(stage: &dyn AnalogModulo, m: u64, trials: u32, seed: u64) -> f64 {
+    let mut rng = Rng::seed_from(seed);
+    let mut wrong = 0u32;
+    for _ in 0..trials {
+        let x = rng.gen_range(m * m); // dot-product-scale inputs
+        if stage.modulo(x, &mut rng) != x % m {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_stages_are_exact() {
+        let mut rng = Rng::seed_from(0);
+        for &m in &[59u64, 63, 127, 255] {
+            let ro = RingOscillatorModulo::new(m, 0.0);
+            let op = OpticalPhaseModulo::new(m, 0.0);
+            for _ in 0..500 {
+                let x = rng.gen_range(m * m * 4);
+                assert_eq!(ro.modulo(x, &mut rng), x % m, "ring m={m}");
+                assert_eq!(op.modulo(x, &mut rng), x % m, "optical m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_always_in_range() {
+        let mut rng = Rng::seed_from(1);
+        let ro = RingOscillatorModulo::new(63, 5.0);
+        let op = OpticalPhaseModulo::new(63, 0.5);
+        for _ in 0..2000 {
+            let x = rng.gen_range(1 << 20);
+            assert!(ro.modulo(x, &mut rng) < 63);
+            assert!(op.modulo(x, &mut rng) < 63);
+        }
+    }
+
+    #[test]
+    fn noise_increases_error_rate_monotonically() {
+        let quiet = RingOscillatorModulo::new(63, 0.1);
+        let loud = RingOscillatorModulo::new(63, 2.0);
+        let e_quiet = measure_error_rate(&quiet, 63, 20_000, 2);
+        let e_loud = measure_error_rate(&loud, 63, 20_000, 2);
+        assert!(e_quiet < e_loud, "{e_quiet} vs {e_loud}");
+        assert!(e_quiet < 0.05);
+        assert!(e_loud > 0.3);
+    }
+
+    #[test]
+    fn optical_phase_noise_maps_to_code_errors() {
+        // phase step is 2π/63 ≈ 0.0997 rad; noise σ of half a step flips
+        // a meaningful fraction of readouts
+        let stage = OpticalPhaseModulo::new(63, 0.05);
+        let rate = measure_error_rate(&stage, 63, 20_000, 3);
+        assert!(rate > 0.1 && rate < 0.8, "rate {rate}");
+    }
+
+    #[test]
+    fn energy_model_orders() {
+        let ro = RingOscillatorModulo::new(255, 0.0);
+        // must stay far below one ADC conversion (the paper's point that
+        // analog modulo adds negligible cost)
+        assert!(ro.energy_per_op() < crate::analog::energy::adc_energy(8) / 2.0);
+        assert_eq!(OpticalPhaseModulo::new(255, 0.0).energy_per_op(), 0.0);
+    }
+}

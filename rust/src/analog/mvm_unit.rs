@@ -1,0 +1,198 @@
+//! Per-tile analog MVM unit simulators.
+//!
+//! One `RnsMvmUnit` is the digital twin of one residue channel in Fig. 2:
+//! a fixed h×h analog array that multiplies a residue tile, applies the
+//! analog-domain modulo, suffers noise, and is captured by b-bit ADCs.
+//! `FixedPointMvmUnit` is the baseline core's array: exact analog MVM,
+//! noise, then an ADC that keeps only the `b_adc` MSBs of the `b_out`-bit
+//! output (paper Table I, right half).
+
+use crate::analog::energy::EnergyMeter;
+use crate::analog::noise::NoiseModel;
+use crate::rns::moduli::required_output_bits;
+use crate::tensor::gemm::{gemm_i64, gemm_mod};
+use crate::tensor::MatI;
+use crate::util::rng::Rng;
+
+/// One RNS residue channel: modulus `m`, converters at `ceil(log2 m)` bits.
+#[derive(Clone, Debug)]
+pub struct RnsMvmUnit {
+    pub modulus: u64,
+    pub enob: u32,
+    pub noise: NoiseModel,
+}
+
+impl RnsMvmUnit {
+    pub fn new(modulus: u64, noise: NoiseModel) -> Self {
+        let enob = 64 - (modulus - 1).leading_zeros();
+        RnsMvmUnit { modulus, enob, noise }
+    }
+
+    /// Execute one tile: `(x_res @ w_res) mod m` + noise.
+    ///
+    /// `x_res`: (B, K) residues, `w_res`: (K, N) residues, both already in
+    /// `[0, m)`.  Energy: B*K input-DAC + K*N weight-DAC conversions and
+    /// B*N ADC conversions, all at this channel's ENOB.
+    pub fn execute(
+        &self,
+        x_res: &MatI,
+        w_res: &MatI,
+        rng: &mut Rng,
+        meter: &mut EnergyMeter,
+    ) -> MatI {
+        meter.record_dac((x_res.rows * x_res.cols + w_res.rows * w_res.cols) as u64, self.enob);
+        let mut out = gemm_mod(x_res, w_res, self.modulus);
+        if self.noise != NoiseModel::None {
+            for v in out.data.iter_mut() {
+                *v = self.noise.apply_residue(*v as u64, self.modulus, rng) as i64;
+            }
+        }
+        meter.record_adc((out.rows * out.cols) as u64, self.enob);
+        out
+    }
+
+    /// Re-capture given pre-computed clean residues (used by the RRNS retry
+    /// path: the analog MVM is recomputed, fresh noise is drawn).
+    pub fn recapture(&self, clean: &MatI, rng: &mut Rng, meter: &mut EnergyMeter) -> MatI {
+        let mut out = clean.clone();
+        if self.noise != NoiseModel::None {
+            for v in out.data.iter_mut() {
+                *v = self.noise.apply_residue(*v as u64, self.modulus, rng) as i64;
+            }
+        }
+        meter.record_adc((out.rows * out.cols) as u64, self.enob);
+        out
+    }
+}
+
+/// The regular fixed-point analog array with MSB-keeping ADCs.
+#[derive(Clone, Debug)]
+pub struct FixedPointMvmUnit {
+    pub bits: u32,
+    pub adc_bits: u32,
+    /// Physical array height.  The ADC's full-scale range is sized for an
+    /// h-long dot product (Eq. (4) with this h), so the number of dropped
+    /// LSBs is a property of the *array*, not of the tile actually fed in —
+    /// which is how a larger array hurts accuracy in Fig. 1 even when some
+    /// layers have short dot products.
+    pub h: usize,
+    pub noise: NoiseModel,
+}
+
+impl FixedPointMvmUnit {
+    /// `bits` = b_in = b_w = b_DAC; `adc_bits` = b_ADC.
+    pub fn new(bits: u32, adc_bits: u32, h: usize, noise: NoiseModel) -> Self {
+        assert!(h > 0);
+        FixedPointMvmUnit { bits, adc_bits, h, noise }
+    }
+
+    /// Execute one tile: exact MVM, noise, then drop `b_out - b_adc` LSBs
+    /// (sign-symmetric truncation — the ADC reads MSBs of |y|).
+    pub fn execute(&self, x: &MatI, w: &MatI, rng: &mut Rng, meter: &mut EnergyMeter) -> MatI {
+        assert!(x.cols <= self.h, "tile exceeds array height");
+        meter.record_dac((x.rows * x.cols + w.rows * w.cols) as u64, self.bits);
+        let mut y = gemm_i64(x, w);
+        if self.noise != NoiseModel::None {
+            for v in y.data.iter_mut() {
+                *v = self.noise.apply_linear(*v, rng);
+            }
+        }
+        let b_out = required_output_bits(self.bits, self.bits, self.h);
+        let dropped = b_out.saturating_sub(self.adc_bits);
+        if dropped > 0 {
+            let scale = 1i64 << dropped;
+            for v in y.data.iter_mut() {
+                *v = v.signum() * (v.abs() / scale) * scale;
+            }
+        }
+        meter.record_adc((y.rows * y.cols) as u64, self.adc_bits);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mats(m: u64) -> (MatI, MatI) {
+        let mut rng = Rng::seed_from(9);
+        let x = MatI::from_vec(2, 16, (0..32).map(|_| rng.gen_range(m) as i64).collect());
+        let w = MatI::from_vec(16, 3, (0..48).map(|_| rng.gen_range(m) as i64).collect());
+        (x, w)
+    }
+
+    #[test]
+    fn enob_from_modulus() {
+        assert_eq!(RnsMvmUnit::new(59, NoiseModel::None).enob, 6);
+        assert_eq!(RnsMvmUnit::new(63, NoiseModel::None).enob, 6);
+        assert_eq!(RnsMvmUnit::new(64, NoiseModel::None).enob, 6); // values 0..63
+        assert_eq!(RnsMvmUnit::new(255, NoiseModel::None).enob, 8);
+    }
+
+    #[test]
+    fn clean_channel_is_exact() {
+        let unit = RnsMvmUnit::new(63, NoiseModel::None);
+        let (x, w) = mats(63);
+        let mut rng = Rng::seed_from(0);
+        let mut meter = EnergyMeter::default();
+        let out = unit.execute(&x, &w, &mut rng, &mut meter);
+        assert_eq!(out.data, gemm_mod(&x, &w, 63).data);
+        assert_eq!(meter.dac_conversions, 32 + 48);
+        assert_eq!(meter.adc_conversions, 6);
+    }
+
+    #[test]
+    fn noisy_channel_stays_in_range() {
+        let unit = RnsMvmUnit::new(59, NoiseModel::ResidueFlip { p: 0.5 });
+        let (x, w) = mats(59);
+        let mut rng = Rng::seed_from(1);
+        let mut meter = EnergyMeter::default();
+        let out = unit.execute(&x, &w, &mut rng, &mut meter);
+        assert!(out.data.iter().all(|&v| (0..59).contains(&v)));
+    }
+
+    #[test]
+    fn fixed_point_truncation() {
+        // b=4, K=16 -> b_out = 4+4+4-1 = 11, adc=4 -> drop 7 bits
+        let unit = FixedPointMvmUnit::new(4, 4, 16, NoiseModel::None);
+        let x = MatI::from_vec(1, 16, vec![7; 16]);
+        let w = MatI::from_vec(16, 1, vec![7; 16]);
+        let mut rng = Rng::seed_from(2);
+        let mut meter = EnergyMeter::default();
+        let y = unit.execute(&x, &w, &mut rng, &mut meter);
+        let exact = 16 * 49i64; // 784
+        let scale = 1i64 << 7;
+        assert_eq!(y.data[0], (exact / scale) * scale); // 768
+        assert_eq!(meter.adc_conversions, 1);
+    }
+
+    #[test]
+    fn fixed_point_no_drop_when_adc_wide_enough() {
+        let unit = FixedPointMvmUnit::new(4, 11, 16, NoiseModel::None);
+        let (x, w) = {
+            let mut rng = Rng::seed_from(3);
+            let x = MatI::from_vec(1, 16, (0..16).map(|_| rng.gen_range_i64(-7, 7)).collect());
+            let w = MatI::from_vec(16, 1, (0..16).map(|_| rng.gen_range_i64(-7, 7)).collect());
+            (x, w)
+        };
+        let mut rng = Rng::seed_from(4);
+        let mut meter = EnergyMeter::default();
+        let y = unit.execute(&x, &w, &mut rng, &mut meter);
+        assert_eq!(y.data, gemm_i64(&x, &w).data);
+    }
+
+    #[test]
+    fn truncation_error_is_bounded() {
+        let unit = FixedPointMvmUnit::new(6, 6, 128, NoiseModel::None);
+        let mut rng = Rng::seed_from(5);
+        let x = MatI::from_vec(2, 128, (0..256).map(|_| rng.gen_range_i64(-31, 31)).collect());
+        let w = MatI::from_vec(128, 4, (0..512).map(|_| rng.gen_range_i64(-31, 31)).collect());
+        let mut meter = EnergyMeter::default();
+        let y = unit.execute(&x, &w, &mut rng, &mut meter);
+        let exact = gemm_i64(&x, &w);
+        let dropped = required_output_bits(6, 6, 128) - 6; // 12
+        for (a, b) in y.data.iter().zip(&exact.data) {
+            assert!((a - b).abs() < (1 << dropped));
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Analog noise models.
+//!
+//! The paper abstracts analog error to "probability of error in a single
+//! residue p" (§IV) for all RRNS analysis; `ResidueFlip` implements exactly
+//! that.  `Gaussian` additionally models additive pre-ADC noise in LSB
+//! units and is used to show how an SNR maps onto an effective p (the
+//! connection §V draws between SNR and compute precision).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseModel {
+    /// Ideal analog hardware.
+    None,
+    /// Each captured residue independently flips to a uniform wrong value
+    /// with probability `p` (the paper's §IV error model).
+    ResidueFlip { p: f64 },
+    /// Additive zero-mean Gaussian with std `sigma_lsb` (in output-LSB
+    /// units) applied to the pre-ADC analog value, then re-quantized.
+    Gaussian { sigma_lsb: f64 },
+}
+
+impl NoiseModel {
+    /// Corrupt one residue (value in `[0, m)`), returning the captured value.
+    #[inline]
+    pub fn apply_residue(&self, value: u64, m: u64, rng: &mut Rng) -> u64 {
+        match *self {
+            NoiseModel::None => value,
+            NoiseModel::ResidueFlip { p } => {
+                if rng.bernoulli(p) {
+                    (value + 1 + rng.gen_range(m - 1)) % m
+                } else {
+                    value
+                }
+            }
+            NoiseModel::Gaussian { sigma_lsb } => {
+                let noisy = value as f64 + rng.normal() * sigma_lsb;
+                // the analog modulo wraps the perturbed signal back into [0, m)
+                let wrapped = noisy.rem_euclid(m as f64);
+                (wrapped.round() as u64) % m
+            }
+        }
+    }
+
+    /// Corrupt one plain (non-RNS) pre-ADC value in LSB units.
+    #[inline]
+    pub fn apply_linear(&self, value: i64, rng: &mut Rng) -> i64 {
+        match *self {
+            NoiseModel::None => value,
+            // ResidueFlip has no meaning for a non-residue channel; treat a
+            // flip as a uniformly wrong LSB-scale perturbation of +-1 LSB.
+            NoiseModel::ResidueFlip { p } => {
+                if rng.bernoulli(p) {
+                    value + if rng.bernoulli(0.5) { 1 } else { -1 }
+                } else {
+                    value
+                }
+            }
+            NoiseModel::Gaussian { sigma_lsb } => {
+                (value as f64 + rng.normal() * sigma_lsb).round() as i64
+            }
+        }
+    }
+
+    /// Effective single-residue error probability of a Gaussian channel:
+    /// a captured residue is wrong when |noise| rounds away from 0, i.e.
+    /// P(|N(0, sigma)| > 0.5) = erfc(0.5 / (sigma * sqrt(2))).
+    pub fn effective_p(&self) -> f64 {
+        match *self {
+            NoiseModel::None => 0.0,
+            NoiseModel::ResidueFlip { p } => p,
+            NoiseModel::Gaussian { sigma_lsb } => erfc(0.5 / (sigma_lsb * std::f64::consts::SQRT_2)),
+        }
+    }
+}
+
+/// Complementary error function (Abramowitz & Stegun 7.1.26, |err| < 1.5e-7).
+pub fn erfc(x: f64) -> f64 {
+    let sign_negative = x < 0.0;
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592 + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let e = poly * (-x * x).exp();
+    if sign_negative {
+        2.0 - e
+    } else {
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let mut rng = Rng::seed_from(0);
+        assert_eq!(NoiseModel::None.apply_residue(42, 63, &mut rng), 42);
+        assert_eq!(NoiseModel::None.apply_linear(-5, &mut rng), -5);
+        assert_eq!(NoiseModel::None.effective_p(), 0.0);
+    }
+
+    #[test]
+    fn residue_flip_rate_and_range() {
+        let nm = NoiseModel::ResidueFlip { p: 0.2 };
+        let mut rng = Rng::seed_from(1);
+        let mut flips = 0;
+        for _ in 0..20_000 {
+            let out = nm.apply_residue(10, 59, &mut rng);
+            assert!(out < 59);
+            if out != 10 {
+                flips += 1;
+            }
+        }
+        let rate = flips as f64 / 20_000.0;
+        assert!((rate - 0.2).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn flip_never_returns_same_value() {
+        let nm = NoiseModel::ResidueFlip { p: 1.0 };
+        let mut rng = Rng::seed_from(2);
+        for v in 0..59u64 {
+            assert_ne!(nm.apply_residue(v, 59, &mut rng), v);
+        }
+    }
+
+    #[test]
+    fn gaussian_wraps_into_range() {
+        let nm = NoiseModel::Gaussian { sigma_lsb: 30.0 };
+        let mut rng = Rng::seed_from(3);
+        for _ in 0..5000 {
+            assert!(nm.apply_residue(5, 11, &mut rng) < 11);
+        }
+    }
+
+    #[test]
+    fn gaussian_effective_p_matches_simulation() {
+        let nm = NoiseModel::Gaussian { sigma_lsb: 0.4 };
+        let mut rng = Rng::seed_from(4);
+        let m = 1_000_003; // large modulus: wraparound negligible
+        let mut wrong = 0;
+        let trials = 100_000;
+        for _ in 0..trials {
+            if nm.apply_residue(500_000, m, &mut rng) != 500_000 {
+                wrong += 1;
+            }
+        }
+        let sim = wrong as f64 / trials as f64;
+        let analytic = nm.effective_p();
+        assert!((sim - analytic).abs() < 0.01, "sim {sim} vs analytic {analytic}");
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.157299).abs() < 1e-5);
+        assert!((erfc(-1.0) - 1.842701).abs() < 1e-5);
+        assert!(erfc(5.0) < 1e-10);
+    }
+}

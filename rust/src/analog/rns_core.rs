@@ -1,0 +1,406 @@
+//! The RNS-based analog core (paper Fig. 2) with optional RRNS fault
+//! tolerance (§IV).
+//!
+//! Dataflow per K-tile (tile height = the analog array size h):
+//!   1. forward-convert the quantized tile to n residue channels;
+//!   2. run the modular MVM on every channel — through the pluggable
+//!      `ModularGemmEngine` (native rust, or the AOT-compiled pallas kernel
+//!      via PJRT);
+//!   3. per-channel ADC capture with noise injection;
+//!   4. plain RNS: CRT per output element;
+//!      RRNS(n, k): voting decode per element; Case-2 (detected) elements
+//!      trigger the paper's recompute-and-revote loop, up to `max_attempts`;
+//!   5. accumulate the signed partial outputs digitally; dequantize once at
+//!      the end.
+//!
+//! The ADCs in every channel run at `ceil(log2 m_i)` bits — never at
+//! `b_out` — which is the entire point of the design.
+
+use crate::analog::energy::EnergyMeter;
+use crate::analog::mvm_unit::RnsMvmUnit;
+use crate::analog::noise::NoiseModel;
+use crate::analog::GemmBackend;
+use crate::quant::{dequantize, quantize_activations, quantize_weights};
+use crate::rns::moduli::{extend_moduli, required_output_bits, select_moduli};
+use crate::rns::rrns::{Decode, RrnsCode};
+use crate::rns::RnsContext;
+use crate::runtime::engine::{ModularGemmEngine, NativeEngine};
+use crate::tensor::{MatF, MatI};
+use crate::util::rng::Rng;
+
+/// Configuration for one RNS-based core instance.
+#[derive(Clone, Debug)]
+pub struct RnsCoreConfig {
+    pub bits: u32,
+    /// Analog array height (dot-product length per tile).
+    pub h: usize,
+    /// Information moduli (Table-I selection if built via `for_bits`).
+    pub moduli: Vec<u64>,
+    /// Number of redundant moduli (0 = plain RNS, no fault tolerance).
+    pub redundant: usize,
+    /// Max dot-product attempts for Case-2 outcomes (paper's R).
+    pub max_attempts: u32,
+    pub noise: NoiseModel,
+    pub seed: u64,
+}
+
+impl RnsCoreConfig {
+    /// Paper defaults: Table-I moduli for (bits, h), no redundancy, ideal.
+    pub fn for_bits(bits: u32, h: usize) -> Self {
+        RnsCoreConfig {
+            bits,
+            h,
+            moduli: select_moduli(bits, h).expect("moduli selection"),
+            redundant: 0,
+            max_attempts: 1,
+            noise: NoiseModel::None,
+            seed: 0,
+        }
+    }
+
+    pub fn with_noise(mut self, noise: NoiseModel) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    pub fn with_rrns(mut self, redundant: usize, max_attempts: u32) -> Self {
+        self.redundant = redundant;
+        self.max_attempts = max_attempts.max(1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Fault-tolerance counters (per core lifetime).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    /// Output elements decoded in total.
+    pub decoded: u64,
+    /// Elements whose first decode had inconsistent residues but still
+    /// reached majority (Case 1 with corrections).
+    pub corrected: u64,
+    /// Case-2 detections (each triggers one recompute attempt).
+    pub detections: u64,
+    /// Elements still undecodable after `max_attempts` (fell back to the
+    /// information-moduli CRT).
+    pub exhausted: u64,
+}
+
+pub struct RnsCore {
+    pub cfg: RnsCoreConfig,
+    /// Context over all (info + redundant) moduli.
+    all_ctx: RnsContext,
+    /// RRNS codec when redundancy is configured.
+    code: Option<RrnsCode>,
+    units: Vec<RnsMvmUnit>,
+    engine: Box<dyn ModularGemmEngine>,
+    pub meter: EnergyMeter,
+    pub stats: FaultStats,
+    rng: Rng,
+}
+
+impl RnsCore {
+    pub fn new(cfg: RnsCoreConfig) -> Result<Self, String> {
+        Self::with_engine(cfg, Box::new(NativeEngine))
+    }
+
+    pub fn with_engine(cfg: RnsCoreConfig, engine: Box<dyn ModularGemmEngine>) -> Result<Self, String> {
+        let all_moduli = if cfg.redundant > 0 {
+            extend_moduli(&cfg.moduli, cfg.redundant)?
+        } else {
+            cfg.moduli.clone()
+        };
+        let all_ctx = RnsContext::new(&all_moduli)?;
+        let code = if cfg.redundant > 0 {
+            let c = RrnsCode::new(&all_moduli, cfg.moduli.len())?;
+            // the legitimate range must still cover the per-tile dot product
+            let b_out = required_output_bits(cfg.bits, cfg.bits, cfg.h);
+            if c.legitimate_range < (1u128 << b_out) {
+                return Err(format!(
+                    "RRNS legitimate range 2^{:.1} < required 2^{b_out}",
+                    (c.legitimate_range as f64).log2()
+                ));
+            }
+            Some(c)
+        } else {
+            let b_out = required_output_bits(cfg.bits, cfg.bits, cfg.h);
+            if all_ctx.big_m < (1u128 << b_out) {
+                return Err(format!(
+                    "RNS range 2^{:.1} < required 2^{b_out} (Eq. 4 violated)",
+                    (all_ctx.big_m as f64).log2()
+                ));
+            }
+            None
+        };
+        let units =
+            all_moduli.iter().map(|&m| RnsMvmUnit::new(m, cfg.noise)).collect::<Vec<_>>();
+        let rng = Rng::seed_from(cfg.seed ^ 0x5EED_CAFE);
+        Ok(RnsCore { cfg, all_ctx, code, units, engine, meter: EnergyMeter::default(), stats: FaultStats::default(), rng })
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Full quantized GEMM through the simulated RNS core.
+    pub fn gemm_quantized(&mut self, x: &MatF, w: &MatF) -> MatF {
+        assert_eq!(x.cols, w.rows, "gemm shape mismatch");
+        let qa = quantize_activations(x, self.cfg.bits);
+        let qw = quantize_weights(w, self.cfg.bits);
+        let mut acc = MatI::zeros(x.rows, w.cols);
+        let k = x.cols;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + self.cfg.h).min(k);
+            let xt = qa.q.slice_cols(k0, k1);
+            let wt = qw.q.slice_rows(k0, k1);
+            let part = self.tile_mvm(&xt, &wt);
+            for (a, &p) in acc.data.iter_mut().zip(&part.data) {
+                *a += p;
+            }
+            k0 = k1;
+        }
+        dequantize(&acc, &qa, &qw)
+    }
+
+    /// One tile through the analog channels + decode (signed output).
+    fn tile_mvm(&mut self, xt: &MatI, wt: &MatI) -> MatI {
+        let moduli = &self.all_ctx.moduli;
+        // forward conversion (digital, cheap — §V).  Perf (§Perf log):
+        // rem_euclid by a runtime modulus compiles to a hardware divide per
+        // element; Barrett reduction of the offset-shifted value halves the
+        // whole-core GEMM time.  `offset` is a multiple of m making every
+        // quantized input non-negative (|v| <= qmax << offset).
+        let forward = |mat: &MatI, m: u64| -> MatI {
+            let red = crate::rns::BarrettReducer::new(m);
+            let qm = crate::quant::qmax(self.cfg.bits).unsigned_abs();
+            let offset = (qm / m + 1) * m;
+            debug_assert!(mat.data.iter().all(|&v| v.unsigned_abs() <= qm));
+            mat.map(|v| red.reduce((v + offset as i64) as u64) as i64)
+        };
+        let xr: Vec<MatI> = moduli.iter().map(|&m| forward(xt, m)).collect();
+        let wr: Vec<MatI> = moduli.iter().map(|&m| forward(wt, m)).collect();
+        for u in &self.units {
+            self.meter
+                .record_dac((xt.rows * xt.cols + wt.rows * wt.cols) as u64, u.enob);
+        }
+        // clean channel outputs (the engine is the ideal analog array)
+        let clean = self.engine.matmul_mod(&xr, &wr, moduli);
+        // ADC capture with noise, per channel
+        let mut captured: Vec<MatI> = Vec::with_capacity(clean.len());
+        for (u, ch) in self.units.iter().zip(&clean) {
+            captured.push(u.recapture(ch, &mut self.rng, &mut self.meter));
+        }
+        self.decode_tile(&clean, captured)
+    }
+
+    /// Decode every output element; run the RRNS retry loop for Case 2.
+    fn decode_tile(&mut self, clean: &[MatI], mut captured: Vec<MatI>) -> MatI {
+        let (rows, cols) = (clean[0].rows, clean[0].cols);
+        let n = self.units.len();
+        let mut out = MatI::zeros(rows, cols);
+        let mut residues = vec![0u64; n];
+        for r in 0..rows {
+            for c in 0..cols {
+                for i in 0..n {
+                    residues[i] = captured[i].at(r, c) as u64;
+                }
+                self.stats.decoded += 1;
+                self.meter.record_crt(1);
+                let value = match &self.code {
+                    None => self.all_ctx.crt_signed(&residues) as i64,
+                    Some(code) => {
+                        let mut attempt = 0;
+                        loop {
+                            match code.decode(&residues) {
+                                Decode::Ok { value, suspects } => {
+                                    if !suspects.is_empty() {
+                                        self.stats.corrected += 1;
+                                    }
+                                    break value as i64;
+                                }
+                                Decode::Detected => {
+                                    self.stats.detections += 1;
+                                    attempt += 1;
+                                    if attempt >= self.cfg.max_attempts {
+                                        self.stats.exhausted += 1;
+                                        // fall back to the maximum-likelihood
+                                        // candidate (most consistent residues)
+                                        break code.decode_best_effort(&residues) as i64;
+                                    }
+                                    // recompute the dot product: fresh noise
+                                    // on each channel's clean value
+                                    for i in 0..n {
+                                        let cv = clean[i].at(r, c) as u64;
+                                        let noisy = self.units[i].noise.apply_residue(
+                                            cv,
+                                            self.units[i].modulus,
+                                            &mut self.rng,
+                                        );
+                                        residues[i] = noisy;
+                                        self.meter.record_adc(1, self.units[i].enob);
+                                        captured[i].set(r, c, noisy as i64);
+                                    }
+                                    self.meter.record_crt(1);
+                                }
+                            }
+                        }
+                    }
+                };
+                out.set(r, c, value);
+            }
+        }
+        out
+    }
+}
+
+impl GemmBackend for RnsCore {
+    fn gemm(&mut self, x: &MatF, w: &MatF) -> MatF {
+        self.gemm_quantized(x, w)
+    }
+    fn name(&self) -> String {
+        let rr = if self.cfg.redundant > 0 {
+            format!("+rrns({},{})", self.n_channels(), self.cfg.moduli.len())
+        } else {
+            String::new()
+        };
+        format!("rns-b{}{rr}", self.cfg.bits)
+    }
+    fn meter(&self) -> Option<EnergyMeter> {
+        Some(self.meter)
+    }
+    fn fault_stats(&self) -> Option<FaultStats> {
+        Some(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm::gemm_f32;
+
+    fn rand_mat(seed: u64, rows: usize, cols: usize, scale: f32) -> MatF {
+        let mut rng = Rng::seed_from(seed);
+        MatF::from_vec(rows, cols, (0..rows * cols).map(|_| rng.uniform_f32(-scale, scale)).collect())
+    }
+
+    #[test]
+    fn clean_rns_error_is_quantization_only() {
+        // paper claim: no information loss beyond quantization.
+        let x = rand_mat(1, 4, 128, 1.0);
+        let w = rand_mat(2, 128, 8, 0.5);
+        let want = gemm_f32(&x, &w);
+        for bits in [4u32, 6, 8] {
+            let mut core = RnsCore::new(RnsCoreConfig::for_bits(bits, 128)).unwrap();
+            let got = core.gemm_quantized(&x, &w);
+            let qm = crate::quant::qmax(bits) as f32;
+            let tol = 128.0 * 1.5 / qm; // conservative quantization bound
+            for (g, f) in got.data.iter().zip(&want.data) {
+                assert!((g - f).abs() < tol, "bits={bits}: {g} vs {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn rns_beats_fixed_point_same_bits() {
+        use crate::analog::fixed_point_core::FixedPointCore;
+        let x = rand_mat(3, 4, 128, 1.0);
+        let w = rand_mat(4, 128, 8, 0.5);
+        let want = gemm_f32(&x, &w);
+        let mean_err = |got: &MatF| {
+            got.data.iter().zip(&want.data).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+                / want.data.len() as f64
+        };
+        for bits in [4u32, 6, 8] {
+            let mut rns = RnsCore::new(RnsCoreConfig::for_bits(bits, 128)).unwrap();
+            let mut fxp = FixedPointCore::new(bits, 128, NoiseModel::None, 0);
+            let e_rns = mean_err(&rns.gemm_quantized(&x, &w));
+            let e_fxp = mean_err(&fxp.gemm_quantized(&x, &w));
+            assert!(e_fxp > 3.0 * e_rns, "bits={bits}: fxp {e_fxp} rns {e_rns}");
+        }
+    }
+
+    #[test]
+    fn tiled_equals_wide_array_when_clean() {
+        // K = 256 on h=128 (2 tiles) must equal h=256 (1 tile): RNS loses
+        // nothing at tile boundaries (unlike the fixed-point core).
+        let x = rand_mat(5, 2, 256, 1.0);
+        let w = rand_mat(6, 256, 4, 1.0);
+        let mut a = RnsCore::new(RnsCoreConfig::for_bits(8, 128)).unwrap();
+        let mut cfg_wide = RnsCoreConfig::for_bits(8, 128);
+        cfg_wide.h = 256;
+        cfg_wide.moduli = select_moduli(8, 256).unwrap();
+        let mut b = RnsCore::new(cfg_wide).unwrap();
+        let ya = a.gemm_quantized(&x, &w);
+        let yb = b.gemm_quantized(&x, &w);
+        for (p, q) in ya.data.iter().zip(&yb.data) {
+            assert!((p - q).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn eq4_violation_rejected() {
+        let mut cfg = RnsCoreConfig::for_bits(4, 128);
+        cfg.moduli = vec![15, 14]; // M = 210 << 2^14
+        assert!(RnsCore::new(cfg).is_err());
+    }
+
+    #[test]
+    fn rrns_restores_accuracy_under_noise() {
+        let x = rand_mat(7, 4, 128, 1.0);
+        let w = rand_mat(8, 128, 8, 0.5);
+        let want = gemm_f32(&x, &w);
+        let mean_err = |got: &MatF| {
+            got.data.iter().zip(&want.data).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+                / want.data.len() as f64
+        };
+        let noise = NoiseModel::ResidueFlip { p: 0.02 };
+        let mut plain =
+            RnsCore::new(RnsCoreConfig::for_bits(8, 128).with_noise(noise).with_seed(1)).unwrap();
+        let mut protected = RnsCore::new(
+            RnsCoreConfig::for_bits(8, 128).with_noise(noise).with_rrns(2, 3).with_seed(1),
+        )
+        .unwrap();
+        let e_plain = mean_err(&plain.gemm_quantized(&x, &w));
+        let e_prot = mean_err(&protected.gemm_quantized(&x, &w));
+        assert!(
+            e_prot < e_plain / 10.0,
+            "rrns {e_prot} should be far below unprotected {e_plain}"
+        );
+        assert!(protected.stats.corrected > 0, "some corrections should have happened");
+    }
+
+    #[test]
+    fn rrns_range_check() {
+        // too much redundancy shrinks the legitimate range below Eq. 4
+        let mut cfg = RnsCoreConfig::for_bits(4, 128).with_rrns(3, 2);
+        cfg.moduli = vec![15, 14, 13, 11];
+        // redundant candidates 9?? gcd(9,15)=3 -> 8? gcd(8,14)=2 -> 7? gcd(7,14)=7
+        // -> legit range with small redundant moduli collapses
+        assert!(RnsCore::new(cfg).is_err());
+    }
+
+    #[test]
+    fn stats_and_energy_flow() {
+        let x = rand_mat(9, 2, 128, 1.0);
+        let w = rand_mat(10, 128, 4, 1.0);
+        let mut core = RnsCore::new(
+            RnsCoreConfig::for_bits(6, 128)
+                .with_noise(NoiseModel::ResidueFlip { p: 0.01 })
+                .with_rrns(2, 2),
+        )
+        .unwrap();
+        core.gemm_quantized(&x, &w);
+        assert_eq!(core.stats.decoded, 8);
+        assert!(core.meter.adc_conversions >= 8 * core.n_channels() as u64);
+        assert!(core.meter.total_joules() > 0.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Analog MVM-unit SNR / energy model (paper §V, second-order claim).
+//!
+//! "The energy consumption of the analog MVM unit depends on the SNR for
+//! the analog signals, and this SNR increases exponentially with the
+//! desired compute precision.  Thus, RNS brings additional savings by
+//! allowing the MVM units to work with lower SNR."
+//!
+//! Model: to resolve `b` bits at the unit output the analog signal chain
+//! needs SNR >= 6.02 b + 1.76 dB (the quantization-noise-limited bound);
+//! for a fixed noise floor the signal *power* — and hence the analog MVM
+//! energy — scales linearly with the required SNR, i.e. exponentially
+//! (4^b) with the bit precision.  We normalize to an energy constant per
+//! MAC at 1-bit SNR so comparisons are technology-agnostic, which is all
+//! the paper claims (no absolute numbers are given there either).
+
+/// Quantization-limited SNR (dB) needed to resolve `bits` at the output.
+pub fn required_snr_db(bits: u32) -> f64 {
+    6.02 * bits as f64 + 1.76
+}
+
+/// Linear-scale SNR from dB.
+pub fn snr_linear(snr_db: f64) -> f64 {
+    10f64.powf(snr_db / 10.0)
+}
+
+/// Relative analog MVM energy per MAC for a unit that must resolve `bits`
+/// output bits, normalized to a 1-bit unit (energy ∝ required signal
+/// power ∝ linear SNR).
+pub fn relative_mvm_energy(bits: u32) -> f64 {
+    snr_linear(required_snr_db(bits)) / snr_linear(required_snr_db(1))
+}
+
+/// Analog-MVM energy comparison for an RNS core (n units at `bits`) vs a
+/// fixed-point core (1 unit that must resolve `b_out` bits).  Returns
+/// (rns_relative, fxp_relative, ratio fxp/rns).
+pub fn mvm_energy_comparison(bits: u32, n_channels: usize, b_out: u32) -> (f64, f64, f64) {
+    let rns = n_channels as f64 * relative_mvm_energy(bits);
+    let fxp = relative_mvm_energy(b_out);
+    (rns, fxp, fxp / rns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::moduli::required_output_bits;
+
+    #[test]
+    fn snr_reference_points() {
+        // the classic 6 dB/bit rule
+        assert!((required_snr_db(8) - 49.92).abs() < 0.01);
+        assert!((required_snr_db(16) - 98.08).abs() < 0.01);
+    }
+
+    #[test]
+    fn energy_quadruples_per_bit() {
+        for b in 2..12 {
+            let r = relative_mvm_energy(b + 1) / relative_mvm_energy(b);
+            assert!((r - 4.0).abs() < 0.01, "b={b}: {r}");
+        }
+    }
+
+    #[test]
+    fn rns_needs_less_mvm_energy_than_fixed_point() {
+        // paper §V: RNS lowers the required SNR in the analog units.
+        for bits in 4..=8u32 {
+            let b_out = required_output_bits(bits, bits, 128);
+            let n = crate::rns::select_moduli(bits, 128).unwrap().len();
+            let (rns, fxp, ratio) = mvm_energy_comparison(bits, n, b_out);
+            assert!(rns < fxp, "bits={bits}");
+            // the gap grows with precision (exponential vs linear-in-n)
+            assert!(ratio > 100.0, "bits={bits} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn ratio_monotone_in_bits() {
+        let mut prev = 0.0;
+        for bits in 4..=8u32 {
+            let b_out = required_output_bits(bits, bits, 128);
+            let n = crate::rns::select_moduli(bits, 128).unwrap().len();
+            let (_, _, ratio) = mvm_energy_comparison(bits, n, b_out);
+            assert!(ratio > prev, "bits={bits}");
+            prev = ratio;
+        }
+    }
+}

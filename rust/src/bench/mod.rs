@@ -1,0 +1,189 @@
+//! Micro/end-to-end benchmark harness (the image vendors no `criterion`).
+//!
+//! `Bencher` auto-calibrates the iteration count to a target measurement
+//! time, reports median / p95 / mean ns per iteration, and (optionally)
+//! derived throughput in user units.  Used by `rust/benches/bench_main.rs`
+//! (`cargo bench`, harness = false) and the §Perf optimization passes.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Percentiles;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub mean_ns: f64,
+    /// Optional throughput: (value per iteration, unit).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput {
+            Some((per_iter, unit)) => {
+                let rate = per_iter / (self.median_ns * 1e-9);
+                format!("  {}", crate::util::format_si(rate, unit))
+            }
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  x{}{}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.mean_ns),
+            self.iters,
+            tp
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    /// Total sampling budget per benchmark.
+    pub budget: Duration,
+    /// Number of timed samples (each sample runs a calibrated batch).
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget: Duration::from_millis(600), samples: 20, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { budget: Duration::from_millis(150), samples: 8, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, preventing dead-code elimination via the returned
+    /// value's drop.  Returns the recorded result.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_throughput(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput annotation (`per_iter` user units per
+    /// call, e.g. MACs or samples).
+    pub fn bench_with_rate<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        per_iter: f64,
+        unit: &'static str,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_throughput(name, Some((per_iter, unit)), &mut f)
+    }
+
+    fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        throughput: Option<(f64, &'static str)>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        // warmup + calibration: how many iters fit in budget/samples?
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let per_sample = self.budget.div_f64(self.samples as f64);
+        let batch = (per_sample.as_nanos() / once.as_nanos()).clamp(1, 1_000_000) as u64;
+
+        let mut samples = Percentiles::new();
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let elapsed = start.elapsed().as_nanos() as f64 / batch as f64;
+            samples.add(elapsed);
+            total_iters += batch;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: samples.median(),
+            p95_ns: samples.percentile(95.0),
+            mean_ns: {
+                let mut s = 0.0;
+                for q in [10.0, 30.0, 50.0, 70.0, 90.0] {
+                    s += samples.percentile(q);
+                }
+                s / 5.0
+            },
+            throughput,
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  iters",
+            "benchmark", "median", "p95", "mean"
+        )
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = vec![Self::header(), "-".repeat(96)];
+        out.extend(self.results.iter().map(|r| r.report_line()));
+        out.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let mut b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            s
+        });
+        assert!(r.median_ns > 10.0, "1000 adds can't be {} ns", r.median_ns);
+        assert!(r.median_ns < 1e7);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn report_contains_all_benches() {
+        let mut b = Bencher::quick();
+        b.bench("a", || 1 + 1);
+        b.bench_with_rate("b", 100.0, "Op/s", || 2 + 2);
+        let rep = b.report();
+        assert!(rep.contains('a') && rep.contains('b'));
+        assert!(rep.contains("Op/s"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.000 s");
+    }
+}

@@ -1,0 +1,220 @@
+//! Dynamic batcher: groups queued requests for the same model into one
+//! hardware batch, bounded by `max_batch` samples and `max_wait` age —
+//! the standard serving trade-off (throughput vs tail latency) applied to
+//! the analog core, whose MVM unit amortizes weight-DAC loads across the
+//! batch.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::InferenceRequest;
+use crate::nn::models::Batch;
+use crate::tensor::Nhwc;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max samples per formed batch.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before the batch is flushed.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch: the concatenated input plus the member requests and
+/// their sample offsets (for splitting the logits back).
+pub struct FormedBatch {
+    pub model: String,
+    pub input: Batch,
+    pub members: Vec<(InferenceRequest, usize)>, // (request, sample offset)
+}
+
+/// Per-model FIFO with age- and size-triggered flushing.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queues: Vec<(String, VecDeque<InferenceRequest>)>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher { cfg, queues: Vec::new() }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) {
+        if let Some((_, q)) = self.queues.iter_mut().find(|(m, _)| *m == req.model) {
+            q.push_back(req);
+        } else {
+            let model = req.model.clone();
+            let mut q = VecDeque::new();
+            q.push_back(req);
+            self.queues.push((model, q));
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    /// Pop a ready batch, if any queue hit `max_batch` samples or its head
+    /// request is older than `max_wait` (or `force` drains regardless).
+    pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<FormedBatch> {
+        let cfg = self.cfg;
+        let idx = self.queues.iter().position(|(_, q)| {
+            let samples: usize = q.iter().map(|r| r.num_samples()).sum();
+            let head_age = q.front().map(|r| now.duration_since(r.submitted_at));
+            (!q.is_empty())
+                && (samples >= cfg.max_batch
+                    || head_age.map(|a| a >= cfg.max_wait).unwrap_or(false)
+                    || force)
+        })?;
+        let (model, q) = &mut self.queues[idx];
+        let model = model.clone();
+        let mut members = Vec::new();
+        let mut samples = 0usize;
+        while let Some(front) = q.front() {
+            let ns = front.num_samples();
+            if !members.is_empty() && samples + ns > cfg.max_batch {
+                break;
+            }
+            let req = q.pop_front().unwrap();
+            members.push((req, samples));
+            samples += ns;
+            if samples >= cfg.max_batch {
+                break;
+            }
+        }
+        let input = concat_inputs(members.iter().map(|(r, _)| &r.input));
+        Some(FormedBatch { model, input, members })
+    }
+}
+
+/// Concatenate request inputs along the batch axis (shapes must agree).
+fn concat_inputs<'a, I: Iterator<Item = &'a Batch>>(inputs: I) -> Batch {
+    let inputs: Vec<&Batch> = inputs.collect();
+    assert!(!inputs.is_empty());
+    match inputs[0] {
+        Batch::Images(first) => {
+            let (h, w, c) = (first.h, first.w, first.c);
+            let mut data = Vec::new();
+            let mut n = 0;
+            for b in &inputs {
+                match b {
+                    Batch::Images(t) => {
+                        assert_eq!((t.h, t.w, t.c), (h, w, c), "batch shape mismatch");
+                        data.extend_from_slice(&t.data);
+                        n += t.n;
+                    }
+                    _ => panic!("mixed input kinds in one batch"),
+                }
+            }
+            Batch::Images(Nhwc::from_vec(n, h, w, c, data))
+        }
+        Batch::Tokens { seq, .. } => {
+            let seq = *seq;
+            let mut tokens = Vec::new();
+            let mut batch = 0;
+            for b in &inputs {
+                match b {
+                    Batch::Tokens { tokens: t, batch: bn, seq: s } => {
+                        assert_eq!(*s, seq, "sequence length mismatch");
+                        tokens.extend_from_slice(t);
+                        batch += bn;
+                    }
+                    _ => panic!("mixed input kinds in one batch"),
+                }
+            }
+            Batch::Tokens { tokens, batch, seq }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img_req(id: u64, model: &str, n: usize) -> InferenceRequest {
+        InferenceRequest::new(id, model, Batch::Images(Nhwc::zeros(n, 2, 2, 1)))
+    }
+
+    #[test]
+    fn batches_by_size() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(10) });
+        for i in 0..3 {
+            b.push(img_req(i, "mlp", 1));
+        }
+        assert!(b.pop_ready(Instant::now(), false).is_none(), "3 < max_batch and young");
+        b.push(img_req(3, "mlp", 1));
+        let fb = b.pop_ready(Instant::now(), false).expect("full batch");
+        assert_eq!(fb.members.len(), 4);
+        assert_eq!(fb.input.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_age() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(0) });
+        b.push(img_req(0, "mlp", 2));
+        let fb = b.pop_ready(Instant::now() + Duration::from_millis(1), false).unwrap();
+        assert_eq!(fb.input.len(), 2);
+    }
+
+    #[test]
+    fn separates_models() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        b.push(img_req(0, "mlp", 1));
+        b.push(img_req(1, "cnn", 1));
+        assert!(b.pop_ready(Instant::now(), false).is_none());
+        b.push(img_req(2, "mlp", 1));
+        let fb = b.pop_ready(Instant::now(), false).unwrap();
+        assert_eq!(fb.model, "mlp");
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn force_drains() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        b.push(img_req(0, "mlp", 1));
+        assert!(b.pop_ready(Instant::now(), true).is_some());
+    }
+
+    #[test]
+    fn offsets_track_sample_positions() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(10) });
+        b.push(img_req(0, "mlp", 3));
+        b.push(img_req(1, "mlp", 2));
+        b.push(img_req(2, "mlp", 3));
+        let fb = b.pop_ready(Instant::now(), false).unwrap();
+        let offsets: Vec<usize> = fb.members.iter().map(|(_, o)| *o).collect();
+        assert_eq!(offsets, vec![0, 3, 5]);
+    }
+
+    #[test]
+    fn oversize_request_forms_own_batch() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        b.push(img_req(0, "mlp", 5)); // bigger than max_batch
+        let fb = b.pop_ready(Instant::now(), false).unwrap();
+        assert_eq!(fb.members.len(), 1);
+        assert_eq!(fb.input.len(), 5);
+    }
+
+    #[test]
+    fn token_concat() {
+        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let t1 = Batch::Tokens { tokens: vec![1, 2], batch: 1, seq: 2 };
+        let t2 = Batch::Tokens { tokens: vec![3, 4], batch: 1, seq: 2 };
+        b.push(InferenceRequest::new(0, "bert", t1));
+        b.push(InferenceRequest::new(1, "bert", t2));
+        let fb = b.pop_ready(Instant::now(), false).unwrap();
+        match fb.input {
+            Batch::Tokens { tokens, batch, seq } => {
+                assert_eq!(tokens, vec![1, 2, 3, 4]);
+                assert_eq!((batch, seq), (2, 2));
+            }
+            _ => panic!(),
+        }
+    }
+}

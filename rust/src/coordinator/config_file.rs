@@ -1,0 +1,157 @@
+//! Config-file loading for the coordinator (TOML-subset via util::config).
+//!
+//! Example (`configs/rns_b6.toml`):
+//! ```toml
+//! [core]
+//! backend = "rns"        # fp32 | fixed | rns | rns-pjrt
+//! bits = 6
+//! h = 128
+//! redundant = 0
+//! attempts = 1
+//! noise_p = 0.0
+//!
+//! [serve]
+//! workers = 2
+//! max_batch = 8
+//! max_wait_us = 2000
+//! routing = "least-outstanding"   # or "round-robin"
+//! ```
+
+use std::time::Duration;
+
+use crate::analog::NoiseModel;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::router::RoutingKind;
+use crate::coordinator::server::{BackendKind, CoordinatorConfig};
+use crate::util::config::Config;
+
+/// Build a `CoordinatorConfig` from a parsed config file.
+pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfig, String> {
+    let bits = cfg.int_or("core.bits", 6) as u32;
+    if !(2..=16).contains(&bits) {
+        return Err(format!("core.bits = {bits} out of range"));
+    }
+    let redundant = cfg.int_or("core.redundant", 0);
+    if redundant < 0 {
+        return Err("core.redundant must be >= 0".into());
+    }
+    let attempts = cfg.int_or("core.attempts", 1).max(1) as u32;
+    let noise_p = cfg.float_or("core.noise_p", 0.0);
+    if !(0.0..=1.0).contains(&noise_p) {
+        return Err(format!("core.noise_p = {noise_p} not a probability"));
+    }
+    let noise = if noise_p > 0.0 {
+        NoiseModel::ResidueFlip { p: noise_p }
+    } else if cfg.float("core.noise_sigma_lsb").is_some() {
+        NoiseModel::Gaussian { sigma_lsb: cfg.float_or("core.noise_sigma_lsb", 0.0) }
+    } else {
+        NoiseModel::None
+    };
+    let backend = match cfg.str_or("core.backend", "rns").as_str() {
+        "fp32" => BackendKind::Fp32,
+        "fixed" => BackendKind::FixedPoint { bits },
+        "rns" => BackendKind::Rns { bits, redundant: redundant as usize, attempts, noise },
+        "rns-pjrt" => {
+            BackendKind::RnsPjrt { bits, redundant: redundant as usize, attempts, noise }
+        }
+        other => return Err(format!("unknown core.backend `{other}`")),
+    };
+    let routing = match cfg.str_or("serve.routing", "round-robin").as_str() {
+        "round-robin" => RoutingKind::RoundRobin,
+        "least-outstanding" => RoutingKind::LeastOutstanding,
+        other => return Err(format!("unknown serve.routing `{other}`")),
+    };
+    let mut out = CoordinatorConfig::new(backend, artifacts_dir);
+    out.h = cfg.int_or("core.h", 128) as usize;
+    if out.h == 0 {
+        return Err("core.h must be positive".into());
+    }
+    out.workers = cfg.int_or("serve.workers", 2).max(1) as usize;
+    out.batcher = BatcherConfig {
+        max_batch: cfg.int_or("serve.max_batch", 8).max(1) as usize,
+        max_wait: Duration::from_micros(cfg.int_or("serve.max_wait_us", 2000).max(0) as u64),
+    };
+    out.seed = cfg.int_or("core.seed", 0) as u64;
+    out.routing = routing;
+    Ok(out)
+}
+
+/// Load from a file path.
+pub fn from_file(path: &str, artifacts_dir: &str) -> Result<CoordinatorConfig, String> {
+    from_config(&Config::from_file(path)?, artifacts_dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[core]
+backend = "rns"
+bits = 8
+h = 128
+redundant = 2
+attempts = 3
+noise_p = 0.01
+seed = 7
+[serve]
+workers = 3
+max_batch = 16
+max_wait_us = 500
+routing = "least-outstanding"
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let cc = from_config(&cfg, "/tmp/a").unwrap();
+        match cc.backend {
+            BackendKind::Rns { bits, redundant, attempts, noise } => {
+                assert_eq!(bits, 8);
+                assert_eq!(redundant, 2);
+                assert_eq!(attempts, 3);
+                assert_eq!(noise, NoiseModel::ResidueFlip { p: 0.01 });
+            }
+            other => panic!("wrong backend {other:?}"),
+        }
+        assert_eq!(cc.workers, 3);
+        assert_eq!(cc.batcher.max_batch, 16);
+        assert_eq!(cc.batcher.max_wait, Duration::from_micros(500));
+        assert_eq!(cc.routing, RoutingKind::LeastOutstanding);
+        assert_eq!(cc.seed, 7);
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let cc = from_config(&Config::parse("").unwrap(), "/tmp/a").unwrap();
+        assert!(matches!(cc.backend, BackendKind::Rns { bits: 6, .. }));
+        assert_eq!(cc.workers, 2);
+        assert_eq!(cc.routing, RoutingKind::RoundRobin);
+    }
+
+    #[test]
+    fn gaussian_noise_selected_by_sigma() {
+        let cfg = Config::parse("[core]\nnoise_sigma_lsb = 0.4\n").unwrap();
+        let cc = from_config(&cfg, "/tmp/a").unwrap();
+        match cc.backend {
+            BackendKind::Rns { noise: NoiseModel::Gaussian { sigma_lsb }, .. } => {
+                assert!((sigma_lsb - 0.4).abs() < 1e-12)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for bad in [
+            "[core]\nbackend = \"quantum\"",
+            "[core]\nbits = 40",
+            "[core]\nnoise_p = 1.5",
+            "[core]\nh = 0",
+            "[serve]\nrouting = \"random\"",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(from_config(&cfg, "/tmp/a").is_err(), "{bad}");
+        }
+    }
+}

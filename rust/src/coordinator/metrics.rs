@@ -1,0 +1,98 @@
+//! Serving metrics: throughput, latency percentiles, fault counters.
+
+use std::time::Duration;
+
+use crate::util::stats::Percentiles;
+
+#[derive(Default)]
+pub struct ServingMetrics {
+    pub requests: u64,
+    pub samples: u64,
+    pub batches: u64,
+    pub failures: u64,
+    pub faults_detected: u64,
+    pub faults_corrected: u64,
+    latency_us: Percentiles,
+    queue_us: Percentiles,
+    batch_sizes: Percentiles,
+}
+
+impl ServingMetrics {
+    pub fn record_batch(&mut self, batch_samples: usize) {
+        self.batches += 1;
+        self.batch_sizes.add(batch_samples as f64);
+    }
+
+    pub fn record_response(&mut self, samples: usize, latency: Duration, queue: Duration, ok: bool) {
+        self.requests += 1;
+        self.samples += samples as u64;
+        if !ok {
+            self.failures += 1;
+        }
+        self.latency_us.add(latency.as_secs_f64() * 1e6);
+        self.queue_us.add(queue.as_secs_f64() * 1e6);
+    }
+
+    pub fn latency_percentile_us(&mut self, q: f64) -> f64 {
+        self.latency_us.percentile(q)
+    }
+
+    pub fn queue_percentile_us(&mut self, q: f64) -> f64 {
+        self.queue_us.percentile(q)
+    }
+
+    pub fn mean_batch_size(&mut self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.batch_sizes.percentile(50.0) }
+    }
+
+    /// Render a one-screen report (used by `serve` and the e2e example).
+    pub fn report(&mut self, wall: Duration) -> String {
+        let thpt = self.samples as f64 / wall.as_secs_f64().max(1e-9);
+        let mb = self.mean_batch_size();
+        let (p50, p95, p99) = (
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(95.0),
+            self.latency_percentile_us(99.0),
+        );
+        let q50 = self.queue_percentile_us(50.0);
+        format!(
+            "requests={} samples={} batches={} failures={}\n\
+             throughput={:.1} samples/s  median batch={:.1}\n\
+             latency p50={:.0}µs p95={:.0}µs p99={:.0}µs  queue p50={:.0}µs\n\
+             faults: detected={} corrected={}",
+            self.requests,
+            self.samples,
+            self.batches,
+            self.failures,
+            thpt,
+            mb,
+            p50,
+            p95,
+            p99,
+            q50,
+            self.faults_detected,
+            self.faults_corrected,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = ServingMetrics::default();
+        m.record_batch(4);
+        m.record_response(4, Duration::from_micros(100), Duration::from_micros(10), true);
+        m.record_response(2, Duration::from_micros(300), Duration::from_micros(20), false);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.samples, 6);
+        assert_eq!(m.failures, 1);
+        let p50 = m.latency_percentile_us(50.0);
+        assert!((p50 - 200.0).abs() < 1.0);
+        let rep = m.report(Duration::from_secs(1));
+        assert!(rep.contains("requests=2"));
+        assert!(rep.contains("throughput=6.0"));
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: request types, the dynamic batcher, the worker-pool
+//! serving loop (dispatcher + per-worker analog core), and serving metrics.
+//!
+//! The RRNS detect→recompute retry (paper §IV) executes inside each
+//! worker's `RnsCore`; the coordinator surfaces its fault counters in the
+//! serving report.
+
+pub mod batcher;
+pub mod config_file;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::ServingMetrics;
+pub use router::{RoutingKind, RoutingPolicy};
+pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use server::{BackendKind, Coordinator, CoordinatorConfig};

@@ -1,0 +1,57 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::{Duration, Instant};
+
+use crate::nn::models::Batch;
+use crate::tensor::MatF;
+
+/// Monotonically increasing request id.
+pub type RequestId = u64;
+
+/// One inference request: a (possibly multi-sample) input for a zoo model.
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: RequestId,
+    pub model: String,
+    pub input: Batch,
+    pub submitted_at: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: RequestId, model: &str, input: Batch) -> Self {
+        InferenceRequest { id, model: model.to_string(), input, submitted_at: Instant::now() }
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.input.len()
+    }
+}
+
+/// The completed response.
+#[derive(Debug)]
+pub struct InferenceResponse {
+    pub id: RequestId,
+    /// Logits (num_samples, num_classes), or the failure message.
+    pub result: Result<MatF, String>,
+    /// Time spent queued before a worker picked the batch up.
+    pub queue_time: Duration,
+    /// End-to-end latency (submit -> response).
+    pub latency: Duration,
+    /// Worker that executed the batch.
+    pub worker: usize,
+    /// RRNS decode detections triggered while serving this request's batch.
+    pub faults_detected: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Nhwc;
+
+    #[test]
+    fn request_sample_count() {
+        let r = InferenceRequest::new(1, "mlp", Batch::Images(Nhwc::zeros(3, 28, 28, 1)));
+        assert_eq!(r.num_samples(), 3);
+        assert_eq!(r.model, "mlp");
+    }
+}

@@ -1,0 +1,407 @@
+//! The serving coordinator: a dispatcher thread (dynamic batcher + round-
+//! robin tile scheduler) feeding a pool of worker threads, each owning a
+//! simulated analog core and a model zoo instance.
+//!
+//! Engines wrapping PJRT state are not `Send`, so every worker constructs
+//! its own backend *inside* its thread — mirroring how a real deployment
+//! pins one accelerator context per worker.  The RRNS detect→recompute
+//! loop (paper §IV) runs inside the core; its fault counters are merged
+//! into the serving metrics at shutdown.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::analog::{FixedPointCore, Fp32Backend, GemmBackend, NoiseModel, RnsCore, RnsCoreConfig};
+use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::router::RoutingKind;
+use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestId};
+use crate::nn::models::{load_model, Batch, Model};
+use crate::runtime::pjrt::{PjrtEngine, PjrtRuntime};
+use crate::tensor::{MatF, Nhwc};
+
+/// Which simulated hardware the workers run.
+#[derive(Clone, Debug)]
+pub enum BackendKind {
+    /// FP32 reference (no analog hardware).
+    Fp32,
+    /// Regular fixed-point analog core (b_adc = bits).
+    FixedPoint { bits: u32 },
+    /// RNS analog core; `redundant > 0` enables the RRNS retry loop.
+    Rns { bits: u32, redundant: usize, attempts: u32, noise: NoiseModel },
+    /// RNS core executing through the AOT pallas kernel via PJRT.
+    RnsPjrt { bits: u32, redundant: usize, attempts: u32, noise: NoiseModel },
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub backend: BackendKind,
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    pub artifacts_dir: String,
+    /// Analog array height.
+    pub h: usize,
+    pub seed: u64,
+    /// Worker routing policy (round-robin or least-outstanding).
+    pub routing: RoutingKind,
+}
+
+impl CoordinatorConfig {
+    pub fn new(backend: BackendKind, artifacts_dir: &str) -> Self {
+        CoordinatorConfig {
+            backend,
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            artifacts_dir: artifacts_dir.to_string(),
+            h: 128,
+            seed: 0,
+            routing: RoutingKind::default(),
+        }
+    }
+}
+
+enum WorkerMsg {
+    Batch(FormedBatch),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    submit_tx: Option<Sender<InferenceRequest>>,
+    resp_rx: Receiver<InferenceResponse>,
+    next_id: AtomicU64,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+    started: Instant,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Self {
+        let (submit_tx, submit_rx) = mpsc::channel::<InferenceRequest>();
+        let (resp_tx, resp_rx) = mpsc::channel::<InferenceResponse>();
+        let (done_tx, done_rx) = mpsc::channel::<usize>();
+        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            let cfg_w = cfg.clone();
+            let resp_tx = resp_tx.clone();
+            let done_tx = done_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("rns-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, cfg_w, rx, resp_tx, done_tx, metrics))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let batcher_cfg = cfg.batcher;
+        let routing = cfg.routing;
+        let metrics_d = Arc::clone(&metrics);
+        let dispatcher = std::thread::Builder::new()
+            .name("rns-dispatcher".into())
+            .spawn(move || {
+                dispatcher_loop(submit_rx, worker_txs, batcher_cfg, routing, done_rx, metrics_d)
+            })
+            .expect("spawn dispatcher");
+
+        Coordinator {
+            submit_tx: Some(submit_tx),
+            resp_rx,
+            next_id: AtomicU64::new(1),
+            dispatcher: Some(dispatcher),
+            workers,
+            metrics,
+            started: Instant::now(),
+        }
+    }
+
+    /// Submit a request; returns its id immediately.
+    pub fn submit(&self, model: &str, input: Batch) -> RequestId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = InferenceRequest::new(id, model, input);
+        self.submit_tx.as_ref().expect("coordinator running").send(req).expect("dispatcher alive");
+        id
+    }
+
+    /// Blocking receive of the next completed response.
+    pub fn recv(&self) -> Option<InferenceResponse> {
+        self.resp_rx.recv().ok()
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<InferenceResponse> {
+        self.resp_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Drain exactly `n` responses (in completion order).
+    pub fn collect(&self, n: usize) -> Vec<InferenceResponse> {
+        (0..n).filter_map(|_| self.recv()).collect()
+    }
+
+    /// Stop accepting requests, drain workers, and return the final report.
+    pub fn shutdown(mut self) -> String {
+        drop(self.submit_tx.take()); // dispatcher sees the channel close
+        if let Some(d) = self.dispatcher.take() {
+            d.join().ok();
+        }
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+        let wall = self.started.elapsed();
+        self.metrics.lock().unwrap().report(wall)
+    }
+}
+
+fn dispatcher_loop(
+    submit_rx: Receiver<InferenceRequest>,
+    worker_txs: Vec<Sender<WorkerMsg>>,
+    batcher_cfg: BatcherConfig,
+    routing: RoutingKind,
+    done_rx: Receiver<usize>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+) {
+    let mut batcher = DynamicBatcher::new(batcher_cfg);
+    let mut policy = routing.build();
+    let mut open = true;
+    while open || batcher.pending() > 0 {
+        if open {
+            match submit_rx.recv_timeout(batcher_cfg.max_wait.max(Duration::from_micros(100))) {
+                Ok(req) => batcher.push(req),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+        }
+        // completion feedback for load-aware policies
+        while let Ok(wid) = done_rx.try_recv() {
+            policy.on_complete(wid);
+        }
+        let force = !open;
+        while let Some(batch) = batcher.pop_ready(Instant::now(), force) {
+            metrics.lock().unwrap().record_batch(batch.input.len());
+            let wid = policy.pick(worker_txs.len());
+            policy.on_dispatch(wid);
+            worker_txs[wid].send(WorkerMsg::Batch(batch)).ok();
+        }
+    }
+    for tx in &worker_txs {
+        tx.send(WorkerMsg::Shutdown).ok();
+    }
+}
+
+/// Construct the configured backend (public so the CLI / examples can run
+/// a core without the full coordinator).  Engines wrapping PJRT state are
+/// not `Send`; call this from the thread that will use the backend.
+pub fn build_backend(cfg: &CoordinatorConfig, wid: usize) -> Result<Box<dyn GemmBackend>, String> {
+    let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9E37_79B9);
+    match &cfg.backend {
+        BackendKind::Fp32 => Ok(Box::new(Fp32Backend)),
+        BackendKind::FixedPoint { bits } => {
+            Ok(Box::new(FixedPointCore::new(*bits, cfg.h, NoiseModel::None, seed)))
+        }
+        BackendKind::Rns { bits, redundant, attempts, noise } => {
+            let core = RnsCore::new(
+                RnsCoreConfig::for_bits(*bits, cfg.h)
+                    .with_noise(*noise)
+                    .with_rrns(*redundant, *attempts)
+                    .with_seed(seed),
+            )?;
+            Ok(Box::new(core))
+        }
+        BackendKind::RnsPjrt { bits, redundant, attempts, noise } => {
+            let rt = PjrtRuntime::cpu().map_err(|e| e.to_string())?;
+            let engine = PjrtEngine::load(&rt, &cfg.artifacts_dir, *bits).map_err(|e| e.to_string())?;
+            let core = RnsCore::with_engine(
+                RnsCoreConfig::for_bits(*bits, cfg.h)
+                    .with_noise(*noise)
+                    .with_rrns(*redundant, *attempts)
+                    .with_seed(seed),
+                Box::new(engine),
+            )?;
+            Ok(Box::new(core))
+        }
+    }
+}
+
+fn split_logits(all: &MatF, offset: usize, n: usize) -> MatF {
+    all.slice_rows(offset, offset + n)
+}
+
+fn worker_loop(
+    wid: usize,
+    cfg: CoordinatorConfig,
+    rx: Receiver<WorkerMsg>,
+    resp_tx: Sender<InferenceResponse>,
+    done_tx: Sender<usize>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+) {
+    // Backend and models are constructed in-thread (PJRT state is !Send).
+    let mut backend = match build_backend(&cfg, wid) {
+        Ok(b) => {
+            crate::log_debug!("worker", "worker {wid} ready with backend {}", b.name());
+            b
+        }
+        Err(e) => {
+            crate::log_error!("worker", "worker {wid} backend construction failed: {e}");
+            // fail every batch with the construction error
+            while let Ok(WorkerMsg::Batch(batch)) = rx.recv() {
+                fail_batch(wid, batch, &e, &resp_tx, &metrics);
+            }
+            return;
+        }
+    };
+    let mut models: HashMap<String, Box<dyn Model>> = HashMap::new();
+    let mut faults_before = 0u64;
+
+    while let Ok(msg) = rx.recv() {
+        let batch = match msg {
+            WorkerMsg::Batch(b) => b,
+            WorkerMsg::Shutdown => break,
+        };
+        if !models.contains_key(&batch.model) {
+            match load_model(&cfg.artifacts_dir, &batch.model) {
+                Ok(m) => {
+                    models.insert(batch.model.clone(), m);
+                }
+                Err(e) => {
+                    crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
+                    fail_batch(wid, batch, &e, &resp_tx, &metrics);
+                    continue;
+                }
+            }
+        }
+        let model = models.get(&batch.model).unwrap();
+        let picked_up = Instant::now();
+        let logits = model.forward(&batch.input, backend.as_mut());
+        // fault counters from the RRNS core, per batch
+        let (detected, corrected) = backend_fault_counts(backend.as_ref());
+        let batch_faults = detected.saturating_sub(faults_before);
+        faults_before = detected;
+        {
+            let mut m = metrics.lock().unwrap();
+            m.faults_detected = detected;
+            m.faults_corrected = corrected;
+        }
+        for (req, offset) in batch.members {
+            let n = req.num_samples();
+            let latency = req.submitted_at.elapsed();
+            let queue_time = picked_up.duration_since(req.submitted_at);
+            metrics.lock().unwrap().record_response(n, latency, queue_time, true);
+            resp_tx
+                .send(InferenceResponse {
+                    id: req.id,
+                    result: Ok(split_logits(&logits, offset, n)),
+                    queue_time,
+                    latency,
+                    worker: wid,
+                    faults_detected: batch_faults,
+                })
+                .ok();
+        }
+        done_tx.send(wid).ok();
+    }
+}
+
+fn backend_fault_counts(backend: &dyn GemmBackend) -> (u64, u64) {
+    backend.fault_stats().map(|s| (s.detections, s.corrected)).unwrap_or((0, 0))
+}
+
+fn fail_batch(
+    wid: usize,
+    batch: FormedBatch,
+    err: &str,
+    resp_tx: &Sender<InferenceResponse>,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+) {
+    for (req, _) in batch.members {
+        let latency = req.submitted_at.elapsed();
+        metrics.lock().unwrap().record_response(req.num_samples(), latency, latency, false);
+        resp_tx
+            .send(InferenceResponse {
+                id: req.id,
+                result: Err(err.to_string()),
+                queue_time: latency,
+                latency,
+                worker: wid,
+                faults_detected: 0,
+            })
+            .ok();
+    }
+}
+
+/// Convenience: build an image batch from raw NHWC data.
+pub fn image_batch(n: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Batch {
+    Batch::Images(Nhwc::from_vec(n, h, w, c, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&format!("{}/models/mlp.rt", artifacts_dir())).exists()
+    }
+
+    #[test]
+    fn serve_fp32_roundtrip() {
+        if !have_artifacts() {
+            return; // artifacts not built in this environment
+        }
+        let cfg = CoordinatorConfig::new(BackendKind::Fp32, &artifacts_dir());
+        let coord = Coordinator::start(cfg);
+        let mut ids = Vec::new();
+        for _ in 0..5 {
+            ids.push(coord.submit("mlp", Batch::Images(Nhwc::zeros(1, 28, 28, 1))));
+        }
+        let resps = coord.collect(5);
+        assert_eq!(resps.len(), 5);
+        for r in &resps {
+            let logits = r.result.as_ref().expect("ok");
+            assert_eq!((logits.rows, logits.cols), (1, 10));
+        }
+        let report = coord.shutdown();
+        assert!(report.contains("requests=5"), "{report}");
+    }
+
+    #[test]
+    fn unknown_model_fails_gracefully() {
+        let cfg = CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent");
+        let coord = Coordinator::start(cfg);
+        coord.submit("nope", Batch::Images(Nhwc::zeros(1, 2, 2, 1)));
+        let r = coord.recv_timeout(Duration::from_secs(5)).expect("response");
+        assert!(r.result.is_err());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn responses_match_request_ids() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, &artifacts_dir());
+        cfg.workers = 3;
+        let coord = Coordinator::start(cfg);
+        let ids: Vec<RequestId> =
+            (0..9).map(|_| coord.submit("mlp", Batch::Images(Nhwc::zeros(2, 28, 28, 1)))).collect();
+        let resps = coord.collect(9);
+        let mut got: Vec<RequestId> = resps.iter().map(|r| r.id).collect();
+        got.sort();
+        assert_eq!(got, ids);
+        for r in &resps {
+            assert_eq!(r.result.as_ref().unwrap().rows, 2);
+        }
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,266 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//!   A1  moduli selection — max-product (paper Table I) vs greedy-descend:
+//!       dynamic range achieved for the same converter budget.
+//!   A2  RRNS decoder — CRT-voting (paper §IV) vs base-extension
+//!       (paper footnote 5): throughput and decision agreement.
+//!   A3  analog modulo realization — ring oscillator vs optical phase
+//!       (paper §V): effective residue error rate vs noise level, and the
+//!       RRNS redundancy needed to absorb it.
+//!   A4  coordinator routing — round-robin vs least-outstanding under a
+//!       heavy-tailed (noisy RRNS) backend: serving throughput.
+
+use std::time::Instant;
+
+use crate::analog::modulo_hw::{measure_error_rate, AnalogModulo, OpticalPhaseModulo, RingOscillatorModulo};
+use crate::coordinator::{BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, RoutingKind};
+use crate::analog::NoiseModel;
+use crate::exp::report::{sci, Report};
+use crate::nn::models::Batch;
+use crate::rns::fault_model::estimate_case_probs;
+use crate::rns::mixed_radix::{BexDecoder, BexOutcome};
+use crate::rns::moduli::{extend_moduli, gcd, paper_table1, required_output_bits, select_moduli};
+use crate::rns::rrns::{Decode, RrnsCode};
+use crate::rns::RnsContext;
+use crate::tensor::Nhwc;
+use crate::util::rng::Rng;
+
+/// A1: greedy-descend moduli selection (the obvious alternative).
+pub fn select_moduli_greedy(bits: u32, h: usize) -> Vec<u64> {
+    let b_out = required_output_bits(bits, bits, h);
+    let target: u128 = 1 << b_out;
+    let mut moduli: Vec<u64> = Vec::new();
+    let mut prod: u128 = 1;
+    let mut cand = (1u64 << bits) - 1;
+    while prod < target && cand >= 2 {
+        if moduli.iter().all(|&m| gcd(m, cand) == 1) {
+            moduli.push(cand);
+            prod *= cand as u128;
+        }
+        cand -= 1;
+    }
+    moduli
+}
+
+pub fn moduli_selection_report() -> Report {
+    let mut rep = Report::new("Ablation A1 — moduli selection: max-product (paper) vs greedy");
+    rep.note("same converter bit budget; larger M = more headroom for bigger h (Eq. 4)");
+    rep.header(&["b", "paper set", "log2(M)", "greedy set", "log2(M)", "paper advantage"]);
+    for bits in 4..=8u32 {
+        let paper = select_moduli(bits, 128).unwrap();
+        let greedy = select_moduli_greedy(bits, 128);
+        let lp: f64 = paper.iter().map(|&m| (m as f64).log2()).sum();
+        let lg: f64 = greedy.iter().map(|&m| (m as f64).log2()).sum();
+        rep.row(vec![
+            bits.to_string(),
+            format!("{paper:?}"),
+            format!("{lp:.2}"),
+            format!("{greedy:?}"),
+            format!("{lg:.2}"),
+            format!("{:+.2} bits (n {} vs {})", lp - lg, paper.len(), greedy.len()),
+        ]);
+    }
+    rep
+}
+
+/// A2: decoder comparison over random single-error words.
+pub struct DecoderAblation {
+    pub voting_ns_per_word: f64,
+    pub bex_ns_per_word: f64,
+    pub agreement: f64,
+    pub words: usize,
+}
+
+pub fn decoder_ablation(words: usize, error_rate: f64, seed: u64) -> DecoderAblation {
+    let all = extend_moduli(paper_table1(8).unwrap(), 2).unwrap();
+    let vote = RrnsCode::new(&all, 3).unwrap();
+    let bex = BexDecoder::new(&all, 3).unwrap();
+    let ctx = RnsContext::new(&all).unwrap();
+    let mut rng = Rng::seed_from(seed);
+    let half = (vote.legitimate_range / 2) as i64;
+    let cases: Vec<Vec<u64>> = (0..words)
+        .map(|_| {
+            let v = rng.gen_range_i64(-(half - 1), half);
+            let mut res = ctx.forward(v);
+            if rng.bernoulli(error_rate) {
+                let i = rng.gen_range(all.len() as u64) as usize;
+                res[i] = (res[i] + 1 + rng.gen_range(all[i] - 1)) % all[i];
+            }
+            res
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let vote_out: Vec<Option<i128>> = cases
+        .iter()
+        .map(|r| match vote.decode(r) {
+            Decode::Ok { value, .. } => Some(value),
+            Decode::Detected => None,
+        })
+        .collect();
+    let vote_ns = t0.elapsed().as_nanos() as f64 / words as f64;
+
+    let t0 = Instant::now();
+    let bex_out: Vec<Option<i128>> = cases
+        .iter()
+        .map(|r| match bex.decode(r) {
+            BexOutcome::Clean { value } | BexOutcome::Corrected { value, .. } => Some(value),
+            BexOutcome::Detected => None,
+        })
+        .collect();
+    let bex_ns = t0.elapsed().as_nanos() as f64 / words as f64;
+
+    let agree = vote_out.iter().zip(&bex_out).filter(|(a, b)| a == b).count() as f64
+        / words as f64;
+    DecoderAblation {
+        voting_ns_per_word: vote_ns,
+        bex_ns_per_word: bex_ns,
+        agreement: agree,
+        words,
+    }
+}
+
+/// A3: modulo-hardware noise → effective p → required protection.
+pub fn modulo_hw_report(trials: u32, seed: u64) -> Report {
+    let mut rep = Report::new("Ablation A3 — analog modulo realization vs residue error rate");
+    rep.note("effective p measured over dot-product-scale inputs; p_err from RRNS(5,3), R=2");
+    rep.header(&["stage", "noise", "effective p", "p_err RRNS(5,3) R=2", "E/op"]);
+    let all = extend_moduli(paper_table1(8).unwrap(), 2).unwrap();
+    let code = RrnsCode::new(&all, 3).unwrap();
+    let mut add = |stage: &dyn AnalogModulo, noise_desc: String| {
+        let p = measure_error_rate(stage, 255, trials, seed);
+        let cp = estimate_case_probs(&code, p, trials.min(20_000), seed ^ 1);
+        rep.row(vec![
+            stage.name().to_string(),
+            noise_desc,
+            sci(p),
+            sci(cp.p_err(2)),
+            crate::util::format_si(stage.energy_per_op(), "J"),
+        ]);
+    };
+    for jitter in [0.0, 0.25, 1.0] {
+        add(&RingOscillatorModulo::new(255, jitter), format!("jitter {jitter} stages"));
+    }
+    for phase in [0.0, 0.005, 0.02] {
+        add(&OpticalPhaseModulo::new(255, phase), format!("phase σ {phase} rad"));
+    }
+    rep
+}
+
+/// A4: routing policy under a noisy (heavy-tailed) RRNS backend.
+pub struct RoutingAblation {
+    pub rr_throughput: f64,
+    pub lo_throughput: f64,
+}
+
+pub fn routing_ablation(artifacts_dir: &str, requests: usize) -> Result<RoutingAblation, String> {
+    let run = |routing: RoutingKind| -> Result<f64, String> {
+        let mut cfg = CoordinatorConfig::new(
+            BackendKind::Rns {
+                bits: 8,
+                redundant: 2,
+                attempts: 3,
+                noise: NoiseModel::ResidueFlip { p: 0.02 },
+            },
+            artifacts_dir,
+        );
+        cfg.workers = 3;
+        cfg.routing = routing;
+        cfg.batcher = BatcherConfig::default();
+        let coord = Coordinator::start(cfg);
+        let t0 = Instant::now();
+        for _ in 0..requests {
+            coord.submit("mlp", Batch::Images(Nhwc::zeros(1, 28, 28, 1)));
+        }
+        let got = coord.collect(requests);
+        let dt = t0.elapsed().as_secs_f64();
+        coord.shutdown();
+        if got.len() != requests {
+            return Err("lost responses".into());
+        }
+        Ok(requests as f64 / dt)
+    };
+    Ok(RoutingAblation {
+        rr_throughput: run(RoutingKind::RoundRobin)?,
+        lo_throughput: run(RoutingKind::LeastOutstanding)?,
+    })
+}
+
+pub fn run(artifacts_dir: &str) -> Result<Report, String> {
+    // composite report: render A1 + A2 + A3 (+A4 when artifacts exist)
+    let mut rep = Report::new("Ablations — design-choice studies (A1..A4)");
+    rep.header(&["section", "result"]);
+    let a1 = moduli_selection_report();
+    rep.row(vec!["A1 moduli".into(), "see ablation_a1.txt".into()]);
+    a1.save("results", "ablation_a1").ok();
+
+    let d = decoder_ablation(20_000, 0.3, 3);
+    rep.row(vec![
+        "A2 decoder".into(),
+        format!(
+            "voting {:.0} ns/word, base-extension {:.0} ns/word ({:.1}x), agreement {:.2}%",
+            d.voting_ns_per_word,
+            d.bex_ns_per_word,
+            d.voting_ns_per_word / d.bex_ns_per_word,
+            d.agreement * 100.0
+        ),
+    ]);
+
+    let a3 = modulo_hw_report(20_000, 11);
+    rep.row(vec!["A3 modulo hw".into(), "see ablation_a3.txt".into()]);
+    a3.save("results", "ablation_a3").ok();
+
+    if std::path::Path::new(&format!("{artifacts_dir}/models/mlp.rt")).exists() {
+        let r = routing_ablation(artifacts_dir, 48)?;
+        rep.row(vec![
+            "A4 routing".into(),
+            format!(
+                "round-robin {:.1} req/s vs least-outstanding {:.1} req/s",
+                r.rr_throughput, r.lo_throughput
+            ),
+        ]);
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_selection_never_worse_than_greedy() {
+        for bits in 4..=8u32 {
+            let paper = select_moduli(bits, 128).unwrap();
+            let greedy = select_moduli_greedy(bits, 128);
+            let lp: f64 = paper.iter().map(|&m| (m as f64).log2()).sum();
+            let lg: f64 = greedy.iter().map(|&m| (m as f64).log2()).sum();
+            assert!(
+                paper.len() < greedy.len() || lp >= lg - 1e-9,
+                "b={bits}: paper {paper:?} vs greedy {greedy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn decoders_agree_and_both_are_fast() {
+        // NOTE on the footnote-5 claim: asymptotically base extension does
+        // r*k^2 small-word ops vs C(n,k) CRTs for voting, but at n=5 the
+        // voting decoder usually short-circuits after ONE in-range CRT on
+        // clean words, so there is no guaranteed winner at this size.  We
+        // assert agreement plus sane absolute cost and report the measured
+        // ratio in the ablation table.
+        let d = decoder_ablation(4_000, 0.3, 1);
+        assert!(d.agreement > 0.999, "agreement {}", d.agreement);
+        assert!(d.bex_ns_per_word < 5_000.0, "bex {:.0}ns", d.bex_ns_per_word);
+        assert!(d.voting_ns_per_word < 5_000.0, "voting {:.0}ns", d.voting_ns_per_word);
+    }
+
+    #[test]
+    fn greedy_is_valid_if_longer() {
+        for bits in 4..=8u32 {
+            let greedy = select_moduli_greedy(bits, 128);
+            let prod: u128 = greedy.iter().map(|&m| m as u128).product();
+            assert!(prod >= (1u128 << required_output_bits(bits, bits, 128)));
+        }
+    }
+}

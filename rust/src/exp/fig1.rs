@@ -1,0 +1,155 @@
+//! Fig. 1 regenerator: accuracy of (a) the two-layer CNN on the digit task
+//! and (b) the deep residual network on the harder image task, evaluated on
+//! a regular fixed-point analog core with b_in = b_w = b_ADC = b, sweeping
+//! the precision b and the analog array height h.
+//!
+//! The paper's observation to reproduce: accuracy falls as h grows (larger
+//! b_out, more dropped LSBs), it falls earlier for the deeper/harder
+//! network, and raising b delays the collapse.
+
+use crate::analog::{FixedPointCore, Fp32Backend, NoiseModel};
+use crate::exp::report::{pct, Report};
+use crate::nn::dataset::{dataset_for_model, load_eval_set};
+use crate::nn::models::{accuracy, load_model};
+
+pub struct Fig1Config {
+    pub artifacts_dir: String,
+    pub models: Vec<String>,
+    pub bits: Vec<u32>,
+    pub hs: Vec<usize>,
+    pub samples: usize,
+}
+
+impl Fig1Config {
+    pub fn new(artifacts_dir: &str) -> Self {
+        Fig1Config {
+            artifacts_dir: artifacts_dir.to_string(),
+            models: vec!["cnn".into(), "resnet".into()],
+            bits: vec![4, 6, 8],
+            hs: vec![16, 64, 128, 256, 512],
+            samples: 256,
+        }
+    }
+}
+
+pub struct Fig1Cell {
+    pub model: String,
+    pub bits: u32,
+    pub h: usize,
+    pub accuracy: f64,
+    pub fp32_accuracy: f64,
+}
+
+pub fn compute(cfg: &Fig1Config) -> Result<Vec<Fig1Cell>, String> {
+    let mut out = Vec::new();
+    for model_name in &cfg.models {
+        let model = load_model(&cfg.artifacts_dir, model_name)?;
+        let eval = load_eval_set(&cfg.artifacts_dir, dataset_for_model(model_name))?
+            .take(cfg.samples);
+        let fp32_acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut Fp32Backend);
+        for &bits in &cfg.bits {
+            for &h in &cfg.hs {
+                let mut core = FixedPointCore::new(bits, h, NoiseModel::None, 0);
+                let acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut core);
+                out.push(Fig1Cell {
+                    model: model_name.clone(),
+                    bits,
+                    h,
+                    accuracy: acc,
+                    fp32_accuracy: fp32_acc,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+pub fn run(cfg: &Fig1Config) -> Result<Report, String> {
+    let cells = compute(cfg)?;
+    let mut rep = Report::new(&format!(
+        "Fig. 1 — fixed-point core accuracy vs precision b and array height h ({} samples)",
+        cfg.samples
+    ));
+    rep.note("easy/shallow task (cnn) tolerates low precision at small h; deeper net (resnet) collapses earlier");
+    let mut header: Vec<String> = vec!["model".into(), "b".into(), "fp32".into()];
+    header.extend(cfg.hs.iter().map(|h| format!("h={h}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    rep.header(&header_refs);
+    for model in &cfg.models {
+        for &bits in &cfg.bits {
+            let mut row = vec![model.clone(), bits.to_string()];
+            let fp32 = cells
+                .iter()
+                .find(|c| &c.model == model)
+                .map(|c| c.fp32_accuracy)
+                .unwrap_or(0.0);
+            row.push(pct(fp32));
+            for &h in &cfg.hs {
+                let cell = cells
+                    .iter()
+                    .find(|c| &c.model == model && c.bits == bits && c.h == h)
+                    .expect("cell");
+                row.push(pct(cell.accuracy));
+            }
+            rep.row(row);
+        }
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&format!("{}/models/cnn.rt", artifacts_dir())).exists()
+    }
+
+    #[test]
+    fn accuracy_degrades_with_h_at_low_bits() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = Fig1Config {
+            models: vec!["cnn".into()],
+            bits: vec![4],
+            hs: vec![16, 512],
+            samples: 96,
+            ..Fig1Config::new(&artifacts_dir())
+        };
+        let cells = compute(&cfg).unwrap();
+        let small_h = cells.iter().find(|c| c.h == 16).unwrap();
+        let large_h = cells.iter().find(|c| c.h == 512).unwrap();
+        assert!(
+            small_h.accuracy >= large_h.accuracy,
+            "h=16 acc {} should be >= h=512 acc {}",
+            small_h.accuracy,
+            large_h.accuracy
+        );
+    }
+
+    #[test]
+    fn high_bits_recover_accuracy() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = Fig1Config {
+            models: vec!["cnn".into()],
+            bits: vec![4, 8],
+            hs: vec![128],
+            samples: 96,
+            ..Fig1Config::new(&artifacts_dir())
+        };
+        let cells = compute(&cfg).unwrap();
+        let b4 = cells.iter().find(|c| c.bits == 4).unwrap();
+        let b8 = cells.iter().find(|c| c.bits == 8).unwrap();
+        assert!(b8.accuracy >= b4.accuracy);
+        // 8-bit @ h=128 keeps meaningful signal (worst-case full-scale ADC
+        // model — see DESIGN.md; the paper's Table I "lost bits" column)
+        assert!(b8.accuracy > 0.5 * b8.fp32_accuracy);
+    }
+}

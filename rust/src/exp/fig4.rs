@@ -1,0 +1,140 @@
+//! Fig. 4 regenerator: accuracy of the regular fixed-point core vs the
+//! RNS-based core across the benchmark model zoo (the MLPerf stand-ins),
+//! normalized to FP32, for b = 4..8.
+//!
+//! Headline to reproduce: the RNS core reaches >= 99% of FP32 accuracy for
+//! every network at b = 6, while the fixed-point core collapses.
+
+use crate::analog::{FixedPointCore, Fp32Backend, NoiseModel, RnsCore, RnsCoreConfig};
+use crate::exp::report::{pct, Report};
+use crate::nn::dataset::{dataset_for_model, load_eval_set};
+use crate::nn::models::{accuracy, load_model, ZOO};
+
+pub struct Fig4Config {
+    pub artifacts_dir: String,
+    pub models: Vec<String>,
+    pub bits: Vec<u32>,
+    pub h: usize,
+    pub samples: usize,
+}
+
+impl Fig4Config {
+    pub fn new(artifacts_dir: &str) -> Self {
+        Fig4Config {
+            artifacts_dir: artifacts_dir.to_string(),
+            models: ZOO.iter().map(|s| s.to_string()).collect(),
+            bits: vec![4, 5, 6, 7, 8],
+            h: 128,
+            samples: 256,
+        }
+    }
+}
+
+pub struct Fig4Cell {
+    pub model: String,
+    pub bits: u32,
+    pub fxp_norm: f64,
+    pub rns_norm: f64,
+    pub fp32_accuracy: f64,
+}
+
+pub fn compute(cfg: &Fig4Config) -> Result<Vec<Fig4Cell>, String> {
+    let mut out = Vec::new();
+    for model_name in &cfg.models {
+        let model = load_model(&cfg.artifacts_dir, model_name)?;
+        let eval = load_eval_set(&cfg.artifacts_dir, dataset_for_model(model_name))?
+            .take(cfg.samples);
+        let fp32_acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut Fp32Backend);
+        for &bits in &cfg.bits {
+            let mut fxp = FixedPointCore::new(bits, cfg.h, NoiseModel::None, 0);
+            let mut rns = RnsCore::new(RnsCoreConfig::for_bits(bits, cfg.h))?;
+            let fxp_acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut fxp);
+            let rns_acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut rns);
+            out.push(Fig4Cell {
+                model: model_name.clone(),
+                bits,
+                fxp_norm: fxp_acc / fp32_acc.max(1e-9),
+                rns_norm: rns_acc / fp32_acc.max(1e-9),
+                fp32_accuracy: fp32_acc,
+            });
+        }
+    }
+    Ok(out)
+}
+
+pub fn run(cfg: &Fig4Config) -> Result<Report, String> {
+    let cells = compute(cfg)?;
+    let mut rep = Report::new(&format!(
+        "Fig. 4 — accuracy normalized to FP32, fixed-point vs RNS core (h = {}, {} samples)",
+        cfg.h, cfg.samples
+    ));
+    rep.note("MLPerf suite stand-ins per DESIGN.md §5; >= 99% at b=6 with RNS is the paper's headline");
+    let mut header = vec!["model".to_string(), "fp32 acc".to_string()];
+    for &b in &cfg.bits {
+        header.push(format!("fxp b={b}"));
+        header.push(format!("rns b={b}"));
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    rep.header(&header_refs);
+    for model in &cfg.models {
+        let mut row = vec![model.clone()];
+        let fp32 = cells.iter().find(|c| &c.model == model).map(|c| c.fp32_accuracy).unwrap_or(0.0);
+        row.push(pct(fp32));
+        for &bits in &cfg.bits {
+            let c = cells.iter().find(|c| &c.model == model && c.bits == bits).expect("cell");
+            row.push(pct(c.fxp_norm));
+            row.push(pct(c.rns_norm));
+        }
+        rep.row(row);
+    }
+    Ok(rep)
+}
+
+/// The paper's headline claim, extracted from the Fig. 4 data at b = 6.
+pub fn headline(cfg: &Fig4Config) -> Result<Report, String> {
+    let mut cfg6 = Fig4Config { bits: vec![6], ..Fig4Config::new(&cfg.artifacts_dir) };
+    cfg6.models = cfg.models.clone();
+    cfg6.samples = cfg.samples;
+    cfg6.h = cfg.h;
+    let cells = compute(&cfg6)?;
+    let mut rep = Report::new("Headline — >= 99% FP32 accuracy with 6-bit RNS (paper abstract)");
+    rep.header(&["model", "rns b=6 (norm.)", ">= 99%?", "fxp b=6 (norm.)"]);
+    for c in &cells {
+        rep.row(vec![
+            c.model.clone(),
+            pct(c.rns_norm),
+            if c.rns_norm >= 0.99 { "yes".into() } else { "NO".into() },
+            pct(c.fxp_norm),
+        ]);
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&format!("{}/models/mlp.rt", artifacts_dir())).exists()
+    }
+
+    #[test]
+    fn rns_b6_hits_headline_on_mlp() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = Fig4Config {
+            models: vec!["mlp".into()],
+            bits: vec![6],
+            samples: 128,
+            ..Fig4Config::new(&artifacts_dir())
+        };
+        let cells = compute(&cfg).unwrap();
+        assert!(cells[0].rns_norm >= 0.99, "rns b=6 norm accuracy {}", cells[0].rns_norm);
+        assert!(cells[0].rns_norm >= cells[0].fxp_norm);
+    }
+}

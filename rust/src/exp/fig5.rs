@@ -1,0 +1,133 @@
+//! Fig. 5 regenerator: output error probability p_err as a function of the
+//! single-residue error probability p, for varying redundancy (n-k) and
+//! number of attempts R.
+//!
+//! Case probabilities come from the Monte-Carlo estimator over the real
+//! voting decoder (the paper's own equations are not reprinted there);
+//! p_err(R) uses the corrected Eq. (5) geometric series, and the R→∞ limit
+//! p_u/(p_u+p_c) matches the limit stated in the paper.
+
+use crate::exp::report::{sci, Report};
+use crate::rns::fault_model::{estimate_case_probs, p_correctable_analytic};
+use crate::rns::moduli::{extend_moduli, paper_table1};
+use crate::rns::rrns::RrnsCode;
+
+pub struct Fig5Config {
+    pub bits: u32,
+    pub redundancies: Vec<usize>,
+    pub attempts: Vec<u32>,
+    pub ps: Vec<f64>,
+    pub trials: u32,
+    pub seed: u64,
+}
+
+impl Default for Fig5Config {
+    fn default() -> Self {
+        Fig5Config {
+            bits: 8,
+            redundancies: vec![1, 2, 3],
+            attempts: vec![1, 2, 3],
+            ps: vec![1e-4, 1e-3, 1e-2, 3e-2, 1e-1, 3e-1],
+            trials: 40_000,
+            seed: 17,
+        }
+    }
+}
+
+pub struct Fig5Row {
+    pub redundancy: usize,
+    pub p: f64,
+    pub p_c: f64,
+    pub p_c_analytic: f64,
+    pub p_err_by_attempts: Vec<(u32, f64)>,
+    pub p_err_limit: f64,
+}
+
+pub fn compute(cfg: &Fig5Config) -> Vec<Fig5Row> {
+    let base = paper_table1(cfg.bits).expect("table1 bits").to_vec();
+    let mut rows = Vec::new();
+    for &red in &cfg.redundancies {
+        let all = extend_moduli(&base, red).expect("extend");
+        let code = RrnsCode::new(&all, base.len()).expect("code");
+        for &p in &cfg.ps {
+            let cp = estimate_case_probs(&code, p, cfg.trials, cfg.seed);
+            rows.push(Fig5Row {
+                redundancy: red,
+                p,
+                p_c: cp.p_c,
+                p_c_analytic: p_correctable_analytic(code.n(), code.k, p),
+                p_err_by_attempts: cfg.attempts.iter().map(|&r| (r, cp.p_err(r))).collect(),
+                p_err_limit: cp.p_err_limit(),
+            });
+        }
+    }
+    rows
+}
+
+pub fn run(cfg: &Fig5Config) -> Report {
+    let rows = compute(cfg);
+    let mut rep = Report::new(&format!(
+        "Fig. 5 — output error probability p_err vs residue error probability p (b = {}, {} MC trials)",
+        cfg.bits, cfg.trials
+    ));
+    rep.note("p_err(R) = 1 - p_c * sum_{j=0..R-1} p_d^j (corrected Eq. 5); limit = p_u/(p_u+p_c)");
+    let mut header = vec!["n-k".to_string(), "p".to_string(), "p_c (MC)".to_string(), "p_c (>=, analytic)".to_string()];
+    header.extend(cfg.attempts.iter().map(|r| format!("p_err R={r}")));
+    header.push("p_err R→∞".to_string());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    rep.header(&header_refs);
+    for row in &rows {
+        let mut cells = vec![
+            row.redundancy.to_string(),
+            sci(row.p),
+            format!("{:.4}", row.p_c),
+            format!("{:.4}", row.p_c_analytic),
+        ];
+        cells.extend(row.p_err_by_attempts.iter().map(|(_, pe)| sci(*pe)));
+        cells.push(sci(row.p_err_limit));
+        rep.row(cells);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> Fig5Config {
+        Fig5Config {
+            redundancies: vec![1, 3],
+            attempts: vec![1, 3],
+            ps: vec![1e-2, 1e-1],
+            trials: 6_000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn perr_monotone_in_attempts_and_redundancy() {
+        let rows = compute(&quick_cfg());
+        for r in &rows {
+            let pe1 = r.p_err_by_attempts[0].1;
+            let pe3 = r.p_err_by_attempts[1].1;
+            assert!(pe3 <= pe1 + 1e-9, "n-k={} p={}", r.redundancy, r.p);
+        }
+        // more redundancy helps at the same p and R
+        let r1 = rows.iter().find(|r| r.redundancy == 1 && r.p == 1e-2).unwrap();
+        let r3 = rows.iter().find(|r| r.redundancy == 3 && r.p == 1e-2).unwrap();
+        assert!(r3.p_err_by_attempts[1].1 <= r1.p_err_by_attempts[1].1);
+    }
+
+    #[test]
+    fn perr_tends_to_one_at_high_p() {
+        let cfg = Fig5Config {
+            redundancies: vec![2],
+            attempts: vec![1],
+            ps: vec![0.9],
+            trials: 4_000,
+            ..Default::default()
+        };
+        let rows = compute(&cfg);
+        assert!(rows[0].p_err_by_attempts[0].1 > 0.9);
+    }
+}

@@ -1,0 +1,15 @@
+//! Experiment harness: one regenerator per table/figure in the paper's
+//! evaluation (see DESIGN.md §6 for the index).  Each returns a `Report`
+//! that the CLI prints and saves under `results/`.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod report;
+pub mod table1;
+
+pub use report::Report;

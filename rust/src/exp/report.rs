@@ -1,0 +1,145 @@
+//! Plain-text table rendering for the experiment regenerators, plus the
+//! `results/` writer that EXPERIMENTS.md references.
+
+/// One experiment report: a titled, aligned text table with notes.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub title: String,
+    pub notes: Vec<String>,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) -> &mut Self {
+        self.notes.push(note.into());
+        self
+    }
+
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| display_width(h)).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(display_width(cell));
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{}{}", c, " ".repeat(widths[i] - display_width(c))))
+                .collect::<Vec<_>>()
+                .join("  ")
+                .trim_end()
+                .to_string()
+        };
+        let mut out = vec![format!("== {} ==", self.title)];
+        out.extend(self.notes.iter().map(|n| format!("   {n}")));
+        out.push(String::new());
+        out.push(line(&self.header));
+        out.push("-".repeat(widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1))));
+        out.extend(self.rows.iter().map(|r| line(r)));
+        out.join("\n")
+    }
+
+    /// Write the rendered report under `results/<id>.txt`.
+    pub fn save(&self, results_dir: &str, id: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(results_dir)?;
+        let path = format!("{results_dir}/{id}.txt");
+        std::fs::write(&path, self.render() + "\n")?;
+        Ok(path)
+    }
+}
+
+/// Unicode-naive display width good enough for ASCII + the sparkline
+/// glyphs we emit (each counted as one column).
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+/// Format helpers used across the figures.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut r = Report::new("demo");
+        r.note("a note");
+        r.header(&["col", "value"]);
+        r.row(vec!["x".into(), "1".into()]);
+        r.row(vec!["longer".into(), "2".into()]);
+        let text = r.render();
+        assert!(text.contains("== demo =="));
+        assert!(text.contains("a note"));
+        let lines: Vec<&str> = text.lines().collect();
+        // header and rows align on the second column
+        let hpos = lines[3].find("value").unwrap();
+        let xpos = lines[5].find('1').unwrap();
+        assert_eq!(hpos, xpos);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut r = Report::new("x");
+        r.header(&["a", "b"]);
+        r.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let dir = std::env::temp_dir().join("rns_results_test");
+        let dir = dir.to_str().unwrap();
+        let mut r = Report::new("t");
+        r.header(&["a"]);
+        r.row(vec!["1".into()]);
+        let path = r.save(dir, "unit").unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("== t =="));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(pct(0.987), "98.7%");
+        assert_eq!(sci(0.0), "0");
+        assert!(sci(3.4e-8).contains("e-8"));
+    }
+}

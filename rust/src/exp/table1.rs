@@ -1,0 +1,85 @@
+//! Table I regenerator: RNS-based vs regular fixed-point analog core
+//! configurations for b = 4..8, h = 128.
+
+use crate::exp::report::Report;
+use crate::rns::moduli::{required_output_bits, select_moduli};
+
+pub struct Table1Row {
+    pub bits: u32,
+    pub moduli: Vec<u64>,
+    pub big_m: u128,
+    pub b_out: u32,
+    pub lost_bits: u32,
+}
+
+pub fn compute(h: usize) -> Vec<Table1Row> {
+    (4..=8)
+        .map(|bits| {
+            let moduli = select_moduli(bits, h).expect("selection");
+            let big_m: u128 = moduli.iter().map(|&m| m as u128).product();
+            let b_out = required_output_bits(bits, bits, h);
+            Table1Row { bits, moduli, big_m, b_out, lost_bits: b_out - bits }
+        })
+        .collect()
+}
+
+pub fn run(h: usize) -> Report {
+    let mut rep = Report::new(&format!("Table I — RNS vs fixed-point core configurations (h = {h})"));
+    rep.note("RNS: b_DAC = b_ADC = ceil(log2 m_i) = b; fixed-point: b_ADC = b, b_out from Eq. (4)");
+    rep.header(&[
+        "b_in,b_w",
+        "RNS moduli set",
+        "RNS range M",
+        "log2(M)",
+        "RNS b_ADC",
+        "FXP b_out",
+        "FXP b_ADC",
+        "FXP lost bits",
+    ]);
+    for r in compute(h) {
+        rep.row(vec![
+            r.bits.to_string(),
+            format!("{{{}}}", r.moduli.iter().map(|m| m.to_string()).collect::<Vec<_>>().join(", ")),
+            r.big_m.to_string(),
+            format!("{:.1}", (r.big_m as f64).log2()),
+            r.bits.to_string(),
+            r.b_out.to_string(),
+            r.bits.to_string(),
+            r.lost_bits.to_string(),
+        ]);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::paper_table1;
+
+    #[test]
+    fn reproduces_paper_rows() {
+        let rows = compute(128);
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert_eq!(r.moduli.as_slice(), paper_table1(r.bits).unwrap());
+        }
+        // lost-bit column from the paper: 10, 11, 12, 13, 14
+        let lost: Vec<u32> = rows.iter().map(|r| r.lost_bits).collect();
+        assert_eq!(lost, vec![10, 11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn rns_range_covers_bout() {
+        for r in compute(128) {
+            assert!(r.big_m >= (1u128 << r.b_out), "b={}", r.bits);
+        }
+    }
+
+    #[test]
+    fn renders() {
+        let rep = run(128);
+        let text = rep.render();
+        assert!(text.contains("{63, 62, 61, 59}"));
+        assert!(text.contains("Table I"));
+    }
+}

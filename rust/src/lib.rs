@@ -1,0 +1,31 @@
+//! # rns-analog
+//!
+//! A production-quality reproduction of *"Leveraging Residue Number System
+//! for Designing High-Precision Analog Deep Neural Network Accelerators"*
+//! (Demirkiran et al., 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1** — the RNS modular-matmul hot path as a Pallas kernel
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text;
+//! * **L2** — the Fig. 2 dataflow (quantize → residues → modular MVM →
+//!   CRT → rescale) as a jitted JAX graph (`python/compile/model.py`);
+//! * **L3** — this crate: the analog-accelerator simulator (fixed-point and
+//!   RNS cores, noise + energy models), the RRNS fault-tolerant decoder,
+//!   the serving coordinator, and the experiment harness that regenerates
+//!   every table and figure in the paper.
+//!
+//! Python runs only at build time (`make artifacts`); the rust binary loads
+//! the compiled HLO through PJRT and is self-contained at serving time.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod analog;
+pub mod bench;
+pub mod coordinator;
+pub mod exp;
+pub mod nn;
+pub mod quant;
+pub mod rns;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,160 @@
+//! Frozen evaluation datasets (exported by python/compile/train.py) and
+//! synthetic workload generators for the benches.
+
+use crate::nn::models::Batch;
+use crate::nn::store::{self, StoredTensor};
+use crate::tensor::{MatF, Nhwc};
+use crate::util::rng::Rng;
+
+/// A labelled evaluation set.
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub input: Batch,
+    pub labels: Vec<i64>,
+}
+
+impl EvalSet {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Take the first `n` examples (accuracy sweeps subsample for speed).
+    pub fn take(&self, n: usize) -> EvalSet {
+        let n = n.min(self.len());
+        let input = match &self.input {
+            Batch::Images(t) => {
+                let stride = t.h * t.w * t.c;
+                Batch::Images(Nhwc::from_vec(n, t.h, t.w, t.c, t.data[..n * stride].to_vec()))
+            }
+            Batch::Tokens { tokens, seq, .. } => {
+                Batch::Tokens { tokens: tokens[..n * seq].to_vec(), batch: n, seq: *seq }
+            }
+        };
+        EvalSet { input, labels: self.labels[..n].to_vec() }
+    }
+}
+
+/// Dataset backing each zoo model (matches python/compile/train.py TASKS).
+pub fn dataset_for_model(model: &str) -> &'static str {
+    match model {
+        "mlp" | "cnn" => "digits",
+        "resnet" => "shapes",
+        "bert" => "tokens",
+        other => panic!("unknown model {other}"),
+    }
+}
+
+/// Load `artifacts/data/<name>_eval.rt`.
+pub fn load_eval_set(artifacts_dir: &str, name: &str) -> Result<EvalSet, String> {
+    let path = format!("{artifacts_dir}/data/{name}_eval.rt");
+    let s = store::load(&path).map_err(|e| e.to_string())?;
+    let y = s
+        .get("y")
+        .and_then(|t| t.as_i64())
+        .ok_or_else(|| format!("{path}: missing i64 labels `y`"))?
+        .to_vec();
+    let x = s.get("x").ok_or_else(|| format!("{path}: missing `x`"))?;
+    let input = match x {
+        StoredTensor::F32 { dims, data } => {
+            if dims.len() != 4 {
+                return Err(format!("{path}: image tensor must be NHWC, got {dims:?}"));
+            }
+            Batch::Images(Nhwc::from_vec(dims[0], dims[1], dims[2], dims[3], data.clone()))
+        }
+        StoredTensor::I64 { dims, data } => {
+            if dims.len() != 2 {
+                return Err(format!("{path}: token tensor must be (B, S), got {dims:?}"));
+            }
+            Batch::Tokens { tokens: data.clone(), batch: dims[0], seq: dims[1] }
+        }
+        _ => return Err(format!("{path}: unsupported input dtype")),
+    };
+    if input.len() != y.len() {
+        return Err(format!("{path}: {} inputs vs {} labels", input.len(), y.len()));
+    }
+    Ok(EvalSet { input, labels: y })
+}
+
+/// Random dense GEMM operands (the Fig. 3 random-vector workload and the
+/// bench harness's synthetic load).
+pub fn random_gemm_pair(rng: &mut Rng, b: usize, k: usize, n: usize, scale: f32) -> (MatF, MatF) {
+    let x = MatF::from_vec(b, k, (0..b * k).map(|_| rng.uniform_f32(-scale, scale)).collect());
+    let w = MatF::from_vec(k, n, (0..k * n).map(|_| rng.uniform_f32(-scale, scale)).collect());
+    (x, w)
+}
+
+/// Gaussian-ish vectors (Irwin–Hall sum of uniforms) used by Fig. 3 to
+/// match the paper's "randomly generated vector pairs".
+pub fn random_vector_pair(rng: &mut Rng, h: usize) -> (Vec<f32>, Vec<f32>) {
+    let gauss = |rng: &mut Rng| -> f32 {
+        ((0..4).map(|_| rng.uniform() as f32).sum::<f32>() - 2.0) * 0.866
+    };
+    ((0..h).map(|_| gauss(rng)).collect(), (0..h).map(|_| gauss(rng)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn take_subsamples() {
+        let imgs = Nhwc::from_vec(4, 2, 2, 1, (0..16).map(|v| v as f32).collect());
+        let set = EvalSet { input: Batch::Images(imgs), labels: vec![0, 1, 2, 3] };
+        let sub = set.take(2);
+        assert_eq!(sub.len(), 2);
+        match &sub.input {
+            Batch::Images(t) => {
+                assert_eq!(t.n, 2);
+                assert_eq!(t.data.len(), 8);
+            }
+            _ => panic!(),
+        }
+        // take more than available is clamped
+        assert_eq!(set.take(100).len(), 4);
+    }
+
+    #[test]
+    fn model_dataset_mapping() {
+        assert_eq!(dataset_for_model("mlp"), "digits");
+        assert_eq!(dataset_for_model("bert"), "tokens");
+    }
+
+    #[test]
+    fn random_pair_shapes() {
+        let mut rng = Rng::seed_from(0);
+        let (x, w) = random_gemm_pair(&mut rng, 2, 8, 3, 1.0);
+        assert_eq!((x.rows, x.cols, w.rows, w.cols), (2, 8, 8, 3));
+        let (a, b) = random_vector_pair(&mut rng, 128);
+        assert_eq!(a.len(), 128);
+        assert_eq!(b.len(), 128);
+        // roughly zero-mean
+        let mean: f32 = a.iter().sum::<f32>() / 128.0;
+        assert!(mean.abs() < 0.3);
+    }
+
+    #[test]
+    fn loads_real_eval_sets_if_present() {
+        let dir = artifacts_dir();
+        if std::path::Path::new(&format!("{dir}/data/digits_eval.rt")).exists() {
+            let set = load_eval_set(&dir, "digits").unwrap();
+            assert_eq!(set.len(), 512);
+            match &set.input {
+                Batch::Images(t) => assert_eq!((t.h, t.w, t.c), (28, 28, 1)),
+                _ => panic!("digits should be images"),
+            }
+            let tok = load_eval_set(&dir, "tokens").unwrap();
+            match &tok.input {
+                Batch::Tokens { seq, .. } => assert_eq!(*seq, 32),
+                _ => panic!("tokens should be tokens"),
+            }
+        }
+    }
+}

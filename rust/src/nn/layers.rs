@@ -1,0 +1,252 @@
+//! Inference layers, all GEMMs routed through a `GemmBackend` so the same
+//! model runs on FP32, fixed-point-analog, or RNS-analog hardware.
+//!
+//! Numerics mirror python/compile/model.py (NHWC conv via im2col, tanh-GELU,
+//! eps-1e-5 LayerNorm) so rust FP32 inference reproduces the jax training
+//! accuracy.
+
+use crate::analog::GemmBackend;
+use crate::tensor::gemm::gemm_f32;
+use crate::tensor::im2col::{col2im, conv_out_dim, im2col, Padding};
+use crate::tensor::{MatF, Nhwc};
+
+/// Dense: y = x @ w + b through the backend.
+pub fn dense(x: &MatF, w: &MatF, b: &[f32], backend: &mut dyn GemmBackend) -> MatF {
+    assert_eq!(w.cols, b.len());
+    let mut y = backend.gemm(x, w);
+    for r in 0..y.rows {
+        let row = y.row_mut(r);
+        for (v, &bias) in row.iter_mut().zip(b) {
+            *v += bias;
+        }
+    }
+    y
+}
+
+/// Conv2d, stride 1, NHWC/HWIO, via im2col + backend GEMM.
+pub fn conv2d(
+    input: &Nhwc,
+    w: &MatF, // (kh*kw*cin, cout) — HWIO flattened
+    b: &[f32],
+    kh: usize,
+    kw: usize,
+    pad: Padding,
+    backend: &mut dyn GemmBackend,
+) -> Nhwc {
+    let patches = im2col(input, kh, kw, 1, pad);
+    let y = dense(&patches, w, b, backend);
+    let oh = conv_out_dim(input.h, kh, 1, pad);
+    let ow = conv_out_dim(input.w, kw, 1, pad);
+    col2im(&y, input.n, oh, ow)
+}
+
+/// 2x2 max pool, stride 2, VALID.
+pub fn maxpool2(input: &Nhwc) -> Nhwc {
+    let oh = input.h / 2;
+    let ow = input.w / 2;
+    let mut out = Nhwc::zeros(input.n, oh, ow, input.c);
+    for b in 0..input.n {
+        for y in 0..oh {
+            for x in 0..ow {
+                for c in 0..input.c {
+                    let m = input
+                        .at(b, 2 * y, 2 * x, c)
+                        .max(input.at(b, 2 * y, 2 * x + 1, c))
+                        .max(input.at(b, 2 * y + 1, 2 * x, c))
+                        .max(input.at(b, 2 * y + 1, 2 * x + 1, c));
+                    out.set(b, y, x, c, m);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: NHWC -> (N, C).
+pub fn global_avg_pool(input: &Nhwc) -> MatF {
+    let mut out = MatF::zeros(input.n, input.c);
+    let denom = (input.h * input.w) as f32;
+    for b in 0..input.n {
+        for y in 0..input.h {
+            for x in 0..input.w {
+                for c in 0..input.c {
+                    out.data[b * input.c + c] += input.at(b, y, x, c);
+                }
+            }
+        }
+    }
+    for v in out.data.iter_mut() {
+        *v /= denom;
+    }
+    out
+}
+
+pub fn relu_mat(x: &mut MatF) {
+    for v in x.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+pub fn relu_nhwc(x: &mut Nhwc) {
+    for v in x.data.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// tanh-approximation GELU (matches model.py bit-for-bit closely).
+pub fn gelu(x: &mut MatF) {
+    for v in x.data.iter_mut() {
+        let x3 = *v * *v * *v;
+        *v = 0.5 * *v * (1.0 + (0.797_884_56_f32 * (*v + 0.044715 * x3)).tanh());
+    }
+}
+
+/// Row-wise softmax (numerically stable).
+pub fn softmax_rows(x: &mut MatF) {
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// LayerNorm over the last axis with learned gain/bias.
+pub fn layernorm(x: &mut MatF, g: &[f32], b: &[f32], eps: f32) {
+    assert_eq!(x.cols, g.len());
+    assert_eq!(x.cols, b.len());
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let mean = row.iter().sum::<f32>() / row.len() as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (v, (&gi, &bi)) in row.iter_mut().zip(g.iter().zip(b)) {
+            *v = (*v - mean) * inv * gi + bi;
+        }
+    }
+}
+
+/// Multi-head self-attention for one (S, D) sequence already projected to
+/// q/k/v — helper used by the TinyBert model.  Projections are done by the
+/// caller (through the backend); the score/value matmuls here use FP32
+/// (they are activation-activation products; see DESIGN.md — weight-side
+/// GEMMs dominate the analog workload).
+pub fn attention_single(q: &MatF, k: &MatF, v: &MatF, heads: usize) -> MatF {
+    let (s, d) = (q.rows, q.cols);
+    assert_eq!(d % heads, 0);
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = MatF::zeros(s, d);
+    for h in 0..heads {
+        let c0 = h * hd;
+        let c1 = c0 + hd;
+        let qh = q.slice_cols(c0, c1);
+        let kh = k.slice_cols(c0, c1);
+        let vh = v.slice_cols(c0, c1);
+        let mut scores = gemm_f32(&qh, &kh.transpose());
+        for val in scores.data.iter_mut() {
+            *val *= scale;
+        }
+        softmax_rows(&mut scores);
+        let oh = gemm_f32(&scores, &vh);
+        for r in 0..s {
+            out.row_mut(r)[c0..c1].copy_from_slice(oh.row(r));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::Fp32Backend;
+
+    #[test]
+    fn dense_adds_bias() {
+        let x = MatF::from_vec(1, 2, vec![1.0, 2.0]);
+        let w = MatF::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let y = dense(&x, &w, &[10.0, 20.0], &mut Fp32Backend);
+        assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let input = Nhwc::from_vec(1, 2, 2, 1, vec![1.0, 5.0, 3.0, 2.0]);
+        let out = maxpool2(&input);
+        assert_eq!(out.data, vec![5.0]);
+    }
+
+    #[test]
+    fn gap_average() {
+        let input = Nhwc::from_vec(1, 2, 2, 2, vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let out = global_avg_pool(&input);
+        assert_eq!(out.data, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut x = MatF::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut x);
+        for r in 0..2 {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x.at(0, 2) > x.at(0, 1));
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut x = MatF::from_vec(1, 2, vec![1000.0, 1001.0]);
+        softmax_rows(&mut x);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut x = MatF::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        layernorm(&mut x, &[1.0; 4], &[0.0; 4], 1e-5);
+        let mean: f32 = x.data.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.data.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        let mut x = MatF::from_vec(1, 3, vec![0.0, 1.0, -1.0]);
+        gelu(&mut x);
+        assert_eq!(x.data[0], 0.0);
+        assert!((x.data[1] - 0.8412).abs() < 1e-3);
+        assert!((x.data[2] + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn attention_uniform_when_scores_equal() {
+        // identical q/k rows -> uniform attention -> output = mean of v
+        let q = MatF::from_vec(2, 2, vec![1.0, 0.0, 1.0, 0.0]);
+        let k = q.clone();
+        let v = MatF::from_vec(2, 2, vec![0.0, 2.0, 4.0, 6.0]);
+        let out = attention_single(&q, &k, &v, 1);
+        for r in 0..2 {
+            assert!((out.at(r, 0) - 2.0).abs() < 1e-6);
+            assert!((out.at(r, 1) - 4.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 conv with identity weights passes channels through
+        let input = Nhwc::from_vec(1, 2, 2, 2, (0..8).map(|v| v as f32).collect());
+        let mut w = MatF::zeros(2, 2);
+        w.set(0, 0, 1.0);
+        w.set(1, 1, 1.0);
+        let out = conv2d(&input, &w, &[0.0, 0.0], 1, 1, Padding::Same, &mut Fp32Backend);
+        assert_eq!(out.data, input.data);
+    }
+}

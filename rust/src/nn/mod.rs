@@ -1,0 +1,12 @@
+//! NN substrate: RNSTORE1 weight/dataset loading, inference layers routed
+//! through pluggable `GemmBackend`s, and the evaluation model zoo
+//! (MLP / TwoLayerCnn / MiniResNet / TinyBert — the MLPerf stand-ins of
+//! DESIGN.md §5).
+
+pub mod dataset;
+pub mod layers;
+pub mod models;
+pub mod store;
+
+pub use dataset::{load_eval_set, EvalSet};
+pub use models::{accuracy, load_model, Batch, Model, ZOO};

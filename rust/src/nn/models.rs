@@ -1,0 +1,512 @@
+//! The evaluation model zoo: inference-only implementations of the models
+//! trained by python/compile/train.py, loading RNSTORE1 weights.
+//!
+//! Each model implements `Model` and routes every weight GEMM through a
+//! `GemmBackend`, so the Fig. 1/4/6 experiments evaluate the identical
+//! network on FP32 / fixed-point-analog / RNS-analog hardware by swapping
+//! the backend alone.
+
+use crate::analog::GemmBackend;
+use crate::nn::layers::{
+    attention_single, conv2d, dense, gelu, global_avg_pool, layernorm, maxpool2, relu_mat,
+    relu_nhwc,
+};
+use crate::nn::store::{f32_tensor, TensorStore};
+use crate::tensor::im2col::Padding;
+use crate::tensor::{MatF, Nhwc};
+
+/// Batched model input: images or token sequences.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    Images(Nhwc),
+    Tokens { tokens: Vec<i64>, batch: usize, seq: usize },
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        match self {
+            Batch::Images(t) => t.n,
+            Batch::Tokens { batch, .. } => *batch,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A loadable inference model.
+pub trait Model: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Logits (B, num_classes).
+    fn forward(&self, input: &Batch, backend: &mut dyn GemmBackend) -> MatF;
+    fn num_classes(&self) -> usize;
+    /// FP32 eval accuracy recorded at training time (from the store).
+    fn trained_fp32_accuracy(&self) -> f32;
+}
+
+fn get_mat(store: &TensorStore, name: &str, rows: usize, cols: usize) -> Result<MatF, String> {
+    let data = f32_tensor(store, name, Some(&[rows, cols]))?;
+    Ok(MatF::from_vec(rows, cols, data.to_vec()))
+}
+
+fn get_vec(store: &TensorStore, name: &str, len: usize) -> Result<Vec<f32>, String> {
+    Ok(f32_tensor(store, name, Some(&[len]))?.to_vec())
+}
+
+/// Conv weights stored HWIO (kh, kw, cin, cout) -> (kh*kw*cin, cout).
+fn get_conv(store: &TensorStore, name: &str, kh: usize, kw: usize, cin: usize, cout: usize) -> Result<MatF, String> {
+    let data = f32_tensor(store, name, Some(&[kh, kw, cin, cout]))?;
+    Ok(MatF::from_vec(kh * kw * cin, cout, data.to_vec()))
+}
+
+fn stored_accuracy(store: &TensorStore) -> f32 {
+    store
+        .get("__fp32_eval_acc")
+        .and_then(|t| t.as_f32())
+        .and_then(|d| d.first().copied())
+        .unwrap_or(0.0)
+}
+
+fn argmax_rows(logits: &MatF) -> Vec<usize> {
+    (0..logits.rows)
+        .map(|r| {
+            logits
+                .row(r)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// Classification accuracy of a model over a labelled batch.
+pub fn accuracy(model: &dyn Model, input: &Batch, labels: &[i64], backend: &mut dyn GemmBackend) -> f64 {
+    let logits = model.forward(input, backend);
+    let preds = argmax_rows(&logits);
+    let hits = preds.iter().zip(labels).filter(|(p, l)| **p as i64 == **l).count();
+    hits as f64 / labels.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// MLP (784 -> 256 -> 128 -> 10)
+// ---------------------------------------------------------------------------
+
+pub struct Mlp {
+    ws: Vec<MatF>,
+    bs: Vec<Vec<f32>>,
+    acc: f32,
+}
+
+pub const MLP_DIMS: [usize; 4] = [784, 256, 128, 10];
+
+impl Mlp {
+    pub fn from_store(store: &TensorStore) -> Result<Self, String> {
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for i in 0..MLP_DIMS.len() - 1 {
+            ws.push(get_mat(store, &format!("fc{i}.w"), MLP_DIMS[i], MLP_DIMS[i + 1])?);
+            bs.push(get_vec(store, &format!("fc{i}.b"), MLP_DIMS[i + 1])?);
+        }
+        Ok(Mlp { ws, bs, acc: stored_accuracy(store) })
+    }
+}
+
+impl Model for Mlp {
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn forward(&self, input: &Batch, backend: &mut dyn GemmBackend) -> MatF {
+        let imgs = match input {
+            Batch::Images(t) => t,
+            _ => panic!("mlp expects image input"),
+        };
+        let mut h = imgs.flatten();
+        for (i, (w, b)) in self.ws.iter().zip(&self.bs).enumerate() {
+            h = dense(&h, w, b, backend);
+            if i + 1 < self.ws.len() {
+                relu_mat(&mut h);
+            }
+        }
+        h
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn trained_fp32_accuracy(&self) -> f32 {
+        self.acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-layer CNN (paper Fig. 1's MNIST model)
+// ---------------------------------------------------------------------------
+
+pub struct TwoLayerCnn {
+    conv1_w: MatF,
+    conv1_b: Vec<f32>,
+    conv2_w: MatF,
+    conv2_b: Vec<f32>,
+    fc_w: MatF,
+    fc_b: Vec<f32>,
+    acc: f32,
+}
+
+impl TwoLayerCnn {
+    pub fn from_store(store: &TensorStore) -> Result<Self, String> {
+        Ok(TwoLayerCnn {
+            conv1_w: get_conv(store, "conv1.w", 3, 3, 1, 8)?,
+            conv1_b: get_vec(store, "conv1.b", 8)?,
+            conv2_w: get_conv(store, "conv2.w", 3, 3, 8, 16)?,
+            conv2_b: get_vec(store, "conv2.b", 16)?,
+            fc_w: get_mat(store, "fc.w", 7 * 7 * 16, 10)?,
+            fc_b: get_vec(store, "fc.b", 10)?,
+            acc: stored_accuracy(store),
+        })
+    }
+}
+
+impl Model for TwoLayerCnn {
+    fn name(&self) -> &'static str {
+        "cnn"
+    }
+
+    fn forward(&self, input: &Batch, backend: &mut dyn GemmBackend) -> MatF {
+        let imgs = match input {
+            Batch::Images(t) => t,
+            _ => panic!("cnn expects image input"),
+        };
+        let mut h = conv2d(imgs, &self.conv1_w, &self.conv1_b, 3, 3, Padding::Same, backend);
+        relu_nhwc(&mut h);
+        let mut h = maxpool2(&h);
+        let mut h2 = conv2d(&h, &self.conv2_w, &self.conv2_b, 3, 3, Padding::Same, backend);
+        relu_nhwc(&mut h2);
+        h = maxpool2(&h2);
+        let flat = h.flatten();
+        dense(&flat, &self.fc_w, &self.fc_b, backend)
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn trained_fp32_accuracy(&self) -> f32 {
+        self.acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MiniResNet (ResNet50 stand-in, see DESIGN.md §5)
+// ---------------------------------------------------------------------------
+
+pub const RESNET_WIDTH: usize = 16;
+pub const RESNET_BLOCKS: usize = 3;
+
+pub struct MiniResNet {
+    stem_w: MatF,
+    stem_b: Vec<f32>,
+    blocks: Vec<(MatF, Vec<f32>, MatF, Vec<f32>)>,
+    fc_w: MatF,
+    fc_b: Vec<f32>,
+    acc: f32,
+}
+
+impl MiniResNet {
+    pub fn from_store(store: &TensorStore) -> Result<Self, String> {
+        let w = RESNET_WIDTH;
+        let mut blocks = Vec::new();
+        for bidx in 0..RESNET_BLOCKS {
+            blocks.push((
+                get_conv(store, &format!("block{bidx}_conv1.w"), 3, 3, w, w)?,
+                get_vec(store, &format!("block{bidx}_conv1.b"), w)?,
+                get_conv(store, &format!("block{bidx}_conv2.w"), 3, 3, w, w)?,
+                get_vec(store, &format!("block{bidx}_conv2.b"), w)?,
+            ));
+        }
+        Ok(MiniResNet {
+            stem_w: get_conv(store, "stem.w", 3, 3, 3, w)?,
+            stem_b: get_vec(store, "stem.b", w)?,
+            blocks,
+            fc_w: get_mat(store, "fc.w", w, 10)?,
+            fc_b: get_vec(store, "fc.b", 10)?,
+            acc: stored_accuracy(store),
+        })
+    }
+}
+
+impl Model for MiniResNet {
+    fn name(&self) -> &'static str {
+        "resnet"
+    }
+
+    fn forward(&self, input: &Batch, backend: &mut dyn GemmBackend) -> MatF {
+        let imgs = match input {
+            Batch::Images(t) => t,
+            _ => panic!("resnet expects image input"),
+        };
+        let mut h = conv2d(imgs, &self.stem_w, &self.stem_b, 3, 3, Padding::Same, backend);
+        relu_nhwc(&mut h);
+        for (w1, b1, w2, b2) in &self.blocks {
+            let mut r = conv2d(&h, w1, b1, 3, 3, Padding::Same, backend);
+            relu_nhwc(&mut r);
+            let r2 = conv2d(&r, w2, b2, 3, 3, Padding::Same, backend);
+            for (hv, rv) in h.data.iter_mut().zip(&r2.data) {
+                *hv = (*hv + rv).max(0.0); // residual add + relu
+            }
+        }
+        let pooled = global_avg_pool(&h);
+        dense(&pooled, &self.fc_w, &self.fc_b, backend)
+    }
+
+    fn num_classes(&self) -> usize {
+        10
+    }
+
+    fn trained_fp32_accuracy(&self) -> f32 {
+        self.acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TinyBert (BERT-large stand-in, see DESIGN.md §5)
+// ---------------------------------------------------------------------------
+
+pub const BERT_VOCAB: usize = 32;
+pub const BERT_SEQ: usize = 32;
+pub const BERT_DIM: usize = 64;
+pub const BERT_HEADS: usize = 4;
+pub const BERT_FFN: usize = 128;
+pub const BERT_LAYERS: usize = 2;
+pub const BERT_CLASSES: usize = 4;
+
+struct BertLayer {
+    wq: (MatF, Vec<f32>),
+    wk: (MatF, Vec<f32>),
+    wv: (MatF, Vec<f32>),
+    wo: (MatF, Vec<f32>),
+    ffn1: (MatF, Vec<f32>),
+    ffn2: (MatF, Vec<f32>),
+    ln1: (Vec<f32>, Vec<f32>),
+    ln2: (Vec<f32>, Vec<f32>),
+}
+
+pub struct TinyBert {
+    embed: MatF, // (VOCAB, DIM)
+    pos: MatF,   // (SEQ, DIM)
+    layers: Vec<BertLayer>,
+    cls: (MatF, Vec<f32>),
+    acc: f32,
+}
+
+impl TinyBert {
+    pub fn from_store(store: &TensorStore) -> Result<Self, String> {
+        let d = BERT_DIM;
+        let mut layers = Vec::new();
+        for l in 0..BERT_LAYERS {
+            let pair = |n: &str, rows: usize, cols: usize| -> Result<(MatF, Vec<f32>), String> {
+                Ok((
+                    get_mat(store, &format!("l{l}_{n}.w"), rows, cols)?,
+                    get_vec(store, &format!("l{l}_{n}.b"), cols)?,
+                ))
+            };
+            layers.push(BertLayer {
+                wq: pair("wq", d, d)?,
+                wk: pair("wk", d, d)?,
+                wv: pair("wv", d, d)?,
+                wo: pair("wo", d, d)?,
+                ffn1: pair("ffn1", d, BERT_FFN)?,
+                ffn2: pair("ffn2", BERT_FFN, d)?,
+                ln1: (get_vec(store, &format!("l{l}_ln1.g"), d)?, get_vec(store, &format!("l{l}_ln1.b"), d)?),
+                ln2: (get_vec(store, &format!("l{l}_ln2.g"), d)?, get_vec(store, &format!("l{l}_ln2.b"), d)?),
+            });
+        }
+        Ok(TinyBert {
+            embed: get_mat(store, "embed", BERT_VOCAB, d)?,
+            pos: get_mat(store, "pos", BERT_SEQ, d)?,
+            layers,
+            cls: (get_mat(store, "cls.w", d, BERT_CLASSES)?, get_vec(store, "cls.b", BERT_CLASSES)?),
+            acc: stored_accuracy(store),
+        })
+    }
+
+    /// Forward one sequence (S, D) through the encoder stack.
+    fn encode(&self, mut h: MatF, backend: &mut dyn GemmBackend) -> MatF {
+        for layer in &self.layers {
+            let q = dense(&h, &layer.wq.0, &layer.wq.1, backend);
+            let k = dense(&h, &layer.wk.0, &layer.wk.1, backend);
+            let v = dense(&h, &layer.wv.0, &layer.wv.1, backend);
+            let att = attention_single(&q, &k, &v, BERT_HEADS);
+            let att = dense(&att, &layer.wo.0, &layer.wo.1, backend);
+            for (hv, av) in h.data.iter_mut().zip(&att.data) {
+                *hv += av;
+            }
+            layernorm(&mut h, &layer.ln1.0, &layer.ln1.1, 1e-5);
+            let mut f = dense(&h, &layer.ffn1.0, &layer.ffn1.1, backend);
+            gelu(&mut f);
+            let f = dense(&f, &layer.ffn2.0, &layer.ffn2.1, backend);
+            for (hv, fv) in h.data.iter_mut().zip(&f.data) {
+                *hv += fv;
+            }
+            layernorm(&mut h, &layer.ln2.0, &layer.ln2.1, 1e-5);
+        }
+        h
+    }
+}
+
+impl Model for TinyBert {
+    fn name(&self) -> &'static str {
+        "bert"
+    }
+
+    fn forward(&self, input: &Batch, backend: &mut dyn GemmBackend) -> MatF {
+        let (tokens, batch, seq) = match input {
+            Batch::Tokens { tokens, batch, seq } => (tokens, *batch, *seq),
+            _ => panic!("bert expects token input"),
+        };
+        assert_eq!(seq, BERT_SEQ);
+        let mut logits = MatF::zeros(batch, BERT_CLASSES);
+        for b in 0..batch {
+            let mut h = MatF::zeros(seq, BERT_DIM);
+            for s in 0..seq {
+                let tok = tokens[b * seq + s] as usize % BERT_VOCAB;
+                for d in 0..BERT_DIM {
+                    h.set(s, d, self.embed.at(tok, d) + self.pos.at(s, d));
+                }
+            }
+            let h = self.encode(h, backend);
+            // mean pool over sequence
+            let mut pooled = MatF::zeros(1, BERT_DIM);
+            for s in 0..seq {
+                for d in 0..BERT_DIM {
+                    pooled.data[d] += h.at(s, d);
+                }
+            }
+            for v in pooled.data.iter_mut() {
+                *v /= seq as f32;
+            }
+            let out = dense(&pooled, &self.cls.0, &self.cls.1, backend);
+            logits.row_mut(b).copy_from_slice(out.row(0));
+        }
+        logits
+    }
+
+    fn num_classes(&self) -> usize {
+        BERT_CLASSES
+    }
+
+    fn trained_fp32_accuracy(&self) -> f32 {
+        self.acc
+    }
+}
+
+/// Load any zoo model by name from `artifacts/models/<name>.rt`.
+pub fn load_model(artifacts_dir: &str, name: &str) -> Result<Box<dyn Model>, String> {
+    let path = format!("{artifacts_dir}/models/{name}.rt");
+    let store = crate::nn::store::load(&path).map_err(|e| e.to_string())?;
+    match name {
+        "mlp" => Ok(Box::new(Mlp::from_store(&store)?)),
+        "cnn" => Ok(Box::new(TwoLayerCnn::from_store(&store)?)),
+        "resnet" => Ok(Box::new(MiniResNet::from_store(&store)?)),
+        "bert" => Ok(Box::new(TinyBert::from_store(&store)?)),
+        other => Err(format!("unknown model `{other}`")),
+    }
+}
+
+pub const ZOO: [&str; 4] = ["mlp", "cnn", "resnet", "bert"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::Fp32Backend;
+    use crate::nn::store::{StoredTensor, TensorStore};
+    use crate::util::rng::Rng;
+
+    fn synth_store(entries: &[(&str, Vec<usize>)]) -> TensorStore {
+        let mut rng = Rng::seed_from(0);
+        let mut store = TensorStore::new();
+        for (name, dims) in entries {
+            let n: usize = dims.iter().product();
+            store.insert(
+                name.to_string(),
+                StoredTensor::F32 {
+                    dims: dims.clone(),
+                    data: (0..n).map(|_| rng.uniform_f32(-0.1, 0.1)).collect(),
+                },
+            );
+        }
+        store
+    }
+
+    #[test]
+    fn mlp_forward_shape_from_synthetic_weights() {
+        let store = synth_store(&[
+            ("fc0.w", vec![784, 256]),
+            ("fc0.b", vec![256]),
+            ("fc1.w", vec![256, 128]),
+            ("fc1.b", vec![128]),
+            ("fc2.w", vec![128, 10]),
+            ("fc2.b", vec![10]),
+        ]);
+        let mlp = Mlp::from_store(&store).unwrap();
+        let imgs = Nhwc::zeros(3, 28, 28, 1);
+        let out = mlp.forward(&Batch::Images(imgs), &mut Fp32Backend);
+        assert_eq!((out.rows, out.cols), (3, 10));
+    }
+
+    #[test]
+    fn missing_weight_is_error() {
+        let store = synth_store(&[("fc0.w", vec![784, 256])]);
+        assert!(Mlp::from_store(&store).is_err());
+    }
+
+    #[test]
+    fn wrong_shape_is_error() {
+        let store = synth_store(&[
+            ("fc0.w", vec![10, 10]),
+            ("fc0.b", vec![256]),
+            ("fc1.w", vec![256, 128]),
+            ("fc1.b", vec![128]),
+            ("fc2.w", vec![128, 10]),
+            ("fc2.b", vec![10]),
+        ]);
+        assert!(Mlp::from_store(&store).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_basics() {
+        let m = MatF::from_vec(2, 3, vec![0.1, 0.9, 0.3, 0.5, 0.2, 0.1]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn accuracy_computation() {
+        struct Fixed;
+        impl Model for Fixed {
+            fn name(&self) -> &'static str {
+                "fixed"
+            }
+            fn forward(&self, input: &Batch, _b: &mut dyn GemmBackend) -> MatF {
+                let n = input.len();
+                let mut m = MatF::zeros(n, 2);
+                for r in 0..n {
+                    m.set(r, r % 2, 1.0); // predicts 0,1,0,1,...
+                }
+                m
+            }
+            fn num_classes(&self) -> usize {
+                2
+            }
+            fn trained_fp32_accuracy(&self) -> f32 {
+                1.0
+            }
+        }
+        let imgs = Nhwc::zeros(4, 1, 1, 1);
+        let acc = accuracy(&Fixed, &Batch::Images(imgs), &[0, 1, 1, 1], &mut Fp32Backend);
+        assert!((acc - 0.75).abs() < 1e-9);
+    }
+}

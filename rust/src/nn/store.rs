@@ -1,0 +1,236 @@
+//! RNSTORE1 tensor container — rust reader/writer for the binary format
+//! produced by `python/compile/tensorstore.py` (trained weights + frozen
+//! eval sets).  See that file for the byte layout.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"RNSTORE1";
+
+/// A stored tensor: shape + typed payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoredTensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I64 { dims: Vec<usize>, data: Vec<i64> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+}
+
+impl StoredTensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            StoredTensor::F32 { dims, .. }
+            | StoredTensor::I64 { dims, .. }
+            | StoredTensor::U8 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            StoredTensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<&[i64]> {
+        match self {
+            StoredTensor::I64 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+pub type TensorStore = BTreeMap<String, StoredTensor>;
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn bad(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Load a store from a file path.
+pub fn load(path: &str) -> std::io::Result<TensorStore> {
+    let file = std::fs::File::open(path)?;
+    let mut r = std::io::BufReader::new(file);
+    load_from(&mut r).map_err(|e| bad(format!("{path}: {e}")))
+}
+
+/// Load a store from any reader.
+pub fn load_from(r: &mut impl Read) -> std::io::Result<TensorStore> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("bad magic".into()));
+    }
+    let count = read_u32(r)?;
+    let mut out = TensorStore::new();
+    for _ in 0..count {
+        let nlen = read_u32(r)? as usize;
+        if nlen > 4096 {
+            return Err(bad(format!("implausible name length {nlen}")));
+        }
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).map_err(|e| bad(e.to_string()))?;
+        let mut code = [0u8; 1];
+        r.read_exact(&mut code)?;
+        let ndim = read_u32(r)? as usize;
+        if ndim > 8 {
+            return Err(bad(format!("{name}: implausible ndim {ndim}")));
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(r)? as usize);
+        }
+        let n: usize = dims.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+        let tensor = match code[0] {
+            0 => {
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                let data = buf
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                StoredTensor::F32 { dims, data }
+            }
+            1 => {
+                let mut buf = vec![0u8; n * 8];
+                r.read_exact(&mut buf)?;
+                let data = buf
+                    .chunks_exact(8)
+                    .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                StoredTensor::I64 { dims, data }
+            }
+            2 => {
+                let mut data = vec![0u8; n];
+                r.read_exact(&mut data)?;
+                StoredTensor::U8 { dims, data }
+            }
+            c => return Err(bad(format!("{name}: unknown dtype code {c}"))),
+        };
+        out.insert(name, tensor);
+    }
+    Ok(out)
+}
+
+/// Write a store (used by round-trip tests and the rust-side exporters).
+pub fn save(path: &str, store: &TensorStore) -> std::io::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(store.len() as u32).to_le_bytes())?;
+    for (name, t) in store {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        let (code, dims): (u8, &[usize]) = match t {
+            StoredTensor::F32 { dims, .. } => (0, dims),
+            StoredTensor::I64 { dims, .. } => (1, dims),
+            StoredTensor::U8 { dims, .. } => (2, dims),
+        };
+        w.write_all(&[code])?;
+        w.write_all(&(dims.len() as u32).to_le_bytes())?;
+        for &d in dims {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match t {
+            StoredTensor::F32 { data, .. } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            StoredTensor::I64 { data, .. } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            StoredTensor::U8 { data, .. } => w.write_all(data)?,
+        }
+    }
+    Ok(())
+}
+
+/// Fetch a required f32 tensor with shape validation.
+pub fn f32_tensor<'a>(
+    store: &'a TensorStore,
+    name: &str,
+    expect_dims: Option<&[usize]>,
+) -> Result<&'a [f32], String> {
+    let t = store.get(name).ok_or_else(|| format!("missing tensor `{name}`"))?;
+    if let Some(want) = expect_dims {
+        if t.dims() != want {
+            return Err(format!("`{name}`: dims {:?} != expected {:?}", t.dims(), want));
+        }
+    }
+    t.as_f32().ok_or_else(|| format!("`{name}` is not f32"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut store = TensorStore::new();
+        store.insert(
+            "a.w".into(),
+            StoredTensor::F32 { dims: vec![2, 3], data: vec![1.0, -2.0, 3.5, 0.0, 1e-9, 7.0] },
+        );
+        store.insert("y".into(), StoredTensor::I64 { dims: vec![4], data: vec![-1, 0, 5, 9] });
+        store.insert("b".into(), StoredTensor::U8 { dims: vec![2, 2], data: vec![0, 255, 7, 8] });
+        let dir = std::env::temp_dir().join("rns_store_test.rt");
+        let path = dir.to_str().unwrap();
+        save(path, &store).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(back, store);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut data: Vec<u8> = b"NOTMAGIC".to_vec();
+        data.extend_from_slice(&0u32.to_le_bytes());
+        assert!(load_from(&mut data.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let mut data: Vec<u8> = MAGIC.to_vec();
+        data.extend_from_slice(&1u32.to_le_bytes());
+        data.extend_from_slice(&3u32.to_le_bytes());
+        data.extend_from_slice(b"ab"); // name shorter than declared
+        assert!(load_from(&mut data.as_slice()).is_err());
+    }
+
+    #[test]
+    fn f32_tensor_helper() {
+        let mut store = TensorStore::new();
+        store.insert("w".into(), StoredTensor::F32 { dims: vec![2], data: vec![1.0, 2.0] });
+        assert!(f32_tensor(&store, "w", Some(&[2])).is_ok());
+        assert!(f32_tensor(&store, "w", Some(&[3])).is_err());
+        assert!(f32_tensor(&store, "nope", None).is_err());
+    }
+
+    #[test]
+    fn reads_python_written_model() {
+        // integration with the python writer: load a real artifact if built
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/models/mlp.rt");
+        if std::path::Path::new(path).exists() {
+            let store = load(path).unwrap();
+            assert!(store.contains_key("fc0.w"));
+            let t = store.get("fc0.w").unwrap();
+            assert_eq!(t.dims(), &[784, 256]);
+        }
+    }
+}

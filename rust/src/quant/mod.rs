@@ -1,0 +1,168 @@
+//! Quantization substrate (paper §III-B / Fig. 2 dataflow).
+//!
+//! Scaling convention (mirrors python/compile/quantize.py):
+//!   * activations: one scale per input vector, `s_in = max(|x_row|)`;
+//!   * weights: one scale per *output column* of the (K, N) matrix — the
+//!     paper's "per row of the h×h weight matrix" in its (N, K) layout;
+//!   * symmetric signed integers in `[-(2^(b-1)-1), 2^(b-1)-1]`;
+//!   * dequantize: `Y[k] = Y_SI[k] * s_in * s_w[k] / qmax^2`.
+
+use crate::tensor::{MatF, MatI};
+
+/// Largest symmetric quantized magnitude for `bits`: `2^(b-1) - 1`.
+pub fn qmax(bits: u32) -> i64 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Quantized activations: integer matrix + per-row scales.
+#[derive(Clone, Debug)]
+pub struct QuantActs {
+    pub q: MatI,
+    pub scales: Vec<f32>, // length = rows
+    pub bits: u32,
+}
+
+/// Quantized weights: integer matrix + per-column scales.
+#[derive(Clone, Debug)]
+pub struct QuantWeights {
+    pub q: MatI,
+    pub scales: Vec<f32>, // length = cols
+    pub bits: u32,
+}
+
+/// Per-input-vector symmetric quantization of (B, K) activations.
+pub fn quantize_activations(x: &MatF, bits: u32) -> QuantActs {
+    let qm = qmax(bits) as f32;
+    let mut q = MatI::zeros(x.rows, x.cols);
+    let mut scales = Vec::with_capacity(x.rows);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let mut s = row.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        if s == 0.0 {
+            s = 1.0;
+        }
+        scales.push(s);
+        let qrow = q.row_mut(r);
+        for (dst, &v) in qrow.iter_mut().zip(row) {
+            *dst = (v / s * qm).round() as i64;
+        }
+    }
+    QuantActs { q, scales, bits }
+}
+
+/// Per-output-column symmetric quantization of (K, N) weights.
+pub fn quantize_weights(w: &MatF, bits: u32) -> QuantWeights {
+    let qm = qmax(bits) as f32;
+    let mut scales = vec![0.0f32; w.cols];
+    for r in 0..w.rows {
+        for (c, &v) in w.row(r).iter().enumerate() {
+            scales[c] = scales[c].max(v.abs());
+        }
+    }
+    for s in scales.iter_mut() {
+        if *s == 0.0 {
+            *s = 1.0;
+        }
+    }
+    let mut q = MatI::zeros(w.rows, w.cols);
+    for r in 0..w.rows {
+        let qrow = q.row_mut(r);
+        for (c, &v) in w.row(r).iter().enumerate() {
+            qrow[c] = (v / scales[c] * qm).round() as i64;
+        }
+    }
+    QuantWeights { q, scales, bits }
+}
+
+/// Undo both scalings on an integer GEMM output (B, N).
+pub fn dequantize(y_si: &MatI, acts: &QuantActs, weights: &QuantWeights) -> MatF {
+    assert_eq!(acts.bits, weights.bits, "mixed-precision dequantize");
+    assert_eq!(y_si.rows, acts.scales.len());
+    assert_eq!(y_si.cols, weights.scales.len());
+    let qm2 = (qmax(acts.bits) * qmax(acts.bits)) as f32;
+    let mut out = MatF::zeros(y_si.rows, y_si.cols);
+    for r in 0..y_si.rows {
+        let s_in = acts.scales[r];
+        let orow = out.row_mut(r);
+        for (c, &v) in y_si.row(r).iter().enumerate() {
+            orow[c] = v as f32 * s_in * weights.scales[c] / qm2;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm::{gemm_f32, gemm_i64};
+    use crate::util::prop::{prop_assert, run_prop};
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> MatF {
+        MatF::from_vec(rows, cols, (0..rows * cols).map(|_| rng.uniform_f32(-scale, scale)).collect())
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(4), 7);
+        assert_eq!(qmax(6), 31);
+        assert_eq!(qmax(8), 127);
+    }
+
+    #[test]
+    fn activation_bounds_and_integrality() {
+        run_prop("act quantize bounds", 50, |rng| {
+            let bits = [4u32, 6, 8][rng.gen_range(3) as usize];
+            let x = rand_mat(rng, 3, 17, 5.0);
+            let qa = quantize_activations(&x, bits);
+            let qm = qmax(bits);
+            prop_assert(qa.q.data.iter().all(|&v| v.abs() <= qm), "bounds")?;
+            prop_assert(qa.scales.iter().all(|&s| s > 0.0), "positive scales")
+        });
+    }
+
+    #[test]
+    fn weight_scales_per_column() {
+        let w = MatF::from_vec(3, 2, vec![1.0, 10.0, 2.0, -20.0, 0.5, 5.0]);
+        let qw = quantize_weights(&w, 8);
+        assert_eq!(qw.scales, vec![2.0, 20.0]);
+        // max-magnitude entries map to exactly +-qmax
+        assert_eq!(qw.q.at(1, 0), 127);
+        assert_eq!(qw.q.at(1, 1), -127);
+    }
+
+    #[test]
+    fn zero_input_guard() {
+        let qa = quantize_activations(&MatF::zeros(2, 4), 6);
+        assert!(qa.scales.iter().all(|&s| s == 1.0));
+        assert!(qa.q.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn quantized_gemm_tracks_fp32() {
+        // dequant(qx @ qw) approx x @ w with error bounded by quantization
+        let mut rng = Rng::seed_from(5);
+        let x = rand_mat(&mut rng, 4, 64, 1.0);
+        let w = rand_mat(&mut rng, 64, 8, 0.5);
+        let want = gemm_f32(&x, &w);
+        let qa = quantize_activations(&x, 8);
+        let qw = quantize_weights(&w, 8);
+        let y = gemm_i64(&qa.q, &qw.q);
+        let got = dequantize(&y, &qa, &qw);
+        // bound: K * (s_in/2qm * wmax + s_w/2qm * xmax + tiny) per element
+        for (g, f) in got.data.iter().zip(&want.data) {
+            assert!((g - f).abs() < 0.05, "{g} vs {f}");
+        }
+    }
+
+    #[test]
+    fn dequantize_formula() {
+        let y = MatI::from_vec(1, 2, vec![100, -200]);
+        let acts = QuantActs { q: MatI::zeros(1, 2), scales: vec![2.0], bits: 8 };
+        let weights = QuantWeights { q: MatI::zeros(2, 2), scales: vec![3.0, 4.0], bits: 8 };
+        let out = dequantize(&y, &acts, &weights);
+        let qm2 = 127.0f32 * 127.0;
+        assert!((out.at(0, 0) - 100.0 * 6.0 / qm2).abs() < 1e-6);
+        assert!((out.at(0, 1) + 200.0 * 8.0 / qm2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,105 @@
+//! Barrett reduction for the hot modular loops (paper §V: "the modulo
+//! operations are optimized using Barrett Reduction").
+//!
+//! For a fixed modulus `m < 2^32` precompute `mu = floor(2^64 / m)`; then
+//! for `x < 2^63`, `q = mulhi(x, mu)` satisfies `q <= floor(x/m) <= q + 1`,
+//! so one conditional subtraction yields the exact remainder — no division
+//! on the hot path.
+
+/// Precomputed Barrett constants for one modulus.
+#[derive(Clone, Copy, Debug)]
+pub struct BarrettReducer {
+    pub m: u64,
+    mu: u64, // floor(2^64 / m)
+}
+
+impl BarrettReducer {
+    pub fn new(m: u64) -> Self {
+        assert!(m >= 2, "modulus must be >= 2");
+        assert!(m < (1 << 32), "Barrett constants sized for m < 2^32");
+        BarrettReducer { m, mu: ((1u128 << 64) / m as u128) as u64 }
+    }
+
+    /// Exact `x mod m` for any `x < 2^63`.
+    #[inline(always)]
+    pub fn reduce(&self, x: u64) -> u64 {
+        let q = ((x as u128 * self.mu as u128) >> 64) as u64;
+        let mut r = x.wrapping_sub(q.wrapping_mul(self.m));
+        // q underestimates floor(x/m) by at most 1 for x < 2^63
+        if r >= self.m {
+            r -= self.m;
+        }
+        r
+    }
+
+    /// `(a * b) mod m` with both operands already reduced (`< m < 2^32`).
+    #[inline(always)]
+    pub fn mul_mod(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.m && b < self.m);
+        self.reduce(a * b)
+    }
+
+    /// `(a + b) mod m` with both operands already reduced.
+    #[inline(always)]
+    pub fn add_mod(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.m && b < self.m);
+        let s = a + b;
+        if s >= self.m {
+            s - self.m
+        } else {
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_assert_eq, run_prop};
+
+    #[test]
+    fn matches_native_mod_exhaustive_small() {
+        for m in [2u64, 3, 7, 11, 59, 63, 127, 255] {
+            let b = BarrettReducer::new(m);
+            for x in 0..2000u64 {
+                assert_eq!(b.reduce(x), x % m, "x={x} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_native_mod_prop() {
+        run_prop("barrett == %", 2000, |rng| {
+            let m = 2 + rng.gen_range((1 << 32) - 2);
+            let x = rng.next_u64() >> 1; // < 2^63
+            let b = BarrettReducer::new(m);
+            prop_assert_eq(b.reduce(x), x % m, &format!("x={x} m={m}"))
+        });
+    }
+
+    #[test]
+    fn mul_add_mod() {
+        let b = BarrettReducer::new(251);
+        run_prop("barrett mul/add", 500, |rng| {
+            let x = rng.gen_range(251);
+            let y = rng.gen_range(251);
+            prop_assert_eq(b.mul_mod(x, y), (x * y) % 251, "mul")?;
+            prop_assert_eq(b.add_mod(x, y), (x + y) % 251, "add")
+        });
+    }
+
+    #[test]
+    fn boundary_values() {
+        let b = BarrettReducer::new(59);
+        assert_eq!(b.reduce(0), 0);
+        assert_eq!(b.reduce(58), 58);
+        assert_eq!(b.reduce(59), 0);
+        assert_eq!(b.reduce((1 << 63) - 1), ((1u64 << 63) - 1) % 59);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_modulus_one() {
+        BarrettReducer::new(1);
+    }
+}

@@ -1,0 +1,240 @@
+//! Forward conversion and CRT reconstruction (paper Eq. (1)).
+//!
+//! All integer arithmetic is exact: residues are `u64`, the dynamic range
+//! `M` and the CRT accumulation run in `u128` (Table-I sets have
+//! `M < 2^25`, and even RRNS-extended sets stay far below `2^64`, so the
+//! headroom is enormous).
+
+use super::moduli::pairwise_coprime;
+
+fn egcd(a: i128, b: i128) -> (i128, i128, i128) {
+    if b == 0 {
+        (a, 1, 0)
+    } else {
+        let (g, x, y) = egcd(b, a % b);
+        (g, y, x - (a / b) * y)
+    }
+}
+
+/// Multiplicative inverse of `a` modulo `m` (requires gcd(a, m) = 1).
+pub fn mod_inverse(a: u128, m: u128) -> Result<u128, String> {
+    let (g, x, _) = egcd((a % m) as i128, m as i128);
+    if g != 1 {
+        return Err(format!("{a} has no inverse mod {m}"));
+    }
+    Ok(x.rem_euclid(m as i128) as u128)
+}
+
+/// Precomputed CRT constants for one moduli set.
+///
+/// `crt_coeff[i] = |M_i * T_i|_M` with `M_i = M / m_i` and
+/// `T_i = M_i^{-1} mod m_i` — the paper's Eq. (1) weights.
+#[derive(Clone, Debug)]
+pub struct RnsContext {
+    pub moduli: Vec<u64>,
+    pub big_m: u128,
+    pub crt_coeff: Vec<u128>,
+    /// u64 fast path (perf pass §Perf): when `n * m_max * M < 2^64` the
+    /// whole CRT accumulation fits u64 with a single final reduction —
+    /// true for every Table-I set (M < 2^25, residues < 2^8, n <= 8).
+    fast: Option<FastCrt>,
+}
+
+#[derive(Clone, Debug)]
+struct FastCrt {
+    coeff: Vec<u64>,
+    big_m: u64,
+    half: u64,
+}
+
+impl RnsContext {
+    pub fn new(moduli: &[u64]) -> Result<Self, String> {
+        if moduli.is_empty() {
+            return Err("empty moduli set".into());
+        }
+        if moduli.iter().any(|&m| m < 2) {
+            return Err(format!("moduli must be >= 2: {moduli:?}"));
+        }
+        if !pairwise_coprime(moduli) {
+            return Err(format!("moduli {moduli:?} are not pairwise coprime"));
+        }
+        let big_m: u128 = moduli.iter().map(|&m| m as u128).product();
+        let mut crt_coeff = Vec::with_capacity(moduli.len());
+        for &m in moduli {
+            let mi = big_m / m as u128;
+            let ti = mod_inverse(mi, m as u128)?;
+            crt_coeff.push((mi * ti) % big_m);
+        }
+        // u64 fast path: sum_i r_i * c_i < n * m_max * M must fit u64
+        let m_max = *moduli.iter().max().unwrap() as u128;
+        let fast = if moduli.len() as u128 * m_max * big_m < (1u128 << 63) {
+            Some(FastCrt {
+                coeff: crt_coeff.iter().map(|&c| c as u64).collect(),
+                big_m: big_m as u64,
+                half: (big_m / 2) as u64,
+            })
+        } else {
+            None
+        };
+        Ok(RnsContext { moduli: moduli.to_vec(), big_m, crt_coeff, fast })
+    }
+
+    pub fn n(&self) -> usize {
+        self.moduli.len()
+    }
+
+    /// Largest magnitude representable in the symmetric signed convention
+    /// `(-M/2, M/2]`.
+    pub fn signed_max(&self) -> i128 {
+        (self.big_m / 2) as i128
+    }
+
+    /// Forward conversion of a signed integer (negatives wrap through M:
+    /// `a_i = ((a mod m_i) + m_i) mod m_i`).
+    pub fn forward(&self, a: i64) -> Vec<u64> {
+        self.moduli.iter().map(|&m| a.rem_euclid(m as i64) as u64).collect()
+    }
+
+    /// Forward conversion into a caller-provided buffer (hot-path variant;
+    /// avoids the per-call allocation of `forward`).
+    #[inline]
+    pub fn forward_into(&self, a: i64, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), self.moduli.len());
+        for (o, &m) in out.iter_mut().zip(&self.moduli) {
+            *o = a.rem_euclid(m as i64) as u64;
+        }
+    }
+
+    /// Eq. (1): residues -> unsigned value in `[0, M)`.
+    pub fn crt(&self, residues: &[u64]) -> u128 {
+        debug_assert_eq!(residues.len(), self.moduli.len());
+        if let Some(fast) = &self.fast {
+            // single final reduction — ~5x faster than per-term u128 mod.
+            // (bound n * m_max * M < 2^63 assumes reduced residues r < m)
+            let mut acc: u64 = 0;
+            for ((&r, &c), &m) in residues.iter().zip(&fast.coeff).zip(&self.moduli) {
+                debug_assert!(r < m, "fast CRT requires reduced residues");
+                acc += r * c;
+            }
+            return (acc % fast.big_m) as u128;
+        }
+        let mut acc: u128 = 0;
+        for (&r, &c) in residues.iter().zip(&self.crt_coeff) {
+            acc = (acc + (r as u128 % self.big_m) * c) % self.big_m;
+        }
+        acc
+    }
+
+    /// Signed reconstruction into `(-M/2, M/2]`.
+    pub fn crt_signed(&self, residues: &[u64]) -> i128 {
+        if let Some(fast) = &self.fast {
+            let mut acc: u64 = 0;
+            for (&r, &c) in residues.iter().zip(&fast.coeff) {
+                acc += r * c;
+            }
+            let v = acc % fast.big_m;
+            return if v > fast.half {
+                v as i128 - fast.big_m as i128
+            } else {
+                v as i128
+            };
+        }
+        let v = self.crt(residues);
+        if v > self.big_m / 2 {
+            v as i128 - self.big_m as i128
+        } else {
+            v as i128
+        }
+    }
+
+    /// Reduce an unsigned value into the set's range (for range checks).
+    pub fn reduce(&self, a: u128) -> u128 {
+        a % self.big_m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::moduli::paper_table1;
+    use crate::util::prop::{prop_assert_eq, run_prop};
+
+    #[test]
+    fn mod_inverse_basics() {
+        assert_eq!(mod_inverse(3, 7).unwrap(), 5); // 3*5 = 15 = 1 mod 7
+        assert!(mod_inverse(6, 9).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_sets() {
+        assert!(RnsContext::new(&[]).is_err());
+        assert!(RnsContext::new(&[6, 9]).is_err());
+        assert!(RnsContext::new(&[1, 3]).is_err());
+    }
+
+    #[test]
+    fn crt_coeff_orthogonality() {
+        let ctx = RnsContext::new(paper_table1(6).unwrap()).unwrap();
+        for (i, &c) in ctx.crt_coeff.iter().enumerate() {
+            for (j, &m) in ctx.moduli.iter().enumerate() {
+                let expect = if i == j { 1 } else { 0 };
+                assert_eq!(c % m as u128, expect, "coeff {i} mod m_{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_signed_prop() {
+        let ctx = RnsContext::new(paper_table1(6).unwrap()).unwrap();
+        let half = (ctx.big_m / 2) as i64;
+        run_prop("crt signed roundtrip", 500, |rng| {
+            let a = rng.gen_range_i64(-(half - 1), half);
+            prop_assert_eq(ctx.crt_signed(&ctx.forward(a)), a as i128, "roundtrip")
+        });
+    }
+
+    #[test]
+    fn homomorphism_prop() {
+        let ctx = RnsContext::new(paper_table1(8).unwrap()).unwrap();
+        let bound = ((ctx.big_m as f64).sqrt() as i64) - 1;
+        run_prop("rns ring homomorphism", 300, |rng| {
+            let a = rng.gen_range_i64(0, bound);
+            let b = rng.gen_range_i64(0, bound);
+            let ra = ctx.forward(a);
+            let rb = ctx.forward(b);
+            let mul: Vec<u64> = ra
+                .iter()
+                .zip(&rb)
+                .zip(&ctx.moduli)
+                .map(|((&x, &y), &m)| (x * y) % m)
+                .collect();
+            let add: Vec<u64> = ra
+                .iter()
+                .zip(&rb)
+                .zip(&ctx.moduli)
+                .map(|((&x, &y), &m)| (x + y) % m)
+                .collect();
+            prop_assert_eq(ctx.crt(&mul), (a as u128) * (b as u128), "mul")?;
+            prop_assert_eq(ctx.crt(&add), (a + b) as u128, "add")
+        });
+    }
+
+    #[test]
+    fn forward_into_matches_forward() {
+        let ctx = RnsContext::new(paper_table1(5).unwrap()).unwrap();
+        let mut buf = vec![0u64; ctx.n()];
+        for a in [-1000i64, -1, 0, 1, 31, 12345] {
+            ctx.forward_into(a, &mut buf);
+            assert_eq!(buf, ctx.forward(a));
+        }
+    }
+
+    #[test]
+    fn even_m_boundary() {
+        // For even M, +M/2 is representable, -M/2 aliases to it.
+        let ctx = RnsContext::new(&[4, 3]).unwrap(); // M = 12
+        assert_eq!(ctx.crt_signed(&ctx.forward(6)), 6);
+        assert_eq!(ctx.crt_signed(&ctx.forward(-6)), 6);
+        assert_eq!(ctx.crt_signed(&ctx.forward(-5)), -5);
+    }
+}

@@ -1,0 +1,188 @@
+//! Fault model for the RRNS code (paper §IV, Figs. 5-6).
+//!
+//! The paper abstracts analog noise to "probability of error in a single
+//! residue" `p` and classifies a codeword decode into three cases with
+//! probabilities `p_c` (correct/correctable), `p_d` (detectable), `p_u`
+//! (undetectable), `p_c + p_d + p_u = 1`.
+//!
+//! We provide:
+//!   * an *analytic* model: `p_c` exactly (binomial over <= t errors plus
+//!     the correctable part is exact under the independent-error model);
+//!     `p_d`/`p_u` from a Monte-Carlo split of the >t-error mass, because
+//!     the paper's own equations (James/Peng) are not reprinted and the
+//!     undetectable fraction depends on codeword geometry;
+//!   * `p_err(R)` — the repeated-attempt output error probability.
+//!     Eq. (5) as printed (`1 - p_c * sum_{k=1..R} p_d^k`) does not recover
+//!     `p_err(1) = 1 - p_c`; we implement the corrected geometric series
+//!     `1 - p_c * sum_{j=0..R-1} p_d^j`, whose R->infinity limit
+//!     `p_u / (p_u + p_c)` matches the limit printed in the paper.
+
+use super::rrns::{Decode, RrnsCode};
+use crate::util::rng::Rng;
+
+/// Binomial coefficient as f64 (n small; exact for our sizes).
+pub fn binom(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+/// Case probabilities for one codeword at single-residue error rate `p`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CaseProbs {
+    pub p_c: f64,
+    pub p_d: f64,
+    pub p_u: f64,
+}
+
+impl CaseProbs {
+    /// Output error probability after at most `r` attempts (corrected
+    /// Eq. (5)): success iff some attempt lands in Case 1 before a Case 3
+    /// slips through; each retry is triggered by a Case 2 outcome.
+    pub fn p_err(&self, r: u32) -> f64 {
+        let mut geo = 0.0;
+        let mut pd_pow = 1.0;
+        for _ in 0..r {
+            geo += pd_pow;
+            pd_pow *= self.p_d;
+        }
+        (1.0 - self.p_c * geo).clamp(0.0, 1.0)
+    }
+
+    /// `lim_{R->inf} p_err(R) = p_u / (p_u + p_c)` (paper §IV).
+    pub fn p_err_limit(&self) -> f64 {
+        if self.p_u + self.p_c == 0.0 {
+            1.0
+        } else {
+            self.p_u / (self.p_u + self.p_c)
+        }
+    }
+}
+
+/// Exact probability that at most `t` of `n` residues are erroneous —
+/// the guaranteed-correctable mass (a lower bound on the true `p_c`;
+/// under voting decode some >t patterns also decode correctly, which the
+/// Monte-Carlo estimator captures).
+pub fn p_correctable_analytic(n: usize, k: usize, p: f64) -> f64 {
+    let t = (n - k) / 2;
+    (0..=t).map(|i| binom(n, i) * p.powi(i as i32) * (1.0 - p).powi((n - i) as i32)).sum()
+}
+
+/// Monte-Carlo estimate of the three case probabilities by running the
+/// actual voting decoder against uniformly-corrupted residues.
+///
+/// Error model (matching the paper's abstraction): each residue
+/// independently flips to a uniform wrong value with probability `p`.
+pub fn estimate_case_probs(code: &RrnsCode, p: f64, trials: u32, seed: u64) -> CaseProbs {
+    let mut rng = Rng::seed_from(seed);
+    let half = (code.legitimate_range / 2) as i64;
+    let (mut c, mut d, mut u) = (0u64, 0u64, 0u64);
+    let n = code.n();
+    let mut res = vec![0u64; n];
+    for _ in 0..trials {
+        let a = rng.gen_range_i64(-(half - 1), half);
+        code.full.forward_into(a, &mut res);
+        for i in 0..n {
+            if rng.bernoulli(p) {
+                let m = code.full.moduli[i];
+                res[i] = (res[i] + 1 + rng.gen_range(m - 1)) % m;
+            }
+        }
+        match code.decode(&res) {
+            Decode::Ok { value, .. } if value == a as i128 => c += 1,
+            Decode::Ok { .. } => u += 1,
+            Decode::Detected => d += 1,
+        }
+    }
+    let total = trials as f64;
+    CaseProbs { p_c: c as f64 / total, p_d: d as f64 / total, p_u: u as f64 / total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::moduli::{extend_moduli, paper_table1};
+
+    fn code(bits: u32, extra: usize) -> RrnsCode {
+        let base = paper_table1(bits).unwrap();
+        let all = extend_moduli(base, extra).unwrap();
+        RrnsCode::new(&all, base.len()).unwrap()
+    }
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(5, 0), 1.0);
+        assert_eq!(binom(5, 2), 10.0);
+        assert_eq!(binom(6, 3), 20.0);
+        assert_eq!(binom(3, 5), 0.0);
+    }
+
+    #[test]
+    fn case_probs_sum_to_one() {
+        let code = code(8, 2);
+        for p in [1e-3, 1e-2, 0.1, 0.4] {
+            let cp = estimate_case_probs(&code, p, 4000, 1);
+            assert!((cp.p_c + cp.p_d + cp.p_u - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_noise_is_always_correct() {
+        let code = code(8, 2);
+        let cp = estimate_case_probs(&code, 0.0, 500, 2);
+        assert_eq!(cp.p_c, 1.0);
+        assert_eq!(cp.p_err(1), 0.0);
+    }
+
+    #[test]
+    fn analytic_lower_bounds_mc() {
+        let code = code(8, 2);
+        for p in [1e-2, 5e-2, 0.1] {
+            let analytic = p_correctable_analytic(code.n(), code.k, p);
+            let mc = estimate_case_probs(&code, p, 20_000, 3).p_c;
+            assert!(
+                mc >= analytic - 0.02,
+                "p={p}: MC p_c {mc} should not be below analytic bound {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn attempts_reduce_p_err_monotonically() {
+        let cp = CaseProbs { p_c: 0.7, p_d: 0.25, p_u: 0.05 };
+        let mut prev = 1.0;
+        for r in 1..10 {
+            let pe = cp.p_err(r);
+            assert!(pe <= prev + 1e-15, "R={r}");
+            prev = pe;
+        }
+        // converges to the limit from above
+        assert!((cp.p_err(200) - cp.p_err_limit()).abs() < 1e-9);
+        assert!((cp.p_err_limit() - 0.05 / 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq5_correction_recovers_single_attempt() {
+        let cp = CaseProbs { p_c: 0.9, p_d: 0.08, p_u: 0.02 };
+        assert!((cp.p_err(1) - (1.0 - 0.9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_redundancy_lowers_p_err() {
+        let p = 0.05;
+        let cp1 = estimate_case_probs(&code(8, 1), p, 20_000, 4);
+        let cp3 = estimate_case_probs(&code(8, 3), p, 20_000, 4);
+        assert!(
+            cp3.p_err(2) < cp1.p_err(2),
+            "n-k=3 {} should beat n-k=1 {}",
+            cp3.p_err(2),
+            cp1.p_err(2)
+        );
+    }
+}

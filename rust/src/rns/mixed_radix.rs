@@ -1,0 +1,358 @@
+//! Mixed-radix conversion (MRC) and base extension.
+//!
+//! The paper's footnote 5 notes that CRT-per-group voting "can be too
+//! expensive for large numbers of moduli — typically error detection and
+//! correction is implemented via more efficient base-extension-based
+//! algorithms" (citing Babenko et al.).  This module provides both pieces:
+//!
+//!   * `to_mixed_radix` / `from_mixed_radix` — the MRC digits of a residue
+//!     vector.  MRC is a positional system, so magnitude comparison and
+//!     range checks need no big-integer CRT.
+//!   * `base_extend` — extend a residue vector from base `{m_1..m_k}` to an
+//!     extra modulus `m_e` without reconstructing the integer (Szabo-Tanaka
+//!     via the MRC digits).
+//!   * `BexDecoder` — a base-extension RRNS decoder: recompute each
+//!     redundant residue from the k information residues via base
+//!     extension and compare; the syndrome pattern localizes single
+//!     errors in the information part.  Used as the fast path in the
+//!     ablation benches (`exp/ablation.rs`) against the CRT-voting decoder.
+
+use super::crt::{mod_inverse, RnsContext};
+
+/// Precomputed Szabo-Tanaka inverse table for one moduli base — the hot
+/// part of mixed-radix conversion (`m_i^{-1} mod m_j` for i < j).
+#[derive(Clone, Debug)]
+pub struct MrcTable {
+    pub moduli: Vec<u64>,
+    /// inv[i][j - i - 1] = m_i^{-1} mod m_j
+    inv: Vec<Vec<u64>>,
+}
+
+impl MrcTable {
+    pub fn new(moduli: &[u64]) -> Result<Self, String> {
+        let n = moduli.len();
+        let mut inv = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = Vec::with_capacity(n - i - 1);
+            for j in (i + 1)..n {
+                row.push(mod_inverse(moduli[i] as u128 % moduli[j] as u128, moduli[j] as u128)? as u64);
+            }
+            inv.push(row);
+        }
+        Ok(MrcTable { moduli: moduli.to_vec(), inv })
+    }
+
+    /// Mixed-radix digits of a residue vector (0 <= d[i] < m_i).
+    pub fn digits(&self, residues: &[u64]) -> Vec<u64> {
+        let n = self.moduli.len();
+        debug_assert_eq!(residues.len(), n);
+        let mut work: Vec<u64> = residues.to_vec();
+        let mut digits = Vec::with_capacity(n);
+        for i in 0..n {
+            let d = work[i];
+            digits.push(d);
+            for j in (i + 1)..n {
+                let mj = self.moduli[j];
+                // work[j] = (work[j] - d) * m_i^{-1} mod m_j
+                let diff = (work[j] + mj - (d % mj)) % mj;
+                work[j] = (diff * self.inv[i][j - i - 1]) % mj;
+            }
+        }
+        digits
+    }
+
+    /// Base-extend mixed-radix digits to modulus `m_e`.
+    pub fn extend_digits(&self, digits: &[u64], m_e: u64) -> u64 {
+        let mut acc: u64 = 0;
+        let mut weight: u64 = 1 % m_e;
+        for (d, &m) in digits.iter().zip(&self.moduli) {
+            acc = (acc + (d % m_e) * weight) % m_e;
+            weight = (weight * (m % m_e)) % m_e;
+        }
+        acc
+    }
+}
+
+/// Mixed-radix digits `d` of the value represented by `residues` w.r.t.
+/// `moduli`: value = d[0] + d[1]*m0 + d[2]*m0*m1 + ...  (0 <= d[i] < m_i).
+/// (One-shot convenience; hot paths should hold an `MrcTable`.)
+pub fn to_mixed_radix(residues: &[u64], moduli: &[u64]) -> Vec<u64> {
+    MrcTable::new(moduli).expect("coprime moduli").digits(residues)
+}
+
+/// Reconstruct the (unsigned) value from mixed-radix digits.
+pub fn from_mixed_radix(digits: &[u64], moduli: &[u64]) -> u128 {
+    let mut acc: u128 = 0;
+    let mut weight: u128 = 1;
+    for (d, &m) in digits.iter().zip(moduli) {
+        acc += *d as u128 * weight;
+        weight *= m as u128;
+    }
+    acc
+}
+
+/// Base extension: compute `value mod m_e` for the value represented by
+/// `residues` over `moduli`, without leaving residue arithmetic.
+pub fn base_extend(residues: &[u64], moduli: &[u64], m_e: u64) -> u64 {
+    let digits = to_mixed_radix(residues, moduli);
+    let mut acc: u64 = 0;
+    let mut weight: u64 = 1 % m_e;
+    for (d, &m) in digits.iter().zip(moduli) {
+        acc = (acc + (d % m_e) as u128 as u64 * weight % m_e) % m_e;
+        weight = ((weight as u128 * (m as u128 % m_e as u128)) % m_e as u128) as u64;
+    }
+    acc
+}
+
+/// Outcome of a base-extension syndrome decode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BexOutcome {
+    /// All syndromes zero: the information residues are consistent.
+    Clean { value: i128 },
+    /// Syndromes nonzero but a single-residue correction explains them.
+    Corrected { value: i128, suspect: usize },
+    /// Syndromes inconsistent with any single error: detected.
+    Detected,
+}
+
+/// Base-extension RRNS decoder for n = k + r moduli (information first).
+///
+/// Cost: r base extensions (each O(k^2) small-word ops) instead of
+/// C(n, k) CRTs — the asymptotic win the paper's footnote points at.
+/// Correction power: locates any single erroneous *information* residue
+/// when r >= 2, and flags redundant-residue errors for free.
+pub struct BexDecoder {
+    pub moduli: Vec<u64>,
+    pub k: usize,
+    info_ctx: RnsContext,
+    /// Precomputed Szabo-Tanaka inverses over the information base.
+    table: MrcTable,
+    /// Precomputed `M_info mod m_e` per redundant modulus (signed fix-up).
+    m_info_mod: Vec<u64>,
+    /// Full-range signed bound (product of information moduli).
+    half: i128,
+}
+
+impl BexDecoder {
+    pub fn new(moduli: &[u64], k: usize) -> Result<Self, String> {
+        if k == 0 || k > moduli.len() {
+            return Err(format!("invalid k={k} for n={}", moduli.len()));
+        }
+        let info_ctx = RnsContext::new(&moduli[..k])?;
+        let table = MrcTable::new(&moduli[..k])?;
+        let m_info_mod =
+            moduli[k..].iter().map(|&m_e| (info_ctx.big_m % m_e as u128) as u64).collect();
+        let half = (info_ctx.big_m / 2) as i128;
+        Ok(BexDecoder { moduli: moduli.to_vec(), k, info_ctx, table, m_info_mod, half })
+    }
+
+    /// Decode: recompute each redundant residue from the info base and
+    /// compare (syndromes); try single-error hypotheses when they differ.
+    ///
+    /// Sign handling: the full codeword encodes the *signed* value (a
+    /// negative A wraps through the full product), so the extension of the
+    /// unsigned info reconstruction `U = A mod M_info` must be corrected by
+    /// `-M_info mod m_e` when U lands in the negative half-range — the
+    /// standard signed base-extension fix-up, done per redundant modulus.
+    pub fn decode(&self, residues: &[u64]) -> BexOutcome {
+        assert_eq!(residues.len(), self.moduli.len());
+        let info = &residues[..self.k];
+        let info_moduli = &self.moduli[..self.k];
+        // one mixed-radix conversion (precomputed inverses), then every
+        // redundant extension is O(k) small-word ops
+        let digits = self.table.digits(info);
+        let u = from_mixed_radix(&digits, info_moduli);
+        let negative = u > self.info_ctx.big_m / 2;
+        let mut syndromes = Vec::with_capacity(self.moduli.len() - self.k);
+        for (idx, &m_e) in self.moduli[self.k..].iter().enumerate() {
+            let mut expect = self.table.extend_digits(&digits, m_e);
+            if negative {
+                expect = (expect + m_e - self.m_info_mod[idx]) % m_e;
+            }
+            syndromes.push((expect != residues[self.k + idx], idx));
+        }
+        let bad = syndromes.iter().filter(|(b, _)| *b).count();
+        if bad == 0 {
+            return BexOutcome::Clean { value: self.info_ctx.crt_signed(info) };
+        }
+        if bad < syndromes.len() {
+            // Some redundant residues agree with the info base: with a
+            // single-error assumption the error is in a *redundant* residue
+            // (the info value is vouched for by the agreeing extensions).
+            if syndromes.len() >= 2 {
+                let suspect = self.k + syndromes.iter().find(|(b, _)| *b).unwrap().1;
+                return BexOutcome::Corrected { value: self.info_ctx.crt_signed(info), suspect };
+            }
+            return BexOutcome::Detected;
+        }
+        // all redundant residues disagree -> hypothesize one bad info residue
+        for cand in 0..self.k {
+            // solve for the info residue value that makes every redundant
+            // syndrome vanish, using the other info residues + the first
+            // redundant residue as a (k)-base reconstruction
+            let mut base: Vec<u64> = Vec::with_capacity(self.k);
+            let mut base_moduli: Vec<u64> = Vec::with_capacity(self.k);
+            for i in 0..self.k {
+                if i != cand {
+                    base.push(residues[i]);
+                    base_moduli.push(self.moduli[i]);
+                }
+            }
+            base.push(residues[self.k]);
+            base_moduli.push(self.moduli[self.k]);
+            let ctx = match RnsContext::new(&base_moduli) {
+                Ok(c) => c,
+                Err(_) => continue,
+            };
+            let v = ctx.crt_signed(&base);
+            if v > self.half || v < -(self.half - 1) {
+                continue;
+            }
+            // verify against the remaining redundant residues
+            let consistent = self.moduli[self.k + 1..]
+                .iter()
+                .enumerate()
+                .all(|(j, &m)| (v.rem_euclid(m as i128)) as u64 == residues[self.k + 1 + j]);
+            if consistent {
+                return BexOutcome::Corrected { value: v, suspect: cand };
+            }
+        }
+        BexOutcome::Detected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::moduli::{extend_moduli, paper_table1};
+    use crate::util::prop::{prop_assert_eq, run_prop};
+
+    const MODS: [u64; 4] = [63, 62, 61, 59];
+
+    #[test]
+    fn mrc_roundtrip_prop() {
+        let ctx = RnsContext::new(&MODS).unwrap();
+        run_prop("mixed-radix roundtrip", 300, |rng| {
+            let v = rng.gen_range((ctx.big_m as u64).min(u64::MAX)) as u128;
+            let res: Vec<u64> = MODS.iter().map(|&m| (v % m as u128) as u64).collect();
+            let digits = to_mixed_radix(&res, &MODS);
+            for (d, &m) in digits.iter().zip(&MODS) {
+                assert!(*d < m);
+            }
+            prop_assert_eq(from_mixed_radix(&digits, &MODS), v, "roundtrip")
+        });
+    }
+
+    #[test]
+    fn mrc_matches_crt() {
+        let ctx = RnsContext::new(&MODS).unwrap();
+        for v in [0u128, 1, 62, 63, 12345, 14057693] {
+            let res: Vec<u64> = MODS.iter().map(|&m| (v % m as u128) as u64).collect();
+            assert_eq!(from_mixed_radix(&to_mixed_radix(&res, &MODS), &MODS), ctx.crt(&res));
+        }
+    }
+
+    #[test]
+    fn base_extension_correct_prop() {
+        run_prop("base extension", 300, |rng| {
+            let v = rng.gen_range(14_057_694) as u128; // < M
+            let res: Vec<u64> = MODS.iter().map(|&m| (v % m as u128) as u64).collect();
+            for m_e in [55u64, 53, 127, 255] {
+                prop_assert_eq(
+                    base_extend(&res, &MODS, m_e),
+                    (v % m_e as u128) as u64,
+                    &format!("m_e={m_e}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    fn decoder() -> BexDecoder {
+        let all = extend_moduli(paper_table1(8).unwrap(), 2).unwrap();
+        BexDecoder::new(&all, 3).unwrap()
+    }
+
+    #[test]
+    fn bex_clean_words() {
+        let d = decoder();
+        let all = d.moduli.clone();
+        let ctx = RnsContext::new(&all).unwrap();
+        for v in [-1_000_000i64, -1, 0, 1, 7_000_000] {
+            let res = ctx.forward(v);
+            assert_eq!(d.decode(&res), BexOutcome::Clean { value: v as i128 }, "v={v}");
+        }
+    }
+
+    #[test]
+    fn bex_corrects_single_info_error() {
+        let d = decoder();
+        let all = d.moduli.clone();
+        let ctx = RnsContext::new(&all).unwrap();
+        run_prop("bex info-error correction", 300, |rng| {
+            let v = rng.gen_range_i64(-7_000_000, 7_000_000);
+            let mut res = ctx.forward(v);
+            let i = rng.gen_range(3) as usize; // info residue
+            res[i] = (res[i] + 1 + rng.gen_range(all[i] - 1)) % all[i];
+            match d.decode(&res) {
+                BexOutcome::Corrected { value, suspect } => {
+                    prop_assert_eq(value, v as i128, "value")?;
+                    prop_assert_eq(suspect, i, "suspect")
+                }
+                other => Err(format!("expected correction, got {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn bex_flags_single_redundant_error() {
+        let d = decoder();
+        let all = d.moduli.clone();
+        let ctx = RnsContext::new(&all).unwrap();
+        run_prop("bex redundant-error handling", 200, |rng| {
+            let v = rng.gen_range_i64(-7_000_000, 7_000_000);
+            let mut res = ctx.forward(v);
+            let i = 3 + rng.gen_range(2) as usize; // redundant residue
+            res[i] = (res[i] + 1 + rng.gen_range(all[i] - 1)) % all[i];
+            match d.decode(&res) {
+                BexOutcome::Corrected { value, suspect } => {
+                    prop_assert_eq(value, v as i128, "value survives")?;
+                    prop_assert_eq(suspect, i, "suspect is the redundant residue")
+                }
+                other => Err(format!("expected correction, got {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn bex_agrees_with_voting_decoder() {
+        use crate::rns::rrns::{Decode, RrnsCode};
+        let all = extend_moduli(paper_table1(8).unwrap(), 2).unwrap();
+        let bex = BexDecoder::new(&all, 3).unwrap();
+        let vote = RrnsCode::new(&all, 3).unwrap();
+        let ctx = RnsContext::new(&all).unwrap();
+        run_prop("bex == voting on single errors", 200, |rng| {
+            let v = rng.gen_range_i64(-7_000_000, 7_000_000);
+            let mut res = ctx.forward(v);
+            if rng.bernoulli(0.7) {
+                let i = rng.gen_range(5) as usize;
+                res[i] = (res[i] + 1 + rng.gen_range(all[i] - 1)) % all[i];
+            }
+            let bex_val = match bex.decode(&res) {
+                BexOutcome::Clean { value } | BexOutcome::Corrected { value, .. } => Some(value),
+                BexOutcome::Detected => None,
+            };
+            let vote_val = match vote.decode(&res) {
+                Decode::Ok { value, .. } => Some(value),
+                Decode::Detected => None,
+            };
+            prop_assert_eq(bex_val, vote_val, "decoder agreement")
+        });
+    }
+
+    #[test]
+    fn invalid_params() {
+        assert!(BexDecoder::new(&MODS, 0).is_err());
+        assert!(BexDecoder::new(&MODS, 5).is_err());
+    }
+}

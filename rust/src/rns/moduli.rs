@@ -1,0 +1,187 @@
+//! Moduli selection (paper Table I).
+//!
+//! The paper picks, for a data-converter precision `b` and dot-product
+//! length `h`, the *minimum number* of pairwise-coprime moduli below `2^b`
+//! whose product `M` covers `b_out = 2b + log2(h) - 1` bits (Eq. (4)),
+//! choosing the maximum-product set for that count.  This reproduces the
+//! exact Table-I sets, e.g. b=5 → {31, 29, 28, 27} (note: *not* the greedy
+//! {31, 30, 29, 23} — 30 excludes too many later candidates).
+
+pub fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+pub fn pairwise_coprime(moduli: &[u64]) -> bool {
+    for i in 0..moduli.len() {
+        for j in (i + 1)..moduli.len() {
+            if gcd(moduli[i], moduli[j]) != 1 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Eq. (4): bits needed to represent an h-element dot product of
+/// `b_in`-bit × `b_w`-bit signed operands without loss.
+pub fn required_output_bits(b_in: u32, b_w: u32, h: usize) -> u32 {
+    assert!(h > 0);
+    b_in + b_w + (h as f64).log2().ceil() as u32 - 1
+}
+
+/// Max-product pairwise-coprime subset of size `n` from descending `cands`
+/// (branch and bound — candidates are sorted descending so the
+/// `prod * c^remaining` bound prunes aggressively).
+fn best_coprime_subset(cands: &[u64], n: usize) -> (u128, Vec<u64>) {
+    let mut best_prod: u128 = 0;
+    let mut best: Vec<u64> = Vec::new();
+
+    fn dfs(
+        cands: &[u64],
+        n: usize,
+        start: usize,
+        chosen: &mut Vec<u64>,
+        prod: u128,
+        best_prod: &mut u128,
+        best: &mut Vec<u64>,
+    ) {
+        if chosen.len() == n {
+            if prod > *best_prod {
+                *best_prod = prod;
+                *best = chosen.clone();
+            }
+            return;
+        }
+        let remaining = n - chosen.len();
+        for i in start..=cands.len().saturating_sub(remaining) {
+            let c = cands[i];
+            let bound = prod.saturating_mul((c as u128).pow(remaining as u32));
+            if bound <= *best_prod {
+                return; // descending order: nothing later can win
+            }
+            if chosen.iter().all(|&x| gcd(c, x) == 1) {
+                chosen.push(c);
+                dfs(cands, n, i + 1, chosen, prod * c as u128, best_prod, best);
+                chosen.pop();
+            }
+        }
+    }
+
+    let mut chosen = Vec::new();
+    dfs(cands, n, 0, &mut chosen, 1, &mut best_prod, &mut best);
+    (best_prod, best)
+}
+
+/// Table-I selection: minimal-n, max-product moduli under `2^bits` covering
+/// `b_out` for an `h`-long dot product with `b_in = b_w = bits`.
+pub fn select_moduli(bits: u32, h: usize) -> Result<Vec<u64>, String> {
+    assert!((2..=16).contains(&bits), "bits {bits} out of supported range");
+    let b_out = required_output_bits(bits, bits, h);
+    let target: u128 = 1u128 << b_out;
+    let cands: Vec<u64> = (2..(1u64 << bits)).rev().collect();
+    for n in 1..=16 {
+        let (prod, subset) = best_coprime_subset(&cands, n);
+        if prod >= target {
+            return Ok(subset);
+        }
+    }
+    Err(format!("cannot cover {b_out} bits with {bits}-bit moduli"))
+}
+
+/// Append `extra` redundant moduli: the next largest values coprime to the
+/// whole set (RRNS(n, k) with n = k + extra).  Redundant moduli are smaller
+/// than the information moduli, which shrinks the *legitimate range* to the
+/// min product over k-subsets — `RrnsCode::legitimate_range` accounts for
+/// this (see rrns.rs).
+pub fn extend_moduli(moduli: &[u64], extra: usize) -> Result<Vec<u64>, String> {
+    let mut out = moduli.to_vec();
+    let mut cand = *moduli.iter().min().ok_or("empty moduli set")? - 1;
+    for _ in 0..extra {
+        while cand >= 2 && !out.iter().all(|&x| gcd(cand, x) == 1) {
+            cand -= 1;
+        }
+        if cand < 2 {
+            return Err("ran out of coprime candidates for redundancy".into());
+        }
+        out.push(cand);
+        cand -= 1;
+    }
+    Ok(out)
+}
+
+/// The paper's exact Table-I sets (golden values for tests and defaults).
+pub fn paper_table1(bits: u32) -> Option<&'static [u64]> {
+    match bits {
+        4 => Some(&[15, 14, 13, 11]),
+        5 => Some(&[31, 29, 28, 27]),
+        6 => Some(&[63, 62, 61, 59]),
+        7 => Some(&[127, 126, 125]),
+        8 => Some(&[255, 254, 253]),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(17, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(5, 0), 5);
+    }
+
+    #[test]
+    fn eq4_bout() {
+        assert_eq!(required_output_bits(4, 4, 128), 14);
+        assert_eq!(required_output_bits(5, 5, 128), 16);
+        assert_eq!(required_output_bits(6, 6, 128), 18);
+        assert_eq!(required_output_bits(7, 7, 128), 20);
+        assert_eq!(required_output_bits(8, 8, 128), 22);
+    }
+
+    #[test]
+    fn reproduces_paper_table1() {
+        for bits in 4..=8 {
+            let got = select_moduli(bits, 128).unwrap();
+            assert_eq!(got.as_slice(), paper_table1(bits).unwrap(), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn selection_invariants_other_h() {
+        for (bits, h) in [(4u32, 16usize), (5, 64), (6, 256), (8, 64), (8, 512)] {
+            let mods = select_moduli(bits, h).unwrap();
+            assert!(pairwise_coprime(&mods));
+            assert!(mods.iter().all(|&m| m < (1 << bits)));
+            let prod: u128 = mods.iter().map(|&m| m as u128).product();
+            assert!(prod >= (1u128 << required_output_bits(bits, bits, h)));
+        }
+    }
+
+    #[test]
+    fn extend_keeps_coprimality() {
+        let base = paper_table1(8).unwrap();
+        let ext = extend_moduli(base, 3).unwrap();
+        assert_eq!(&ext[..3], base);
+        assert_eq!(ext.len(), 6);
+        assert!(pairwise_coprime(&ext));
+        // redundant moduli stay below the chosen bit width
+        assert!(ext.iter().all(|&m| m < 256));
+    }
+
+    #[test]
+    fn extend_b6_known_values() {
+        // {63,62,61,59} -> next coprime candidates: 58? gcd(58,62)=2; 57?
+        // gcd(57,63)=3; 56? gcd(56,63)=7... 55 coprime to all; then 53.
+        let ext = extend_moduli(paper_table1(6).unwrap(), 2).unwrap();
+        assert_eq!(ext, vec![63, 62, 61, 59, 55, 53]);
+    }
+}

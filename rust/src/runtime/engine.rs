@@ -1,0 +1,79 @@
+//! Execution engines for the per-channel modular matmul — the compute
+//! hot-spot the paper puts on analog hardware.
+//!
+//! Two interchangeable backends sit behind `ModularGemmEngine`:
+//!   * `NativeEngine` — exact i64 + Barrett modular GEMM in rust.  Used by
+//!     the large accuracy sweeps (fast, no shape constraints).
+//!   * `PjrtEngine` (pjrt.rs) — loads the AOT-compiled pallas kernel from
+//!     `artifacts/rns_mvm_b*.hlo.txt` and executes it on the PJRT CPU
+//!     client.  Proves the three-layer composition end-to-end.
+//!
+//! The two are bit-identical by construction (the pallas kernel's blocked
+//! f32 accumulation is exact below 2^24 — see DESIGN.md §7), which the
+//! integration tests assert.
+
+use crate::tensor::gemm::gemm_mod;
+use crate::tensor::MatI;
+
+/// Batched per-channel modular matmul: for each channel i,
+/// `out[i] = (x_res[i] @ w_res[i]) mod moduli[i]`.
+/// NOTE: not `Send` — the PJRT client wraps thread-local FFI state, so
+/// engines must be constructed inside the thread that uses them (the
+/// coordinator's worker threads each build their own engine).
+pub trait ModularGemmEngine {
+    /// `x_res[i]`: (B, K) residues; `w_res[i]`: (K, N) residues.
+    fn matmul_mod(&mut self, x_res: &[MatI], w_res: &[MatI], moduli: &[u64]) -> Vec<MatI>;
+
+    /// Human-readable backend name (for reports/metrics).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust exact modular GEMM engine.
+#[derive(Default)]
+pub struct NativeEngine;
+
+impl ModularGemmEngine for NativeEngine {
+    fn matmul_mod(&mut self, x_res: &[MatI], w_res: &[MatI], moduli: &[u64]) -> Vec<MatI> {
+        assert_eq!(x_res.len(), moduli.len());
+        assert_eq!(w_res.len(), moduli.len());
+        moduli
+            .iter()
+            .zip(x_res.iter().zip(w_res))
+            .map(|(&m, (x, w))| gemm_mod(x, w, m))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::RnsContext;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_engine_matches_crt_exactness() {
+        let ctx = RnsContext::new(&[63, 62, 61, 59]).unwrap();
+        let mut rng = Rng::seed_from(1);
+        let (b, k, n) = (3usize, 64usize, 5usize);
+        let x = MatI::from_vec(b, k, (0..b * k).map(|_| rng.gen_range_i64(-31, 31)).collect());
+        let w = MatI::from_vec(k, n, (0..k * n).map(|_| rng.gen_range_i64(-31, 31)).collect());
+        let xr: Vec<MatI> =
+            ctx.moduli.iter().map(|&m| x.map(|v| v.rem_euclid(m as i64))).collect();
+        let wr: Vec<MatI> =
+            ctx.moduli.iter().map(|&m| w.map(|v| v.rem_euclid(m as i64))).collect();
+        let mut eng = NativeEngine;
+        let out = eng.matmul_mod(&xr, &wr, &ctx.moduli);
+        // CRT across channels == exact integer matmul
+        let exact = crate::tensor::gemm::gemm_i64(&x, &w);
+        for r in 0..b {
+            for c in 0..n {
+                let res: Vec<u64> = out.iter().map(|ch| ch.at(r, c) as u64).collect();
+                assert_eq!(ctx.crt_signed(&res), exact.at(r, c) as i128);
+            }
+        }
+    }
+}

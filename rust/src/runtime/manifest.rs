@@ -1,0 +1,94 @@
+//! `artifacts/manifest.txt` parser — key=value metadata written by aot.py
+//! (shapes + per-bit-width moduli) so the rust loader can validate what
+//! was baked into each HLO artifact without a serde dependency.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub h: usize,
+    /// bits -> Table-I moduli baked into `rns_mvm_b{bits}.hlo.txt`.
+    pub moduli: BTreeMap<u32, Vec<u64>>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut batch = None;
+        let mut h = None;
+        let mut moduli = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: `{line}`", i + 1))?;
+            match k {
+                "batch" => batch = Some(v.parse::<usize>().context("batch")?),
+                "h" => h = Some(v.parse::<usize>().context("h")?),
+                _ if k.starts_with("moduli_b") => {
+                    let bits: u32 = k["moduli_b".len()..].parse().context("bits suffix")?;
+                    let mods = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<u64>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .with_context(|| format!("moduli list for b={bits}"))?;
+                    moduli.insert(bits, mods);
+                }
+                other => return Err(anyhow!("manifest: unknown key `{other}`")),
+            }
+        }
+        Ok(Manifest {
+            batch: batch.ok_or_else(|| anyhow!("manifest missing `batch`"))?,
+            h: h.ok_or_else(|| anyhow!("manifest missing `h`"))?,
+            moduli,
+        })
+    }
+
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let path = format!("{artifacts_dir}/manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse("batch=8\nh=128\nmoduli_b6=63,62,61,59\nmoduli_b8=255,254,253\n")
+            .unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.h, 128);
+        assert_eq!(m.moduli[&6], vec![63, 62, 61, 59]);
+        assert_eq!(m.moduli[&8], vec![255, 254, 253]);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("h=128").is_err());
+        assert!(Manifest::parse("batch=8\nh=128\nnonsense=1").is_err());
+        assert!(Manifest::parse("batch=8\nh=128\nmoduli_b6=63,abc").is_err());
+    }
+
+    #[test]
+    fn real_manifest_matches_table1() {
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if std::path::Path::new(&format!("{dir}/manifest.txt")).exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for bits in 4..=8u32 {
+                assert_eq!(
+                    m.moduli[&bits].as_slice(),
+                    crate::rns::paper_table1(bits).unwrap(),
+                    "b={bits}"
+                );
+            }
+        }
+    }
+}

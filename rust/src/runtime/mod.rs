@@ -1,0 +1,19 @@
+//! Runtime layer: the pluggable modular-GEMM engines (native rust and the
+//! PJRT-loaded AOT pallas kernel) plus the artifact manifest loader.
+
+pub mod engine;
+pub mod manifest;
+pub mod pjrt;
+
+pub use engine::{ModularGemmEngine, NativeEngine};
+pub use manifest::Manifest;
+pub use pjrt::{F32Input, PjrtEngine, PjrtExecutable, PjrtRuntime};
+
+/// Default artifacts directory (relative to the workspace root).
+pub fn default_artifacts_dir() -> String {
+    std::env::var("RNS_ARTIFACTS_DIR").unwrap_or_else(|_| {
+        // when run via cargo, resolve relative to the manifest dir
+        let manifest = env!("CARGO_MANIFEST_DIR");
+        format!("{manifest}/artifacts")
+    })
+}

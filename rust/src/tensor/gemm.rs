@@ -1,0 +1,175 @@
+//! GEMM kernels: f32 reference (the paper's "FP32 ground truth"), exact
+//! i64, and the modular i64 GEMM that models one analog residue channel.
+//!
+//! Layout convention everywhere: `y = x @ w` with x: (B, K), w: (K, N),
+//! y: (B, N) — matching the jax side.  Inner loops are written in the
+//! i-k-j order so the w row stays in cache and the compiler can
+//! autovectorize the j loop.
+
+use super::{MatF, MatI};
+use crate::rns::BarrettReducer;
+
+/// f32 GEMM: y = x @ w (the FP32 baseline all accuracy is normalized to).
+pub fn gemm_f32(x: &MatF, w: &MatF) -> MatF {
+    assert_eq!(x.cols, w.rows, "gemm shape mismatch");
+    let mut y = MatF::zeros(x.rows, w.cols);
+    for i in 0..x.rows {
+        let xrow = x.row(i);
+        let yrow = y.row_mut(i);
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = w.row(k);
+            for j in 0..wrow.len() {
+                yrow[j] += xv * wrow[j];
+            }
+        }
+    }
+    y
+}
+
+/// Exact integer GEMM: y = x @ w in i64 (overflow-checked in debug).
+pub fn gemm_i64(x: &MatI, w: &MatI) -> MatI {
+    assert_eq!(x.cols, w.rows, "gemm shape mismatch");
+    let mut y = MatI::zeros(x.rows, w.cols);
+    for i in 0..x.rows {
+        let xrow = x.row(i);
+        let yrow = y.row_mut(i);
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let wrow = w.row(k);
+            for j in 0..wrow.len() {
+                yrow[j] = yrow[j]
+                    .checked_add(xv.checked_mul(wrow[j]).expect("gemm_i64 mul overflow"))
+                    .expect("gemm_i64 add overflow");
+            }
+        }
+    }
+    y
+}
+
+/// Modular GEMM for one residue channel: `y = (x @ w) mod m` with inputs
+/// already reduced (`< m`).  This is the digital twin of one analog MVM
+/// unit + analog modulo in the paper's Fig. 2 — and the rust-native
+/// counterpart of the pallas kernel (bit-identical by construction).
+///
+/// Accumulates u64 partial sums and Barrett-reduces every `block` rows so
+/// the accumulator never overflows: with residues < 2^8 and block = 2^16,
+/// partial sums stay below 2^32 + m.
+pub fn gemm_mod(x: &MatI, w: &MatI, m: u64) -> MatI {
+    assert_eq!(x.cols, w.rows, "gemm shape mismatch");
+    let red = BarrettReducer::new(m);
+    // residue products < m^2; accumulate `block` of them below 2^63
+    let block = ((u64::MAX >> 1) / (m * m).max(1)).min(1 << 20).max(1) as usize;
+    let mut y = MatI::zeros(x.rows, w.cols);
+    // Perf (§Perf log): stage w as u32 once per call so the inner loop is
+    // u32*u32->u64 widening multiply-add, which the autovectorizer turns
+    // into vpmuludq lanes (i64*i64 has no AVX2 vector multiply).
+    debug_assert!(m < (1 << 32));
+    let w32: Vec<u32> = w
+        .data
+        .iter()
+        .map(|&v| {
+            debug_assert!((0..m as i64).contains(&v), "w residue out of range");
+            v as u32
+        })
+        .collect();
+    let mut acc: Vec<u64> = vec![0; w.cols];
+    for i in 0..x.rows {
+        acc.iter_mut().for_each(|a| *a = 0);
+        let xrow = x.row(i);
+        let mut since_reduce = 0usize;
+        for (k, &xv) in xrow.iter().enumerate() {
+            debug_assert!((0..m as i64).contains(&xv), "x residue out of range");
+            let xv = xv as u64;
+            if xv != 0 {
+                let wrow = &w32[k * w.cols..(k + 1) * w.cols];
+                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                    *a += xv * wv as u64;
+                }
+            }
+            since_reduce += 1;
+            if since_reduce == block {
+                for a in acc.iter_mut() {
+                    *a = red.reduce(*a);
+                }
+                since_reduce = 0;
+            }
+        }
+        let yrow = y.row_mut(i);
+        for j in 0..yrow.len() {
+            yrow[j] = red.reduce(acc[j]) as i64;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{prop_assert_eq, run_prop};
+    use crate::util::rng::Rng;
+
+    fn rand_mat_i(rng: &mut Rng, rows: usize, cols: usize, lo: i64, hi: i64) -> MatI {
+        let data = (0..rows * cols).map(|_| rng.gen_range_i64(lo, hi)).collect();
+        MatI::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn gemm_f32_known() {
+        let x = MatF::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let w = MatF::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        assert_eq!(gemm_f32(&x, &w).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn gemm_i64_known() {
+        let x = MatI::from_vec(1, 3, vec![1, -2, 3]);
+        let w = MatI::from_vec(3, 2, vec![4, 0, 0, 5, 1, 1]);
+        assert_eq!(gemm_i64(&x, &w).data, vec![7, -7]);
+    }
+
+    #[test]
+    fn gemm_mod_matches_i64_then_mod_prop() {
+        run_prop("gemm_mod == gemm_i64 % m", 40, |rng| {
+            let m = [11u64, 59, 63, 127, 253, 255][rng.gen_range(6) as usize];
+            let b = 1 + rng.gen_range(4) as usize;
+            let k = 1 + rng.gen_range(200) as usize;
+            let n = 1 + rng.gen_range(16) as usize;
+            let x = rand_mat_i(rng, b, k, 0, m as i64 - 1);
+            let w = rand_mat_i(rng, k, n, 0, m as i64 - 1);
+            let exact = gemm_i64(&x, &w);
+            let want: Vec<i64> = exact.data.iter().map(|&v| v.rem_euclid(m as i64)).collect();
+            prop_assert_eq(gemm_mod(&x, &w, m).data, want, &format!("m={m} k={k}"))
+        });
+    }
+
+    #[test]
+    fn gemm_mod_identity() {
+        // x @ I mod m == x mod m
+        let m = 63u64;
+        let x = MatI::from_vec(2, 3, vec![1, 62, 5, 0, 33, 17]);
+        let mut ident = MatI::zeros(3, 3);
+        for i in 0..3 {
+            ident.set(i, i, 1);
+        }
+        assert_eq!(gemm_mod(&x, &ident, m).data, x.data);
+    }
+
+    #[test]
+    fn zero_k_dimension() {
+        let x = MatF::zeros(2, 0);
+        let w = MatF::zeros(0, 3);
+        let y = gemm_f32(&x, &w);
+        assert_eq!(y.data, vec![0.0; 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_shapes_panic() {
+        gemm_f32(&MatF::zeros(2, 3), &MatF::zeros(4, 2));
+    }
+}

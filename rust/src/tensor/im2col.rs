@@ -1,0 +1,173 @@
+//! im2col lowering: convolution as GEMM.
+//!
+//! This is how the analog accelerator executes conv layers — the paper's
+//! MVM units only see matrices, so conv weights (HWIO) become a
+//! (kh*kw*cin, cout) matrix and every output pixel becomes a patch row.
+//! Layouts match `jax.lax.conv_general_dilated(NHWC, HWIO, NHWC)` with
+//! SAME padding, which is what model.py trains with.
+
+use super::{MatF, Nhwc};
+
+/// Padding mode matching the jax string options we use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+/// Output spatial size for a conv dimension.
+pub fn conv_out_dim(input: usize, kernel: usize, stride: usize, pad: Padding) -> usize {
+    match pad {
+        Padding::Same => input.div_ceil(stride),
+        Padding::Valid => (input + 1).saturating_sub(kernel).div_ceil(stride),
+    }
+}
+
+/// Lower an NHWC input to the im2col patch matrix:
+/// rows = n * out_h * out_w, cols = kh * kw * c (column order matches the
+/// HWIO weight reshape: kernel-row major, then kernel-col, then channel).
+pub fn im2col(input: &Nhwc, kh: usize, kw: usize, stride: usize, pad: Padding) -> MatF {
+    let out_h = conv_out_dim(input.h, kh, stride, pad);
+    let out_w = conv_out_dim(input.w, kw, stride, pad);
+    // SAME padding offsets (jax convention: total pad = max((out-1)*s + k - in, 0))
+    let (pad_top, pad_left) = match pad {
+        Padding::Valid => (0isize, 0isize),
+        Padding::Same => {
+            let pad_h = ((out_h - 1) * stride + kh).saturating_sub(input.h);
+            let pad_w = ((out_w - 1) * stride + kw).saturating_sub(input.w);
+            ((pad_h / 2) as isize, (pad_w / 2) as isize)
+        }
+    };
+    let mut out = MatF::zeros(input.n * out_h * out_w, kh * kw * input.c);
+    for b in 0..input.n {
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                let row_idx = (b * out_h + oy) * out_w + ox;
+                let row = out.row_mut(row_idx);
+                for ky in 0..kh {
+                    let iy = (oy * stride) as isize + ky as isize - pad_top;
+                    if iy < 0 || iy >= input.h as isize {
+                        continue; // zero padding
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride) as isize + kx as isize - pad_left;
+                        if ix < 0 || ix >= input.w as isize {
+                            continue;
+                        }
+                        let src = input.idx(b, iy as usize, ix as usize, 0);
+                        let dst = (ky * kw + kx) * input.c;
+                        row[dst..dst + input.c]
+                            .copy_from_slice(&input.data[src..src + input.c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fold a (n*out_h*out_w, cout) GEMM result back into NHWC.
+pub fn col2im(cols: &MatF, n: usize, out_h: usize, out_w: usize) -> Nhwc {
+    assert_eq!(cols.rows, n * out_h * out_w);
+    Nhwc::from_vec(n, out_h, out_w, cols.cols, cols.data.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm::gemm_f32;
+
+    /// Direct (naive) conv reference for validating the im2col path.
+    fn conv_direct(input: &Nhwc, w: &[f32], kh: usize, kw: usize, cout: usize, pad: Padding) -> Nhwc {
+        let cin = input.c;
+        let out_h = conv_out_dim(input.h, kh, 1, pad);
+        let out_w = conv_out_dim(input.w, kw, 1, pad);
+        let (pt, pl) = match pad {
+            Padding::Valid => (0isize, 0isize),
+            Padding::Same => (
+                (((out_h - 1) + kh).saturating_sub(input.h) / 2) as isize,
+                (((out_w - 1) + kw).saturating_sub(input.w) / 2) as isize,
+            ),
+        };
+        let mut out = Nhwc::zeros(input.n, out_h, out_w, cout);
+        for b in 0..input.n {
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    for co in 0..cout {
+                        let mut acc = 0.0f32;
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let iy = oy as isize + ky as isize - pt;
+                                let ix = ox as isize + kx as isize - pl;
+                                if iy < 0 || ix < 0 || iy >= input.h as isize || ix >= input.w as isize {
+                                    continue;
+                                }
+                                for ci in 0..cin {
+                                    // HWIO: w[ky][kx][ci][co]
+                                    let wv = w[((ky * kw + kx) * cin + ci) * cout + co];
+                                    acc += input.at(b, iy as usize, ix as usize, ci) * wv;
+                                }
+                            }
+                        }
+                        out.set(b, oy, ox, co, acc);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_out_dims() {
+        assert_eq!(conv_out_dim(28, 3, 1, Padding::Same), 28);
+        assert_eq!(conv_out_dim(28, 3, 1, Padding::Valid), 26);
+        assert_eq!(conv_out_dim(28, 3, 2, Padding::Same), 14);
+    }
+
+    #[test]
+    fn im2col_matches_direct_conv() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(11);
+        for (hh, ww, cin, cout, kh, kw, pad) in [
+            (5usize, 5usize, 1usize, 2usize, 3usize, 3usize, Padding::Same),
+            (6, 4, 3, 4, 3, 3, Padding::Same),
+            (7, 7, 2, 3, 3, 3, Padding::Valid),
+            (4, 4, 1, 1, 1, 1, Padding::Same),
+        ] {
+            let input = Nhwc::from_vec(
+                2, hh, ww, cin,
+                (0..2 * hh * ww * cin).map(|_| rng.uniform_f32(-1.0, 1.0)).collect(),
+            );
+            let wdata: Vec<f32> =
+                (0..kh * kw * cin * cout).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+            let patches = im2col(&input, kh, kw, 1, pad);
+            let wmat = MatF::from_vec(kh * kw * cin, cout, wdata.clone());
+            let y = gemm_f32(&patches, &wmat);
+            let out_h = conv_out_dim(hh, kh, 1, pad);
+            let out_w = conv_out_dim(ww, kw, 1, pad);
+            let got = col2im(&y, 2, out_h, out_w);
+            let want = conv_direct(&input, &wdata, kh, kw, cout, pad);
+            assert_eq!(got.h, want.h);
+            for (a, b) in got.data.iter().zip(&want.data) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b} (pad {pad:?})");
+            }
+        }
+    }
+
+    #[test]
+    fn patch_column_order_is_hwio_compatible() {
+        // single pixel input, 1x1 kernel: patch == input channels in order
+        let input = Nhwc::from_vec(1, 1, 1, 3, vec![1.0, 2.0, 3.0]);
+        let p = im2col(&input, 1, 1, 1, Padding::Same);
+        assert_eq!(p.data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn zero_padding_regions_are_zero() {
+        let input = Nhwc::from_vec(1, 2, 2, 1, vec![1.0; 4]);
+        let p = im2col(&input, 3, 3, 1, Padding::Same);
+        // top-left output patch: kernel row 0 is fully in padding
+        let row = p.row(0);
+        assert_eq!(&row[0..3], &[0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal dense tensor substrate: row-major matrices (f32 / i64) and NHWC
+//! image tensors, with the GEMM / im2col machinery the nn layers build on.
+//!
+//! Deliberately small: the accelerator simulator needs exact integer GEMMs
+//! and f32 reference GEMMs, not a full ndarray library.
+
+pub mod gemm;
+pub mod im2col;
+
+/// Row-major 2-D matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix<T> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Self {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+
+    /// Map elementwise into a (possibly different-typed) matrix.
+    pub fn map<U: Copy + Default, F: Fn(T) -> U>(&self, f: F) -> Matrix<U> {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Horizontal slice of columns `[c0, c1)` (copied).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Self {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(self.rows, c1 - c0);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    /// Vertical slice of rows `[r0, r1)` (copied).
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Self {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+}
+
+pub type MatF = Matrix<f32>;
+pub type MatI = Matrix<i64>;
+
+impl MatF {
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+}
+
+/// NHWC 4-D tensor (batch, height, width, channels) for the conv layers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Nhwc {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Nhwc {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Nhwc { n, h, w, c, data: vec![0.0; n * h * w * c] }
+    }
+
+    pub fn from_vec(n: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * h * w * c, "shape/data mismatch");
+        Nhwc { n, h, w, c, data }
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, b: usize, y: usize, x: usize, ch: usize) -> usize {
+        ((b * self.h + y) * self.w + x) * self.c + ch
+    }
+
+    #[inline(always)]
+    pub fn at(&self, b: usize, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[self.idx(b, y, x, ch)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, b: usize, y: usize, x: usize, ch: usize, v: f32) {
+        let i = self.idx(b, y, x, ch);
+        self.data[i] = v;
+    }
+
+    /// Flatten to (n, h*w*c) — matches jax's `reshape((B, -1))` on NHWC.
+    pub fn flatten(&self) -> MatF {
+        MatF::from_vec(self.n, self.h * self.w * self.c, self.data.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_indexing_row_major() {
+        let m = MatF::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 0), 1.);
+        assert_eq!(m.at(0, 2), 3.);
+        assert_eq!(m.at(1, 0), 4.);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = MatF::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(2, 1), 6.);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn slices() {
+        let m = MatF::from_vec(3, 4, (0..12).map(|x| x as f32).collect());
+        let c = m.slice_cols(1, 3);
+        assert_eq!(c.cols, 2);
+        assert_eq!(c.row(2), &[9., 10.]);
+        let r = m.slice_rows(1, 2);
+        assert_eq!(r.rows, 1);
+        assert_eq!(r.row(0), &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let m = MatF::from_vec(1, 3, vec![1.4, 2.6, -3.5]);
+        let i: MatI = m.map(|x| x.round() as i64);
+        assert_eq!(i.data, vec![1, 3, -4]);
+    }
+
+    #[test]
+    fn nhwc_layout_matches_flatten() {
+        let mut t = Nhwc::zeros(1, 2, 2, 3);
+        t.set(0, 1, 0, 2, 7.0);
+        let flat = t.flatten();
+        // NHWC row-major: index = ((y*W)+x)*C + c = ((1*2)+0)*3+2 = 8
+        assert_eq!(flat.at(0, 8), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        MatF::from_vec(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let m = MatF::from_vec(1, 4, vec![0.5, -2.5, 1.0, 2.0]);
+        assert_eq!(m.max_abs(), 2.5);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal argv parser (the image vendors no `clap`).
+//!
+//! Grammar: `prog <subcommand> [positional...] [--flag] [--key=value | --key value]`.
+//! Unknown flags are an error so typos fail loudly in experiment scripts.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags the command declares; used for unknown-flag detection.
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable without touching env).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self, String> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env() -> Result<Self, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Declare a flag as known (for `check_unknown`), returning self for chaining.
+    pub fn declare(&mut self, name: &str) -> &mut Self {
+        self.known.push(name.to_string());
+        self
+    }
+
+    /// Error if any present flag was never declared.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !self.known.iter().any(|n| n == k) {
+                return Err(format!("unknown flag --{k} (known: {})", self.known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.declare(name);
+        self.flags.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn get(&mut self, name: &str) -> Option<String> {
+        self.declare(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn get_or(&mut self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+
+    /// Parse a comma-separated list flag, e.g. `--bits=4,6,8`.
+    pub fn get_list<T: std::str::FromStr>(&mut self, name: &str, default: &[T]) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<T>().map_err(|e| format!("--{name}: `{s}`: {e}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let mut a = Args::parse_from(toks("exp fig3 --bits=4,6 --seed 7 --verbose")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert_eq!(a.get_list::<u32>("bits", &[8]).unwrap(), vec![4, 6]);
+        assert_eq!(a.get_parsed::<u64>("seed", 0).unwrap(), 7);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse_from(toks("serve")).unwrap();
+        assert_eq!(a.get_parsed::<u32>("port", 8080).unwrap(), 8080);
+        assert_eq!(a.get_or("model", "mlp"), "mlp");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let mut a = Args::parse_from(toks("exp --bogus=1")).unwrap();
+        a.declare("bits");
+        assert!(a.check_unknown().is_err());
+        let mut b = Args::parse_from(toks("exp --bits=4")).unwrap();
+        b.declare("bits");
+        assert!(b.check_unknown().is_ok());
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let mut a = Args::parse_from(toks("x --n=abc")).unwrap();
+        assert!(a.get_parsed::<u32>("n", 1).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        // `--flag value`: value is consumed as the flag's value
+        let mut a = Args::parse_from(toks("exp --fast fig5")).unwrap();
+        assert_eq!(a.get_or("fast", ""), "fig5");
+        assert!(a.positional.is_empty());
+    }
+}

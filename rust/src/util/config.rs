@@ -1,0 +1,250 @@
+//! TOML-subset config loader (the image vendors no `serde`/`toml`).
+//!
+//! Supported grammar — enough for accelerator config files:
+//!   * `[section]` headers (nesting via `[a.b]`)
+//!   * `key = value` with value ∈ {integer, float, bool, "string", [list]}
+//!   * `#` comments, blank lines
+//!
+//! Values are exposed through typed getters with dotted-path lookup
+//! (`core.bits`). The parser is strict: malformed lines are errors, not
+//! silently skipped.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<Value>),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "\"{v}\""),
+            Value::List(vs) => {
+                write!(f, "[")?;
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(s: &str, line_no: usize) -> Result<Value, String> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_scalar(part, line_no)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("line {line_no}: cannot parse value `{s}`"))
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = match raw.find('#') {
+                // don't treat '#' inside quotes as comment start
+                Some(pos) if !raw[..pos].contains('"') => &raw[..pos],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {line_no}: unterminated section header"));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {line_no}: empty section name"));
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {line_no}: expected `key = value`, got `{line}`"))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.split('.').any(|p| p.is_empty()) {
+                return Err(format!("line {line_no}: bad key `{key}`"));
+            }
+            cfg.entries.insert(key, parse_scalar(v, line_no)?);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.entries.get(key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+
+    pub fn float(&self, key: &str) -> Option<f64> {
+        match self.entries.get(key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.entries.get(key) {
+            Some(Value::Bool(v)) => *v,
+            _ => default,
+        }
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.entries.get(key) {
+            Some(Value::Str(v)) => v.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn int_list(&self, key: &str) -> Option<Vec<i64>> {
+        match self.entries.get(key) {
+            Some(Value::List(vs)) => vs
+                .iter()
+                .map(|v| if let Value::Int(i) = v { Some(*i) } else { None })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# accelerator config
+name = "rns-demo"
+[core]
+bits = 6
+h = 128
+noise_p = 1e-4
+rrns = true
+moduli = [63, 62, 61, 59]
+[serve]
+max_batch = 8
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "rns-demo");
+        assert_eq!(c.int_or("core.bits", 0), 6);
+        assert_eq!(c.int_or("core.h", 0), 128);
+        assert!((c.float_or("core.noise_p", 0.0) - 1e-4).abs() < 1e-12);
+        assert!(c.bool_or("core.rrns", false));
+        assert_eq!(c.int_list("core.moduli").unwrap(), vec![63, 62, 61, 59]);
+        assert_eq!(c.int_or("serve.max_batch", 0), 8);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.float_or("x", 0.0), 3.0);
+        // but a float does not masquerade as int
+        let c = Config::parse("y = 3.5").unwrap();
+        assert_eq!(c.int("y"), None);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::parse("just_a_word").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("k = @nonsense").is_err());
+        assert!(Config::parse("[]").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let c = Config::parse("# hi\n\na = 1 # trailing\n").unwrap();
+        assert_eq!(c.int_or("a", 0), 1);
+    }
+
+    #[test]
+    fn empty_list() {
+        let c = Config::parse("xs = []").unwrap();
+        assert_eq!(c.int_list("xs").unwrap(), Vec::<i64>::new());
+    }
+}

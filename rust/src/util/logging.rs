@@ -1,0 +1,118 @@
+//! Minimal leveled logger (no `log`/`env_logger` facade wiring needed for
+//! a single binary; the vendored `log` crate is unused by our deps' public
+//! APIs).  Level comes from `RNS_LOG` (error|warn|info|debug|trace),
+//! default `info`.  Output goes to stderr with a monotonic timestamp so
+//! serving logs interleave meaningfully across threads.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, PartialOrd)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static INIT: OnceLock<()> = OnceLock::new();
+
+/// Initialize from `RNS_LOG` (idempotent; called lazily by `enabled`).
+pub fn init() {
+    INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("RNS_LOG") {
+            if let Some(l) = Level::parse(&v) {
+                MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+            }
+        }
+        EPOCH.get_or_init(Instant::now);
+    });
+}
+
+/// Override the level programmatically (tests, CLI flags).
+pub fn set_level(level: Level) {
+    init();
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    init();
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Core emit function used by the macros.
+pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = EPOCH.get_or_init(Instant::now).elapsed();
+    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), level.tag(), target, msg);
+}
+
+#[macro_export]
+macro_rules! log_error { ($tgt:expr, $($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Error, $tgt, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($tgt:expr, $($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Warn, $tgt, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_info { ($tgt:expr, $($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Info, $tgt, format_args!($($arg)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($tgt:expr, $($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Debug, $tgt, format_args!($($arg)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        // restore default for other tests
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn emit_does_not_panic() {
+        set_level(Level::Info);
+        emit(Level::Info, "test", format_args!("hello {}", 42));
+        emit(Level::Trace, "test", format_args!("filtered"));
+    }
+}

@@ -1,0 +1,46 @@
+//! Shared infrastructure substrates: PRNG, statistics, CLI parsing, config
+//! files, and property-testing — all hand-rolled because the offline image
+//! vendors no `rand`/`clap`/`serde`/`proptest`.
+
+pub mod cli;
+pub mod config;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a `f64` in engineering notation with an SI-ish suffix
+/// (used by the energy reports: fJ/pJ/nJ/µJ).
+pub fn format_si(value: f64, unit: &str) -> String {
+    let (scaled, prefix) = if value == 0.0 {
+        (0.0, "")
+    } else {
+        let exp = value.abs().log10().floor() as i32;
+        match exp {
+            i32::MIN..=-16 => (value * 1e18, "a"),
+            -15..=-13 => (value * 1e15, "f"),
+            -12..=-10 => (value * 1e12, "p"),
+            -9..=-7 => (value * 1e9, "n"),
+            -6..=-4 => (value * 1e6, "µ"),
+            -3..=-1 => (value * 1e3, "m"),
+            0..=2 => (value, ""),
+            3..=5 => (value * 1e-3, "k"),
+            6..=8 => (value * 1e-6, "M"),
+            _ => (value * 1e-9, "G"),
+        }
+    };
+    format!("{scaled:.3} {prefix}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(format_si(1.5e-15, "J"), "1.500 fJ");
+        assert_eq!(format_si(2.0e-12, "J"), "2.000 pJ");
+        assert_eq!(format_si(0.0, "J"), "0.000 J");
+        assert_eq!(format_si(4.2e6, "Op/s"), "4.200 MOp/s");
+    }
+}

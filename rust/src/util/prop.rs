@@ -1,0 +1,104 @@
+//! Minimal property-testing harness (the image vendors no `proptest`).
+//!
+//! `run_prop` drives a seeded generator through N cases; on failure it
+//! reports the failing seed so the case replays deterministically:
+//!
+//! ```ignore
+//! run_prop("crt roundtrip", 500, |rng| {
+//!     let a = rng.gen_range_i64(-1000, 1000);
+//!     prop_assert(ctx.crt_signed(&ctx.forward(a)) == a, &format!("a={a}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper producing a `PropResult`.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert two values are equal, formatting both on failure.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` property cases with per-case derived seeds.  Panics with the
+/// failing case's seed + message on the first failure.
+pub fn run_prop<F: FnMut(&mut Rng) -> PropResult>(name: &str, cases: u64, mut f: F) {
+    run_prop_seeded(name, cases, 0xC0FFEE, &mut f)
+}
+
+/// Like `run_prop` but with an explicit base seed (for replaying failures).
+pub fn run_prop_seeded<F: FnMut(&mut Rng) -> PropResult>(
+    name: &str,
+    cases: u64,
+    base_seed: u64,
+    f: &mut F,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::seed_from(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case} (replay: run_prop_seeded(\"{name}\", 1, {seed:#x}, ..)):\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run_prop("trivial", 25, |rng| {
+            count += 1;
+            prop_assert(rng.gen_range(10) < 10, "in range")
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        run_prop("fails", 10, |rng| {
+            let v = rng.gen_range(100);
+            prop_assert(v < 1, &format!("v={v}"))
+        });
+    }
+
+    #[test]
+    fn prop_assert_eq_formats() {
+        assert!(prop_assert_eq(1, 1, "x").is_ok());
+        let err = prop_assert_eq(1, 2, "x").unwrap_err();
+        assert!(err.contains("1 != 2"));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        run_prop("collect", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        run_prop("collect", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

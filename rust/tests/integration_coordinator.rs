@@ -1,0 +1,184 @@
+//! Integration tests for the L3 coordinator: batching, multi-worker
+//! dispatch, RNS backends under serving load, and fault surfacing.
+//!
+//! Model-dependent tests skip silently when `make artifacts` has not run.
+
+use std::time::Duration;
+
+use rns_analog::analog::NoiseModel;
+use rns_analog::coordinator::{BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
+use rns_analog::nn::dataset::load_eval_set;
+use rns_analog::nn::models::Batch;
+use rns_analog::tensor::Nhwc;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/models/mlp.rt", artifacts_dir())).exists()
+}
+
+fn img(n: usize) -> Batch {
+    Batch::Images(Nhwc::zeros(n, 28, 28, 1))
+}
+
+#[test]
+fn serves_through_rns_core() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = CoordinatorConfig::new(
+        BackendKind::Rns { bits: 6, redundant: 0, attempts: 1, noise: NoiseModel::None },
+        &artifacts_dir(),
+    );
+    cfg.workers = 2;
+    let coord = Coordinator::start(cfg);
+    for _ in 0..12 {
+        coord.submit("mlp", img(1));
+    }
+    let resps = coord.collect(12);
+    assert!(resps.iter().all(|r| r.result.is_ok()));
+    // both workers should have participated under round-robin dispatch
+    let workers: std::collections::BTreeSet<usize> = resps.iter().map(|r| r.worker).collect();
+    assert!(!workers.is_empty());
+    let report = coord.shutdown();
+    assert!(report.contains("requests=12"));
+}
+
+#[test]
+fn rns_predictions_match_direct_inference() {
+    if !have_artifacts() {
+        return;
+    }
+    // serving through the coordinator must yield the same logits as direct
+    // single-threaded inference with an identical core (clean, no noise)
+    use rns_analog::analog::{RnsCore, RnsCoreConfig};
+    use rns_analog::nn::models::load_model;
+
+    let eval = load_eval_set(&artifacts_dir(), "digits").unwrap().take(4);
+    let imgs = match &eval.input {
+        Batch::Images(t) => t.clone(),
+        _ => unreachable!(),
+    };
+    let model = load_model(&artifacts_dir(), "mlp").unwrap();
+    let mut core = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+    let direct = model.forward(&Batch::Images(imgs.clone()), &mut core);
+
+    let cfg = CoordinatorConfig::new(
+        BackendKind::Rns { bits: 6, redundant: 0, attempts: 1, noise: NoiseModel::None },
+        &artifacts_dir(),
+    );
+    let coord = Coordinator::start(cfg);
+    let id = coord.submit("mlp", Batch::Images(imgs));
+    let resp = coord.recv_timeout(Duration::from_secs(60)).expect("response");
+    assert_eq!(resp.id, id);
+    let served = resp.result.unwrap();
+    assert_eq!(served.data, direct.data, "served logits must equal direct inference");
+    coord.shutdown();
+}
+
+#[test]
+fn batcher_aggregates_under_load() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, &artifacts_dir());
+    cfg.workers = 1;
+    cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(50) };
+    let coord = Coordinator::start(cfg);
+    for _ in 0..32 {
+        coord.submit("mlp", img(1));
+    }
+    let resps = coord.collect(32);
+    assert_eq!(resps.len(), 32);
+    let report = coord.shutdown();
+    // 32 single-sample requests at max_batch 8 -> roughly 4-8 batches, far
+    // fewer than 32 (dynamic batching actually happened)
+    assert!(report.contains("batches="));
+    let batches: u64 = report
+        .split("batches=")
+        .nth(1)
+        .unwrap()
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(batches <= 16, "expected aggregation, got {batches} batches");
+}
+
+#[test]
+fn mixed_models_served_concurrently() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, &artifacts_dir());
+    cfg.workers = 2;
+    let coord = Coordinator::start(cfg);
+    let tokens = Batch::Tokens { tokens: vec![1; 32], batch: 1, seq: 32 };
+    let mut expected = Vec::new();
+    for i in 0..10 {
+        if i % 2 == 0 {
+            expected.push((coord.submit("mlp", img(1)), 10usize));
+        } else {
+            expected.push((coord.submit("bert", tokens_clone(&tokens)), 4usize));
+        }
+    }
+    let resps = coord.collect(10);
+    for r in &resps {
+        let (_, classes) = expected.iter().find(|(id, _)| *id == r.id).unwrap();
+        assert_eq!(r.result.as_ref().unwrap().cols, *classes);
+    }
+    coord.shutdown();
+}
+
+fn tokens_clone(b: &Batch) -> Batch {
+    match b {
+        Batch::Tokens { tokens, batch, seq } => {
+            Batch::Tokens { tokens: tokens.clone(), batch: *batch, seq: *seq }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn noisy_rrns_backend_serves_and_reports_faults() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = CoordinatorConfig::new(
+        BackendKind::Rns {
+            bits: 8,
+            redundant: 2,
+            attempts: 2,
+            noise: NoiseModel::ResidueFlip { p: 0.02 },
+        },
+        &artifacts_dir(),
+    );
+    cfg.workers = 1;
+    let coord = Coordinator::start(cfg);
+    for _ in 0..4 {
+        coord.submit("mlp", img(1));
+    }
+    let resps = coord.collect(4);
+    assert!(resps.iter().all(|r| r.result.is_ok()));
+    let report = coord.shutdown();
+    // with p=0.02 over thousands of decodes, corrections must appear
+    let corrected: u64 = report
+        .split("corrected=")
+        .nth(1)
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(corrected > 0, "expected RRNS corrections in report: {report}");
+}
+
+#[test]
+fn shutdown_with_no_requests_is_clean() {
+    let cfg = CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent");
+    let coord = Coordinator::start(cfg);
+    let report = coord.shutdown();
+    assert!(report.contains("requests=0"));
+}

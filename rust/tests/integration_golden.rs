@@ -1,0 +1,95 @@
+//! Cross-language golden tests: artifacts/golden.rt is written by
+//! python/compile/export_golden.py from the *python* implementations of
+//! forward conversion, CRT, quantization, and RRNS decoding; these tests
+//! assert the rust implementations produce identical results, pinning the
+//! two languages to each other.
+//!
+//! Skips silently when the golden file has not been exported.
+
+use rns_analog::nn::store;
+use rns_analog::quant::quantize_activations;
+use rns_analog::rns::rrns::{Decode, RrnsCode};
+use rns_analog::rns::RnsContext;
+use rns_analog::tensor::MatF;
+
+const DETECTED_SENTINEL: i64 = -(1 << 62);
+
+fn golden_path() -> String {
+    format!("{}/artifacts/golden.rt", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn load_golden() -> Option<store::TensorStore> {
+    store::load(&golden_path()).ok()
+}
+
+#[test]
+fn forward_and_crt_match_python() {
+    let Some(t) = load_golden() else {
+        eprintln!("skipping: golden.rt not exported");
+        return;
+    };
+    for bits in 4..=8u32 {
+        let moduli: Vec<u64> = t[&format!("b{bits}.moduli")]
+            .as_i64()
+            .unwrap()
+            .iter()
+            .map(|&m| m as u64)
+            .collect();
+        let ctx = RnsContext::new(&moduli).unwrap();
+        let values = t[&format!("b{bits}.values")].as_i64().unwrap();
+        let residues = t[&format!("b{bits}.residues")].as_i64().unwrap();
+        let crt = t[&format!("b{bits}.crt")].as_i64().unwrap();
+        let n = moduli.len();
+        for (i, &v) in values.iter().enumerate() {
+            let expect: Vec<u64> = residues[i * n..(i + 1) * n].iter().map(|&r| r as u64).collect();
+            assert_eq!(ctx.forward(v), expect, "b={bits} v={v}");
+            assert_eq!(ctx.crt_signed(&expect), crt[i] as i128, "b={bits} v={v}");
+        }
+    }
+}
+
+#[test]
+fn quantization_matches_python() {
+    let Some(t) = load_golden() else {
+        return;
+    };
+    let x = t["quant.x"].as_f32().unwrap();
+    let dims = t["quant.x"].dims().to_vec();
+    let xq = t["quant.xq"].as_i64().unwrap();
+    let scales = t["quant.scales"].as_f32().unwrap();
+    let mat = MatF::from_vec(dims[0], dims[1], x.to_vec());
+    let qa = quantize_activations(&mat, 8);
+    assert_eq!(qa.q.data, xq, "quantized integers must match python");
+    for (a, b) in qa.scales.iter().zip(scales) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn rrns_decode_matches_python() {
+    let Some(t) = load_golden() else {
+        return;
+    };
+    let moduli: Vec<u64> =
+        t["rrns.moduli"].as_i64().unwrap().iter().map(|&m| m as u64).collect();
+    let k = t["rrns.k"].as_i64().unwrap()[0] as usize;
+    let code = RrnsCode::new(&moduli, k).unwrap();
+    let words = t["rrns.words"].as_i64().unwrap();
+    let expected = t["rrns.expected"].as_i64().unwrap();
+    let n = moduli.len();
+    let mut corrected = 0;
+    for (i, &want) in expected.iter().enumerate() {
+        let word: Vec<u64> = words[i * n..(i + 1) * n].iter().map(|&r| r as u64).collect();
+        match code.decode(&word) {
+            Decode::Ok { value, .. } => {
+                assert_ne!(want, DETECTED_SENTINEL, "case {i}: python detected, rust decoded");
+                assert_eq!(value, want as i128, "case {i}");
+                corrected += 1;
+            }
+            Decode::Detected => {
+                assert_eq!(want, DETECTED_SENTINEL, "case {i}: rust detected, python decoded");
+            }
+        }
+    }
+    assert!(corrected > 0, "golden set should contain decodable words");
+}

@@ -1,0 +1,114 @@
+//! Integration tests for the nn substrate against the real trained
+//! artifacts: rust FP32 inference must reproduce the accuracy recorded at
+//! jax training time, and the analog backends must slot in transparently.
+//!
+//! Tests skip silently when `make artifacts` has not run.
+
+use rns_analog::analog::{FixedPointCore, Fp32Backend, NoiseModel, RnsCore, RnsCoreConfig};
+use rns_analog::nn::dataset::{dataset_for_model, load_eval_set};
+use rns_analog::nn::models::{accuracy, load_model, ZOO};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/models/mlp.rt", artifacts_dir())).exists()
+}
+
+#[test]
+fn rust_fp32_matches_jax_training_accuracy() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // the full 512-sample eval set must reproduce the accuracy the jax
+    // training loop recorded, within a small tolerance (conv/layernorm
+    // numerics differ at the 1e-6 level; argmax flips are rare)
+    for name in ZOO {
+        let model = load_model(&artifacts_dir(), name).unwrap();
+        let eval = load_eval_set(&artifacts_dir(), dataset_for_model(name)).unwrap();
+        let acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut Fp32Backend);
+        let trained = model.trained_fp32_accuracy() as f64;
+        assert!(
+            (acc - trained).abs() < 0.02,
+            "{name}: rust fp32 {acc:.4} vs jax {trained:.4}"
+        );
+    }
+}
+
+#[test]
+fn rns_b8_matches_fp32_predictions_closely() {
+    if !have_artifacts() {
+        return;
+    }
+    for name in ["mlp", "resnet"] {
+        let model = load_model(&artifacts_dir(), name).unwrap();
+        let eval = load_eval_set(&artifacts_dir(), dataset_for_model(name)).unwrap().take(128);
+        let fp32 = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut Fp32Backend);
+        let mut rns = RnsCore::new(RnsCoreConfig::for_bits(8, 128)).unwrap();
+        let rns_acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut rns);
+        assert!(
+            rns_acc >= fp32 - 0.02,
+            "{name}: rns b=8 {rns_acc:.4} should track fp32 {fp32:.4}"
+        );
+    }
+}
+
+#[test]
+fn fixed_point_collapses_at_low_bits_on_deep_model() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = load_model(&artifacts_dir(), "resnet").unwrap();
+    let eval = load_eval_set(&artifacts_dir(), "shapes").unwrap().take(96);
+    let fp32 = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut Fp32Backend);
+    let mut fxp = FixedPointCore::new(4, 128, NoiseModel::None, 0);
+    let fxp_acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut fxp);
+    assert!(
+        fxp_acc < 0.6 * fp32,
+        "4-bit fixed point should collapse on resnet: {fxp_acc:.4} vs fp32 {fp32:.4}"
+    );
+}
+
+#[test]
+fn headline_99pct_at_6_bits_all_models() {
+    if !have_artifacts() {
+        return;
+    }
+    // THE paper claim, on the full model zoo at 128 samples each.
+    for name in ZOO {
+        let model = load_model(&artifacts_dir(), name).unwrap();
+        let eval = load_eval_set(&artifacts_dir(), dataset_for_model(name)).unwrap().take(128);
+        let fp32 = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut Fp32Backend);
+        let mut rns = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        let rns_acc = accuracy(model.as_ref(), &eval.input, &eval.labels, &mut rns);
+        assert!(
+            rns_acc / fp32.max(1e-9) >= 0.99,
+            "{name}: rns b=6 normalized accuracy {:.4} below the 99% headline",
+            rns_acc / fp32
+        );
+    }
+}
+
+#[test]
+fn eval_sets_are_complete_and_labelled() {
+    if !have_artifacts() {
+        return;
+    }
+    for ds in ["digits", "shapes", "tokens"] {
+        let eval = load_eval_set(&artifacts_dir(), ds).unwrap();
+        assert_eq!(eval.len(), 512, "{ds}");
+        assert!(eval.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+}
+
+#[test]
+fn wrong_artifacts_dir_is_clean_error() {
+    let err = match load_model("/definitely/not/here", "mlp") {
+        Err(e) => e,
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("No such file") || err.contains("not found"), "{err}");
+    assert!(load_eval_set("/definitely/not/here", "digits").is_err());
+}

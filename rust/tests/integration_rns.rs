@@ -1,0 +1,131 @@
+//! Integration tests across the RNS substrate: moduli selection ↔ CRT ↔
+//! Barrett ↔ RRNS working together at every Table-I configuration.
+
+use rns_analog::rns::fault_model::{estimate_case_probs, CaseProbs};
+use rns_analog::rns::moduli::{extend_moduli, paper_table1, required_output_bits, select_moduli};
+use rns_analog::rns::rrns::{Decode, RrnsCode};
+use rns_analog::rns::{BarrettReducer, RnsContext};
+use rns_analog::tensor::gemm::{gemm_i64, gemm_mod};
+use rns_analog::tensor::MatI;
+use rns_analog::util::rng::Rng;
+
+#[test]
+fn full_dot_product_pipeline_every_table1_config() {
+    // quantized dot products through forward conversion -> per-channel
+    // modular GEMM (Barrett inside) -> CRT must equal exact i64 GEMM for
+    // every paper configuration.
+    let mut rng = Rng::seed_from(100);
+    for bits in 4..=8u32 {
+        let h = 128usize;
+        let moduli = select_moduli(bits, h).unwrap();
+        assert_eq!(moduli.as_slice(), paper_table1(bits).unwrap());
+        let ctx = RnsContext::new(&moduli).unwrap();
+        let qm = (1i64 << (bits - 1)) - 1;
+        let x = MatI::from_vec(4, h, (0..4 * h).map(|_| rng.gen_range_i64(-qm, qm)).collect());
+        let w = MatI::from_vec(h, 8, (0..h * 8).map(|_| rng.gen_range_i64(-qm, qm)).collect());
+        let exact = gemm_i64(&x, &w);
+        // residue channels
+        let outs: Vec<MatI> = moduli
+            .iter()
+            .map(|&m| {
+                let xr = x.map(|v| v.rem_euclid(m as i64));
+                let wr = w.map(|v| v.rem_euclid(m as i64));
+                gemm_mod(&xr, &wr, m)
+            })
+            .collect();
+        for r in 0..4 {
+            for c in 0..8 {
+                let res: Vec<u64> = outs.iter().map(|o| o.at(r, c) as u64).collect();
+                assert_eq!(
+                    ctx.crt_signed(&res),
+                    exact.at(r, c) as i128,
+                    "bits={bits} r={r} c={c}"
+                );
+            }
+        }
+        // Eq. 4 range check: outputs fit the chosen M
+        let b_out = required_output_bits(bits, bits, h);
+        assert!(exact.data.iter().all(|&v| (v.unsigned_abs() as u128) < (1u128 << b_out)));
+    }
+}
+
+#[test]
+fn barrett_consistent_with_crt_context() {
+    let ctx = RnsContext::new(paper_table1(7).unwrap()).unwrap();
+    let mut rng = Rng::seed_from(5);
+    for _ in 0..500 {
+        let v = rng.next_u64() >> 2;
+        for &m in &ctx.moduli {
+            let b = BarrettReducer::new(m);
+            assert_eq!(b.reduce(v), v % m);
+        }
+    }
+}
+
+#[test]
+fn rrns_end_to_end_correction_rates() {
+    // inject exactly t errors -> always corrected.
+    for bits in [6u32, 8] {
+        let base = paper_table1(bits).unwrap();
+        let all = extend_moduli(base, 2).unwrap();
+        let code = RrnsCode::new(&all, base.len()).unwrap();
+        let t = code.correctable();
+        assert_eq!(t, 1);
+        let mut rng = Rng::seed_from(bits as u64);
+        let half = (code.legitimate_range / 2) as i64;
+        let mut corrected = 0;
+        for _ in 0..300 {
+            let a = rng.gen_range_i64(-(half - 1), half);
+            let mut res = code.encode(a);
+            let i = rng.gen_range(code.n() as u64) as usize;
+            res[i] = (res[i] + 1 + rng.gen_range(all[i] - 1)) % all[i];
+            match code.decode(&res) {
+                Decode::Ok { value, .. } => {
+                    assert_eq!(value, a as i128, "single error must correct exactly");
+                    corrected += 1;
+                }
+                Decode::Detected => panic!("single error must be correctable"),
+            }
+        }
+        assert_eq!(corrected, 300);
+    }
+}
+
+#[test]
+fn fault_model_matches_decoder_behaviour() {
+    // p_err(1) == 1 - p_c by definition; limit sandwiched by attempts
+    let base = paper_table1(8).unwrap();
+    let all = extend_moduli(base, 2).unwrap();
+    let code = RrnsCode::new(&all, base.len()).unwrap();
+    let cp: CaseProbs = estimate_case_probs(&code, 0.05, 30_000, 9);
+    assert!((cp.p_err(1) - (1.0 - cp.p_c)).abs() < 1e-12);
+    assert!(cp.p_err(10) >= cp.p_err_limit() - 1e-12);
+    assert!(cp.p_err(1) >= cp.p_err(10));
+    // at p = 0.05 with n-k = 2 the decoder should usually succeed
+    assert!(cp.p_c > 0.9, "p_c = {}", cp.p_c);
+}
+
+#[test]
+fn redundant_moduli_have_enob_within_budget() {
+    // redundancy must not exceed the data-converter bit budget (paper §V:
+    // converters scale linearly with extra moduli but stay b-bit)
+    for bits in 4..=8u32 {
+        let base = paper_table1(bits).unwrap();
+        if let Ok(all) = extend_moduli(base, 2) {
+            for &m in &all {
+                assert!(m < (1u64 << bits), "bits={bits} m={m}");
+            }
+        }
+    }
+}
+
+#[test]
+fn signed_range_boundaries_roundtrip() {
+    for bits in 4..=8u32 {
+        let ctx = RnsContext::new(paper_table1(bits).unwrap()).unwrap();
+        let half = (ctx.big_m / 2) as i64;
+        for a in [-(half - 1), -1, 0, 1, half - 1, half] {
+            assert_eq!(ctx.crt_signed(&ctx.forward(a)), a as i128, "bits={bits} a={a}");
+        }
+    }
+}

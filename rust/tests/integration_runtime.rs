@@ -1,0 +1,142 @@
+//! Integration tests for the PJRT runtime: the AOT-compiled pallas kernel
+//! must be bit-identical to the native rust engine, including the padded /
+//! tiled execution paths, and the full-pipeline artifact must match the
+//! rust RnsCore.
+//!
+//! Tests skip silently when `make artifacts` has not run.
+
+use rns_analog::analog::{RnsCore, RnsCoreConfig};
+use rns_analog::nn::dataset::random_gemm_pair;
+use rns_analog::runtime::{F32Input, Manifest, ModularGemmEngine, NativeEngine, PjrtEngine, PjrtRuntime};
+use rns_analog::tensor::MatI;
+use rns_analog::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/manifest.txt", artifacts_dir())).exists()
+}
+
+fn rand_residues(rng: &mut Rng, moduli: &[u64], rows: usize, cols: usize) -> Vec<MatI> {
+    moduli
+        .iter()
+        .map(|&m| {
+            MatI::from_vec(rows, cols, (0..rows * cols).map(|_| rng.gen_range(m) as i64).collect())
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_engine_bit_identical_exact_shape() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    for bits in [4u32, 6, 8] {
+        let mut engine = PjrtEngine::load(&rt, &artifacts_dir(), bits).unwrap();
+        let moduli = engine.moduli.clone();
+        let mut rng = Rng::seed_from(bits as u64);
+        let xr = rand_residues(&mut rng, &moduli, engine.batch, engine.h);
+        let wr = rand_residues(&mut rng, &moduli, engine.h, engine.h);
+        let got = engine.matmul_mod(&xr, &wr, &moduli);
+        let want = NativeEngine.matmul_mod(&xr, &wr, &moduli);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.data, w.data, "bits={bits}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_engine_bit_identical_padded_and_tiled() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut engine = PjrtEngine::load(&rt, &artifacts_dir(), 6).unwrap();
+    let moduli = engine.moduli.clone();
+    let mut rng = Rng::seed_from(77);
+    // (rows, K, N) exercising padding (< artifact shape) and tiling (>)
+    for (b, k, n) in [(1usize, 7usize, 3usize), (3, 128, 128), (11, 200, 140), (8, 300, 40)] {
+        let xr = rand_residues(&mut rng, &moduli, b, k);
+        let wr = rand_residues(&mut rng, &moduli, k, n);
+        let got = engine.matmul_mod(&xr, &wr, &moduli);
+        let want = NativeEngine.matmul_mod(&xr, &wr, &moduli);
+        for (ch, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.data, w.data, "shape ({b},{k},{n}) channel {ch}");
+        }
+    }
+}
+
+#[test]
+fn rns_core_identical_on_native_and_pjrt_engines() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut rng = Rng::seed_from(5);
+    let (x, w) = random_gemm_pair(&mut rng, 6, 192, 10, 1.0);
+    let mut native = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let engine = PjrtEngine::load(&rt, &artifacts_dir(), 6).unwrap();
+    let mut pjrt =
+        RnsCore::with_engine(RnsCoreConfig::for_bits(6, 128), Box::new(engine)).unwrap();
+    let a = native.gemm_quantized(&x, &w);
+    let b = pjrt.gemm_quantized(&x, &w);
+    assert_eq!(a.data, b.data, "cores must agree bit-for-bit (both exact)");
+    assert_eq!(pjrt.engine_name(), "pjrt");
+}
+
+#[test]
+fn full_pipeline_artifact_matches_rust_core() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load(&format!("{}/rns_gemm_b6.hlo.txt", artifacts_dir())).unwrap();
+    let mut rng = Rng::seed_from(9);
+    let (x, w) = random_gemm_pair(&mut rng, 8, 128, 128, 1.0);
+    let got = exe
+        .run_f32(&[
+            F32Input { data: &x.data, dims: vec![8, 128] },
+            F32Input { data: &w.data, dims: vec![128, 128] },
+        ])
+        .unwrap();
+    let mut core = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+    let want = core.gemm_quantized(&x, &w);
+    // both are the identical exact pipeline; f32 rescale rounding may differ
+    // in the last ulp
+    for (g, wv) in got.iter().zip(&want.data) {
+        assert!((g - wv).abs() <= wv.abs() * 1e-5 + 1e-6, "{g} vs {wv}");
+    }
+}
+
+#[test]
+fn manifest_validation_and_mismatch_rejection() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    assert_eq!(manifest.h, 128);
+    assert_eq!(manifest.batch, 8);
+    let rt = PjrtRuntime::cpu().unwrap();
+    let mut engine = PjrtEngine::load(&rt, &artifacts_dir(), 6).unwrap();
+    // asking the engine for different moduli than were baked must fail loudly
+    let wrong = vec![255u64, 254, 253];
+    let xr = rand_residues(&mut Rng::seed_from(1), &wrong, 2, 8);
+    let wr = rand_residues(&mut Rng::seed_from(2), &wrong, 8, 2);
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.matmul_mod(&xr, &wr, &wrong)
+    }));
+    assert!(res.is_err(), "moduli mismatch must be rejected");
+}
+
+#[test]
+fn missing_bits_artifact_is_clean_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    assert!(PjrtEngine::load(&rt, &artifacts_dir(), 12).is_err());
+}

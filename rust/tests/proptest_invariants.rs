@@ -1,0 +1,232 @@
+//! Property-based invariants over the whole stack, driven by the in-house
+//! `util::prop` harness (see DESIGN.md — no proptest crate offline).
+//!
+//! These are the "coordinator invariants" class of properties: routing /
+//! batching / state invariants plus the numeric laws the cores rely on.
+
+use rns_analog::analog::{NoiseModel, RnsCore, RnsCoreConfig};
+use rns_analog::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use rns_analog::coordinator::request::InferenceRequest;
+use rns_analog::nn::models::Batch;
+use rns_analog::quant::{dequantize, quantize_activations, quantize_weights, qmax};
+use rns_analog::rns::moduli::{extend_moduli, paper_table1};
+use rns_analog::rns::rrns::{combinations, Decode, RrnsCode};
+use rns_analog::rns::RnsContext;
+use rns_analog::tensor::gemm::{gemm_f32, gemm_i64, gemm_mod};
+use rns_analog::tensor::{MatF, MatI, Nhwc};
+use rns_analog::util::prop::{prop_assert, prop_assert_eq, run_prop};
+use rns_analog::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn rand_mat_f(rng: &mut Rng, rows: usize, cols: usize) -> MatF {
+    MatF::from_vec(rows, cols, (0..rows * cols).map(|_| rng.uniform_f32(-2.0, 2.0)).collect())
+}
+
+#[test]
+fn prop_crt_is_ring_isomorphism() {
+    // (a ± b) and (a * b) commute with forward/CRT on every Table-I set
+    run_prop("crt ring isomorphism", 400, |rng| {
+        let bits = [4u32, 5, 6, 7, 8][rng.gen_range(5) as usize];
+        let ctx = RnsContext::new(paper_table1(bits).unwrap()).unwrap();
+        let bound = ((ctx.big_m as f64).sqrt() as i64) / 2;
+        let a = rng.gen_range_i64(-bound, bound);
+        let b = rng.gen_range_i64(-bound, bound);
+        let ra = ctx.forward(a);
+        let rb = ctx.forward(b);
+        let prod: Vec<u64> = ra
+            .iter()
+            .zip(&rb)
+            .zip(&ctx.moduli)
+            .map(|((&x, &y), &m)| (x * y) % m)
+            .collect();
+        let sum: Vec<u64> = ra
+            .iter()
+            .zip(&rb)
+            .zip(&ctx.moduli)
+            .map(|((&x, &y), &m)| (x + y) % m)
+            .collect();
+        prop_assert_eq(ctx.crt_signed(&prod), (a as i128) * (b as i128), "mul")?;
+        prop_assert_eq(ctx.crt_signed(&sum), (a + b) as i128, "add")
+    });
+}
+
+#[test]
+fn prop_modular_gemm_equals_exact_mod() {
+    run_prop("gemm_mod == (gemm_i64 mod m)", 60, |rng| {
+        let m = [11u64, 13, 59, 61, 127, 251][rng.gen_range(6) as usize];
+        let b = 1 + rng.gen_range(3) as usize;
+        let k = 1 + rng.gen_range(300) as usize;
+        let n = 1 + rng.gen_range(12) as usize;
+        let x = MatI::from_vec(b, k, (0..b * k).map(|_| rng.gen_range(m) as i64).collect());
+        let w = MatI::from_vec(k, n, (0..k * n).map(|_| rng.gen_range(m) as i64).collect());
+        let want: Vec<i64> =
+            gemm_i64(&x, &w).data.iter().map(|&v| v.rem_euclid(m as i64)).collect();
+        prop_assert_eq(gemm_mod(&x, &w, m).data, want, &format!("m={m} k={k}"))
+    });
+}
+
+#[test]
+fn prop_quantize_dequantize_error_bound() {
+    // |dequant(quant(x) @ quant(w)) - x@w| <= K * (s_x/2qm * max|w| + s_w/2qm * max|x| + cross)
+    run_prop("quantized gemm error bound", 40, |rng| {
+        let bits = [6u32, 8][rng.gen_range(2) as usize];
+        let b = 1 + rng.gen_range(3) as usize;
+        let k = 1 + rng.gen_range(128) as usize;
+        let n = 1 + rng.gen_range(8) as usize;
+        let x = rand_mat_f(rng, b, k);
+        let w = rand_mat_f(rng, k, n);
+        let qa = quantize_activations(&x, bits);
+        let qw = quantize_weights(&w, bits);
+        let got = dequantize(&gemm_i64(&qa.q, &qw.q), &qa, &qw);
+        let want = gemm_f32(&x, &w);
+        let qm = qmax(bits) as f32;
+        for r in 0..b {
+            let sx = qa.scales[r];
+            for c in 0..n {
+                let sw = qw.scales[c];
+                // per-term rounding error: 0.5/qm each side, plus the cross term
+                let tol = k as f32 * (sx * sw) * (1.0 / qm + 0.25 / (qm * qm)) + 1e-4;
+                let err = (got.at(r, c) - want.at(r, c)).abs();
+                prop_assert(err <= tol, &format!("err {err} > tol {tol} (b={bits} k={k})"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rrns_corrects_any_single_error_position_and_magnitude() {
+    let base = paper_table1(8).unwrap();
+    let all = extend_moduli(base, 2).unwrap();
+    let code = RrnsCode::new(&all, base.len()).unwrap();
+    let half = (code.legitimate_range / 2) as i64;
+    run_prop("rrns single-error correction", 500, |rng| {
+        let a = rng.gen_range_i64(-(half - 1), half);
+        let mut res = code.encode(a);
+        let i = rng.gen_range(code.n() as u64) as usize;
+        let delta = 1 + rng.gen_range(all[i] - 1);
+        res[i] = (res[i] + delta) % all[i];
+        match code.decode(&res) {
+            Decode::Ok { value, suspects } => {
+                prop_assert_eq(value, a as i128, "value")?;
+                prop_assert_eq(suspects, vec![i], "suspect set")
+            }
+            Decode::Detected => Err(format!("single error at {i} (delta {delta}) not corrected")),
+        }
+    });
+}
+
+#[test]
+fn prop_combinations_counts_and_uniqueness() {
+    run_prop("C(n,k) combinations", 50, |rng| {
+        let n = 1 + rng.gen_range(7) as usize;
+        let k = 1 + rng.gen_range(n as u64) as usize;
+        let combos = combinations(n, k);
+        let expect = (0..k).fold(1usize, |acc, i| acc * (n - i) / (i + 1));
+        prop_assert_eq(combos.len(), expect, "count")?;
+        let mut seen = std::collections::BTreeSet::new();
+        for c in &combos {
+            prop_assert(c.len() == k, "size")?;
+            prop_assert(c.windows(2).all(|w| w[0] < w[1]), "sorted")?;
+            prop_assert(seen.insert(c.clone()), "unique")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests_and_order_within_model() {
+    // whatever the arrival pattern: no request lost, no request duplicated,
+    // batches never exceed max_batch (except single oversize requests),
+    // and per-model FIFO order is preserved.
+    run_prop("batcher conservation", 60, |rng| {
+        let max_batch = 1 + rng.gen_range(8) as usize;
+        let mut batcher = DynamicBatcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_secs(3600),
+        });
+        let n_req = 1 + rng.gen_range(30) as usize;
+        let mut submitted: Vec<(u64, String)> = Vec::new();
+        for id in 0..n_req as u64 {
+            let model = if rng.bernoulli(0.5) { "a" } else { "b" };
+            let samples = 1 + rng.gen_range(3) as usize;
+            batcher.push(InferenceRequest::new(
+                id,
+                model,
+                Batch::Images(Nhwc::zeros(samples, 1, 1, 1)),
+            ));
+            submitted.push((id, model.to_string()));
+        }
+        let mut drained: Vec<(u64, String)> = Vec::new();
+        while let Some(fb) = batcher.pop_ready(Instant::now(), true) {
+            let total: usize = fb.members.iter().map(|(r, _)| r.num_samples()).sum();
+            prop_assert(
+                total <= max_batch || fb.members.len() == 1,
+                &format!("batch of {total} exceeds {max_batch}"),
+            )?;
+            prop_assert_eq(total, fb.input.len(), "concat size")?;
+            for (req, _) in fb.members {
+                drained.push((req.id, req.model.clone()));
+            }
+        }
+        prop_assert_eq(batcher.pending(), 0, "fully drained")?;
+        prop_assert_eq(drained.len(), submitted.len(), "conservation")?;
+        for model in ["a", "b"] {
+            let sub: Vec<u64> =
+                submitted.iter().filter(|(_, m)| m == model).map(|(i, _)| *i).collect();
+            let dra: Vec<u64> =
+                drained.iter().filter(|(_, m)| m == model).map(|(i, _)| *i).collect();
+            prop_assert_eq(dra, sub, &format!("fifo order for {model}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_clean_rns_core_is_deterministic_and_tiling_invariant() {
+    run_prop("rns core tiling invariance", 15, |rng| {
+        let k = 128 + rng.gen_range(256) as usize;
+        let x = rand_mat_f(rng, 2, k);
+        let w = rand_mat_f(rng, k, 4);
+        // same moduli set (chosen for the larger h) used at two tile sizes:
+        // clean RNS accumulation must be bit-identical across tilings
+        let moduli = rns_analog::rns::select_moduli(6, 512).unwrap();
+        let mk_core = |h: usize| {
+            let mut cfg = RnsCoreConfig::for_bits(6, h);
+            cfg.moduli = moduli.clone();
+            RnsCore::new(cfg).unwrap()
+        };
+        let a = mk_core(128).gemm_quantized(&x, &w);
+        let b = mk_core(512).gemm_quantized(&x, &w);
+        prop_assert_eq(a.data, b.data, "tiling invariance")
+    });
+}
+
+#[test]
+fn prop_noise_rate_scales_with_p() {
+    // measured corruption rate of the RNS core tracks the configured p
+    run_prop("noise rate tracks p", 8, |rng| {
+        let p = [0.01f64, 0.05, 0.2][rng.gen_range(3) as usize];
+        let x = rand_mat_f(rng, 8, 128);
+        let w = rand_mat_f(rng, 128, 16);
+        let mut clean = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        let mut noisy = RnsCore::new(
+            RnsCoreConfig::for_bits(6, 128)
+                .with_noise(NoiseModel::ResidueFlip { p })
+                .with_seed(rng.next_u64()),
+        )
+        .unwrap();
+        let a = clean.gemm_quantized(&x, &w);
+        let b = noisy.gemm_quantized(&x, &w);
+        let outputs = a.data.len() as f64;
+        let differing = a.data.iter().zip(&b.data).filter(|(x, y)| x != y).count() as f64;
+        // each output = n residues; P(any flipped) = 1-(1-p)^n
+        let n = clean.n_channels() as f64;
+        let expect = 1.0 - (1.0 - p).powf(n);
+        let rate = differing / outputs;
+        prop_assert(
+            (rate - expect).abs() < 0.15 + expect * 0.5,
+            &format!("rate {rate:.3} vs expected {expect:.3} at p={p}"),
+        )
+    });
+}
