@@ -2,10 +2,14 @@
 //! criterion, so this uses the in-house `bench::Bencher`).
 //!
 //! Two tiers:
-//!   1. hot-path micro benches (modular GEMM, Barrett vs `%`, CRT, RRNS
-//!      decode, quantization) — the §Perf optimization targets;
+//!   1. hot-path micro benches (modular GEMM serial/prepared/parallel,
+//!      Barrett vs `%`, CRT, RRNS decode, quantization) — the §Perf
+//!      optimization targets (DESIGN.md §7);
 //!   2. one end-to-end bench per paper table/figure regenerator plus the
 //!      serving path — the "regenerate the evaluation" deliverable, timed.
+//!
+//! Every run additionally writes machine-readable results to
+//! `BENCH_gemm.json` at the repo root (the perf trajectory across PRs).
 //!
 //! Filter: cargo bench -- <substring>    Quick mode: cargo bench -- --quick
 
@@ -20,9 +24,12 @@ use rns_analog::rns::fault_model::estimate_case_probs;
 use rns_analog::rns::moduli::{extend_moduli, paper_table1};
 use rns_analog::rns::rrns::RrnsCode;
 use rns_analog::rns::{BarrettReducer, RnsContext};
-use rns_analog::runtime::{default_artifacts_dir, ModularGemmEngine, NativeEngine, PjrtEngine, PjrtRuntime};
+use rns_analog::runtime::{
+    default_artifacts_dir, ModularGemmEngine, NativeEngine, PjrtEngine, PjrtRuntime,
+    PreparedWeights,
+};
 use rns_analog::tensor::gemm::{gemm_f32, gemm_i64, gemm_mod};
-use rns_analog::tensor::MatI;
+use rns_analog::tensor::{MatF, MatI};
 use rns_analog::util::rng::Rng;
 
 fn main() {
@@ -33,9 +40,17 @@ fn main() {
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
 
     micro_benches(&mut b, &want);
+    serve_shaped_benches(&mut b, &want);
     figure_benches(&mut b, &want, quick);
 
     println!("\n{}", b.report());
+
+    // machine-readable perf trajectory at the repo root
+    let json_path = format!("{}/../BENCH_gemm.json", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&json_path, b.to_json(quick)) {
+        Ok(()) => println!("[wrote {json_path}]"),
+        Err(e) => eprintln!("[warn] could not write {json_path}: {e}"),
+    }
 }
 
 fn micro_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
@@ -50,6 +65,42 @@ fn micro_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
         b.bench_with_rate("micro/gemm_mod 8x128x128 (1 channel)", macs, "MAC/s", || {
             gemm_mod(&x, &w, m)
         });
+    }
+    if want("micro/gemm_mod_multi") {
+        // the §Perf headline pair: single-threaded unprepared baseline vs
+        // the prepared + parallel engine on the same multi-channel tile
+        let moduli = paper_table1(6).unwrap().to_vec();
+        let xr: Vec<MatI> = moduli
+            .iter()
+            .map(|&mm| MatI::from_vec(8, h, (0..8 * h).map(|_| rng.gen_range(mm) as i64).collect()))
+            .collect();
+        let wr: Vec<MatI> = moduli
+            .iter()
+            .map(|&mm| MatI::from_vec(h, h, (0..h * h).map(|_| rng.gen_range(mm) as i64).collect()))
+            .collect();
+        let macs_multi = macs * moduli.len() as f64;
+        let mut serial = NativeEngine::serial();
+        b.bench_with_rate(
+            "micro/gemm_mod 8x128x128 x4ch serial unprepared",
+            macs_multi,
+            "MAC/s",
+            || serial.matmul_mod(&xr, &wr, &moduli),
+        );
+        let prepared = PreparedWeights::new(wr.clone(), &moduli);
+        let mut serial_prep = NativeEngine::serial();
+        b.bench_with_rate(
+            "micro/gemm_mod 8x128x128 x4ch serial prepared",
+            macs_multi,
+            "MAC/s",
+            || serial_prep.matmul_mod_prepared(&xr, &prepared),
+        );
+        let mut parallel = NativeEngine::default();
+        b.bench_with_rate(
+            "micro/gemm_mod 8x128x128 x4ch parallel prepared",
+            macs_multi,
+            "MAC/s",
+            || parallel.matmul_mod_prepared(&xr, &prepared),
+        );
     }
     if want("micro/gemm_i64") {
         b.bench_with_rate("micro/gemm_i64 8x128x128", macs, "MAC/s", || gemm_i64(&x, &w));
@@ -140,15 +191,67 @@ fn micro_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
                     "MAC/s",
                     || engine.matmul_mod(&xr, &wr, &moduli),
                 );
+                let mut native = NativeEngine::default();
                 b.bench_with_rate(
                     "micro/native engine tile 8x128x128 (4ch)",
                     (8 * 128 * 128 * 4) as f64,
                     "MAC/s",
-                    || NativeEngine.matmul_mod(&xr, &wr, &moduli),
+                    || native.matmul_mod(&xr, &wr, &moduli),
                 );
             }
         }
     }
+}
+
+/// End-to-end serving-shaped benches that need no artifacts: the MLP zoo
+/// model's exact GEMM chain (784 -> 256 -> 128 -> 10) through a full
+/// `RnsCore`, unprepared-serial (the seed's execution model) vs
+/// prepared-parallel (the plan path every worker runs after warm).  This is
+/// the e2e number BENCH_gemm.json tracks across PRs.
+fn serve_shaped_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
+    if !want("serve/rns_mlp_chain") {
+        return;
+    }
+    let mut rng = Rng::seed_from(7);
+    let dims = [(784usize, 256usize), (256, 128), (128, 10)];
+    let batch = 8usize;
+    let ws: Vec<MatF> = dims
+        .iter()
+        .map(|&(k, n)| {
+            MatF::from_vec(k, n, (0..k * n).map(|_| rng.uniform_f32(-0.5, 0.5)).collect())
+        })
+        .collect();
+    let x0 = MatF::from_vec(
+        batch,
+        784,
+        (0..batch * 784).map(|_| rng.uniform_f32(-1.0, 1.0)).collect(),
+    );
+    let samples = batch as f64;
+
+    let mut unprep = RnsCore::with_engine(
+        RnsCoreConfig::for_bits(6, 128),
+        Box::new(NativeEngine::serial()),
+    )
+    .unwrap();
+    b.bench_with_rate("serve/rns_mlp_chain b6 serial unprepared", samples, "img/s", || {
+        let mut h = x0.clone();
+        for w in &ws {
+            h = unprep.gemm_quantized_unprepared(&h, w);
+        }
+        h
+    });
+
+    let mut prep = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+    for w in &ws {
+        prep.prepare_weights(w); // model warm, as the coordinator does
+    }
+    b.bench_with_rate("serve/rns_mlp_chain b6 parallel prepared", samples, "img/s", || {
+        let mut h = x0.clone();
+        for w in &ws {
+            h = prep.gemm_quantized(&h, w);
+        }
+        h
+    });
 }
 
 fn figure_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool, quick: bool) {

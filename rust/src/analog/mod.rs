@@ -24,6 +24,16 @@ use crate::tensor::MatF;
 /// hardware under an unchanged model.
 pub trait GemmBackend {
     fn gemm(&mut self, x: &MatF, w: &MatF) -> MatF;
+    /// Pre-build any per-layer state for a weight matrix (e.g. the RNS
+    /// core's `RnsPlan`: quantization + per-channel residues + u32
+    /// staging).  `Model::warm` calls this for every weight GEMM a model
+    /// will issue so the first request pays no plan-build latency.
+    /// Default: nothing — stateless backends have no per-layer state.
+    fn prepare(&mut self, _w: &MatF) {}
+    /// Number of per-layer plans this backend has built (serving metric).
+    fn plans_built(&self) -> u64 {
+        0
+    }
     fn name(&self) -> String;
     /// Energy meter, if this backend models hardware.
     fn meter(&self) -> Option<EnergyMeter> {

@@ -2,19 +2,31 @@
 //! tolerance (§IV).
 //!
 //! Dataflow per K-tile (tile height = the analog array size h):
-//!   1. forward-convert the quantized tile to n residue channels;
+//!   1. forward-convert the quantized *activation* tile to n residue
+//!      channels (the weight side is prepared once per layer — see below);
 //!   2. run the modular MVM on every channel — through the pluggable
 //!      `ModularGemmEngine` (native rust, or the AOT-compiled pallas kernel
 //!      via PJRT);
 //!   3. per-channel ADC capture with noise injection;
-//!   4. plain RNS: CRT per output element;
+//!   4. plain RNS: batch CRT over the whole tile;
 //!      RRNS(n, k): voting decode per element; Case-2 (detected) elements
 //!      trigger the paper's recompute-and-revote loop, up to `max_attempts`;
 //!   5. accumulate the signed partial outputs digitally; dequantize once at
 //!      the end.
 //!
+//! **Prepared execution**: weights are stationary in the analog arrays, so
+//! their quantization, per-channel forward conversion, u32 staging, and
+//! weight-DAC energy are all one-time per-layer costs.  The core caches an
+//! `RnsPlan` per weight matrix (keyed by pointer + shape + fingerprint);
+//! `gemm_quantized` builds the plan on first sight of a layer and then only
+//! processes activations.  `gemm_quantized_unprepared` keeps the original
+//! per-call path as a bit-identical reference (asserted by the
+//! integration_plan tests).
+//!
 //! The ADCs in every channel run at `ceil(log2 m_i)` bits — never at
 //! `b_out` — which is the entire point of the design.
+
+use std::collections::{HashMap, VecDeque};
 
 use crate::analog::energy::EnergyMeter;
 use crate::analog::mvm_unit::RnsMvmUnit;
@@ -25,6 +37,7 @@ use crate::rns::moduli::{extend_moduli, required_output_bits, select_moduli};
 use crate::rns::rrns::{Decode, RrnsCode};
 use crate::rns::RnsContext;
 use crate::runtime::engine::{ModularGemmEngine, NativeEngine};
+use crate::runtime::plan::{forward_residues, PreparedWeights, RnsPlan};
 use crate::tensor::{MatF, MatI};
 use crate::util::rng::Rng;
 
@@ -90,6 +103,75 @@ pub struct FaultStats {
     pub exhausted: u64,
 }
 
+/// Cache key identifying one weight matrix for plan reuse.  Pointer +
+/// shape + a 16-sample strided FNV fingerprint of the data: cheap against
+/// the cost of a layer GEMM, and enough to tell apart distinct layers
+/// that reuse a freed allocation's address.  The fingerprint is
+/// best-effort against in-place mutation: it only sees ~16 elements, so a
+/// caller that edits weights in place (this crate's models never do) must
+/// not rely on it and should drop/rebuild the core or matrix instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct PlanKey {
+    ptr: usize,
+    rows: usize,
+    cols: usize,
+    fingerprint: u64,
+}
+
+fn plan_key(w: &MatF) -> PlanKey {
+    let d = &w.data;
+    let mut fp = 0xcbf2_9ce4_8422_2325u64;
+    let step = (d.len() / 16).max(1);
+    let mut i = 0;
+    while i < d.len() {
+        fp = (fp ^ d[i].to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        i += step;
+    }
+    PlanKey { ptr: d.as_ptr() as usize, rows: w.rows, cols: w.cols, fingerprint: fp }
+}
+
+/// Real models have a fixed, small layer count, but sweeps like fig3 push
+/// thousands of one-shot random weight matrices through a single core —
+/// bound the cache so those degrade to the unprepared cost instead of
+/// accumulating plans without limit (LRU eviction).
+const MAX_CACHED_PLANS: usize = 64;
+
+#[derive(Default)]
+struct PlanCache {
+    map: HashMap<PlanKey, RnsPlan>,
+    /// Keys from least- to most-recently used.
+    order: VecDeque<PlanKey>,
+}
+
+impl PlanCache {
+    fn contains(&self, key: &PlanKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Remove and return a cached plan (caller puts it back after use).
+    fn take(&mut self, key: &PlanKey) -> Option<RnsPlan> {
+        let plan = self.map.remove(key)?;
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let _ = self.order.remove(pos);
+        }
+        Some(plan)
+    }
+
+    fn put(&mut self, key: PlanKey, plan: RnsPlan) {
+        if self.map.insert(key, plan).is_none() {
+            self.order.push_back(key);
+        }
+        while self.map.len() > MAX_CACHED_PLANS {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+}
+
 pub struct RnsCore {
     pub cfg: RnsCoreConfig,
     /// Context over all (info + redundant) moduli.
@@ -101,11 +183,13 @@ pub struct RnsCore {
     pub meter: EnergyMeter,
     pub stats: FaultStats,
     rng: Rng,
+    plans: PlanCache,
+    plans_built: u64,
 }
 
 impl RnsCore {
     pub fn new(cfg: RnsCoreConfig) -> Result<Self, String> {
-        Self::with_engine(cfg, Box::new(NativeEngine))
+        Self::with_engine(cfg, Box::new(NativeEngine::default()))
     }
 
     pub fn with_engine(cfg: RnsCoreConfig, engine: Box<dyn ModularGemmEngine>) -> Result<Self, String> {
@@ -139,7 +223,18 @@ impl RnsCore {
         let units =
             all_moduli.iter().map(|&m| RnsMvmUnit::new(m, cfg.noise)).collect::<Vec<_>>();
         let rng = Rng::seed_from(cfg.seed ^ 0x5EED_CAFE);
-        Ok(RnsCore { cfg, all_ctx, code, units, engine, meter: EnergyMeter::default(), stats: FaultStats::default(), rng })
+        Ok(RnsCore {
+            cfg,
+            all_ctx,
+            code,
+            units,
+            engine,
+            meter: EnergyMeter::default(),
+            stats: FaultStats::default(),
+            rng,
+            plans: PlanCache::default(),
+            plans_built: 0,
+        })
     }
 
     pub fn n_channels(&self) -> usize {
@@ -150,11 +245,80 @@ impl RnsCore {
         self.engine.name()
     }
 
-    /// Full quantized GEMM through the simulated RNS core.
+    /// Layer plans built over this core's lifetime (serving metric).
+    pub fn plans_built(&self) -> u64 {
+        self.plans_built
+    }
+
+    /// Build (or reuse) the layer plan for `w`, charging the one-time
+    /// weight-DAC conversions on first build — weights are stationary, so
+    /// this is the only place weight conversions cost anything.
+    pub fn prepare_weights(&mut self, w: &MatF) {
+        let key = plan_key(w);
+        if !self.plans.contains(&key) {
+            let plan = self.build_plan(w);
+            self.plans.put(key, plan);
+        }
+    }
+
+    fn build_plan(&mut self, w: &MatF) -> RnsPlan {
+        let plan = RnsPlan::build(w, self.cfg.bits, self.cfg.h, &self.all_ctx.moduli);
+        for u in &self.units {
+            self.meter.record_dac(plan.weight_elems(), u.enob);
+        }
+        self.plans_built += 1;
+        plan
+    }
+
+    /// Full quantized GEMM through the simulated RNS core (prepared path:
+    /// the per-layer plan is built on first call and reused after).
     pub fn gemm_quantized(&mut self, x: &MatF, w: &MatF) -> MatF {
+        assert_eq!(x.cols, w.rows, "gemm shape mismatch");
+        let key = plan_key(w);
+        // take the plan out so `self` stays free for the tile loop
+        let plan = match self.plans.take(&key) {
+            Some(p) => p,
+            None => self.build_plan(w),
+        };
+        let out = self.gemm_with_plan(x, &plan);
+        self.plans.put(key, plan);
+        out
+    }
+
+    /// Prepared GEMM against an explicit plan (the coordinator path).
+    pub fn gemm_with_plan(&mut self, x: &MatF, plan: &RnsPlan) -> MatF {
+        assert_eq!(x.cols, plan.k, "gemm shape mismatch");
+        assert_eq!(plan.bits, self.cfg.bits, "plan built for different precision");
+        assert_eq!(plan.h, self.cfg.h, "plan tiled for a different array height");
+        assert_eq!(
+            plan.moduli, self.all_ctx.moduli,
+            "plan built for a different channel set (info + redundant moduli)"
+        );
+        let qa = quantize_activations(x, self.cfg.bits);
+        let mut acc = MatI::zeros(x.rows, plan.n);
+        for tile in &plan.tiles {
+            let xt = qa.q.slice_cols(tile.k0, tile.k1);
+            let part = self.tile_mvm_prepared(&xt, &tile.weights);
+            for (a, &p) in acc.data.iter_mut().zip(&part.data) {
+                *a += p;
+            }
+        }
+        dequantize(&acc, &qa, &plan.qw)
+    }
+
+    /// Reference path: re-quantizes and re-converts the weights on every
+    /// call (the pre-plan behavior, minus the weight-DAC over-count —
+    /// weight conversions are charged once per call here, not once per
+    /// tile).  Kept for the prepared-vs-unprepared equivalence tests and
+    /// bench baselines; bit-identical to `gemm_quantized` under the same
+    /// seed by construction.
+    pub fn gemm_quantized_unprepared(&mut self, x: &MatF, w: &MatF) -> MatF {
         assert_eq!(x.cols, w.rows, "gemm shape mismatch");
         let qa = quantize_activations(x, self.cfg.bits);
         let qw = quantize_weights(w, self.cfg.bits);
+        for u in &self.units {
+            self.meter.record_dac((w.rows * w.cols) as u64, u.enob);
+        }
         let mut acc = MatI::zeros(x.rows, w.cols);
         let k = x.cols;
         let mut k0 = 0;
@@ -162,7 +326,7 @@ impl RnsCore {
             let k1 = (k0 + self.cfg.h).min(k);
             let xt = qa.q.slice_cols(k0, k1);
             let wt = qw.q.slice_rows(k0, k1);
-            let part = self.tile_mvm(&xt, &wt);
+            let part = self.tile_mvm_unprepared(&xt, &wt);
             for (a, &p) in acc.data.iter_mut().zip(&part.data) {
                 *a += p;
             }
@@ -171,30 +335,39 @@ impl RnsCore {
         dequantize(&acc, &qa, &qw)
     }
 
-    /// One tile through the analog channels + decode (signed output).
-    fn tile_mvm(&mut self, xt: &MatI, wt: &MatI) -> MatI {
+    /// One prepared tile through the analog channels + decode (signed
+    /// output).  Only activations are converted here; the weight side
+    /// comes pre-staged from the plan.
+    fn tile_mvm_prepared(&mut self, xt: &MatI, wt: &PreparedWeights) -> MatI {
         let moduli = &self.all_ctx.moduli;
-        // forward conversion (digital, cheap — §V).  Perf (§Perf log):
-        // rem_euclid by a runtime modulus compiles to a hardware divide per
-        // element; Barrett reduction of the offset-shifted value halves the
-        // whole-core GEMM time.  `offset` is a multiple of m making every
-        // quantized input non-negative (|v| <= qmax << offset).
-        let forward = |mat: &MatI, m: u64| -> MatI {
-            let red = crate::rns::BarrettReducer::new(m);
-            let qm = crate::quant::qmax(self.cfg.bits).unsigned_abs();
-            let offset = (qm / m + 1) * m;
-            debug_assert!(mat.data.iter().all(|&v| v.unsigned_abs() <= qm));
-            mat.map(|v| red.reduce((v + offset as i64) as u64) as i64)
-        };
-        let xr: Vec<MatI> = moduli.iter().map(|&m| forward(xt, m)).collect();
-        let wr: Vec<MatI> = moduli.iter().map(|&m| forward(wt, m)).collect();
+        let xr: Vec<MatI> =
+            moduli.iter().map(|&m| forward_residues(xt, m, self.cfg.bits)).collect();
         for u in &self.units {
-            self.meter
-                .record_dac((xt.rows * xt.cols + wt.rows * wt.cols) as u64, u.enob);
+            self.meter.record_dac((xt.rows * xt.cols) as u64, u.enob);
         }
         // clean channel outputs (the engine is the ideal analog array)
+        let clean = self.engine.matmul_mod_prepared(&xr, wt);
+        self.capture_and_decode(clean)
+    }
+
+    /// One unprepared tile: forward-converts both operands (reference path).
+    fn tile_mvm_unprepared(&mut self, xt: &MatI, wt: &MatI) -> MatI {
+        let moduli = &self.all_ctx.moduli;
+        let xr: Vec<MatI> =
+            moduli.iter().map(|&m| forward_residues(xt, m, self.cfg.bits)).collect();
+        let wr: Vec<MatI> =
+            moduli.iter().map(|&m| forward_residues(wt, m, self.cfg.bits)).collect();
+        for u in &self.units {
+            self.meter.record_dac((xt.rows * xt.cols) as u64, u.enob);
+        }
         let clean = self.engine.matmul_mod(&xr, &wr, moduli);
-        // ADC capture with noise, per channel
+        self.capture_and_decode(clean)
+    }
+
+    /// ADC capture with noise, per channel, then decode.  Serial on purpose:
+    /// all rng draws happen here in channel-major order, so outputs are
+    /// identical whatever the engine's parallel schedule was.
+    fn capture_and_decode(&mut self, clean: Vec<MatI>) -> MatI {
         let mut captured: Vec<MatI> = Vec::with_capacity(clean.len());
         for (u, ch) in self.units.iter().zip(&clean) {
             captured.push(u.recapture(ch, &mut self.rng, &mut self.meter));
@@ -206,6 +379,17 @@ impl RnsCore {
     fn decode_tile(&mut self, clean: &[MatI], mut captured: Vec<MatI>) -> MatI {
         let (rows, cols) = (clean[0].rows, clean[0].cols);
         let n = self.units.len();
+        let code = match &self.code {
+            None => {
+                // plain RNS: no retry loop, so the whole tile decodes in
+                // one batch CRT pass (hoisted coefficients, see crt.rs)
+                let elems = (rows * cols) as u64;
+                self.stats.decoded += elems;
+                self.meter.record_crt(elems);
+                return self.all_ctx.crt_signed_tile(&captured);
+            }
+            Some(code) => code,
+        };
         let mut out = MatI::zeros(rows, cols);
         let mut residues = vec![0u64; n];
         for r in 0..rows {
@@ -215,42 +399,39 @@ impl RnsCore {
                 }
                 self.stats.decoded += 1;
                 self.meter.record_crt(1);
-                let value = match &self.code {
-                    None => self.all_ctx.crt_signed(&residues) as i64,
-                    Some(code) => {
-                        let mut attempt = 0;
-                        loop {
-                            match code.decode(&residues) {
-                                Decode::Ok { value, suspects } => {
-                                    if !suspects.is_empty() {
-                                        self.stats.corrected += 1;
-                                    }
-                                    break value as i64;
+                let value = {
+                    let mut attempt = 0;
+                    loop {
+                        match code.decode(&residues) {
+                            Decode::Ok { value, suspects } => {
+                                if !suspects.is_empty() {
+                                    self.stats.corrected += 1;
                                 }
-                                Decode::Detected => {
-                                    self.stats.detections += 1;
-                                    attempt += 1;
-                                    if attempt >= self.cfg.max_attempts {
-                                        self.stats.exhausted += 1;
-                                        // fall back to the maximum-likelihood
-                                        // candidate (most consistent residues)
-                                        break code.decode_best_effort(&residues) as i64;
-                                    }
-                                    // recompute the dot product: fresh noise
-                                    // on each channel's clean value
-                                    for i in 0..n {
-                                        let cv = clean[i].at(r, c) as u64;
-                                        let noisy = self.units[i].noise.apply_residue(
-                                            cv,
-                                            self.units[i].modulus,
-                                            &mut self.rng,
-                                        );
-                                        residues[i] = noisy;
-                                        self.meter.record_adc(1, self.units[i].enob);
-                                        captured[i].set(r, c, noisy as i64);
-                                    }
-                                    self.meter.record_crt(1);
+                                break value as i64;
+                            }
+                            Decode::Detected => {
+                                self.stats.detections += 1;
+                                attempt += 1;
+                                if attempt >= self.cfg.max_attempts {
+                                    self.stats.exhausted += 1;
+                                    // fall back to the maximum-likelihood
+                                    // candidate (most consistent residues)
+                                    break code.decode_best_effort(&residues) as i64;
                                 }
+                                // recompute the dot product: fresh noise
+                                // on each channel's clean value
+                                for i in 0..n {
+                                    let cv = clean[i].at(r, c) as u64;
+                                    let noisy = self.units[i].noise.apply_residue(
+                                        cv,
+                                        self.units[i].modulus,
+                                        &mut self.rng,
+                                    );
+                                    residues[i] = noisy;
+                                    self.meter.record_adc(1, self.units[i].enob);
+                                    captured[i].set(r, c, noisy as i64);
+                                }
+                                self.meter.record_crt(1);
                             }
                         }
                     }
@@ -265,6 +446,12 @@ impl RnsCore {
 impl GemmBackend for RnsCore {
     fn gemm(&mut self, x: &MatF, w: &MatF) -> MatF {
         self.gemm_quantized(x, w)
+    }
+    fn prepare(&mut self, w: &MatF) {
+        self.prepare_weights(w);
+    }
+    fn plans_built(&self) -> u64 {
+        self.plans_built
     }
     fn name(&self) -> String {
         let rr = if self.cfg.redundant > 0 {
@@ -402,5 +589,65 @@ mod tests {
         assert_eq!(core.stats.decoded, 8);
         assert!(core.meter.adc_conversions >= 8 * core.n_channels() as u64);
         assert!(core.meter.total_joules() > 0.0);
+    }
+
+    #[test]
+    fn plan_is_reused_and_weight_dac_charged_once() {
+        let x = rand_mat(11, 2, 128, 1.0);
+        let w = rand_mat(12, 128, 4, 1.0);
+        let mut core = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        core.gemm_quantized(&x, &w);
+        let dac_after_first = core.meter.dac_conversions;
+        let n = core.n_channels() as u64;
+        // first call: weights (128*4) once + inputs (2*128), per channel
+        assert_eq!(dac_after_first, n * (128 * 4 + 2 * 128));
+        assert_eq!(core.plans_built(), 1);
+        core.gemm_quantized(&x, &w);
+        // second call on the same layer: inputs only, no new plan
+        assert_eq!(core.meter.dac_conversions, dac_after_first + n * 2 * 128);
+        assert_eq!(core.plans_built(), 1);
+        // a different weight matrix is a different layer
+        let w2 = rand_mat(13, 128, 4, 1.0);
+        core.gemm_quantized(&x, &w2);
+        assert_eq!(core.plans_built(), 2);
+    }
+
+    #[test]
+    fn prepare_weights_warms_the_cache() {
+        let x = rand_mat(14, 3, 128, 1.0);
+        let w = rand_mat(15, 128, 6, 1.0);
+        let mut core = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        core.prepare_weights(&w);
+        assert_eq!(core.plans_built(), 1);
+        let dac_after_warm = core.meter.dac_conversions;
+        core.gemm_quantized(&x, &w);
+        assert_eq!(core.plans_built(), 1, "warm plan must be reused");
+        let n = core.n_channels() as u64;
+        assert_eq!(core.meter.dac_conversions, dac_after_warm + n * 3 * 128);
+    }
+
+    #[test]
+    fn plan_cache_is_bounded() {
+        // one-shot weight sweeps (fig3-style) must not accumulate plans
+        let x = rand_mat(20, 1, 32, 1.0);
+        let mut core = RnsCore::new(RnsCoreConfig::for_bits(4, 32)).unwrap();
+        for i in 0..(MAX_CACHED_PLANS + 10) {
+            let w = rand_mat(100 + i as u64, 32, 2, 1.0);
+            core.gemm_quantized(&x, &w);
+        }
+        assert_eq!(core.plans_built(), (MAX_CACHED_PLANS + 10) as u64);
+        assert!(core.plans.map.len() <= MAX_CACHED_PLANS);
+        assert_eq!(core.plans.map.len(), core.plans.order.len());
+    }
+
+    #[test]
+    fn prepared_matches_unprepared_reference() {
+        let x = rand_mat(16, 5, 300, 1.0);
+        let w = rand_mat(17, 300, 9, 0.5);
+        let mut a = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        let mut b = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        let ya = a.gemm_quantized(&x, &w);
+        let yb = b.gemm_quantized_unprepared(&x, &w);
+        assert_eq!(ya.data, yb.data, "prepared path must be bit-identical");
     }
 }

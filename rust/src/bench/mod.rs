@@ -148,6 +148,43 @@ impl Bencher {
         out.extend(self.results.iter().map(|r| r.report_line()));
         out.join("\n")
     }
+
+    /// Machine-readable results (hand-rolled JSON — no serde offline).
+    /// Consumed by the perf-trajectory tooling: `cargo bench` writes this
+    /// to `BENCH_gemm.json` at the repo root (see benches/bench_main.rs).
+    pub fn to_json(&self, quick: bool) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:.3}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut entries = Vec::with_capacity(self.results.len());
+        for r in &self.results {
+            let mut fields = vec![
+                format!("\"name\": \"{}\"", esc(&r.name)),
+                format!("\"median_ns\": {}", num(r.median_ns)),
+                format!("\"p95_ns\": {}", num(r.p95_ns)),
+                format!("\"mean_ns\": {}", num(r.mean_ns)),
+                format!("\"iters\": {}", r.iters),
+            ];
+            if let Some((per_iter, unit)) = r.throughput {
+                let rate = per_iter / (r.median_ns * 1e-9);
+                fields.push(format!("\"unit\": \"{}\"", esc(unit)));
+                fields.push(format!("\"rate\": {}", num(rate)));
+            }
+            entries.push(format!("    {{{}}}", fields.join(", ")));
+        }
+        format!(
+            "{{\n  \"schema\": \"rns-analog-bench-v1\",\n  \"quick\": {},\n  \"benches\": [\n{}\n  ]\n}}\n",
+            quick,
+            entries.join(",\n")
+        )
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +214,22 @@ mod tests {
         let rep = b.report();
         assert!(rep.contains('a') && rep.contains('b'));
         assert!(rep.contains("Op/s"));
+    }
+
+    #[test]
+    fn json_has_all_benches_and_rates() {
+        let mut b = Bencher::quick();
+        b.bench("plain \"quoted\"", || 1 + 1);
+        b.bench_with_rate("rated", 1e6, "MAC/s", || 2 + 2);
+        let json = b.to_json(true);
+        assert!(json.contains("\"schema\": \"rns-analog-bench-v1\""));
+        assert!(json.contains("\"quick\": true"));
+        assert!(json.contains("plain \\\"quoted\\\""));
+        assert!(json.contains("\"unit\": \"MAC/s\""));
+        assert!(json.contains("\"rate\": "));
+        // balanced braces/brackets (cheap well-formedness check)
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! the standard serving trade-off (throughput vs tail latency) applied to
 //! the analog core, whose MVM unit amortizes weight-DAC loads across the
 //! batch.
+//!
+//! Grouping by model is also what makes prepared execution effective:
+//! every sample in a formed batch hits the same per-layer `RnsPlan`s
+//! (built once per worker at model-warm time, see server.rs), so the
+//! coordinator reuses one plan per loaded model across all requests and
+//! the engine's batch-row parallelism gets whole batches to split.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

@@ -12,6 +12,9 @@ pub struct ServingMetrics {
     pub failures: u64,
     pub faults_detected: u64,
     pub faults_corrected: u64,
+    /// Per-layer RNS plans built across all workers (should plateau at
+    /// workers × model layers: plans are reused across requests).
+    pub plans_built: u64,
     latency_us: Percentiles,
     queue_us: Percentiles,
     batch_sizes: Percentiles,
@@ -59,6 +62,7 @@ impl ServingMetrics {
             "requests={} samples={} batches={} failures={}\n\
              throughput={:.1} samples/s  median batch={:.1}\n\
              latency p50={:.0}µs p95={:.0}µs p99={:.0}µs  queue p50={:.0}µs\n\
+             layer plans built={}\n\
              faults: detected={} corrected={}",
             self.requests,
             self.samples,
@@ -70,6 +74,7 @@ impl ServingMetrics {
             p95,
             p99,
             q50,
+            self.plans_built,
             self.faults_detected,
             self.faults_corrected,
         )

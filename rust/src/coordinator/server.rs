@@ -260,6 +260,7 @@ fn worker_loop(
     };
     let mut models: HashMap<String, Box<dyn Model>> = HashMap::new();
     let mut faults_before = 0u64;
+    let mut plans_before = 0u64;
 
     while let Ok(msg) = rx.recv() {
         let batch = match msg {
@@ -269,6 +270,16 @@ fn worker_loop(
         if !models.contains_key(&batch.model) {
             match load_model(&cfg.artifacts_dir, &batch.model) {
                 Ok(m) => {
+                    // build the per-layer RNS plans once per (worker, model):
+                    // weights are stationary, so every request after this
+                    // reuses the prepared residues/staging for free
+                    m.warm(backend.as_mut());
+                    crate::log_debug!(
+                        "worker",
+                        "worker {wid}: warmed `{}` ({} layer plans total)",
+                        batch.model,
+                        backend.plans_built()
+                    );
                     models.insert(batch.model.clone(), m);
                 }
                 Err(e) => {
@@ -285,10 +296,17 @@ fn worker_loop(
         let (detected, corrected) = backend_fault_counts(backend.as_ref());
         let batch_faults = detected.saturating_sub(faults_before);
         faults_before = detected;
+        // plans built since the last batch: warm-time builds land in the
+        // first delta, and a steady-state delta > 0 means a layer was first
+        // seen mid-request (a warm() gap worth fixing)
+        let plans_now = backend.plans_built();
+        let plans_delta = plans_now.saturating_sub(plans_before);
+        plans_before = plans_now;
         {
             let mut m = metrics.lock().unwrap();
             m.faults_detected = detected;
             m.faults_corrected = corrected;
+            m.plans_built += plans_delta;
         }
         for (req, offset) in batch.members {
             let n = req.num_samples();

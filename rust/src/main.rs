@@ -299,7 +299,7 @@ fn cmd_pjrt_demo(args: &mut Args) -> i32 {
         .map(|&m| MatI::from_vec(k, n, (0..k * n).map(|_| rng.gen_range(m) as i64).collect()))
         .collect();
     let got = engine.matmul_mod(&xr, &wr, &moduli);
-    let want = NativeEngine.matmul_mod(&xr, &wr, &moduli);
+    let want = NativeEngine::default().matmul_mod(&xr, &wr, &moduli);
     for (ch, (g, w)) in got.iter().zip(&want).enumerate() {
         assert_eq!(g.data, w.data, "channel {ch} mismatch");
     }

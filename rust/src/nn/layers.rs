@@ -10,7 +10,9 @@ use crate::tensor::gemm::gemm_f32;
 use crate::tensor::im2col::{col2im, conv_out_dim, im2col, Padding};
 use crate::tensor::{MatF, Nhwc};
 
-/// Dense: y = x @ w + b through the backend.
+/// Dense: y = x @ w + b through the backend.  For per-layer backend state
+/// (RNS plans), `Model::warm` calls `backend.prepare(w)` on every weight
+/// matrix ahead of time so the first inference pays no plan-build latency.
 pub fn dense(x: &MatF, w: &MatF, b: &[f32], backend: &mut dyn GemmBackend) -> MatF {
     assert_eq!(w.cols, b.len());
     let mut y = backend.gemm(x, w);

@@ -43,6 +43,12 @@ pub trait Model: Send + Sync {
     fn num_classes(&self) -> usize;
     /// FP32 eval accuracy recorded at training time (from the store).
     fn trained_fp32_accuracy(&self) -> f32;
+    /// Pre-build backend per-layer state (RNS plans: weight quantization,
+    /// per-channel residues, u32 staging, weight-DAC accounting) for every
+    /// weight GEMM this model issues.  Weights are stationary, so the
+    /// coordinator calls this once per (worker, model) right after load —
+    /// all later requests reuse the plans.  Default: nothing.
+    fn warm(&self, _backend: &mut dyn GemmBackend) {}
 }
 
 fn get_mat(store: &TensorStore, name: &str, rows: usize, cols: usize) -> Result<MatF, String> {
@@ -141,6 +147,12 @@ impl Model for Mlp {
     fn trained_fp32_accuracy(&self) -> f32 {
         self.acc
     }
+
+    fn warm(&self, backend: &mut dyn GemmBackend) {
+        for w in &self.ws {
+            backend.prepare(w);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -197,6 +209,12 @@ impl Model for TwoLayerCnn {
 
     fn trained_fp32_accuracy(&self) -> f32 {
         self.acc
+    }
+
+    fn warm(&self, backend: &mut dyn GemmBackend) {
+        for w in [&self.conv1_w, &self.conv2_w, &self.fc_w] {
+            backend.prepare(w);
+        }
     }
 }
 
@@ -269,6 +287,15 @@ impl Model for MiniResNet {
 
     fn trained_fp32_accuracy(&self) -> f32 {
         self.acc
+    }
+
+    fn warm(&self, backend: &mut dyn GemmBackend) {
+        backend.prepare(&self.stem_w);
+        for (w1, _, w2, _) in &self.blocks {
+            backend.prepare(w1);
+            backend.prepare(w2);
+        }
+        backend.prepare(&self.fc_w);
     }
 }
 
@@ -402,6 +429,22 @@ impl Model for TinyBert {
     fn trained_fp32_accuracy(&self) -> f32 {
         self.acc
     }
+
+    fn warm(&self, backend: &mut dyn GemmBackend) {
+        for layer in &self.layers {
+            for w in [
+                &layer.wq.0,
+                &layer.wk.0,
+                &layer.wv.0,
+                &layer.wo.0,
+                &layer.ffn1.0,
+                &layer.ffn2.0,
+            ] {
+                backend.prepare(w);
+            }
+        }
+        backend.prepare(&self.cls.0);
+    }
 }
 
 /// Load any zoo model by name from `artifacts/models/<name>.rt`.
@@ -456,6 +499,31 @@ mod tests {
         let imgs = Nhwc::zeros(3, 28, 28, 1);
         let out = mlp.forward(&Batch::Images(imgs), &mut Fp32Backend);
         assert_eq!((out.rows, out.cols), (3, 10));
+    }
+
+    #[test]
+    fn warm_builds_one_plan_per_weight_gemm() {
+        use crate::analog::{RnsCore, RnsCoreConfig};
+        let store = synth_store(&[
+            ("fc0.w", vec![784, 256]),
+            ("fc0.b", vec![256]),
+            ("fc1.w", vec![256, 128]),
+            ("fc1.b", vec![128]),
+            ("fc2.w", vec![128, 10]),
+            ("fc2.b", vec![10]),
+        ]);
+        let mlp = Mlp::from_store(&store).unwrap();
+        let mut core = RnsCore::new(RnsCoreConfig::for_bits(4, 128)).unwrap();
+        mlp.warm(&mut core);
+        assert_eq!(GemmBackend::plans_built(&core), 3);
+        // a forward pass reuses the warm plans instead of building more
+        let imgs = Nhwc::zeros(2, 28, 28, 1);
+        mlp.forward(&Batch::Images(imgs), &mut core);
+        assert_eq!(GemmBackend::plans_built(&core), 3);
+        // the fp32 backend has no per-layer state: warm is a no-op
+        let mut fp32 = Fp32Backend;
+        mlp.warm(&mut fp32);
+        assert_eq!(fp32.plans_built(), 0);
     }
 
     #[test]

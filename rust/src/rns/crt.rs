@@ -6,6 +6,7 @@
 //! headroom is enormous).
 
 use super::moduli::pairwise_coprime;
+use crate::tensor::MatI;
 
 fn egcd(a: i128, b: i128) -> (i128, i128, i128) {
     if b == 0 {
@@ -151,6 +152,50 @@ impl RnsContext {
     pub fn reduce(&self, a: u128) -> u128 {
         a % self.big_m
     }
+
+    /// Batch CRT: decode a whole tile of per-channel outputs in one pass.
+    ///
+    /// `channels[i]` holds channel i's captured residues for every output
+    /// element (all the same shape).  Equivalent to calling `crt_signed`
+    /// per element (signed value truncated to i64, as the cores do), but
+    /// with the per-element residue gather and `(M_i, T_i)` coefficient
+    /// lookups hoisted: the fast path walks each channel's buffer linearly
+    /// against one precomputed coefficient, which vectorizes, then does a
+    /// single reduction sweep.  Perf (§Perf log, DESIGN.md §7).
+    pub fn crt_signed_tile(&self, channels: &[MatI]) -> MatI {
+        assert_eq!(channels.len(), self.moduli.len());
+        let (rows, cols) = (channels[0].rows, channels[0].cols);
+        debug_assert!(channels.iter().all(|c| c.rows == rows && c.cols == cols));
+        let len = rows * cols;
+        let mut out = MatI::zeros(rows, cols);
+        if let Some(fast) = &self.fast {
+            // channel-major accumulation: acc[e] = sum_i r_i[e] * c_i, all
+            // below 2^63 by the fast-path bound, then one reduce+sign pass.
+            let mut acc = vec![0u64; len];
+            for (ch, &c) in channels.iter().zip(&fast.coeff) {
+                for (a, &r) in acc.iter_mut().zip(&ch.data) {
+                    *a += r as u64 * c;
+                }
+            }
+            for (o, &a) in out.data.iter_mut().zip(&acc) {
+                let v = a % fast.big_m;
+                *o = if v > fast.half { v as i64 - fast.big_m as i64 } else { v as i64 };
+            }
+            return out;
+        }
+        // wide fallback: per-element u128 accumulation with the hoisted
+        // crt_coeff table (same math as `crt_signed`)
+        let half = self.big_m / 2;
+        for e in 0..len {
+            let mut a: u128 = 0;
+            for (ch, &c) in channels.iter().zip(&self.crt_coeff) {
+                a = (a + (ch.data[e] as u64 as u128 % self.big_m) * c) % self.big_m;
+            }
+            out.data[e] =
+                if a > half { (a as i128 - self.big_m as i128) as i64 } else { a as i64 };
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +271,35 @@ mod tests {
         for a in [-1000i64, -1, 0, 1, 31, 12345] {
             ctx.forward_into(a, &mut buf);
             assert_eq!(buf, ctx.forward(a));
+        }
+    }
+
+    #[test]
+    fn crt_signed_tile_matches_per_element() {
+        use crate::util::rng::Rng;
+        // fast path (Table-I set) and wide path (big moduli, no fast CRT)
+        for moduli in [vec![63u64, 62, 61, 59], vec![4294967291u64, 4294967279]] {
+            let ctx = RnsContext::new(&moduli).unwrap();
+            let mut rng = Rng::seed_from(11);
+            let (rows, cols) = (5usize, 7usize);
+            let channels: Vec<MatI> = moduli
+                .iter()
+                .map(|&m| {
+                    MatI::from_vec(
+                        rows,
+                        cols,
+                        (0..rows * cols).map(|_| rng.gen_range(m) as i64).collect(),
+                    )
+                })
+                .collect();
+            let got = ctx.crt_signed_tile(&channels);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let residues: Vec<u64> =
+                        channels.iter().map(|ch| ch.at(r, c) as u64).collect();
+                    assert_eq!(got.at(r, c), ctx.crt_signed(&residues) as i64);
+                }
+            }
         }
     }
 

@@ -2,17 +2,23 @@
 //! hot-spot the paper puts on analog hardware.
 //!
 //! Two interchangeable backends sit behind `ModularGemmEngine`:
-//!   * `NativeEngine` — exact i64 + Barrett modular GEMM in rust.  Used by
-//!     the large accuracy sweeps (fast, no shape constraints).
+//!   * `NativeEngine` — exact i64 + Barrett modular GEMM in rust,
+//!     parallelized across residue channels × batch-row blocks with
+//!     `std::thread::scope` (the crate is dependency-free — no rayon).
+//!     Used by the large accuracy sweeps (fast, no shape constraints).
 //!   * `PjrtEngine` (pjrt.rs) — loads the AOT-compiled pallas kernel from
 //!     `artifacts/rns_mvm_b*.hlo.txt` and executes it on the PJRT CPU
 //!     client.  Proves the three-layer composition end-to-end.
 //!
 //! The two are bit-identical by construction (the pallas kernel's blocked
 //! f32 accumulation is exact below 2^24 — see DESIGN.md §7), which the
-//! integration tests assert.
+//! integration tests assert.  Parallelism cannot change results either:
+//! every channel/row-block task is exact modular arithmetic, so the output
+//! is independent of scheduling — noise/ADC capture stays on the serial
+//! side (`RnsCore`), keeping seeded runs deterministic.
 
-use crate::tensor::gemm::gemm_mod;
+use crate::runtime::plan::PreparedWeights;
+use crate::tensor::gemm::{gemm_mod, gemm_mod_staged};
 use crate::tensor::MatI;
 
 /// Batched per-channel modular matmul: for each channel i,
@@ -24,23 +30,159 @@ pub trait ModularGemmEngine {
     /// `x_res[i]`: (B, K) residues; `w_res[i]`: (K, N) residues.
     fn matmul_mod(&mut self, x_res: &[MatI], w_res: &[MatI], moduli: &[u64]) -> Vec<MatI>;
 
+    /// Per-channel modular matmul against weights prepared once per layer
+    /// (`RnsPlan` tile).  Default implementation falls back to the
+    /// unprepared path through the plan's plain residue matrices, so
+    /// engines like `PjrtEngine` keep working without a prepared kernel.
+    fn matmul_mod_prepared(&mut self, x_res: &[MatI], w: &PreparedWeights) -> Vec<MatI> {
+        self.matmul_mod(x_res, &w.res, &w.moduli)
+    }
+
     /// Human-readable backend name (for reports/metrics).
     fn name(&self) -> &'static str;
 }
 
+/// Don't pay thread-spawn latency on tiles too small to amortize it
+/// (~tens of µs per spawn vs ~1 MAC/ns serial throughput).
+const PARALLEL_MAC_THRESHOLD: usize = 1 << 18;
+
+/// Minimum MACs of work per spawned worker: the worker count shrinks on
+/// small tiles so spawn cost stays a fraction of the compute it buys.
+const MIN_MACS_PER_WORKER: usize = 1 << 17;
+
+/// Run `n_tasks` indexed tasks on at most `workers` scoped threads pulling
+/// from a shared atomic counter (no thread pool — the crate is
+/// dependency-free — but also never more spawns than workers, so a
+/// configured thread cap is honored exactly).  Results come back in task
+/// order; exactness of the tasks makes scheduling invisible.
+fn run_indexed<T, F>(workers: usize, n_tasks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n_tasks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers.min(n_tasks).max(1))
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_tasks {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("gemm worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|v| v.expect("every task ran")).collect()
+}
+
 /// Pure-rust exact modular GEMM engine.
-#[derive(Default)]
-pub struct NativeEngine;
+pub struct NativeEngine {
+    /// Worker-thread cap: 0 = auto (`RNS_NATIVE_THREADS` env var, else
+    /// `available_parallelism`); 1 = force the serial reference path.
+    pub threads: usize,
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine { threads: 0 }
+    }
+}
+
+impl NativeEngine {
+    /// Serial reference engine (single-threaded, bit-identical to the
+    /// parallel default — used by determinism tests and bench baselines).
+    pub fn serial() -> Self {
+        NativeEngine { threads: 1 }
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        NativeEngine { threads }
+    }
+
+    fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            return self.threads;
+        }
+        if let Ok(v) = std::env::var("RNS_NATIVE_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
 
 impl ModularGemmEngine for NativeEngine {
     fn matmul_mod(&mut self, x_res: &[MatI], w_res: &[MatI], moduli: &[u64]) -> Vec<MatI> {
         assert_eq!(x_res.len(), moduli.len());
         assert_eq!(w_res.len(), moduli.len());
-        moduli
-            .iter()
-            .zip(x_res.iter().zip(w_res))
-            .map(|(&m, (x, w))| gemm_mod(x, w, m))
-            .collect()
+        let threads = self.effective_threads();
+        let macs: usize =
+            x_res.iter().zip(w_res).map(|(x, w)| x.rows * x.cols * w.cols).sum();
+        if threads <= 1 || moduli.len() <= 1 || macs < PARALLEL_MAC_THRESHOLD {
+            return moduli
+                .iter()
+                .zip(x_res.iter().zip(w_res))
+                .map(|(&m, (x, w))| gemm_mod(x, w, m))
+                .collect();
+        }
+        // channel-level parallelism: each task stages + runs one channel
+        let workers = threads.min(macs / MIN_MACS_PER_WORKER).min(moduli.len()).max(2);
+        run_indexed(workers, moduli.len(), |ch| gemm_mod(&x_res[ch], &w_res[ch], moduli[ch]))
+    }
+
+    fn matmul_mod_prepared(&mut self, x_res: &[MatI], w: &PreparedWeights) -> Vec<MatI> {
+        let n_ch = w.moduli.len();
+        assert_eq!(x_res.len(), n_ch);
+        let b = x_res[0].rows;
+        debug_assert!(x_res.iter().all(|x| x.rows == b && x.cols == w.rows));
+        let threads = self.effective_threads();
+        let macs = b * w.rows * w.cols * n_ch;
+        if threads <= 1 || macs < PARALLEL_MAC_THRESHOLD || b == 0 {
+            return (0..n_ch)
+                .map(|ch| gemm_mod_staged(&x_res[ch], &w.staged[ch], w.cols, w.moduli[ch]))
+                .collect();
+        }
+        // worker count scaled to the work, never above the configured cap
+        let workers = threads.min(macs / MIN_MACS_PER_WORKER).max(2);
+        // channels × batch-row blocks, ~2 tasks per worker for balance
+        let blocks = ((2 * workers + n_ch - 1) / n_ch).clamp(1, b);
+        let rows_per = (b + blocks - 1) / blocks;
+        let mut tasks: Vec<(usize, usize, usize)> = Vec::with_capacity(n_ch * blocks);
+        for ch in 0..n_ch {
+            let mut r0 = 0;
+            while r0 < b {
+                let r1 = (r0 + rows_per).min(b);
+                tasks.push((ch, r0, r1));
+                r0 = r1;
+            }
+        }
+        let parts: Vec<(usize, usize, MatI)> = run_indexed(workers, tasks.len(), |t| {
+            let (ch, r0, r1) = tasks[t];
+            let xt = x_res[ch].slice_rows(r0, r1);
+            (ch, r0, gemm_mod_staged(&xt, &w.staged[ch], w.cols, w.moduli[ch]))
+        });
+        let mut out: Vec<MatI> = (0..n_ch).map(|_| MatI::zeros(b, w.cols)).collect();
+        for (ch, r0, part) in parts {
+            let dst = &mut out[ch].data[r0 * w.cols..r0 * w.cols + part.data.len()];
+            dst.copy_from_slice(&part.data);
+        }
+        out
     }
 
     fn name(&self) -> &'static str {
@@ -52,7 +194,21 @@ impl ModularGemmEngine for NativeEngine {
 mod tests {
     use super::*;
     use crate::rns::RnsContext;
+    use crate::runtime::plan::PreparedWeights;
     use crate::util::rng::Rng;
+
+    fn rand_residues(rng: &mut Rng, moduli: &[u64], rows: usize, cols: usize) -> Vec<MatI> {
+        moduli
+            .iter()
+            .map(|&m| {
+                MatI::from_vec(
+                    rows,
+                    cols,
+                    (0..rows * cols).map(|_| rng.gen_range(m) as i64).collect(),
+                )
+            })
+            .collect()
+    }
 
     #[test]
     fn native_engine_matches_crt_exactness() {
@@ -65,7 +221,7 @@ mod tests {
             ctx.moduli.iter().map(|&m| x.map(|v| v.rem_euclid(m as i64))).collect();
         let wr: Vec<MatI> =
             ctx.moduli.iter().map(|&m| w.map(|v| v.rem_euclid(m as i64))).collect();
-        let mut eng = NativeEngine;
+        let mut eng = NativeEngine::default();
         let out = eng.matmul_mod(&xr, &wr, &ctx.moduli);
         // CRT across channels == exact integer matmul
         let exact = crate::tensor::gemm::gemm_i64(&x, &w);
@@ -74,6 +230,53 @@ mod tests {
                 let res: Vec<u64> = out.iter().map(|ch| ch.at(r, c) as u64).collect();
                 assert_eq!(ctx.crt_signed(&res), exact.at(r, c) as i128);
             }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_unprepared() {
+        let moduli = [63u64, 62, 61, 59];
+        let mut rng = Rng::seed_from(2);
+        // large enough to clear PARALLEL_MAC_THRESHOLD
+        let xr = rand_residues(&mut rng, &moduli, 16, 96);
+        let wr = rand_residues(&mut rng, &moduli, 96, 64);
+        let want = NativeEngine::serial().matmul_mod(&xr, &wr, &moduli);
+        let got = NativeEngine::with_threads(4).matmul_mod(&xr, &wr, &moduli);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.data, w.data);
+        }
+    }
+
+    #[test]
+    fn prepared_matches_unprepared_all_engines_paths() {
+        let moduli = [255u64, 254, 253];
+        let mut rng = Rng::seed_from(3);
+        for (b, k, n) in [(1usize, 17usize, 5usize), (16, 128, 96), (7, 64, 300)] {
+            let xr = rand_residues(&mut rng, &moduli, b, k);
+            let wr = rand_residues(&mut rng, &moduli, k, n);
+            let prepared = PreparedWeights::new(wr.clone(), &moduli);
+            let want = NativeEngine::serial().matmul_mod(&xr, &wr, &moduli);
+            let serial = NativeEngine::serial().matmul_mod_prepared(&xr, &prepared);
+            let parallel = NativeEngine::with_threads(4).matmul_mod_prepared(&xr, &prepared);
+            for ((g, p), w) in serial.iter().zip(&parallel).zip(&want) {
+                assert_eq!(g.data, w.data, "serial prepared ({b},{k},{n})");
+                assert_eq!(p.data, w.data, "parallel prepared ({b},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_single_row_batch() {
+        // b=1 cannot be split into row blocks; must still be correct
+        let moduli = [63u64, 62];
+        let mut rng = Rng::seed_from(4);
+        let xr = rand_residues(&mut rng, &moduli, 1, 512);
+        let wr = rand_residues(&mut rng, &moduli, 512, 512);
+        let prepared = PreparedWeights::new(wr.clone(), &moduli);
+        let want = NativeEngine::serial().matmul_mod(&xr, &wr, &moduli);
+        let got = NativeEngine::with_threads(8).matmul_mod_prepared(&xr, &prepared);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.data, w.data);
         }
     }
 }

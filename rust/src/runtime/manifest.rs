@@ -1,10 +1,11 @@
 //! `artifacts/manifest.txt` parser — key=value metadata written by aot.py
 //! (shapes + per-bit-width moduli) so the rust loader can validate what
 //! was baked into each HLO artifact without a serde dependency.
+//!
+//! Errors are plain `String`s: the crate is dependency-free by default
+//! (see Cargo.toml), so no `anyhow` here.
 
 use std::collections::BTreeMap;
-
-use anyhow::{anyhow, Context, Result};
 
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -15,7 +16,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn parse(text: &str) -> Result<Self> {
+    pub fn parse(text: &str) -> Result<Self, String> {
         let mut batch = None;
         let mut h = None;
         let mut moduli = BTreeMap::new();
@@ -26,32 +27,37 @@ impl Manifest {
             }
             let (k, v) = line
                 .split_once('=')
-                .ok_or_else(|| anyhow!("manifest line {}: `{line}`", i + 1))?;
+                .ok_or_else(|| format!("manifest line {}: `{line}`", i + 1))?;
             match k {
-                "batch" => batch = Some(v.parse::<usize>().context("batch")?),
-                "h" => h = Some(v.parse::<usize>().context("h")?),
+                "batch" => {
+                    batch = Some(v.parse::<usize>().map_err(|e| format!("batch: {e}"))?)
+                }
+                "h" => h = Some(v.parse::<usize>().map_err(|e| format!("h: {e}"))?),
                 _ if k.starts_with("moduli_b") => {
-                    let bits: u32 = k["moduli_b".len()..].parse().context("bits suffix")?;
+                    let bits: u32 = k["moduli_b".len()..]
+                        .parse()
+                        .map_err(|e| format!("bits suffix: {e}"))?;
                     let mods = v
                         .split(',')
                         .map(|s| s.trim().parse::<u64>())
-                        .collect::<std::result::Result<Vec<_>, _>>()
-                        .with_context(|| format!("moduli list for b={bits}"))?;
+                        .collect::<Result<Vec<_>, _>>()
+                        .map_err(|e| format!("moduli list for b={bits}: {e}"))?;
                     moduli.insert(bits, mods);
                 }
-                other => return Err(anyhow!("manifest: unknown key `{other}`")),
+                other => return Err(format!("manifest: unknown key `{other}`")),
             }
         }
         Ok(Manifest {
-            batch: batch.ok_or_else(|| anyhow!("manifest missing `batch`"))?,
-            h: h.ok_or_else(|| anyhow!("manifest missing `h`"))?,
+            batch: batch.ok_or("manifest missing `batch`")?,
+            h: h.ok_or("manifest missing `h`")?,
             moduli,
         })
     }
 
-    pub fn load(artifacts_dir: &str) -> Result<Self> {
+    pub fn load(artifacts_dir: &str) -> Result<Self, String> {
         let path = format!("{artifacts_dir}/manifest.txt");
-        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("read {path}: {e}"))?;
         Self::parse(&text)
     }
 }

@@ -1,13 +1,16 @@
 //! Runtime layer: the pluggable modular-GEMM engines (native rust and the
-//! PJRT-loaded AOT pallas kernel) plus the artifact manifest loader.
+//! PJRT-loaded AOT pallas kernel), prepared-layer execution plans, and the
+//! artifact manifest loader.
 
 pub mod engine;
 pub mod manifest;
 pub mod pjrt;
+pub mod plan;
 
 pub use engine::{ModularGemmEngine, NativeEngine};
 pub use manifest::Manifest;
 pub use pjrt::{F32Input, PjrtEngine, PjrtExecutable, PjrtRuntime};
+pub use plan::{PlanTile, PreparedWeights, RnsPlan};
 
 /// Default artifacts directory (relative to the workspace root).
 pub fn default_artifacts_dir() -> String {

@@ -3,204 +3,314 @@
 //! `xla` crate.  This is the production hot path of the three-layer
 //! architecture — python never runs at serving time.
 //!
+//! The real implementation needs the `xla` + `anyhow` crates and is gated
+//! behind the `pjrt` cargo feature (the default build is dependency-free —
+//! see Cargo.toml).  Without the feature, a stub with the identical public
+//! surface is compiled instead; every entry point fails cleanly at
+//! construction time, so callers (CLI, coordinator, benches, tests) degrade
+//! gracefully rather than failing to link.
+//!
 //! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+mod real {
+    use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::engine::ModularGemmEngine;
-use crate::tensor::MatI;
+    use crate::runtime::engine::ModularGemmEngine;
+    use crate::tensor::MatI;
 
-/// A PJRT CPU client (one per process; compile artifacts against it).
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(PjrtRuntime { client })
+    /// A PJRT CPU client (one per process; compile artifacts against it).
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(PjrtRuntime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile one HLO-text artifact.
+        pub fn load(&self, path: &str) -> Result<PjrtExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compile {path}"))?;
+            Ok(PjrtExecutable { exe, path: path.to_string() })
+        }
     }
 
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, path: &str) -> Result<PjrtExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {path}"))?;
-        Ok(PjrtExecutable { exe, path: path.to_string() })
+    /// One compiled executable (jax-lowered with `return_tuple=True`, so the
+    /// output is always a 1-tuple).
+    pub struct PjrtExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        path: String,
     }
-}
 
-/// One compiled executable (jax-lowered with `return_tuple=True`, so the
-/// output is always a 1-tuple).
-pub struct PjrtExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    path: String,
-}
+    /// A typed input buffer: f32 data + dims.
+    pub struct F32Input<'a> {
+        pub data: &'a [f32],
+        pub dims: Vec<i64>,
+    }
 
-/// A typed input buffer: f32 data + dims.
-pub struct F32Input<'a> {
-    pub data: &'a [f32],
-    pub dims: Vec<i64>,
-}
+    impl PjrtExecutable {
+        /// Execute with f32 inputs; returns the flattened f32 output of the
+        /// single tuple element.
+        pub fn run_f32(&self, inputs: &[F32Input]) -> Result<Vec<f32>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for inp in inputs {
+                let expect: i64 = inp.dims.iter().product();
+                if expect as usize != inp.data.len() {
+                    return Err(anyhow!(
+                        "{}: input dims {:?} need {} values, got {}",
+                        self.path,
+                        inp.dims,
+                        expect,
+                        inp.data.len()
+                    ));
+                }
+                literals.push(
+                    xla::Literal::vec1(inp.data)
+                        .reshape(&inp.dims)
+                        .with_context(|| format!("reshape input to {:?}", inp.dims))?,
+                );
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("execute {}", self.path))?;
+            let lit = result[0][0].to_literal_sync().context("fetch output literal")?;
+            let out = lit.to_tuple1().context("unwrap 1-tuple output")?;
+            out.to_vec::<f32>().context("output to f32 vec")
+        }
+    }
 
-impl PjrtExecutable {
-    /// Execute with f32 inputs; returns the flattened f32 output of the
-    /// single tuple element.
-    pub fn run_f32(&self, inputs: &[F32Input]) -> Result<Vec<f32>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let expect: i64 = inp.dims.iter().product();
-            if expect as usize != inp.data.len() {
+    /// `ModularGemmEngine` backed by the AOT pallas kernel artifact
+    /// `rns_mvm_b{bits}.hlo.txt`: shapes fixed at AOT time to
+    /// (n, BATCH, H) x (n, H, H); larger problems are tiled and modularly
+    /// accumulated in rust, smaller ones zero-padded (padding residues with 0
+    /// is exact — zero rows/cols contribute nothing to the dot products).
+    pub struct PjrtEngine {
+        exec: PjrtExecutable,
+        pub moduli: Vec<u64>,
+        pub batch: usize,
+        pub h: usize,
+    }
+
+    impl PjrtEngine {
+        /// Load the engine for a bit-width from the artifacts directory,
+        /// cross-checking the baked moduli against `manifest.txt`.
+        pub fn load(runtime: &PjrtRuntime, artifacts_dir: &str, bits: u32) -> Result<Self> {
+            let manifest =
+                super::super::manifest::Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+            let moduli = manifest
+                .moduli
+                .get(&bits)
+                .ok_or_else(|| anyhow!("manifest has no moduli for b={bits}"))?
+                .clone();
+            let path = format!("{artifacts_dir}/rns_mvm_b{bits}.hlo.txt");
+            let exec = runtime.load(&path)?;
+            Ok(PjrtEngine { exec, moduli, batch: manifest.batch, h: manifest.h })
+        }
+
+        /// One fixed-shape execution: channels padded to (n, batch, h)x(n, h, h).
+        fn run_tile(&self, x_res: &[MatI], w_res: &[MatI]) -> Result<Vec<MatI>> {
+            let n = self.moduli.len();
+            let (b, k) = (x_res[0].rows, x_res[0].cols);
+            let nn = w_res[0].cols;
+            assert!(b <= self.batch && k <= self.h && nn <= self.h, "tile exceeds artifact shape");
+            let mut x_buf = vec![0.0f32; n * self.batch * self.h];
+            let mut w_buf = vec![0.0f32; n * self.h * self.h];
+            for (ch, x) in x_res.iter().enumerate() {
+                for r in 0..b {
+                    for c in 0..k {
+                        x_buf[(ch * self.batch + r) * self.h + c] = x.at(r, c) as f32;
+                    }
+                }
+            }
+            for (ch, w) in w_res.iter().enumerate() {
+                for r in 0..k {
+                    for c in 0..nn {
+                        w_buf[(ch * self.h + r) * self.h + c] = w.at(r, c) as f32;
+                    }
+                }
+            }
+            let out = self.exec.run_f32(&[
+                F32Input { data: &x_buf, dims: vec![n as i64, self.batch as i64, self.h as i64] },
+                F32Input { data: &w_buf, dims: vec![n as i64, self.h as i64, self.h as i64] },
+            ])?;
+            let mut res = Vec::with_capacity(n);
+            for ch in 0..n {
+                let mut m = MatI::zeros(b, nn);
+                for r in 0..b {
+                    for c in 0..nn {
+                        m.set(r, c, out[(ch * self.batch + r) * self.h + c] as i64);
+                    }
+                }
+                res.push(m);
+            }
+            Ok(res)
+        }
+
+        fn matmul_mod_impl(
+            &mut self,
+            x_res: &[MatI],
+            w_res: &[MatI],
+            moduli: &[u64],
+        ) -> Result<Vec<MatI>> {
+            if moduli != self.moduli.as_slice() {
                 return Err(anyhow!(
-                    "{}: input dims {:?} need {} values, got {}",
-                    self.path,
-                    inp.dims,
-                    expect,
-                    inp.data.len()
+                    "moduli mismatch: engine baked {:?}, caller asked {:?}",
+                    self.moduli,
+                    moduli
                 ));
             }
-            literals.push(
-                xla::Literal::vec1(inp.data)
-                    .reshape(&inp.dims)
-                    .with_context(|| format!("reshape input to {:?}", inp.dims))?,
-            );
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("execute {}", self.path))?;
-        let lit = result[0][0].to_literal_sync().context("fetch output literal")?;
-        let out = lit.to_tuple1().context("unwrap 1-tuple output")?;
-        out.to_vec::<f32>().context("output to f32 vec")
-    }
-}
-
-/// `ModularGemmEngine` backed by the AOT pallas kernel artifact
-/// `rns_mvm_b{bits}.hlo.txt`: shapes fixed at AOT time to
-/// (n, BATCH, H) x (n, H, H); larger problems are tiled and modularly
-/// accumulated in rust, smaller ones zero-padded (padding residues with 0
-/// is exact — zero rows/cols contribute nothing to the dot products).
-pub struct PjrtEngine {
-    exec: PjrtExecutable,
-    pub moduli: Vec<u64>,
-    pub batch: usize,
-    pub h: usize,
-}
-
-impl PjrtEngine {
-    /// Load the engine for a bit-width from the artifacts directory,
-    /// cross-checking the baked moduli against `manifest.txt`.
-    pub fn load(runtime: &PjrtRuntime, artifacts_dir: &str, bits: u32) -> Result<Self> {
-        let manifest = super::manifest::Manifest::load(artifacts_dir)?;
-        let moduli = manifest
-            .moduli
-            .get(&bits)
-            .ok_or_else(|| anyhow!("manifest has no moduli for b={bits}"))?
-            .clone();
-        let path = format!("{artifacts_dir}/rns_mvm_b{bits}.hlo.txt");
-        let exec = runtime.load(&path)?;
-        Ok(PjrtEngine { exec, moduli, batch: manifest.batch, h: manifest.h })
-    }
-
-    /// One fixed-shape execution: channels padded to (n, batch, h)x(n, h, h).
-    fn run_tile(&self, x_res: &[MatI], w_res: &[MatI]) -> Result<Vec<MatI>> {
-        let n = self.moduli.len();
-        let (b, k) = (x_res[0].rows, x_res[0].cols);
-        let nn = w_res[0].cols;
-        assert!(b <= self.batch && k <= self.h && nn <= self.h, "tile exceeds artifact shape");
-        let mut x_buf = vec![0.0f32; n * self.batch * self.h];
-        let mut w_buf = vec![0.0f32; n * self.h * self.h];
-        for (ch, x) in x_res.iter().enumerate() {
-            for r in 0..b {
-                for c in 0..k {
-                    x_buf[(ch * self.batch + r) * self.h + c] = x.at(r, c) as f32;
-                }
-            }
-        }
-        for (ch, w) in w_res.iter().enumerate() {
-            for r in 0..k {
-                for c in 0..nn {
-                    w_buf[(ch * self.h + r) * self.h + c] = w.at(r, c) as f32;
-                }
-            }
-        }
-        let out = self.exec.run_f32(&[
-            F32Input { data: &x_buf, dims: vec![n as i64, self.batch as i64, self.h as i64] },
-            F32Input { data: &w_buf, dims: vec![n as i64, self.h as i64, self.h as i64] },
-        ])?;
-        let mut res = Vec::with_capacity(n);
-        for ch in 0..n {
-            let mut m = MatI::zeros(b, nn);
-            for r in 0..b {
-                for c in 0..nn {
-                    m.set(r, c, out[(ch * self.batch + r) * self.h + c] as i64);
-                }
-            }
-            res.push(m);
-        }
-        Ok(res)
-    }
-
-    fn matmul_mod_impl(&mut self, x_res: &[MatI], w_res: &[MatI], moduli: &[u64]) -> Result<Vec<MatI>> {
-        if moduli != self.moduli.as_slice() {
-            return Err(anyhow!(
-                "moduli mismatch: engine baked {:?}, caller asked {:?}",
-                self.moduli,
-                moduli
-            ));
-        }
-        let (b, k) = (x_res[0].rows, x_res[0].cols);
-        let nn = w_res[0].cols;
-        let n = moduli.len();
-        let mut out: Vec<MatI> = (0..n).map(|_| MatI::zeros(b, nn)).collect();
-        // tile over batch rows, K, and N; modular accumulation across K tiles
-        let mut b0 = 0;
-        while b0 < b {
-            let b1 = (b0 + self.batch).min(b);
-            let mut n0 = 0;
-            while n0 < nn {
-                let n1 = (n0 + self.h).min(nn);
-                let mut k0 = 0;
-                while k0 < k {
-                    let k1 = (k0 + self.h).min(k);
-                    let xt: Vec<MatI> =
-                        x_res.iter().map(|x| x.slice_rows(b0, b1).slice_cols(k0, k1)).collect();
-                    let wt: Vec<MatI> =
-                        w_res.iter().map(|w| w.slice_rows(k0, k1).slice_cols(n0, n1)).collect();
-                    let part = self.run_tile(&xt, &wt)?;
-                    for (ch, p) in part.iter().enumerate() {
-                        let m = moduli[ch] as i64;
-                        for r in 0..p.rows {
-                            for c in 0..p.cols {
-                                let cur = out[ch].at(b0 + r, n0 + c);
-                                out[ch].set(b0 + r, n0 + c, (cur + p.at(r, c)) % m);
+            let (b, k) = (x_res[0].rows, x_res[0].cols);
+            let nn = w_res[0].cols;
+            let n = moduli.len();
+            let mut out: Vec<MatI> = (0..n).map(|_| MatI::zeros(b, nn)).collect();
+            // tile over batch rows, K, and N; modular accumulation across K tiles
+            let mut b0 = 0;
+            while b0 < b {
+                let b1 = (b0 + self.batch).min(b);
+                let mut n0 = 0;
+                while n0 < nn {
+                    let n1 = (n0 + self.h).min(nn);
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + self.h).min(k);
+                        let xt: Vec<MatI> =
+                            x_res.iter().map(|x| x.slice_rows(b0, b1).slice_cols(k0, k1)).collect();
+                        let wt: Vec<MatI> =
+                            w_res.iter().map(|w| w.slice_rows(k0, k1).slice_cols(n0, n1)).collect();
+                        let part = self.run_tile(&xt, &wt)?;
+                        for (ch, p) in part.iter().enumerate() {
+                            let m = moduli[ch] as i64;
+                            for r in 0..p.rows {
+                                for c in 0..p.cols {
+                                    let cur = out[ch].at(b0 + r, n0 + c);
+                                    out[ch].set(b0 + r, n0 + c, (cur + p.at(r, c)) % m);
+                                }
                             }
                         }
+                        k0 = k1;
                     }
-                    k0 = k1;
+                    n0 = n1;
                 }
-                n0 = n1;
+                b0 = b1;
             }
-            b0 = b1;
+            Ok(out)
         }
-        Ok(out)
+    }
+
+    impl ModularGemmEngine for PjrtEngine {
+        fn matmul_mod(&mut self, x_res: &[MatI], w_res: &[MatI], moduli: &[u64]) -> Vec<MatI> {
+            self.matmul_mod_impl(x_res, w_res, moduli)
+                .unwrap_or_else(|e| panic!("PJRT modular matmul failed: {e:#}"))
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
 
-impl ModularGemmEngine for PjrtEngine {
-    fn matmul_mod(&mut self, x_res: &[MatI], w_res: &[MatI], moduli: &[u64]) -> Vec<MatI> {
-        self.matmul_mod_impl(x_res, w_res, moduli)
-            .unwrap_or_else(|e| panic!("PJRT modular matmul failed: {e:#}"))
+#[cfg(feature = "pjrt")]
+pub use real::{F32Input, PjrtEngine, PjrtExecutable, PjrtRuntime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+
+    use crate::runtime::engine::ModularGemmEngine;
+    use crate::tensor::MatI;
+
+    /// Error returned by every stub entry point.
+    #[derive(Clone, Copy, Debug)]
+    pub struct PjrtUnavailable;
+
+    impl fmt::Display for PjrtUnavailable {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(
+                f,
+                "PJRT support not compiled in (rebuild with `--features pjrt` \
+                 and the vendored `xla`/`anyhow` crates)"
+            )
+        }
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    impl std::error::Error for PjrtUnavailable {}
+
+    /// Stub PJRT client: construction always fails, so no downstream state
+    /// (executables, engines) can ever exist in a stub build.
+    pub struct PjrtRuntime {
+        _priv: (),
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self, PjrtUnavailable> {
+            Err(PjrtUnavailable)
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn load(&self, _path: &str) -> Result<PjrtExecutable, PjrtUnavailable> {
+            Err(PjrtUnavailable)
+        }
+    }
+
+    pub struct PjrtExecutable {
+        _priv: (),
+    }
+
+    impl PjrtExecutable {
+        pub fn run_f32(&self, _inputs: &[F32Input]) -> Result<Vec<f32>, PjrtUnavailable> {
+            Err(PjrtUnavailable)
+        }
+    }
+
+    /// A typed input buffer: f32 data + dims (same shape as the real one so
+    /// call sites compile unchanged).
+    pub struct F32Input<'a> {
+        pub data: &'a [f32],
+        pub dims: Vec<i64>,
+    }
+
+    pub struct PjrtEngine {
+        pub moduli: Vec<u64>,
+        pub batch: usize,
+        pub h: usize,
+        _priv: (),
+    }
+
+    impl PjrtEngine {
+        pub fn load(
+            _runtime: &PjrtRuntime,
+            _artifacts_dir: &str,
+            _bits: u32,
+        ) -> Result<Self, PjrtUnavailable> {
+            Err(PjrtUnavailable)
+        }
+    }
+
+    impl ModularGemmEngine for PjrtEngine {
+        fn matmul_mod(&mut self, _x: &[MatI], _w: &[MatI], _moduli: &[u64]) -> Vec<MatI> {
+            unreachable!("stub PjrtEngine cannot be constructed")
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{F32Input, PjrtEngine, PjrtExecutable, PjrtRuntime};

@@ -1,0 +1,195 @@
+//! Prepared-layer execution plans: the weight-stationary half of the RNS
+//! dataflow, done once per layer instead of once per GEMM call.
+//!
+//! The paper's Fig. 2 pipeline has a static half (quantize the weights,
+//! forward-convert them into every residue channel, load them into the
+//! analog arrays) and a dynamic half (everything that depends on the
+//! activations).  The seed implementation redid the static half on every
+//! `gemm_quantized` call — and `gemm_mod` additionally re-staged the
+//! weight residues as packed `u32` on every invocation.  An `RnsPlan`
+//! hoists all of it: one plan per (weight matrix, core config), holding
+//! per-K-tile, per-channel residue matrices plus their `u32` staging, so
+//! the hot path touches only activations.
+//!
+//! Plans are engine-agnostic: `PreparedWeights` keeps both the plain
+//! residue matrices (any `ModularGemmEngine` can fall back to its
+//! unprepared `matmul_mod`) and the packed staging the native
+//! cache-blocked kernel consumes directly.
+
+use crate::quant::{qmax, quantize_weights, QuantWeights};
+use crate::rns::BarrettReducer;
+use crate::tensor::gemm::stage_weights_u32;
+use crate::tensor::{MatF, MatI};
+
+/// Forward conversion of a quantized (signed) tile into residues `[0, m)`.
+///
+/// Perf (§Perf log, DESIGN.md): `rem_euclid` by a runtime modulus compiles
+/// to a hardware divide per element; Barrett reduction of the
+/// offset-shifted value halves the whole-core GEMM time.  `offset` is a
+/// multiple of `m` making every quantized input non-negative
+/// (`|v| <= qmax <= offset`).  Shared by the plan builder (weights, once
+/// per layer) and the core's per-call activation conversion so the two
+/// paths are bit-identical by construction.
+pub fn forward_residues(mat: &MatI, m: u64, bits: u32) -> MatI {
+    let red = BarrettReducer::new(m);
+    let qm = qmax(bits).unsigned_abs();
+    let offset = (qm / m + 1) * m;
+    debug_assert!(mat.data.iter().all(|&v| v.unsigned_abs() <= qm));
+    mat.map(|v| red.reduce((v + offset as i64) as u64) as i64)
+}
+
+/// One K-tile of weights, forward-converted and staged for every channel.
+pub struct PreparedWeights {
+    /// Tile height (dot-product length of this tile).
+    pub rows: usize,
+    /// Output columns.
+    pub cols: usize,
+    pub moduli: Vec<u64>,
+    /// Per-channel residues as signed matrices (fallback engines).
+    pub res: Vec<MatI>,
+    /// Per-channel packed `u32` staging (native cache-blocked kernel),
+    /// row-major `rows x cols`.
+    pub staged: Vec<Vec<u32>>,
+}
+
+impl PreparedWeights {
+    /// From per-channel residue matrices (already reduced into `[0, m)`).
+    pub fn new(res: Vec<MatI>, moduli: &[u64]) -> Self {
+        assert!(!res.is_empty(), "prepared weights need at least one channel");
+        assert_eq!(res.len(), moduli.len());
+        let (rows, cols) = (res[0].rows, res[0].cols);
+        assert!(res.iter().all(|r| r.rows == rows && r.cols == cols));
+        let staged = res.iter().zip(moduli).map(|(r, &m)| stage_weights_u32(r, m)).collect();
+        PreparedWeights { rows, cols, moduli: moduli.to_vec(), res, staged }
+    }
+
+    /// Forward-convert one quantized weight tile into every channel + stage.
+    pub fn from_quantized_tile(wt: &MatI, moduli: &[u64], bits: u32) -> Self {
+        let res: Vec<MatI> = moduli.iter().map(|&m| forward_residues(wt, m, bits)).collect();
+        Self::new(res, moduli)
+    }
+}
+
+/// One K-tile of the plan: `[k0, k1)` rows of the quantized weight matrix.
+pub struct PlanTile {
+    pub k0: usize,
+    pub k1: usize,
+    pub weights: PreparedWeights,
+}
+
+/// A per-layer execution plan: quantized weights, their per-channel
+/// residues for every K-tile, and the dequantization scales — everything
+/// that does not depend on the activations.
+pub struct RnsPlan {
+    pub bits: u32,
+    /// Analog array height the plan was tiled for.
+    pub h: usize,
+    /// Total K (weight rows) and N (weight cols).
+    pub k: usize,
+    pub n: usize,
+    pub moduli: Vec<u64>,
+    /// Quantized weights (kept for the dequantize scales).
+    pub qw: QuantWeights,
+    pub tiles: Vec<PlanTile>,
+}
+
+impl RnsPlan {
+    /// Quantize + convert + stage a float weight matrix.
+    pub fn build(w: &MatF, bits: u32, h: usize, moduli: &[u64]) -> Self {
+        Self::from_quantized(quantize_weights(w, bits), bits, h, moduli)
+    }
+
+    pub fn from_quantized(qw: QuantWeights, bits: u32, h: usize, moduli: &[u64]) -> Self {
+        assert!(h > 0, "tile height must be positive");
+        let (k, n) = (qw.q.rows, qw.q.cols);
+        let mut tiles = Vec::new();
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + h).min(k);
+            let wt = qw.q.slice_rows(k0, k1);
+            tiles
+                .push(PlanTile { k0, k1, weights: PreparedWeights::from_quantized_tile(&wt, moduli, bits) });
+            k0 = k1;
+        }
+        RnsPlan { bits, h, k, n, moduli: moduli.to_vec(), qw, tiles }
+    }
+
+    /// Total weight elements (per channel) — the once-per-layer DAC count.
+    pub fn weight_elems(&self) -> u64 {
+        (self.k * self.n) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::paper_table1;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_residues_matches_rem_euclid() {
+        let mut rng = Rng::seed_from(1);
+        let bits = 6u32;
+        let qm = qmax(bits);
+        let mat =
+            MatI::from_vec(4, 9, (0..36).map(|_| rng.gen_range_i64(-qm, qm)).collect());
+        for &m in paper_table1(bits).unwrap() {
+            let got = forward_residues(&mat, m, bits);
+            let want = mat.map(|v| v.rem_euclid(m as i64));
+            assert_eq!(got.data, want.data, "m={m}");
+        }
+    }
+
+    #[test]
+    fn plan_tiles_cover_k_and_stage_all_channels() {
+        let mut rng = Rng::seed_from(2);
+        let (k, n, h) = (300usize, 7usize, 128usize);
+        let w =
+            MatF::from_vec(k, n, (0..k * n).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let moduli = paper_table1(6).unwrap();
+        let plan = RnsPlan::build(&w, 6, h, moduli);
+        assert_eq!(plan.tiles.len(), 3); // 128 + 128 + 44
+        assert_eq!(plan.tiles.last().unwrap().k1, k);
+        let mut covered = 0;
+        for t in &plan.tiles {
+            assert_eq!(t.k0, covered);
+            covered = t.k1;
+            assert_eq!(t.weights.rows, t.k1 - t.k0);
+            assert_eq!(t.weights.cols, n);
+            assert_eq!(t.weights.res.len(), moduli.len());
+            for (ch, (&m, staged)) in
+                t.weights.moduli.iter().zip(&t.weights.staged).enumerate()
+            {
+                assert_eq!(staged.len(), (t.k1 - t.k0) * n);
+                let res = &t.weights.res[ch];
+                for (&r, &s) in res.data.iter().zip(staged) {
+                    assert!((0..m as i64).contains(&r));
+                    assert_eq!(r as u32, s);
+                }
+            }
+        }
+        assert_eq!(covered, k);
+        assert_eq!(plan.weight_elems(), (k * n) as u64);
+    }
+
+    #[test]
+    fn plan_residues_match_quantized_weights() {
+        let mut rng = Rng::seed_from(3);
+        let (k, n) = (40usize, 5usize);
+        let w =
+            MatF::from_vec(k, n, (0..k * n).map(|_| rng.uniform_f32(-0.7, 0.7)).collect());
+        let moduli = paper_table1(4).unwrap();
+        let plan = RnsPlan::build(&w, 4, 16, moduli);
+        let qw = quantize_weights(&w, 4);
+        for t in &plan.tiles {
+            for (ch, &m) in moduli.iter().enumerate() {
+                for r in 0..t.weights.rows {
+                    for c in 0..n {
+                        let want = qw.q.at(t.k0 + r, c).rem_euclid(m as i64);
+                        assert_eq!(t.weights.res[ch].at(r, c), want);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -51,60 +51,90 @@ pub fn gemm_i64(x: &MatI, w: &MatI) -> MatI {
     y
 }
 
-/// Modular GEMM for one residue channel: `y = (x @ w) mod m` with inputs
-/// already reduced (`< m`).  This is the digital twin of one analog MVM
-/// unit + analog modulo in the paper's Fig. 2 — and the rust-native
-/// counterpart of the pallas kernel (bit-identical by construction).
+/// Pack one residue weight matrix as `u32` for the staged kernel.
 ///
-/// Accumulates u64 partial sums and Barrett-reduces every `block` rows so
-/// the accumulator never overflows: with residues < 2^8 and block = 2^16,
-/// partial sums stay below 2^32 + m.
-pub fn gemm_mod(x: &MatI, w: &MatI, m: u64) -> MatI {
-    assert_eq!(x.cols, w.rows, "gemm shape mismatch");
-    let red = BarrettReducer::new(m);
-    // residue products < m^2; accumulate `block` of them below 2^63
-    let block = ((u64::MAX >> 1) / (m * m).max(1)).min(1 << 20).max(1) as usize;
-    let mut y = MatI::zeros(x.rows, w.cols);
-    // Perf (§Perf log): stage w as u32 once per call so the inner loop is
-    // u32*u32->u64 widening multiply-add, which the autovectorizer turns
-    // into vpmuludq lanes (i64*i64 has no AVX2 vector multiply).
+/// Perf (§Perf log, DESIGN.md §7): with `u32` weights the inner loop is a
+/// u32*u32->u64 widening multiply-add, which the autovectorizer turns into
+/// vpmuludq lanes (i64*i64 has no AVX2 vector multiply).  The seed staged
+/// on every `gemm_mod` call; `PreparedWeights` (runtime/plan.rs) calls
+/// this once per layer instead.
+pub fn stage_weights_u32(w: &MatI, m: u64) -> Vec<u32> {
     debug_assert!(m < (1 << 32));
-    let w32: Vec<u32> = w
-        .data
+    w.data
         .iter()
         .map(|&v| {
             debug_assert!((0..m as i64).contains(&v), "w residue out of range");
             v as u32
         })
-        .collect();
-    let mut acc: Vec<u64> = vec![0; w.cols];
+        .collect()
+}
+
+/// Column block size for the staged kernel: 256 u64 accumulators = 2 KiB,
+/// small enough to stay register/L1-resident while each staged weight row
+/// chunk streams through.
+const GEMM_MOD_COL_BLOCK: usize = 256;
+
+/// Modular GEMM against pre-staged `u32` weights (`w32` is row-major
+/// `x.cols x n_cols`, every value `< m`).  Cache-blocked over output
+/// columns; bit-identical to `gemm_mod` since all modular arithmetic is
+/// exact regardless of blocking.
+///
+/// Accumulates u64 partial sums and Barrett-reduces every `block` rows so
+/// the accumulator never overflows: with residues < 2^8 and block = 2^16,
+/// partial sums stay below 2^32 + m.
+pub fn gemm_mod_staged(x: &MatI, w32: &[u32], n_cols: usize, m: u64) -> MatI {
+    assert_eq!(w32.len(), x.cols * n_cols, "staged weight shape mismatch");
+    let red = BarrettReducer::new(m);
+    // residue products < m^2; accumulate `block` of them below 2^63
+    let block = ((u64::MAX >> 1) / (m * m).max(1)).min(1 << 20).max(1) as usize;
+    let mut y = MatI::zeros(x.rows, n_cols);
+    let mut acc = [0u64; GEMM_MOD_COL_BLOCK];
     for i in 0..x.rows {
-        acc.iter_mut().for_each(|a| *a = 0);
         let xrow = x.row(i);
-        let mut since_reduce = 0usize;
-        for (k, &xv) in xrow.iter().enumerate() {
-            debug_assert!((0..m as i64).contains(&xv), "x residue out of range");
-            let xv = xv as u64;
-            if xv != 0 {
-                let wrow = &w32[k * w.cols..(k + 1) * w.cols];
-                for (a, &wv) in acc.iter_mut().zip(wrow) {
-                    *a += xv * wv as u64;
+        let mut j0 = 0;
+        while j0 < n_cols {
+            let j1 = (j0 + GEMM_MOD_COL_BLOCK).min(n_cols);
+            let acc = &mut acc[..j1 - j0];
+            acc.iter_mut().for_each(|a| *a = 0);
+            let mut since_reduce = 0usize;
+            for (k, &xv) in xrow.iter().enumerate() {
+                debug_assert!((0..m as i64).contains(&xv), "x residue out of range");
+                let xv = xv as u64;
+                if xv != 0 {
+                    let wrow = &w32[k * n_cols + j0..k * n_cols + j1];
+                    for (a, &wv) in acc.iter_mut().zip(wrow) {
+                        *a += xv * wv as u64;
+                    }
+                }
+                since_reduce += 1;
+                if since_reduce == block {
+                    for a in acc.iter_mut() {
+                        *a = red.reduce(*a);
+                    }
+                    since_reduce = 0;
                 }
             }
-            since_reduce += 1;
-            if since_reduce == block {
-                for a in acc.iter_mut() {
-                    *a = red.reduce(*a);
-                }
-                since_reduce = 0;
+            for (yv, &a) in y.row_mut(i)[j0..j1].iter_mut().zip(acc.iter()) {
+                *yv = red.reduce(a) as i64;
             }
-        }
-        let yrow = y.row_mut(i);
-        for j in 0..yrow.len() {
-            yrow[j] = red.reduce(acc[j]) as i64;
+            j0 = j1;
         }
     }
     y
+}
+
+/// Modular GEMM for one residue channel: `y = (x @ w) mod m` with inputs
+/// already reduced (`< m`).  This is the digital twin of one analog MVM
+/// unit + analog modulo in the paper's Fig. 2 — and the rust-native
+/// counterpart of the pallas kernel (bit-identical by construction).
+///
+/// Unprepared entry point: stages `w` on every call.  The prepared path
+/// (`ModularGemmEngine::matmul_mod_prepared` over an `RnsPlan`) stages once
+/// per layer and calls `gemm_mod_staged` directly.
+pub fn gemm_mod(x: &MatI, w: &MatI, m: u64) -> MatI {
+    assert_eq!(x.cols, w.rows, "gemm shape mismatch");
+    let w32 = stage_weights_u32(w, m);
+    gemm_mod_staged(x, &w32, w.cols, m)
 }
 
 #[cfg(test)]
@@ -157,6 +187,26 @@ mod tests {
             ident.set(i, i, 1);
         }
         assert_eq!(gemm_mod(&x, &ident, m).data, x.data);
+    }
+
+    #[test]
+    fn gemm_mod_staged_matches_unstaged_prop() {
+        // staged kernel (cache-blocked, pre-packed u32) == per-call path,
+        // including shapes wider than one column block
+        run_prop("gemm_mod_staged == gemm_mod", 30, |rng| {
+            let m = [11u64, 63, 255, 1021][rng.gen_range(4) as usize];
+            let b = 1 + rng.gen_range(3) as usize;
+            let k = 1 + rng.gen_range(80) as usize;
+            let n = 1 + rng.gen_range(400) as usize;
+            let x = rand_mat_i(rng, b, k, 0, m as i64 - 1);
+            let w = rand_mat_i(rng, k, n, 0, m as i64 - 1);
+            let staged = stage_weights_u32(&w, m);
+            prop_assert_eq(
+                gemm_mod_staged(&x, &staged, n, m).data,
+                gemm_mod(&x, &w, m).data,
+                &format!("m={m} n={n}"),
+            )
+        });
     }
 
     #[test]

