@@ -71,6 +71,11 @@ fn main() {
         "  RRNS n-k=2, attempts=3        mean |err| = {:.4}  (corrected {}, detections {}, exhausted {})",
         e3, protected3.stats.corrected, protected3.stats.detections, protected3.stats.exhausted
     );
-    println!("\nenergy overhead of redundancy: {} vs {} adc conversions",
+    println!(
+        "\ntwo-tier decode split: {} of {} elements took the batched no-fault \
+         fast path, {} fell back to voting",
+        protected3.stats.fast_path_elems, protected3.stats.decoded, protected3.stats.voted_elems
+    );
+    println!("energy overhead of redundancy: {} vs {} adc conversions",
              protected3.meter.adc_conversions, unprotected.meter.adc_conversions);
 }

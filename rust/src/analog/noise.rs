@@ -6,6 +6,7 @@
 //! units and is used to show how an SNR maps onto an effective p (the
 //! connection §V draws between SNR and compute precision).
 
+use crate::rns::inject::flip_residue;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -27,8 +28,10 @@ impl NoiseModel {
         match *self {
             NoiseModel::None => value,
             NoiseModel::ResidueFlip { p } => {
+                // same draw order + arithmetic as the rns::inject harness,
+                // so noise-driven and injected faults are one fault model
                 if rng.bernoulli(p) {
-                    (value + 1 + rng.gen_range(m - 1)) % m
+                    flip_residue(value, m, rng)
                 } else {
                     value
                 }

@@ -9,8 +9,11 @@
 //!      via PJRT);
 //!   3. per-channel ADC capture with noise injection;
 //!   4. plain RNS: batch CRT over the whole tile;
-//!      RRNS(n, k): voting decode per element; Case-2 (detected) elements
-//!      trigger the paper's recompute-and-revote loop, up to `max_attempts`;
+//!      RRNS(n, k): two-tier decode — a whole-tile consistency pre-check
+//!      (batch CRT over the info moduli, re-encode, compare) batch-decodes
+//!      every clean element, and only mismatching elements run the voting
+//!      decode with the paper's recompute-and-revote loop, up to
+//!      `max_attempts` (see DESIGN.md §7; bit-identical to all-voting);
 //!   5. accumulate the signed partial outputs digitally; dequantize once at
 //!      the end.
 //!
@@ -55,6 +58,12 @@ pub struct RnsCoreConfig {
     pub max_attempts: u32,
     pub noise: NoiseModel,
     pub seed: u64,
+    /// Force the per-element voting decode for every RRNS element instead
+    /// of the two-tier batched pipeline (tier 1: whole-tile consistency
+    /// pre-check, tier 2: voting only for mismatching elements).  The two
+    /// paths are bit-identical by construction — this flag exists for the
+    /// equivalence tests and the bench baseline, not for serving.
+    pub reference_decode: bool,
 }
 
 impl RnsCoreConfig {
@@ -68,6 +77,7 @@ impl RnsCoreConfig {
             max_attempts: 1,
             noise: NoiseModel::None,
             seed: 0,
+            reference_decode: false,
         }
     }
 
@@ -86,12 +96,19 @@ impl RnsCoreConfig {
         self.seed = seed;
         self
     }
+
+    pub fn with_reference_decode(mut self, reference: bool) -> Self {
+        self.reference_decode = reference;
+        self
+    }
 }
 
 /// Fault-tolerance counters (per core lifetime).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FaultStats {
-    /// Output elements decoded in total.
+    /// Output elements decoded in total — exactly one count per output
+    /// element per tile decode, independent of how many voting retries an
+    /// element needed (retries are visible in `detections`, not here).
     pub decoded: u64,
     /// Elements whose first decode had inconsistent residues but still
     /// reached majority (Case 1 with corrections).
@@ -101,6 +118,14 @@ pub struct FaultStats {
     /// Elements still undecodable after `max_attempts` (fell back to the
     /// information-moduli CRT).
     pub exhausted: u64,
+    /// RRNS elements decoded by the batched no-fault fast path (tier-1
+    /// consistency pre-check passed).  Plain-RNS tiles, which have no
+    /// voting tier at all, count in neither this nor `voted_elems`.
+    pub fast_path_elems: u64,
+    /// RRNS elements that fell back to per-element voting (tier 2).
+    /// `fast_path_elems + voted_elems == decoded` for every RRNS core;
+    /// under `reference_decode` every element counts here.
+    pub voted_elems: u64,
 }
 
 /// Cache key identifying one weight matrix for plan reuse.  Pointer +
@@ -375,71 +400,127 @@ impl RnsCore {
         self.decode_tile(&clean, captured)
     }
 
-    /// Decode every output element; run the RRNS retry loop for Case 2.
-    fn decode_tile(&mut self, clean: &[MatI], mut captured: Vec<MatI>) -> MatI {
+    /// Decode every output element of one tile.
+    ///
+    /// Plain RNS tiles go through the batch CRT.  RRNS tiles take the
+    /// two-tier pipeline: a whole-tile consistency pre-check batch-decodes
+    /// everything clean, and only mismatching elements run the per-element
+    /// voting + retry loop (`decode_tile_reference` keeps the original
+    /// all-voting path; the two are bit-identical — fast-path elements
+    /// draw no randomness in either path, and fallback elements are
+    /// visited in the same row-major order, so the RNG stream, the output
+    /// matrix, and the energy totals all agree exactly).
+    fn decode_tile(&mut self, clean: &[MatI], captured: Vec<MatI>) -> MatI {
+        if self.code.is_none() {
+            // plain RNS: no retry loop, so the whole tile decodes in
+            // one batch CRT pass (hoisted coefficients, see crt.rs)
+            let elems = (captured[0].rows * captured[0].cols) as u64;
+            self.stats.decoded += elems;
+            self.meter.record_crt(elems);
+            return self.all_ctx.crt_signed_tile(&captured);
+        }
+        if self.cfg.reference_decode {
+            self.decode_tile_reference(clean, captured)
+        } else {
+            self.decode_tile_batched(clean, captured)
+        }
+    }
+
+    /// Two-tier RRNS decode: batched no-fault fast path + voting fallback.
+    fn decode_tile_batched(&mut self, clean: &[MatI], mut captured: Vec<MatI>) -> MatI {
+        let code = self.code.as_ref().expect("RRNS decode without a code");
         let (rows, cols) = (clean[0].rows, clean[0].cols);
+        let elems = (rows * cols) as u64;
         let n = self.units.len();
-        let code = match &self.code {
-            None => {
-                // plain RNS: no retry loop, so the whole tile decodes in
-                // one batch CRT pass (hoisted coefficients, see crt.rs)
-                let elems = (rows * cols) as u64;
-                self.stats.decoded += elems;
-                self.meter.record_crt(elems);
-                return self.all_ctx.crt_signed_tile(&captured);
-            }
-            Some(code) => code,
-        };
-        let mut out = MatI::zeros(rows, cols);
+        // tier 1: one batch CRT over the information moduli for the whole
+        // tile, re-encoded into the redundant channels and compared
+        let pre = code.precheck_tile(&captured);
+        self.stats.decoded += elems;
+        self.stats.fast_path_elems += elems - pre.fallback.len() as u64;
+        self.stats.voted_elems += pre.fallback.len() as u64;
+        // one CRT per element, as the reference path charges
+        self.meter.record_crt(elems);
+        let mut out = pre.values;
+        // tier 2: per-element voting + retry, only where the pre-check
+        // failed, in row-major order (RNG parity with the reference path)
         let mut residues = vec![0u64; n];
-        for r in 0..rows {
-            for c in 0..cols {
-                for i in 0..n {
-                    residues[i] = captured[i].at(r, c) as u64;
-                }
-                self.stats.decoded += 1;
-                self.meter.record_crt(1);
-                let value = {
-                    let mut attempt = 0;
-                    loop {
-                        match code.decode(&residues) {
-                            Decode::Ok { value, suspects } => {
-                                if !suspects.is_empty() {
-                                    self.stats.corrected += 1;
-                                }
-                                break value as i64;
-                            }
-                            Decode::Detected => {
-                                self.stats.detections += 1;
-                                attempt += 1;
-                                if attempt >= self.cfg.max_attempts {
-                                    self.stats.exhausted += 1;
-                                    // fall back to the maximum-likelihood
-                                    // candidate (most consistent residues)
-                                    break code.decode_best_effort(&residues) as i64;
-                                }
-                                // recompute the dot product: fresh noise
-                                // on each channel's clean value
-                                for i in 0..n {
-                                    let cv = clean[i].at(r, c) as u64;
-                                    let noisy = self.units[i].noise.apply_residue(
-                                        cv,
-                                        self.units[i].modulus,
-                                        &mut self.rng,
-                                    );
-                                    residues[i] = noisy;
-                                    self.meter.record_adc(1, self.units[i].enob);
-                                    captured[i].set(r, c, noisy as i64);
-                                }
-                                self.meter.record_crt(1);
-                            }
-                        }
-                    }
-                };
-                out.set(r, c, value);
+        for &e in &pre.fallback {
+            for (res, ch) in residues.iter_mut().zip(&captured) {
+                *res = ch.data[e] as u64;
             }
+            out.data[e] = self.vote_element(clean, &mut captured, &mut residues, e);
         }
         out
+    }
+
+    /// Reference path: the original per-element voting decode for every
+    /// element.  Kept (behind `RnsCoreConfig::reference_decode`) as the
+    /// bit-identical baseline for the equivalence tests and benches.
+    fn decode_tile_reference(&mut self, clean: &[MatI], mut captured: Vec<MatI>) -> MatI {
+        let (rows, cols) = (clean[0].rows, clean[0].cols);
+        let n = self.units.len();
+        let mut out = MatI::zeros(rows, cols);
+        let mut residues = vec![0u64; n];
+        for e in 0..rows * cols {
+            for (res, ch) in residues.iter_mut().zip(&captured) {
+                *res = ch.data[e] as u64;
+            }
+            self.stats.decoded += 1;
+            self.stats.voted_elems += 1;
+            self.meter.record_crt(1);
+            out.data[e] = self.vote_element(clean, &mut captured, &mut residues, e);
+        }
+        out
+    }
+
+    /// Voting decode of one element (linear index `e`), with the paper's
+    /// detect → recompute retry loop.  Shared verbatim by the reference
+    /// path and the batched path's tier-2 fallback: any change here keeps
+    /// the two bit-identical by construction.
+    fn vote_element(
+        &mut self,
+        clean: &[MatI],
+        captured: &mut [MatI],
+        residues: &mut [u64],
+        e: usize,
+    ) -> i64 {
+        let code = self.code.as_ref().expect("RRNS decode without a code");
+        let n = self.units.len();
+        let mut attempt = 0;
+        loop {
+            match code.decode(residues) {
+                Decode::Ok { value, suspects } => {
+                    if !suspects.is_empty() {
+                        self.stats.corrected += 1;
+                    }
+                    return value as i64;
+                }
+                Decode::Detected => {
+                    self.stats.detections += 1;
+                    attempt += 1;
+                    if attempt >= self.cfg.max_attempts {
+                        self.stats.exhausted += 1;
+                        // fall back to the maximum-likelihood
+                        // candidate (most consistent residues)
+                        return code.decode_best_effort(residues) as i64;
+                    }
+                    // recompute the dot product: fresh noise
+                    // on each channel's clean value
+                    for i in 0..n {
+                        let cv = clean[i].data[e] as u64;
+                        let noisy = self.units[i].noise.apply_residue(
+                            cv,
+                            self.units[i].modulus,
+                            &mut self.rng,
+                        );
+                        residues[i] = noisy;
+                        self.meter.record_adc(1, self.units[i].enob);
+                        captured[i].data[e] = noisy as i64;
+                    }
+                    self.meter.record_crt(1);
+                }
+            }
+        }
     }
 }
 
@@ -587,8 +668,48 @@ mod tests {
         .unwrap();
         core.gemm_quantized(&x, &w);
         assert_eq!(core.stats.decoded, 8);
+        // two-tier split partitions the decoded elements exactly
+        assert_eq!(core.stats.fast_path_elems + core.stats.voted_elems, 8);
         assert!(core.meter.adc_conversions >= 8 * core.n_channels() as u64);
         assert!(core.meter.total_joules() > 0.0);
+    }
+
+    #[test]
+    fn clean_rrns_tiles_never_vote() {
+        let x = rand_mat(30, 3, 256, 1.0);
+        let w = rand_mat(31, 256, 5, 1.0);
+        let mut core =
+            RnsCore::new(RnsCoreConfig::for_bits(8, 128).with_rrns(2, 3)).unwrap();
+        core.gemm_quantized(&x, &w);
+        // 2 K-tiles x 3x5 outputs, all clean: everything fast-paths
+        assert_eq!(core.stats.decoded, 2 * 15);
+        assert_eq!(core.stats.fast_path_elems, 2 * 15);
+        assert_eq!(core.stats.voted_elems, 0);
+        assert_eq!(core.stats.detections, 0);
+        assert_eq!(core.stats.corrected, 0);
+    }
+
+    #[test]
+    fn batched_decode_matches_reference_decode() {
+        let x = rand_mat(32, 4, 200, 1.0);
+        let w = rand_mat(33, 200, 6, 0.5);
+        let cfg = RnsCoreConfig::for_bits(8, 128)
+            .with_noise(NoiseModel::ResidueFlip { p: 0.03 })
+            .with_rrns(2, 3)
+            .with_seed(99);
+        let mut fast = RnsCore::new(cfg.clone()).unwrap();
+        let mut refc = RnsCore::new(cfg.with_reference_decode(true)).unwrap();
+        let ya = fast.gemm_quantized(&x, &w);
+        let yb = refc.gemm_quantized(&x, &w);
+        assert_eq!(ya.data, yb.data, "two-tier decode must be bit-identical");
+        assert_eq!(fast.stats.decoded, refc.stats.decoded);
+        assert_eq!(fast.stats.corrected, refc.stats.corrected);
+        assert_eq!(fast.stats.detections, refc.stats.detections);
+        assert_eq!(fast.stats.exhausted, refc.stats.exhausted);
+        assert_eq!(refc.stats.voted_elems, refc.stats.decoded);
+        assert_eq!(refc.stats.fast_path_elems, 0);
+        assert_eq!(fast.stats.fast_path_elems + fast.stats.voted_elems, fast.stats.decoded);
+        assert!(fast.stats.fast_path_elems > 0, "p=0.03 leaves most elements clean");
     }
 
     #[test]

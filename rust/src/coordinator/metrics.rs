@@ -12,6 +12,11 @@ pub struct ServingMetrics {
     pub failures: u64,
     pub faults_detected: u64,
     pub faults_corrected: u64,
+    /// RRNS elements decoded by the batched no-fault fast path vs the
+    /// per-element voting fallback (two-tier decode; fast/(fast+voted)
+    /// near 1.0 is the healthy steady state for clean hardware).
+    pub decode_fast_path: u64,
+    pub decode_voted: u64,
     /// Per-layer RNS plans built across all workers (should plateau at
     /// workers × model layers: plans are reused across requests).
     pub plans_built: u64,
@@ -63,7 +68,8 @@ impl ServingMetrics {
              throughput={:.1} samples/s  median batch={:.1}\n\
              latency p50={:.0}µs p95={:.0}µs p99={:.0}µs  queue p50={:.0}µs\n\
              layer plans built={}\n\
-             faults: detected={} corrected={}",
+             faults: detected={} corrected={}\n\
+             decode: fast-path={} voted={}",
             self.requests,
             self.samples,
             self.batches,
@@ -77,6 +83,8 @@ impl ServingMetrics {
             self.plans_built,
             self.faults_detected,
             self.faults_corrected,
+            self.decode_fast_path,
+            self.decode_voted,
         )
     }
 }

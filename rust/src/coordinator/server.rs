@@ -260,7 +260,10 @@ fn worker_loop(
     };
     let mut models: HashMap<String, Box<dyn Model>> = HashMap::new();
     let mut faults_before = 0u64;
+    let mut corrected_before = 0u64;
     let mut plans_before = 0u64;
+    let mut fast_before = 0u64;
+    let mut voted_before = 0u64;
 
     while let Ok(msg) = rx.recv() {
         let batch = match msg {
@@ -293,9 +296,18 @@ fn worker_loop(
         let picked_up = Instant::now();
         let logits = model.forward(&batch.input, backend.as_mut());
         // fault counters from the RRNS core, per batch
-        let (detected, corrected) = backend_fault_counts(backend.as_ref());
+        let (detected, corrected, fast_path, voted) = backend_fault_counts(backend.as_ref());
         let batch_faults = detected.saturating_sub(faults_before);
         faults_before = detected;
+        // all per-worker cumulative counters accumulate into the shared
+        // metrics as deltas (like plans_built) so multi-worker totals sum
+        // across workers instead of last-writer-wins
+        let corrected_delta = corrected.saturating_sub(corrected_before);
+        corrected_before = corrected;
+        let fast_delta = fast_path.saturating_sub(fast_before);
+        fast_before = fast_path;
+        let voted_delta = voted.saturating_sub(voted_before);
+        voted_before = voted;
         // plans built since the last batch: warm-time builds land in the
         // first delta, and a steady-state delta > 0 means a layer was first
         // seen mid-request (a warm() gap worth fixing)
@@ -304,8 +316,10 @@ fn worker_loop(
         plans_before = plans_now;
         {
             let mut m = metrics.lock().unwrap();
-            m.faults_detected = detected;
-            m.faults_corrected = corrected;
+            m.faults_detected += batch_faults;
+            m.faults_corrected += corrected_delta;
+            m.decode_fast_path += fast_delta;
+            m.decode_voted += voted_delta;
             m.plans_built += plans_delta;
         }
         for (req, offset) in batch.members {
@@ -328,8 +342,11 @@ fn worker_loop(
     }
 }
 
-fn backend_fault_counts(backend: &dyn GemmBackend) -> (u64, u64) {
-    backend.fault_stats().map(|s| (s.detections, s.corrected)).unwrap_or((0, 0))
+fn backend_fault_counts(backend: &dyn GemmBackend) -> (u64, u64, u64, u64) {
+    backend
+        .fault_stats()
+        .map(|s| (s.detections, s.corrected, s.fast_path_elems, s.voted_elems))
+        .unwrap_or((0, 0, 0, 0))
 }
 
 fn fail_batch(

@@ -39,6 +39,10 @@ pub struct Fig5Row {
     pub p: f64,
     pub p_c: f64,
     pub p_c_analytic: f64,
+    /// Simulated fraction of trials with <= t injected faults (shared
+    /// `rns::inject` harness) — estimates the same binomial mass as
+    /// `p_c_analytic`, validating the injection against the closed form.
+    pub p_le_t_sim: f64,
     pub p_err_by_attempts: Vec<(u32, f64)>,
     pub p_err_limit: f64,
 }
@@ -56,6 +60,7 @@ pub fn compute(cfg: &Fig5Config) -> Vec<Fig5Row> {
                 p,
                 p_c: cp.p_c,
                 p_c_analytic: p_correctable_analytic(code.n(), code.k, p),
+                p_le_t_sim: cp.p_le_t,
                 p_err_by_attempts: cfg.attempts.iter().map(|&r| (r, cp.p_err(r))).collect(),
                 p_err_limit: cp.p_err_limit(),
             });
@@ -71,7 +76,14 @@ pub fn run(cfg: &Fig5Config) -> Report {
         cfg.bits, cfg.trials
     ));
     rep.note("p_err(R) = 1 - p_c * sum_{j=0..R-1} p_d^j (corrected Eq. 5); limit = p_u/(p_u+p_c)");
-    let mut header = vec!["n-k".to_string(), "p".to_string(), "p_c (MC)".to_string(), "p_c (>=, analytic)".to_string()];
+    rep.note("P(<=t) sim: injected-fault mass from rns::inject — must track the analytic column");
+    let mut header = vec![
+        "n-k".to_string(),
+        "p".to_string(),
+        "p_c (MC)".to_string(),
+        "p_c (>=, analytic)".to_string(),
+        "P(<=t) sim".to_string(),
+    ];
     header.extend(cfg.attempts.iter().map(|r| format!("p_err R={r}")));
     header.push("p_err R→∞".to_string());
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
@@ -82,6 +94,7 @@ pub fn run(cfg: &Fig5Config) -> Report {
             sci(row.p),
             format!("{:.4}", row.p_c),
             format!("{:.4}", row.p_c_analytic),
+            format!("{:.4}", row.p_le_t_sim),
         ];
         cells.extend(row.p_err_by_attempts.iter().map(|(_, pe)| sci(*pe)));
         cells.push(sci(row.p_err_limit));
@@ -116,6 +129,24 @@ mod tests {
         let r1 = rows.iter().find(|r| r.redundancy == 1 && r.p == 1e-2).unwrap();
         let r3 = rows.iter().find(|r| r.redundancy == 3 && r.p == 1e-2).unwrap();
         assert!(r3.p_err_by_attempts[1].1 <= r1.p_err_by_attempts[1].1);
+    }
+
+    #[test]
+    fn simulated_injection_tracks_analytic_correctable_mass() {
+        // the fig's injected-fault column must agree with the closed-form
+        // binomial bound, and the decoder can only do better than it
+        let rows = compute(&quick_cfg());
+        for r in &rows {
+            assert!(
+                (r.p_le_t_sim - r.p_c_analytic).abs() < 0.03,
+                "n-k={} p={}: sim {} vs analytic {}",
+                r.redundancy,
+                r.p,
+                r.p_le_t_sim,
+                r.p_c_analytic
+            );
+            assert!(r.p_c >= r.p_le_t_sim, "n-k={} p={}", r.redundancy, r.p);
+        }
     }
 
     #[test]

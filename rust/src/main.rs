@@ -220,8 +220,14 @@ fn cmd_infer(args: &mut Args) -> i32 {
     }
     if let Some(stats) = backend.fault_stats() {
         println!(
-            "faults: decoded={} corrected={} detections={} exhausted={}",
-            stats.decoded, stats.corrected, stats.detections, stats.exhausted
+            "faults: decoded={} corrected={} detections={} exhausted={} \
+             (decode fast-path={} voted={})",
+            stats.decoded,
+            stats.corrected,
+            stats.detections,
+            stats.exhausted,
+            stats.fast_path_elems,
+            stats.voted_elems
         );
     }
     0

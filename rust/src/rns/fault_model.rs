@@ -17,6 +17,7 @@
 //!     `1 - p_c * sum_{j=0..R-1} p_d^j`, whose R->infinity limit
 //!     `p_u / (p_u + p_c)` matches the limit printed in the paper.
 
+use super::inject::FaultSpec;
 use super::rrns::{Decode, RrnsCode};
 use crate::util::rng::Rng;
 
@@ -39,6 +40,12 @@ pub struct CaseProbs {
     pub p_c: f64,
     pub p_d: f64,
     pub p_u: f64,
+    /// Fraction of trials whose *injected* fault count was <= t — the
+    /// simulated counterpart of `p_correctable_analytic` (they estimate
+    /// the same binomial mass, so the two must agree within MC noise),
+    /// and an exact lower bound on `p_c` trial-by-trial: every <= t
+    /// pattern is guaranteed correctable.
+    pub p_le_t: f64,
 }
 
 impl CaseProbs {
@@ -79,20 +86,33 @@ pub fn p_correctable_analytic(n: usize, k: usize, p: f64) -> f64 {
 ///
 /// Error model (matching the paper's abstraction): each residue
 /// independently flips to a uniform wrong value with probability `p`.
+/// Bit-compatible with the pre-injector implementation — the shared
+/// `FaultSpec::Bernoulli` injector draws in the same channel order.
 pub fn estimate_case_probs(code: &RrnsCode, p: f64, trials: u32, seed: u64) -> CaseProbs {
+    estimate_case_probs_spec(code, FaultSpec::Bernoulli { p }, trials, seed)
+}
+
+/// Case-probability Monte-Carlo under any injected-fault regime (the
+/// shared `rns::inject` harness): Bernoulli reproduces the paper's model,
+/// `Channels {count}` pins the exact fault weight (count <= t must give
+/// `p_c == 1` exactly), `Burst` models correlated channel faults.
+pub fn estimate_case_probs_spec(
+    code: &RrnsCode,
+    spec: FaultSpec,
+    trials: u32,
+    seed: u64,
+) -> CaseProbs {
     let mut rng = Rng::seed_from(seed);
     let half = (code.legitimate_range / 2) as i64;
-    let (mut c, mut d, mut u) = (0u64, 0u64, 0u64);
-    let n = code.n();
-    let mut res = vec![0u64; n];
+    let t = code.correctable();
+    let (mut c, mut d, mut u, mut le_t) = (0u64, 0u64, 0u64, 0u64);
+    let mut res = vec![0u64; code.n()];
     for _ in 0..trials {
         let a = rng.gen_range_i64(-(half - 1), half);
         code.full.forward_into(a, &mut res);
-        for i in 0..n {
-            if rng.bernoulli(p) {
-                let m = code.full.moduli[i];
-                res[i] = (res[i] + 1 + rng.gen_range(m - 1)) % m;
-            }
+        let hit = spec.apply_word(&mut res, &code.full.moduli, &mut rng);
+        if hit.len() <= t {
+            le_t += 1;
         }
         match code.decode(&res) {
             Decode::Ok { value, .. } if value == a as i128 => c += 1,
@@ -101,7 +121,12 @@ pub fn estimate_case_probs(code: &RrnsCode, p: f64, trials: u32, seed: u64) -> C
         }
     }
     let total = trials as f64;
-    CaseProbs { p_c: c as f64 / total, p_d: d as f64 / total, p_u: u as f64 / total }
+    CaseProbs {
+        p_c: c as f64 / total,
+        p_d: d as f64 / total,
+        p_u: u as f64 / total,
+        p_le_t: le_t as f64 / total,
+    }
 }
 
 #[cfg(test)]
@@ -142,20 +167,76 @@ mod tests {
 
     #[test]
     fn analytic_lower_bounds_mc() {
+        // The injector reports the injected fault weight, so the old
+        // tolerance-only comparison sharpens to two exact facts:
+        //   * p_le_t is an unbiased estimate of the analytic binomial
+        //     mass (same quantity, MC noise only);
+        //   * p_c >= p_le_t holds trial-by-trial (<= t is always
+        //     guaranteed correctable), not merely within tolerance.
         let code = code(8, 2);
         for p in [1e-2, 5e-2, 0.1] {
+            let cp = estimate_case_probs(&code, p, 20_000, 3);
             let analytic = p_correctable_analytic(code.n(), code.k, p);
-            let mc = estimate_case_probs(&code, p, 20_000, 3).p_c;
             assert!(
-                mc >= analytic - 0.02,
-                "p={p}: MC p_c {mc} should not be below analytic bound {analytic}"
+                (cp.p_le_t - analytic).abs() < 0.01,
+                "p={p}: simulated P(<=t) {} vs analytic {analytic}",
+                cp.p_le_t
+            );
+            assert!(
+                cp.p_c >= cp.p_le_t,
+                "p={p}: p_c {} below the exact <=t bound {}",
+                cp.p_c,
+                cp.p_le_t
             );
         }
     }
 
     #[test]
+    fn injection_matches_analytic_on_5_3_code() {
+        // (5,3), t = 1: the shared injector replaces the bespoke
+        // Monte-Carlo loop; its simulated correctable mass must track the
+        // analytic curve across the whole p sweep.
+        let base = paper_table1(8).unwrap();
+        let all = extend_moduli(base, 2).unwrap();
+        let code = RrnsCode::new(&all, base.len()).unwrap();
+        assert_eq!((code.n(), code.k, code.correctable()), (5, 3, 1));
+        for (i, p) in [1e-3, 1e-2, 5e-2, 0.1, 0.3].into_iter().enumerate() {
+            let cp = estimate_case_probs(&code, p, 20_000, 40 + i as u64);
+            let analytic = p_correctable_analytic(5, 3, p);
+            assert!(
+                (cp.p_le_t - analytic).abs() < 0.015,
+                "p={p}: P(<=1 fault) sim {} vs analytic {analytic}",
+                cp.p_le_t
+            );
+            assert!(cp.p_c >= cp.p_le_t, "p={p}");
+        }
+    }
+
+    #[test]
+    fn pinned_fault_weight_regimes() {
+        use crate::rns::inject::FaultSpec;
+        let code = code(8, 2); // (5,3), t = 1
+        // <= t faults: guaranteed correctable, exactly, every trial
+        for count in [0usize, 1] {
+            let cp = estimate_case_probs_spec(&code, FaultSpec::Channels { count }, 2_000, 5);
+            assert_eq!(cp.p_c, 1.0, "count={count} must always correct");
+            assert_eq!(cp.p_le_t, 1.0);
+        }
+        // beyond-correctable: never counted as <= t, mostly detected
+        let cp2 = estimate_case_probs_spec(&code, FaultSpec::Channels { count: 2 }, 4_000, 6);
+        assert_eq!(cp2.p_le_t, 0.0);
+        assert!(cp2.p_d > 0.9, "2 faults on t=1 should usually detect: p_d {}", cp2.p_d);
+        assert!(cp2.p_c < 0.05, "2 faults rarely land back on the sent value");
+        // a 2-wide channel burst behaves like 2 correlated faults
+        let cpb =
+            estimate_case_probs_spec(&code, FaultSpec::Burst { elems: 1, width: 2 }, 4_000, 7);
+        assert_eq!(cpb.p_le_t, 0.0);
+        assert!(cpb.p_d > 0.9, "burst width 2 should usually detect: p_d {}", cpb.p_d);
+    }
+
+    #[test]
     fn attempts_reduce_p_err_monotonically() {
-        let cp = CaseProbs { p_c: 0.7, p_d: 0.25, p_u: 0.05 };
+        let cp = CaseProbs { p_c: 0.7, p_d: 0.25, p_u: 0.05, ..Default::default() };
         let mut prev = 1.0;
         for r in 1..10 {
             let pe = cp.p_err(r);
@@ -169,7 +250,7 @@ mod tests {
 
     #[test]
     fn eq5_correction_recovers_single_attempt() {
-        let cp = CaseProbs { p_c: 0.9, p_d: 0.08, p_u: 0.02 };
+        let cp = CaseProbs { p_c: 0.9, p_d: 0.08, p_u: 0.02, ..Default::default() };
         assert!((cp.p_err(1) - (1.0 - 0.9)).abs() < 1e-12);
     }
 

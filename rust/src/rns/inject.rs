@@ -1,0 +1,320 @@
+//! Deterministic fault injection for RRNS residue channels (paper §IV).
+//!
+//! The fault model everywhere in this crate is the paper's: a faulty
+//! residue flips to a *uniform wrong* value in `[0, m)`.  This module is
+//! the single source of that corruption so tests, the Monte-Carlo fault
+//! model (`fault_model::estimate_case_probs`), the noise model
+//! (`NoiseModel::ResidueFlip`) and the fig5 regenerator all draw from the
+//! same arithmetic — and so every injected-fault regime is reproducible
+//! from a seed.
+//!
+//! Regimes (`FaultSpec`):
+//!   * `Channels { count }` — exactly `count` distinct channels per
+//!     element (count <= correctable() exercises the guaranteed-correct
+//!     path, count > correctable() the detect/exhaust path);
+//!   * `Bernoulli { p }` — each channel independently with probability
+//!     `p` (the paper's §IV abstraction; bit-compatible with the draw
+//!     order `estimate_case_probs` has always used);
+//!   * `Burst { elems, width }` — one burst event per tile: a contiguous
+//!     run of `width` channels corrupted across `elems` consecutive
+//!     output elements (a transient glitch spanning adjacent outputs).
+
+use crate::tensor::MatI;
+use crate::util::rng::Rng;
+
+/// Flip one residue to a uniformly-chosen *different* value in `[0, m)`.
+/// Shared by `NoiseModel::ResidueFlip` and every injection regime; the
+/// `1 + gen_range(m - 1)` offset guarantees the value actually changes.
+#[inline]
+pub fn flip_residue(value: u64, m: u64, rng: &mut Rng) -> u64 {
+    debug_assert!(m >= 2 && value < m);
+    (value + 1 + rng.gen_range(m - 1)) % m
+}
+
+/// One injected-fault regime (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// Exactly `count` distinct channels corrupted per element.
+    Channels { count: usize },
+    /// Each channel independently corrupted with probability `p`.
+    Bernoulli { p: f64 },
+    /// One burst per tile: `elems` consecutive elements x `width`
+    /// consecutive channels.  Applied to a single word, `elems` is moot
+    /// and only the `width`-channel run is injected.
+    Burst { elems: usize, width: usize },
+}
+
+impl FaultSpec {
+    /// Corrupt one codeword in place; returns the corrupted channel
+    /// indices in increasing order.
+    ///
+    /// Draw order is part of the contract: `Bernoulli` interleaves the
+    /// per-channel Bernoulli trial with the flip draw, exactly as the
+    /// pre-injector `estimate_case_probs` loop did, so seeded Monte-Carlo
+    /// results are unchanged by the shared-injector refactor.
+    pub fn apply_word(&self, residues: &mut [u64], moduli: &[u64], rng: &mut Rng) -> Vec<usize> {
+        let n = residues.len();
+        assert_eq!(n, moduli.len(), "residue/moduli length mismatch");
+        match *self {
+            FaultSpec::Bernoulli { p } => {
+                let mut hit = Vec::new();
+                for i in 0..n {
+                    if rng.bernoulli(p) {
+                        residues[i] = flip_residue(residues[i], moduli[i], rng);
+                        hit.push(i);
+                    }
+                }
+                hit
+            }
+            FaultSpec::Channels { count } => {
+                assert!(count <= n, "cannot corrupt {count} of {n} channels");
+                let mut hit = rng.sample_indices(n, count);
+                hit.sort_unstable();
+                for &i in &hit {
+                    residues[i] = flip_residue(residues[i], moduli[i], rng);
+                }
+                hit
+            }
+            FaultSpec::Burst { elems: _, width } => {
+                let width = width.min(n);
+                if width == 0 {
+                    return Vec::new();
+                }
+                let start = rng.gen_range((n - width + 1) as u64) as usize;
+                let hit: Vec<usize> = (start..start + width).collect();
+                for &i in &hit {
+                    residues[i] = flip_residue(residues[i], moduli[i], rng);
+                }
+                hit
+            }
+        }
+    }
+}
+
+/// What a tile-level injection actually touched (for asserting decoder
+/// behaviour against ground truth).
+#[derive(Clone, Debug, Default)]
+pub struct TileFaults {
+    /// Corrupted channel indices per element (row-major linear index);
+    /// empty for untouched elements.
+    pub per_elem: Vec<Vec<usize>>,
+    /// Elements with at least one corrupted channel.
+    pub corrupted_elems: usize,
+    /// Total corrupted (element, channel) pairs.
+    pub corrupted_channels: u64,
+}
+
+impl TileFaults {
+    fn from_per_elem(per_elem: Vec<Vec<usize>>) -> Self {
+        let corrupted_elems = per_elem.iter().filter(|h| !h.is_empty()).count();
+        let corrupted_channels = per_elem.iter().map(|h| h.len() as u64).sum();
+        TileFaults { per_elem, corrupted_elems, corrupted_channels }
+    }
+}
+
+impl FaultSpec {
+    /// Corrupt a whole tile of per-channel residue matrices in place.
+    ///
+    /// `channels[i]` holds channel i's residues for every output element
+    /// (all the same shape, values in `[0, moduli[i])`).  Per-element
+    /// regimes walk elements in row-major order with one deterministic
+    /// RNG stream; `Burst` draws one (element, channel) rectangle for the
+    /// whole tile.
+    pub fn apply_tile(&self, channels: &mut [MatI], moduli: &[u64], rng: &mut Rng) -> TileFaults {
+        assert!(!channels.is_empty());
+        assert_eq!(channels.len(), moduli.len());
+        let len = channels[0].data.len();
+        debug_assert!(channels.iter().all(|c| c.data.len() == len));
+        if let FaultSpec::Burst { elems, width } = *self {
+            let elems = elems.min(len);
+            let width = width.min(channels.len());
+            let mut per_elem = vec![Vec::new(); len];
+            if width > 0 && elems > 0 {
+                let e0 = rng.gen_range((len - elems + 1) as u64) as usize;
+                let c0 = rng.gen_range((channels.len() - width + 1) as u64) as usize;
+                for e in e0..e0 + elems {
+                    for ch in c0..c0 + width {
+                        let r = channels[ch].data[e] as u64;
+                        channels[ch].data[e] = flip_residue(r, moduli[ch], rng) as i64;
+                        per_elem[e].push(ch);
+                    }
+                }
+            }
+            return TileFaults::from_per_elem(per_elem);
+        }
+        let mut per_elem = Vec::with_capacity(len);
+        let mut word = vec![0u64; channels.len()];
+        for e in 0..len {
+            for (wv, ch) in word.iter_mut().zip(channels.iter()) {
+                *wv = ch.data[e] as u64;
+            }
+            let hit = self.apply_word(&mut word, moduli, rng);
+            for &i in &hit {
+                channels[i].data[e] = word[i] as i64;
+            }
+            per_elem.push(hit);
+        }
+        TileFaults::from_per_elem(per_elem)
+    }
+}
+
+/// A seeded injector: `FaultSpec` + its own RNG, so a corruption campaign
+/// replays bit-for-bit from `(spec, seed)` alone.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    pub spec: FaultSpec,
+    rng: Rng,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec, seed: u64) -> Self {
+        FaultInjector { spec, rng: Rng::seed_from(seed) }
+    }
+
+    /// Corrupt one codeword in place; returns corrupted channel indices.
+    pub fn corrupt_word(&mut self, residues: &mut [u64], moduli: &[u64]) -> Vec<usize> {
+        self.spec.apply_word(residues, moduli, &mut self.rng)
+    }
+
+    /// Corrupt a tile of per-channel residue matrices in place.
+    pub fn corrupt_tile(&mut self, channels: &mut [MatI], moduli: &[u64]) -> TileFaults {
+        self.spec.apply_tile(channels, moduli, &mut self.rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::moduli::{extend_moduli, paper_table1};
+
+    fn moduli53() -> Vec<u64> {
+        extend_moduli(paper_table1(8).unwrap(), 2).unwrap() // (5,3): {255,254,253,251,249}
+    }
+
+    fn tile(moduli: &[u64], rows: usize, cols: usize, seed: u64) -> Vec<MatI> {
+        let mut rng = Rng::seed_from(seed);
+        moduli
+            .iter()
+            .map(|&m| {
+                MatI::from_vec(
+                    rows,
+                    cols,
+                    (0..rows * cols).map(|_| rng.gen_range(m) as i64).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flip_always_changes_and_stays_in_range() {
+        let mut rng = Rng::seed_from(1);
+        for m in [2u64, 3, 59, 255] {
+            for v in 0..m.min(40) {
+                let f = flip_residue(v, m, &mut rng);
+                assert_ne!(f, v, "m={m}");
+                assert!(f < m);
+            }
+        }
+    }
+
+    #[test]
+    fn injection_is_deterministic_in_seed() {
+        let moduli = moduli53();
+        for spec in [
+            FaultSpec::Channels { count: 2 },
+            FaultSpec::Bernoulli { p: 0.3 },
+            FaultSpec::Burst { elems: 3, width: 2 },
+        ] {
+            let mut a = tile(&moduli, 4, 6, 9);
+            let mut b = tile(&moduli, 4, 6, 9);
+            let fa = FaultInjector::new(spec, 77).corrupt_tile(&mut a, &moduli);
+            let fb = FaultInjector::new(spec, 77).corrupt_tile(&mut b, &moduli);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.data, y.data, "{spec:?}");
+            }
+            assert_eq!(fa.per_elem, fb.per_elem);
+            // a different seed must differ somewhere for non-empty specs
+            let mut c = tile(&moduli, 4, 6, 9);
+            FaultInjector::new(spec, 78).corrupt_tile(&mut c, &moduli);
+            assert!(a.iter().zip(&c).any(|(x, y)| x.data != y.data), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn channels_corrupts_exactly_count_distinct() {
+        let moduli = moduli53();
+        let mut rng = Rng::seed_from(3);
+        for count in 0..=moduli.len() {
+            let mut word: Vec<u64> = moduli.iter().map(|&m| m / 2).collect();
+            let orig = word.clone();
+            let hit = FaultSpec::Channels { count }.apply_word(&mut word, &moduli, &mut rng);
+            assert_eq!(hit.len(), count);
+            assert!(hit.windows(2).all(|w| w[0] < w[1]), "sorted + distinct");
+            for i in 0..moduli.len() {
+                if hit.contains(&i) {
+                    assert_ne!(word[i], orig[i]);
+                    assert!(word[i] < moduli[i]);
+                } else {
+                    assert_eq!(word[i], orig[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate_matches_p() {
+        let moduli = moduli53();
+        let mut rng = Rng::seed_from(4);
+        let spec = FaultSpec::Bernoulli { p: 0.25 };
+        let mut hits = 0u64;
+        let trials = 20_000;
+        for _ in 0..trials {
+            let mut word: Vec<u64> = moduli.iter().map(|&m| m - 1).collect();
+            hits += spec.apply_word(&mut word, &moduli, &mut rng).len() as u64;
+        }
+        let rate = hits as f64 / (trials * moduli.len() as u64) as f64;
+        assert!((rate - 0.25).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn burst_is_one_contiguous_rectangle_per_tile() {
+        let moduli = moduli53();
+        let (rows, cols) = (3usize, 7);
+        let mut channels = tile(&moduli, rows, cols, 5);
+        let orig: Vec<Vec<i64>> = channels.iter().map(|c| c.data.clone()).collect();
+        let spec = FaultSpec::Burst { elems: 4, width: 2 };
+        let faults = FaultInjector::new(spec, 11).corrupt_tile(&mut channels, &moduli);
+        assert_eq!(faults.corrupted_elems, 4);
+        assert_eq!(faults.corrupted_channels, 8);
+        // affected elements are consecutive and share one channel run
+        let touched: Vec<usize> = (0..rows * cols)
+            .filter(|&e| !faults.per_elem[e].is_empty())
+            .collect();
+        assert_eq!(touched.len(), 4);
+        assert!(touched.windows(2).all(|w| w[1] == w[0] + 1), "consecutive elements");
+        let run = &faults.per_elem[touched[0]];
+        assert_eq!(run.len(), 2);
+        assert_eq!(run[1], run[0] + 1, "consecutive channels");
+        for &e in &touched {
+            assert_eq!(&faults.per_elem[e], run, "same channel run for every element");
+        }
+        // and nothing outside the rectangle moved
+        for (ch, (now, before)) in channels.iter().zip(&orig).enumerate() {
+            for e in 0..rows * cols {
+                let in_rect = faults.per_elem[e].contains(&ch);
+                assert_eq!(now.data[e] != before[e], in_rect, "ch={ch} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_report_counts_match() {
+        let moduli = moduli53();
+        let mut channels = tile(&moduli, 8, 8, 6);
+        let faults =
+            FaultInjector::new(FaultSpec::Channels { count: 1 }, 13).corrupt_tile(&mut channels, &moduli);
+        assert_eq!(faults.per_elem.len(), 64);
+        assert_eq!(faults.corrupted_elems, 64); // count=1 touches every element
+        assert_eq!(faults.corrupted_channels, 64);
+    }
+}

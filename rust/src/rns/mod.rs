@@ -1,10 +1,13 @@
 //! RNS arithmetic substrate: moduli selection (Table I), forward/CRT
 //! conversion (Eq. (1)), Barrett reduction for hot modular loops, the
-//! RRNS(n, k) error-correcting code (§IV) and its fault model (Figs. 5-6).
+//! RRNS(n, k) error-correcting code (§IV) with its batched no-fault
+//! fast path, its fault model (Figs. 5-6), and the deterministic
+//! fault-injection harness that validates both.
 
 pub mod barrett;
 pub mod crt;
 pub mod fault_model;
+pub mod inject;
 pub mod mixed_radix;
 pub mod moduli;
 pub mod rrns;
@@ -12,6 +15,7 @@ pub mod rrns;
 pub use barrett::BarrettReducer;
 pub use crt::RnsContext;
 pub use fault_model::CaseProbs;
+pub use inject::{FaultInjector, FaultSpec};
 pub use mixed_radix::{base_extend, BexDecoder, BexOutcome};
 pub use moduli::{extend_moduli, paper_table1, required_output_bits, select_moduli};
-pub use rrns::{Decode, RrnsCode};
+pub use rrns::{Decode, RrnsCode, TilePrecheck};

@@ -20,6 +20,7 @@
 //! outputs inside this range (checked in debug builds).
 
 use super::crt::RnsContext;
+use crate::tensor::MatI;
 
 /// All k-combinations of `0..n` in lexicographic order.
 pub fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
@@ -47,6 +48,21 @@ pub fn combinations(n: usize, k: usize) -> Vec<Vec<usize>> {
             idx[j] = idx[j - 1] + 1;
         }
     }
+}
+
+/// Result of the batched consistency pre-check over one tile
+/// (`RrnsCode::precheck_tile`) — tier 1 of the two-tier decode.
+#[derive(Clone, Debug)]
+pub struct TilePrecheck {
+    /// Information-moduli CRT reconstruction for every element.  Where the
+    /// pre-check passed this is exactly what `decode` would return (same
+    /// first-group candidate, empty suspect set); where it failed the
+    /// entry is meaningless and the element must go through voting.
+    pub values: MatI,
+    /// Row-major linear indices of elements that failed the pre-check
+    /// (some residue inconsistent, or the reconstruction outside the
+    /// legitimate range) and need the per-element voting decode.
+    pub fallback: Vec<usize>,
 }
 
 /// Decode outcome classification (paper §IV cases).
@@ -107,6 +123,65 @@ impl RrnsCode {
 
     pub fn groups(&self) -> &[Vec<usize>] {
         &self.groups
+    }
+
+    /// Context over the k information moduli alone (the first voting group
+    /// — `combinations` is lexicographic, so group 0 is always `0..k`).
+    pub fn info_ctx(&self) -> &RnsContext {
+        debug_assert!(self.groups[0].iter().copied().eq(0..self.k));
+        &self.group_ctxs[0]
+    }
+
+    /// Encode a whole tile of signed values into all n residue channels
+    /// (per-channel matrices, the layout `RnsCore` decodes from).
+    pub fn encode_tile(&self, values: &MatI) -> Vec<MatI> {
+        debug_assert!(values.data.iter().all(|&v| (v.unsigned_abs() as u128) <= self.legitimate_range / 2));
+        self.full.moduli.iter().map(|&m| values.map(|v| v.rem_euclid(m as i64))).collect()
+    }
+
+    /// Tier 1 of the two-tier decode: batched consistency pre-check.
+    ///
+    /// Reconstructs every element through one batch CRT over the k
+    /// information moduli (`crt_signed_tile`, hoisted coefficients), then
+    /// re-encodes the reconstruction into each redundant channel and
+    /// compares against the captured residues with one linear sweep per
+    /// channel.  An element passes iff the reconstruction lies in the
+    /// legitimate range and every redundant residue matches (information
+    /// residues match by CRT construction, given reduced inputs).
+    ///
+    /// A passing element is bit-identical to `decode`: the pre-check
+    /// condition is precisely "`decode`'s first group candidate is in
+    /// range with an empty suspect set", so the voting loop would accept
+    /// the same value without drawing anything.  Failing elements are
+    /// returned in `fallback` for the per-element voting path.
+    ///
+    /// Precondition: residues are reduced (`channels[i]` in
+    /// `[0, moduli[i])`), which ADC capture guarantees.
+    pub fn precheck_tile(&self, channels: &[MatI]) -> TilePrecheck {
+        assert_eq!(channels.len(), self.n(), "one channel matrix per modulus");
+        // the fast-path accept rule assumes *every* channel is reduced:
+        // unreduced info residues would feed the u64 CRT accumulation
+        // garbage that could still land in range and match the redundant
+        // channels, silently fast-pathing a wrong value
+        debug_assert!(channels.iter().zip(&self.full.moduli).all(|(ch, &m)| {
+            ch.data.iter().all(|&r| (0..m as i64).contains(&r))
+        }));
+        let values = self.info_ctx().crt_signed_tile(&channels[..self.k]);
+        let len = values.data.len();
+        let half = (self.legitimate_range / 2) as i128;
+        let mut ok = vec![true; len];
+        for (o, &v) in ok.iter_mut().zip(&values.data) {
+            let v = v as i128;
+            *o = v <= half && v >= -(half - 1);
+        }
+        for (j, ch) in (self.k..self.n()).zip(&channels[self.k..]) {
+            let m = self.full.moduli[j] as i64;
+            for ((o, &v), &r) in ok.iter_mut().zip(&values.data).zip(&ch.data) {
+                *o &= v.rem_euclid(m) == r;
+            }
+        }
+        let fallback = ok.iter().enumerate().filter(|&(_, &o)| !o).map(|(e, _)| e).collect();
+        TilePrecheck { values, fallback }
     }
 
     /// Encode a signed value into all n residues.
@@ -345,5 +420,110 @@ mod tests {
     fn invalid_params_rejected() {
         assert!(RrnsCode::new(&[255, 254, 253], 0).is_err());
         assert!(RrnsCode::new(&[255, 254, 253], 4).is_err());
+    }
+
+    #[test]
+    fn precheck_clean_tile_passes_everything() {
+        let code = code_b8(2);
+        let half = (code.legitimate_range / 2) as i64;
+        let mut rng = Rng::seed_from(21);
+        let values = MatI::from_vec(
+            3,
+            5,
+            (0..15).map(|_| rng.gen_range_i64(-(half - 1), half)).collect(),
+        );
+        let channels = code.encode_tile(&values);
+        let pre = code.precheck_tile(&channels);
+        assert!(pre.fallback.is_empty());
+        assert_eq!(pre.values.data, values.data);
+    }
+
+    #[test]
+    fn precheck_flags_exactly_the_corrupted_elements() {
+        let code = code_b8(2);
+        let half = (code.legitimate_range / 2) as i64;
+        let mut rng = Rng::seed_from(22);
+        let values = MatI::from_vec(
+            4,
+            4,
+            (0..16).map(|_| rng.gen_range_i64(-(half - 1), half)).collect(),
+        );
+        let mut channels = code.encode_tile(&values);
+        // corrupt element 5 on an info channel and element 12 on a
+        // redundant channel: both must fall back, nothing else
+        let m1 = code.full.moduli[1];
+        channels[1].data[5] = ((channels[1].data[5] as u64 + 1) % m1) as i64;
+        let m4 = code.full.moduli[4];
+        channels[4].data[12] = ((channels[4].data[12] as u64 + 1) % m4) as i64;
+        let pre = code.precheck_tile(&channels);
+        assert_eq!(pre.fallback, vec![5, 12]);
+        // untouched elements keep their exact values
+        for e in 0..16 {
+            if e == 5 || e == 12 {
+                continue;
+            }
+            assert_eq!(pre.values.data[e], values.data[e], "element {e}");
+        }
+    }
+
+    #[test]
+    fn precheck_rejects_out_of_legitimate_range_values() {
+        // fully consistent residues for a value inside the info product
+        // but outside the (smaller) legitimate range must NOT fast-path:
+        // decode skips that first-group candidate, so must the pre-check.
+        let code = code_b8(2);
+        let info_half = (code.info_ctx().big_m / 2) as i64;
+        let legit_half = (code.legitimate_range / 2) as i64;
+        assert!(info_half > legit_half, "redundant moduli shrink the range");
+        let v = legit_half + (info_half - legit_half) / 2;
+        let channels: Vec<MatI> = code
+            .full
+            .moduli
+            .iter()
+            .map(|&m| MatI::from_vec(1, 1, vec![v.rem_euclid(m as i64)]))
+            .collect();
+        let pre = code.precheck_tile(&channels);
+        assert_eq!(pre.fallback, vec![0]);
+    }
+
+    #[test]
+    fn precheck_fast_path_matches_decode_on_correctable_words() {
+        // elements with faults land in fallback; fast-path elements carry
+        // exactly decode()'s value
+        let code = code_b8(4); // t = 2
+        let half = (code.legitimate_range / 2) as i64;
+        run_prop("precheck vs decode", 100, |rng| {
+            let values = MatI::from_vec(
+                2,
+                3,
+                (0..6).map(|_| rng.gen_range_i64(-(half - 1), half)).collect(),
+            );
+            let mut channels = code.encode_tile(&values);
+            // corrupt one random element with t faults
+            let e = rng.gen_range(6) as usize;
+            let idxs = rng.sample_indices(code.n(), code.correctable());
+            for &i in &idxs {
+                let m = code.full.moduli[i];
+                let r = channels[i].data[e] as u64;
+                channels[i].data[e] = ((r + 1 + rng.gen_range(m - 1)) % m) as i64;
+            }
+            let pre = code.precheck_tile(&channels);
+            prop_assert_eq(pre.fallback.clone(), vec![e], "only the faulty element falls back")?;
+            for (j, &v) in pre.values.data.iter().enumerate() {
+                if j == e {
+                    continue;
+                }
+                let residues: Vec<u64> =
+                    channels.iter().map(|ch| ch.data[j] as u64).collect();
+                match code.decode(&residues) {
+                    Decode::Ok { value, suspects } => {
+                        prop_assert_eq(value, v as i128, "fast value == decode value")?;
+                        prop_assert(suspects.is_empty(), "clean word has no suspects")?;
+                    }
+                    Decode::Detected => return Err("clean word flagged".into()),
+                }
+            }
+            Ok(())
+        });
     }
 }

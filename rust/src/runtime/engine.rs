@@ -16,6 +16,13 @@
 //! every channel/row-block task is exact modular arithmetic, so the output
 //! is independent of scheduling — noise/ADC capture stays on the serial
 //! side (`RnsCore`), keeping seeded runs deterministic.
+//!
+//! The same contract carries the two-tier RRNS decode that consumes these
+//! engine outputs: whatever engine (or parallel schedule) produced the
+//! per-channel tiles, `RnsCore` captures them serially and the batched
+//! consistency pre-check + voting fallback sees one deterministic residue
+//! stream — so prepared plans, parallel fan-out, and the decode fast path
+//! compose without any cross-layer ordering assumptions.
 
 use crate::runtime::plan::PreparedWeights;
 use crate::tensor::gemm::{gemm_mod, gemm_mod_staged};

@@ -164,15 +164,25 @@ fn noisy_rrns_backend_serves_and_reports_faults() {
     let resps = coord.collect(4);
     assert!(resps.iter().all(|r| r.result.is_ok()));
     let report = coord.shutdown();
+    let field = |key: &str| -> u64 {
+        report
+            .split(key)
+            .nth(1)
+            .unwrap_or_else(|| panic!("missing `{key}` in report: {report}"))
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap()
+    };
     // with p=0.02 over thousands of decodes, corrections must appear
-    let corrected: u64 = report
-        .split("corrected=")
-        .nth(1)
-        .unwrap()
-        .trim()
-        .parse()
-        .unwrap();
+    let corrected = field("corrected=");
     assert!(corrected > 0, "expected RRNS corrections in report: {report}");
+    // and the two-tier decode must have fast-pathed the bulk of them
+    let fast = field("fast-path=");
+    let voted = field("voted=");
+    assert!(fast > 0, "expected fast-path decodes in report: {report}");
+    assert!(fast > voted, "p=0.02 should leave most elements clean: {report}");
 }
 
 #[test]

@@ -1,0 +1,135 @@
+//! Determinism / equivalence of the two-tier batched RRNS decode against
+//! the per-element voting reference, end-to-end through `RnsCore`.
+//!
+//! The contract under test: under identical seeds, the batched pipeline
+//! (tier-1 whole-tile consistency pre-check + tier-2 voting fallback) and
+//! the reference all-voting path produce bit-identical `MatI`/`MatF`
+//! outputs, identical fault counters, and identical energy totals — for
+//! clean tiles, <=-correctable fault rates, and beyond-correctable noise.
+
+use rns_analog::analog::{NoiseModel, RnsCore, RnsCoreConfig};
+use rns_analog::tensor::MatF;
+use rns_analog::util::rng::Rng;
+
+fn rand_mat(seed: u64, rows: usize, cols: usize, scale: f32) -> MatF {
+    let mut rng = Rng::seed_from(seed);
+    MatF::from_vec(
+        rows,
+        cols,
+        (0..rows * cols).map(|_| rng.uniform_f32(-scale, scale)).collect(),
+    )
+}
+
+/// Run the same GEMM through a batched-decode core and a reference-decode
+/// core under one config, returning both cores for counter inspection.
+fn run_pair(cfg: RnsCoreConfig, x: &MatF, w: &MatF) -> (RnsCore, RnsCore) {
+    let mut fast = RnsCore::new(cfg.clone()).unwrap();
+    let mut refc = RnsCore::new(cfg.with_reference_decode(true)).unwrap();
+    let ya = fast.gemm_quantized(x, w);
+    let yb = refc.gemm_quantized(x, w);
+    assert_eq!(ya.data, yb.data, "batched and reference decode must be bit-identical");
+    (fast, refc)
+}
+
+#[test]
+fn bit_identical_across_fault_regimes_and_seeds() {
+    // K = 300 on h = 128 -> 3 K-tiles, 4x6 outputs -> 72 decoded elements
+    let x = rand_mat(1, 4, 300, 1.0);
+    let w = rand_mat(2, 300, 6, 0.5);
+    for p in [0.0, 0.01, 0.05, 0.2] {
+        for seed in [3u64, 17, 4242] {
+            let cfg = RnsCoreConfig::for_bits(8, 128)
+                .with_noise(NoiseModel::ResidueFlip { p })
+                .with_rrns(2, 3)
+                .with_seed(seed);
+            let (fast, refc) = run_pair(cfg, &x, &w);
+            // decoded counts each output element exactly once per tile
+            assert_eq!(fast.stats.decoded, 3 * 24, "p={p} seed={seed}");
+            assert_eq!(fast.stats.decoded, refc.stats.decoded);
+            assert_eq!(fast.stats.corrected, refc.stats.corrected, "p={p} seed={seed}");
+            assert_eq!(fast.stats.detections, refc.stats.detections, "p={p} seed={seed}");
+            assert_eq!(fast.stats.exhausted, refc.stats.exhausted, "p={p} seed={seed}");
+            // the two-tier split partitions decoded; the reference votes all
+            assert_eq!(
+                fast.stats.fast_path_elems + fast.stats.voted_elems,
+                fast.stats.decoded
+            );
+            assert_eq!(refc.stats.voted_elems, refc.stats.decoded);
+            assert_eq!(refc.stats.fast_path_elems, 0);
+            // energy totals agree: same CRT/ADC/DAC charges on both paths
+            assert_eq!(fast.meter.adc_conversions, refc.meter.adc_conversions);
+            assert_eq!(fast.meter.dac_conversions, refc.meter.dac_conversions);
+            assert!((fast.meter.total_joules() - refc.meter.total_joules()).abs() < 1e-18);
+        }
+    }
+}
+
+#[test]
+fn clean_tiles_fully_fast_path() {
+    let x = rand_mat(5, 3, 256, 1.0);
+    let w = rand_mat(6, 256, 8, 1.0);
+    let cfg = RnsCoreConfig::for_bits(6, 128).with_rrns(2, 2);
+    let (fast, refc) = run_pair(cfg, &x, &w);
+    assert_eq!(fast.stats.decoded, 2 * 24); // 2 K-tiles x 3x8
+    assert_eq!(fast.stats.fast_path_elems, fast.stats.decoded);
+    assert_eq!(fast.stats.voted_elems, 0);
+    assert_eq!(fast.stats.detections, 0);
+    assert_eq!(refc.stats.voted_elems, refc.stats.decoded);
+}
+
+#[test]
+fn heavy_noise_exercises_retry_and_exhaustion_identically() {
+    // p = 0.35 with max_attempts = 2: plenty of Case-2 detections and
+    // exhausted elements; the retry loop draws fresh noise, so this is
+    // the strongest RNG-stream equivalence check
+    let x = rand_mat(7, 4, 128, 1.0);
+    let w = rand_mat(8, 128, 8, 0.5);
+    let cfg = RnsCoreConfig::for_bits(8, 128)
+        .with_noise(NoiseModel::ResidueFlip { p: 0.35 })
+        .with_rrns(2, 2)
+        .with_seed(11);
+    let (fast, refc) = run_pair(cfg, &x, &w);
+    assert!(fast.stats.detections > 0, "p=0.35 must trigger detections");
+    assert!(fast.stats.exhausted > 0, "p=0.35 with R=2 must exhaust some elements");
+    assert_eq!(fast.stats.detections, refc.stats.detections);
+    assert_eq!(fast.stats.exhausted, refc.stats.exhausted);
+    assert!(fast.stats.voted_elems > 0);
+}
+
+#[test]
+fn decoded_counts_are_exact_under_retries() {
+    // retries must inflate `detections`, never `decoded`:
+    // decoded == tiles x output elements exactly, on both paths
+    let x = rand_mat(9, 4, 384, 1.0);
+    let w = rand_mat(10, 384, 5, 1.0);
+    let cfg = RnsCoreConfig::for_bits(8, 128)
+        .with_noise(NoiseModel::ResidueFlip { p: 0.15 })
+        .with_rrns(2, 4)
+        .with_seed(23);
+    let (fast, refc) = run_pair(cfg, &x, &w);
+    let expect = 3 * (4 * 5) as u64; // 3 K-tiles x 4x5 outputs
+    assert_eq!(fast.stats.decoded, expect);
+    assert_eq!(refc.stats.decoded, expect);
+    assert!(fast.stats.detections > 0, "retries must have happened for this check to bite");
+    assert_eq!(fast.stats.fast_path_elems + fast.stats.voted_elems, expect);
+}
+
+#[test]
+fn prepared_and_unprepared_paths_share_the_two_tier_decode() {
+    // the plan path (gemm_quantized) and the unprepared reference path
+    // must both route through the same decode tiers and stay bit-identical
+    let x = rand_mat(12, 3, 200, 1.0);
+    let w = rand_mat(13, 200, 4, 0.5);
+    let cfg = RnsCoreConfig::for_bits(8, 128)
+        .with_noise(NoiseModel::ResidueFlip { p: 0.02 })
+        .with_rrns(2, 3)
+        .with_seed(31);
+    let mut prep = RnsCore::new(cfg.clone()).unwrap();
+    let mut unprep = RnsCore::new(cfg).unwrap();
+    let ya = prep.gemm_quantized(&x, &w);
+    let yb = unprep.gemm_quantized_unprepared(&x, &w);
+    assert_eq!(ya.data, yb.data);
+    assert_eq!(prep.stats.decoded, unprep.stats.decoded);
+    assert_eq!(prep.stats.fast_path_elems, unprep.stats.fast_path_elems);
+    assert_eq!(prep.stats.voted_elems, unprep.stats.voted_elems);
+}

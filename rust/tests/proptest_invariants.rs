@@ -9,6 +9,7 @@ use rns_analog::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use rns_analog::coordinator::request::InferenceRequest;
 use rns_analog::nn::models::Batch;
 use rns_analog::quant::{dequantize, quantize_activations, quantize_weights, qmax};
+use rns_analog::rns::inject::FaultSpec;
 use rns_analog::rns::moduli::{extend_moduli, paper_table1};
 use rns_analog::rns::rrns::{combinations, Decode, RrnsCode};
 use rns_analog::rns::RnsContext;
@@ -113,6 +114,78 @@ fn prop_rrns_corrects_any_single_error_position_and_magnitude() {
             }
             Decode::Detected => Err(format!("single error at {i} (delta {delta}) not corrected")),
         }
+    });
+}
+
+#[test]
+fn prop_batched_decode_equals_voting_under_correctable_faults() {
+    // For random values and ANY fault pattern with <= correctable()
+    // corrupted channels, the two-tier batched decode (consistency
+    // pre-check + voting fallback) == the per-element voting decode ==
+    // the original value — across several (n, k) code configurations.
+    let configs: Vec<RrnsCode> = vec![
+        // (5, 3), t = 1
+        RrnsCode::new(&extend_moduli(paper_table1(8).unwrap(), 2).unwrap(), 3).unwrap(),
+        // (7, 3), t = 2
+        RrnsCode::new(&extend_moduli(paper_table1(8).unwrap(), 4).unwrap(), 3).unwrap(),
+        // (6, 4), t = 1
+        RrnsCode::new(&extend_moduli(paper_table1(6).unwrap(), 2).unwrap(), 4).unwrap(),
+        // (8, 4), t = 2
+        RrnsCode::new(&extend_moduli(paper_table1(6).unwrap(), 4).unwrap(), 4).unwrap(),
+    ];
+    run_prop("batched == voting under <=t faults", 120, |rng| {
+        for code in &configs {
+            let t = code.correctable();
+            let half = (code.legitimate_range / 2) as i64;
+            let rows = 1 + rng.gen_range(4) as usize;
+            let cols = 1 + rng.gen_range(5) as usize;
+            let values = MatI::from_vec(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.gen_range_i64(-(half - 1), half)).collect(),
+            );
+            let mut channels = code.encode_tile(&values);
+            // every element gets an independent fault pattern of weight
+            // 0..=t via the shared injector
+            let count = rng.gen_range(t as u64 + 1) as usize;
+            let spec = FaultSpec::Channels { count };
+            spec.apply_tile(&mut channels, &code.full.moduli, rng);
+            let pre = code.precheck_tile(&channels);
+            let mut res = vec![0u64; code.n()];
+            for e in 0..rows * cols {
+                for (r, ch) in res.iter_mut().zip(&channels) {
+                    *r = ch.data[e] as u64;
+                }
+                let voted = match code.decode(&res) {
+                    Decode::Ok { value, .. } => value,
+                    Decode::Detected => {
+                        return Err(format!(
+                            "{count} <= t={t} faults must be correctable (n={}, k={})",
+                            code.n(),
+                            code.k
+                        ))
+                    }
+                };
+                prop_assert_eq(voted, values.data[e] as i128, "voting == original")?;
+                let batched = if pre.fallback.contains(&e) {
+                    voted
+                } else {
+                    pre.values.data[e] as i128
+                };
+                prop_assert_eq(batched, voted, "batched == voting")?;
+            }
+            // every fault-free element must have taken the fast path
+            if count == 0 {
+                prop_assert(pre.fallback.is_empty(), "clean tile must fully fast-path")?;
+            } else {
+                prop_assert_eq(
+                    pre.fallback.len(),
+                    rows * cols,
+                    "corrupted elements must all fall back",
+                )?;
+            }
+        }
+        Ok(())
     });
 }
 
