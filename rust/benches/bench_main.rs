@@ -103,6 +103,38 @@ fn micro_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
             || parallel.matmul_mod_prepared(&xr, &prepared),
         );
     }
+    if want("micro/pool") {
+        // the PR-3 acceptance pair: persistent worker pool vs per-call
+        // scoped spawns on a small-batch prepared GEMM (an MLP fc0-shaped
+        // tile, where spawn latency is a visible slice of the call).  CI
+        // gates pool >= scoped (no regression) next to the decode gate.
+        let moduli = paper_table1(6).unwrap().to_vec();
+        let (bb, k, n) = (4usize, 784usize, 256usize);
+        let xr: Vec<MatI> = moduli
+            .iter()
+            .map(|&mm| MatI::from_vec(bb, k, (0..bb * k).map(|_| rng.gen_range(mm) as i64).collect()))
+            .collect();
+        let wr: Vec<MatI> = moduli
+            .iter()
+            .map(|&mm| MatI::from_vec(k, n, (0..k * n).map(|_| rng.gen_range(mm) as i64).collect()))
+            .collect();
+        let prepared = PreparedWeights::new(wr, &moduli);
+        let macs_pool = (bb * k * n * moduli.len()) as f64;
+        let mut scoped = NativeEngine::scoped();
+        b.bench_with_rate(
+            "micro/pool prepared 4x784x256 x4ch scoped-spawn",
+            macs_pool,
+            "MAC/s",
+            || scoped.matmul_mod_prepared(&xr, &prepared),
+        );
+        let mut pooled = NativeEngine::default();
+        b.bench_with_rate(
+            "micro/pool prepared 4x784x256 x4ch persistent-pool",
+            macs_pool,
+            "MAC/s",
+            || pooled.matmul_mod_prepared(&xr, &prepared),
+        );
+    }
     if want("micro/gemm_i64") {
         b.bench_with_rate("micro/gemm_i64 8x128x128", macs, "MAC/s", || gemm_i64(&x, &w));
     }

@@ -30,10 +30,16 @@ pub trait GemmBackend {
     /// will issue so the first request pays no plan-build latency.
     /// Default: nothing — stateless backends have no per-layer state.
     fn prepare(&mut self, _w: &MatF) {}
-    /// Number of per-layer plans this backend has built (serving metric).
+    /// Number of per-layer plans this backend has adopted — built or
+    /// first borrowed from the shared plan store (serving metric; the
+    /// store's own `builds` counter is the deduplicated build count).
     fn plans_built(&self) -> u64 {
         0
     }
+    /// Tag subsequent plan lookups with the model they belong to, for
+    /// per-model plan-store attribution and eviction by model unload.
+    /// Default: ignored — stateless backends have no plan store.
+    fn set_model_tag(&mut self, _tag: &str) {}
     fn name(&self) -> String;
     /// Energy meter, if this backend models hardware.
     fn meter(&self) -> Option<EnergyMeter> {

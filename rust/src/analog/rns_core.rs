@@ -19,17 +19,30 @@
 //!
 //! **Prepared execution**: weights are stationary in the analog arrays, so
 //! their quantization, per-channel forward conversion, u32 staging, and
-//! weight-DAC energy are all one-time per-layer costs.  The core caches an
-//! `RnsPlan` per weight matrix (keyed by pointer + shape + fingerprint);
-//! `gemm_quantized` builds the plan on first sight of a layer and then only
-//! processes activations.  `gemm_quantized_unprepared` keeps the original
-//! per-call path as a bit-identical reference (asserted by the
-//! integration_plan tests).
+//! weight-DAC energy are all one-time per-layer costs.  Plans live in a
+//! shared, read-only `PlanStore` (`crate::store`): the core borrows an
+//! `Arc<RnsPlan>` per weight matrix (keyed by pointer + shape +
+//! fingerprint + moduli config) and the store builds each plan exactly
+//! once, however many cores share it.  A standalone core gets a private
+//! store; the coordinator hands every worker one shared store so W
+//! workers hold one plan instance per layer, not W.  (The per-core LRU
+//! `PlanCache` this module carried in PR 1 is gone — deprecated in favor
+//! of the store so there is one cache, not two; the store bounds
+//! untagged one-shot plans with the same LRU discipline.)
+//! `gemm_quantized` fetches/builds the plan on first sight of a layer and
+//! then only processes activations.  `gemm_quantized_unprepared` keeps
+//! the original per-call path as a bit-identical reference (asserted by
+//! the integration_plan tests).
+//!
+//! Energy stays per-core even though plans are shared: each core charges
+//! the one-time weight-DAC cost the first time *it* adopts a layer's
+//! plan, mirroring one accelerator's arrays being loaded per worker.
 //!
 //! The ADCs in every channel run at `ceil(log2 m_i)` bits — never at
 //! `b_out` — which is the entire point of the design.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashSet;
+use std::sync::Arc;
 
 use crate::analog::energy::EnergyMeter;
 use crate::analog::mvm_unit::RnsMvmUnit;
@@ -41,6 +54,7 @@ use crate::rns::rrns::{Decode, RrnsCode};
 use crate::rns::RnsContext;
 use crate::runtime::engine::{ModularGemmEngine, NativeEngine};
 use crate::runtime::plan::{forward_residues, PreparedWeights, RnsPlan};
+use crate::store::{PlanKey, PlanStore};
 use crate::tensor::{MatF, MatI};
 use crate::util::rng::Rng;
 
@@ -128,75 +142,6 @@ pub struct FaultStats {
     pub voted_elems: u64,
 }
 
-/// Cache key identifying one weight matrix for plan reuse.  Pointer +
-/// shape + a 16-sample strided FNV fingerprint of the data: cheap against
-/// the cost of a layer GEMM, and enough to tell apart distinct layers
-/// that reuse a freed allocation's address.  The fingerprint is
-/// best-effort against in-place mutation: it only sees ~16 elements, so a
-/// caller that edits weights in place (this crate's models never do) must
-/// not rely on it and should drop/rebuild the core or matrix instead.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-struct PlanKey {
-    ptr: usize,
-    rows: usize,
-    cols: usize,
-    fingerprint: u64,
-}
-
-fn plan_key(w: &MatF) -> PlanKey {
-    let d = &w.data;
-    let mut fp = 0xcbf2_9ce4_8422_2325u64;
-    let step = (d.len() / 16).max(1);
-    let mut i = 0;
-    while i < d.len() {
-        fp = (fp ^ d[i].to_bits() as u64).wrapping_mul(0x0000_0100_0000_01b3);
-        i += step;
-    }
-    PlanKey { ptr: d.as_ptr() as usize, rows: w.rows, cols: w.cols, fingerprint: fp }
-}
-
-/// Real models have a fixed, small layer count, but sweeps like fig3 push
-/// thousands of one-shot random weight matrices through a single core —
-/// bound the cache so those degrade to the unprepared cost instead of
-/// accumulating plans without limit (LRU eviction).
-const MAX_CACHED_PLANS: usize = 64;
-
-#[derive(Default)]
-struct PlanCache {
-    map: HashMap<PlanKey, RnsPlan>,
-    /// Keys from least- to most-recently used.
-    order: VecDeque<PlanKey>,
-}
-
-impl PlanCache {
-    fn contains(&self, key: &PlanKey) -> bool {
-        self.map.contains_key(key)
-    }
-
-    /// Remove and return a cached plan (caller puts it back after use).
-    fn take(&mut self, key: &PlanKey) -> Option<RnsPlan> {
-        let plan = self.map.remove(key)?;
-        if let Some(pos) = self.order.iter().position(|k| k == key) {
-            let _ = self.order.remove(pos);
-        }
-        Some(plan)
-    }
-
-    fn put(&mut self, key: PlanKey, plan: RnsPlan) {
-        if self.map.insert(key, plan).is_none() {
-            self.order.push_back(key);
-        }
-        while self.map.len() > MAX_CACHED_PLANS {
-            match self.order.pop_front() {
-                Some(old) => {
-                    self.map.remove(&old);
-                }
-                None => break,
-            }
-        }
-    }
-}
-
 pub struct RnsCore {
     pub cfg: RnsCoreConfig,
     /// Context over all (info + redundant) moduli.
@@ -208,8 +153,15 @@ pub struct RnsCore {
     pub meter: EnergyMeter,
     pub stats: FaultStats,
     rng: Rng,
-    plans: PlanCache,
-    plans_built: u64,
+    /// Shared (or private) read-only plan store this core borrows from.
+    store: Arc<PlanStore>,
+    /// Plans this core has adopted: the one-time weight-DAC conversion is
+    /// charged when a plan is first seen by *this* core, whether the
+    /// shared store built it here or another worker built it first.
+    adopted: HashSet<PlanKey>,
+    /// Model name attributed to subsequent plan lookups (per-model store
+    /// counters + eviction by model unload).
+    model_tag: Option<String>,
 }
 
 impl RnsCore {
@@ -217,7 +169,22 @@ impl RnsCore {
         Self::with_engine(cfg, Box::new(NativeEngine::default()))
     }
 
+    /// Core with a private plan store (standalone / sweep use).
     pub fn with_engine(cfg: RnsCoreConfig, engine: Box<dyn ModularGemmEngine>) -> Result<Self, String> {
+        Self::with_engine_and_store(cfg, engine, Arc::new(PlanStore::default()))
+    }
+
+    /// Core borrowing plans from a shared store (the coordinator path:
+    /// every worker gets a clone of one `Arc<PlanStore>`).
+    pub fn with_store(cfg: RnsCoreConfig, store: Arc<PlanStore>) -> Result<Self, String> {
+        Self::with_engine_and_store(cfg, Box::new(NativeEngine::default()), store)
+    }
+
+    pub fn with_engine_and_store(
+        cfg: RnsCoreConfig,
+        engine: Box<dyn ModularGemmEngine>,
+        store: Arc<PlanStore>,
+    ) -> Result<Self, String> {
         let all_moduli = if cfg.redundant > 0 {
             extend_moduli(&cfg.moduli, cfg.redundant)?
         } else {
@@ -257,8 +224,9 @@ impl RnsCore {
             meter: EnergyMeter::default(),
             stats: FaultStats::default(),
             rng,
-            plans: PlanCache::default(),
-            plans_built: 0,
+            store,
+            adopted: HashSet::new(),
+            model_tag: None,
         })
     }
 
@@ -270,44 +238,58 @@ impl RnsCore {
         self.engine.name()
     }
 
-    /// Layer plans built over this core's lifetime (serving metric).
+    /// Layer plans this core has adopted (built here or first borrowed
+    /// from the shared store) — the per-worker serving metric.  The
+    /// store's `stats().builds` is the deduplicated global build count.
     pub fn plans_built(&self) -> u64 {
-        self.plans_built
+        self.adopted.len() as u64
     }
 
-    /// Build (or reuse) the layer plan for `w`, charging the one-time
-    /// weight-DAC conversions on first build — weights are stationary, so
-    /// this is the only place weight conversions cost anything.
+    /// The plan store this core borrows from (shared across workers in
+    /// the coordinator, private otherwise).
+    pub fn plan_store(&self) -> &Arc<PlanStore> {
+        &self.store
+    }
+
+    /// Attribute subsequent plan lookups to `model` (per-model store
+    /// counters; tagged plans are pinned until the model is unloaded).
+    pub fn set_model_tag(&mut self, tag: &str) {
+        if self.model_tag.as_deref() != Some(tag) {
+            self.model_tag = Some(tag.to_string());
+        }
+    }
+
+    /// Fetch (or build, exactly once store-wide) the layer plan for `w`,
+    /// charging the one-time weight-DAC conversions when *this* core
+    /// first adopts the plan — weights are stationary, so this is the
+    /// only place weight conversions cost anything.
     pub fn prepare_weights(&mut self, w: &MatF) {
-        let key = plan_key(w);
-        if !self.plans.contains(&key) {
-            let plan = self.build_plan(w);
-            self.plans.put(key, plan);
-        }
+        let _ = self.obtain_plan(w);
     }
 
-    fn build_plan(&mut self, w: &MatF) -> RnsPlan {
-        let plan = RnsPlan::build(w, self.cfg.bits, self.cfg.h, &self.all_ctx.moduli);
-        for u in &self.units {
-            self.meter.record_dac(plan.weight_elems(), u.enob);
+    fn obtain_plan(&mut self, w: &MatF) -> Arc<RnsPlan> {
+        let key = PlanKey::for_weights(w, self.cfg.bits, self.cfg.h, &self.all_ctx.moduli);
+        let plan = {
+            let (bits, h) = (self.cfg.bits, self.cfg.h);
+            let moduli = &self.all_ctx.moduli;
+            self.store
+                .get_or_build(key, self.model_tag.as_deref(), || RnsPlan::build(w, bits, h, moduli))
+        };
+        if self.adopted.insert(key) {
+            for u in &self.units {
+                self.meter.record_dac(plan.weight_elems(), u.enob);
+            }
         }
-        self.plans_built += 1;
         plan
     }
 
     /// Full quantized GEMM through the simulated RNS core (prepared path:
-    /// the per-layer plan is built on first call and reused after).
+    /// the per-layer plan is fetched from the store — built on first
+    /// sight anywhere — and only activations are processed per call).
     pub fn gemm_quantized(&mut self, x: &MatF, w: &MatF) -> MatF {
         assert_eq!(x.cols, w.rows, "gemm shape mismatch");
-        let key = plan_key(w);
-        // take the plan out so `self` stays free for the tile loop
-        let plan = match self.plans.take(&key) {
-            Some(p) => p,
-            None => self.build_plan(w),
-        };
-        let out = self.gemm_with_plan(x, &plan);
-        self.plans.put(key, plan);
-        out
+        let plan = self.obtain_plan(w);
+        self.gemm_with_plan(x, &plan)
     }
 
     /// Prepared GEMM against an explicit plan (the coordinator path).
@@ -532,7 +514,10 @@ impl GemmBackend for RnsCore {
         self.prepare_weights(w);
     }
     fn plans_built(&self) -> u64 {
-        self.plans_built
+        RnsCore::plans_built(self)
+    }
+    fn set_model_tag(&mut self, tag: &str) {
+        RnsCore::set_model_tag(self, tag);
     }
     fn name(&self) -> String {
         let rr = if self.cfg.redundant > 0 {
@@ -748,17 +733,47 @@ mod tests {
     }
 
     #[test]
-    fn plan_cache_is_bounded() {
-        // one-shot weight sweeps (fig3-style) must not accumulate plans
+    fn untagged_plan_store_is_bounded() {
+        // one-shot weight sweeps (fig3-style) must not accumulate plans:
+        // a core without a model tag writes LRU-bounded store entries
+        use crate::store::DEFAULT_UNTAGGED_CAPACITY;
         let x = rand_mat(20, 1, 32, 1.0);
         let mut core = RnsCore::new(RnsCoreConfig::for_bits(4, 32)).unwrap();
-        for i in 0..(MAX_CACHED_PLANS + 10) {
+        let sweeps = DEFAULT_UNTAGGED_CAPACITY + 10;
+        for i in 0..sweeps {
             let w = rand_mat(100 + i as u64, 32, 2, 1.0);
             core.gemm_quantized(&x, &w);
         }
-        assert_eq!(core.plans_built(), (MAX_CACHED_PLANS + 10) as u64);
-        assert!(core.plans.map.len() <= MAX_CACHED_PLANS);
-        assert_eq!(core.plans.map.len(), core.plans.order.len());
+        assert_eq!(core.plans_built(), sweeps as u64);
+        let s = core.plan_store().stats();
+        assert_eq!(s.builds, sweeps as u64);
+        assert_eq!(s.resident_plans, DEFAULT_UNTAGGED_CAPACITY);
+        assert_eq!(s.evicted, 10);
+    }
+
+    #[test]
+    fn shared_store_builds_once_but_charges_each_core() {
+        // two workers' cores over one store: one plan build, one Arc —
+        // but each simulated accelerator still loads its own arrays, so
+        // weight-DAC energy is charged per core
+        use crate::store::PlanStore;
+        use std::sync::Arc;
+        let x = rand_mat(40, 2, 128, 1.0);
+        let w = rand_mat(41, 128, 4, 1.0);
+        let store = Arc::new(PlanStore::default());
+        let mut a = RnsCore::with_store(RnsCoreConfig::for_bits(6, 128), Arc::clone(&store)).unwrap();
+        let mut b = RnsCore::with_store(RnsCoreConfig::for_bits(6, 128), Arc::clone(&store)).unwrap();
+        let ya = a.gemm_quantized(&x, &w);
+        let yb = b.gemm_quantized(&x, &w);
+        assert_eq!(ya.data, yb.data);
+        assert_eq!(store.stats().builds, 1, "plan deduplicated across cores");
+        assert_eq!(a.plans_built(), 1);
+        assert_eq!(b.plans_built(), 1, "adoption is per core");
+        assert_eq!(a.meter.dac_conversions, b.meter.dac_conversions);
+        // a different moduli config on the same store is a different plan
+        let mut c = RnsCore::with_store(RnsCoreConfig::for_bits(8, 128), store.clone()).unwrap();
+        c.gemm_quantized(&x, &w);
+        assert_eq!(store.stats().builds, 2);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! max_batch = 8
 //! max_wait_us = 2000
 //! routing = "least-outstanding"   # or "round-robin"
+//! plan_store_capacity = 64        # LRU bound for untagged (sweep) plans
 //! ```
 
 use std::time::Duration;
@@ -73,6 +74,11 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
     };
     out.seed = cfg.int_or("core.seed", 0) as u64;
     out.routing = routing;
+    let cap = cfg.int_or("serve.plan_store_capacity", crate::store::DEFAULT_UNTAGGED_CAPACITY as i64);
+    if cap < 1 {
+        return Err("serve.plan_store_capacity must be >= 1".into());
+    }
+    out.plan_store_capacity = cap as usize;
     Ok(out)
 }
 
@@ -99,6 +105,7 @@ workers = 3
 max_batch = 16
 max_wait_us = 500
 routing = "least-outstanding"
+plan_store_capacity = 32
 "#;
 
     #[test]
@@ -119,6 +126,7 @@ routing = "least-outstanding"
         assert_eq!(cc.batcher.max_wait, Duration::from_micros(500));
         assert_eq!(cc.routing, RoutingKind::LeastOutstanding);
         assert_eq!(cc.seed, 7);
+        assert_eq!(cc.plan_store_capacity, 32);
     }
 
     #[test]
@@ -127,6 +135,7 @@ routing = "least-outstanding"
         assert!(matches!(cc.backend, BackendKind::Rns { bits: 6, .. }));
         assert_eq!(cc.workers, 2);
         assert_eq!(cc.routing, RoutingKind::RoundRobin);
+        assert_eq!(cc.plan_store_capacity, crate::store::DEFAULT_UNTAGGED_CAPACITY);
     }
 
     #[test]
@@ -149,6 +158,7 @@ routing = "least-outstanding"
             "[core]\nnoise_p = 1.5",
             "[core]\nh = 0",
             "[serve]\nrouting = \"random\"",
+            "[serve]\nplan_store_capacity = 0",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(from_config(&cfg, "/tmp/a").is_err(), "{bad}");

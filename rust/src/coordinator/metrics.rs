@@ -1,8 +1,26 @@
-//! Serving metrics: throughput, latency percentiles, fault counters.
+//! Serving metrics: throughput, latency percentiles, fault counters —
+//! globally and per model — plus the shared plan store's hit/miss and
+//! residency counters in the shutdown report.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::store::{ModelPlanStats, StoreStats};
 use crate::util::stats::Percentiles;
+
+/// Decode / fault / plan counters attributed to one model's batches.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModelServingStats {
+    pub batches: u64,
+    pub faults_detected: u64,
+    pub faults_corrected: u64,
+    pub decode_fast_path: u64,
+    pub decode_voted: u64,
+    /// Plans adopted by workers while serving this model (plateaus at
+    /// workers × layers; the plan store's misses count is the
+    /// deduplicated build side).
+    pub plans_adopted: u64,
+}
 
 #[derive(Default)]
 pub struct ServingMetrics {
@@ -17,9 +35,14 @@ pub struct ServingMetrics {
     /// near 1.0 is the healthy steady state for clean hardware).
     pub decode_fast_path: u64,
     pub decode_voted: u64,
-    /// Per-layer RNS plans built across all workers (should plateau at
-    /// workers × model layers: plans are reused across requests).
+    /// Per-layer RNS plans adopted across all workers (plateaus at
+    /// workers × model layers — adoption is per worker; the shared plan
+    /// store's `builds` counter shows the deduplicated build count).
     pub plans_built: u64,
+    /// Same counters keyed by model (BTreeMap: stable report order).
+    per_model: BTreeMap<String, ModelServingStats>,
+    /// Plan-store snapshot attached at shutdown.
+    plan_store: Option<(StoreStats, Vec<ModelPlanStats>)>,
     latency_us: Percentiles,
     queue_us: Percentiles,
     batch_sizes: Percentiles,
@@ -29,6 +52,35 @@ impl ServingMetrics {
     pub fn record_batch(&mut self, batch_samples: usize) {
         self.batches += 1;
         self.batch_sizes.add(batch_samples as f64);
+    }
+
+    /// Accumulate one served batch's counter deltas under its model.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_model_batch(
+        &mut self,
+        model: &str,
+        faults_detected: u64,
+        faults_corrected: u64,
+        decode_fast_path: u64,
+        decode_voted: u64,
+        plans_adopted: u64,
+    ) {
+        let e = self.per_model.entry(model.to_string()).or_default();
+        e.batches += 1;
+        e.faults_detected += faults_detected;
+        e.faults_corrected += faults_corrected;
+        e.decode_fast_path += decode_fast_path;
+        e.decode_voted += decode_voted;
+        e.plans_adopted += plans_adopted;
+    }
+
+    pub fn model_stats(&self, model: &str) -> Option<ModelServingStats> {
+        self.per_model.get(model).copied()
+    }
+
+    /// Attach the shared plan store's counters for the shutdown report.
+    pub fn set_plan_store(&mut self, stats: StoreStats, per_model: Vec<ModelPlanStats>) {
+        self.plan_store = Some((stats, per_model));
     }
 
     pub fn record_response(&mut self, samples: usize, latency: Duration, queue: Duration, ok: bool) {
@@ -54,6 +106,9 @@ impl ServingMetrics {
     }
 
     /// Render a one-screen report (used by `serve` and the e2e example).
+    /// Global lines come first and keep their PR-2 shapes (parsers key on
+    /// the first occurrence of `fast-path=` etc.); per-model decode lines
+    /// and the plan-store block follow.
     pub fn report(&mut self, wall: Duration) -> String {
         let thpt = self.samples as f64 / wall.as_secs_f64().max(1e-9);
         let mb = self.mean_batch_size();
@@ -63,7 +118,7 @@ impl ServingMetrics {
             self.latency_percentile_us(99.0),
         );
         let q50 = self.queue_percentile_us(50.0);
-        format!(
+        let mut out = format!(
             "requests={} samples={} batches={} failures={}\n\
              throughput={:.1} samples/s  median batch={:.1}\n\
              latency p50={:.0}µs p95={:.0}µs p99={:.0}µs  queue p50={:.0}µs\n\
@@ -85,7 +140,32 @@ impl ServingMetrics {
             self.faults_corrected,
             self.decode_fast_path,
             self.decode_voted,
-        )
+        );
+        for (model, s) in &self.per_model {
+            out.push_str(&format!(
+                "\nmodel={model}: batches={} decode fast-path={} voted={} \
+                 faults detected={} corrected={} plans adopted={}",
+                s.batches,
+                s.decode_fast_path,
+                s.decode_voted,
+                s.faults_detected,
+                s.faults_corrected,
+                s.plans_adopted,
+            ));
+        }
+        if let Some((stats, per_model)) = &self.plan_store {
+            out.push_str(&format!(
+                "\nplan store: resident={} bytes={} builds={} hits={} evicted={}",
+                stats.resident_plans, stats.resident_bytes, stats.builds, stats.hits, stats.evicted,
+            ));
+            for m in per_model {
+                out.push_str(&format!(
+                    "\nplan store model={}: resident={} bytes={} hits={} misses={}",
+                    m.model, m.plans, m.bytes, m.hits, m.misses,
+                ));
+            }
+        }
+        out
     }
 }
 
@@ -107,5 +187,31 @@ mod tests {
         let rep = m.report(Duration::from_secs(1));
         assert!(rep.contains("requests=2"));
         assert!(rep.contains("throughput=6.0"));
+    }
+
+    #[test]
+    fn per_model_and_plan_store_sections() {
+        let mut m = ServingMetrics::default();
+        m.record_model_batch("mlp", 2, 1, 100, 4, 3);
+        m.record_model_batch("mlp", 0, 0, 50, 0, 0);
+        m.record_model_batch("bert", 0, 0, 10, 0, 13);
+        let s = m.model_stats("mlp").unwrap();
+        assert_eq!(s.batches, 2);
+        assert_eq!((s.decode_fast_path, s.decode_voted), (150, 4));
+        assert_eq!((s.faults_detected, s.faults_corrected, s.plans_adopted), (2, 1, 3));
+        assert!(m.model_stats("nope").is_none());
+        m.set_plan_store(
+            StoreStats { builds: 16, hits: 48, evicted: 0, resident_plans: 16, resident_bytes: 4096 },
+            vec![ModelPlanStats { model: "mlp".into(), hits: 9, misses: 3, plans: 3, bytes: 1024 }],
+        );
+        let rep = m.report(Duration::from_secs(1));
+        // global decode line precedes per-model lines (report parsers key
+        // on the first `fast-path=` occurrence)
+        assert!(rep.find("decode: fast-path=0").unwrap() < rep.find("model=bert").unwrap());
+        // BTreeMap => stable alphabetical model order
+        assert!(rep.find("model=bert").unwrap() < rep.find("model=mlp").unwrap());
+        assert!(rep.contains("model=mlp: batches=2 decode fast-path=150 voted=4"));
+        assert!(rep.contains("plan store: resident=16 bytes=4096 builds=16 hits=48 evicted=0"));
+        assert!(rep.contains("plan store model=mlp: resident=3 bytes=1024 hits=9 misses=3"));
     }
 }

@@ -1,12 +1,17 @@
 //! The serving coordinator: a dispatcher thread (dynamic batcher + round-
 //! robin tile scheduler) feeding a pool of worker threads, each owning a
-//! simulated analog core and a model zoo instance.
+//! simulated analog core over *shared* read-only state: one
+//! `ModelRegistry` (every worker clones `Arc<dyn Model>` — weights exist
+//! once) and one `PlanStore` (every layer's `RnsPlan` exists once,
+//! whichever worker builds it first; `Model::warm` from W workers
+//! deduplicates to one build per layer).
 //!
 //! Engines wrapping PJRT state are not `Send`, so every worker constructs
 //! its own backend *inside* its thread — mirroring how a real deployment
 //! pins one accelerator context per worker.  The RRNS detect→recompute
 //! loop (paper §IV) runs inside the core; its fault counters are merged
-//! into the serving metrics at shutdown.
+//! into the serving metrics — globally and per model — and the plan
+//! store's hit/miss/residency counters land in the shutdown report.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -20,8 +25,9 @@ use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::router::RoutingKind;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestId};
-use crate::nn::models::{load_model, Batch, Model};
+use crate::nn::models::{Batch, Model, ModelRegistry};
 use crate::runtime::pjrt::{PjrtEngine, PjrtRuntime};
+use crate::store::{PlanStore, DEFAULT_UNTAGGED_CAPACITY};
 use crate::tensor::{MatF, Nhwc};
 
 /// Which simulated hardware the workers run.
@@ -48,6 +54,9 @@ pub struct CoordinatorConfig {
     pub seed: u64,
     /// Worker routing policy (round-robin or least-outstanding).
     pub routing: RoutingKind,
+    /// LRU bound for *untagged* plans in the shared plan store (served
+    /// models' plans are tagged and pinned until unload).
+    pub plan_store_capacity: usize,
 }
 
 impl CoordinatorConfig {
@@ -60,6 +69,7 @@ impl CoordinatorConfig {
             h: 128,
             seed: 0,
             routing: RoutingKind::default(),
+            plan_store_capacity: DEFAULT_UNTAGGED_CAPACITY,
         }
     }
 }
@@ -77,6 +87,11 @@ pub struct Coordinator {
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<Mutex<ServingMetrics>>,
+    /// Shared read-only plan store (one `RnsPlan` per layer across all
+    /// workers); its counters land in the shutdown report.
+    store: Arc<PlanStore>,
+    /// Shared load-once model instances (one weight copy across workers).
+    registry: Arc<ModelRegistry>,
     started: Instant,
 }
 
@@ -86,6 +101,10 @@ impl Coordinator {
         let (resp_tx, resp_rx) = mpsc::channel::<InferenceResponse>();
         let (done_tx, done_rx) = mpsc::channel::<usize>();
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+        // built once at startup, handed to every worker: the store is the
+        // cross-worker plan memory, the registry the cross-worker weights
+        let store = Arc::new(PlanStore::with_capacity(cfg.plan_store_capacity));
+        let registry = Arc::new(ModelRegistry::new(&cfg.artifacts_dir));
 
         let mut worker_txs = Vec::new();
         let mut workers = Vec::new();
@@ -96,10 +115,14 @@ impl Coordinator {
             let resp_tx = resp_tx.clone();
             let done_tx = done_tx.clone();
             let metrics = Arc::clone(&metrics);
+            let store = Arc::clone(&store);
+            let registry = Arc::clone(&registry);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rns-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, cfg_w, rx, resp_tx, done_tx, metrics))
+                    .spawn(move || {
+                        worker_loop(wid, cfg_w, store, registry, rx, resp_tx, done_tx, metrics)
+                    })
                     .expect("spawn worker"),
             );
         }
@@ -121,8 +144,34 @@ impl Coordinator {
             dispatcher: Some(dispatcher),
             workers,
             metrics,
+            store,
+            registry,
             started: Instant::now(),
         }
+    }
+
+    /// The shared plan store (one `Arc<RnsPlan>` per layer across all
+    /// workers).  Exposed for tests and ops tooling.
+    pub fn plan_store(&self) -> Arc<PlanStore> {
+        Arc::clone(&self.store)
+    }
+
+    /// The shared model registry (one weight copy across all workers).
+    pub fn model_registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Drop a model's shared weights and evict its plans from the store.
+    /// Workers re-validate their cached instance against the registry on
+    /// every batch, so the unload takes effect mid-session: a later
+    /// request for the name reloads fresh weights and re-warms fresh
+    /// plans.  A worker that never sees the model again releases its
+    /// stale clone at shutdown (proactive release needs a control
+    /// message — ROADMAP PR-3 follow-up).  Returns how many plans were
+    /// evicted.
+    pub fn unload_model(&self, name: &str) -> usize {
+        self.registry.unload(name);
+        self.store.unload_model(name)
     }
 
     /// Submit a request; returns its id immediately.
@@ -147,7 +196,8 @@ impl Coordinator {
         (0..n).filter_map(|_| self.recv()).collect()
     }
 
-    /// Stop accepting requests, drain workers, and return the final report.
+    /// Stop accepting requests, drain workers, and return the final report
+    /// (including the plan store's hit/miss counters, per model).
     pub fn shutdown(mut self) -> String {
         drop(self.submit_tx.take()); // dispatcher sees the channel close
         if let Some(d) = self.dispatcher.take() {
@@ -157,7 +207,9 @@ impl Coordinator {
             w.join().ok();
         }
         let wall = self.started.elapsed();
-        self.metrics.lock().unwrap().report(wall)
+        let mut m = self.metrics.lock().unwrap();
+        m.set_plan_store(self.store.stats(), self.store.model_stats());
+        m.report(wall)
     }
 }
 
@@ -197,10 +249,22 @@ fn dispatcher_loop(
     }
 }
 
-/// Construct the configured backend (public so the CLI / examples can run
-/// a core without the full coordinator).  Engines wrapping PJRT state are
-/// not `Send`; call this from the thread that will use the backend.
+/// Construct the configured backend with a private plan store (the CLI /
+/// examples path — a single core gains nothing from sharing).  Engines
+/// wrapping PJRT state are not `Send`; call this from the thread that
+/// will use the backend.
 pub fn build_backend(cfg: &CoordinatorConfig, wid: usize) -> Result<Box<dyn GemmBackend>, String> {
+    build_backend_with_store(cfg, wid, Arc::new(PlanStore::with_capacity(cfg.plan_store_capacity)))
+}
+
+/// Construct the configured backend over a shared plan store (the
+/// coordinator worker path: every worker's core borrows from one store,
+/// so each layer's plan is built once and shared as an `Arc`).
+pub fn build_backend_with_store(
+    cfg: &CoordinatorConfig,
+    wid: usize,
+    store: Arc<PlanStore>,
+) -> Result<Box<dyn GemmBackend>, String> {
     let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9E37_79B9);
     match &cfg.backend {
         BackendKind::Fp32 => Ok(Box::new(Fp32Backend)),
@@ -208,23 +272,25 @@ pub fn build_backend(cfg: &CoordinatorConfig, wid: usize) -> Result<Box<dyn Gemm
             Ok(Box::new(FixedPointCore::new(*bits, cfg.h, NoiseModel::None, seed)))
         }
         BackendKind::Rns { bits, redundant, attempts, noise } => {
-            let core = RnsCore::new(
+            let core = RnsCore::with_store(
                 RnsCoreConfig::for_bits(*bits, cfg.h)
                     .with_noise(*noise)
                     .with_rrns(*redundant, *attempts)
                     .with_seed(seed),
+                store,
             )?;
             Ok(Box::new(core))
         }
         BackendKind::RnsPjrt { bits, redundant, attempts, noise } => {
             let rt = PjrtRuntime::cpu().map_err(|e| e.to_string())?;
             let engine = PjrtEngine::load(&rt, &cfg.artifacts_dir, *bits).map_err(|e| e.to_string())?;
-            let core = RnsCore::with_engine(
+            let core = RnsCore::with_engine_and_store(
                 RnsCoreConfig::for_bits(*bits, cfg.h)
                     .with_noise(*noise)
                     .with_rrns(*redundant, *attempts)
                     .with_seed(seed),
                 Box::new(engine),
+                store,
             )?;
             Ok(Box::new(core))
         }
@@ -235,16 +301,20 @@ fn split_logits(all: &MatF, offset: usize, n: usize) -> MatF {
     all.slice_rows(offset, offset + n)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wid: usize,
     cfg: CoordinatorConfig,
+    store: Arc<PlanStore>,
+    registry: Arc<ModelRegistry>,
     rx: Receiver<WorkerMsg>,
     resp_tx: Sender<InferenceResponse>,
     done_tx: Sender<usize>,
     metrics: Arc<Mutex<ServingMetrics>>,
 ) {
-    // Backend and models are constructed in-thread (PJRT state is !Send).
-    let mut backend = match build_backend(&cfg, wid) {
+    // Backend is constructed in-thread (PJRT state is !Send), but borrows
+    // the shared plan store; models come as shared Arcs from the registry.
+    let mut backend = match build_backend_with_store(&cfg, wid, store) {
         Ok(b) => {
             crate::log_debug!("worker", "worker {wid} ready with backend {}", b.name());
             b
@@ -258,7 +328,7 @@ fn worker_loop(
             return;
         }
     };
-    let mut models: HashMap<String, Box<dyn Model>> = HashMap::new();
+    let mut models: HashMap<String, Arc<dyn Model>> = HashMap::new();
     let mut faults_before = 0u64;
     let mut corrected_before = 0u64;
     let mut plans_before = 0u64;
@@ -270,29 +340,41 @@ fn worker_loop(
             WorkerMsg::Batch(b) => b,
             WorkerMsg::Shutdown => break,
         };
-        if !models.contains_key(&batch.model) {
-            match load_model(&cfg.artifacts_dir, &batch.model) {
-                Ok(m) => {
-                    // build the per-layer RNS plans once per (worker, model):
-                    // weights are stationary, so every request after this
-                    // reuses the prepared residues/staging for free
-                    m.warm(backend.as_mut());
-                    crate::log_debug!(
-                        "worker",
-                        "worker {wid}: warmed `{}` ({} layer plans total)",
-                        batch.model,
-                        backend.plans_built()
-                    );
-                    models.insert(batch.model.clone(), m);
-                }
-                Err(e) => {
-                    crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
-                    fail_batch(wid, batch, &e, &resp_tx, &metrics);
-                    continue;
-                }
+        // tag plan lookups with the model for per-model store counters
+        // (and so served plans are pinned until model unload)
+        backend.set_model_tag(&batch.model);
+        // fetch the shared instance through the registry every batch (one
+        // mutex lock — trivial against a forward pass): this is what lets
+        // `Coordinator::unload_model` take effect mid-session.  A model
+        // unloaded and requested again reloads fresh, and the pointer
+        // comparison below detects the new instance and re-warms it.
+        let model = match registry.get_or_load(&batch.model) {
+            Ok(m) => m,
+            Err(e) => {
+                crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
+                fail_batch(wid, batch, &e, &resp_tx, &metrics);
+                continue;
             }
+        };
+        let warmed = models
+            .get(&batch.model)
+            .map_or(false, |prev| Arc::ptr_eq(prev, &model));
+        if !warmed {
+            // warm the per-layer RNS plans: the shared store deduplicates,
+            // so W workers warming the same model build each plan exactly
+            // once — the other W-1 warms are store hits that only adopt
+            // (and charge their core's one-time weight-DAC energy)
+            model.warm(backend.as_mut());
+            crate::log_debug!(
+                "worker",
+                "worker {wid}: warmed `{}` ({} layer plans adopted)",
+                batch.model,
+                backend.plans_built()
+            );
+            // replacing a stale entry also drops this worker's Arc to an
+            // unloaded instance, releasing its share of the old weights
+            models.insert(batch.model.clone(), Arc::clone(&model));
         }
-        let model = models.get(&batch.model).unwrap();
         let picked_up = Instant::now();
         let logits = model.forward(&batch.input, backend.as_mut());
         // fault counters from the RRNS core, per batch
@@ -308,9 +390,9 @@ fn worker_loop(
         fast_before = fast_path;
         let voted_delta = voted.saturating_sub(voted_before);
         voted_before = voted;
-        // plans built since the last batch: warm-time builds land in the
-        // first delta, and a steady-state delta > 0 means a layer was first
-        // seen mid-request (a warm() gap worth fixing)
+        // plans adopted since the last batch: warm-time adoptions land in
+        // the first delta, and a steady-state delta > 0 means a layer was
+        // first seen mid-request (a warm() gap worth fixing)
         let plans_now = backend.plans_built();
         let plans_delta = plans_now.saturating_sub(plans_before);
         plans_before = plans_now;
@@ -321,6 +403,17 @@ fn worker_loop(
             m.decode_fast_path += fast_delta;
             m.decode_voted += voted_delta;
             m.plans_built += plans_delta;
+            // the same deltas, attributed to the model this batch ran —
+            // a worker serves one batch (= one model) at a time, so the
+            // counter deltas since the previous batch belong to it
+            m.record_model_batch(
+                &batch.model,
+                batch_faults,
+                corrected_delta,
+                fast_delta,
+                voted_delta,
+                plans_delta,
+            );
         }
         for (req, offset) in batch.members {
             let n = req.num_samples();
@@ -408,6 +501,34 @@ mod tests {
         }
         let report = coord.shutdown();
         assert!(report.contains("requests=5"), "{report}");
+    }
+
+    #[test]
+    fn workers_share_one_plan_store() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut cfg = CoordinatorConfig::new(
+            BackendKind::Rns { bits: 6, redundant: 0, attempts: 1, noise: NoiseModel::None },
+            &artifacts_dir(),
+        );
+        cfg.workers = 3;
+        let coord = Coordinator::start(cfg);
+        for _ in 0..9 {
+            coord.submit("mlp", Batch::Images(Nhwc::zeros(1, 28, 28, 1)));
+        }
+        let resps = coord.collect(9);
+        assert!(resps.iter().all(|r| r.result.is_ok()));
+        let store = coord.plan_store();
+        let stats = store.stats();
+        // the mlp has 3 weight GEMMs: exactly 3 plans exist store-wide,
+        // however many of the 3 workers warmed the model
+        assert_eq!(stats.builds, 3, "plans deduplicated across workers");
+        assert_eq!(stats.resident_plans, 3);
+        let report = coord.shutdown();
+        assert!(report.contains("plan store: resident=3"), "{report}");
+        assert!(report.contains("plan store model=mlp:"), "{report}");
+        assert!(report.contains("model=mlp: batches="), "{report}");
     }
 
     #[test]

@@ -27,5 +27,6 @@ pub mod nn;
 pub mod quant;
 pub mod rns;
 pub mod runtime;
+pub mod store;
 pub mod tensor;
 pub mod util;

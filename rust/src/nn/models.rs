@@ -460,6 +460,54 @@ pub fn load_model(artifacts_dir: &str, name: &str) -> Result<Box<dyn Model>, Str
     }
 }
 
+/// Shared, load-once model registry: every coordinator worker clones one
+/// `Arc<dyn Model>` per model instead of loading its own copy.  Besides
+/// de-duplicating weight memory W-fold, this is what makes the shared
+/// `PlanStore` de-duplicate plans — plan keys include the weight
+/// allocation's address, so workers must literally share the weights for
+/// their plan lookups to collide (see `store::PlanKey`).
+pub struct ModelRegistry {
+    artifacts_dir: String,
+    models: std::sync::Mutex<std::collections::HashMap<String, std::sync::Arc<dyn Model>>>,
+}
+
+impl ModelRegistry {
+    pub fn new(artifacts_dir: &str) -> Self {
+        ModelRegistry {
+            artifacts_dir: artifacts_dir.to_string(),
+            models: std::sync::Mutex::new(std::collections::HashMap::new()),
+        }
+    }
+
+    /// Fetch a model, loading it at most once across all workers.  The
+    /// registry lock is held across the load: concurrent first requests
+    /// for the *same* model must not both hit the filesystem, and model
+    /// loads are rare (startup) and small, so serializing them is fine.
+    pub fn get_or_load(&self, name: &str) -> Result<std::sync::Arc<dyn Model>, String> {
+        let mut models = self.models.lock().unwrap();
+        if let Some(m) = models.get(name) {
+            return Ok(std::sync::Arc::clone(m));
+        }
+        let m: std::sync::Arc<dyn Model> = std::sync::Arc::from(load_model(&self.artifacts_dir, name)?);
+        models.insert(name.to_string(), std::sync::Arc::clone(&m));
+        Ok(m)
+    }
+
+    /// Drop the shared instance; weights free once the last worker's
+    /// clone drops.  Pair with `PlanStore::unload_model` to evict the
+    /// model's plans too.
+    pub fn unload(&self, name: &str) -> bool {
+        self.models.lock().unwrap().remove(name).is_some()
+    }
+
+    /// Names currently resident, sorted.
+    pub fn loaded(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
 pub const ZOO: [&str; 4] = ["mlp", "cnn", "resnet", "bert"];
 
 #[cfg(test)]
@@ -524,6 +572,25 @@ mod tests {
         let mut fp32 = Fp32Backend;
         mlp.warm(&mut fp32);
         assert_eq!(fp32.plans_built(), 0);
+    }
+
+    #[test]
+    fn registry_loads_once_and_unloads() {
+        let reg = ModelRegistry::new("/nonexistent");
+        assert!(reg.get_or_load("mlp").is_err(), "no artifacts -> load error");
+        assert!(reg.get_or_load("no-such-model").is_err());
+        assert!(reg.loaded().is_empty());
+        assert!(!reg.unload("mlp"));
+        // with real artifacts the shared instance is pointer-equal
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if std::path::Path::new(&format!("{dir}/models/mlp.rt")).exists() {
+            let reg = ModelRegistry::new(&dir);
+            let a = reg.get_or_load("mlp").unwrap();
+            let b = reg.get_or_load("mlp").unwrap();
+            assert!(std::sync::Arc::ptr_eq(&a, &b), "one load, shared Arc");
+            assert_eq!(reg.loaded(), vec!["mlp".to_string()]);
+            assert!(reg.unload("mlp"));
+        }
     }
 
     #[test]

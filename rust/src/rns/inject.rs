@@ -17,7 +17,13 @@
 //!     order `estimate_case_probs` has always used);
 //!   * `Burst { elems, width }` — one burst event per tile: a contiguous
 //!     run of `width` channels corrupted across `elems` consecutive
-//!     output elements (a transient glitch spanning adjacent outputs).
+//!     output elements (a transient glitch spanning adjacent outputs);
+//!   * `TemporalBurst { tiles, elems, width }` — a drift-like event: one
+//!     `elems × width` rectangle drawn once and re-applied (fresh flip
+//!     values, same location) to `tiles` *consecutive* tiles of a layer
+//!     before a new rectangle is drawn.  The persistence lives in the
+//!     stateful `FaultInjector`; the stateless `apply_tile`/`apply_word`
+//!     treat it as a single-tile `Burst`.
 
 use crate::tensor::MatI;
 use crate::util::rng::Rng;
@@ -42,6 +48,11 @@ pub enum FaultSpec {
     /// consecutive channels.  Applied to a single word, `elems` is moot
     /// and only the `width`-channel run is injected.
     Burst { elems: usize, width: usize },
+    /// Correlated temporal burst: the same `elems x width` rectangle
+    /// persists across `tiles` consecutive tiles (drift-like fault,
+    /// fresh flip values each tile).  Requires a `FaultInjector` to carry
+    /// the cross-tile state; used standalone it degrades to `Burst`.
+    TemporalBurst { tiles: usize, elems: usize, width: usize },
 }
 
 impl FaultSpec {
@@ -75,7 +86,8 @@ impl FaultSpec {
                 }
                 hit
             }
-            FaultSpec::Burst { elems: _, width } => {
+            FaultSpec::Burst { elems: _, width }
+            | FaultSpec::TemporalBurst { tiles: _, elems: _, width } => {
                 let width = width.min(n);
                 if width == 0 {
                     return Vec::new();
@@ -125,22 +137,22 @@ impl FaultSpec {
         assert_eq!(channels.len(), moduli.len());
         let len = channels[0].data.len();
         debug_assert!(channels.iter().all(|c| c.data.len() == len));
-        if let FaultSpec::Burst { elems, width } = *self {
+        let burst = match *self {
+            FaultSpec::Burst { elems, width } => Some((elems, width)),
+            // stateless path: one tile, one rectangle (the cross-tile
+            // persistence needs the stateful FaultInjector)
+            FaultSpec::TemporalBurst { tiles: _, elems, width } => Some((elems, width)),
+            _ => None,
+        };
+        if let Some((elems, width)) = burst {
             let elems = elems.min(len);
             let width = width.min(channels.len());
-            let mut per_elem = vec![Vec::new(); len];
-            if width > 0 && elems > 0 {
-                let e0 = rng.gen_range((len - elems + 1) as u64) as usize;
-                let c0 = rng.gen_range((channels.len() - width + 1) as u64) as usize;
-                for e in e0..e0 + elems {
-                    for ch in c0..c0 + width {
-                        let r = channels[ch].data[e] as u64;
-                        channels[ch].data[e] = flip_residue(r, moduli[ch], rng) as i64;
-                        per_elem[e].push(ch);
-                    }
-                }
+            if width == 0 || elems == 0 {
+                return TileFaults::from_per_elem(vec![Vec::new(); len]);
             }
-            return TileFaults::from_per_elem(per_elem);
+            let e0 = rng.gen_range((len - elems + 1) as u64) as usize;
+            let c0 = rng.gen_range((channels.len() - width + 1) as u64) as usize;
+            return apply_rectangle(channels, moduli, rng, e0, elems, c0, width);
         }
         let mut per_elem = Vec::with_capacity(len);
         let mut word = vec![0u64; channels.len()];
@@ -158,17 +170,54 @@ impl FaultSpec {
     }
 }
 
+/// Flip every (element, channel) pair of one fixed rectangle; fresh flip
+/// values come from `rng`.  Shared by the stateless `Burst` tile path and
+/// the injector's persistent `TemporalBurst` path so the two corrupt
+/// identically given the same rectangle.
+fn apply_rectangle(
+    channels: &mut [MatI],
+    moduli: &[u64],
+    rng: &mut Rng,
+    e0: usize,
+    elems: usize,
+    c0: usize,
+    width: usize,
+) -> TileFaults {
+    let len = channels[0].data.len();
+    let mut per_elem = vec![Vec::new(); len];
+    for e in e0..e0 + elems {
+        for ch in c0..c0 + width {
+            let r = channels[ch].data[e] as u64;
+            channels[ch].data[e] = flip_residue(r, moduli[ch], rng) as i64;
+            per_elem[e].push(ch);
+        }
+    }
+    TileFaults::from_per_elem(per_elem)
+}
+
+/// An active drift event: where the rectangle sits and how many more
+/// tiles it persists for.
+#[derive(Clone, Copy, Debug)]
+struct TemporalEvent {
+    remaining: usize,
+    e0: usize,
+    c0: usize,
+}
+
 /// A seeded injector: `FaultSpec` + its own RNG, so a corruption campaign
-/// replays bit-for-bit from `(spec, seed)` alone.
+/// replays bit-for-bit from `(spec, seed)` alone.  For `TemporalBurst`
+/// the injector additionally carries the active drift event across
+/// `corrupt_tile` calls — feed it a layer's tiles in execution order.
 #[derive(Clone, Debug)]
 pub struct FaultInjector {
     pub spec: FaultSpec,
     rng: Rng,
+    temporal: Option<TemporalEvent>,
 }
 
 impl FaultInjector {
     pub fn new(spec: FaultSpec, seed: u64) -> Self {
-        FaultInjector { spec, rng: Rng::seed_from(seed) }
+        FaultInjector { spec, rng: Rng::seed_from(seed), temporal: None }
     }
 
     /// Corrupt one codeword in place; returns corrupted channel indices.
@@ -176,9 +225,50 @@ impl FaultInjector {
         self.spec.apply_word(residues, moduli, &mut self.rng)
     }
 
-    /// Corrupt a tile of per-channel residue matrices in place.
+    /// Corrupt a tile of per-channel residue matrices in place.  For
+    /// `TemporalBurst`, consecutive calls re-corrupt the same rectangle
+    /// until its tile budget is spent, then draw a new one.
     pub fn corrupt_tile(&mut self, channels: &mut [MatI], moduli: &[u64]) -> TileFaults {
+        if let FaultSpec::TemporalBurst { tiles, elems, width } = self.spec {
+            return self.corrupt_tile_temporal(channels, moduli, tiles, elems, width);
+        }
         self.spec.apply_tile(channels, moduli, &mut self.rng)
+    }
+
+    fn corrupt_tile_temporal(
+        &mut self,
+        channels: &mut [MatI],
+        moduli: &[u64],
+        tiles: usize,
+        elems: usize,
+        width: usize,
+    ) -> TileFaults {
+        assert!(!channels.is_empty());
+        assert_eq!(channels.len(), moduli.len());
+        let len = channels[0].data.len();
+        debug_assert!(channels.iter().all(|c| c.data.len() == len));
+        let elems = elems.min(len);
+        let width = width.min(channels.len());
+        if tiles == 0 || elems == 0 || width == 0 {
+            return TileFaults::from_per_elem(vec![Vec::new(); len]);
+        }
+        // draw a new event when none is active (first tile, or budget
+        // spent); the rectangle — not the flip values — is what persists
+        let ev = match self.temporal {
+            Some(ev) if ev.remaining > 0 => ev,
+            _ => TemporalEvent {
+                remaining: tiles,
+                e0: self.rng.gen_range((len - elems + 1) as u64) as usize,
+                c0: self.rng.gen_range((channels.len() - width + 1) as u64) as usize,
+            },
+        };
+        // tiles of one layer share an output shape; clamp defensively if
+        // a caller feeds a smaller trailing tile or channel set
+        let e0 = ev.e0.min(len - elems);
+        let c0 = ev.c0.min(channels.len() - width);
+        let faults = apply_rectangle(channels, moduli, &mut self.rng, e0, elems, c0, width);
+        self.temporal = Some(TemporalEvent { remaining: ev.remaining - 1, ..ev });
+        faults
     }
 }
 
@@ -305,6 +395,89 @@ mod tests {
                 assert_eq!(now.data[e] != before[e], in_rect, "ch={ch} e={e}");
             }
         }
+    }
+
+    #[test]
+    fn temporal_burst_is_deterministic_and_persists_across_tiles() {
+        let moduli = moduli53();
+        let (rows, cols) = (4usize, 8);
+        let spec = FaultSpec::TemporalBurst { tiles: 3, elems: 5, width: 2 };
+        // seeded determinism over a whole tile *sequence*
+        let run = |seed: u64| -> Vec<(Vec<Vec<i64>>, Vec<Vec<usize>>)> {
+            let mut inj = FaultInjector::new(spec, seed);
+            (0..7u64)
+                .map(|t| {
+                    let mut channels = tile(&moduli, rows, cols, 100 + t);
+                    let f = inj.corrupt_tile(&mut channels, &moduli);
+                    (channels.iter().map(|c| c.data.clone()).collect(), f.per_elem)
+                })
+                .collect()
+        };
+        let a = run(77);
+        let b = run(77);
+        for (t, ((da, fa), (db, fb))) in a.iter().zip(&b).enumerate() {
+            assert_eq!(da, db, "tile {t}: same seed, same corruption");
+            assert_eq!(fa, fb, "tile {t}");
+        }
+        assert_ne!(
+            a.iter().map(|(d, _)| d).collect::<Vec<_>>(),
+            run(78).iter().map(|(d, _)| d).collect::<Vec<_>>(),
+            "different seed must corrupt differently"
+        );
+        // correlation: the footprint (which (elem, channel) pairs) is
+        // identical within each 3-tile window — the drift pins one
+        // rectangle — and every tile has exactly the 5x2 rectangle
+        let footprints: Vec<&Vec<Vec<usize>>> = a.iter().map(|(_, f)| f).collect();
+        for f in &footprints {
+            let touched: Vec<usize> =
+                (0..rows * cols).filter(|&e| !f[e].is_empty()).collect();
+            assert_eq!(touched.len(), 5);
+            assert!(touched.windows(2).all(|w| w[1] == w[0] + 1));
+            assert!(f[touched[0]].len() == 2);
+        }
+        assert_eq!(footprints[0], footprints[1]);
+        assert_eq!(footprints[1], footprints[2]);
+        assert_eq!(footprints[3], footprints[4]);
+        assert_eq!(footprints[4], footprints[5]);
+        // after a window's budget is spent a fresh rectangle is drawn;
+        // draws are independent, so across a handful of seeds at least
+        // one must land the second event somewhere else
+        let moved = (0..10u64).any(|seed| {
+            let mut inj = FaultInjector::new(spec, seed);
+            let fs: Vec<Vec<Vec<usize>>> = (0..4)
+                .map(|t| {
+                    let mut channels = tile(&moduli, rows, cols, 200 + t);
+                    inj.corrupt_tile(&mut channels, &moduli).per_elem
+                })
+                .collect();
+            fs[2] != fs[3]
+        });
+        assert!(moved, "a new event must eventually move the rectangle");
+    }
+
+    #[test]
+    fn temporal_burst_stateless_fallback_acts_like_burst() {
+        // FaultSpec::apply_tile / apply_word (no injector state) treat a
+        // TemporalBurst as a single-tile Burst with the same rng stream
+        let moduli = moduli53();
+        let mut a = tile(&moduli, 3, 7, 50);
+        let mut b = tile(&moduli, 3, 7, 50);
+        let mut rng_a = Rng::seed_from(9);
+        let mut rng_b = Rng::seed_from(9);
+        let fa = FaultSpec::TemporalBurst { tiles: 4, elems: 4, width: 2 }
+            .apply_tile(&mut a, &moduli, &mut rng_a);
+        let fb = FaultSpec::Burst { elems: 4, width: 2 }.apply_tile(&mut b, &moduli, &mut rng_b);
+        assert_eq!(fa.per_elem, fb.per_elem);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+        }
+        let mut wa: Vec<u64> = moduli.iter().map(|&m| m / 3).collect();
+        let mut wb = wa.clone();
+        let ha = FaultSpec::TemporalBurst { tiles: 4, elems: 4, width: 2 }
+            .apply_word(&mut wa, &moduli, &mut rng_a);
+        let hb = FaultSpec::Burst { elems: 4, width: 2 }.apply_word(&mut wb, &moduli, &mut rng_b);
+        assert_eq!(ha, hb);
+        assert_eq!(wa, wb);
     }
 
     #[test]

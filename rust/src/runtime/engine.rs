@@ -3,8 +3,11 @@
 //!
 //! Two interchangeable backends sit behind `ModularGemmEngine`:
 //!   * `NativeEngine` — exact i64 + Barrett modular GEMM in rust,
-//!     parallelized across residue channels × batch-row blocks with
-//!     `std::thread::scope` (the crate is dependency-free — no rayon).
+//!     parallelized across residue channels × batch-row blocks.  Shards
+//!     run on a persistent `WorkerPool` (pool.rs) by default — threads
+//!     spawned once and parked between calls — with the original per-call
+//!     `std::thread::scope` fan-out kept as `SpawnMode::Scoped` for the
+//!     bench baseline (the crate is dependency-free — no rayon).
 //!     Used by the large accuracy sweeps (fast, no shape constraints).
 //!   * `PjrtEngine` (pjrt.rs) — loads the AOT-compiled pallas kernel from
 //!     `artifacts/rns_mvm_b*.hlo.txt` and executes it on the PJRT CPU
@@ -25,6 +28,7 @@
 //! compose without any cross-layer ordering assumptions.
 
 use crate::runtime::plan::PreparedWeights;
+use crate::runtime::pool::WorkerPool;
 use crate::tensor::gemm::{gemm_mod, gemm_mod_staged};
 use crate::tensor::MatI;
 
@@ -57,11 +61,12 @@ const PARALLEL_MAC_THRESHOLD: usize = 1 << 18;
 /// small tiles so spawn cost stays a fraction of the compute it buys.
 const MIN_MACS_PER_WORKER: usize = 1 << 17;
 
-/// Run `n_tasks` indexed tasks on at most `workers` scoped threads pulling
-/// from a shared atomic counter (no thread pool — the crate is
-/// dependency-free — but also never more spawns than workers, so a
-/// configured thread cap is honored exactly).  Results come back in task
-/// order; exactness of the tasks makes scheduling invisible.
+/// Scoped-spawn reference fan-out (`SpawnMode::Scoped`): `n_tasks` indexed
+/// tasks on at most `workers` scoped threads pulling from a shared atomic
+/// counter, spawned fresh per call.  Results come back in task order;
+/// exactness of the tasks makes scheduling invisible.  The persistent
+/// `WorkerPool` replaces this on the serving path; this stays as the
+/// baseline the CI pool-vs-scoped no-regression gate compares against.
 fn run_indexed<T, F>(workers: usize, n_tasks: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -95,16 +100,31 @@ where
     out.into_iter().map(|v| v.expect("every task ran")).collect()
 }
 
+/// How the native engine fans parallel work out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpawnMode {
+    /// Persistent `WorkerPool` (default): threads spawned once, parked
+    /// between calls — no spawn latency on the serving hot path.
+    Pool,
+    /// Per-call `std::thread::scope` spawns (the PR-1 behavior).  Kept as
+    /// the bench baseline the CI no-regression gate compares against.
+    Scoped,
+}
+
 /// Pure-rust exact modular GEMM engine.
 pub struct NativeEngine {
     /// Worker-thread cap: 0 = auto (`RNS_NATIVE_THREADS` env var, else
     /// `available_parallelism`); 1 = force the serial reference path.
     pub threads: usize,
+    mode: SpawnMode,
+    /// Lazily created on the first parallel-eligible call, so serial
+    /// engines and sub-threshold workloads never spawn a thread.
+    pool: Option<WorkerPool>,
 }
 
 impl Default for NativeEngine {
     fn default() -> Self {
-        NativeEngine { threads: 0 }
+        NativeEngine::with_spawn_mode(0, SpawnMode::Pool)
     }
 }
 
@@ -112,11 +132,39 @@ impl NativeEngine {
     /// Serial reference engine (single-threaded, bit-identical to the
     /// parallel default — used by determinism tests and bench baselines).
     pub fn serial() -> Self {
-        NativeEngine { threads: 1 }
+        NativeEngine::with_spawn_mode(1, SpawnMode::Pool)
     }
 
     pub fn with_threads(threads: usize) -> Self {
-        NativeEngine { threads }
+        NativeEngine::with_spawn_mode(threads, SpawnMode::Pool)
+    }
+
+    /// Per-call scoped-spawn engine (auto thread count): the pre-pool
+    /// execution model, for baselines and the CI regression pair.
+    pub fn scoped() -> Self {
+        NativeEngine::with_spawn_mode(0, SpawnMode::Scoped)
+    }
+
+    pub fn with_spawn_mode(threads: usize, mode: SpawnMode) -> Self {
+        NativeEngine { threads, mode, pool: None }
+    }
+
+    /// Fan `n_tasks` out according to the spawn mode.  `workers` caps the
+    /// scoped path's spawns; the pool path ignores it (parked threads
+    /// cost nothing to wake, and the atomic claim queue load-balances).
+    fn run_tasks<T, F>(&mut self, workers: usize, n_tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        match self.mode {
+            SpawnMode::Scoped => run_indexed(workers, n_tasks, f),
+            SpawnMode::Pool => {
+                let threads = self.effective_threads();
+                let pool = self.pool.get_or_insert_with(|| WorkerPool::new(threads));
+                pool.run_collect(n_tasks, f)
+            }
+        }
     }
 
     fn effective_threads(&self) -> usize {
@@ -150,7 +198,7 @@ impl ModularGemmEngine for NativeEngine {
         }
         // channel-level parallelism: each task stages + runs one channel
         let workers = threads.min(macs / MIN_MACS_PER_WORKER).min(moduli.len()).max(2);
-        run_indexed(workers, moduli.len(), |ch| gemm_mod(&x_res[ch], &w_res[ch], moduli[ch]))
+        self.run_tasks(workers, moduli.len(), |ch| gemm_mod(&x_res[ch], &w_res[ch], moduli[ch]))
     }
 
     fn matmul_mod_prepared(&mut self, x_res: &[MatI], w: &PreparedWeights) -> Vec<MatI> {
@@ -179,7 +227,7 @@ impl ModularGemmEngine for NativeEngine {
                 r0 = r1;
             }
         }
-        let parts: Vec<(usize, usize, MatI)> = run_indexed(workers, tasks.len(), |t| {
+        let parts: Vec<(usize, usize, MatI)> = self.run_tasks(workers, tasks.len(), |t| {
             let (ch, r0, r1) = tasks[t];
             let xt = x_res[ch].slice_rows(r0, r1);
             (ch, r0, gemm_mod_staged(&xt, &w.staged[ch], w.cols, w.moduli[ch]))
@@ -269,6 +317,34 @@ mod tests {
                 assert_eq!(g.data, w.data, "serial prepared ({b},{k},{n})");
                 assert_eq!(p.data, w.data, "parallel prepared ({b},{k},{n})");
             }
+        }
+    }
+
+    #[test]
+    fn pool_and_scoped_spawn_modes_are_bit_identical() {
+        let moduli = [255u64, 254, 253, 251];
+        let mut rng = Rng::seed_from(5);
+        // large enough to clear PARALLEL_MAC_THRESHOLD in both paths
+        let xr = rand_residues(&mut rng, &moduli, 16, 128);
+        let wr = rand_residues(&mut rng, &moduli, 128, 64);
+        let prepared = PreparedWeights::new(wr.clone(), &moduli);
+        let want = NativeEngine::serial().matmul_mod_prepared(&xr, &prepared);
+        let mut pooled = NativeEngine::with_spawn_mode(4, SpawnMode::Pool);
+        let mut scoped = NativeEngine::with_spawn_mode(4, SpawnMode::Scoped);
+        // repeated calls exercise pool reuse (parked threads re-woken)
+        for round in 0..3 {
+            let p = pooled.matmul_mod_prepared(&xr, &prepared);
+            let s = scoped.matmul_mod_prepared(&xr, &prepared);
+            for ((p, s), w) in p.iter().zip(&s).zip(&want) {
+                assert_eq!(p.data, w.data, "pool round {round}");
+                assert_eq!(s.data, w.data, "scoped round {round}");
+            }
+        }
+        // the unprepared path shares the same fan-out
+        let pu = pooled.matmul_mod(&xr, &wr, &moduli);
+        let wu = NativeEngine::serial().matmul_mod(&xr, &wr, &moduli);
+        for (p, w) in pu.iter().zip(&wu) {
+            assert_eq!(p.data, w.data);
         }
     }
 

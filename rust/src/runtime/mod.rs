@@ -1,16 +1,19 @@
 //! Runtime layer: the pluggable modular-GEMM engines (native rust and the
-//! PJRT-loaded AOT pallas kernel), prepared-layer execution plans, and the
-//! artifact manifest loader.
+//! PJRT-loaded AOT pallas kernel), the persistent worker pool behind the
+//! native engine, prepared-layer execution plans, and the artifact
+//! manifest loader.
 
 pub mod engine;
 pub mod manifest;
 pub mod pjrt;
 pub mod plan;
+pub mod pool;
 
-pub use engine::{ModularGemmEngine, NativeEngine};
+pub use engine::{ModularGemmEngine, NativeEngine, SpawnMode};
 pub use manifest::Manifest;
 pub use pjrt::{F32Input, PjrtEngine, PjrtExecutable, PjrtRuntime};
 pub use plan::{PlanTile, PreparedWeights, RnsPlan};
+pub use pool::WorkerPool;
 
 /// Default artifacts directory (relative to the workspace root).
 pub fn default_artifacts_dir() -> String {

@@ -68,6 +68,14 @@ impl PreparedWeights {
         let res: Vec<MatI> = moduli.iter().map(|&m| forward_residues(wt, m, bits)).collect();
         Self::new(res, moduli)
     }
+
+    /// Heap bytes held by this tile (residues + staging), for the plan
+    /// store's memory gauge.
+    pub fn mem_bytes(&self) -> u64 {
+        let res: usize = self.res.iter().map(|m| m.data.len() * std::mem::size_of::<i64>()).sum();
+        let staged: usize = self.staged.iter().map(|s| s.len() * std::mem::size_of::<u32>()).sum();
+        (res + staged + self.moduli.len() * std::mem::size_of::<u64>()) as u64
+    }
 }
 
 /// One K-tile of the plan: `[k0, k1)` rows of the quantized weight matrix.
@@ -117,6 +125,16 @@ impl RnsPlan {
     /// Total weight elements (per channel) — the once-per-layer DAC count.
     pub fn weight_elems(&self) -> u64 {
         (self.k * self.n) as u64
+    }
+
+    /// Approximate heap bytes held by this plan (tiles + quantized
+    /// weights + scales) — what the shared `PlanStore` accounts per
+    /// resident plan.
+    pub fn mem_bytes(&self) -> u64 {
+        let tiles: u64 = self.tiles.iter().map(|t| t.weights.mem_bytes()).sum();
+        let qw = self.qw.q.data.len() * std::mem::size_of::<i64>()
+            + self.qw.scales.len() * std::mem::size_of::<f32>();
+        tiles + qw as u64 + (self.moduli.len() * std::mem::size_of::<u64>()) as u64
     }
 }
 

@@ -1,0 +1,289 @@
+//! Persistent worker pool for the native modular-GEMM engine.
+//!
+//! The PR-1 parallel engine fanned every prepared GEMM out with
+//! `std::thread::scope`, paying thread-spawn latency (tens of µs per
+//! worker) on every call — acceptable for sweep workloads, dominant for
+//! small-batch serving where a whole MLP layer is only a few hundred µs.
+//! `WorkerPool` keeps the fan-out threads alive across calls: workers
+//! park on a condvar between jobs and are unparked when a new job
+//! generation is published, so steady-state dispatch cost is one
+//! lock + notify instead of N spawns.
+//!
+//! A job is an indexed task set `f(0..n_tasks)` claimed from a shared
+//! atomic counter (the same lock-free claim discipline the scoped path
+//! uses); the submitting thread participates in the claim loop, then
+//! blocks until every claimed task has completed.  Because the submitter
+//! cannot return before `completed == n_tasks`, tasks may safely borrow
+//! the submitter's stack (activations, prepared weights) even though the
+//! pool threads are long-lived — that is the single safety invariant the
+//! one `unsafe` lifetime erasure below relies on.
+//!
+//! Determinism: the pool schedules *which thread* runs a task, never what
+//! the task computes — engine tasks are exact modular arithmetic keyed by
+//! task index, so outputs are bit-identical to the serial and scoped
+//! paths (asserted by `tests/integration_store.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased `&(dyn Fn(usize) + Sync)`.
+///
+/// Safety contract: the pointee outlives every dereference because
+/// `WorkerPool::run` blocks until `completed == n_tasks`, and a worker
+/// only dereferences after claiming an index `< n_tasks` — each such
+/// claim completes (and is counted) before `run` can return.
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// One published fan-out: the erased task plus claim/completion counters.
+struct Job {
+    task: TaskRef,
+    n_tasks: usize,
+    next: AtomicUsize,
+    completed: AtomicUsize,
+}
+
+impl Job {
+    /// Claim and run tasks until the queue is exhausted.  The last
+    /// completer wakes the submitter.
+    fn run_tasks(&self, shared: &PoolShared) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_tasks {
+                return;
+            }
+            // SAFETY: i < n_tasks, so the submitter is still blocked in
+            // `run` and the borrow behind the pointer is alive (see
+            // `TaskRef`).
+            let f = unsafe { &*self.task.0 };
+            f(i);
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n_tasks {
+                // lock before notify so the submitter cannot check the
+                // counter and sleep between our increment and our wake
+                let _guard = shared.state.lock().unwrap();
+                shared.done.notify_all();
+            }
+        }
+    }
+}
+
+struct PoolState {
+    shutdown: bool,
+    /// Bumped once per published job; workers use it to tell a fresh job
+    /// from the one they already drained.
+    generation: u64,
+    job: Option<Arc<Job>>,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The submitter parks here until the job completes.
+    done: Condvar,
+}
+
+/// Long-lived fan-out threads with a parked-idle loop.  Owned by
+/// `NativeEngine`; dropped (and joined) with it.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Serializes submitters: one job in flight at a time.
+    submit: Mutex<()>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// A pool sized for `threads` total concurrency: `threads - 1` parked
+    /// helper threads plus the submitting thread, which always
+    /// participates in the claim loop.  `threads <= 1` spawns nothing and
+    /// `run` degenerates to an inline serial loop.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { shutdown: false, generation: 0, job: None }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..threads.saturating_sub(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("rns-pool-{i}"))
+                    .spawn(move || pool_worker(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, submit: Mutex::new(()), threads: handles }
+    }
+
+    /// Helper threads kept parked between jobs (total concurrency is one
+    /// more: the submitter works too).
+    pub fn helper_threads(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Run `n_tasks` indexed tasks across the pool and block until all
+    /// complete.  The closure may borrow the caller's stack.
+    pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if self.threads.is_empty() {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+        let _submit = self.submit.lock().unwrap();
+        let job = Arc::new(Job {
+            task: TaskRef(f as *const (dyn Fn(usize) + Sync)),
+            n_tasks,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.generation = st.generation.wrapping_add(1);
+            st.job = Some(Arc::clone(&job));
+            self.shared.work.notify_all();
+        }
+        // the submitter is also a worker — a 1-task job never even needs
+        // a helper wakeup to have finished by the wait below
+        job.run_tasks(&self.shared);
+        let mut st = self.shared.state.lock().unwrap();
+        while job.completed.load(Ordering::Acquire) < n_tasks {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        // drop the erased pointer before `f`'s borrow can end; helpers
+        // holding stale `Arc<Job>` clones only see an exhausted counter
+        st.job = None;
+    }
+
+    /// Run tasks that each produce a value; results come back in task
+    /// order.  Per-slot mutexes are uncontended (each task owns its
+    /// slot) — they exist to keep the fan-out free of `unsafe` beyond
+    /// the one lifetime erasure in `run`.
+    pub fn run_collect<T, F>(&self, n_tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let slots: Vec<Mutex<Option<T>>> = (0..n_tasks).map(|_| Mutex::new(None)).collect();
+        self.run(n_tasks, &|i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("every task ran"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            t.join().ok();
+        }
+    }
+}
+
+fn pool_worker(shared: Arc<PoolShared>) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != last_gen {
+                    if let Some(job) = &st.job {
+                        last_gen = st.generation;
+                        break Arc::clone(job);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        job.run_tasks(&shared);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let n = 37;
+        let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.run(n, &|i| {
+            counts[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn collect_returns_results_in_task_order() {
+        let pool = WorkerPool::new(3);
+        let out = pool.run_collect(25, |i| i * i);
+        assert_eq!(out, (0..25).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn reused_across_many_jobs() {
+        // many small jobs through one pool: exercises the generation
+        // handshake (a stale worker must never re-run or miss a job)
+        let pool = WorkerPool::new(4);
+        for round in 0..200usize {
+            let sum = AtomicU64::new(0);
+            let n = 1 + round % 7;
+            pool.run(n, &|i| {
+                sum.fetch_add((round + i) as u64, Ordering::Relaxed);
+            });
+            let want: u64 = (0..n).map(|i| (round + i) as u64).sum();
+            assert_eq!(sum.load(Ordering::SeqCst), want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn tasks_borrow_caller_stack() {
+        let pool = WorkerPool::new(4);
+        let input: Vec<u64> = (0..64).collect();
+        let out = pool.run_collect(input.len(), |i| input[i] * 2);
+        assert_eq!(out[63], 126);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.helper_threads(), 0);
+        assert_eq!(pool.run_collect(5, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn zero_tasks_is_a_no_op() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, &|_| panic!("no task should run"));
+        let empty: Vec<usize> = pool.run_collect(0, |i| i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(8);
+        pool.run(16, &|_| {});
+        drop(pool); // must not hang or leak parked threads
+    }
+}

@@ -1,0 +1,479 @@
+//! Shared, read-only plan store: the weight-stationary half of the RNS
+//! dataflow, built once per (weight matrix, moduli config) and shared
+//! across every core that serves the same model.
+//!
+//! The paper's datapath loads a layer's residues into the analog arrays
+//! once and then streams activations; the expensive reusable artifact on
+//! the simulator side is the `RnsPlan` (quantized weights, per-channel
+//! residues, `u32` staging).  Before this module each coordinator worker
+//! owned a private per-core LRU, so W workers held W copies of every
+//! layer's plan.  `PlanStore` de-duplicates them: one `Arc<RnsPlan>` per
+//! `PlanKey`, with `Once`-style construction (concurrent `get_or_build`
+//! calls for the same key run the builder exactly once; the losers block
+//! and receive the same `Arc`), eviction by model unload, and hit/miss/
+//! memory counters — per store and per model.
+//!
+//! Plans are immutable after construction, which is the entire reason
+//! sharing is safe: every consumer borrows `&RnsPlan` through its `Arc`,
+//! no lock is held during GEMM execution, and a plan evicted mid-use
+//! simply lives until the last in-flight `Arc` drops.
+//!
+//! Keys carry the moduli configuration (`bits`, tile height `h`, the full
+//! info+redundant moduli set) alongside the weight identity, so cores
+//! with different precisions can share one store without collisions.
+//! Plans requested without a model tag (one-shot sweep matrices, fig3
+//! style) are LRU-bounded so campaigns of random weights cannot grow the
+//! store without limit; model-tagged plans are pinned until
+//! `unload_model`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::runtime::plan::RnsPlan;
+use crate::tensor::MatF;
+
+/// Untagged plans (no model name) are one-shot sweep artifacts; bound
+/// them like the old per-core LRU did so fig3-style campaigns degrade to
+/// rebuild cost instead of unbounded memory.
+pub const DEFAULT_UNTAGGED_CAPACITY: usize = 64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Identity of one plan: weight matrix (pointer + shape + strided FNV
+/// fingerprint) × moduli configuration (bits, tile height, channel set).
+///
+/// The fingerprint samples ~16 elements: cheap against a layer GEMM and
+/// enough to tell apart distinct layers that reuse a freed allocation's
+/// address.  It is best-effort against in-place mutation — callers that
+/// edit weights in place (this crate's models never do) must rebuild the
+/// matrix instead.  Cross-worker de-duplication relies on workers sharing
+/// one weight allocation (`ModelRegistry` hands every worker the same
+/// `Arc<dyn Model>`), which makes `ptr` identical across workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    ptr: usize,
+    rows: usize,
+    cols: usize,
+    fingerprint: u64,
+    bits: u32,
+    h: usize,
+    moduli_fp: u64,
+}
+
+impl PlanKey {
+    pub fn for_weights(w: &MatF, bits: u32, h: usize, moduli: &[u64]) -> Self {
+        let d = &w.data;
+        let mut fp = FNV_OFFSET;
+        let step = (d.len() / 16).max(1);
+        let mut i = 0;
+        while i < d.len() {
+            fp = (fp ^ d[i].to_bits() as u64).wrapping_mul(FNV_PRIME);
+            i += step;
+        }
+        let mut mfp = FNV_OFFSET ^ moduli.len() as u64;
+        for &m in moduli {
+            mfp = (mfp ^ m).wrapping_mul(FNV_PRIME);
+        }
+        PlanKey { ptr: d.as_ptr() as usize, rows: w.rows, cols: w.cols, fingerprint: fp, bits, h, moduli_fp: mfp }
+    }
+}
+
+/// Whole-store counters (monotonic except the resident gauges).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Plans actually constructed (the deduplicated build count).
+    pub builds: u64,
+    /// Requests served from an existing slot (including requests that
+    /// blocked on an in-flight build and received the shared result).
+    pub hits: u64,
+    /// Plans dropped by LRU bounding or model unload.
+    pub evicted: u64,
+    /// Plans currently resident.
+    pub resident_plans: usize,
+    /// Bytes held by resident plans (residues + staging + quantized
+    /// weights; see `RnsPlan::mem_bytes`).
+    pub resident_bytes: u64,
+}
+
+/// Per-model plan traffic + residency, for the serving shutdown report.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ModelPlanStats {
+    pub model: String,
+    /// Lookups attributed to this model that found an existing slot.
+    pub hits: u64,
+    /// Lookups that reserved a new slot (== plans this model caused to
+    /// be built, since tagged plans are never LRU-evicted).
+    pub misses: u64,
+    /// Plans currently resident under this model's tag.
+    pub plans: usize,
+    pub bytes: u64,
+}
+
+struct Slot {
+    /// `Once`-style cell: exactly one `get_or_build` caller runs the
+    /// builder; everyone else blocks in `get_or_init` and clones the
+    /// same `Arc`.
+    cell: Arc<OnceLock<Arc<RnsPlan>>>,
+    /// Model tag of the reserving caller (None = LRU-bounded).
+    model: Option<String>,
+    /// Filled in after the build completes (0 while in flight).
+    bytes: u64,
+}
+
+#[derive(Default)]
+struct ModelEntry {
+    keys: Vec<PlanKey>,
+    hits: u64,
+    misses: u64,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    slots: HashMap<PlanKey, Slot>,
+    /// Untagged keys, least- to most-recently used.
+    lru: VecDeque<PlanKey>,
+    models: HashMap<String, ModelEntry>,
+    builds: u64,
+    hits: u64,
+    evicted: u64,
+    resident_bytes: u64,
+}
+
+/// Concurrent, build-once plan store.  All methods take `&self`; the
+/// internal mutex guards only the index — plan construction and GEMM
+/// execution run outside it.
+pub struct PlanStore {
+    inner: Mutex<StoreInner>,
+    untagged_capacity: usize,
+}
+
+impl Default for PlanStore {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_UNTAGGED_CAPACITY)
+    }
+}
+
+impl PlanStore {
+    /// `untagged_capacity` bounds only plans requested without a model
+    /// tag; tagged plans live until `unload_model`.
+    pub fn with_capacity(untagged_capacity: usize) -> Self {
+        PlanStore { inner: Mutex::new(StoreInner::default()), untagged_capacity: untagged_capacity.max(1) }
+    }
+
+    /// Fetch the plan for `key`, building it at most once across all
+    /// concurrent callers.  `model` attributes the lookup (and, for the
+    /// reserving caller, the plan's eviction lifetime) to a model name.
+    pub fn get_or_build<F>(&self, key: PlanKey, model: Option<&str>, build: F) -> Arc<RnsPlan>
+    where
+        F: FnOnce() -> RnsPlan,
+    {
+        let cell = {
+            let mut st = self.inner.lock().unwrap();
+            let existing = st.slots.get(&key).map(|s| (Arc::clone(&s.cell), s.model.is_none()));
+            match existing {
+                Some((cell, untagged)) => {
+                    st.hits += 1;
+                    if let Some(m) = model {
+                        st.models.entry(m.to_string()).or_default().hits += 1;
+                    }
+                    match (untagged, model) {
+                        (true, Some(m)) => {
+                            // promote: a plan first built untagged (e.g. by
+                            // a sweep sharing the store) is now owned by a
+                            // served model — pin it out of the LRU and make
+                            // it visible to unload_model/model_stats
+                            if let Some(pos) = st.lru.iter().position(|k| k == &key) {
+                                let _ = st.lru.remove(pos);
+                            }
+                            if let Some(slot) = st.slots.get_mut(&key) {
+                                slot.model = Some(m.to_string());
+                            }
+                            st.models.entry(m.to_string()).or_default().keys.push(key);
+                        }
+                        (true, None) => {
+                            // touch: move to the most-recently-used end
+                            if let Some(pos) = st.lru.iter().position(|k| k == &key) {
+                                let _ = st.lru.remove(pos);
+                                st.lru.push_back(key);
+                            }
+                        }
+                        // already tagged: first tag wins (two models hitting
+                        // one key share the plan; it unloads with the first)
+                        (false, _) => {}
+                    }
+                    cell
+                }
+                None => {
+                    let cell = Arc::new(OnceLock::new());
+                    st.slots.insert(
+                        key,
+                        Slot { cell: Arc::clone(&cell), model: model.map(str::to_string), bytes: 0 },
+                    );
+                    match model {
+                        Some(m) => {
+                            let e = st.models.entry(m.to_string()).or_default();
+                            e.misses += 1;
+                            e.keys.push(key);
+                        }
+                        None => {
+                            st.lru.push_back(key);
+                            while st.lru.len() > self.untagged_capacity {
+                                if let Some(old) = st.lru.pop_front() {
+                                    if let Some(s) = st.slots.remove(&old) {
+                                        st.resident_bytes = st.resident_bytes.saturating_sub(s.bytes);
+                                        st.evicted += 1;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    cell
+                }
+            }
+        };
+        // Build outside the index lock: concurrent callers for the same
+        // key serialize on the cell, not on the whole store, and exactly
+        // one of them runs the builder.
+        let mut built = false;
+        let plan = Arc::clone(cell.get_or_init(|| {
+            built = true;
+            Arc::new(build())
+        }));
+        if built {
+            let bytes = plan.mem_bytes();
+            let mut st = self.inner.lock().unwrap();
+            st.builds += 1;
+            // the slot may have been LRU-evicted while building; only
+            // still-resident plans count toward the memory gauge
+            let resident = match st.slots.get_mut(&key) {
+                Some(slot) if Arc::ptr_eq(&slot.cell, &cell) => {
+                    slot.bytes = bytes;
+                    true
+                }
+                _ => false,
+            };
+            if resident {
+                st.resident_bytes += bytes;
+            }
+        }
+        plan
+    }
+
+    /// Peek at a resident, fully-built plan (no counter updates).
+    pub fn get(&self, key: &PlanKey) -> Option<Arc<RnsPlan>> {
+        let st = self.inner.lock().unwrap();
+        st.slots.get(key).and_then(|s| s.cell.get().cloned())
+    }
+
+    /// Drop every plan tagged with `model`; returns how many were
+    /// evicted.  In-flight `Arc`s stay valid until their holders drop.
+    pub fn unload_model(&self, model: &str) -> usize {
+        let mut st = self.inner.lock().unwrap();
+        let Some(entry) = st.models.remove(model) else {
+            return 0;
+        };
+        let mut dropped = 0;
+        for key in entry.keys {
+            if let Some(slot) = st.slots.remove(&key) {
+                st.resident_bytes = st.resident_bytes.saturating_sub(slot.bytes);
+                st.evicted += 1;
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let st = self.inner.lock().unwrap();
+        StoreStats {
+            builds: st.builds,
+            hits: st.hits,
+            evicted: st.evicted,
+            resident_plans: st.slots.len(),
+            resident_bytes: st.resident_bytes,
+        }
+    }
+
+    /// Per-model counters, sorted by model name (stable report order).
+    pub fn model_stats(&self) -> Vec<ModelPlanStats> {
+        let st = self.inner.lock().unwrap();
+        let mut out: Vec<ModelPlanStats> = st
+            .models
+            .iter()
+            .map(|(name, e)| {
+                let (mut plans, mut bytes) = (0usize, 0u64);
+                for key in &e.keys {
+                    if let Some(slot) = st.slots.get(key) {
+                        plans += 1;
+                        bytes += slot.bytes;
+                    }
+                }
+                ModelPlanStats { model: name.clone(), hits: e.hits, misses: e.misses, plans, bytes }
+            })
+            .collect();
+        out.sort_by(|a, b| a.model.cmp(&b.model));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rns::paper_table1;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(seed: u64, rows: usize, cols: usize) -> MatF {
+        let mut rng = Rng::seed_from(seed);
+        MatF::from_vec(rows, cols, (0..rows * cols).map(|_| rng.uniform_f32(-1.0, 1.0)).collect())
+    }
+
+    fn build_plan(w: &MatF) -> RnsPlan {
+        RnsPlan::build(w, 6, 128, paper_table1(6).unwrap())
+    }
+
+    fn key_of(w: &MatF) -> PlanKey {
+        PlanKey::for_weights(w, 6, 128, paper_table1(6).unwrap())
+    }
+
+    #[test]
+    fn second_lookup_hits_and_shares_the_arc() {
+        let store = PlanStore::default();
+        let w = rand_mat(1, 130, 5);
+        let a = store.get_or_build(key_of(&w), None, || build_plan(&w));
+        let b = store.get_or_build(key_of(&w), None, || panic!("must not rebuild"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = store.stats();
+        assert_eq!((s.builds, s.hits, s.resident_plans), (1, 1, 1));
+        assert_eq!(s.resident_bytes, a.mem_bytes());
+        assert!(s.resident_bytes > 0);
+    }
+
+    #[test]
+    fn distinct_configs_do_not_collide() {
+        let store = PlanStore::default();
+        let w = rand_mat(2, 140, 4);
+        let k6 = PlanKey::for_weights(&w, 6, 128, paper_table1(6).unwrap());
+        let k8 = PlanKey::for_weights(&w, 8, 128, paper_table1(8).unwrap());
+        assert_ne!(k6, k8);
+        store.get_or_build(k6, None, || RnsPlan::build(&w, 6, 128, paper_table1(6).unwrap()));
+        store.get_or_build(k8, None, || RnsPlan::build(&w, 8, 128, paper_table1(8).unwrap()));
+        assert_eq!(store.stats().builds, 2);
+    }
+
+    #[test]
+    fn untagged_plans_are_lru_bounded() {
+        let cap = 4;
+        let store = PlanStore::with_capacity(cap);
+        let mats: Vec<MatF> = (0..cap as u64 + 3).map(|i| rand_mat(10 + i, 32, 2)).collect();
+        for w in &mats {
+            store.get_or_build(PlanKey::for_weights(w, 4, 32, paper_table1(4).unwrap()), None, || {
+                RnsPlan::build(w, 4, 32, paper_table1(4).unwrap())
+            });
+        }
+        let s = store.stats();
+        assert_eq!(s.builds, cap as u64 + 3);
+        assert_eq!(s.resident_plans, cap);
+        assert_eq!(s.evicted, 3);
+        // the survivors are the most recently used, and bytes match them
+        let survivors: u64 = mats[3..]
+            .iter()
+            .map(|w| store.get(&PlanKey::for_weights(w, 4, 32, paper_table1(4).unwrap())).unwrap().mem_bytes())
+            .sum();
+        assert_eq!(s.resident_bytes, survivors);
+        assert!(store.get(&PlanKey::for_weights(&mats[0], 4, 32, paper_table1(4).unwrap())).is_none());
+    }
+
+    #[test]
+    fn lru_touch_on_hit_protects_hot_plans() {
+        let store = PlanStore::with_capacity(2);
+        let (a, b, c) = (rand_mat(20, 32, 2), rand_mat(21, 32, 2), rand_mat(22, 32, 2));
+        let mk = |w: &MatF| PlanKey::for_weights(w, 4, 32, paper_table1(4).unwrap());
+        let build = |w: &MatF| RnsPlan::build(w, 4, 32, paper_table1(4).unwrap());
+        store.get_or_build(mk(&a), None, || build(&a));
+        store.get_or_build(mk(&b), None, || build(&b));
+        store.get_or_build(mk(&a), None, || panic!("hit")); // touch a
+        store.get_or_build(mk(&c), None, || build(&c)); // evicts b, not a
+        assert!(store.get(&mk(&a)).is_some());
+        assert!(store.get(&mk(&b)).is_none());
+        assert!(store.get(&mk(&c)).is_some());
+    }
+
+    #[test]
+    fn model_tagged_plans_pinned_until_unload() {
+        let store = PlanStore::with_capacity(1);
+        let layers: Vec<MatF> = (0..3).map(|i| rand_mat(30 + i, 64, 3)).collect();
+        for w in &layers {
+            store.get_or_build(key_of(w), Some("mlp"), || build_plan(w));
+        }
+        // capacity 1 does not evict tagged plans
+        assert_eq!(store.stats().resident_plans, 3);
+        let ms = store.model_stats();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].model, "mlp");
+        assert_eq!((ms[0].hits, ms[0].misses, ms[0].plans), (0, 3, 3));
+        assert!(ms[0].bytes > 0);
+        // a warm pass from a second worker is all hits
+        for w in &layers {
+            store.get_or_build(key_of(w), Some("mlp"), || panic!("warm must hit"));
+        }
+        assert_eq!(store.model_stats()[0].hits, 3);
+        assert_eq!(store.unload_model("mlp"), 3);
+        let s = store.stats();
+        assert_eq!((s.resident_plans, s.resident_bytes, s.evicted), (0, 0, 3));
+        assert_eq!(store.unload_model("mlp"), 0);
+        assert!(store.model_stats().is_empty());
+    }
+
+    #[test]
+    fn untagged_plan_promoted_when_a_model_claims_it() {
+        let store = PlanStore::with_capacity(1);
+        let w = rand_mat(60, 64, 3);
+        let a = store.get_or_build(key_of(&w), None, || build_plan(&w)); // untagged build
+        // a served model hits the same key: the plan must be promoted —
+        // pinned out of the LRU and owned by the model
+        let b = store.get_or_build(key_of(&w), Some("mlp"), || panic!("hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let ms = store.model_stats();
+        assert_eq!(ms.len(), 1);
+        assert_eq!((ms[0].hits, ms[0].misses, ms[0].plans), (1, 0, 1));
+        assert_eq!(ms[0].bytes, a.mem_bytes());
+        // capacity-1 LRU churn must no longer evict the promoted plan
+        for i in 0..3u64 {
+            let other = rand_mat(70 + i, 64, 3);
+            store.get_or_build(key_of(&other), None, || build_plan(&other));
+        }
+        assert!(store.get(&key_of(&w)).is_some(), "promoted plan survives LRU pressure");
+        // and unload now covers it
+        assert_eq!(store.unload_model("mlp"), 1);
+        assert!(store.get(&key_of(&w)).is_none());
+    }
+
+    #[test]
+    fn concurrent_get_or_build_builds_exactly_once() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let store = Arc::new(PlanStore::default());
+        let w = Arc::new(rand_mat(40, 256, 8));
+        let builds = Arc::new(AtomicU64::new(0));
+        let key = key_of(&w);
+        let plans: Vec<Arc<RnsPlan>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let (store, w, builds) = (Arc::clone(&store), Arc::clone(&w), Arc::clone(&builds));
+                    s.spawn(move || {
+                        store.get_or_build(key, Some("m"), || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            build_plan(&w)
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "builder ran exactly once");
+        assert_eq!(store.stats().builds, 1);
+        for p in &plans[1..] {
+            assert!(Arc::ptr_eq(&plans[0], p), "all callers share one Arc");
+        }
+    }
+}

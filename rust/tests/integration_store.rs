@@ -1,0 +1,182 @@
+//! Integration tests for the shared-plan-store + persistent-worker-pool
+//! runtime (PR 3): concurrent warms must build each plan exactly once
+//! store-wide with pointer-equal `Arc`s across workers, model unload must
+//! evict, and pool-executed GEMM must be bit-identical to the serial and
+//! scoped-spawn paths under fixed seeds.
+
+use std::sync::Arc;
+
+use rns_analog::analog::{GemmBackend, NoiseModel, RnsCore, RnsCoreConfig};
+use rns_analog::runtime::{NativeEngine, RnsPlan, SpawnMode};
+use rns_analog::store::{PlanKey, PlanStore};
+use rns_analog::tensor::MatF;
+use rns_analog::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> MatF {
+    MatF::from_vec(rows, cols, (0..rows * cols).map(|_| rng.uniform_f32(-scale, scale)).collect())
+}
+
+/// N worker threads warm the same 3-layer "model" against one shared
+/// store: every plan is built exactly once, every worker ends up holding
+/// the same `Arc` per layer, and each worker still adopts (and charges)
+/// all 3 plans locally.
+#[test]
+fn concurrent_warm_builds_each_plan_exactly_once() {
+    let store = Arc::new(PlanStore::default());
+    let mut rng = Rng::seed_from(1);
+    // shared weight allocations, as the coordinator's ModelRegistry
+    // provides: plan keys include the data pointer, so cross-worker
+    // dedup requires workers to share the weights themselves
+    let layers = Arc::new(vec![
+        rand_mat(&mut rng, 300, 7, 1.0),
+        rand_mat(&mut rng, 128, 64, 1.0),
+        rand_mat(&mut rng, 64, 10, 1.0),
+    ]);
+    let cfg = RnsCoreConfig::for_bits(6, 128);
+    let moduli = cfg.moduli.clone();
+    let workers = 8usize;
+    let per_worker: Vec<Vec<Arc<RnsPlan>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|wid| {
+                let store = Arc::clone(&store);
+                let layers = Arc::clone(&layers);
+                let cfg = cfg.clone();
+                let moduli = moduli.clone();
+                s.spawn(move || {
+                    let mut core =
+                        RnsCore::with_store(cfg.with_seed(wid as u64), Arc::clone(&store)).unwrap();
+                    core.set_model_tag("shared-mlp");
+                    for w in layers.iter() {
+                        core.prepare_weights(w);
+                    }
+                    assert_eq!(GemmBackend::plans_built(&core), 3, "worker {wid} adopts 3 plans");
+                    layers
+                        .iter()
+                        .map(|w| {
+                            store
+                                .get(&PlanKey::for_weights(w, 6, 128, &moduli))
+                                .expect("plan resident after warm")
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let stats = store.stats();
+    assert_eq!(stats.builds, 3, "each layer built exactly once across {workers} workers");
+    assert_eq!(stats.resident_plans, 3);
+    assert_eq!(stats.evicted, 0, "tagged plans are never LRU-evicted");
+    // every warm after the 3 reservations was a store hit
+    assert_eq!(stats.hits, (workers as u64) * 3 - 3);
+    // the acceptance property: one plan instance per layer, pointer-equal
+    // Arc across all workers
+    for layer in 0..3 {
+        for wid in 1..workers {
+            assert!(
+                Arc::ptr_eq(&per_worker[0][layer], &per_worker[wid][layer]),
+                "layer {layer}: worker {wid} must share worker 0's plan"
+            );
+        }
+    }
+    // per-model attribution landed under the tag
+    let ms = store.model_stats();
+    assert_eq!(ms.len(), 1);
+    assert_eq!(ms[0].model, "shared-mlp");
+    assert_eq!(ms[0].misses, 3);
+    assert_eq!(ms[0].hits, (workers as u64) * 3 - 3);
+    assert_eq!(ms[0].plans, 3);
+
+    // model unload evicts all three; the Arcs handed out above stay valid
+    assert_eq!(store.unload_model("shared-mlp"), 3);
+    assert_eq!(store.stats().resident_plans, 0);
+    assert_eq!(per_worker[0][0].k, 300, "in-flight Arc outlives eviction");
+}
+
+/// Pool-executed GEMM is bit-identical to the serial engine and to the
+/// per-call scoped-spawn engine, including under RRNS + noise with fixed
+/// seeds (the pool schedules exact arithmetic only; the rng stays serial
+/// inside the core).
+#[test]
+fn pool_gemm_bit_identical_to_serial_and_scoped() {
+    let mut rng = Rng::seed_from(2);
+    // large enough that every tile clears the engine's parallel threshold
+    let x = rand_mat(&mut rng, 16, 256, 1.0);
+    let w = rand_mat(&mut rng, 256, 64, 0.5);
+    for (redundant, attempts) in [(0usize, 1u32), (2, 3)] {
+        let mk_cfg = || {
+            RnsCoreConfig::for_bits(8, 128)
+                .with_noise(NoiseModel::ResidueFlip { p: 0.03 })
+                .with_rrns(redundant, attempts)
+                .with_seed(1234)
+        };
+        let mut serial = RnsCore::with_engine(mk_cfg(), Box::new(NativeEngine::serial())).unwrap();
+        let mut pooled = RnsCore::with_engine(
+            mk_cfg(),
+            Box::new(NativeEngine::with_spawn_mode(4, SpawnMode::Pool)),
+        )
+        .unwrap();
+        let mut scoped = RnsCore::with_engine(
+            mk_cfg(),
+            Box::new(NativeEngine::with_spawn_mode(4, SpawnMode::Scoped)),
+        )
+        .unwrap();
+        let ys = serial.gemm_quantized(&x, &w);
+        // two passes through the pooled core: the second reuses parked
+        // threads (the persistent-pool steady state)
+        let yp1 = pooled.gemm_quantized(&x, &w);
+        let yc = scoped.gemm_quantized(&x, &w);
+        assert_eq!(
+            ys.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yp1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "rrns={redundant}: pool must be bit-identical to serial"
+        );
+        assert_eq!(
+            yp1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yc.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "rrns={redundant}: pool must be bit-identical to scoped"
+        );
+        let ys2 = serial.gemm_quantized(&x, &w);
+        let yp2 = pooled.gemm_quantized(&x, &w);
+        assert_eq!(
+            ys2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yp2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "rrns={redundant}: second pass (pool reuse) must stay bit-identical"
+        );
+        // identical rng consumption => identical counters and energy
+        assert_eq!(serial.stats.decoded, pooled.stats.decoded);
+        assert_eq!(serial.stats.detections, pooled.stats.detections);
+        assert_eq!(serial.meter.adc_conversions, pooled.meter.adc_conversions);
+    }
+}
+
+/// Cores with different moduli configurations can share one store
+/// without collisions, and gemm through a store-shared plan matches a
+/// private-store core exactly.
+#[test]
+fn mixed_configs_share_one_store_safely() {
+    let mut rng = Rng::seed_from(3);
+    let x = rand_mat(&mut rng, 3, 200, 1.0);
+    let w = rand_mat(&mut rng, 200, 5, 0.5);
+    let store = Arc::new(PlanStore::default());
+    let mut b6 = RnsCore::with_store(RnsCoreConfig::for_bits(6, 128), Arc::clone(&store)).unwrap();
+    let mut b8 = RnsCore::with_store(RnsCoreConfig::for_bits(8, 128), Arc::clone(&store)).unwrap();
+    let mut b8_rrns = RnsCore::with_store(
+        RnsCoreConfig::for_bits(8, 128).with_rrns(2, 2),
+        Arc::clone(&store),
+    )
+    .unwrap();
+    let y6 = b6.gemm_quantized(&x, &w);
+    let y8 = b8.gemm_quantized(&x, &w);
+    let y8r = b8_rrns.gemm_quantized(&x, &w);
+    // same weights, three distinct (bits, moduli) configs => three plans
+    assert_eq!(store.stats().builds, 3);
+    // each matches a core with a private store bit-for-bit
+    let mut p6 = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+    let mut p8 = RnsCore::new(RnsCoreConfig::for_bits(8, 128)).unwrap();
+    let mut p8r = RnsCore::new(RnsCoreConfig::for_bits(8, 128).with_rrns(2, 2)).unwrap();
+    assert_eq!(y6.data, p6.gemm_quantized(&x, &w).data);
+    assert_eq!(y8.data, p8.gemm_quantized(&x, &w).data);
+    assert_eq!(y8r.data, p8r.gemm_quantized(&x, &w).data);
+}

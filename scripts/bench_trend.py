@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Append one bench run into the cross-PR trend store.
+
+CI runs `cargo bench -- --quick` (which writes BENCH_gemm.json at the
+repo root), restores BENCH_trend.json from the previous run's cache,
+then calls this script to append the current run keyed by commit — so
+the headline ratios (>=3x decode, >=3x prepared/parallel GEMM, pool >=
+scoped) are tracked across PRs instead of living only in each run's
+artifact.  Re-running on the same commit replaces that commit's entry
+(idempotent on CI retries).
+"""
+
+import argparse
+import json
+import os
+
+# Headline pairs tracked across PRs: (label, numerator bench, denominator
+# bench) — ratio = numerator median_ns / denominator median_ns, so >1 is
+# a win for the denominator side.
+HEADLINES = [
+    (
+        "decode",
+        "micro/rrns decode_tile 16x64 clean per-element",
+        "micro/rrns decode_tile 16x64 clean batched",
+    ),
+    (
+        "gemm",
+        "micro/gemm_mod 8x128x128 x4ch serial unprepared",
+        "micro/gemm_mod 8x128x128 x4ch parallel prepared",
+    ),
+    (
+        "pool",
+        "micro/pool prepared 4x784x256 x4ch scoped-spawn",
+        "micro/pool prepared 4x784x256 x4ch persistent-pool",
+    ),
+]
+
+
+def load_trend(path):
+    empty = {"schema": "rns-analog-bench-trend-v1", "runs": []}
+    if not os.path.exists(path):
+        return empty
+    try:
+        with open(path) as f:
+            trend = json.load(f)
+    except (json.JSONDecodeError, OSError):
+        return empty  # corrupt cache: restart the trend, don't fail CI
+    if not isinstance(trend, dict) or not isinstance(trend.get("runs"), list):
+        return empty
+    return trend
+
+
+def ratio(bench_map, num, den):
+    try:
+        return bench_map[num]["median_ns"] / bench_map[den]["median_ns"]
+    except (KeyError, TypeError, ZeroDivisionError):
+        return None
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--bench", default="BENCH_gemm.json", help="current run results")
+    p.add_argument("--trend", default="BENCH_trend.json", help="trend store to append to")
+    p.add_argument("--commit", default=os.environ.get("GITHUB_SHA", "unknown"))
+    p.add_argument("--max-runs", type=int, default=200, help="keep at most the newest N runs")
+    args = p.parse_args()
+
+    with open(args.bench) as f:
+        bench = json.load(f)
+
+    trend = load_trend(args.trend)
+    runs = [r for r in trend["runs"] if r.get("commit") != args.commit]
+    runs.append(
+        {
+            "commit": args.commit,
+            "quick": bench.get("quick"),
+            "benches": bench.get("benches", []),
+        }
+    )
+    trend["runs"] = runs[-args.max_runs :]
+    with open(args.trend, "w") as f:
+        json.dump(trend, f, indent=1)
+        f.write("\n")
+
+    print(f"{len(trend['runs'])} run(s) in {args.trend}")
+    for r in trend["runs"]:
+        bench_map = {b.get("name"): b for b in r.get("benches", [])}
+        cells = []
+        for label, num, den in HEADLINES:
+            v = ratio(bench_map, num, den)
+            cells.append(f"{label} {v:.2f}x" if v is not None else f"{label} -")
+        print(f"  {str(r.get('commit'))[:9]:>9}  " + "  ".join(cells))
+
+
+if __name__ == "__main__":
+    main()
