@@ -37,12 +37,18 @@
 //! Energy stays per-core even though plans are shared: each core charges
 //! the one-time weight-DAC cost the first time *it* adopts a layer's
 //! plan, mirroring one accelerator's arrays being loaded per worker.
+//! Adoption tracks the plan *instance* (a `Weak` to the store's `Arc`),
+//! so a plan that was LRU-evicted and later rebuilt is re-adopted and
+//! re-charged — rebuilding reloads the arrays, exactly as the PR-1
+//! per-call accounting had it — and the adoption map stays bounded by
+//! the store's residency instead of growing one entry per weight matrix
+//! ever seen (fig3-style sweep campaigns).
 //!
 //! The ADCs in every channel run at `ceil(log2 m_i)` bits — never at
 //! `b_out` — which is the entire point of the design.
 
-use std::collections::HashSet;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Weak};
 
 use crate::analog::energy::EnergyMeter;
 use crate::analog::mvm_unit::RnsMvmUnit;
@@ -57,6 +63,10 @@ use crate::runtime::plan::{forward_residues, PreparedWeights, RnsPlan};
 use crate::store::{PlanKey, PlanStore};
 use crate::tensor::{MatF, MatI};
 use crate::util::rng::Rng;
+
+/// `adopted` map size below which dead-entry purging is skipped (keeps
+/// the amortized purge from thrashing on small models).
+const ADOPTED_PURGE_FLOOR: usize = 64;
 
 /// Configuration for one RNS-based core instance.
 #[derive(Clone, Debug)]
@@ -155,10 +165,19 @@ pub struct RnsCore {
     rng: Rng,
     /// Shared (or private) read-only plan store this core borrows from.
     store: Arc<PlanStore>,
-    /// Plans this core has adopted: the one-time weight-DAC conversion is
-    /// charged when a plan is first seen by *this* core, whether the
-    /// shared store built it here or another worker built it first.
-    adopted: HashSet<PlanKey>,
+    /// Plan instances this core has adopted: the one-time weight-DAC
+    /// conversion is charged when a plan is first seen by *this* core,
+    /// whether the shared store built it here or another worker built it
+    /// first.  Values are `Weak` handles to the store's `Arc`, so an
+    /// entry dies when the store evicts the plan — a rebuilt plan is a
+    /// new instance and is charged again (the arrays are reloaded), and
+    /// dead entries are purged so sweeps don't grow this map unboundedly.
+    adopted: HashMap<PlanKey, Weak<RnsPlan>>,
+    /// Monotonic adoption count (== weight-DAC charge events); unlike
+    /// `adopted.len()` it never shrinks when dead entries are purged.
+    adoptions: u64,
+    /// Amortized purge threshold for `adopted` (see `obtain_plan`).
+    adopted_purge_at: usize,
     /// Model name attributed to subsequent plan lookups (per-model store
     /// counters + eviction by model unload).
     model_tag: Option<String>,
@@ -225,7 +244,9 @@ impl RnsCore {
             stats: FaultStats::default(),
             rng,
             store,
-            adopted: HashSet::new(),
+            adopted: HashMap::new(),
+            adoptions: 0,
+            adopted_purge_at: ADOPTED_PURGE_FLOOR,
             model_tag: None,
         })
     }
@@ -239,10 +260,12 @@ impl RnsCore {
     }
 
     /// Layer plans this core has adopted (built here or first borrowed
-    /// from the shared store) — the per-worker serving metric.  The
-    /// store's `stats().builds` is the deduplicated global build count.
+    /// from the shared store) — the per-worker serving metric.  A plan
+    /// evicted from the store and later rebuilt counts again, in step
+    /// with its weight-DAC energy being re-charged.  The store's
+    /// `stats().builds` is the deduplicated global build count.
     pub fn plans_built(&self) -> u64 {
-        self.adopted.len() as u64
+        self.adoptions
     }
 
     /// The plan store this core borrows from (shared across workers in
@@ -275,12 +298,36 @@ impl RnsCore {
             self.store
                 .get_or_build(key, self.model_tag.as_deref(), || RnsPlan::build(w, bits, h, moduli))
         };
-        if self.adopted.insert(key) {
+        // adopted == this exact instance: a dead Weak (store evicted the
+        // plan) or a different Arc (evicted + rebuilt) is a re-adoption
+        // and re-charges the array load
+        let already = self
+            .adopted
+            .get(&key)
+            .and_then(Weak::upgrade)
+            .is_some_and(|held| Arc::ptr_eq(&held, &plan));
+        if !already {
+            self.adopted.insert(key, Arc::downgrade(&plan));
+            self.adoptions += 1;
             for u in &self.units {
                 self.meter.record_dac(plan.weight_elems(), u.enob);
             }
+            self.purge_dead_adoptions();
         }
         plan
+    }
+
+    /// Drop adoption entries whose plan the store has evicted, once the
+    /// map grows past an amortized threshold: live entries are bounded by
+    /// the store's residency, so sweep campaigns of one-shot weights keep
+    /// `adopted` at O(store capacity) instead of one entry per weight
+    /// ever seen.
+    fn purge_dead_adoptions(&mut self) {
+        if self.adopted.len() < self.adopted_purge_at {
+            return;
+        }
+        self.adopted.retain(|_, plan| plan.strong_count() > 0);
+        self.adopted_purge_at = (self.adopted.len() * 2).max(ADOPTED_PURGE_FLOOR);
     }
 
     /// Full quantized GEMM through the simulated RNS core (prepared path:
@@ -749,6 +796,42 @@ mod tests {
         assert_eq!(s.builds, sweeps as u64);
         assert_eq!(s.resident_plans, DEFAULT_UNTAGGED_CAPACITY);
         assert_eq!(s.evicted, 10);
+        // the adoption map purges entries for evicted plans, so it stays
+        // O(store capacity) across the campaign instead of O(sweeps)
+        assert!(
+            core.adopted.len() <= 2 * DEFAULT_UNTAGGED_CAPACITY,
+            "adopted map must stay bounded, got {}",
+            core.adopted.len()
+        );
+    }
+
+    #[test]
+    fn evicted_plan_readoption_recharges_weight_dac() {
+        // PR-1 accounting: rebuilding an evicted plan reloads the arrays,
+        // so the one-time weight-DAC cost is charged again
+        use crate::store::PlanStore;
+        let x = rand_mat(50, 1, 32, 1.0);
+        let w = rand_mat(51, 32, 2, 1.0);
+        let w2 = rand_mat(52, 32, 2, 1.0);
+        let store = Arc::new(PlanStore::with_capacity(1));
+        let mut core =
+            RnsCore::with_store(RnsCoreConfig::for_bits(4, 32), Arc::clone(&store)).unwrap();
+        core.gemm_quantized(&x, &w);
+        assert_eq!(core.plans_built(), 1);
+        let n = core.n_channels() as u64;
+        let weight_dac = n * 32 * 2;
+        // w2 evicts w's plan from the capacity-1 store
+        core.gemm_quantized(&x, &w2);
+        assert_eq!(core.plans_built(), 2);
+        let dac_before = core.meter.dac_conversions;
+        // returning to w rebuilds the plan: re-adopted, re-charged
+        core.gemm_quantized(&x, &w);
+        assert_eq!(core.plans_built(), 3);
+        assert_eq!(store.stats().builds, 3);
+        assert_eq!(core.meter.dac_conversions, dac_before + weight_dac + n * 32);
+        // a still-resident plan is not re-charged
+        core.gemm_quantized(&x, &w);
+        assert_eq!(core.plans_built(), 3);
     }
 
     #[test]

@@ -165,13 +165,26 @@ impl Coordinator {
     /// Workers re-validate their cached instance against the registry on
     /// every batch, so the unload takes effect mid-session: a later
     /// request for the name reloads fresh weights and re-warms fresh
-    /// plans.  A worker that never sees the model again releases its
-    /// stale clone at shutdown (proactive release needs a control
-    /// message — ROADMAP PR-3 follow-up).  Returns how many plans were
-    /// evicted.
+    /// plans.  A batch already in flight when the unload lands finishes
+    /// against the old instance; the store's draining state demotes any
+    /// plans it rebuilds to untagged LRU entries, so they cannot stay
+    /// pinned under the unloaded tag (a fresh warm re-activates the name
+    /// — see `PlanStore::activate_model`; a racing in-flight batch on
+    /// another worker after that re-warm can still pin a stale plan, a
+    /// narrow window bounded by one model's plan count and cleared by
+    /// the next unload).  A worker that never sees the model again
+    /// releases its stale clone at shutdown (proactive release needs a
+    /// control message — ROADMAP PR-3 follow-up).  Returns how many
+    /// plans were evicted.
     pub fn unload_model(&self, name: &str) -> usize {
+        // store first: once the name is draining, a worker that reloads
+        // the model cannot have its fresh warm pinned and then evicted by
+        // a store unload that lands late (registry-first would open that
+        // window, leaving the fresh instance's plans demoted forever —
+        // `warmed` stays true so no worker would re-activate the name)
+        let evicted = self.store.unload_model(name);
         self.registry.unload(name);
-        self.store.unload_model(name)
+        evicted
     }
 
     /// Submit a request; returns its id immediately.
@@ -314,7 +327,7 @@ fn worker_loop(
 ) {
     // Backend is constructed in-thread (PJRT state is !Send), but borrows
     // the shared plan store; models come as shared Arcs from the registry.
-    let mut backend = match build_backend_with_store(&cfg, wid, store) {
+    let mut backend = match build_backend_with_store(&cfg, wid, Arc::clone(&store)) {
         Ok(b) => {
             crate::log_debug!("worker", "worker {wid} ready with backend {}", b.name());
             b
@@ -360,6 +373,11 @@ fn worker_loop(
             .get(&batch.model)
             .map_or(false, |prev| Arc::ptr_eq(prev, &model));
         if !warmed {
+            // a fresh instance ends any draining state from a prior
+            // unload, so this generation's plans pin again (stale
+            // rebuilds from batches that raced the unload stay
+            // LRU-bounded instead of leaking as pinned entries)
+            store.activate_model(&batch.model);
             // warm the per-layer RNS plans: the shared store deduplicates,
             // so W workers warming the same model build each plan exactly
             // once — the other W-1 warms are store hits that only adopt

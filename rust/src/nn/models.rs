@@ -468,8 +468,14 @@ pub fn load_model(artifacts_dir: &str, name: &str) -> Result<Box<dyn Model>, Str
 /// their plan lookups to collide (see `store::PlanKey`).
 pub struct ModelRegistry {
     artifacts_dir: String,
-    models: std::sync::Mutex<std::collections::HashMap<String, std::sync::Arc<dyn Model>>>,
+    /// Name -> `Once`-style load cell, the same slot-reservation pattern
+    /// as `store::PlanStore`: the map lock is only held to reserve or
+    /// look up a cell, never across the filesystem load, so a cold load
+    /// of one model cannot stall workers serving other models.
+    models: std::sync::Mutex<std::collections::HashMap<String, ModelCell>>,
 }
+
+type ModelCell = std::sync::Arc<std::sync::OnceLock<Result<std::sync::Arc<dyn Model>, String>>>;
 
 impl ModelRegistry {
     pub fn new(artifacts_dir: &str) -> Self {
@@ -479,30 +485,68 @@ impl ModelRegistry {
         }
     }
 
-    /// Fetch a model, loading it at most once across all workers.  The
-    /// registry lock is held across the load: concurrent first requests
-    /// for the *same* model must not both hit the filesystem, and model
-    /// loads are rare (startup) and small, so serializing them is fine.
+    /// Fetch a model, loading it at most once across all workers.
+    /// Concurrent first requests for the *same* model serialize on its
+    /// cell (one filesystem load, everyone clones the result); requests
+    /// for other models only touch the map lock briefly.  A failed load
+    /// is not cached: its slot is dropped so a later request retries
+    /// (e.g. after the operator regenerates artifacts).
     pub fn get_or_load(&self, name: &str) -> Result<std::sync::Arc<dyn Model>, String> {
-        let mut models = self.models.lock().unwrap();
-        if let Some(m) = models.get(name) {
-            return Ok(std::sync::Arc::clone(m));
+        let cell = {
+            let mut models = self.models.lock().unwrap();
+            std::sync::Arc::clone(
+                models
+                    .entry(name.to_string())
+                    .or_insert_with(|| std::sync::Arc::new(std::sync::OnceLock::new())),
+            )
+        };
+        let result = cell
+            .get_or_init(|| load_model(&self.artifacts_dir, name).map(std::sync::Arc::from))
+            .clone();
+        if result.is_err() {
+            let mut models = self.models.lock().unwrap();
+            // drop the failed slot only if it is still ours — a concurrent
+            // unload + reload may have installed a fresh cell already
+            if models.get(name).is_some_and(|c| std::sync::Arc::ptr_eq(c, &cell)) {
+                models.remove(name);
+            }
         }
-        let m: std::sync::Arc<dyn Model> = std::sync::Arc::from(load_model(&self.artifacts_dir, name)?);
-        models.insert(name.to_string(), std::sync::Arc::clone(&m));
-        Ok(m)
+        result
     }
 
     /// Drop the shared instance; weights free once the last worker's
     /// clone drops.  Pair with `PlanStore::unload_model` to evict the
-    /// model's plans too.
+    /// model's plans too.  Returns whether a loaded instance was
+    /// dropped.  A cell whose load is still in flight is left
+    /// registered: removing it would orphan the instance the loader is
+    /// about to hand its caller (a second request would then load a
+    /// duplicate allocation, and the orphan's plans could be pinned
+    /// under the tag with no unload path).  The completing load is
+    /// equivalent to a reload issued right after this unload; call
+    /// `unload` again to drop it.
     pub fn unload(&self, name: &str) -> bool {
-        self.models.lock().unwrap().remove(name).is_some()
+        let mut models = self.models.lock().unwrap();
+        let loaded = match models.get(name) {
+            None => return false,
+            Some(cell) => match cell.get() {
+                None => return false, // in-flight: leave registered
+                Some(r) => r.is_ok(),
+            },
+        };
+        models.remove(name);
+        loaded
     }
 
-    /// Names currently resident, sorted.
+    /// Names currently resident (successfully loaded), sorted.
     pub fn loaded(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        let mut names: Vec<String> = self
+            .models
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, c)| c.get().is_some_and(|r| r.is_ok()))
+            .map(|(k, _)| k.clone())
+            .collect();
         names.sort();
         names
     }

@@ -149,10 +149,13 @@ impl NativeEngine {
         NativeEngine { threads, mode, pool: None }
     }
 
-    /// Fan `n_tasks` out according to the spawn mode.  `workers` caps the
-    /// scoped path's spawns; the pool path ignores it (parked threads
-    /// cost nothing to wake, and the atomic claim queue load-balances).
-    fn run_tasks<T, F>(&mut self, workers: usize, n_tasks: usize, f: F) -> Vec<T>
+    /// Fan `n_tasks` out according to the spawn mode.  `threads` is the
+    /// caller's already-resolved `effective_threads()` (the entry points
+    /// also ran `reconcile_pool` with it).  `workers` caps the scoped
+    /// path's spawns and the pool path's helper wake-ups (waking the
+    /// whole pool for a small job is a thundering herd on many-core
+    /// hosts; the atomic claim queue load-balances whoever shows up).
+    fn run_tasks<T, F>(&mut self, threads: usize, workers: usize, n_tasks: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
@@ -160,10 +163,23 @@ impl NativeEngine {
         match self.mode {
             SpawnMode::Scoped => run_indexed(workers, n_tasks, f),
             SpawnMode::Pool => {
-                let threads = self.effective_threads();
                 let pool = self.pool.get_or_insert_with(|| WorkerPool::new(threads));
-                pool.run_collect(n_tasks, f)
+                // `workers` carries the MIN_MACS_PER_WORKER granularity:
+                // wake only that many helpers, not the whole pool
+                pool.run_collect_capped(workers, n_tasks, f)
             }
+        }
+    }
+
+    /// Tear down a pool whose width no longer matches the configured
+    /// thread cap (`threads` field edited or RNS_NATIVE_THREADS re-set
+    /// after the pool was created): dropping joins the old helpers, so
+    /// reconfiguration never leaks threads.  Called from every engine
+    /// entry point — including the serial short-circuit, so shrinking
+    /// the cap to 1 releases a previously-built multi-helper pool.
+    fn reconcile_pool(&mut self, threads: usize) {
+        if self.pool.as_ref().is_some_and(|p| p.helper_threads() + 1 != threads) {
+            self.pool = None;
         }
     }
 
@@ -187,6 +203,7 @@ impl ModularGemmEngine for NativeEngine {
         assert_eq!(x_res.len(), moduli.len());
         assert_eq!(w_res.len(), moduli.len());
         let threads = self.effective_threads();
+        self.reconcile_pool(threads);
         let macs: usize =
             x_res.iter().zip(w_res).map(|(x, w)| x.rows * x.cols * w.cols).sum();
         if threads <= 1 || moduli.len() <= 1 || macs < PARALLEL_MAC_THRESHOLD {
@@ -198,7 +215,9 @@ impl ModularGemmEngine for NativeEngine {
         }
         // channel-level parallelism: each task stages + runs one channel
         let workers = threads.min(macs / MIN_MACS_PER_WORKER).min(moduli.len()).max(2);
-        self.run_tasks(workers, moduli.len(), |ch| gemm_mod(&x_res[ch], &w_res[ch], moduli[ch]))
+        self.run_tasks(threads, workers, moduli.len(), |ch| {
+            gemm_mod(&x_res[ch], &w_res[ch], moduli[ch])
+        })
     }
 
     fn matmul_mod_prepared(&mut self, x_res: &[MatI], w: &PreparedWeights) -> Vec<MatI> {
@@ -207,6 +226,7 @@ impl ModularGemmEngine for NativeEngine {
         let b = x_res[0].rows;
         debug_assert!(x_res.iter().all(|x| x.rows == b && x.cols == w.rows));
         let threads = self.effective_threads();
+        self.reconcile_pool(threads);
         let macs = b * w.rows * w.cols * n_ch;
         if threads <= 1 || macs < PARALLEL_MAC_THRESHOLD || b == 0 {
             return (0..n_ch)
@@ -227,7 +247,7 @@ impl ModularGemmEngine for NativeEngine {
                 r0 = r1;
             }
         }
-        let parts: Vec<(usize, usize, MatI)> = self.run_tasks(workers, tasks.len(), |t| {
+        let parts: Vec<(usize, usize, MatI)> = self.run_tasks(threads, workers, tasks.len(), |t| {
             let (ch, r0, r1) = tasks[t];
             let xt = x_res[ch].slice_rows(r0, r1);
             (ch, r0, gemm_mod_staged(&xt, &w.staged[ch], w.cols, w.moduli[ch]))
@@ -345,6 +365,34 @@ mod tests {
         let wu = NativeEngine::serial().matmul_mod(&xr, &wr, &moduli);
         for (p, w) in pu.iter().zip(&wu) {
             assert_eq!(p.data, w.data);
+        }
+    }
+
+    #[test]
+    fn pool_resizes_when_thread_cap_changes() {
+        let moduli = [255u64, 254, 253, 251];
+        let mut rng = Rng::seed_from(6);
+        let xr = rand_residues(&mut rng, &moduli, 16, 128);
+        let wr = rand_residues(&mut rng, &moduli, 128, 64);
+        let prepared = PreparedWeights::new(wr.clone(), &moduli);
+        let want = NativeEngine::serial().matmul_mod_prepared(&xr, &prepared);
+        let mut eng = NativeEngine::with_threads(4);
+        let a = eng.matmul_mod_prepared(&xr, &prepared);
+        assert_eq!(eng.pool.as_ref().unwrap().helper_threads(), 3);
+        // reconfigure after the pool exists: the next call must rebuild
+        // it at the new width instead of silently keeping the old one
+        eng.threads = 2;
+        let b = eng.matmul_mod_prepared(&xr, &prepared);
+        assert_eq!(eng.pool.as_ref().unwrap().helper_threads(), 1);
+        // shrinking to the serial path must release the pool's helpers
+        // too, even though the serial branch never reaches run_tasks
+        eng.threads = 1;
+        let c = eng.matmul_mod_prepared(&xr, &prepared);
+        assert!(eng.pool.is_none(), "serial cap must tear the pool down");
+        for (((a, b), c), w) in a.iter().zip(&b).zip(&c).zip(&want) {
+            assert_eq!(a.data, w.data);
+            assert_eq!(b.data, w.data);
+            assert_eq!(c.data, w.data);
         }
     }
 

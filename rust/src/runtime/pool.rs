@@ -18,21 +18,40 @@
 //! pool threads are long-lived — that is the single safety invariant the
 //! one `unsafe` lifetime erasure below relies on.
 //!
+//! Panics do not weaken that invariant: every task runs under
+//! `catch_unwind`, so a panicking task still counts toward `completed`
+//! (no helper dies mid-job, no submitter waits forever), and `run` holds
+//! a drop guard that waits for the full completion count even while
+//! unwinding, so the erased borrow can never dangle.  The first panic
+//! payload is re-thrown on the submitting thread once the job has fully
+//! drained — the same observable behavior as `std::thread::scope`.
+//!
 //! Determinism: the pool schedules *which thread* runs a task, never what
 //! the task computes — engine tasks are exact modular arithmetic keyed by
 //! task index, so outputs are bit-identical to the serial and scoped
 //! paths (asserted by `tests/integration_store.rs`).
 
+use std::any::Any;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+
+/// Poison-tolerant lock: the pool's mutexes guard plain state whose
+/// invariants are re-established under the lock, and task panics are
+/// re-thrown on submitter threads that may hold these locks — treating
+/// poison as fatal would turn one propagated panic into a dead pool.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Lifetime-erased `&(dyn Fn(usize) + Sync)`.
 ///
 /// Safety contract: the pointee outlives every dereference because
-/// `WorkerPool::run` blocks until `completed == n_tasks`, and a worker
-/// only dereferences after claiming an index `< n_tasks` — each such
-/// claim completes (and is counted) before `run` can return.
+/// `WorkerPool::run` blocks until `completed == n_tasks` — on the normal
+/// path and, via a drop guard, while unwinding — and a worker only
+/// dereferences after claiming an index `< n_tasks`; each such claim
+/// completes (and is counted, panic or not) before `run` can return.
 struct TaskRef(*const (dyn Fn(usize) + Sync));
 
 unsafe impl Send for TaskRef {}
@@ -44,6 +63,9 @@ struct Job {
     n_tasks: usize,
     next: AtomicUsize,
     completed: AtomicUsize,
+    /// First panic payload from any task; re-thrown on the submitter
+    /// after the job fully drains.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
 }
 
 impl Job {
@@ -59,14 +81,45 @@ impl Job {
             // `run` and the borrow behind the pointer is alive (see
             // `TaskRef`).
             let f = unsafe { &*self.task.0 };
-            f(i);
+            // A panicking task must still count as completed: a helper
+            // that unwound out of here would die before incrementing
+            // `completed`, leaving the submitter waiting forever; a
+            // submitter that unwound would drop the borrow while helpers
+            // still execute through the erased pointer.
+            if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = lock_ignore_poison(&self.panic);
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
             if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n_tasks {
                 // lock before notify so the submitter cannot check the
                 // counter and sleep between our increment and our wake
-                let _guard = shared.state.lock().unwrap();
+                let _guard = lock_ignore_poison(&shared.state);
                 shared.done.notify_all();
             }
         }
+    }
+}
+
+/// Blocks in `drop` until the job's completion count reaches `n_tasks`,
+/// then unpublishes it.  Held by `run` across the claim loop so that no
+/// unwind path can end the borrow behind `TaskRef` while a helper might
+/// still dereference it.
+struct CompletionGuard<'a> {
+    job: &'a Job,
+    shared: &'a PoolShared,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = lock_ignore_poison(&self.shared.state);
+        while self.job.completed.load(Ordering::Acquire) < self.job.n_tasks {
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        // drop the erased pointer before `f`'s borrow can end; helpers
+        // holding stale `Arc<Job>` clones only see an exhausted counter
+        st.job = None;
     }
 }
 
@@ -125,8 +178,21 @@ impl WorkerPool {
     }
 
     /// Run `n_tasks` indexed tasks across the pool and block until all
-    /// complete.  The closure may borrow the caller's stack.
+    /// complete.  The closure may borrow the caller's stack.  A panicking
+    /// task does not tear the pool down: the job still drains fully and
+    /// the first panic is re-thrown here, on the submitting thread.
     pub fn run(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.run_capped(usize::MAX, n_tasks, f);
+    }
+
+    /// `run` with a concurrency hint: wake at most `cap - 1` parked
+    /// helpers (the submitter is the cap's remaining slot) instead of the
+    /// whole pool.  On a many-core host a small job would otherwise
+    /// thundering-herd every parked helper through the state mutex just
+    /// to find the claim counter exhausted.  The cap is a wake hint, not
+    /// a limit on correctness: however many helpers show up, the
+    /// submitter participates and the job always drains.
+    pub fn run_capped(&self, cap: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         if n_tasks == 0 {
             return;
         }
@@ -136,29 +202,44 @@ impl WorkerPool {
             }
             return;
         }
-        let _submit = self.submit.lock().unwrap();
+        let _submit = lock_ignore_poison(&self.submit);
         let job = Arc::new(Job {
             task: TaskRef(f as *const (dyn Fn(usize) + Sync)),
             n_tasks,
             next: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
+            panic: Mutex::new(None),
         });
+        // helpers the job can actually use: one per task beyond the
+        // submitter's, bounded by the cap and the pool width
+        let wake = cap
+            .max(1)
+            .saturating_sub(1)
+            .min(n_tasks.saturating_sub(1))
+            .min(self.threads.len());
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_ignore_poison(&self.shared.state);
             st.generation = st.generation.wrapping_add(1);
             st.job = Some(Arc::clone(&job));
-            self.shared.work.notify_all();
+            if wake >= self.threads.len() {
+                self.shared.work.notify_all();
+            } else {
+                for _ in 0..wake {
+                    self.shared.work.notify_one();
+                }
+            }
         }
+        // from publication until the completion count reaches n_tasks,
+        // helpers may dereference the erased borrow of `f`; the guard
+        // waits that out on every exit path, including unwinding
+        let guard = CompletionGuard { job: &job, shared: &self.shared };
         // the submitter is also a worker — a 1-task job never even needs
-        // a helper wakeup to have finished by the wait below
+        // a helper wakeup to have finished by the guard's wait
         job.run_tasks(&self.shared);
-        let mut st = self.shared.state.lock().unwrap();
-        while job.completed.load(Ordering::Acquire) < n_tasks {
-            st = self.shared.done.wait(st).unwrap();
+        drop(guard);
+        if let Some(payload) = lock_ignore_poison(&job.panic).take() {
+            panic::resume_unwind(payload);
         }
-        // drop the erased pointer before `f`'s borrow can end; helpers
-        // holding stale `Arc<Job>` clones only see an exhausted counter
-        st.job = None;
     }
 
     /// Run tasks that each produce a value; results come back in task
@@ -170,8 +251,17 @@ impl WorkerPool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        self.run_collect_capped(usize::MAX, n_tasks, f)
+    }
+
+    /// `run_collect` with the `run_capped` wake hint.
+    pub fn run_collect_capped<T, F>(&self, cap: usize, n_tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
         let slots: Vec<Mutex<Option<T>>> = (0..n_tasks).map(|_| Mutex::new(None)).collect();
-        self.run(n_tasks, &|i| {
+        self.run_capped(cap, n_tasks, &|i| {
             *slots[i].lock().unwrap() = Some(f(i));
         });
         slots
@@ -184,7 +274,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_ignore_poison(&self.shared.state);
             st.shutdown = true;
             self.shared.work.notify_all();
         }
@@ -198,7 +288,7 @@ fn pool_worker(shared: Arc<PoolShared>) {
     let mut last_gen = 0u64;
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_ignore_poison(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -209,7 +299,7 @@ fn pool_worker(shared: Arc<PoolShared>) {
                         break Arc::clone(job);
                     }
                 }
-                st = shared.work.wait(st).unwrap();
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
         job.run_tasks(&shared);
@@ -285,5 +375,82 @@ mod tests {
         let pool = WorkerPool::new(8);
         pool.run(16, &|_| {});
         drop(pool); // must not hang or leak parked threads
+    }
+
+    #[test]
+    fn capped_run_completes_all_tasks() {
+        // the cap limits wake-ups, never completion: every task must run
+        // exactly once whatever mix of submitter/helpers claims them
+        let pool = WorkerPool::new(8);
+        for cap in [1usize, 2, 3, 100] {
+            let n = 23;
+            let counts: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.run_capped(cap, n, &|i| {
+                counts[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::SeqCst), 1, "cap {cap} task {i}");
+            }
+            let out = pool.run_collect_capped(cap, 9, |i| i + 1);
+            assert_eq!(out, (1..=9).collect::<Vec<_>>(), "cap {cap}");
+        }
+    }
+
+    #[test]
+    fn panicking_task_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let ran: Vec<AtomicU64> = (0..32).map(|_| AtomicU64::new(0)).collect();
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(32, &|i| {
+                ran[i].fetch_add(1, Ordering::SeqCst);
+                if i % 5 == 0 {
+                    panic!("task {i} failed");
+                }
+            });
+        }));
+        assert!(result.is_err(), "a task panic must reach the submitter");
+        // the job drained fully before the panic was re-thrown: every
+        // task ran exactly once (no helper died mid-queue, no hang)
+        for (i, c) in ran.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "task {i}");
+        }
+        // helpers caught the panic and are still parked: later jobs work
+        let out = pool.run_collect(8, |i| i * 3);
+        assert_eq!(out, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+        drop(pool); // joins cleanly — no dead or wedged helpers
+    }
+
+    #[test]
+    fn helper_thread_panic_does_not_hang_submitter() {
+        // force panics onto helper threads: the submitter task blocks
+        // until every other task (all panicking) has been claimed, so
+        // helpers must survive their panics and count completions or the
+        // submitter would wait on `done` forever
+        let pool = WorkerPool::new(4);
+        let claimed = AtomicU64::new(0);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                claimed.fetch_add(1, Ordering::SeqCst);
+                if i > 0 {
+                    panic!("helper task {i}");
+                }
+                while claimed.load(Ordering::SeqCst) < 4 {
+                    std::thread::yield_now();
+                }
+            });
+        }));
+        assert!(result.is_err());
+        assert_eq!(pool.run_collect(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn panic_payload_is_first_come_and_preserved() {
+        let pool = WorkerPool::new(2);
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(1, &|_| panic!("boom-payload"));
+        }));
+        let payload = result.expect_err("must re-throw");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "boom-payload");
     }
 }

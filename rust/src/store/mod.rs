@@ -26,7 +26,7 @@
 //! store without limit; model-tagged plans are pinned until
 //! `unload_model`.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::runtime::plan::RnsPlan;
@@ -134,6 +134,14 @@ struct StoreInner {
     /// Untagged keys, least- to most-recently used.
     lru: VecDeque<PlanKey>,
     models: HashMap<String, ModelEntry>,
+    /// Models unloaded and not yet re-activated: tagged lookups under a
+    /// draining name fall back to untagged (LRU-bounded) slots, so an
+    /// in-flight batch racing `unload_model` cannot re-pin plans of the
+    /// dead weight allocation under the unloaded tag (they would be
+    /// unreachable once the model reloads at a new address — a leak
+    /// until a second unload).  `activate_model` (called by workers when
+    /// they warm a fresh instance) restores pinning.
+    draining: HashSet<String>,
     builds: u64,
     hits: u64,
     evicted: u64,
@@ -170,12 +178,25 @@ impl PlanStore {
     {
         let cell = {
             let mut st = self.inner.lock().unwrap();
+            // a draining model's lookups are demoted to untagged: see
+            // `StoreInner::draining`
+            let model = match model {
+                Some(m) if st.draining.contains(m) => None,
+                other => other,
+            };
             let existing = st.slots.get(&key).map(|s| (Arc::clone(&s.cell), s.model.is_none()));
             match existing {
                 Some((cell, untagged)) => {
                     st.hits += 1;
                     if let Some(m) = model {
-                        st.models.entry(m.to_string()).or_default().hits += 1;
+                        // get_mut first: this is the per-layer-GEMM hot
+                        // path, and entry() would allocate a String under
+                        // the store mutex on every hit
+                        if let Some(e) = st.models.get_mut(m) {
+                            e.hits += 1;
+                        } else {
+                            st.models.entry(m.to_string()).or_default().hits += 1;
+                        }
                     }
                     match (untagged, model) {
                         (true, Some(m)) => {
@@ -218,12 +239,24 @@ impl PlanStore {
                         }
                         None => {
                             st.lru.push_back(key);
-                            while st.lru.len() > self.untagged_capacity {
-                                if let Some(old) = st.lru.pop_front() {
-                                    if let Some(s) = st.slots.remove(&old) {
-                                        st.resident_bytes = st.resident_bytes.saturating_sub(s.bytes);
-                                        st.evicted += 1;
-                                    }
+                            // bound the scan: with every survivor in-flight
+                            // the queue would otherwise rotate forever
+                            let mut scanned = 0;
+                            while st.lru.len() > self.untagged_capacity && scanned < st.lru.len() {
+                                scanned += 1;
+                                let Some(old) = st.lru.pop_front() else { break };
+                                // never evict a slot whose build is still in
+                                // flight: a third caller would miss and run
+                                // the builder a second time concurrently,
+                                // breaking build-exactly-once (the queue may
+                                // transiently exceed capacity instead)
+                                if st.slots.get(&old).is_some_and(|s| s.cell.get().is_none()) {
+                                    st.lru.push_back(old);
+                                    continue;
+                                }
+                                if let Some(s) = st.slots.remove(&old) {
+                                    st.resident_bytes = st.resident_bytes.saturating_sub(s.bytes);
+                                    st.evicted += 1;
                                 }
                             }
                         }
@@ -268,13 +301,30 @@ impl PlanStore {
 
     /// Drop every plan tagged with `model`; returns how many were
     /// evicted.  In-flight `Arc`s stay valid until their holders drop.
+    /// The name starts draining: later tagged lookups fall back to
+    /// untagged LRU slots (in-flight batches racing the unload cannot
+    /// re-pin dead-allocation plans) until `activate_model` is called.
     pub fn unload_model(&self, model: &str) -> usize {
         let mut st = self.inner.lock().unwrap();
+        st.draining.insert(model.to_string());
         let Some(entry) = st.models.remove(model) else {
             return 0;
         };
         let mut dropped = 0;
         for key in entry.keys {
+            // a slot whose build is still in flight is demoted to the
+            // untagged LRU instead of removed: removing it would let a
+            // racing caller run the builder a second time (breaking
+            // build-exactly-once) and would count a never-built plan as
+            // evicted; demotion un-pins it while keeping the cell every
+            // concurrent caller is blocked on
+            if st.slots.get(&key).is_some_and(|s| s.cell.get().is_none()) {
+                if let Some(slot) = st.slots.get_mut(&key) {
+                    slot.model = None;
+                }
+                st.lru.push_back(key);
+                continue;
+            }
             if let Some(slot) = st.slots.remove(&key) {
                 st.resident_bytes = st.resident_bytes.saturating_sub(slot.bytes);
                 st.evicted += 1;
@@ -282,6 +332,15 @@ impl PlanStore {
             }
         }
         dropped
+    }
+
+    /// End a model's draining state (no-op if it was not draining):
+    /// subsequent tagged lookups pin plans again.  Workers call this when
+    /// they warm a freshly (re)loaded instance, so the fresh generation's
+    /// plans are pinned while any stale rebuilds from batches that raced
+    /// the unload stay LRU-bounded.
+    pub fn activate_model(&self, model: &str) {
+        self.inner.lock().unwrap().draining.remove(model);
     }
 
     pub fn stats(&self) -> StoreStats {
@@ -447,6 +506,63 @@ mod tests {
         // and unload now covers it
         assert_eq!(store.unload_model("mlp"), 1);
         assert!(store.get(&key_of(&w)).is_none());
+    }
+
+    #[test]
+    fn in_flight_untagged_build_is_not_evicted() {
+        use std::sync::mpsc;
+        let store = Arc::new(PlanStore::with_capacity(1));
+        let w = Arc::new(rand_mat(90, 64, 3));
+        let (enter_tx, enter_rx) = mpsc::channel();
+        let (go_tx, go_rx) = mpsc::channel();
+        let t = {
+            let (store, w) = (Arc::clone(&store), Arc::clone(&w));
+            std::thread::spawn(move || {
+                store.get_or_build(key_of(&w), None, || {
+                    enter_tx.send(()).unwrap();
+                    go_rx.recv().unwrap();
+                    build_plan(&w)
+                })
+            })
+        };
+        enter_rx.recv().unwrap(); // builder is inside the build, slot in flight
+        // capacity-1 churn while the build runs: the in-flight slot must
+        // be skipped (evicting it would let a later caller run the
+        // builder a second time, breaking build-exactly-once)
+        let other = rand_mat(91, 64, 3);
+        store.get_or_build(key_of(&other), None, || build_plan(&other));
+        go_tx.send(()).unwrap();
+        let built = t.join().unwrap();
+        let again = store.get_or_build(key_of(&w), None, || panic!("must not rebuild"));
+        assert!(Arc::ptr_eq(&built, &again), "in-flight slot survived the churn");
+        assert_eq!(store.stats().builds, 2);
+    }
+
+    #[test]
+    fn unloaded_model_rebuilds_drain_to_lru_until_reactivated() {
+        let store = PlanStore::with_capacity(2);
+        let w = rand_mat(80, 64, 3);
+        store.get_or_build(key_of(&w), Some("m"), || build_plan(&w));
+        assert_eq!(store.unload_model("m"), 1);
+        // an in-flight batch racing the unload rebuilds the plan under
+        // the unloaded tag: it must land untagged (no pin, no model
+        // entry resurrection) so it cannot leak once the model reloads
+        // at a new weight address
+        store.get_or_build(key_of(&w), Some("m"), || build_plan(&w));
+        assert!(store.model_stats().is_empty(), "draining tag must not resurrect the model");
+        // LRU pressure evicts the stale rebuild like any untagged plan
+        let (a, b) = (rand_mat(81, 64, 3), rand_mat(82, 64, 3));
+        store.get_or_build(key_of(&a), None, || build_plan(&a));
+        store.get_or_build(key_of(&b), None, || build_plan(&b));
+        assert!(store.get(&key_of(&w)).is_none(), "stale rebuild must be evictable");
+        // a fresh warm re-activates the name: plans pin again
+        store.activate_model("m");
+        let w2 = rand_mat(83, 64, 3);
+        store.get_or_build(key_of(&w2), Some("m"), || build_plan(&w2));
+        let ms = store.model_stats();
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].plans, 1);
+        assert_eq!(store.unload_model("m"), 1);
     }
 
     #[test]

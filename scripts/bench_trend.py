@@ -8,6 +8,12 @@ the headline ratios (>=3x decode, >=3x prepared/parallel GEMM, pool >=
 scoped) are tracked across PRs instead of living only in each run's
 artifact.  Re-running on the same commit replaces that commit's entry
 (idempotent on CI retries).
+
+The trend is best-effort: overlapping CI runs both restore the same
+parent cache and save separately, so the earlier run's entry can be
+dropped from later history.  Each run's own BENCH_gemm.json artifact is
+the authoritative record; the trend exists for the at-a-glance ratio
+trajectory.
 """
 
 import argparse
