@@ -6,9 +6,13 @@
 //! requests, and reports accuracy + latency/throughput.  This proves all
 //! three layers compose: rust coordinator -> PJRT runtime -> pallas HLO.
 //!
-//! Run: cargo run --release --example serve_inference [-- --requests=96 --backend=rns]
+//! Run: cargo run --release --example serve_inference [-- --requests=96 --backend=rns --workers=4]
 //!   --backend=rns-pjrt uses the PJRT engine on the hot path (slower but
 //!   exercises the full AOT stack; default for the first 16 requests).
+//!   With --backend=rns the workers share one execution fabric (one
+//!   process-wide pool of fan-out threads, bounded by cores − 1 whatever
+//!   --workers says) — its utilization appears in the shutdown report's
+//!   `fabric:` line.
 
 use std::collections::HashMap;
 
@@ -25,6 +29,7 @@ fn main() {
     let artifacts = args.get_or("artifacts-dir", &default_artifacts_dir());
     let requests_per_model = args.get_parsed::<usize>("requests", 48).unwrap();
     let bits = args.get_parsed::<u32>("bits", 6).unwrap();
+    let workers = args.get_parsed::<usize>("workers", 2).unwrap();
     let backend = match args.get_or("backend", "rns-pjrt").as_str() {
         "rns" => BackendKind::Rns { bits, redundant: 0, attempts: 1, noise: NoiseModel::None },
         "rns-pjrt" => {
@@ -36,9 +41,17 @@ fn main() {
     println!("serving with backend {backend:?}, {requests_per_model} requests/model\n");
 
     let mut cfg = CoordinatorConfig::new(backend, &artifacts);
-    cfg.workers = 2;
+    cfg.workers = workers;
     cfg.batcher = BatcherConfig { max_batch: 8, ..Default::default() };
     let coord = Coordinator::start(cfg);
+    if let Some(fabric) = coord.fabric() {
+        let s = fabric.stats();
+        println!(
+            "execution fabric: {} helper thread(s) shared by {workers} worker(s), \
+             budget {} helper(s)/job\n",
+            s.helper_threads, s.budget
+        );
+    }
 
     // stream single-sample requests for two models, interleaved, and track
     // the ground-truth label of every request id

@@ -26,8 +26,8 @@ use rns_analog::rns::moduli::{extend_moduli, paper_table1};
 use rns_analog::rns::rrns::{Decode, RrnsCode};
 use rns_analog::rns::{BarrettReducer, RnsContext};
 use rns_analog::runtime::{
-    default_artifacts_dir, ModularGemmEngine, NativeEngine, PjrtEngine, PjrtRuntime,
-    PreparedWeights,
+    default_artifacts_dir, ExecutionFabric, ModularGemmEngine, NativeEngine, PjrtEngine,
+    PjrtRuntime, PreparedWeights,
 };
 use rns_analog::tensor::gemm::{gemm_f32, gemm_i64, gemm_mod};
 use rns_analog::tensor::{MatF, MatI};
@@ -133,6 +133,18 @@ fn micro_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
             macs_pool,
             "MAC/s",
             || pooled.matmul_mod_prepared(&xr, &prepared),
+        );
+        // the PR-4 pair: the same GEMM through the process-wide shared
+        // fabric (one worker => full helper budget, so the comparison
+        // isolates the shared-pool dispatch, not a smaller budget).  CI
+        // gates fabric >= scoped next to the pool gate.
+        let fabric = std::sync::Arc::new(ExecutionFabric::for_workers(1));
+        let mut fabbed = NativeEngine::with_fabric(fabric.handle());
+        b.bench_with_rate(
+            "micro/pool prepared 4x784x256 x4ch shared-fabric",
+            macs_pool,
+            "MAC/s",
+            || fabbed.matmul_mod_prepared(&xr, &prepared),
         );
     }
     if want("micro/gemm_i64") {

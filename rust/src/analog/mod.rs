@@ -40,6 +40,11 @@ pub trait GemmBackend {
     /// per-model plan-store attribution and eviction by model unload.
     /// Default: ignored — stateless backends have no plan store.
     fn set_model_tag(&mut self, _tag: &str) {}
+    /// Proactively drop per-model backend state (stale plan adoptions,
+    /// the model tag) when the coordinator's control plane unloads
+    /// `model` — the release-side counterpart of `set_model_tag`.
+    /// Default: nothing — stateless backends hold no per-model state.
+    fn release_model(&mut self, _model: &str) {}
     fn name(&self) -> String;
     /// Energy meter, if this backend models hardware.
     fn meter(&self) -> Option<EnergyMeter> {

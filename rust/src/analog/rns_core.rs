@@ -55,6 +55,7 @@ use crate::analog::mvm_unit::RnsMvmUnit;
 use crate::analog::noise::NoiseModel;
 use crate::analog::GemmBackend;
 use crate::quant::{dequantize, quantize_activations, quantize_weights};
+use crate::rns::inject::{FaultInjector, FaultSpec};
 use crate::rns::moduli::{extend_moduli, required_output_bits, select_moduli};
 use crate::rns::rrns::{Decode, RrnsCode};
 use crate::rns::RnsContext;
@@ -88,6 +89,14 @@ pub struct RnsCoreConfig {
     /// paths are bit-identical by construction — this flag exists for the
     /// equivalence tests and the bench baseline, not for serving.
     pub reference_decode: bool,
+    /// Seeded fault injection applied to every *captured* tile before
+    /// decode (drift campaigns: `FaultSpec::TemporalBurst` persists one
+    /// corrupted rectangle across consecutive tiles).  Injected faults
+    /// are transient per capture — the RRNS retry loop recomputes from
+    /// the clean channel outputs through the configured `noise` model,
+    /// matching a drift event hitting the ADC capture, not the arrays.
+    /// `None` (the default) injects nothing.
+    pub fault_injection: Option<(FaultSpec, u64)>,
 }
 
 impl RnsCoreConfig {
@@ -102,6 +111,7 @@ impl RnsCoreConfig {
             noise: NoiseModel::None,
             seed: 0,
             reference_decode: false,
+            fault_injection: None,
         }
     }
 
@@ -125,10 +135,19 @@ impl RnsCoreConfig {
         self.reference_decode = reference;
         self
     }
+
+    /// Inject seeded faults into every captured tile (see
+    /// `fault_injection`).  The injector's RNG is separate from the
+    /// core's noise RNG, so a campaign replays bit-for-bit from
+    /// `(spec, seed)` whatever the noise model draws.
+    pub fn with_fault_injection(mut self, spec: FaultSpec, seed: u64) -> Self {
+        self.fault_injection = Some((spec, seed));
+        self
+    }
 }
 
 /// Fault-tolerance counters (per core lifetime).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FaultStats {
     /// Output elements decoded in total — exactly one count per output
     /// element per tile decode, independent of how many voting retries an
@@ -181,6 +200,9 @@ pub struct RnsCore {
     /// Model name attributed to subsequent plan lookups (per-model store
     /// counters + eviction by model unload).
     model_tag: Option<String>,
+    /// Seeded tile-capture fault injector (drift campaigns); `None` for
+    /// normal serving.
+    injector: Option<FaultInjector>,
 }
 
 impl RnsCore {
@@ -234,6 +256,7 @@ impl RnsCore {
         let units =
             all_moduli.iter().map(|&m| RnsMvmUnit::new(m, cfg.noise)).collect::<Vec<_>>();
         let rng = Rng::seed_from(cfg.seed ^ 0x5EED_CAFE);
+        let injector = cfg.fault_injection.map(|(spec, seed)| FaultInjector::new(spec, seed));
         Ok(RnsCore {
             cfg,
             all_ctx,
@@ -248,6 +271,7 @@ impl RnsCore {
             adoptions: 0,
             adopted_purge_at: ADOPTED_PURGE_FLOOR,
             model_tag: None,
+            injector,
         })
     }
 
@@ -280,6 +304,21 @@ impl RnsCore {
         if self.model_tag.as_deref() != Some(tag) {
             self.model_tag = Some(tag.to_string());
         }
+    }
+
+    /// Control-plane release (the counterpart of `set_model_tag`): drop
+    /// the model tag if it names `model` and purge adoption entries whose
+    /// plan the store has evicted.  The coordinator unloads the store
+    /// *before* telling workers to release, so the unloaded model's
+    /// adoptions are dead `Weak`s by the time this runs — purging them
+    /// here (instead of at the next amortized threshold) means a worker
+    /// that never serves the name again holds nothing for it.
+    pub fn release_model(&mut self, model: &str) {
+        if self.model_tag.as_deref() == Some(model) {
+            self.model_tag = None;
+        }
+        self.adopted.retain(|_, plan| plan.strong_count() > 0);
+        self.adopted_purge_at = (self.adopted.len() * 2).max(ADOPTED_PURGE_FLOOR);
     }
 
     /// Fetch (or build, exactly once store-wide) the layer plan for `w`,
@@ -426,6 +465,12 @@ impl RnsCore {
         for (u, ch) in self.units.iter().zip(&clean) {
             captured.push(u.recapture(ch, &mut self.rng, &mut self.meter));
         }
+        // drift-campaign injection corrupts the captured residues only:
+        // the retry loop recomputes from `clean` (plus the noise model),
+        // so a detected injected fault is recoverable by recompute
+        if let Some(inj) = &mut self.injector {
+            inj.corrupt_tile(&mut captured, &self.all_ctx.moduli);
+        }
         self.decode_tile(&clean, captured)
     }
 
@@ -565,6 +610,9 @@ impl GemmBackend for RnsCore {
     }
     fn set_model_tag(&mut self, tag: &str) {
         RnsCore::set_model_tag(self, tag);
+    }
+    fn release_model(&mut self, model: &str) {
+        RnsCore::release_model(self, model);
     }
     fn name(&self) -> String {
         let rr = if self.cfg.redundant > 0 {

@@ -10,7 +10,7 @@
 //! coordinator reuses one plan per loaded model across all requests and
 //! the engine's batch-row parallelism gets whole batches to split.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::InferenceRequest;
@@ -39,37 +39,55 @@ pub struct FormedBatch {
     pub members: Vec<(InferenceRequest, usize)>, // (request, sample offset)
 }
 
+/// One model's FIFO slot (slots are created on first sight of a model
+/// and never removed, so slot order is first-seen order).
+struct ModelQueue {
+    model: String,
+    q: VecDeque<InferenceRequest>,
+}
+
 /// Per-model FIFO with age- and size-triggered flushing.
+///
+/// Submit is O(1): `index` maps model name → slot.  Flushing scans the
+/// slot vector in first-seen order, so when several models are ready the
+/// *oldest queue* flushes first — the fairness property the
+/// `flush_prefers_the_oldest_queue` regression test pins down (an
+/// emptied queue keeps its slot, so a refilled model keeps its
+/// priority).
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
-    queues: Vec<(String, VecDeque<InferenceRequest>)>,
+    queues: Vec<ModelQueue>,
+    index: HashMap<String, usize>,
 }
 
 impl DynamicBatcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        DynamicBatcher { cfg, queues: Vec::new() }
+        DynamicBatcher { cfg, queues: Vec::new(), index: HashMap::new() }
     }
 
     pub fn push(&mut self, req: InferenceRequest) {
-        if let Some((_, q)) = self.queues.iter_mut().find(|(m, _)| *m == req.model) {
-            q.push_back(req);
-        } else {
-            let model = req.model.clone();
-            let mut q = VecDeque::new();
-            q.push_back(req);
-            self.queues.push((model, q));
+        match self.index.get(&req.model) {
+            Some(&i) => self.queues[i].q.push_back(req),
+            None => {
+                let model = req.model.clone();
+                self.index.insert(model.clone(), self.queues.len());
+                let mut q = VecDeque::new();
+                q.push_back(req);
+                self.queues.push(ModelQueue { model, q });
+            }
         }
     }
 
     pub fn pending(&self) -> usize {
-        self.queues.iter().map(|(_, q)| q.len()).sum()
+        self.queues.iter().map(|mq| mq.q.len()).sum()
     }
 
     /// Pop a ready batch, if any queue hit `max_batch` samples or its head
     /// request is older than `max_wait` (or `force` drains regardless).
     pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<FormedBatch> {
         let cfg = self.cfg;
-        let idx = self.queues.iter().position(|(_, q)| {
+        let idx = self.queues.iter().position(|mq| {
+            let q = &mq.q;
             let samples: usize = q.iter().map(|r| r.num_samples()).sum();
             let head_age = q.front().map(|r| now.duration_since(r.submitted_at));
             (!q.is_empty())
@@ -77,7 +95,7 @@ impl DynamicBatcher {
                     || head_age.map(|a| a >= cfg.max_wait).unwrap_or(false)
                     || force)
         })?;
-        let (model, q) = &mut self.queues[idx];
+        let ModelQueue { model, q } = &mut self.queues[idx];
         let model = model.clone();
         let mut members = Vec::new();
         let mut samples = 0usize;
@@ -178,6 +196,34 @@ mod tests {
         let fb = b.pop_ready(Instant::now(), false).unwrap();
         assert_eq!(fb.model, "mlp");
         assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn flush_prefers_the_oldest_queue() {
+        // regression for the index-map rewrite: when several models are
+        // ready, the first-seen queue flushes first, and a queue that
+        // emptied and refilled keeps its original slot (and priority)
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(0),
+        });
+        b.push(img_req(0, "a", 1));
+        b.push(img_req(1, "b", 1));
+        b.push(img_req(2, "c", 1));
+        let later = Instant::now() + Duration::from_millis(1);
+        assert_eq!(b.pop_ready(later, false).unwrap().model, "a");
+        assert_eq!(b.pop_ready(later, false).unwrap().model, "b");
+        // refill "a" after its queue emptied: it must flush before "c"
+        b.push(img_req(3, "a", 1));
+        let later = Instant::now() + Duration::from_millis(1);
+        assert_eq!(
+            b.pop_ready(later, false).unwrap().model,
+            "a",
+            "refilled queue keeps its first-seen slot"
+        );
+        assert_eq!(b.pop_ready(later, false).unwrap().model, "c");
+        assert!(b.pop_ready(later, false).is_none());
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

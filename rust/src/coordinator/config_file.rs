@@ -16,6 +16,8 @@
 //! max_wait_us = 2000
 //! routing = "least-outstanding"   # or "round-robin"
 //! plan_store_capacity = 64        # LRU bound for untagged (sweep) plans
+//! fabric_threads = 0              # shared-fabric thread budget (0 = auto:
+//!                                 # RNS_NATIVE_THREADS, else core count)
 //! ```
 
 use std::time::Duration;
@@ -79,6 +81,11 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
         return Err("serve.plan_store_capacity must be >= 1".into());
     }
     out.plan_store_capacity = cap as usize;
+    let fabric_threads = cfg.int_or("serve.fabric_threads", 0);
+    if fabric_threads < 0 {
+        return Err("serve.fabric_threads must be >= 0 (0 = auto)".into());
+    }
+    out.fabric_threads = fabric_threads as usize;
     Ok(out)
 }
 
@@ -106,6 +113,7 @@ max_batch = 16
 max_wait_us = 500
 routing = "least-outstanding"
 plan_store_capacity = 32
+fabric_threads = 6
 "#;
 
     #[test]
@@ -127,6 +135,7 @@ plan_store_capacity = 32
         assert_eq!(cc.routing, RoutingKind::LeastOutstanding);
         assert_eq!(cc.seed, 7);
         assert_eq!(cc.plan_store_capacity, 32);
+        assert_eq!(cc.fabric_threads, 6);
     }
 
     #[test]
@@ -159,6 +168,7 @@ plan_store_capacity = 32
             "[core]\nh = 0",
             "[serve]\nrouting = \"random\"",
             "[serve]\nplan_store_capacity = 0",
+            "[serve]\nfabric_threads = -1",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(from_config(&cfg, "/tmp/a").is_err(), "{bad}");

@@ -1,10 +1,12 @@
 //! Serving metrics: throughput, latency percentiles, fault counters —
 //! globally and per model — plus the shared plan store's hit/miss and
-//! residency counters in the shutdown report.
+//! residency counters, the execution fabric's utilization, and the
+//! control plane's proactive-unload counters in the shutdown report.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+use crate::runtime::fabric::FabricStats;
 use crate::store::{ModelPlanStats, StoreStats};
 use crate::util::stats::Percentiles;
 
@@ -39,10 +41,18 @@ pub struct ServingMetrics {
     /// workers × model layers — adoption is per worker; the shared plan
     /// store's `builds` counter shows the deduplicated build count).
     pub plans_built: u64,
+    /// Proactive unloads issued through the worker control plane, and
+    /// how many worker-held model instances they released (a worker that
+    /// never held the model acks without a release).
+    pub unload_requests: u64,
+    pub proactive_releases: u64,
     /// Same counters keyed by model (BTreeMap: stable report order).
     per_model: BTreeMap<String, ModelServingStats>,
     /// Plan-store snapshot attached at shutdown.
     plan_store: Option<(StoreStats, Vec<ModelPlanStats>)>,
+    /// Execution-fabric snapshot attached at shutdown (native RNS
+    /// backends only).
+    fabric: Option<FabricStats>,
     latency_us: Percentiles,
     queue_us: Percentiles,
     batch_sizes: Percentiles,
@@ -81,6 +91,19 @@ impl ServingMetrics {
     /// Attach the shared plan store's counters for the shutdown report.
     pub fn set_plan_store(&mut self, stats: StoreStats, per_model: Vec<ModelPlanStats>) {
         self.plan_store = Some((stats, per_model));
+    }
+
+    /// Attach the shared execution fabric's shape + utilization counters
+    /// for the shutdown report.
+    pub fn set_fabric(&mut self, stats: FabricStats) {
+        self.fabric = Some(stats);
+    }
+
+    /// Record one control-plane unload and how many worker-held
+    /// instances it released.
+    pub fn record_unload(&mut self, released: u64) {
+        self.unload_requests += 1;
+        self.proactive_releases += released;
     }
 
     pub fn record_response(&mut self, samples: usize, latency: Duration, queue: Duration, ok: bool) {
@@ -141,6 +164,10 @@ impl ServingMetrics {
             self.decode_fast_path,
             self.decode_voted,
         );
+        out.push_str(&format!(
+            "\nunloads: proactive={} worker-releases={}",
+            self.unload_requests, self.proactive_releases,
+        ));
         for (model, s) in &self.per_model {
             out.push_str(&format!(
                 "\nmodel={model}: batches={} decode fast-path={} voted={} \
@@ -164,6 +191,12 @@ impl ServingMetrics {
                     m.model, m.plans, m.bytes, m.hits, m.misses,
                 ));
             }
+        }
+        if let Some(f) = &self.fabric {
+            out.push_str(&format!(
+                "\nfabric: threads={} helpers={} workers={} budget={} jobs={} tasks={}",
+                f.total_threads, f.helper_threads, f.workers, f.budget, f.jobs, f.tasks,
+            ));
         }
         out
     }
@@ -204,10 +237,24 @@ mod tests {
             StoreStats { builds: 16, hits: 48, evicted: 0, resident_plans: 16, resident_bytes: 4096 },
             vec![ModelPlanStats { model: "mlp".into(), hits: 9, misses: 3, plans: 3, bytes: 1024 }],
         );
+        m.record_unload(2);
+        m.set_fabric(FabricStats {
+            helper_threads: 7,
+            total_threads: 8,
+            workers: 4,
+            budget: 2,
+            jobs: 11,
+            tasks: 120,
+        });
         let rep = m.report(Duration::from_secs(1));
         // global decode line precedes per-model lines (report parsers key
         // on the first `fast-path=` occurrence)
         assert!(rep.find("decode: fast-path=0").unwrap() < rep.find("model=bert").unwrap());
+        assert!(rep.contains("unloads: proactive=1 worker-releases=2"), "{rep}");
+        assert!(
+            rep.contains("fabric: threads=8 helpers=7 workers=4 budget=2 jobs=11 tasks=120"),
+            "{rep}"
+        );
         // BTreeMap => stable alphabetical model order
         assert!(rep.find("model=bert").unwrap() < rep.find("model=mlp").unwrap());
         assert!(rep.contains("model=mlp: batches=2 decode fast-path=150 voted=4"));

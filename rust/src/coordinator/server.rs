@@ -2,20 +2,32 @@
 //! robin tile scheduler) feeding a pool of worker threads, each owning a
 //! simulated analog core over *shared* read-only state: one
 //! `ModelRegistry` (every worker clones `Arc<dyn Model>` — weights exist
-//! once) and one `PlanStore` (every layer's `RnsPlan` exists once,
-//! whichever worker builds it first; `Model::warm` from W workers
-//! deduplicates to one build per layer).
+//! once), one `PlanStore` (every layer's `RnsPlan` exists once, whichever
+//! worker builds it first; `Model::warm` from W workers deduplicates to
+//! one build per layer), and — for native RNS backends — one
+//! `ExecutionFabric` (every worker's engine fans GEMM shards onto one
+//! process-wide `WorkerPool` under a per-worker helper budget, so total
+//! fan-out threads are bounded by cores − 1 regardless of W).
 //!
 //! Engines wrapping PJRT state are not `Send`, so every worker constructs
 //! its own backend *inside* its thread — mirroring how a real deployment
 //! pins one accelerator context per worker.  The RRNS detect→recompute
 //! loop (paper §IV) runs inside the core; its fault counters are merged
 //! into the serving metrics — globally and per model — and the plan
-//! store's hit/miss/residency counters land in the shutdown report.
+//! store's and fabric's counters land in the shutdown report.
+//!
+//! **Control plane.**  Alongside each worker's batch channel runs a
+//! control channel (std mpsc has no select, so workers poll it between
+//! batches and while idle-waiting).  `Coordinator::unload_model` uses it
+//! to *proactively* release worker-held state — each worker drops its
+//! cached `Arc<dyn Model>` and stale plan adoptions and acks, so an
+//! unloaded model's memory is freed even if no worker ever sees the name
+//! again — and `shutdown` drains workers through the same channel (a
+//! `Shutdown` control message; queued batches still complete first).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -23,10 +35,12 @@ use std::time::{Duration, Instant};
 use crate::analog::{FixedPointCore, Fp32Backend, GemmBackend, NoiseModel, RnsCore, RnsCoreConfig};
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
 use crate::coordinator::metrics::ServingMetrics;
-use crate::coordinator::router::RoutingKind;
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestId};
+use crate::coordinator::router::RoutingKind;
 use crate::nn::models::{Batch, Model, ModelRegistry};
+use crate::runtime::fabric::{ExecutionFabric, FabricHandle};
 use crate::runtime::pjrt::{PjrtEngine, PjrtRuntime};
+use crate::runtime::{ModularGemmEngine, NativeEngine};
 use crate::store::{PlanStore, DEFAULT_UNTAGGED_CAPACITY};
 use crate::tensor::{MatF, Nhwc};
 
@@ -57,6 +71,9 @@ pub struct CoordinatorConfig {
     /// LRU bound for *untagged* plans in the shared plan store (served
     /// models' plans are tagged and pinned until unload).
     pub plan_store_capacity: usize,
+    /// Total thread budget for the shared execution fabric (native RNS
+    /// backends): 0 = auto (`RNS_NATIVE_THREADS`, else core count).
+    pub fabric_threads: usize,
 }
 
 impl CoordinatorConfig {
@@ -70,13 +87,39 @@ impl CoordinatorConfig {
             seed: 0,
             routing: RoutingKind::default(),
             plan_store_capacity: DEFAULT_UNTAGGED_CAPACITY,
+            fabric_threads: 0,
         }
     }
 }
 
-enum WorkerMsg {
-    Batch(FormedBatch),
+/// How often an idle worker re-checks its control channel while blocked
+/// waiting for batches (std mpsc has no select; 20 ms bounds proactive-
+/// unload latency without measurable idle cost).
+const CONTROL_POLL: Duration = Duration::from_millis(20);
+
+/// How long `unload_model` waits for each worker's release ack before
+/// giving up (a worker mid-forward acks after its current batch).
+const UNLOAD_ACK_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Control-plane messages delivered alongside the batch stream.
+enum ControlMsg {
+    /// Drop the cached `Arc<dyn Model>` and per-model backend state for
+    /// `model`; reply on `ack`.
+    Unload { model: String, ack: Sender<UnloadAck> },
+    /// Finish every already-queued batch, then exit.
     Shutdown,
+}
+
+/// One worker's reply to `ControlMsg::Unload`.
+struct UnloadAck {
+    /// Whether the worker actually held (and dropped) a cached instance.
+    dropped: bool,
+}
+
+/// What the message pump hands the worker's event handler.
+enum WorkerEvent {
+    Batch(FormedBatch),
+    Unload { model: String, ack: Sender<UnloadAck> },
 }
 
 /// Handle to a running coordinator.
@@ -86,12 +129,17 @@ pub struct Coordinator {
     next_id: AtomicU64,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// Per-worker control channels (proactive unload + shutdown drain).
+    control_txs: Vec<Sender<ControlMsg>>,
     metrics: Arc<Mutex<ServingMetrics>>,
     /// Shared read-only plan store (one `RnsPlan` per layer across all
     /// workers); its counters land in the shutdown report.
     store: Arc<PlanStore>,
     /// Shared load-once model instances (one weight copy across workers).
     registry: Arc<ModelRegistry>,
+    /// Shared execution fabric (native RNS backends only): one pool of
+    /// fan-out threads for all workers, with per-worker budgets.
+    fabric: Option<Arc<ExecutionFabric>>,
     started: Instant,
 }
 
@@ -102,27 +150,42 @@ impl Coordinator {
         let (done_tx, done_rx) = mpsc::channel::<usize>();
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
         // built once at startup, handed to every worker: the store is the
-        // cross-worker plan memory, the registry the cross-worker weights
+        // cross-worker plan memory, the registry the cross-worker
+        // weights, the fabric the cross-worker thread budget
         let store = Arc::new(PlanStore::with_capacity(cfg.plan_store_capacity));
         let registry = Arc::new(ModelRegistry::new(&cfg.artifacts_dir));
+        let fabric = match &cfg.backend {
+            BackendKind::Rns { .. } => Some(Arc::new(if cfg.fabric_threads > 0 {
+                ExecutionFabric::with_threads(cfg.fabric_threads, cfg.workers.max(1))
+            } else {
+                ExecutionFabric::for_workers(cfg.workers.max(1))
+            })),
+            // FP32 / fixed-point / PJRT backends never touch the native
+            // parallel engine — no fan-out threads to share
+            _ => None,
+        };
 
         let mut worker_txs = Vec::new();
+        let mut control_txs = Vec::new();
         let mut workers = Vec::new();
         for wid in 0..cfg.workers.max(1) {
-            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            let (tx, rx) = mpsc::channel::<FormedBatch>();
+            let (ctrl_tx, ctrl_rx) = mpsc::channel::<ControlMsg>();
             worker_txs.push(tx);
-            let cfg_w = cfg.clone();
-            let resp_tx = resp_tx.clone();
-            let done_tx = done_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            let store = Arc::clone(&store);
-            let registry = Arc::clone(&registry);
+            control_txs.push(ctrl_tx);
+            let shared = WorkerShared {
+                cfg: cfg.clone(),
+                store: Arc::clone(&store),
+                registry: Arc::clone(&registry),
+                resp_tx: resp_tx.clone(),
+                done_tx: done_tx.clone(),
+                metrics: Arc::clone(&metrics),
+                fabric: fabric.as_ref().map(|f| f.handle()),
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rns-worker-{wid}"))
-                    .spawn(move || {
-                        worker_loop(wid, cfg_w, store, registry, rx, resp_tx, done_tx, metrics)
-                    })
+                    .spawn(move || worker_loop(wid, shared, rx, ctrl_rx))
                     .expect("spawn worker"),
             );
         }
@@ -143,9 +206,11 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             dispatcher: Some(dispatcher),
             workers,
+            control_txs,
             metrics,
             store,
             registry,
+            fabric,
             started: Instant::now(),
         }
     }
@@ -161,29 +226,62 @@ impl Coordinator {
         Arc::clone(&self.registry)
     }
 
-    /// Drop a model's shared weights and evict its plans from the store.
-    /// Workers re-validate their cached instance against the registry on
-    /// every batch, so the unload takes effect mid-session: a later
-    /// request for the name reloads fresh weights and re-warms fresh
-    /// plans.  A batch already in flight when the unload lands finishes
-    /// against the old instance; the store's draining state demotes any
-    /// plans it rebuilds to untagged LRU entries, so they cannot stay
-    /// pinned under the unloaded tag (a fresh warm re-activates the name
-    /// — see `PlanStore::activate_model`; a racing in-flight batch on
-    /// another worker after that re-warm can still pin a stale plan, a
-    /// narrow window bounded by one model's plan count and cleared by
-    /// the next unload).  A worker that never sees the model again
-    /// releases its stale clone at shutdown (proactive release needs a
-    /// control message — ROADMAP PR-3 follow-up).  Returns how many
-    /// plans were evicted.
+    /// The shared execution fabric, if this backend uses one (native RNS
+    /// cores).  Exposed so tests can assert the process-wide thread
+    /// bound and ops tooling can read utilization.
+    pub fn fabric(&self) -> Option<Arc<ExecutionFabric>> {
+        self.fabric.as_ref().map(Arc::clone)
+    }
+
+    /// Drop a model's shared weights, evict its plans from the store,
+    /// and — through the control plane — make every worker release its
+    /// cached `Arc<dyn Model>` and stale plan adoptions *now*, without
+    /// waiting for the name to be requested again.
+    ///
+    /// Ordering: the store unloads first (the name starts draining, so a
+    /// batch racing the unload cannot re-pin dead-allocation plans),
+    /// then the registry, then the control fan-out.  Each worker acks
+    /// after its current batch at the latest; once every worker has
+    /// acked, nothing can reference the old generation anymore, so the
+    /// store's draining state is ended here (keyed off the acks) instead
+    /// of waiting for the next warm's `activate_model`.  If an ack times
+    /// out the name stays draining — the conservative pre-control-plane
+    /// behavior.  Returns how many plans were evicted.
     pub fn unload_model(&self, name: &str) -> usize {
-        // store first: once the name is draining, a worker that reloads
-        // the model cannot have its fresh warm pinned and then evicted by
-        // a store unload that lands late (registry-first would open that
-        // window, leaving the fresh instance's plans demoted forever —
-        // `warmed` stays true so no worker would re-activate the name)
         let evicted = self.store.unload_model(name);
         self.registry.unload(name);
+        let (ack_tx, ack_rx) = mpsc::channel();
+        let mut sent = 0usize;
+        for tx in &self.control_txs {
+            if tx.send(ControlMsg::Unload { model: name.to_string(), ack: ack_tx.clone() }).is_ok() {
+                sent += 1;
+            }
+        }
+        drop(ack_tx);
+        let mut acked = 0usize;
+        let mut released = 0u64;
+        while acked < sent {
+            match ack_rx.recv_timeout(UNLOAD_ACK_TIMEOUT) {
+                Ok(ack) => {
+                    acked += 1;
+                    if ack.dropped {
+                        released += 1;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        if acked == sent {
+            // every worker released: a later request for the name loads
+            // a fresh instance and pins fresh plans as usual
+            self.store.activate_model(name);
+        } else {
+            crate::log_warn!(
+                "coordinator",
+                "unload `{name}`: only {acked}/{sent} workers acked; name stays draining"
+            );
+        }
+        self.metrics.lock().unwrap().record_unload(released);
         evicted
     }
 
@@ -209,12 +307,18 @@ impl Coordinator {
         (0..n).filter_map(|_| self.recv()).collect()
     }
 
-    /// Stop accepting requests, drain workers, and return the final report
-    /// (including the plan store's hit/miss counters, per model).
+    /// Stop accepting requests, drain workers through the control plane,
+    /// and return the final report (plan store, fabric, and per-model
+    /// counters included).
     pub fn shutdown(mut self) -> String {
         drop(self.submit_tx.take()); // dispatcher sees the channel close
         if let Some(d) = self.dispatcher.take() {
             d.join().ok();
+        }
+        // every batch is now queued at some worker: drain via the control
+        // plane (workers finish their queues before exiting)
+        for tx in &self.control_txs {
+            tx.send(ControlMsg::Shutdown).ok();
         }
         for w in self.workers.drain(..) {
             w.join().ok();
@@ -222,13 +326,16 @@ impl Coordinator {
         let wall = self.started.elapsed();
         let mut m = self.metrics.lock().unwrap();
         m.set_plan_store(self.store.stats(), self.store.model_stats());
+        if let Some(f) = &self.fabric {
+            m.set_fabric(f.stats());
+        }
         m.report(wall)
     }
 }
 
 fn dispatcher_loop(
     submit_rx: Receiver<InferenceRequest>,
-    worker_txs: Vec<Sender<WorkerMsg>>,
+    worker_txs: Vec<Sender<FormedBatch>>,
     batcher_cfg: BatcherConfig,
     routing: RoutingKind,
     done_rx: Receiver<usize>,
@@ -254,12 +361,11 @@ fn dispatcher_loop(
             metrics.lock().unwrap().record_batch(batch.input.len());
             let wid = policy.pick(worker_txs.len());
             policy.on_dispatch(wid);
-            worker_txs[wid].send(WorkerMsg::Batch(batch)).ok();
+            worker_txs[wid].send(batch).ok();
         }
     }
-    for tx in &worker_txs {
-        tx.send(WorkerMsg::Shutdown).ok();
-    }
+    // dropping worker_txs closes the batch channels; the coordinator's
+    // shutdown (or teardown) ends the workers through the control plane
 }
 
 /// Construct the configured backend with a private plan store (the CLI /
@@ -270,13 +376,25 @@ pub fn build_backend(cfg: &CoordinatorConfig, wid: usize) -> Result<Box<dyn Gemm
     build_backend_with_store(cfg, wid, Arc::new(PlanStore::with_capacity(cfg.plan_store_capacity)))
 }
 
-/// Construct the configured backend over a shared plan store (the
-/// coordinator worker path: every worker's core borrows from one store,
-/// so each layer's plan is built once and shared as an `Arc`).
+/// `build_backend_with_runtime` without a fabric: the native engine owns
+/// a private pool (standalone cores, sweeps).
 pub fn build_backend_with_store(
     cfg: &CoordinatorConfig,
     wid: usize,
     store: Arc<PlanStore>,
+) -> Result<Box<dyn GemmBackend>, String> {
+    build_backend_with_runtime(cfg, wid, store, None)
+}
+
+/// Construct the configured backend over the coordinator's shared
+/// runtime state: the plan store (every worker's core borrows plans from
+/// one store) and, for native RNS cores, the execution fabric (every
+/// worker's engine fans out on one shared pool under its budget).
+pub fn build_backend_with_runtime(
+    cfg: &CoordinatorConfig,
+    wid: usize,
+    store: Arc<PlanStore>,
+    fabric: Option<FabricHandle>,
 ) -> Result<Box<dyn GemmBackend>, String> {
     let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9E37_79B9);
     match &cfg.backend {
@@ -285,11 +403,16 @@ pub fn build_backend_with_store(
             Ok(Box::new(FixedPointCore::new(*bits, cfg.h, NoiseModel::None, seed)))
         }
         BackendKind::Rns { bits, redundant, attempts, noise } => {
-            let core = RnsCore::with_store(
+            let engine: Box<dyn ModularGemmEngine> = match fabric {
+                Some(handle) => Box::new(NativeEngine::with_fabric(handle)),
+                None => Box::new(NativeEngine::default()),
+            };
+            let core = RnsCore::with_engine_and_store(
                 RnsCoreConfig::for_bits(*bits, cfg.h)
                     .with_noise(*noise)
                     .with_rrns(*redundant, *attempts)
                     .with_seed(seed),
+                engine,
                 store,
             )?;
             Ok(Box::new(core))
@@ -314,143 +437,231 @@ fn split_logits(all: &MatF, offset: usize, n: usize) -> MatF {
     all.slice_rows(offset, offset + n)
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    wid: usize,
+/// Read-only state every worker shares (one clone per worker thread).
+struct WorkerShared {
     cfg: CoordinatorConfig,
     store: Arc<PlanStore>,
     registry: Arc<ModelRegistry>,
-    rx: Receiver<WorkerMsg>,
     resp_tx: Sender<InferenceResponse>,
     done_tx: Sender<usize>,
     metrics: Arc<Mutex<ServingMetrics>>,
+    fabric: Option<FabricHandle>,
+}
+
+/// Per-worker cumulative-counter snapshots, so each batch reports deltas
+/// into the shared metrics (multi-worker totals sum instead of
+/// last-writer-wins).
+#[derive(Default)]
+struct WorkerCounters {
+    faults: u64,
+    corrected: u64,
+    plans: u64,
+    fast: u64,
+    voted: u64,
+}
+
+/// Interleave one worker's batch stream with its control stream: control
+/// messages (proactive unload, shutdown) are handled between batches —
+/// ahead of any queued batches — and a `Shutdown` still drains every
+/// batch already accepted before the pump returns.
+fn worker_message_pump(
+    rx: &Receiver<FormedBatch>,
+    ctrl_rx: &Receiver<ControlMsg>,
+    mut on_event: impl FnMut(WorkerEvent),
+) {
+    let mut batches_open = true;
+    loop {
+        match ctrl_rx.try_recv() {
+            Ok(ControlMsg::Shutdown) => break,
+            Ok(ControlMsg::Unload { model, ack }) => {
+                on_event(WorkerEvent::Unload { model, ack });
+                continue; // drain all pending control before the next batch
+            }
+            Err(TryRecvError::Empty) => {}
+            Err(TryRecvError::Disconnected) => {
+                if !batches_open {
+                    break; // both channels gone: coordinator dropped
+                }
+            }
+        }
+        if batches_open {
+            match rx.recv_timeout(CONTROL_POLL) {
+                Ok(batch) => on_event(WorkerEvent::Batch(batch)),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => batches_open = false,
+            }
+        } else {
+            // dispatcher gone: only control traffic remains, block on it
+            match ctrl_rx.recv() {
+                Ok(ControlMsg::Shutdown) | Err(_) => break,
+                Ok(ControlMsg::Unload { model, ack }) => {
+                    on_event(WorkerEvent::Unload { model, ack });
+                }
+            }
+        }
+    }
+    // a shutdown must not drop batches the dispatcher already handed us
+    while let Ok(batch) = rx.try_recv() {
+        on_event(WorkerEvent::Batch(batch));
+    }
+}
+
+fn worker_loop(
+    wid: usize,
+    sh: WorkerShared,
+    rx: Receiver<FormedBatch>,
+    ctrl_rx: Receiver<ControlMsg>,
 ) {
     // Backend is constructed in-thread (PJRT state is !Send), but borrows
-    // the shared plan store; models come as shared Arcs from the registry.
-    let mut backend = match build_backend_with_store(&cfg, wid, Arc::clone(&store)) {
-        Ok(b) => {
-            crate::log_debug!("worker", "worker {wid} ready with backend {}", b.name());
-            b
-        }
-        Err(e) => {
-            crate::log_error!("worker", "worker {wid} backend construction failed: {e}");
-            // fail every batch with the construction error
-            while let Ok(WorkerMsg::Batch(batch)) = rx.recv() {
-                fail_batch(wid, batch, &e, &resp_tx, &metrics);
+    // the shared plan store + fabric; models come as shared Arcs from the
+    // registry.
+    let mut backend =
+        match build_backend_with_runtime(&sh.cfg, wid, Arc::clone(&sh.store), sh.fabric.clone()) {
+            Ok(b) => {
+                crate::log_debug!("worker", "worker {wid} ready with backend {}", b.name());
+                b
             }
+            Err(e) => {
+                crate::log_error!("worker", "worker {wid} backend construction failed: {e}");
+                // no backend: fail every batch with the construction
+                // error, but keep serving the control plane so
+                // unload_model never hangs on a dead worker
+                worker_message_pump(&rx, &ctrl_rx, |ev| match ev {
+                    WorkerEvent::Batch(batch) => {
+                        fail_batch(wid, batch, &e, &sh.resp_tx, &sh.metrics)
+                    }
+                    WorkerEvent::Unload { ack, .. } => {
+                        ack.send(UnloadAck { dropped: false }).ok();
+                    }
+                });
+                return;
+            }
+        };
+    let mut models: HashMap<String, Arc<dyn Model>> = HashMap::new();
+    let mut counters = WorkerCounters::default();
+    worker_message_pump(&rx, &ctrl_rx, |ev| match ev {
+        WorkerEvent::Batch(batch) => {
+            serve_batch(wid, &sh, backend.as_mut(), &mut models, &mut counters, batch)
+        }
+        WorkerEvent::Unload { model, ack } => {
+            // proactive release: drop the shared-instance clone now (the
+            // registry and store were already unloaded by the
+            // coordinator), and let the backend forget its per-model
+            // state — no request for the name is needed anymore
+            let dropped = models.remove(&model).is_some();
+            backend.release_model(&model);
+            crate::log_debug!(
+                "worker",
+                "worker {wid}: control unload `{model}` (held instance: {dropped})"
+            );
+            ack.send(UnloadAck { dropped }).ok();
+        }
+    });
+}
+
+fn serve_batch(
+    wid: usize,
+    sh: &WorkerShared,
+    backend: &mut dyn GemmBackend,
+    models: &mut HashMap<String, Arc<dyn Model>>,
+    counters: &mut WorkerCounters,
+    batch: FormedBatch,
+) {
+    // tag plan lookups with the model for per-model store counters
+    // (and so served plans are pinned until model unload)
+    backend.set_model_tag(&batch.model);
+    // fetch the shared instance through the registry every batch (one
+    // mutex lock — trivial against a forward pass): this is what lets
+    // `Coordinator::unload_model` take effect mid-session.  A model
+    // unloaded and requested again reloads fresh, and the pointer
+    // comparison below detects the new instance and re-warms it.
+    let model = match sh.registry.get_or_load(&batch.model) {
+        Ok(m) => m,
+        Err(e) => {
+            crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
+            fail_batch(wid, batch, &e, &sh.resp_tx, &sh.metrics);
             return;
         }
     };
-    let mut models: HashMap<String, Arc<dyn Model>> = HashMap::new();
-    let mut faults_before = 0u64;
-    let mut corrected_before = 0u64;
-    let mut plans_before = 0u64;
-    let mut fast_before = 0u64;
-    let mut voted_before = 0u64;
-
-    while let Ok(msg) = rx.recv() {
-        let batch = match msg {
-            WorkerMsg::Batch(b) => b,
-            WorkerMsg::Shutdown => break,
-        };
-        // tag plan lookups with the model for per-model store counters
-        // (and so served plans are pinned until model unload)
-        backend.set_model_tag(&batch.model);
-        // fetch the shared instance through the registry every batch (one
-        // mutex lock — trivial against a forward pass): this is what lets
-        // `Coordinator::unload_model` take effect mid-session.  A model
-        // unloaded and requested again reloads fresh, and the pointer
-        // comparison below detects the new instance and re-warms it.
-        let model = match registry.get_or_load(&batch.model) {
-            Ok(m) => m,
-            Err(e) => {
-                crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
-                fail_batch(wid, batch, &e, &resp_tx, &metrics);
-                continue;
-            }
-        };
-        let warmed = models
-            .get(&batch.model)
-            .map_or(false, |prev| Arc::ptr_eq(prev, &model));
-        if !warmed {
-            // a fresh instance ends any draining state from a prior
-            // unload, so this generation's plans pin again (stale
-            // rebuilds from batches that raced the unload stay
-            // LRU-bounded instead of leaking as pinned entries)
-            store.activate_model(&batch.model);
-            // warm the per-layer RNS plans: the shared store deduplicates,
-            // so W workers warming the same model build each plan exactly
-            // once — the other W-1 warms are store hits that only adopt
-            // (and charge their core's one-time weight-DAC energy)
-            model.warm(backend.as_mut());
-            crate::log_debug!(
-                "worker",
-                "worker {wid}: warmed `{}` ({} layer plans adopted)",
-                batch.model,
-                backend.plans_built()
-            );
-            // replacing a stale entry also drops this worker's Arc to an
-            // unloaded instance, releasing its share of the old weights
-            models.insert(batch.model.clone(), Arc::clone(&model));
-        }
-        let picked_up = Instant::now();
-        let logits = model.forward(&batch.input, backend.as_mut());
-        // fault counters from the RRNS core, per batch
-        let (detected, corrected, fast_path, voted) = backend_fault_counts(backend.as_ref());
-        let batch_faults = detected.saturating_sub(faults_before);
-        faults_before = detected;
-        // all per-worker cumulative counters accumulate into the shared
-        // metrics as deltas (like plans_built) so multi-worker totals sum
-        // across workers instead of last-writer-wins
-        let corrected_delta = corrected.saturating_sub(corrected_before);
-        corrected_before = corrected;
-        let fast_delta = fast_path.saturating_sub(fast_before);
-        fast_before = fast_path;
-        let voted_delta = voted.saturating_sub(voted_before);
-        voted_before = voted;
-        // plans adopted since the last batch: warm-time adoptions land in
-        // the first delta, and a steady-state delta > 0 means a layer was
-        // first seen mid-request (a warm() gap worth fixing)
-        let plans_now = backend.plans_built();
-        let plans_delta = plans_now.saturating_sub(plans_before);
-        plans_before = plans_now;
-        {
-            let mut m = metrics.lock().unwrap();
-            m.faults_detected += batch_faults;
-            m.faults_corrected += corrected_delta;
-            m.decode_fast_path += fast_delta;
-            m.decode_voted += voted_delta;
-            m.plans_built += plans_delta;
-            // the same deltas, attributed to the model this batch ran —
-            // a worker serves one batch (= one model) at a time, so the
-            // counter deltas since the previous batch belong to it
-            m.record_model_batch(
-                &batch.model,
-                batch_faults,
-                corrected_delta,
-                fast_delta,
-                voted_delta,
-                plans_delta,
-            );
-        }
-        for (req, offset) in batch.members {
-            let n = req.num_samples();
-            let latency = req.submitted_at.elapsed();
-            let queue_time = picked_up.duration_since(req.submitted_at);
-            metrics.lock().unwrap().record_response(n, latency, queue_time, true);
-            resp_tx
-                .send(InferenceResponse {
-                    id: req.id,
-                    result: Ok(split_logits(&logits, offset, n)),
-                    queue_time,
-                    latency,
-                    worker: wid,
-                    faults_detected: batch_faults,
-                })
-                .ok();
-        }
-        done_tx.send(wid).ok();
+    let warmed = models.get(&batch.model).is_some_and(|prev| Arc::ptr_eq(prev, &model));
+    if !warmed {
+        // a fresh instance ends any draining state from a prior unload,
+        // so this generation's plans pin again (stale rebuilds from
+        // batches that raced the unload stay LRU-bounded instead of
+        // leaking as pinned entries)
+        sh.store.activate_model(&batch.model);
+        // warm the per-layer RNS plans: the shared store deduplicates,
+        // so W workers warming the same model build each plan exactly
+        // once — the other W-1 warms are store hits that only adopt
+        // (and charge their core's one-time weight-DAC energy)
+        model.warm(backend);
+        crate::log_debug!(
+            "worker",
+            "worker {wid}: warmed `{}` ({} layer plans adopted)",
+            batch.model,
+            backend.plans_built()
+        );
+        // replacing a stale entry also drops this worker's Arc to an
+        // unloaded instance, releasing its share of the old weights
+        models.insert(batch.model.clone(), Arc::clone(&model));
     }
+    let picked_up = Instant::now();
+    let logits = model.forward(&batch.input, backend);
+    // fault counters from the RRNS core, per batch
+    let (detected, corrected, fast_path, voted) = backend_fault_counts(backend);
+    let batch_faults = detected.saturating_sub(counters.faults);
+    counters.faults = detected;
+    // all per-worker cumulative counters accumulate into the shared
+    // metrics as deltas (like plans_built) so multi-worker totals sum
+    // across workers instead of last-writer-wins
+    let corrected_delta = corrected.saturating_sub(counters.corrected);
+    counters.corrected = corrected;
+    let fast_delta = fast_path.saturating_sub(counters.fast);
+    counters.fast = fast_path;
+    let voted_delta = voted.saturating_sub(counters.voted);
+    counters.voted = voted;
+    // plans adopted since the last batch: warm-time adoptions land in
+    // the first delta, and a steady-state delta > 0 means a layer was
+    // first seen mid-request (a warm() gap worth fixing)
+    let plans_now = backend.plans_built();
+    let plans_delta = plans_now.saturating_sub(counters.plans);
+    counters.plans = plans_now;
+    {
+        let mut m = sh.metrics.lock().unwrap();
+        m.faults_detected += batch_faults;
+        m.faults_corrected += corrected_delta;
+        m.decode_fast_path += fast_delta;
+        m.decode_voted += voted_delta;
+        m.plans_built += plans_delta;
+        // the same deltas, attributed to the model this batch ran — a
+        // worker serves one batch (= one model) at a time, so the
+        // counter deltas since the previous batch belong to it
+        m.record_model_batch(
+            &batch.model,
+            batch_faults,
+            corrected_delta,
+            fast_delta,
+            voted_delta,
+            plans_delta,
+        );
+    }
+    for (req, offset) in batch.members {
+        let n = req.num_samples();
+        let latency = req.submitted_at.elapsed();
+        let queue_time = picked_up.duration_since(req.submitted_at);
+        sh.metrics.lock().unwrap().record_response(n, latency, queue_time, true);
+        sh.resp_tx
+            .send(InferenceResponse {
+                id: req.id,
+                result: Ok(split_logits(&logits, offset, n)),
+                queue_time,
+                latency,
+                worker: wid,
+                faults_detected: batch_faults,
+            })
+            .ok();
+    }
+    sh.done_tx.send(wid).ok();
 }
 
 fn backend_fault_counts(backend: &dyn GemmBackend) -> (u64, u64, u64, u64) {
@@ -547,6 +758,8 @@ mod tests {
         assert!(report.contains("plan store: resident=3"), "{report}");
         assert!(report.contains("plan store model=mlp:"), "{report}");
         assert!(report.contains("model=mlp: batches="), "{report}");
+        // native RNS workers share one fabric and its line is reported
+        assert!(report.contains("fabric: threads="), "{report}");
     }
 
     #[test]
@@ -577,5 +790,18 @@ mod tests {
             assert_eq!(r.result.as_ref().unwrap().rows, 2);
         }
         coord.shutdown();
+    }
+
+    #[test]
+    fn unload_without_workers_holding_the_model_is_clean() {
+        // control-plane unload of a never-loaded name: no acks claim a
+        // drop, no plans evicted, the coordinator keeps serving
+        let cfg = CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent");
+        let coord = Coordinator::start(cfg);
+        assert_eq!(coord.unload_model("mlp"), 0);
+        coord.submit("nope", Batch::Images(Nhwc::zeros(1, 2, 2, 1)));
+        assert!(coord.recv_timeout(Duration::from_secs(5)).is_some());
+        let report = coord.shutdown();
+        assert!(report.contains("unloads: proactive=1 worker-releases=0"), "{report}");
     }
 }

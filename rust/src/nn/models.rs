@@ -118,6 +118,26 @@ impl Mlp {
         }
         Ok(Mlp { ws, bs, acc: stored_accuracy(store) })
     }
+
+    /// Synthetic-weight MLP (seeded uniform weights in ±0.1, no
+    /// artifacts): lets drift campaigns, examples, and tests push a
+    /// real full-model forward through a backend without the python
+    /// `make artifacts` step.  Deterministic in `seed`.
+    pub fn synthetic(seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::seed_from(seed);
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for i in 0..MLP_DIMS.len() - 1 {
+            let (r, c) = (MLP_DIMS[i], MLP_DIMS[i + 1]);
+            ws.push(MatF::from_vec(
+                r,
+                c,
+                (0..r * c).map(|_| rng.uniform_f32(-0.1, 0.1)).collect(),
+            ));
+            bs.push((0..c).map(|_| rng.uniform_f32(-0.1, 0.1)).collect());
+        }
+        Mlp { ws, bs, acc: 0.0 }
+    }
 }
 
 impl Model for Mlp {
@@ -514,9 +534,20 @@ impl ModelRegistry {
         result
     }
 
+    /// Peek at a loaded instance without triggering a load (`None` if
+    /// the name is absent, failed, or still loading).  The release hook
+    /// the coordinator's proactive-unload test builds on: grab a clone,
+    /// unload, and watch `Arc::strong_count` fall as workers ack.
+    pub fn peek(&self, name: &str) -> Option<std::sync::Arc<dyn Model>> {
+        let models = self.models.lock().unwrap();
+        models.get(name)?.get()?.as_ref().ok().cloned()
+    }
+
     /// Drop the shared instance; weights free once the last worker's
     /// clone drops.  Pair with `PlanStore::unload_model` to evict the
-    /// model's plans too.  Returns whether a loaded instance was
+    /// model's plans too (`Coordinator::unload_model` does both and then
+    /// releases worker-held clones through the control plane).  Returns
+    /// whether a loaded instance was
     /// dropped.  A cell whose load is still in flight is left
     /// registered: removing it would orphan the instance the loader is
     /// about to hand its caller (a second request would then load a
@@ -624,6 +655,7 @@ mod tests {
         assert!(reg.get_or_load("mlp").is_err(), "no artifacts -> load error");
         assert!(reg.get_or_load("no-such-model").is_err());
         assert!(reg.loaded().is_empty());
+        assert!(reg.peek("mlp").is_none(), "failed loads are not peekable");
         assert!(!reg.unload("mlp"));
         // with real artifacts the shared instance is pointer-equal
         let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
@@ -632,8 +664,11 @@ mod tests {
             let a = reg.get_or_load("mlp").unwrap();
             let b = reg.get_or_load("mlp").unwrap();
             assert!(std::sync::Arc::ptr_eq(&a, &b), "one load, shared Arc");
+            let p = reg.peek("mlp").expect("peek sees the loaded instance");
+            assert!(std::sync::Arc::ptr_eq(&a, &p), "peek returns the same Arc, no reload");
             assert_eq!(reg.loaded(), vec!["mlp".to_string()]);
             assert!(reg.unload("mlp"));
+            assert!(reg.peek("mlp").is_none(), "unload drops the registry's clone");
         }
     }
 

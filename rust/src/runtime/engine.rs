@@ -7,7 +7,10 @@
 //!     run on a persistent `WorkerPool` (pool.rs) by default — threads
 //!     spawned once and parked between calls — with the original per-call
 //!     `std::thread::scope` fan-out kept as `SpawnMode::Scoped` for the
-//!     bench baseline (the crate is dependency-free — no rayon).
+//!     bench baseline (the crate is dependency-free — no rayon).  Under
+//!     the coordinator, engines instead borrow the process-wide shared
+//!     pool through a `FabricHandle` (fabric.rs) so W workers share one
+//!     set of fan-out threads under per-worker budgets.
 //!     Used by the large accuracy sweeps (fast, no shape constraints).
 //!   * `PjrtEngine` (pjrt.rs) — loads the AOT-compiled pallas kernel from
 //!     `artifacts/rns_mvm_b*.hlo.txt` and executes it on the PJRT CPU
@@ -27,6 +30,7 @@
 //! stream — so prepared plans, parallel fan-out, and the decode fast path
 //! compose without any cross-layer ordering assumptions.
 
+use crate::runtime::fabric::FabricHandle;
 use crate::runtime::plan::PreparedWeights;
 use crate::runtime::pool::WorkerPool;
 use crate::tensor::gemm::{gemm_mod, gemm_mod_staged};
@@ -115,11 +119,18 @@ pub enum SpawnMode {
 pub struct NativeEngine {
     /// Worker-thread cap: 0 = auto (`RNS_NATIVE_THREADS` env var, else
     /// `available_parallelism`); 1 = force the serial reference path.
+    /// Ignored when a fabric handle is attached (the handle's budget is
+    /// the cap).
     pub threads: usize,
     mode: SpawnMode,
     /// Lazily created on the first parallel-eligible call, so serial
-    /// engines and sub-threshold workloads never spawn a thread.
+    /// engines and sub-threshold workloads never spawn a thread.  Never
+    /// created when `fabric` is set — the fabric owns the threads.
     pool: Option<WorkerPool>,
+    /// Shared process-wide fabric (the coordinator path): fan-outs go to
+    /// the one shared pool under this worker's helper budget instead of
+    /// a private per-engine pool.
+    fabric: Option<FabricHandle>,
 }
 
 impl Default for NativeEngine {
@@ -146,7 +157,17 @@ impl NativeEngine {
     }
 
     pub fn with_spawn_mode(threads: usize, mode: SpawnMode) -> Self {
-        NativeEngine { threads, mode, pool: None }
+        NativeEngine { threads, mode, pool: None, fabric: None }
+    }
+
+    /// Engine executing on the shared process-wide fabric: no private
+    /// pool is ever created; fan-outs are submitted to the fabric's one
+    /// `WorkerPool` under this worker's helper budget.  The coordinator
+    /// builds one fabric at startup and hands every worker's engine a
+    /// handle, so total fan-out threads stay bounded by cores − 1
+    /// however many workers are configured.
+    pub fn with_fabric(handle: FabricHandle) -> Self {
+        NativeEngine { threads: 0, mode: SpawnMode::Pool, pool: None, fabric: Some(handle) }
     }
 
     /// Fan `n_tasks` out according to the spawn mode.  `threads` is the
@@ -160,12 +181,18 @@ impl NativeEngine {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        // shared-fabric path first: the fabric owns the threads, and the
+        // handle's budget (already reflected in `threads` via
+        // effective_threads) caps this job's helpers
+        if let Some(handle) = self.fabric.clone() {
+            return handle.run_collect(workers, n_tasks, f);
+        }
         match self.mode {
             SpawnMode::Scoped => run_indexed(workers, n_tasks, f),
             SpawnMode::Pool => {
                 let pool = self.pool.get_or_insert_with(|| WorkerPool::new(threads));
                 // `workers` carries the MIN_MACS_PER_WORKER granularity:
-                // wake only that many helpers, not the whole pool
+                // admit only that many helpers, not the whole pool
                 pool.run_collect_capped(workers, n_tasks, f)
             }
         }
@@ -178,23 +205,24 @@ impl NativeEngine {
     /// entry point — including the serial short-circuit, so shrinking
     /// the cap to 1 releases a previously-built multi-helper pool.
     fn reconcile_pool(&mut self, threads: usize) {
+        if self.fabric.is_some() {
+            return; // fabric engines never own a pool to reconcile
+        }
         if self.pool.as_ref().is_some_and(|p| p.helper_threads() + 1 != threads) {
             self.pool = None;
         }
     }
 
     fn effective_threads(&self) -> usize {
+        if let Some(handle) = &self.fabric {
+            // this worker's slice of the shared fabric: budget helpers
+            // plus the submitting thread
+            return handle.concurrency();
+        }
         if self.threads > 0 {
             return self.threads;
         }
-        if let Ok(v) = std::env::var("RNS_NATIVE_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                if n > 0 {
-                    return n;
-                }
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        crate::runtime::fabric::default_total_threads()
     }
 }
 
@@ -394,6 +422,35 @@ mod tests {
             assert_eq!(b.data, w.data);
             assert_eq!(c.data, w.data);
         }
+    }
+
+    #[test]
+    fn fabric_engine_matches_serial_and_owns_no_pool() {
+        use crate::runtime::fabric::ExecutionFabric;
+        use std::sync::Arc;
+        let moduli = [255u64, 254, 253, 251];
+        let mut rng = Rng::seed_from(7);
+        let xr = rand_residues(&mut rng, &moduli, 16, 128);
+        let wr = rand_residues(&mut rng, &moduli, 128, 64);
+        let prepared = PreparedWeights::new(wr.clone(), &moduli);
+        let want = NativeEngine::serial().matmul_mod_prepared(&xr, &prepared);
+        let fabric = Arc::new(ExecutionFabric::with_threads(4, 2));
+        let mut eng = NativeEngine::with_fabric(fabric.handle());
+        for round in 0..3 {
+            let got = eng.matmul_mod_prepared(&xr, &prepared);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.data, w.data, "fabric round {round}");
+            }
+        }
+        let gu = eng.matmul_mod(&xr, &wr, &moduli);
+        let wu = NativeEngine::serial().matmul_mod(&xr, &wr, &moduli);
+        for (g, w) in gu.iter().zip(&wu) {
+            assert_eq!(g.data, w.data);
+        }
+        // the fabric owns the threads: the engine never built a private
+        // pool, and the fabric saw this engine's fan-outs
+        assert!(eng.pool.is_none(), "fabric engine must not own a pool");
+        assert!(fabric.stats().jobs > 0, "fan-outs must route through the fabric");
     }
 
     #[test]

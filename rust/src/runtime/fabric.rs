@@ -1,0 +1,235 @@
+//! Process-wide execution fabric: one shared `WorkerPool` for every
+//! coordinator worker, with per-worker helper budgets.
+//!
+//! Before PR 4 each worker's `NativeEngine` lazily built a private
+//! `WorkerPool`, so a coordinator with W workers parked
+//! W × (threads − 1) helper threads machine-wide — harmless while
+//! parked, but an oversubscription the moment several workers fan out at
+//! once, and a thread-count footprint that grew with W instead of with
+//! the machine.  The fabric inverts the ownership: the `Coordinator`
+//! builds **one** `ExecutionFabric` at startup (pool width =
+//! `RNS_NATIVE_THREADS` or `available_parallelism`, so parked helpers
+//! are bounded by cores − 1 regardless of W) and hands every worker a
+//! `FabricHandle`.
+//!
+//! Fairness comes from the *budget*: each handle caps how many helpers
+//! any single GEMM job may claim (`ceil(helpers / W)`), so W concurrent
+//! jobs interleave on the shared claim queue instead of the first
+//! submitter grabbing the whole pool.  Deadlock cannot happen: the
+//! submitting worker always participates in its own job's claim loop
+//! (see `pool.rs`), so a job never waits on helpers that never come —
+//! worst case it runs serial on its own thread.
+//!
+//! The fabric also keeps utilization counters (jobs/tasks routed through
+//! it) that the coordinator surfaces in the shutdown report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::pool::WorkerPool;
+
+/// Snapshot of a fabric's shape and traffic (serving report / tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Helper threads the shared pool spawned (≤ total_threads − 1, the
+    /// process-wide bound the oversubscription test asserts).
+    pub helper_threads: usize,
+    /// Configured total concurrency (helpers + one submitter slot).
+    pub total_threads: usize,
+    /// Worker count the budget was derived for.
+    pub workers: usize,
+    /// Helpers any single job may claim (per-worker budget).
+    pub budget: usize,
+    /// Jobs routed through the fabric (one per parallel-eligible GEMM
+    /// fan-out).
+    pub jobs: u64,
+    /// Indexed tasks those jobs carried.
+    pub tasks: u64,
+}
+
+/// The shared state behind a fabric and all of its handles.
+struct FabricInner {
+    pool: WorkerPool,
+    total_threads: usize,
+    workers: usize,
+    budget: usize,
+    jobs: AtomicU64,
+    tasks: AtomicU64,
+}
+
+impl FabricInner {
+    fn stats(&self) -> FabricStats {
+        FabricStats {
+            helper_threads: self.pool.helper_threads(),
+            total_threads: self.total_threads,
+            workers: self.workers,
+            budget: self.budget,
+            jobs: self.jobs.load(Ordering::Relaxed),
+            tasks: self.tasks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One shared pool + the budget math, built once per process (by the
+/// coordinator) and handed out as cheap `FabricHandle` clones.  The
+/// fabric itself is an `Arc` shell, so `handle(&self)` works behind any
+/// ownership (plain value, `Arc<ExecutionFabric>`, borrowed field).
+pub struct ExecutionFabric {
+    inner: Arc<FabricInner>,
+}
+
+impl ExecutionFabric {
+    /// Fabric for `workers` concurrent submitters at the machine-derived
+    /// width: `RNS_NATIVE_THREADS` if set (the process-wide thread
+    /// budget — no longer per worker), else `available_parallelism`.
+    pub fn for_workers(workers: usize) -> Self {
+        Self::with_threads(default_total_threads(), workers)
+    }
+
+    /// Fabric with an explicit total concurrency (tests, benches).
+    /// Spawns the pool's `total_threads − 1` helpers eagerly — the
+    /// fabric exists to own the process's fan-out threads, so its
+    /// footprint is visible (and assertable) from construction.
+    pub fn with_threads(total_threads: usize, workers: usize) -> Self {
+        let total = total_threads.max(1);
+        let workers = workers.max(1);
+        let helpers = total - 1;
+        // each worker's slice of the helpers, rounded up so small pools
+        // still parallelize: W concurrent jobs may transiently claim up
+        // to W * budget >= helpers, which the pool resolves by admission
+        // order — the bound that matters (spawned threads) stays helpers
+        let budget = if helpers == 0 { 0 } else { helpers.div_ceil(workers) };
+        ExecutionFabric {
+            inner: Arc::new(FabricInner {
+                pool: WorkerPool::new(total),
+                total_threads: total,
+                workers,
+                budget,
+                jobs: AtomicU64::new(0),
+                tasks: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A handle for one worker's engine (cheap `Arc` clone).
+    pub fn handle(&self) -> FabricHandle {
+        FabricHandle { fabric: Arc::clone(&self.inner) }
+    }
+
+    /// Helper threads the shared pool actually spawned.
+    pub fn helper_threads(&self) -> usize {
+        self.inner.pool.helper_threads()
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        self.inner.stats()
+    }
+}
+
+/// One worker's view of the shared fabric: the pool plus that worker's
+/// helper budget.  Handed to `NativeEngine::with_fabric`.
+#[derive(Clone)]
+pub struct FabricHandle {
+    fabric: Arc<FabricInner>,
+}
+
+impl FabricHandle {
+    /// Concurrency one job sees: this worker's helper budget plus the
+    /// submitting thread itself.  The engine uses this where a private
+    /// engine would use its thread cap (parallel thresholds, task
+    /// granularity).
+    pub fn concurrency(&self) -> usize {
+        self.fabric.budget + 1
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        self.fabric.stats()
+    }
+
+    /// Fan `n_tasks` out on the shared pool under this worker's budget.
+    /// `cap` is the caller's own concurrency bound (task granularity);
+    /// the effective helper budget is the smaller of the two.
+    pub fn run_collect<T, F>(&self, cap: usize, n_tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.fabric.jobs.fetch_add(1, Ordering::Relaxed);
+        self.fabric.tasks.fetch_add(n_tasks as u64, Ordering::Relaxed);
+        self.fabric.pool.run_collect_capped(cap.min(self.concurrency()), n_tasks, f)
+    }
+}
+
+/// Process-wide thread budget: `RNS_NATIVE_THREADS` (total, not per
+/// worker) if set and positive, else the machine's core count.  The one
+/// definition shared by the fabric, the private-pool engine's auto
+/// sizing, and the oversubscription test.
+pub fn default_total_threads() -> usize {
+    if let Ok(v) = std::env::var("RNS_NATIVE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_math_splits_helpers_across_workers() {
+        // 9 total threads = 8 helpers; 4 workers get ceil(8/4) = 2 each
+        let f = ExecutionFabric::with_threads(9, 4);
+        let s = f.stats();
+        assert_eq!(s.helper_threads, 8);
+        assert_eq!(s.budget, 2);
+        assert_eq!(s.workers, 4);
+        // more workers than helpers: everyone still gets one helper slot
+        let f = ExecutionFabric::with_threads(3, 8);
+        assert_eq!(f.stats().budget, 1);
+        // serial fabric: no helpers, budget zero, handles run inline
+        let f = Arc::new(ExecutionFabric::with_threads(1, 4));
+        assert_eq!(f.stats().helper_threads, 0);
+        assert_eq!(f.handle().concurrency(), 1);
+        assert_eq!(f.handle().run_collect(4, 5, |i| i * 3), vec![0, 3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn handles_share_one_pool_and_count_traffic() {
+        let f = Arc::new(ExecutionFabric::with_threads(4, 2));
+        let a = f.handle();
+        let b = f.handle();
+        assert_eq!(a.concurrency(), 3); // ceil(3 helpers / 2 workers) + self
+        let ra = a.run_collect(8, 10, |i| i + 1);
+        let rb = b.run_collect(8, 6, |i| i * 2);
+        assert_eq!(ra, (1..=10).collect::<Vec<_>>());
+        assert_eq!(rb, (0..6).map(|i| i * 2).collect::<Vec<_>>());
+        let s = f.stats();
+        assert_eq!(s.jobs, 2);
+        assert_eq!(s.tasks, 16);
+        assert_eq!(s.helper_threads, 3, "one pool, not one per handle");
+    }
+
+    #[test]
+    fn concurrent_handles_interleave_without_deadlock() {
+        let f = Arc::new(ExecutionFabric::with_threads(4, 4)); // budget 1 each
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let h = f.handle();
+                s.spawn(move || {
+                    for round in 0..40usize {
+                        let n = 1 + (t + round) % 7;
+                        let out = h.run_collect(h.concurrency(), n, |i| i + 10 * t);
+                        for (i, v) in out.iter().enumerate() {
+                            assert_eq!(*v, i + 10 * t, "worker {t} round {round}");
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(f.stats().jobs, 160);
+    }
+}

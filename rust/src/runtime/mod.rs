@@ -1,15 +1,18 @@
 //! Runtime layer: the pluggable modular-GEMM engines (native rust and the
 //! PJRT-loaded AOT pallas kernel), the persistent worker pool behind the
-//! native engine, prepared-layer execution plans, and the artifact
-//! manifest loader.
+//! native engine, the process-wide execution fabric that shares one pool
+//! across coordinator workers, prepared-layer execution plans, and the
+//! artifact manifest loader.
 
 pub mod engine;
+pub mod fabric;
 pub mod manifest;
 pub mod pjrt;
 pub mod plan;
 pub mod pool;
 
 pub use engine::{ModularGemmEngine, NativeEngine, SpawnMode};
+pub use fabric::{ExecutionFabric, FabricHandle, FabricStats};
 pub use manifest::Manifest;
 pub use pjrt::{F32Input, PjrtEngine, PjrtExecutable, PjrtRuntime};
 pub use plan::{PlanTile, PreparedWeights, RnsPlan};

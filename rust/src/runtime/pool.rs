@@ -5,18 +5,31 @@
 //! worker) on every call — acceptable for sweep workloads, dominant for
 //! small-batch serving where a whole MLP layer is only a few hundred µs.
 //! `WorkerPool` keeps the fan-out threads alive across calls: workers
-//! park on a condvar between jobs and are unparked when a new job
-//! generation is published, so steady-state dispatch cost is one
-//! lock + notify instead of N spawns.
+//! park on a condvar between jobs and are unparked when a job is
+//! published, so steady-state dispatch cost is one lock + notify instead
+//! of N spawns.
+//!
+//! Since PR 4 the pool is **multi-tenant**: several submitters may have
+//! jobs in flight at once (the process-wide execution fabric hands one
+//! pool to every coordinator worker — see `runtime/fabric.rs`).  The
+//! shared state holds a list of active jobs; parked helpers scan it for
+//! a job with both unclaimed tasks and helper *budget* remaining
+//! (`helper_cap`, the per-job claim limit that keeps one worker's GEMM
+//! from monopolizing the pool), claim indexed tasks from its atomic
+//! counter, and go back to scanning when it drains.  The submitting
+//! thread always participates in its own job's claim loop — which is the
+//! deadlock-freedom argument: a job can never wait on helpers that never
+//! come, because even with every helper busy elsewhere the submitter
+//! drains its own queue and only then blocks on the completion count.
 //!
 //! A job is an indexed task set `f(0..n_tasks)` claimed from a shared
 //! atomic counter (the same lock-free claim discipline the scoped path
-//! uses); the submitting thread participates in the claim loop, then
-//! blocks until every claimed task has completed.  Because the submitter
-//! cannot return before `completed == n_tasks`, tasks may safely borrow
-//! the submitter's stack (activations, prepared weights) even though the
-//! pool threads are long-lived — that is the single safety invariant the
-//! one `unsafe` lifetime erasure below relies on.
+//! uses); the submitter blocks until every claimed task has completed.
+//! Because the submitter cannot return before `completed == n_tasks`,
+//! tasks may safely borrow the submitter's stack (activations, prepared
+//! weights) even though the pool threads are long-lived — that is the
+//! single safety invariant the one `unsafe` lifetime erasure below
+//! relies on.
 //!
 //! Panics do not weaken that invariant: every task runs under
 //! `catch_unwind`, so a panicking task still counts toward `completed`
@@ -29,7 +42,8 @@
 //! Determinism: the pool schedules *which thread* runs a task, never what
 //! the task computes — engine tasks are exact modular arithmetic keyed by
 //! task index, so outputs are bit-identical to the serial and scoped
-//! paths (asserted by `tests/integration_store.rs`).
+//! paths (asserted by `tests/integration_store.rs` and
+//! `tests/integration_fabric.rs`).
 
 use std::any::Any;
 use std::panic::{self, AssertUnwindSafe};
@@ -57,12 +71,21 @@ struct TaskRef(*const (dyn Fn(usize) + Sync));
 unsafe impl Send for TaskRef {}
 unsafe impl Sync for TaskRef {}
 
-/// One published fan-out: the erased task plus claim/completion counters.
+/// One published fan-out: the erased task, claim/completion counters, and
+/// the helper budget that bounds how many pool threads may work on it.
 struct Job {
     task: TaskRef,
     n_tasks: usize,
     next: AtomicUsize,
     completed: AtomicUsize,
+    /// Helpers allowed to claim from this job concurrently (the
+    /// submitter participates on top of this, so total claimants are
+    /// bounded by `helper_cap + 1`).  This is the per-worker budget of
+    /// the shared fabric: one worker's GEMM cannot starve the others.
+    helper_cap: usize,
+    /// Helpers currently claiming from this job; admission (the
+    /// increment) happens under the pool state lock.
+    helpers_active: AtomicUsize,
     /// First panic payload from any task; re-thrown on the submitter
     /// after the job fully drains.
     panic: Mutex<Option<Box<dyn Any + Send>>>,
@@ -70,7 +93,7 @@ struct Job {
 
 impl Job {
     /// Claim and run tasks until the queue is exhausted.  The last
-    /// completer wakes the submitter.
+    /// completer wakes the submitters parked on `done`.
     fn run_tasks(&self, shared: &PoolShared) {
         loop {
             let i = self.next.fetch_add(1, Ordering::Relaxed);
@@ -93,21 +116,28 @@ impl Job {
                 }
             }
             if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n_tasks {
-                // lock before notify so the submitter cannot check the
+                // lock before notify so a submitter cannot check the
                 // counter and sleep between our increment and our wake
                 let _guard = lock_ignore_poison(&shared.state);
                 shared.done.notify_all();
             }
         }
     }
+
+    /// Whether unclaimed task indices remain (helper eligibility check;
+    /// approximate outside the state lock, exact enough because a false
+    /// positive only costs one wasted claim attempt).
+    fn has_unclaimed(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.n_tasks
+    }
 }
 
 /// Blocks in `drop` until the job's completion count reaches `n_tasks`,
-/// then unpublishes it.  Held by `run` across the claim loop so that no
-/// unwind path can end the borrow behind `TaskRef` while a helper might
-/// still dereference it.
+/// then unpublishes it from the active-job list.  Held by `run` across
+/// the claim loop so that no unwind path can end the borrow behind
+/// `TaskRef` while a helper might still dereference it.
 struct CompletionGuard<'a> {
-    job: &'a Job,
+    job: &'a Arc<Job>,
     shared: &'a PoolShared,
 }
 
@@ -119,43 +149,44 @@ impl Drop for CompletionGuard<'_> {
         }
         // drop the erased pointer before `f`'s borrow can end; helpers
         // holding stale `Arc<Job>` clones only see an exhausted counter
-        st.job = None;
+        st.jobs.retain(|j| !Arc::ptr_eq(j, self.job));
     }
 }
 
 struct PoolState {
     shutdown: bool,
-    /// Bumped once per published job; workers use it to tell a fresh job
-    /// from the one they already drained.
-    generation: u64,
-    job: Option<Arc<Job>>,
+    /// Active jobs in submission order.  Helpers scan for the first job
+    /// with unclaimed tasks and helper budget, so earlier submitters get
+    /// helpers first while later jobs still make progress through their
+    /// own submitters (and pick up helpers as earlier jobs drain).
+    jobs: Vec<Arc<Job>>,
 }
 
 struct PoolShared {
     state: Mutex<PoolState>,
     /// Workers park here between jobs.
     work: Condvar,
-    /// The submitter parks here until the job completes.
+    /// Submitters park here until their job completes.
     done: Condvar,
 }
 
-/// Long-lived fan-out threads with a parked-idle loop.  Owned by
-/// `NativeEngine`; dropped (and joined) with it.
+/// Long-lived fan-out threads with a parked-idle loop and a multi-job
+/// claim queue.  Owned by a `NativeEngine` (private pool) or shared
+/// process-wide through `runtime/fabric.rs`; dropped (and joined) with
+/// its owner.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
-    /// Serializes submitters: one job in flight at a time.
-    submit: Mutex<()>,
     threads: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
     /// A pool sized for `threads` total concurrency: `threads - 1` parked
-    /// helper threads plus the submitting thread, which always
-    /// participates in the claim loop.  `threads <= 1` spawns nothing and
+    /// helper threads plus a submitting thread, which always participates
+    /// in its own job's claim loop.  `threads <= 1` spawns nothing and
     /// `run` degenerates to an inline serial loop.
     pub fn new(threads: usize) -> Self {
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState { shutdown: false, generation: 0, job: None }),
+            state: Mutex::new(PoolState { shutdown: false, jobs: Vec::new() }),
             work: Condvar::new(),
             done: Condvar::new(),
         });
@@ -168,11 +199,11 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { shared, submit: Mutex::new(()), threads: handles }
+        WorkerPool { shared, threads: handles }
     }
 
     /// Helper threads kept parked between jobs (total concurrency is one
-    /// more: the submitter works too).
+    /// more per submitter: submitters work too).
     pub fn helper_threads(&self) -> usize {
         self.threads.len()
     }
@@ -185,46 +216,50 @@ impl WorkerPool {
         self.run_capped(usize::MAX, n_tasks, f);
     }
 
-    /// `run` with a concurrency hint: wake at most `cap - 1` parked
-    /// helpers (the submitter is the cap's remaining slot) instead of the
-    /// whole pool.  On a many-core host a small job would otherwise
-    /// thundering-herd every parked helper through the state mutex just
-    /// to find the claim counter exhausted.  The cap is a wake hint, not
-    /// a limit on correctness: however many helpers show up, the
+    /// `run` with a concurrency budget: at most `cap - 1` helpers may
+    /// claim tasks from this job (the submitter is the cap's remaining
+    /// slot).  On a shared pool this is what keeps W submitters fair —
+    /// each job wakes and admits only its budget, so concurrent jobs
+    /// interleave instead of the first one grabbing every helper.  The
+    /// budget never blocks completion: however few helpers show up, the
     /// submitter participates and the job always drains.
     pub fn run_capped(&self, cap: usize, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         if n_tasks == 0 {
             return;
         }
-        if self.threads.is_empty() {
+        let helper_cap = cap
+            .max(1)
+            .saturating_sub(1)
+            .min(n_tasks.saturating_sub(1))
+            .min(self.threads.len());
+        if helper_cap == 0 {
+            // no helpers to use (serial pool, single task, or a budget of
+            // one): run inline without touching the shared queue
             for i in 0..n_tasks {
                 f(i);
             }
             return;
         }
-        let _submit = lock_ignore_poison(&self.submit);
         let job = Arc::new(Job {
             task: TaskRef(f as *const (dyn Fn(usize) + Sync)),
             n_tasks,
             next: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
+            helper_cap,
+            helpers_active: AtomicUsize::new(0),
             panic: Mutex::new(None),
         });
-        // helpers the job can actually use: one per task beyond the
-        // submitter's, bounded by the cap and the pool width
-        let wake = cap
-            .max(1)
-            .saturating_sub(1)
-            .min(n_tasks.saturating_sub(1))
-            .min(self.threads.len());
         {
             let mut st = lock_ignore_poison(&self.shared.state);
-            st.generation = st.generation.wrapping_add(1);
-            st.job = Some(Arc::clone(&job));
-            if wake >= self.threads.len() {
+            st.jobs.push(Arc::clone(&job));
+            // wake only as many parked helpers as the budget admits —
+            // waking the whole pool for a small job would thundering-herd
+            // every helper through the state mutex just to find either
+            // the claim counter exhausted or the budget spent
+            if helper_cap >= self.threads.len() {
                 self.shared.work.notify_all();
             } else {
-                for _ in 0..wake {
+                for _ in 0..helper_cap {
                     self.shared.work.notify_one();
                 }
             }
@@ -233,8 +268,8 @@ impl WorkerPool {
         // helpers may dereference the erased borrow of `f`; the guard
         // waits that out on every exit path, including unwinding
         let guard = CompletionGuard { job: &job, shared: &self.shared };
-        // the submitter is also a worker — a 1-task job never even needs
-        // a helper wakeup to have finished by the guard's wait
+        // the submitter is also a worker — a job never depends on a
+        // helper wakeup to finish
         job.run_tasks(&self.shared);
         drop(guard);
         if let Some(payload) = lock_ignore_poison(&job.panic).take() {
@@ -254,7 +289,7 @@ impl WorkerPool {
         self.run_collect_capped(usize::MAX, n_tasks, f)
     }
 
-    /// `run_collect` with the `run_capped` wake hint.
+    /// `run_collect` with the `run_capped` helper budget.
     pub fn run_collect_capped<T, F>(&self, cap: usize, n_tasks: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -285,7 +320,6 @@ impl Drop for WorkerPool {
 }
 
 fn pool_worker(shared: Arc<PoolShared>) {
-    let mut last_gen = 0u64;
     loop {
         let job = {
             let mut st = lock_ignore_poison(&shared.state);
@@ -293,16 +327,24 @@ fn pool_worker(shared: Arc<PoolShared>) {
                 if st.shutdown {
                     return;
                 }
-                if st.generation != last_gen {
-                    if let Some(job) = &st.job {
-                        last_gen = st.generation;
-                        break Arc::clone(job);
-                    }
+                // first job with unclaimed tasks and budget; admission is
+                // under the state lock, so a job never exceeds its
+                // helper_cap concurrent helpers
+                let eligible = st.jobs.iter().find(|j| {
+                    j.has_unclaimed() && j.helpers_active.load(Ordering::Relaxed) < j.helper_cap
+                });
+                if let Some(j) = eligible {
+                    let j = Arc::clone(j);
+                    j.helpers_active.fetch_add(1, Ordering::Relaxed);
+                    break j;
                 }
                 st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
         job.run_tasks(&shared);
+        job.helpers_active.fetch_sub(1, Ordering::Relaxed);
+        // loop back and rescan: another submitter's job may be waiting
+        // for a helper slot that just freed up
     }
 }
 
@@ -333,8 +375,8 @@ mod tests {
 
     #[test]
     fn reused_across_many_jobs() {
-        // many small jobs through one pool: exercises the generation
-        // handshake (a stale worker must never re-run or miss a job)
+        // many small jobs through one pool: a stale worker must never
+        // re-run or miss a job across publish/drain cycles
         let pool = WorkerPool::new(4);
         for round in 0..200usize {
             let sum = AtomicU64::new(0);
@@ -379,8 +421,9 @@ mod tests {
 
     #[test]
     fn capped_run_completes_all_tasks() {
-        // the cap limits wake-ups, never completion: every task must run
-        // exactly once whatever mix of submitter/helpers claims them
+        // the budget limits concurrent helpers, never completion: every
+        // task must run exactly once whatever mix of submitter/helpers
+        // claims them
         let pool = WorkerPool::new(8);
         for cap in [1usize, 2, 3, 100] {
             let n = 23;
@@ -394,6 +437,47 @@ mod tests {
             let out = pool.run_collect_capped(cap, 9, |i| i + 1);
             assert_eq!(out, (1..=9).collect::<Vec<_>>(), "cap {cap}");
         }
+    }
+
+    #[test]
+    fn helper_budget_is_enforced() {
+        // cap 2 = submitter + at most 1 helper: the peak number of
+        // concurrent claimants must never exceed the budget (admission
+        // happens under the state lock, so this is exact, not racy)
+        let pool = WorkerPool::new(8);
+        let active = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        pool.run_capped(2, 64, &|_| {
+            let now = active.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            for _ in 0..500 {
+                std::hint::spin_loop();
+            }
+            active.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "peak {} > budget", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn concurrent_submitters_interleave_on_one_pool() {
+        // the multi-tenant contract: several submitters with jobs in
+        // flight at once, none deadlocks (each submitter participates in
+        // its own claim loop), every job's results are correct
+        let pool = Arc::new(WorkerPool::new(4));
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for round in 0..50usize {
+                        let n = 1 + (t + round) % 9;
+                        let out = pool.run_collect_capped(2, n, |i| i * 2 + t);
+                        for (i, v) in out.iter().enumerate() {
+                            assert_eq!(*v, i * 2 + t, "submitter {t} round {round}");
+                        }
+                    }
+                });
+            }
+        });
     }
 
     #[test]
@@ -447,7 +531,14 @@ mod tests {
     fn panic_payload_is_first_come_and_preserved() {
         let pool = WorkerPool::new(2);
         let result = panic::catch_unwind(AssertUnwindSafe(|| {
-            pool.run(1, &|_| panic!("boom-payload"));
+            // 2 tasks so the job reaches the shared queue (1 task with a
+            // budget of one runs inline, which also propagates, but here
+            // the queue path is the one under test)
+            pool.run(2, &|i| {
+                if i == 0 {
+                    panic!("boom-payload");
+                }
+            });
         }));
         let payload = result.expect_err("must re-throw");
         let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();

@@ -303,7 +303,10 @@ impl PlanStore {
     /// evicted.  In-flight `Arc`s stay valid until their holders drop.
     /// The name starts draining: later tagged lookups fall back to
     /// untagged LRU slots (in-flight batches racing the unload cannot
-    /// re-pin dead-allocation plans) until `activate_model` is called.
+    /// re-pin dead-allocation plans) until `activate_model` is called —
+    /// either by the coordinator once every worker acks the control-
+    /// plane unload (nothing can touch the old generation after that),
+    /// or by a worker warming a freshly reloaded instance.
     pub fn unload_model(&self, model: &str) -> usize {
         let mut st = self.inner.lock().unwrap();
         st.draining.insert(model.to_string());
@@ -335,12 +338,22 @@ impl PlanStore {
     }
 
     /// End a model's draining state (no-op if it was not draining):
-    /// subsequent tagged lookups pin plans again.  Workers call this when
-    /// they warm a freshly (re)loaded instance, so the fresh generation's
-    /// plans are pinned while any stale rebuilds from batches that raced
-    /// the unload stay LRU-bounded.
+    /// subsequent tagged lookups pin plans again.  Called from two
+    /// places: workers warming a freshly (re)loaded instance (the fresh
+    /// generation's plans pin while stale rebuilds from batches that
+    /// raced the unload stay LRU-bounded), and the coordinator's
+    /// `unload_model` once every worker has acked the control-plane
+    /// release — at that point no stale instance survives anywhere, so
+    /// draining has nothing left to guard.
     pub fn activate_model(&self, model: &str) {
         self.inner.lock().unwrap().draining.remove(model);
+    }
+
+    /// Whether `model` is draining (unloaded, not yet re-activated).
+    /// With the control plane, `Coordinator::unload_model` ends draining
+    /// itself once every worker acks; exposed for tests and ops.
+    pub fn is_draining(&self, model: &str) -> bool {
+        self.inner.lock().unwrap().draining.contains(model)
     }
 
     pub fn stats(&self) -> StoreStats {

@@ -1,0 +1,112 @@
+//! Drift-campaign integration tests (ROADMAP PR-3 open item): drive
+//! `FaultSpec::TemporalBurst` through a *full model forward* and assert
+//! the RRNS retry loop's behavior — seeded determinism first (a campaign
+//! replays bit-for-bit from `(spec, seed)`), then the code-property
+//! guarantees: a burst within the correction radius is absorbed exactly
+//! (logits bit-equal the clean run), and a wider burst is detected and
+//! recovered by the recompute loop when attempts allow.
+//!
+//! Uses `Mlp::synthetic` so no `make artifacts` step is needed.
+
+use rns_analog::analog::{FaultStats, RnsCore, RnsCoreConfig};
+use rns_analog::nn::models::{Batch, Mlp, Model};
+use rns_analog::rns::inject::FaultSpec;
+use rns_analog::tensor::{MatF, Nhwc};
+use rns_analog::util::rng::Rng;
+
+fn synth_mlp() -> Mlp {
+    Mlp::synthetic(42)
+}
+
+fn eval_batch(n: usize) -> Batch {
+    let mut rng = Rng::seed_from(7);
+    let data = (0..n * 28 * 28).map(|_| rng.uniform_f32(0.0, 1.0)).collect();
+    Batch::Images(Nhwc::from_vec(n, 28, 28, 1, data))
+}
+
+fn forward_with(
+    model: &Mlp,
+    input: &Batch,
+    spec: Option<(FaultSpec, u64)>,
+    attempts: u32,
+) -> (MatF, FaultStats) {
+    let mut cfg = RnsCoreConfig::for_bits(8, 128).with_rrns(2, attempts);
+    if let Some((s, seed)) = spec {
+        cfg = cfg.with_fault_injection(s, seed);
+    }
+    let mut core = RnsCore::new(cfg).unwrap();
+    let logits = model.forward(input, &mut core);
+    (logits, core.stats)
+}
+
+fn bits_of(m: &MatF) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The satellite requirement: a TemporalBurst campaign through a full
+/// forward pass replays bit-for-bit from `(spec, seed)` — logits and
+/// every fault counter — and a different seed lands the drift rectangle
+/// elsewhere.
+#[test]
+fn temporal_burst_campaign_is_seed_deterministic() {
+    let model = synth_mlp();
+    let input = eval_batch(4);
+    let spec = FaultSpec::TemporalBurst { tiles: 3, elems: 6, width: 2 };
+    let (la, sa) = forward_with(&model, &input, Some((spec, 11)), 1);
+    let (lb, sb) = forward_with(&model, &input, Some((spec, 11)), 1);
+    assert_eq!(bits_of(&la), bits_of(&lb), "same (spec, seed): bit-identical logits");
+    assert_eq!(sa, sb, "same (spec, seed): identical fault counters");
+    assert!(sa.detections + sa.corrected > 0, "the burst must actually corrupt decodes");
+
+    let (lc, sc) = forward_with(&model, &input, Some((spec, 12)), 1);
+    assert!(
+        bits_of(&la) != bits_of(&lc) || sa != sc,
+        "a different drift seed must corrupt differently"
+    );
+}
+
+/// Burst width within the correction radius (width = 1 ≤ t for an
+/// RRNS(6,4) code): every corrupted element is corrected exactly, so the
+/// campaign's logits are bit-equal to a clean core's — the paper's
+/// fault-tolerance claim end to end through a model.
+#[test]
+fn correctable_burst_is_absorbed_bit_exactly() {
+    let model = synth_mlp();
+    let input = eval_batch(4);
+    let (clean, clean_stats) = forward_with(&model, &input, None, 1);
+    assert_eq!(clean_stats.corrected, 0);
+    let spec = FaultSpec::TemporalBurst { tiles: 4, elems: 8, width: 1 };
+    let (drifted, stats) = forward_with(&model, &input, Some((spec, 5)), 1);
+    assert!(stats.corrected > 0, "drift within radius must exercise correction");
+    assert_eq!(stats.exhausted, 0, "single-channel faults never exhaust");
+    assert_eq!(
+        bits_of(&clean),
+        bits_of(&drifted),
+        "corrected campaign must be bit-identical to the clean forward"
+    );
+    // fast path still carries the untouched bulk of the tiles
+    assert!(stats.fast_path_elems > stats.voted_elems);
+}
+
+/// Burst width beyond the correction radius (width = 2 = n − k):
+/// detections fire, and because the injected faults hit the *capture*
+/// (the retry recomputes from clean channel outputs), the paper's
+/// detect → recompute loop recovers every element when attempts allow —
+/// while attempts = 1 must exhaust instead.
+#[test]
+fn retry_loop_recovers_detected_bursts() {
+    let model = synth_mlp();
+    let input = eval_batch(4);
+    let spec = FaultSpec::TemporalBurst { tiles: 2, elems: 6, width: 2 };
+
+    let (_, retry) = forward_with(&model, &input, Some((spec, 9)), 3);
+    assert!(retry.detections > 0, "width 2 > t must trigger detections");
+    assert_eq!(retry.exhausted, 0, "clean recompute resolves every detection");
+
+    let (_, no_retry) = forward_with(&model, &input, Some((spec, 9)), 1);
+    assert!(no_retry.detections > 0);
+    assert_eq!(
+        no_retry.exhausted, no_retry.detections,
+        "attempts=1: every detection exhausts into best-effort decode"
+    );
+}

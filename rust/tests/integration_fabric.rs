@@ -1,0 +1,203 @@
+//! Integration tests for the process-wide execution fabric and the
+//! worker control plane (PR 4): W coordinator workers must share ONE
+//! pool of fan-out threads bounded by cores − 1 (no per-worker pools
+//! oversubscribing many-core hosts), concurrent engines must interleave
+//! on the shared claim queue without deadlock, and
+//! `Coordinator::unload_model` must proactively release worker-held
+//! model Arcs through the control channel — without the model ever
+//! being requested again.
+//!
+//! Artifact-dependent tests skip silently when `make artifacts` has not
+//! run (same convention as the coordinator tests).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rns_analog::analog::NoiseModel;
+use rns_analog::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use rns_analog::nn::models::Batch;
+use rns_analog::runtime::{ExecutionFabric, ModularGemmEngine, NativeEngine, PreparedWeights};
+use rns_analog::tensor::{MatI, Nhwc};
+use rns_analog::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{}/models/mlp.rt", artifacts_dir())).exists()
+}
+
+fn rns_cfg(workers: usize) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(
+        BackendKind::Rns { bits: 6, redundant: 0, attempts: 1, noise: NoiseModel::None },
+        &artifacts_dir(),
+    );
+    cfg.workers = workers;
+    cfg
+}
+
+/// The PR-3 follow-up that motivated the fabric: W=4 workers previously
+/// parked 4 × (cores − 1) helpers; on the fabric the process-wide helper
+/// count is bounded by cores − 1 regardless of W (the strict equality
+/// below is that bound plus "sized to the machine, not per worker").
+/// No artifacts needed — the fabric (and its threads) exist from
+/// coordinator startup.
+#[test]
+fn four_workers_share_one_bounded_helper_pool() {
+    let coord = Coordinator::start(rns_cfg(4));
+    let fabric = coord.fabric().expect("native RNS backend builds a fabric");
+    let stats = fabric.stats();
+    let total = rns_analog::runtime::fabric::default_total_threads();
+    assert_eq!(
+        stats.helper_threads,
+        total - 1,
+        "one shared pool at machine width (cores-1 helpers), not one pool per worker"
+    );
+    assert_eq!(stats.workers, 4);
+    // budget math: each of the W workers may claim at most
+    // ceil(helpers / W) helpers per job, and at least one when any exist
+    let want_budget =
+        if stats.helper_threads == 0 { 0 } else { stats.helper_threads.div_ceil(4) };
+    assert_eq!(stats.budget, want_budget);
+    coord.shutdown();
+}
+
+/// Fp32 / fixed-point backends never touch the native parallel engine:
+/// no fabric, no fan-out threads.
+#[test]
+fn non_native_backends_build_no_fabric() {
+    let coord = Coordinator::start(CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent"));
+    assert!(coord.fabric().is_none());
+    coord.shutdown();
+}
+
+/// Four engines on four threads, one fabric: concurrent prepared GEMMs
+/// interleave on the shared claim queue (per-worker budgets), nobody
+/// deadlocks (the submitter always participates in its own job), and
+/// every result is bit-identical to a serial engine.
+#[test]
+fn concurrent_engines_interleave_on_one_fabric() {
+    let fabric = Arc::new(ExecutionFabric::with_threads(4, 4)); // budget 1 per worker
+    let moduli = [255u64, 254, 253, 251];
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let handle = fabric.handle();
+            let moduli = moduli;
+            s.spawn(move || {
+                let mut rng = Rng::seed_from(100 + t);
+                let xr: Vec<MatI> = moduli
+                    .iter()
+                    .map(|&m| {
+                        MatI::from_vec(
+                            16,
+                            128,
+                            (0..16 * 128).map(|_| rng.gen_range(m) as i64).collect(),
+                        )
+                    })
+                    .collect();
+                let wr: Vec<MatI> = moduli
+                    .iter()
+                    .map(|&m| {
+                        MatI::from_vec(
+                            128,
+                            64,
+                            (0..128 * 64).map(|_| rng.gen_range(m) as i64).collect(),
+                        )
+                    })
+                    .collect();
+                let prepared = PreparedWeights::new(wr.clone(), &moduli);
+                let want = NativeEngine::serial().matmul_mod_prepared(&xr, &prepared);
+                let mut eng = NativeEngine::with_fabric(handle);
+                for round in 0..8 {
+                    let got = eng.matmul_mod_prepared(&xr, &prepared);
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(g.data, w.data, "worker {t} round {round}");
+                    }
+                }
+            });
+        }
+    });
+    let stats = fabric.stats();
+    assert!(stats.jobs > 0, "fan-outs must have routed through the fabric");
+    assert_eq!(stats.helper_threads, 3, "3 helpers total for 4 workers — no per-worker pools");
+}
+
+/// The control plane releases worker-held model instances without the
+/// model being requested again: after `unload_model` returns (all
+/// workers acked), the only strong count left on the instance is the
+/// test's own clone, the plans are gone, and the draining state has been
+/// ended by the acks — a later request reloads and serves normally.
+#[test]
+fn proactive_unload_releases_worker_arcs_without_another_request() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(rns_cfg(2));
+    for _ in 0..6 {
+        coord.submit("mlp", Batch::Images(Nhwc::zeros(1, 28, 28, 1)));
+    }
+    let resps = coord.collect(6);
+    assert!(resps.iter().all(|r| r.result.is_ok()));
+
+    let instance = coord.model_registry().peek("mlp").expect("mlp loaded");
+    assert!(
+        Arc::strong_count(&instance) >= 3,
+        "registry + serving worker(s) must hold the instance, got {}",
+        Arc::strong_count(&instance)
+    );
+    assert_eq!(coord.plan_store().stats().resident_plans, 3);
+
+    let evicted = coord.unload_model("mlp");
+    assert_eq!(evicted, 3, "all three layer plans evicted");
+    // the acceptance property: every worker dropped its Arc on the
+    // control ack — no request for `mlp` happened since the unload
+    assert_eq!(
+        Arc::strong_count(&instance),
+        1,
+        "only the test clone survives a proactive unload"
+    );
+    assert_eq!(coord.plan_store().stats().resident_plans, 0);
+    assert!(
+        !coord.plan_store().is_draining("mlp"),
+        "full ack set ends the draining state without a re-warm"
+    );
+
+    // the name still serves: a later request reloads fresh weights and
+    // re-warms fresh plans
+    coord.submit("mlp", Batch::Images(Nhwc::zeros(1, 28, 28, 1)));
+    let r = coord.recv_timeout(Duration::from_secs(60)).expect("response after reload");
+    assert!(r.result.is_ok());
+    let reloaded = coord.model_registry().peek("mlp").expect("reloaded");
+    assert!(!Arc::ptr_eq(&instance, &reloaded), "reload is a fresh instance");
+
+    let report = coord.shutdown();
+    assert!(report.contains("unloads: proactive=1 worker-releases="), "{report}");
+    assert!(report.contains("fabric: threads="), "{report}");
+}
+
+/// Serving through the fabric records utilization, and batched traffic
+/// is served correctly end to end with W=4 workers on one shared pool.
+#[test]
+fn fabric_serves_batched_traffic_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let coord = Coordinator::start(rns_cfg(4));
+    // 8-sample requests form full batches deterministically, and an
+    // 8x784x256 first layer clears the engine's parallel threshold
+    for _ in 0..8 {
+        coord.submit("mlp", Batch::Images(Nhwc::zeros(8, 28, 28, 1)));
+    }
+    let resps = coord.collect(8);
+    assert!(resps.iter().all(|r| r.result.is_ok()));
+    let fabric = coord.fabric().expect("fabric");
+    if fabric.stats().budget >= 1 {
+        assert!(
+            fabric.stats().jobs > 0,
+            "parallel-eligible batches must fan out through the fabric"
+        );
+    }
+    let report = coord.shutdown();
+    assert!(report.contains("requests=8"), "{report}");
+}

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use rns_analog::analog::{GemmBackend, NoiseModel, RnsCore, RnsCoreConfig};
-use rns_analog::runtime::{NativeEngine, RnsPlan, SpawnMode};
+use rns_analog::runtime::{ExecutionFabric, NativeEngine, RnsPlan, SpawnMode};
 use rns_analog::store::{PlanKey, PlanStore};
 use rns_analog::tensor::MatF;
 use rns_analog::util::rng::Rng;
@@ -94,16 +94,17 @@ fn concurrent_warm_builds_each_plan_exactly_once() {
     assert_eq!(per_worker[0][0].k, 300, "in-flight Arc outlives eviction");
 }
 
-/// Pool-executed GEMM is bit-identical to the serial engine and to the
-/// per-call scoped-spawn engine, including under RRNS + noise with fixed
-/// seeds (the pool schedules exact arithmetic only; the rng stays serial
-/// inside the core).
+/// Pool-executed GEMM is bit-identical to the serial engine, to the
+/// per-call scoped-spawn engine, and to a shared-fabric engine,
+/// including under RRNS + noise with fixed seeds (the pool schedules
+/// exact arithmetic only; the rng stays serial inside the core).
 #[test]
-fn pool_gemm_bit_identical_to_serial_and_scoped() {
+fn pool_gemm_bit_identical_to_serial_scoped_and_fabric() {
     let mut rng = Rng::seed_from(2);
     // large enough that every tile clears the engine's parallel threshold
     let x = rand_mat(&mut rng, 16, 256, 1.0);
     let w = rand_mat(&mut rng, 256, 64, 0.5);
+    let fabric = Arc::new(ExecutionFabric::with_threads(4, 2));
     for (redundant, attempts) in [(0usize, 1u32), (2, 3)] {
         let mk_cfg = || {
             RnsCoreConfig::for_bits(8, 128)
@@ -122,11 +123,17 @@ fn pool_gemm_bit_identical_to_serial_and_scoped() {
             Box::new(NativeEngine::with_spawn_mode(4, SpawnMode::Scoped)),
         )
         .unwrap();
+        let mut fabbed = RnsCore::with_engine(
+            mk_cfg(),
+            Box::new(NativeEngine::with_fabric(fabric.handle())),
+        )
+        .unwrap();
         let ys = serial.gemm_quantized(&x, &w);
         // two passes through the pooled core: the second reuses parked
         // threads (the persistent-pool steady state)
         let yp1 = pooled.gemm_quantized(&x, &w);
         let yc = scoped.gemm_quantized(&x, &w);
+        let yf = fabbed.gemm_quantized(&x, &w);
         assert_eq!(
             ys.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             yp1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
@@ -137,18 +144,37 @@ fn pool_gemm_bit_identical_to_serial_and_scoped() {
             yc.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "rrns={redundant}: pool must be bit-identical to scoped"
         );
+        assert_eq!(
+            yc.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yf.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "rrns={redundant}: shared fabric must be bit-identical to scoped"
+        );
         let ys2 = serial.gemm_quantized(&x, &w);
         let yp2 = pooled.gemm_quantized(&x, &w);
+        let yf2 = fabbed.gemm_quantized(&x, &w);
         assert_eq!(
             ys2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             yp2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             "rrns={redundant}: second pass (pool reuse) must stay bit-identical"
         );
+        assert_eq!(
+            ys2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            yf2.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "rrns={redundant}: second pass (fabric reuse) must stay bit-identical"
+        );
         // identical rng consumption => identical counters and energy
-        assert_eq!(serial.stats.decoded, pooled.stats.decoded);
-        assert_eq!(serial.stats.detections, pooled.stats.detections);
+        assert_eq!(serial.stats, pooled.stats);
+        assert_eq!(serial.stats, fabbed.stats);
         assert_eq!(serial.meter.adc_conversions, pooled.meter.adc_conversions);
+        assert_eq!(serial.meter.adc_conversions, fabbed.meter.adc_conversions);
+        assert_eq!(serial.meter.dac_conversions, fabbed.meter.dac_conversions);
+        assert_eq!(
+            serial.meter.total_joules().to_bits(),
+            fabbed.meter.total_joules().to_bits(),
+            "rrns={redundant}: energy ledgers must match to the bit"
+        );
     }
+    assert!(fabric.stats().jobs > 0, "fabric cores must route fan-outs through the fabric");
 }
 
 /// Cores with different moduli configurations can share one store

@@ -14,6 +14,11 @@ parent cache and save separately, so the earlier run's entry can be
 dropped from later history.  Each run's own BENCH_gemm.json artifact is
 the authoritative record; the trend exists for the at-a-glance ratio
 trajectory.
+
+Gate mode: `--check LABEL:MIN` (repeatable) asserts that the HEADLINES
+ratio LABEL computed from --bench is >= MIN and exits without touching
+the trend — the single source of truth for the CI perf gates (decode,
+pool, fabric), replacing per-gate inline scripts in ci.yml.
 """
 
 import argparse
@@ -38,6 +43,11 @@ HEADLINES = [
         "pool",
         "micro/pool prepared 4x784x256 x4ch scoped-spawn",
         "micro/pool prepared 4x784x256 x4ch persistent-pool",
+    ),
+    (
+        "fabric",
+        "micro/pool prepared 4x784x256 x4ch scoped-spawn",
+        "micro/pool prepared 4x784x256 x4ch shared-fabric",
     ),
 ]
 
@@ -69,10 +79,43 @@ def main():
     p.add_argument("--trend", default="BENCH_trend.json", help="trend store to append to")
     p.add_argument("--commit", default=os.environ.get("GITHUB_SHA", "unknown"))
     p.add_argument("--max-runs", type=int, default=200, help="keep at most the newest N runs")
+    p.add_argument(
+        "--check",
+        action="append",
+        default=[],
+        metavar="LABEL:MIN",
+        help="gate mode (repeatable): assert HEADLINES ratio LABEL >= MIN "
+        "against --bench, exit nonzero on failure, never touch the trend",
+    )
     args = p.parse_args()
 
     with open(args.bench) as f:
         bench = json.load(f)
+
+    if args.check:
+        bench_map = {b.get("name"): b for b in bench.get("benches", [])}
+        headlines = {label: (num, den) for label, num, den in HEADLINES}
+        failures = []
+        for spec in args.check:
+            label, _, min_s = spec.partition(":")
+            if label not in headlines or not min_s:
+                failures.append(f"bad --check spec `{spec}` (labels: {', '.join(headlines)})")
+                continue
+            num, den = headlines[label]
+            v = ratio(bench_map, num, den)
+            if v is None:
+                failures.append(f"{label}: bench pair missing ({num} / {den})")
+                continue
+            need = float(min_s)
+            ok = v >= need
+            print(f"gate {label}: {v:.2f}x (need >= {need:.2f}x) {'ok' if ok else 'FAIL'}")
+            if not ok:
+                failures.append(f"{label}: {v:.2f}x < {need:.2f}x")
+        if failures:
+            for msg in failures:
+                print(f"FAIL: {msg}")
+            raise SystemExit(1)
+        return
 
     trend = load_trend(args.trend)
     runs = [r for r in trend["runs"] if r.get("commit") != args.commit]
