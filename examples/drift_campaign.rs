@@ -9,16 +9,20 @@
 //! replays bit-for-bit from the campaign seed (see
 //! `tests/integration_drift.rs` for the determinism assertion).
 //!
+//! Two injection sites (`RnsCoreConfig::with_fault_site`):
+//!   * `capture` — drift hits the ADC capture; the retry recomputes the
+//!     dot product clean, so attempts > 1 recovers width > t bursts;
+//!   * `array` — drift hits the channel outputs themselves; retries
+//!     re-read the same corruption until the event's tile budget
+//!     expires, so width > t exhausts `max_attempts` no matter how
+//!     large the budget — the serving analogue of a stuck array fault.
+//!
 //! p_err here is the fraction of decoded output elements that stayed
-//! wrong after the retry budget (`exhausted / decoded`): width ≤ t
-//! bursts are corrected outright, width > t bursts are detected and —
-//! because drift corrupts the *capture* while the retry recomputes the
-//! dot product — recovered when attempts allow, which is exactly the
-//! cliff the table shows.
+//! wrong after the retry budget (`exhausted / decoded`).
 //!
 //! Run: cargo run --release --example drift_campaign [-- --seed=11 --batch=8]
 
-use rns_analog::analog::{RnsCore, RnsCoreConfig};
+use rns_analog::analog::{InjectionSite, RnsCore, RnsCoreConfig};
 use rns_analog::nn::models::{Batch, Mlp, Model};
 use rns_analog::rns::inject::FaultSpec;
 use rns_analog::tensor::Nhwc;
@@ -57,43 +61,65 @@ fn main() {
          p_err = exhausted / decoded\n"
     );
     println!(
-        "{:>5} {:>6} {:>9} {:>9} {:>10} {:>10} {:>10} {:>10} {:>11}",
-        "width", "tiles", "attempts", "decoded", "corrected", "detected", "exhausted", "p_err", "logit-mism"
+        "{:>7} {:>5} {:>6} {:>9} {:>9} {:>10} {:>10} {:>10} {:>10} {:>11}",
+        "site",
+        "width",
+        "tiles",
+        "attempts",
+        "decoded",
+        "corrected",
+        "detected",
+        "exhausted",
+        "p_err",
+        "logit-mism"
     );
 
-    for &width in &[1usize, 2, 3] {
-        for &tiles in &[1usize, 2, 4, 8] {
-            for &attempts in &[1u32, 3] {
-                let spec = FaultSpec::TemporalBurst { tiles, elems: 8, width };
-                let mut core = RnsCore::new(
-                    RnsCoreConfig::for_bits(bits, 128)
-                        .with_rrns(redundant, attempts)
-                        .with_fault_injection(spec, seed),
-                )
-                .expect("drift core");
-                let logits = model.forward(&input, &mut core);
-                let s = core.stats;
-                let p_err = s.exhausted as f64 / s.decoded.max(1) as f64;
-                let mismatch = logits
-                    .data
-                    .iter()
-                    .zip(&clean.data)
-                    .filter(|(a, b)| a.to_bits() != b.to_bits())
-                    .count();
-                println!(
-                    "{width:>5} {tiles:>6} {attempts:>9} {:>9} {:>10} {:>10} {:>10} {:>10.4} {:>6}/{:<4}",
-                    s.decoded, s.corrected, s.detections, s.exhausted, p_err, mismatch,
-                    logits.data.len(),
-                );
+    for &(site, site_name) in
+        &[(InjectionSite::Capture, "capture"), (InjectionSite::Array, "array")]
+    {
+        for &width in &[1usize, 2, 3] {
+            for &tiles in &[1usize, 2, 4, 8] {
+                for &attempts in &[1u32, 3] {
+                    let spec = FaultSpec::TemporalBurst { tiles, elems: 8, width };
+                    let mut core = RnsCore::new(
+                        RnsCoreConfig::for_bits(bits, 128)
+                            .with_rrns(redundant, attempts)
+                            .with_fault_injection(spec, seed)
+                            .with_fault_site(site),
+                    )
+                    .expect("drift core");
+                    let logits = model.forward(&input, &mut core);
+                    let s = core.stats;
+                    let p_err = s.exhausted as f64 / s.decoded.max(1) as f64;
+                    let mismatch = logits
+                        .data
+                        .iter()
+                        .zip(&clean.data)
+                        .filter(|(a, b)| a.to_bits() != b.to_bits())
+                        .count();
+                    println!(
+                        "{site_name:>7} {width:>5} {tiles:>6} {attempts:>9} {:>9} {:>10} {:>10} \
+                         {:>10} {:>10.4} {:>6}/{:<4}",
+                        s.decoded,
+                        s.corrected,
+                        s.detections,
+                        s.exhausted,
+                        p_err,
+                        mismatch,
+                        logits.data.len(),
+                    );
+                }
             }
         }
     }
 
     println!(
-        "\nreading the table: width <= t(=1) is corrected exactly (p_err 0, no logit \
-         mismatch); width > t is detected, and attempts > 1 recovers it through the \
-         recompute loop because drift hits the ADC capture, not the recomputed dot \
-         product.  Longer persistence (tiles) scales how many tiles share one \
-         rectangle, not the per-tile damage."
+        "\nreading the table: width <= t(=1) is corrected exactly at either site (p_err 0, \
+         no logit mismatch).  width > t splits the sites apart: capture-side drift is \
+         detected and recovered by attempts > 1 (the recompute re-reads clean arrays), \
+         while array-side drift survives every recompute — p_err stays put however large \
+         the attempt budget — because the corruption lives in the dot product itself \
+         until the event's tile budget expires.  Longer persistence (tiles) scales how \
+         many tiles share one rectangle, not the per-tile damage."
     );
 }

@@ -1,0 +1,101 @@
+//! Loopback gateway driver: connect N concurrent clients to a running
+//! `rns-analog serve --listen=...` gateway, pipeline requests over each
+//! session, and report throughput — the CI smoke job runs exactly this
+//! against a freshly started server and then asks it to drain with
+//! `--shutdown`.
+//!
+//! Run:
+//!   rns-analog serve --listen=127.0.0.1:7171 &
+//!   cargo run --release --example gateway_client -- \
+//!       --addr=127.0.0.1:7171 --requests=24 --clients=4 --shutdown
+//!
+//! The default model is `synthetic-mlp` (seeded in-process weights), so
+//! the pair works without `make artifacts`.
+
+use std::time::Instant;
+
+use rns_analog::net::Client;
+use rns_analog::nn::models::{Batch, SYNTHETIC_MLP};
+use rns_analog::tensor::Nhwc;
+use rns_analog::util::cli::Args;
+use rns_analog::util::rng::Rng;
+
+fn main() {
+    let mut args = Args::parse_from(std::env::args().skip(1)).expect("args");
+    let addr = args.get_or("addr", "127.0.0.1:7070");
+    let requests = args.get_parsed::<usize>("requests", 24).unwrap();
+    let clients = args.get_parsed::<usize>("clients", 4).unwrap().max(1);
+    let model = args.get_or("model", SYNTHETIC_MLP);
+    let shutdown = args.flag("shutdown");
+    if let Err(e) = args.check_unknown() {
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
+
+    let per_client = requests.div_ceil(clients);
+    let total = per_client * clients;
+    println!("driving {addr}: {clients} client(s) x {per_client} request(s), model `{model}`");
+
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let model = model.clone();
+        threads.push(std::thread::spawn(move || -> Result<usize, String> {
+            let mut client = Client::connect(&addr)?;
+            let mut rng = Rng::seed_from(42 + c as u64);
+            // pipeline: submit everything, then drain the replies
+            for _ in 0..per_client {
+                let img = Nhwc::from_vec(
+                    1,
+                    28,
+                    28,
+                    1,
+                    (0..28 * 28).map(|_| rng.uniform_f32(0.0, 1.0)).collect(),
+                );
+                client.submit(&model, &Batch::Images(img))?;
+            }
+            let mut ok = 0usize;
+            for _ in 0..per_client {
+                let reply = client.recv_infer()?;
+                assert_eq!(reply.logits.rows, 1, "one sample in, one logit row out");
+                ok += 1;
+            }
+            client.close();
+            Ok(ok)
+        }));
+    }
+    let mut ok = 0usize;
+    let mut failures = Vec::new();
+    for t in threads {
+        match t.join().expect("client thread") {
+            Ok(n) => ok += n,
+            Err(e) => failures.push(e),
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "completed {ok}/{total} request(s) in {:.2}s ({:.1} req/s)",
+        dt.as_secs_f64(),
+        ok as f64 / dt.as_secs_f64().max(1e-9)
+    );
+    for e in &failures {
+        eprintln!("client error: {e}");
+    }
+
+    // one admin session: liveness, a stats peek, optional drain request
+    let mut admin = Client::connect(&addr).expect("admin connect");
+    admin.ping().expect("ping");
+    let stats = admin.stats().expect("stats");
+    let gw_line = stats.lines().find(|l| l.starts_with("gateway:")).unwrap_or("");
+    println!("server: {gw_line}");
+    if shutdown {
+        let info = admin.shutdown_server().expect("shutdown request");
+        println!("shutdown requested ({info})");
+    }
+    admin.close();
+
+    if !failures.is_empty() || ok != total {
+        std::process::exit(1);
+    }
+}

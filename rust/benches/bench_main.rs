@@ -42,6 +42,7 @@ fn main() {
 
     micro_benches(&mut b, &want);
     serve_shaped_benches(&mut b, &want);
+    gateway_benches(&mut b, &want);
     figure_benches(&mut b, &want, quick);
 
     println!("\n{}", b.report());
@@ -369,6 +370,76 @@ fn serve_shaped_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
         }
         h
     });
+}
+
+/// The PR-5 acceptance pair: the same 24-request synthetic-MLP stream
+/// through the in-process coordinator API vs over loopback TCP through
+/// the gateway (4 pipelined client sessions).  Both sides pay full
+/// coordinator start/drain per iteration, so the ratio isolates the
+/// network tier: framing, per-session threads, response routing.  CI
+/// gates gateway >= 0.2x in-process (bench_trend.py `gateway`) — the
+/// wire must never cost more than the serving math.
+fn gateway_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
+    if !want("serve/gateway") && !want("serve/coordinator 24") {
+        return;
+    }
+    use rns_analog::net::{Client, Gateway, GatewayConfig};
+    use rns_analog::nn::models::SYNTHETIC_MLP;
+    use rns_analog::tensor::Nhwc;
+
+    const REQS: usize = 24;
+    const CLIENTS: usize = 4;
+    let backend = BackendKind::Rns { bits: 6, redundant: 0, attempts: 1, noise: NoiseModel::None };
+    let mk_cfg = || {
+        let mut cfg = CoordinatorConfig::new(backend.clone(), "/nonexistent");
+        cfg.workers = 2;
+        cfg
+    };
+    let input = || Batch::Images(Nhwc::zeros(1, 28, 28, 1));
+
+    b.bench_with_rate(
+        "serve/coordinator 24 reqs synthetic-mlp rns-b6 in-process",
+        REQS as f64,
+        "req/s",
+        || {
+            let coord = Coordinator::start(mk_cfg());
+            for _ in 0..REQS {
+                coord.submit(SYNTHETIC_MLP, input());
+            }
+            let r = coord.collect(REQS);
+            coord.shutdown();
+            r.len()
+        },
+    );
+    b.bench_with_rate(
+        "serve/gateway loopback 24 reqs synthetic-mlp rns-b6",
+        REQS as f64,
+        "req/s",
+        || {
+            let gw_cfg = GatewayConfig { listen_addr: "127.0.0.1:0".into(), ..Default::default() };
+            let gw = Gateway::start(Coordinator::start(mk_cfg()), gw_cfg).expect("gateway");
+            let addr = gw.local_addr().to_string();
+            let threads: Vec<_> = (0..CLIENTS)
+                .map(|_| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        let mut client = Client::connect(&addr).expect("connect");
+                        for _ in 0..REQS / CLIENTS {
+                            client.submit(SYNTHETIC_MLP, &input()).expect("submit");
+                        }
+                        for _ in 0..REQS / CLIENTS {
+                            client.recv_infer().expect("reply");
+                        }
+                        client.close();
+                    })
+                })
+                .collect();
+            for t in threads {
+                t.join().expect("client");
+            }
+            gw.shutdown()
+        },
+    );
 }
 
 fn figure_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool, quick: bool) {

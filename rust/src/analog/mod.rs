@@ -13,7 +13,7 @@ pub mod snr;
 pub use energy::EnergyMeter;
 pub use fixed_point_core::FixedPointCore;
 pub use noise::NoiseModel;
-pub use rns_core::{FaultStats, RnsCore, RnsCoreConfig};
+pub use rns_core::{FaultStats, InjectionSite, RnsCore, RnsCoreConfig};
 
 use crate::tensor::gemm::gemm_f32;
 use crate::tensor::MatF;

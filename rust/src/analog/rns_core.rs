@@ -89,14 +89,34 @@ pub struct RnsCoreConfig {
     /// paths are bit-identical by construction — this flag exists for the
     /// equivalence tests and the bench baseline, not for serving.
     pub reference_decode: bool,
-    /// Seeded fault injection applied to every *captured* tile before
-    /// decode (drift campaigns: `FaultSpec::TemporalBurst` persists one
-    /// corrupted rectangle across consecutive tiles).  Injected faults
-    /// are transient per capture — the RRNS retry loop recomputes from
-    /// the clean channel outputs through the configured `noise` model,
-    /// matching a drift event hitting the ADC capture, not the arrays.
-    /// `None` (the default) injects nothing.
+    /// Seeded fault injection applied to every tile (drift campaigns:
+    /// `FaultSpec::TemporalBurst` persists one corrupted rectangle
+    /// across consecutive tiles).  `None` (the default) injects nothing.
+    /// Where the corruption lands is `fault_site`'s call.
     pub fault_injection: Option<(FaultSpec, u64)>,
+    /// Which side of the ADC the injected fault models (ignored without
+    /// `fault_injection`):
+    ///
+    /// * `Capture` (default): the *captured* residues are corrupted and
+    ///   the retry loop recomputes from the clean channel outputs — a
+    ///   drift event hitting the ADC capture, recoverable by the
+    ///   paper's detect → recompute loop;
+    /// * `Array`: the channel outputs themselves are corrupted before
+    ///   capture, so every recompute of the same tile re-reads the same
+    ///   corruption until the drift event expires — the failure mode
+    ///   that exhausts `max_attempts` whenever the burst width exceeds
+    ///   the correction radius t.
+    pub fault_site: InjectionSite,
+}
+
+/// Where `RnsCoreConfig::fault_injection` corrupts a tile (see the
+/// field docs): at the ADC capture (retry recomputes clean) or in the
+/// analog array outputs (retry re-reads the same corruption).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum InjectionSite {
+    #[default]
+    Capture,
+    Array,
 }
 
 impl RnsCoreConfig {
@@ -112,6 +132,7 @@ impl RnsCoreConfig {
             seed: 0,
             reference_decode: false,
             fault_injection: None,
+            fault_site: InjectionSite::default(),
         }
     }
 
@@ -142,6 +163,13 @@ impl RnsCoreConfig {
     /// `(spec, seed)` whatever the noise model draws.
     pub fn with_fault_injection(mut self, spec: FaultSpec, seed: u64) -> Self {
         self.fault_injection = Some((spec, seed));
+        self
+    }
+
+    /// Choose where the injected faults land (capture vs array side);
+    /// see `fault_site`.
+    pub fn with_fault_site(mut self, site: InjectionSite) -> Self {
+        self.fault_site = site;
         self
     }
 }
@@ -460,16 +488,27 @@ impl RnsCore {
     /// ADC capture with noise, per channel, then decode.  Serial on purpose:
     /// all rng draws happen here in channel-major order, so outputs are
     /// identical whatever the engine's parallel schedule was.
-    fn capture_and_decode(&mut self, clean: Vec<MatI>) -> MatI {
+    fn capture_and_decode(&mut self, mut clean: Vec<MatI>) -> MatI {
+        // array-side drift corrupts the channel outputs *before* capture:
+        // the retry loop recomputes from the same corrupted values, so a
+        // burst wider than t exhausts `max_attempts` instead of being
+        // recovered — the event only clears when its tile budget expires
+        if self.cfg.fault_site == InjectionSite::Array {
+            if let Some(inj) = &mut self.injector {
+                inj.corrupt_tile(&mut clean, &self.all_ctx.moduli);
+            }
+        }
         let mut captured: Vec<MatI> = Vec::with_capacity(clean.len());
         for (u, ch) in self.units.iter().zip(&clean) {
             captured.push(u.recapture(ch, &mut self.rng, &mut self.meter));
         }
-        // drift-campaign injection corrupts the captured residues only:
-        // the retry loop recomputes from `clean` (plus the noise model),
-        // so a detected injected fault is recoverable by recompute
-        if let Some(inj) = &mut self.injector {
-            inj.corrupt_tile(&mut captured, &self.all_ctx.moduli);
+        // capture-side drift corrupts the captured residues only: the
+        // retry loop recomputes from `clean` (plus the noise model), so
+        // a detected injected fault is recoverable by recompute
+        if self.cfg.fault_site == InjectionSite::Capture {
+            if let Some(inj) = &mut self.injector {
+                inj.corrupt_tile(&mut captured, &self.all_ctx.moduli);
+            }
         }
         self.decode_tile(&clean, captured)
     }

@@ -23,11 +23,23 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Max time the oldest request may wait before the batch is flushed.
     pub max_wait: Duration,
+    /// How long a model's queue slot may sit empty before compaction
+    /// removes it.  Slots are created on first sight of a name — unknown
+    /// names included, since the load failure happens worker-side — so
+    /// without compaction a gateway fed many distinct names grows one
+    /// permanent slot per name and every `pop_ready` scans them all.
+    /// Recently-emptied slots survive, preserving the oldest-queue-first
+    /// flush priority for any model still in its serving cadence.
+    pub compact_idle: Duration,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            compact_idle: Duration::from_secs(2),
+        }
     }
 }
 
@@ -39,11 +51,14 @@ pub struct FormedBatch {
     pub members: Vec<(InferenceRequest, usize)>, // (request, sample offset)
 }
 
-/// One model's FIFO slot (slots are created on first sight of a model
-/// and never removed, so slot order is first-seen order).
+/// One model's FIFO slot (created on first sight of a model; removed
+/// only by compaction after sitting empty for `compact_idle`, so slot
+/// order is first-seen order for every model still in cadence).
 struct ModelQueue {
     model: String,
     q: VecDeque<InferenceRequest>,
+    /// When this queue last became empty (`None` while non-empty).
+    empty_since: Option<Instant>,
 }
 
 /// Per-model FIFO with age- and size-triggered flushing.
@@ -53,7 +68,11 @@ struct ModelQueue {
 /// *oldest queue* flushes first — the fairness property the
 /// `flush_prefers_the_oldest_queue` regression test pins down (an
 /// emptied queue keeps its slot, so a refilled model keeps its
-/// priority).
+/// priority).  Slots empty for longer than `compact_idle` are compacted
+/// away (survivors keep their relative order; the index map is
+/// renumbered), so a request stream naming many distinct models — e.g. a
+/// gateway fed garbage names, which enqueue before the worker-side load
+/// fails — cannot grow the scan set without bound.
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
     queues: Vec<ModelQueue>,
@@ -67,13 +86,16 @@ impl DynamicBatcher {
 
     pub fn push(&mut self, req: InferenceRequest) {
         match self.index.get(&req.model) {
-            Some(&i) => self.queues[i].q.push_back(req),
+            Some(&i) => {
+                self.queues[i].empty_since = None;
+                self.queues[i].q.push_back(req);
+            }
             None => {
                 let model = req.model.clone();
                 self.index.insert(model.clone(), self.queues.len());
                 let mut q = VecDeque::new();
                 q.push_back(req);
-                self.queues.push(ModelQueue { model, q });
+                self.queues.push(ModelQueue { model, q, empty_since: None });
             }
         }
     }
@@ -82,9 +104,38 @@ impl DynamicBatcher {
         self.queues.iter().map(|mq| mq.q.len()).sum()
     }
 
+    /// Number of per-model queue slots currently held (compaction keeps
+    /// this bounded by the set of recently-active models).
+    pub fn model_slots(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Drop slots that have sat empty for `compact_idle`, renumbering
+    /// the index map without reordering survivors.  A compacted model
+    /// that reappears starts a fresh slot at the back of the flush
+    /// order — it left its serving cadence, so it re-queues like a new
+    /// name (`flush_prefers_the_oldest_queue` only covers slots that
+    /// refill within the idle window).
+    fn compact(&mut self, now: Instant) {
+        let idle = self.cfg.compact_idle;
+        let stale = |mq: &ModelQueue| {
+            mq.q.is_empty()
+                && mq.empty_since.map(|t| now.duration_since(t) >= idle).unwrap_or(false)
+        };
+        if !self.queues.iter().any(stale) {
+            return; // common case: nothing to do, no index rebuild
+        }
+        self.queues.retain(|mq| !stale(mq));
+        self.index.clear();
+        for (i, mq) in self.queues.iter().enumerate() {
+            self.index.insert(mq.model.clone(), i);
+        }
+    }
+
     /// Pop a ready batch, if any queue hit `max_batch` samples or its head
     /// request is older than `max_wait` (or `force` drains regardless).
     pub fn pop_ready(&mut self, now: Instant, force: bool) -> Option<FormedBatch> {
+        self.compact(now);
         let cfg = self.cfg;
         let idx = self.queues.iter().position(|mq| {
             let q = &mq.q;
@@ -95,21 +146,24 @@ impl DynamicBatcher {
                     || head_age.map(|a| a >= cfg.max_wait).unwrap_or(false)
                     || force)
         })?;
-        let ModelQueue { model, q } = &mut self.queues[idx];
-        let model = model.clone();
+        let mq = &mut self.queues[idx];
+        let model = mq.model.clone();
         let mut members = Vec::new();
         let mut samples = 0usize;
-        while let Some(front) = q.front() {
+        while let Some(front) = mq.q.front() {
             let ns = front.num_samples();
             if !members.is_empty() && samples + ns > cfg.max_batch {
                 break;
             }
-            let req = q.pop_front().unwrap();
+            let req = mq.q.pop_front().unwrap();
             members.push((req, samples));
             samples += ns;
             if samples >= cfg.max_batch {
                 break;
             }
+        }
+        if mq.q.is_empty() {
+            mq.empty_since = Some(now); // compaction countdown starts now
         }
         let input = concat_inputs(members.iter().map(|(r, _)| &r.input));
         Some(FormedBatch { model, input, members })
@@ -164,9 +218,13 @@ mod tests {
         InferenceRequest::new(id, model, Batch::Images(Nhwc::zeros(n, 2, 2, 1)))
     }
 
+    fn cfg(max_batch: usize, max_wait: Duration) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait, ..Default::default() }
+    }
+
     #[test]
     fn batches_by_size() {
-        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let mut b = DynamicBatcher::new(cfg(4, Duration::from_secs(10)));
         for i in 0..3 {
             b.push(img_req(i, "mlp", 1));
         }
@@ -180,7 +238,7 @@ mod tests {
 
     #[test]
     fn flushes_on_age() {
-        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 100, max_wait: Duration::from_millis(0) });
+        let mut b = DynamicBatcher::new(cfg(100, Duration::from_millis(0)));
         b.push(img_req(0, "mlp", 2));
         let fb = b.pop_ready(Instant::now() + Duration::from_millis(1), false).unwrap();
         assert_eq!(fb.input.len(), 2);
@@ -188,7 +246,7 @@ mod tests {
 
     #[test]
     fn separates_models() {
-        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let mut b = DynamicBatcher::new(cfg(2, Duration::from_secs(10)));
         b.push(img_req(0, "mlp", 1));
         b.push(img_req(1, "cnn", 1));
         assert!(b.pop_ready(Instant::now(), false).is_none());
@@ -203,10 +261,7 @@ mod tests {
         // regression for the index-map rewrite: when several models are
         // ready, the first-seen queue flushes first, and a queue that
         // emptied and refilled keeps its original slot (and priority)
-        let mut b = DynamicBatcher::new(BatcherConfig {
-            max_batch: 100,
-            max_wait: Duration::from_millis(0),
-        });
+        let mut b = DynamicBatcher::new(cfg(100, Duration::from_millis(0)));
         b.push(img_req(0, "a", 1));
         b.push(img_req(1, "b", 1));
         b.push(img_req(2, "c", 1));
@@ -234,8 +289,50 @@ mod tests {
     }
 
     #[test]
+    fn long_empty_slots_compact_without_reordering_survivors() {
+        // regression for slot compaction: a stream of one-shot model
+        // names (e.g. garbage names fed to the gateway) must not grow a
+        // permanent slot each, while slots still in cadence keep their
+        // first-seen flush order
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(3600),
+            compact_idle: Duration::from_millis(10),
+        });
+        let t0 = Instant::now();
+        for i in 0..10 {
+            b.push(img_req(i, &format!("spam-{i}"), 1));
+        }
+        for _ in 0..10 {
+            assert!(b.pop_ready(t0, true).is_some());
+        }
+        assert_eq!(b.model_slots(), 10, "emptied slots linger until the idle window passes");
+        b.push(img_req(20, "a", 1));
+        b.push(img_req(21, "b", 1));
+        assert_eq!(b.model_slots(), 12);
+        // past the idle window: the 10 spam slots compact away, and the
+        // survivors flush in their original relative order (a before b)
+        let later = t0 + Duration::from_millis(50);
+        assert_eq!(b.pop_ready(later, true).unwrap().model, "a");
+        assert_eq!(b.model_slots(), 2, "compaction removed exactly the stale slots");
+        assert_eq!(b.pop_ready(later, true).unwrap().model, "b");
+        // a refill within the idle window reuses the surviving slot
+        b.push(img_req(22, "a", 1));
+        assert_eq!(b.model_slots(), 2);
+        assert_eq!(b.pop_ready(later, true).unwrap().model, "a");
+        // a compacted name returning starts a fresh slot at the back
+        b.push(img_req(23, "spam-3", 1));
+        assert_eq!(b.model_slots(), 3);
+        let even_later = later + Duration::from_millis(50);
+        // a and b sat empty since `later`: they compact now; spam-3 flushes
+        assert_eq!(b.pop_ready(even_later, true).unwrap().model, "spam-3");
+        assert_eq!(b.model_slots(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
     fn offsets_track_sample_positions() {
-        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(10) });
+        let mut b = DynamicBatcher::new(cfg(8, Duration::from_secs(10)));
         b.push(img_req(0, "mlp", 3));
         b.push(img_req(1, "mlp", 2));
         b.push(img_req(2, "mlp", 3));
@@ -246,7 +343,7 @@ mod tests {
 
     #[test]
     fn oversize_request_forms_own_batch() {
-        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let mut b = DynamicBatcher::new(cfg(2, Duration::from_secs(10)));
         b.push(img_req(0, "mlp", 5)); // bigger than max_batch
         let fb = b.pop_ready(Instant::now(), false).unwrap();
         assert_eq!(fb.members.len(), 1);
@@ -255,7 +352,7 @@ mod tests {
 
     #[test]
     fn token_concat() {
-        let mut b = DynamicBatcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(10) });
+        let mut b = DynamicBatcher::new(cfg(2, Duration::from_secs(10)));
         let t1 = Batch::Tokens { tokens: vec![1, 2], batch: 1, seq: 2 };
         let t2 = Batch::Tokens { tokens: vec![3, 4], batch: 1, seq: 2 };
         b.push(InferenceRequest::new(0, "bert", t1));

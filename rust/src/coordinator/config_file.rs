@@ -18,6 +18,9 @@
 //! plan_store_capacity = 64        # LRU bound for untagged (sweep) plans
 //! fabric_threads = 0              # shared-fabric thread budget (0 = auto:
 //!                                 # RNS_NATIVE_THREADS, else core count)
+//! listen_addr = "127.0.0.1:7070"  # TCP gateway (omit to stay in-process)
+//! max_sessions = 64               # gateway admission cap
+//! idle_timeout_ms = 30000         # per-session read/write timeout
 //! ```
 
 use std::time::Duration;
@@ -26,6 +29,7 @@ use crate::analog::NoiseModel;
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::router::RoutingKind;
 use crate::coordinator::server::{BackendKind, CoordinatorConfig};
+use crate::net::gateway::GatewayConfig;
 use crate::util::config::Config;
 
 /// Build a `CoordinatorConfig` from a parsed config file.
@@ -73,6 +77,7 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
     out.batcher = BatcherConfig {
         max_batch: cfg.int_or("serve.max_batch", 8).max(1) as usize,
         max_wait: Duration::from_micros(cfg.int_or("serve.max_wait_us", 2000).max(0) as u64),
+        ..Default::default()
     };
     out.seed = cfg.int_or("core.seed", 0) as u64;
     out.routing = routing;
@@ -92,6 +97,35 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
 /// Load from a file path.
 pub fn from_file(path: &str, artifacts_dir: &str) -> Result<CoordinatorConfig, String> {
     from_config(&Config::from_file(path)?, artifacts_dir)
+}
+
+/// Gateway block of a parsed config: `Some` iff `serve.listen_addr` is
+/// set (no listen address = the in-process serving path, as before).
+pub fn gateway_from_config(cfg: &Config) -> Result<Option<GatewayConfig>, String> {
+    let listen_addr = cfg.str_or("serve.listen_addr", "");
+    if listen_addr.is_empty() {
+        return Ok(None);
+    }
+    let defaults = GatewayConfig::default();
+    let max_sessions = cfg.int_or("serve.max_sessions", defaults.max_sessions as i64);
+    if max_sessions < 1 {
+        return Err("serve.max_sessions must be >= 1".into());
+    }
+    let idle_ms = cfg.int_or("serve.idle_timeout_ms", defaults.idle_timeout.as_millis() as i64);
+    if idle_ms < 1 {
+        return Err("serve.idle_timeout_ms must be >= 1".into());
+    }
+    Ok(Some(GatewayConfig {
+        listen_addr,
+        max_sessions: max_sessions as usize,
+        idle_timeout: Duration::from_millis(idle_ms as u64),
+    }))
+}
+
+/// Gateway block from a file path (`None` if the file has no
+/// `serve.listen_addr`).
+pub fn gateway_from_file(path: &str) -> Result<Option<GatewayConfig>, String> {
+    gateway_from_config(&Config::from_file(path)?)
 }
 
 #[cfg(test)]
@@ -172,6 +206,36 @@ fabric_threads = 6
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(from_config(&cfg, "/tmp/a").is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn gateway_block_parses_and_defaults() {
+        // no listen address: no gateway, whatever else [serve] says
+        let cfg = Config::parse("[serve]\nworkers = 2\n").unwrap();
+        assert!(gateway_from_config(&cfg).unwrap().is_none());
+        // listen address alone: defaults for the rest
+        let cfg = Config::parse("[serve]\nlisten_addr = \"127.0.0.1:7070\"\n").unwrap();
+        let gw = gateway_from_config(&cfg).unwrap().expect("gateway");
+        assert_eq!(gw.listen_addr, "127.0.0.1:7070");
+        assert_eq!(gw.max_sessions, GatewayConfig::default().max_sessions);
+        assert_eq!(gw.idle_timeout, GatewayConfig::default().idle_timeout);
+        // full block
+        let cfg = Config::parse(
+            "[serve]\nlisten_addr = \"0.0.0.0:9000\"\nmax_sessions = 8\nidle_timeout_ms = 1500\n",
+        )
+        .unwrap();
+        let gw = gateway_from_config(&cfg).unwrap().expect("gateway");
+        assert_eq!(gw.listen_addr, "0.0.0.0:9000");
+        assert_eq!(gw.max_sessions, 8);
+        assert_eq!(gw.idle_timeout, Duration::from_millis(1500));
+        // bad values
+        for bad in [
+            "[serve]\nlisten_addr = \"x\"\nmax_sessions = 0",
+            "[serve]\nlisten_addr = \"x\"\nidle_timeout_ms = 0",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(gateway_from_config(&cfg).is_err(), "{bad}");
         }
     }
 }

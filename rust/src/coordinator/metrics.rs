@@ -41,6 +41,12 @@ pub struct ServingMetrics {
     /// workers × model layers — adoption is per worker; the shared plan
     /// store's `builds` counter shows the deduplicated build count).
     pub plans_built: u64,
+    /// Data-converter activity summed across workers (exact integer
+    /// conversion counts from each core's `EnergyMeter` — deterministic,
+    /// which is what lets the gateway tests compare a served stream
+    /// against the in-process path down to the converter count).
+    pub energy_dac_conversions: u64,
+    pub energy_adc_conversions: u64,
     /// Proactive unloads issued through the worker control plane, and
     /// how many worker-held model instances they released (a worker that
     /// never held the model acks without a release).
@@ -53,9 +59,29 @@ pub struct ServingMetrics {
     /// Execution-fabric snapshot attached at shutdown (native RNS
     /// backends only).
     fabric: Option<FabricStats>,
+    /// TCP gateway snapshot (sessions/frames/latency), attached by the
+    /// gateway before it renders a live or shutdown report.
+    gateway: Option<GatewayReport>,
     latency_us: Percentiles,
     queue_us: Percentiles,
     batch_sizes: Percentiles,
+}
+
+/// The TCP serving gateway's counters, rendered as `gateway:` report
+/// lines.  Latency here is gateway-side request latency (submit →
+/// response delivery), so it includes queueing + compute but not the
+/// client's network hop.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GatewayReport {
+    pub sessions_accepted: u64,
+    pub sessions_active: u64,
+    pub sessions_rejected: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub protocol_errors: u64,
+    pub http_scrapes: u64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
 }
 
 impl ServingMetrics {
@@ -97,6 +123,12 @@ impl ServingMetrics {
     /// for the shutdown report.
     pub fn set_fabric(&mut self, stats: FabricStats) {
         self.fabric = Some(stats);
+    }
+
+    /// Attach the TCP gateway's session/frame counters (rendered as
+    /// `gateway:` lines after the global + per-model blocks).
+    pub fn set_gateway(&mut self, g: GatewayReport) {
+        self.gateway = Some(g);
     }
 
     /// Record one control-plane unload and how many worker-held
@@ -165,6 +197,10 @@ impl ServingMetrics {
             self.decode_voted,
         );
         out.push_str(&format!(
+            "\nenergy: dac-conversions={} adc-conversions={}",
+            self.energy_dac_conversions, self.energy_adc_conversions,
+        ));
+        out.push_str(&format!(
             "\nunloads: proactive={} worker-releases={}",
             self.unload_requests, self.proactive_releases,
         ));
@@ -196,6 +232,23 @@ impl ServingMetrics {
             out.push_str(&format!(
                 "\nfabric: threads={} helpers={} workers={} budget={} jobs={} tasks={}",
                 f.total_threads, f.helper_threads, f.workers, f.budget, f.jobs, f.tasks,
+            ));
+        }
+        if let Some(g) = &self.gateway {
+            out.push_str(&format!(
+                "\ngateway: sessions={} active={} rejects={} frames-in={} frames-out={} \
+                 protocol-errors={} scrapes={}",
+                g.sessions_accepted,
+                g.sessions_active,
+                g.sessions_rejected,
+                g.frames_in,
+                g.frames_out,
+                g.protocol_errors,
+                g.http_scrapes,
+            ));
+            out.push_str(&format!(
+                "\ngateway latency: p50={:.0}µs p99={:.0}µs",
+                g.latency_p50_us, g.latency_p99_us,
             ));
         }
         out
@@ -246,6 +299,19 @@ mod tests {
             jobs: 11,
             tasks: 120,
         });
+        m.energy_dac_conversions = 500;
+        m.energy_adc_conversions = 700;
+        m.set_gateway(GatewayReport {
+            sessions_accepted: 9,
+            sessions_active: 2,
+            sessions_rejected: 1,
+            frames_in: 40,
+            frames_out: 41,
+            protocol_errors: 3,
+            http_scrapes: 5,
+            latency_p50_us: 1000.0,
+            latency_p99_us: 9000.0,
+        });
         let rep = m.report(Duration::from_secs(1));
         // global decode line precedes per-model lines (report parsers key
         // on the first `fast-path=` occurrence)
@@ -260,5 +326,17 @@ mod tests {
         assert!(rep.contains("model=mlp: batches=2 decode fast-path=150 voted=4"));
         assert!(rep.contains("plan store: resident=16 bytes=4096 builds=16 hits=48 evicted=0"));
         assert!(rep.contains("plan store model=mlp: resident=3 bytes=1024 hits=9 misses=3"));
+        assert!(rep.contains("energy: dac-conversions=500 adc-conversions=700"), "{rep}");
+        assert!(
+            rep.contains(
+                "gateway: sessions=9 active=2 rejects=1 frames-in=40 frames-out=41 \
+                 protocol-errors=3 scrapes=5"
+            ),
+            "{rep}"
+        );
+        assert!(rep.contains("gateway latency: p50=1000µs p99=9000µs"), "{rep}");
+        // the gateway block renders after the PR-2 global lines, so old
+        // parsers keyed on first occurrences are unaffected
+        assert!(rep.find("decode: fast-path=0").unwrap() < rep.find("gateway: sessions=").unwrap());
     }
 }

@@ -13,7 +13,7 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
-pub use metrics::ServingMetrics;
+pub use metrics::{GatewayReport, ServingMetrics};
 pub use router::{RoutingKind, RoutingPolicy};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
-pub use server::{BackendKind, Coordinator, CoordinatorConfig};
+pub use server::{BackendKind, Coordinator, CoordinatorConfig, CoordinatorHandle};

@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use crate::analog::{FixedPointCore, Fp32Backend, GemmBackend, NoiseModel, RnsCore, RnsCoreConfig};
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
-use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::metrics::{GatewayReport, ServingMetrics};
 use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestId};
 use crate::coordinator::router::RoutingKind;
 use crate::nn::models::{Batch, Model, ModelRegistry};
@@ -122,15 +122,52 @@ enum WorkerEvent {
     Unload { model: String, ack: Sender<UnloadAck> },
 }
 
+/// Per-request response routing callback (registered by
+/// `CoordinatorHandle::submit_routed`; the TCP gateway's session threads
+/// use it to steer each reply back to the session that asked).
+type DeliverFn = Box<dyn FnOnce(InferenceResponse) + Send>;
+
+/// Request id → delivery callback for routed submissions.
+type ResponseRoutes = Arc<Mutex<HashMap<RequestId, DeliverFn>>>;
+
+/// How workers hand responses back: a routed request's callback wins,
+/// everything else lands on the coordinator's default response channel
+/// (the in-process `recv`/`collect` API).
+#[derive(Clone)]
+struct Responder {
+    default_tx: Sender<InferenceResponse>,
+    routes: ResponseRoutes,
+}
+
+impl Responder {
+    fn deliver(&self, resp: InferenceResponse) {
+        // take the callback out under the lock, call it after: a delivery
+        // callback may itself take locks (gateway latency percentiles)
+        let cb = self.routes.lock().unwrap().remove(&resp.id);
+        match cb {
+            Some(cb) => cb(resp),
+            None => {
+                self.default_tx.send(resp).ok();
+            }
+        }
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    submit_tx: Option<Sender<InferenceRequest>>,
+    /// Shared with every `CoordinatorHandle`; `shutdown` takes the inner
+    /// sender so *all* handles see the closed door at once (otherwise a
+    /// live gateway handle would keep the dispatcher alive forever).
+    submit_tx: Arc<Mutex<Option<Sender<InferenceRequest>>>>,
     resp_rx: Receiver<InferenceResponse>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
+    routes: ResponseRoutes,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     /// Per-worker control channels (proactive unload + shutdown drain).
-    control_txs: Vec<Sender<ControlMsg>>,
+    /// Behind a mutex so `CoordinatorHandle` (shared across gateway
+    /// session threads) stays `Sync` on every supported toolchain.
+    control_txs: Arc<Mutex<Vec<Sender<ControlMsg>>>>,
     metrics: Arc<Mutex<ServingMetrics>>,
     /// Shared read-only plan store (one `RnsPlan` per layer across all
     /// workers); its counters land in the shutdown report.
@@ -165,6 +202,9 @@ impl Coordinator {
             _ => None,
         };
 
+        let routes: ResponseRoutes = Arc::new(Mutex::new(HashMap::new()));
+        let responder = Responder { default_tx: resp_tx, routes: Arc::clone(&routes) };
+
         let mut worker_txs = Vec::new();
         let mut control_txs = Vec::new();
         let mut workers = Vec::new();
@@ -177,7 +217,7 @@ impl Coordinator {
                 cfg: cfg.clone(),
                 store: Arc::clone(&store),
                 registry: Arc::clone(&registry),
-                resp_tx: resp_tx.clone(),
+                responder: responder.clone(),
                 done_tx: done_tx.clone(),
                 metrics: Arc::clone(&metrics),
                 fabric: fabric.as_ref().map(|f| f.handle()),
@@ -201,17 +241,37 @@ impl Coordinator {
             .expect("spawn dispatcher");
 
         Coordinator {
-            submit_tx: Some(submit_tx),
+            submit_tx: Arc::new(Mutex::new(Some(submit_tx))),
             resp_rx,
-            next_id: AtomicU64::new(1),
+            next_id: Arc::new(AtomicU64::new(1)),
+            routes,
             dispatcher: Some(dispatcher),
             workers,
-            control_txs,
+            control_txs: Arc::new(Mutex::new(control_txs)),
             metrics,
             store,
             registry,
             fabric,
             started: Instant::now(),
+        }
+    }
+
+    /// A clonable, thread-safe handle onto this coordinator: submit with
+    /// per-request response routing, load/unload models, and render the
+    /// live metrics report.  This is the surface the TCP gateway's
+    /// acceptor and session threads hold (the `Coordinator` itself owns
+    /// the response receiver and cannot be shared).
+    pub fn handle(&self) -> CoordinatorHandle {
+        CoordinatorHandle {
+            submit_tx: Arc::clone(&self.submit_tx),
+            next_id: Arc::clone(&self.next_id),
+            routes: Arc::clone(&self.routes),
+            metrics: Arc::clone(&self.metrics),
+            store: Arc::clone(&self.store),
+            registry: Arc::clone(&self.registry),
+            fabric: self.fabric.as_ref().map(Arc::clone),
+            control_txs: Arc::clone(&self.control_txs),
+            started: self.started,
         }
     }
 
@@ -248,48 +308,20 @@ impl Coordinator {
     /// out the name stays draining — the conservative pre-control-plane
     /// behavior.  Returns how many plans were evicted.
     pub fn unload_model(&self, name: &str) -> usize {
-        let evicted = self.store.unload_model(name);
-        self.registry.unload(name);
-        let (ack_tx, ack_rx) = mpsc::channel();
-        let mut sent = 0usize;
-        for tx in &self.control_txs {
-            if tx.send(ControlMsg::Unload { model: name.to_string(), ack: ack_tx.clone() }).is_ok() {
-                sent += 1;
-            }
-        }
-        drop(ack_tx);
-        let mut acked = 0usize;
-        let mut released = 0u64;
-        while acked < sent {
-            match ack_rx.recv_timeout(UNLOAD_ACK_TIMEOUT) {
-                Ok(ack) => {
-                    acked += 1;
-                    if ack.dropped {
-                        released += 1;
-                    }
-                }
-                Err(_) => break,
-            }
-        }
-        if acked == sent {
-            // every worker released: a later request for the name loads
-            // a fresh instance and pins fresh plans as usual
-            self.store.activate_model(name);
-        } else {
-            crate::log_warn!(
-                "coordinator",
-                "unload `{name}`: only {acked}/{sent} workers acked; name stays draining"
-            );
-        }
-        self.metrics.lock().unwrap().record_unload(released);
-        evicted
+        unload_model_via(&self.store, &self.registry, &self.control_txs, &self.metrics, name)
     }
 
     /// Submit a request; returns its id immediately.
     pub fn submit(&self, model: &str, input: Batch) -> RequestId {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = InferenceRequest::new(id, model, input);
-        self.submit_tx.as_ref().expect("coordinator running").send(req).expect("dispatcher alive");
+        self.submit_tx
+            .lock()
+            .unwrap()
+            .as_ref()
+            .expect("coordinator running")
+            .send(req)
+            .expect("dispatcher alive");
         id
     }
 
@@ -311,13 +343,16 @@ impl Coordinator {
     /// and return the final report (plan store, fabric, and per-model
     /// counters included).
     pub fn shutdown(mut self) -> String {
-        drop(self.submit_tx.take()); // dispatcher sees the channel close
+        // taking the shared Option drops the one real sender, so every
+        // CoordinatorHandle clone is closed too and the dispatcher sees
+        // the channel disconnect
+        self.submit_tx.lock().unwrap().take();
         if let Some(d) = self.dispatcher.take() {
             d.join().ok();
         }
         // every batch is now queued at some worker: drain via the control
         // plane (workers finish their queues before exiting)
-        for tx in &self.control_txs {
+        for tx in self.control_txs.lock().unwrap().iter() {
             tx.send(ControlMsg::Shutdown).ok();
         }
         for w in self.workers.drain(..) {
@@ -331,6 +366,130 @@ impl Coordinator {
         }
         m.report(wall)
     }
+}
+
+/// Clonable, `Send + Sync` view onto a running coordinator — the surface
+/// gateway session threads (and any other concurrent submitter) hold.
+/// Every clone shares the coordinator's submit door: after
+/// `Coordinator::shutdown` takes the sender, `submit_routed` on any
+/// handle returns an error instead of hanging.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    submit_tx: Arc<Mutex<Option<Sender<InferenceRequest>>>>,
+    next_id: Arc<AtomicU64>,
+    routes: ResponseRoutes,
+    metrics: Arc<Mutex<ServingMetrics>>,
+    store: Arc<PlanStore>,
+    registry: Arc<ModelRegistry>,
+    fabric: Option<Arc<ExecutionFabric>>,
+    control_txs: Arc<Mutex<Vec<Sender<ControlMsg>>>>,
+    started: Instant,
+}
+
+impl CoordinatorHandle {
+    /// Submit with per-request response routing: `deliver` is invoked
+    /// (once, from the worker that served the batch) with this request's
+    /// response instead of the response landing on `Coordinator::recv`.
+    /// Registration happens before the send, so a response can never
+    /// race past its route.
+    pub fn submit_routed(
+        &self,
+        model: &str,
+        input: Batch,
+        deliver: impl FnOnce(InferenceResponse) + Send + 'static,
+    ) -> Result<RequestId, String> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.routes.lock().unwrap().insert(id, Box::new(deliver));
+        let sent = match self.submit_tx.lock().unwrap().as_ref() {
+            Some(tx) => tx.send(InferenceRequest::new(id, model, input)).is_ok(),
+            None => false,
+        };
+        if !sent {
+            self.routes.lock().unwrap().remove(&id);
+            return Err("coordinator is shut down".into());
+        }
+        Ok(id)
+    }
+
+    /// Load a model into the shared registry now (workers still warm
+    /// their plans on first batch).  An explicit gateway `LoadModel`
+    /// frame pays the filesystem load before traffic arrives.
+    pub fn load_model(&self, name: &str) -> Result<(), String> {
+        self.registry.get_or_load(name).map(|_| ())
+    }
+
+    /// Proactive model unload through the worker control plane; see
+    /// `Coordinator::unload_model`.  Returns evicted plan count.
+    pub fn unload_model(&self, name: &str) -> usize {
+        unload_model_via(&self.store, &self.registry, &self.control_txs, &self.metrics, name)
+    }
+
+    /// Render the live metrics report (same shape as the shutdown
+    /// report, including the plan-store and fabric blocks) without
+    /// stopping anything — the `Stats` frame and `GET /metrics` body.
+    pub fn live_report(&self) -> String {
+        let wall = self.started.elapsed();
+        let mut m = self.metrics.lock().unwrap();
+        m.set_plan_store(self.store.stats(), self.store.model_stats());
+        if let Some(f) = &self.fabric {
+            m.set_fabric(f.stats());
+        }
+        m.report(wall)
+    }
+
+    /// Attach the gateway's session/frame counters so they render in
+    /// every subsequent report (live and shutdown).
+    pub fn set_gateway_report(&self, g: GatewayReport) {
+        self.metrics.lock().unwrap().set_gateway(g);
+    }
+}
+
+/// Shared implementation of the proactive unload (used by the owning
+/// `Coordinator` and by every `CoordinatorHandle`): store unload first
+/// (the name starts draining), then registry, then the control fan-out,
+/// then end the draining state once every worker acked.
+fn unload_model_via(
+    store: &Arc<PlanStore>,
+    registry: &Arc<ModelRegistry>,
+    control_txs: &Arc<Mutex<Vec<Sender<ControlMsg>>>>,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+    name: &str,
+) -> usize {
+    let evicted = store.unload_model(name);
+    registry.unload(name);
+    let (ack_tx, ack_rx) = mpsc::channel();
+    let mut sent = 0usize;
+    for tx in control_txs.lock().unwrap().iter() {
+        if tx.send(ControlMsg::Unload { model: name.to_string(), ack: ack_tx.clone() }).is_ok() {
+            sent += 1;
+        }
+    }
+    drop(ack_tx);
+    let mut acked = 0usize;
+    let mut released = 0u64;
+    while acked < sent {
+        match ack_rx.recv_timeout(UNLOAD_ACK_TIMEOUT) {
+            Ok(ack) => {
+                acked += 1;
+                if ack.dropped {
+                    released += 1;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if acked == sent {
+        // every worker released: a later request for the name loads
+        // a fresh instance and pins fresh plans as usual
+        store.activate_model(name);
+    } else {
+        crate::log_warn!(
+            "coordinator",
+            "unload `{name}`: only {acked}/{sent} workers acked; name stays draining"
+        );
+    }
+    metrics.lock().unwrap().record_unload(released);
+    evicted
 }
 
 fn dispatcher_loop(
@@ -442,7 +601,7 @@ struct WorkerShared {
     cfg: CoordinatorConfig,
     store: Arc<PlanStore>,
     registry: Arc<ModelRegistry>,
-    resp_tx: Sender<InferenceResponse>,
+    responder: Responder,
     done_tx: Sender<usize>,
     metrics: Arc<Mutex<ServingMetrics>>,
     fabric: Option<FabricHandle>,
@@ -458,6 +617,8 @@ struct WorkerCounters {
     plans: u64,
     fast: u64,
     voted: u64,
+    dac: u64,
+    adc: u64,
 }
 
 /// Interleave one worker's batch stream with its control stream: control
@@ -528,7 +689,7 @@ fn worker_loop(
                 // unload_model never hangs on a dead worker
                 worker_message_pump(&rx, &ctrl_rx, |ev| match ev {
                     WorkerEvent::Batch(batch) => {
-                        fail_batch(wid, batch, &e, &sh.resp_tx, &sh.metrics)
+                        fail_batch(wid, batch, &e, &sh.responder, &sh.metrics)
                     }
                     WorkerEvent::Unload { ack, .. } => {
                         ack.send(UnloadAck { dropped: false }).ok();
@@ -579,7 +740,7 @@ fn serve_batch(
         Ok(m) => m,
         Err(e) => {
             crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
-            fail_batch(wid, batch, &e, &sh.resp_tx, &sh.metrics);
+            fail_batch(wid, batch, &e, &sh.responder, &sh.metrics);
             return;
         }
     };
@@ -626,6 +787,15 @@ fn serve_batch(
     let plans_now = backend.plans_built();
     let plans_delta = plans_now.saturating_sub(counters.plans);
     counters.plans = plans_now;
+    // data-converter activity, same delta discipline (deterministic
+    // integer counts, so a served stream is exactly comparable to the
+    // in-process path — the gateway bit-identity test relies on it)
+    let (dac_now, adc_now) =
+        backend.meter().map(|m| (m.dac_conversions, m.adc_conversions)).unwrap_or((0, 0));
+    let dac_delta = dac_now.saturating_sub(counters.dac);
+    counters.dac = dac_now;
+    let adc_delta = adc_now.saturating_sub(counters.adc);
+    counters.adc = adc_now;
     {
         let mut m = sh.metrics.lock().unwrap();
         m.faults_detected += batch_faults;
@@ -633,6 +803,8 @@ fn serve_batch(
         m.decode_fast_path += fast_delta;
         m.decode_voted += voted_delta;
         m.plans_built += plans_delta;
+        m.energy_dac_conversions += dac_delta;
+        m.energy_adc_conversions += adc_delta;
         // the same deltas, attributed to the model this batch ran — a
         // worker serves one batch (= one model) at a time, so the
         // counter deltas since the previous batch belong to it
@@ -650,16 +822,14 @@ fn serve_batch(
         let latency = req.submitted_at.elapsed();
         let queue_time = picked_up.duration_since(req.submitted_at);
         sh.metrics.lock().unwrap().record_response(n, latency, queue_time, true);
-        sh.resp_tx
-            .send(InferenceResponse {
-                id: req.id,
-                result: Ok(split_logits(&logits, offset, n)),
-                queue_time,
-                latency,
-                worker: wid,
-                faults_detected: batch_faults,
-            })
-            .ok();
+        sh.responder.deliver(InferenceResponse {
+            id: req.id,
+            result: Ok(split_logits(&logits, offset, n)),
+            queue_time,
+            latency,
+            worker: wid,
+            faults_detected: batch_faults,
+        });
     }
     sh.done_tx.send(wid).ok();
 }
@@ -675,22 +845,20 @@ fn fail_batch(
     wid: usize,
     batch: FormedBatch,
     err: &str,
-    resp_tx: &Sender<InferenceResponse>,
+    responder: &Responder,
     metrics: &Arc<Mutex<ServingMetrics>>,
 ) {
     for (req, _) in batch.members {
         let latency = req.submitted_at.elapsed();
         metrics.lock().unwrap().record_response(req.num_samples(), latency, latency, false);
-        resp_tx
-            .send(InferenceResponse {
-                id: req.id,
-                result: Err(err.to_string()),
-                queue_time: latency,
-                latency,
-                worker: wid,
-                faults_detected: 0,
-            })
-            .ok();
+        responder.deliver(InferenceResponse {
+            id: req.id,
+            result: Err(err.to_string()),
+            queue_time: latency,
+            latency,
+            worker: wid,
+            faults_detected: 0,
+        });
     }
 }
 

@@ -23,6 +23,7 @@ pub mod analog;
 pub mod bench;
 pub mod coordinator;
 pub mod exp;
+pub mod net;
 pub mod nn;
 pub mod quant;
 pub mod rns;

@@ -12,6 +12,7 @@ use rns_analog::analog::NoiseModel;
 use rns_analog::coordinator::server::build_backend;
 use rns_analog::coordinator::{BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
 use rns_analog::exp;
+use rns_analog::net::{Gateway, GatewayConfig};
 use rns_analog::nn::dataset::{dataset_for_model, load_eval_set};
 use rns_analog::nn::models::{accuracy, load_model, Batch};
 use rns_analog::runtime::{default_artifacts_dir, ModularGemmEngine, NativeEngine, PjrtEngine, PjrtRuntime};
@@ -55,6 +56,9 @@ fn usage() {
              [--bits=6] [--redundant=0] [--attempts=1] [--noise-p=0] [--samples=N]\n\
          serve [--config=configs/rns_b6.toml | --backend=...]\n\
              [--requests=64] [--workers=2] [--max-batch=8]\n\
+             [--listen=127.0.0.1:7070] [--max-sessions=64] [--idle-timeout-ms=30000]\n\
+             [--serve-seconds=N]   (gateway mode: serve TCP clients instead of a\n\
+              synthetic stream; drains on a client Shutdown frame, or after N seconds)\n\
          pjrt-demo [--bits=6]"
     );
 }
@@ -236,13 +240,80 @@ fn cmd_infer(args: &mut Args) -> i32 {
 fn cmd_serve(args: &mut Args) -> i32 {
     let artifacts = args.get_or("artifacts-dir", &default_artifacts_dir());
     let requests = args.get_parsed::<usize>("requests", 64).unwrap_or(64);
-    let cfg = match parse_coordinator_config(args, &artifacts) {
-        Ok(c) => c,
+    // one parse of --config serves both halves (coordinator + gateway);
+    // without a file, the coordinator config comes from the flags and
+    // gateway mode needs an explicit --listen
+    let (cfg, mut gw_cfg) = match args.get("config") {
+        Some(path) => {
+            let parsed = match rns_analog::util::config::Config::from_file(&path) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let cfg =
+                match rns_analog::coordinator::config_file::from_config(&parsed, &artifacts) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                };
+            let gw = match rns_analog::coordinator::config_file::gateway_from_config(&parsed) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            (cfg, gw)
+        }
+        None => match parse_coordinator_config(args, &artifacts) {
+            Ok(c) => (c, None),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+    if let Some(addr) = args.get("listen") {
+        let mut g = gw_cfg.take().unwrap_or_default();
+        g.listen_addr = addr;
+        gw_cfg = Some(g);
+    }
+    if let Some(g) = &mut gw_cfg {
+        if let Some(ms) = args.get("max-sessions") {
+            match ms.parse::<usize>() {
+                Ok(v) if v >= 1 => g.max_sessions = v,
+                _ => {
+                    eprintln!("--max-sessions={ms}: want an integer >= 1");
+                    return 2;
+                }
+            }
+        }
+        if let Some(t) = args.get("idle-timeout-ms") {
+            match t.parse::<u64>() {
+                Ok(v) if v >= 1 => g.idle_timeout = std::time::Duration::from_millis(v),
+                _ => {
+                    eprintln!("--idle-timeout-ms={t}: want an integer >= 1");
+                    return 2;
+                }
+            }
+        }
+    }
+    // 0 = serve until a client Shutdown frame; a typo must not silently
+    // become "forever", so parse errors are fatal like the other flags
+    let serve_seconds = match args.get_parsed::<u64>("serve-seconds", 0) {
+        Ok(v) => v,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
+    if let Some(gw_cfg) = gw_cfg {
+        return cmd_serve_gateway(cfg, gw_cfg, serve_seconds);
+    }
     let eval = match load_eval_set(&artifacts, "digits") {
         Ok(d) => d,
         Err(e) => {
@@ -271,6 +342,38 @@ fn cmd_serve(args: &mut Args) -> i32 {
     } else {
         1
     }
+}
+
+/// Gateway mode: serve TCP clients on `listen_addr` until a client sends
+/// a `Shutdown` frame (or `serve_seconds` elapses), then drain and print
+/// the final report.
+fn cmd_serve_gateway(cfg: CoordinatorConfig, gw_cfg: GatewayConfig, serve_seconds: u64) -> i32 {
+    use std::io::Write;
+    let coord = Coordinator::start(cfg);
+    let gw = match Gateway::start(coord, gw_cfg) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("gateway: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "[gateway] listening on {} — binary wire protocol + HTTP GET /metrics",
+        gw.local_addr()
+    );
+    // flush: smoke scripts poll the log for the listening line before
+    // connecting, and stdout is block-buffered into a pipe
+    std::io::stdout().flush().ok();
+    let timeout =
+        if serve_seconds > 0 { Some(std::time::Duration::from_secs(serve_seconds)) } else { None };
+    if gw.wait_shutdown(timeout) {
+        println!("[gateway] shutdown requested by client; draining");
+    } else {
+        println!("[gateway] serve window ({serve_seconds}s) elapsed; draining");
+    }
+    let report = gw.shutdown();
+    println!("[gateway] clean shutdown\n--- final report ---\n{report}");
+    0
 }
 
 fn cmd_pjrt_demo(args: &mut Args) -> i32 {

@@ -1,0 +1,186 @@
+//! Blocking gateway client — the reference wire-protocol implementation
+//! used by tests, the CI smoke job, and `examples/gateway_client.rs`.
+//!
+//! Single-threaded and synchronous on purpose: `infer` is one
+//! request/response round trip, while `submit` + `recv_infer` pipeline
+//! many requests over one session (the server replies carry the request
+//! id, so out-of-order completion is fine).
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use crate::nn::models::Batch;
+use crate::net::protocol::{Frame, HelloStatus, WireBatch, WireError, MAGIC, VERSION};
+use crate::tensor::MatF;
+
+/// One completed inference over the wire.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub id: u64,
+    pub logits: MatF,
+    /// RRNS decode detections in the batch that served this request.
+    pub faults_detected: u64,
+    /// Worker that executed the batch.
+    pub worker: u32,
+}
+
+pub struct Client {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect + handshake.  A refused session (overloaded, draining,
+    /// version mismatch) surfaces the server's typed reason as the
+    /// error string.
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let mut hello = Vec::with_capacity(6);
+        hello.extend_from_slice(&MAGIC);
+        hello.extend_from_slice(&VERSION.to_le_bytes());
+        stream.write_all(&hello).map_err(|e| format!("handshake write: {e}"))?;
+        let mut reply = [0u8; 7];
+        std::io::Read::read_exact(&mut stream, &mut reply)
+            .map_err(|e| format!("handshake read: {e}"))?;
+        if reply[..4] != MAGIC {
+            return Err("not an rns-analog gateway (bad magic)".into());
+        }
+        let version = u16::from_le_bytes([reply[4], reply[5]]);
+        let status = HelloStatus::from_byte(reply[6])
+            .ok_or_else(|| format!("unknown hello status {}", reply[6]))?;
+        if status != HelloStatus::Ok {
+            // the refusal is followed by one typed Error frame with the
+            // human-readable reason
+            let reason = match Frame::read_from(&mut stream) {
+                Ok(Frame::Error { message, .. }) => message,
+                _ => format!("{status:?}"),
+            };
+            return Err(format!("session refused (v{version} {status:?}): {reason}"));
+        }
+        Ok(Client { stream, next_id: 1 })
+    }
+
+    /// Per-call read timeout (`None` blocks indefinitely).
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<(), String> {
+        self.stream.set_read_timeout(timeout).map_err(|e| e.to_string())
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<(), String> {
+        self.stream.write_all(&frame.encode()).map_err(|e| format!("send: {e}"))
+    }
+
+    fn recv(&mut self) -> Result<Frame, String> {
+        Frame::read_from(&mut self.stream).map_err(|e| match e {
+            WireError::Eof => "server closed the session".to_string(),
+            other => other.to_string(),
+        })
+    }
+
+    /// Round-trip liveness probe.
+    pub fn ping(&mut self) -> Result<(), String> {
+        let id = self.fresh_id();
+        self.send(&Frame::Ping { id })?;
+        match self.recv()? {
+            Frame::Pong { id: got } if got == id => Ok(()),
+            Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
+            other => Err(format!("unexpected reply to ping: {other:?}")),
+        }
+    }
+
+    /// Submit without waiting (pipelining); returns the request id the
+    /// eventual `InferOk`/`Error` reply will carry.
+    pub fn submit(&mut self, model: &str, input: &Batch) -> Result<u64, String> {
+        let id = self.fresh_id();
+        let frame =
+            Frame::Infer { id, model: to_name(model)?, input: WireBatch::from_batch(input) };
+        self.send(&frame)?;
+        Ok(id)
+    }
+
+    /// Receive the next inference reply (any id).  A typed `Error` reply
+    /// becomes `Err` with the server's code + message.
+    pub fn recv_infer(&mut self) -> Result<InferReply, String> {
+        match self.recv()? {
+            Frame::InferOk { id, rows, cols, logits, faults_detected, worker } => Ok(InferReply {
+                id,
+                logits: MatF::from_vec(rows as usize, cols as usize, logits),
+                faults_detected,
+                worker,
+            }),
+            Frame::Error { id, code, message } => {
+                Err(format!("request {id} failed ({code:?}): {message}"))
+            }
+            other => Err(format!("unexpected reply: {other:?}")),
+        }
+    }
+
+    /// One blocking inference round trip.
+    pub fn infer(&mut self, model: &str, input: &Batch) -> Result<InferReply, String> {
+        let id = self.submit(model, input)?;
+        let reply = self.recv_infer()?;
+        if reply.id != id {
+            return Err(format!("reply id {} does not match request id {id}", reply.id));
+        }
+        Ok(reply)
+    }
+
+    /// Fetch the live `ServingMetrics` report.
+    pub fn stats(&mut self) -> Result<String, String> {
+        let id = self.fresh_id();
+        self.send(&Frame::Stats { id })?;
+        match self.recv()? {
+            Frame::StatsReport { text, .. } => Ok(text),
+            Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
+            other => Err(format!("unexpected reply to stats: {other:?}")),
+        }
+    }
+
+    /// Load a model into the server's shared registry now.
+    pub fn load_model(&mut self, model: &str) -> Result<String, String> {
+        let id = self.fresh_id();
+        self.send(&Frame::LoadModel { id, model: to_name(model)? })?;
+        self.expect_ack(id)
+    }
+
+    /// Proactively unload a model server-side (registry + plan store +
+    /// worker-held state).
+    pub fn unload_model(&mut self, model: &str) -> Result<String, String> {
+        let id = self.fresh_id();
+        self.send(&Frame::UnloadModel { id, model: to_name(model)? })?;
+        self.expect_ack(id)
+    }
+
+    /// Ask the server to drain and exit (admin).
+    pub fn shutdown_server(&mut self) -> Result<String, String> {
+        let id = self.fresh_id();
+        self.send(&Frame::Shutdown { id })?;
+        self.expect_ack(id)
+    }
+
+    fn expect_ack(&mut self, id: u64) -> Result<String, String> {
+        match self.recv()? {
+            Frame::Ack { id: got, info } if got == id => Ok(info),
+            Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
+            other => Err(format!("unexpected reply: {other:?}")),
+        }
+    }
+
+    pub fn close(self) {
+        self.stream.shutdown(Shutdown::Both).ok();
+    }
+}
+
+fn to_name(model: &str) -> Result<String, String> {
+    if model.len() > crate::net::protocol::MAX_NAME_LEN {
+        return Err(format!("model name longer than {} bytes", crate::net::protocol::MAX_NAME_LEN));
+    }
+    Ok(model.to_string())
+}

@@ -1,0 +1,611 @@
+//! The TCP serving gateway: the network edge in front of the
+//! `Coordinator`.
+//!
+//! One acceptor thread owns the `TcpListener`; every connection gets a
+//! session thread.  A session sniffs its first four bytes: `b"RNSG"`
+//! starts the binary wire protocol (protocol.rs), `b"GET "` is an
+//! HTTP/1.1 scrape served the live `ServingMetrics` report at
+//! `/metrics` (so the running server is scrapeable with no extra port).
+//!
+//! **Admission.**  Binary sessions are capped at
+//! `GatewayConfig::max_sessions`: past the cap the handshake reply
+//! carries `HelloStatus::Overloaded` followed by one typed
+//! `Error { code: Overloaded }` frame, then the connection closes.
+//! Metrics scrapes are exempt — observability must work *especially*
+//! under overload.
+//!
+//! **Sessions.**  A session runs two threads: the reader (the session
+//! thread itself) parses frames and pipelines `Infer` requests straight
+//! into the coordinator via `CoordinatorHandle::submit_routed`, and a
+//! writer serializes replies from a channel.  Responses correlate by the
+//! client-chosen request id — the routed delivery callback carries the
+//! id into the reply frame — so a client may keep many requests in
+//! flight and the `DynamicBatcher` sees them all.  The writer exits when
+//! every reply sender is gone: the reader's own clone (dropped at
+//! reader exit) plus one clone inside each in-flight request's delivery
+//! callback — which is exactly the "no accepted request loses its
+//! reply" invariant.
+//!
+//! **Shutdown.**  `Gateway::shutdown` stops the acceptor, then calls
+//! `TcpStream::shutdown(Read)` on every live session: readers see EOF
+//! and stop accepting frames, writers still deliver every in-flight
+//! reply, sessions close.  Only then does the coordinator drain through
+//! its own `ControlMsg` path (queued batches complete before workers
+//! exit).  A client can request this remotely with a `Shutdown` frame.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::GatewayReport;
+use crate::coordinator::server::{Coordinator, CoordinatorHandle};
+use crate::net::protocol::{ErrorCode, Frame, HelloStatus, WireError, MAGIC, VERSION};
+use crate::util::rng::Rng;
+use crate::util::stats::Percentiles;
+
+/// Gateway knobs (config file: `[serve] listen_addr / max_sessions /
+/// idle_timeout_ms`; CLI: `serve --listen=... --max-sessions=...`).
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests read it back
+    /// via `Gateway::local_addr`).
+    pub listen_addr: String,
+    /// Admission cap on concurrent binary sessions.
+    pub max_sessions: usize,
+    /// Per-session read/write timeout: a session idle (or stalled
+    /// mid-frame) this long is closed.
+    pub idle_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            listen_addr: "127.0.0.1:7070".into(),
+            max_sessions: 64,
+            idle_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// How often the (nonblocking) acceptor re-polls between connections and
+/// checks the stop flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// Bound on a scrape's request head (we only need the path).
+const MAX_HTTP_HEAD: usize = 8 << 10;
+
+/// Sample bound for the gateway's latency percentiles.
+const LATENCY_RESERVOIR: usize = 4096;
+
+/// Bounded reservoir (Vitter's Algorithm R) over gateway-side request
+/// latencies: the gateway serves indefinitely, so an unbounded sample
+/// vector — and a full sort of all-time history under the mutex that
+/// response-delivery callbacks need — is not an option.  4096 samples
+/// keep p50/p99 tight while a `/metrics` scrape sorts a bounded copy.
+struct LatencyReservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl LatencyReservoir {
+    fn new() -> Self {
+        LatencyReservoir {
+            samples: Vec::with_capacity(LATENCY_RESERVOIR),
+            seen: 0,
+            rng: Rng::seed_from(0x6A7E_11A7),
+        }
+    }
+
+    fn add(&mut self, latency_us: f64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR {
+            self.samples.push(latency_us);
+        } else {
+            let j = self.rng.gen_range(self.seen) as usize;
+            if j < LATENCY_RESERVOIR {
+                self.samples[j] = latency_us;
+            }
+        }
+    }
+
+    /// (p50, p99) over the current reservoir (0.0 when empty).
+    fn percentiles(&self) -> (f64, f64) {
+        let mut p = Percentiles::new();
+        for &x in &self.samples {
+            p.add(x);
+        }
+        (p.percentile(50.0), p.percentile(99.0))
+    }
+}
+
+/// State shared by the acceptor, every session thread, and the owning
+/// `Gateway`.
+struct GatewayShared {
+    handle: CoordinatorHandle,
+    cfg: GatewayConfig,
+    /// Live binary sessions (admission counter).
+    active: AtomicUsize,
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    protocol_errors: AtomicU64,
+    scrapes: AtomicU64,
+    /// Gateway-side request latency (submit → reply delivery), µs —
+    /// bounded reservoir, not all-time history.  Shared as its own Arc
+    /// so routed delivery callbacks don't capture the whole
+    /// `GatewayShared` (which would cycle through the routes map back
+    /// to itself).
+    latency_us: Arc<Mutex<LatencyReservoir>>,
+    /// Set during shutdown: new sessions and new `Infer` frames are
+    /// refused while in-flight replies drain.
+    draining: AtomicBool,
+    /// Signals `Gateway::wait_shutdown` when a client sends `Shutdown`.
+    shutdown_tx: Mutex<Option<Sender<()>>>,
+    /// Live session bookkeeping: a stream clone (for the drain-time
+    /// read-shutdown) plus the session thread's handle.
+    sessions: Mutex<Vec<SessionSlot>>,
+}
+
+struct SessionSlot {
+    stream: TcpStream,
+    thread: JoinHandle<()>,
+}
+
+impl GatewayShared {
+    fn gateway_report(&self) -> GatewayReport {
+        let (latency_p50_us, latency_p99_us) = self.latency_us.lock().unwrap().percentiles();
+        GatewayReport {
+            sessions_accepted: self.accepted.load(Ordering::Relaxed),
+            sessions_active: self.active.load(Ordering::Relaxed) as u64,
+            sessions_rejected: self.rejected.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            http_scrapes: self.scrapes.load(Ordering::Relaxed),
+            latency_p50_us,
+            latency_p99_us,
+        }
+    }
+
+    /// The live `ServingMetrics` report with current `gateway:` lines.
+    fn report(&self) -> String {
+        self.handle.set_gateway_report(self.gateway_report());
+        self.handle.live_report()
+    }
+
+    fn signal_shutdown(&self) {
+        if let Some(tx) = self.shutdown_tx.lock().unwrap().take() {
+            tx.send(()).ok();
+        }
+    }
+}
+
+/// Decrements the admission counter when a session ends, however it ends.
+struct ActiveGuard(Arc<GatewayShared>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running gateway.  Owns the `Coordinator`; `shutdown` drains the
+/// network tier first, then the coordinator, and returns the final
+/// report (gateway lines included).
+pub struct Gateway {
+    coord: Option<Coordinator>,
+    shared: Arc<GatewayShared>,
+    local_addr: SocketAddr,
+    stop_accepting: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    shutdown_rx: Receiver<()>,
+}
+
+impl Gateway {
+    pub fn start(coord: Coordinator, cfg: GatewayConfig) -> Result<Gateway, String> {
+        let listener = TcpListener::bind(&cfg.listen_addr)
+            .map_err(|e| format!("bind {}: {e}", cfg.listen_addr))?;
+        let local_addr = listener.local_addr().map_err(|e| e.to_string())?;
+        // nonblocking accept + poll keeps shutdown simple (no self-connect
+        // wakeup dance); 10 ms accept latency is noise against a forward
+        listener.set_nonblocking(true).map_err(|e| e.to_string())?;
+        let (shutdown_tx, shutdown_rx) = mpsc::channel();
+        let shared = Arc::new(GatewayShared {
+            handle: coord.handle(),
+            cfg,
+            active: AtomicUsize::new(0),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            frames_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            scrapes: AtomicU64::new(0),
+            latency_us: Arc::new(Mutex::new(LatencyReservoir::new())),
+            draining: AtomicBool::new(false),
+            shutdown_tx: Mutex::new(Some(shutdown_tx)),
+            sessions: Mutex::new(Vec::new()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("rns-gw-acceptor".into())
+                .spawn(move || acceptor_loop(listener, shared, stop))
+                .map_err(|e| e.to_string())?
+        };
+        crate::log_info!(
+            "gateway",
+            "listening on {local_addr} (max {} sessions)",
+            shared.cfg.max_sessions
+        );
+        Ok(Gateway {
+            coord: Some(coord),
+            shared,
+            local_addr,
+            stop_accepting: stop,
+            acceptor: Some(acceptor),
+            shutdown_rx,
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Block until a client requests shutdown via a `Shutdown` frame, or
+    /// `timeout` elapses (`None` waits indefinitely).  Returns whether a
+    /// shutdown was requested.
+    pub fn wait_shutdown(&self, timeout: Option<Duration>) -> bool {
+        match timeout {
+            Some(d) => self.shutdown_rx.recv_timeout(d).is_ok(),
+            None => self.shutdown_rx.recv().is_ok(),
+        }
+    }
+
+    /// Graceful drain: stop accepting, stop reading new frames, deliver
+    /// every in-flight reply, close sessions, then drain the coordinator
+    /// through its control plane.  Returns the final report.
+    pub fn shutdown(mut self) -> String {
+        self.stop_accepting.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            a.join().ok();
+        }
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // half-close every live session's read side: its reader sees EOF
+        // and stops accepting frames, while its writer still delivers
+        // every reply already owed — zero accepted requests are lost
+        let slots: Vec<SessionSlot> = self.shared.sessions.lock().unwrap().drain(..).collect();
+        for s in &slots {
+            s.stream.shutdown(Shutdown::Read).ok();
+        }
+        let n_sessions = slots.len();
+        for s in slots {
+            s.thread.join().ok();
+        }
+        crate::log_info!("gateway", "drained {n_sessions} session(s); stopping coordinator");
+        let coord = self.coord.take().expect("gateway owns the coordinator");
+        self.shared.handle.set_gateway_report(self.shared.gateway_report());
+        coord.shutdown()
+    }
+}
+
+fn acceptor_loop(listener: TcpListener, shared: Arc<GatewayShared>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let slot_stream = match stream.try_clone() {
+                    Ok(c) => c,
+                    Err(_) => continue,
+                };
+                let sshared = Arc::clone(&shared);
+                let spawned = std::thread::Builder::new()
+                    .name("rns-gw-session".into())
+                    .spawn(move || session_entry(stream, peer, sshared));
+                if let Ok(thread) = spawned {
+                    let mut sessions = shared.sessions.lock().unwrap();
+                    // reap finished sessions so the slot list tracks live
+                    // connections, not connection history
+                    sessions.retain(|s| !s.thread.is_finished());
+                    sessions.push(SessionSlot { stream: slot_stream, thread });
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Write the 7-byte server hello: MAGIC + VERSION + status.
+fn write_hello(stream: &mut TcpStream, status: HelloStatus) -> std::io::Result<()> {
+    let mut hello = Vec::with_capacity(7);
+    hello.extend_from_slice(&MAGIC);
+    hello.extend_from_slice(&VERSION.to_le_bytes());
+    hello.push(status.to_byte());
+    stream.write_all(&hello)
+}
+
+/// Refuse a session: non-ok hello status, one typed `Error` frame with
+/// the reason, close.
+fn reject(stream: &mut TcpStream, status: HelloStatus, code: ErrorCode, msg: &str) {
+    if write_hello(stream, status).is_ok() {
+        let frame = Frame::Error { id: 0, code, message: msg.to_string() };
+        stream.write_all(&frame.encode()).ok();
+    }
+    stream.shutdown(Shutdown::Both).ok();
+}
+
+fn session_entry(mut stream: TcpStream, peer: SocketAddr, shared: Arc<GatewayShared>) {
+    // the listener is nonblocking for the acceptor's stop-flag poll; the
+    // session itself is blocking I/O (inheritance is platform-dependent)
+    stream.set_nonblocking(false).ok();
+    stream.set_read_timeout(Some(shared.cfg.idle_timeout)).ok();
+    stream.set_write_timeout(Some(shared.cfg.idle_timeout)).ok();
+    stream.set_nodelay(true).ok();
+    let mut first = [0u8; 4];
+    if stream.read_exact(&mut first).is_err() {
+        return;
+    }
+    if &first == b"GET " {
+        shared.scrapes.fetch_add(1, Ordering::Relaxed);
+        serve_http(stream, &shared);
+        return;
+    }
+    if first != MAGIC {
+        shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        stream.shutdown(Shutdown::Both).ok();
+        return;
+    }
+    let mut ver = [0u8; 2];
+    if stream.read_exact(&mut ver).is_err() {
+        return;
+    }
+    let version = u16::from_le_bytes(ver);
+    if version != VERSION {
+        shared.rejected.fetch_add(1, Ordering::Relaxed);
+        reject(
+            &mut stream,
+            HelloStatus::BadVersion,
+            ErrorCode::Protocol,
+            &format!("server speaks protocol v{VERSION}, client sent v{version}"),
+        );
+        return;
+    }
+    if shared.draining.load(Ordering::SeqCst) {
+        shared.rejected.fetch_add(1, Ordering::Relaxed);
+        reject(&mut stream, HelloStatus::Draining, ErrorCode::Draining, "gateway is draining");
+        return;
+    }
+    // admission: reserve a live-session slot or refuse with the typed
+    // overload frame (compare-and-increment, so a burst of connects
+    // cannot oversubscribe the cap)
+    let admitted = shared
+        .active
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |a| {
+            if a < shared.cfg.max_sessions {
+                Some(a + 1)
+            } else {
+                None
+            }
+        })
+        .is_ok();
+    if !admitted {
+        shared.rejected.fetch_add(1, Ordering::Relaxed);
+        reject(
+            &mut stream,
+            HelloStatus::Overloaded,
+            ErrorCode::Overloaded,
+            &format!("gateway at capacity ({} sessions)", shared.cfg.max_sessions),
+        );
+        return;
+    }
+    let _guard = ActiveGuard(Arc::clone(&shared));
+    shared.accepted.fetch_add(1, Ordering::Relaxed);
+    if write_hello(&mut stream, HelloStatus::Ok).is_err() {
+        return;
+    }
+    // admin frames (load/unload/shutdown) are loopback-only: the wire
+    // protocol carries no credentials, so a non-loopback bind must not
+    // hand every peer the power to drop models or drain the server
+    let admin_ok = peer.ip().is_loopback();
+    crate::log_debug!("gateway", "session open from {peer}");
+    run_session(stream, admin_ok, &shared);
+    crate::log_debug!("gateway", "session from {peer} closed");
+}
+
+fn run_session(stream: TcpStream, admin_ok: bool, shared: &Arc<GatewayShared>) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
+    let wshared = Arc::clone(shared);
+    let writer = match std::thread::Builder::new()
+        .name("rns-gw-writer".into())
+        .spawn(move || writer_loop(write_half, reply_rx, wshared))
+    {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = stream;
+    loop {
+        match Frame::read_from(&mut reader) {
+            Ok(frame) => {
+                shared.frames_in.fetch_add(1, Ordering::Relaxed);
+                if !handle_frame(frame, admin_ok, shared, &reply_tx) {
+                    break;
+                }
+            }
+            // clean close, idle timeout, or the drain-time read-shutdown
+            Err(WireError::Eof) | Err(WireError::Io(_)) => break,
+            Err(WireError::Protocol(msg)) => {
+                // reply with the typed protocol error, then close: the
+                // frame boundary is unknown, resync is impossible
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                reply_tx.send(Frame::Error { id: 0, code: ErrorCode::Protocol, message: msg }).ok();
+                break;
+            }
+        }
+    }
+    // reader done: once every in-flight request's delivery callback has
+    // fired (each holds a reply sender), the writer's channel closes and
+    // it exits having written every owed reply
+    drop(reply_tx);
+    writer.join().ok();
+}
+
+/// Reply to an admin frame from a non-loopback peer.
+fn deny_admin(id: u64, reply_tx: &Sender<Frame>) {
+    let message = "admin frames (load/unload/shutdown) are loopback-only".to_string();
+    reply_tx.send(Frame::Error { id, code: ErrorCode::Unauthorized, message }).ok();
+}
+
+/// Handle one request frame; returns whether the session continues.
+fn handle_frame(
+    frame: Frame,
+    admin_ok: bool,
+    shared: &Arc<GatewayShared>,
+    reply_tx: &Sender<Frame>,
+) -> bool {
+    match frame {
+        Frame::Ping { id } => {
+            reply_tx.send(Frame::Pong { id }).ok();
+        }
+        Frame::Stats { id } => {
+            let text = shared.report();
+            reply_tx.send(Frame::StatsReport { id, text }).ok();
+        }
+        Frame::LoadModel { id, model } => {
+            if !admin_ok {
+                deny_admin(id, reply_tx);
+                return true;
+            }
+            match shared.handle.load_model(&model) {
+                Ok(()) => {
+                    reply_tx.send(Frame::Ack { id, info: format!("loaded `{model}`") }).ok();
+                }
+                Err(e) => {
+                    reply_tx.send(Frame::Error { id, code: ErrorCode::Model, message: e }).ok();
+                }
+            }
+        }
+        Frame::UnloadModel { id, model } => {
+            if !admin_ok {
+                deny_admin(id, reply_tx);
+                return true;
+            }
+            let evicted = shared.handle.unload_model(&model);
+            let info = format!("unloaded `{model}`: {evicted} plans evicted");
+            reply_tx.send(Frame::Ack { id, info }).ok();
+        }
+        Frame::Shutdown { id } => {
+            if !admin_ok {
+                deny_admin(id, reply_tx);
+                return true;
+            }
+            reply_tx.send(Frame::Ack { id, info: "draining".into() }).ok();
+            shared.signal_shutdown();
+        }
+        Frame::Infer { id, model, input } => {
+            if shared.draining.load(Ordering::SeqCst) {
+                let message = "gateway is draining".to_string();
+                reply_tx.send(Frame::Error { id, code: ErrorCode::Draining, message }).ok();
+                return true;
+            }
+            let batch = match input.into_batch() {
+                Ok(b) => b,
+                Err(e) => {
+                    // declared-shape mismatch: framing is intact, so the
+                    // session survives — reply typed and keep reading
+                    shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    reply_tx.send(Frame::Error { id, code: ErrorCode::Protocol, message: e }).ok();
+                    return true;
+                }
+            };
+            let tx = reply_tx.clone();
+            let latency = Arc::clone(&shared.latency_us);
+            let t0 = Instant::now();
+            let submitted = shared.handle.submit_routed(&model, batch, move |resp| {
+                latency.lock().unwrap().add(t0.elapsed().as_secs_f64() * 1e6);
+                let frame = match resp.result {
+                    Ok(logits) => Frame::InferOk {
+                        id,
+                        rows: logits.rows as u32,
+                        cols: logits.cols as u32,
+                        logits: logits.data,
+                        faults_detected: resp.faults_detected,
+                        worker: resp.worker as u32,
+                    },
+                    Err(e) => Frame::Error { id, code: ErrorCode::Model, message: e },
+                };
+                tx.send(frame).ok();
+            });
+            if let Err(e) = submitted {
+                reply_tx.send(Frame::Error { id, code: ErrorCode::Internal, message: e }).ok();
+            }
+        }
+        // a reply kind arriving at the server is a client bug
+        other => {
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let message = "reply frame sent to server".to_string();
+            reply_tx
+                .send(Frame::Error { id: other.id(), code: ErrorCode::Protocol, message })
+                .ok();
+            return false;
+        }
+    }
+    true
+}
+
+fn writer_loop(mut stream: TcpStream, reply_rx: Receiver<Frame>, shared: Arc<GatewayShared>) {
+    while let Ok(frame) = reply_rx.recv() {
+        if stream.write_all(&frame.encode()).is_err() {
+            // peer gone: kick the reader out of its blocking read, then
+            // drain silently so routed deliveries never block on us
+            stream.shutdown(Shutdown::Both).ok();
+            while reply_rx.recv().is_ok() {}
+            return;
+        }
+        shared.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Minimal HTTP/1.1 responder for metrics scrapes.  `b"GET "` has
+/// already been consumed; everything up to the blank line is read
+/// (bounded) and only the path matters.
+fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>) {
+    let mut head = Vec::new();
+    let mut tmp = [0u8; 512];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") {
+        if head.len() > MAX_HTTP_HEAD {
+            return;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => head.extend_from_slice(&tmp[..n]),
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let path = text.split_whitespace().next().unwrap_or("");
+    let (status, body) = if path == "/metrics" {
+        ("200 OK", format!("{}\n", shared.report()))
+    } else {
+        ("404 Not Found", format!("no such path `{path}` (try /metrics)\n"))
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes()).ok();
+    stream.shutdown(Shutdown::Both).ok();
+}

@@ -1,0 +1,15 @@
+//! The network tier: a std-only TCP serving gateway over the L3
+//! coordinator (versioned binary wire protocol, session admission,
+//! graceful drain, and an HTTP `GET /metrics` responder) plus the
+//! blocking reference client.
+//!
+//! See DESIGN.md §6b for the ownership diagram (who owns sessions, how
+//! the drain composes with the coordinator's control plane).
+
+pub mod client;
+pub mod gateway;
+pub mod protocol;
+
+pub use client::{Client, InferReply};
+pub use gateway::{Gateway, GatewayConfig};
+pub use protocol::{ErrorCode, Frame, HelloStatus, WireBatch, WireError};

@@ -1,0 +1,720 @@
+//! The gateway wire protocol: a versioned, length-prefixed, checksummed
+//! binary framing over TCP — std-only, like the rest of the crate (the
+//! image vendors no serde/tokio, so the codec is hand-rolled and small).
+//!
+//! **Handshake.**  The client opens with `MAGIC` + `VERSION` (little
+//! endian, like every integer on the wire); the server replies `MAGIC` +
+//! `VERSION` + one `HelloStatus` byte.  A non-`Ok` status (overloaded,
+//! version mismatch, draining) is followed by one typed `Error` frame
+//! carrying the human-readable reason, then the server closes — so a
+//! rejected client learns *why* without guessing from a dropped socket.
+//!
+//! **Frames.**  After the handshake both directions speak frames:
+//!
+//! ```text
+//! [u32 body_len] [body: u8 kind, u64 request_id, payload...] [u32 fnv1a(body)]
+//! ```
+//!
+//! `body_len` counts the body only (kind + id + payload) and is bounded
+//! by `MAX_FRAME_LEN`; an oversized or malformed frame earns an `Error`
+//! frame with `ErrorCode::Protocol` and the session closes (framing
+//! cannot be resynchronized after a bad length).  The request id is
+//! chosen by the client and echoed verbatim in the reply — that is the
+//! whole correlation story, which is what makes per-session pipelining
+//! safe.  Ids are per-session; sessions cannot see each other's frames.
+//!
+//! Request kinds: `Ping`, `Infer { model, batch }`, `LoadModel`,
+//! `UnloadModel`, `Stats`, `Shutdown` (admin: ask the server to drain
+//! and exit).  Reply kinds: `Pong`, `InferOk { logits, faults, worker }`,
+//! `Error { code, message }`, `StatsReport { text }`, `Ack { info }`.
+
+use std::io::Read;
+
+use crate::nn::models::Batch;
+use crate::tensor::Nhwc;
+
+/// Protocol magic: first bytes of every connection in either direction.
+/// Four bytes on purpose — the gateway sniffs the same prefix to tell a
+/// binary session from an HTTP/1.1 `GET /metrics` scrape (`b"GET "`).
+pub const MAGIC: [u8; 4] = *b"RNSG";
+
+/// Wire protocol version; bumped on any incompatible frame change.
+pub const VERSION: u16 = 1;
+
+/// Upper bound on one frame's body (kind + id + payload).  16 MiB holds
+/// a ~2000-sample MNIST batch; anything larger is a protocol error, not
+/// an allocation attempt.
+pub const MAX_FRAME_LEN: usize = 16 << 20;
+
+/// Upper bound on a model-name string.
+pub const MAX_NAME_LEN: usize = 256;
+
+/// Minimum body: kind (1) + request id (8).
+const MIN_FRAME_LEN: usize = 9;
+
+/// Server hello status byte (follows MAGIC + VERSION in the reply).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HelloStatus {
+    Ok,
+    /// Admission control: `serve.max_sessions` live sessions already.
+    Overloaded,
+    /// Client and server disagree on `VERSION`.
+    BadVersion,
+    /// The gateway is draining for shutdown; no new sessions.
+    Draining,
+}
+
+impl HelloStatus {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            HelloStatus::Ok => 0,
+            HelloStatus::Overloaded => 1,
+            HelloStatus::BadVersion => 2,
+            HelloStatus::Draining => 3,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Option<Self> {
+        match b {
+            0 => Some(HelloStatus::Ok),
+            1 => Some(HelloStatus::Overloaded),
+            2 => Some(HelloStatus::BadVersion),
+            3 => Some(HelloStatus::Draining),
+            _ => None,
+        }
+    }
+}
+
+/// Typed error codes carried by `Frame::Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed/oversized/checksum-failed frame; the session closes.
+    Protocol,
+    /// Admission reject: the session cap is reached.
+    Overloaded,
+    /// Model load/unload/inference failure (name unknown, load failed).
+    Model,
+    /// Coordinator-side failure while serving the request.
+    Internal,
+    /// The gateway is draining; the request was not accepted.
+    Draining,
+    /// Admin frame (load/unload/shutdown) from a non-loopback peer.
+    Unauthorized,
+}
+
+impl ErrorCode {
+    fn to_u16(self) -> u16 {
+        match self {
+            ErrorCode::Protocol => 1,
+            ErrorCode::Overloaded => 2,
+            ErrorCode::Model => 3,
+            ErrorCode::Internal => 4,
+            ErrorCode::Draining => 5,
+            ErrorCode::Unauthorized => 6,
+        }
+    }
+
+    fn from_u16(v: u16) -> Option<Self> {
+        match v {
+            1 => Some(ErrorCode::Protocol),
+            2 => Some(ErrorCode::Overloaded),
+            3 => Some(ErrorCode::Model),
+            4 => Some(ErrorCode::Internal),
+            5 => Some(ErrorCode::Draining),
+            6 => Some(ErrorCode::Unauthorized),
+            _ => None,
+        }
+    }
+}
+
+/// A model input crossing the wire; mirrors `nn::models::Batch`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireBatch {
+    Images { n: u32, h: u32, w: u32, c: u32, data: Vec<f32> },
+    Tokens { batch: u32, seq: u32, tokens: Vec<i64> },
+}
+
+impl WireBatch {
+    pub fn from_batch(batch: &Batch) -> Self {
+        match batch {
+            Batch::Images(t) => WireBatch::Images {
+                n: t.n as u32,
+                h: t.h as u32,
+                w: t.w as u32,
+                c: t.c as u32,
+                data: t.data.clone(),
+            },
+            Batch::Tokens { tokens, batch, seq } => WireBatch::Tokens {
+                batch: *batch as u32,
+                seq: *seq as u32,
+                tokens: tokens.clone(),
+            },
+        }
+    }
+
+    /// Convert to a coordinator `Batch`, validating declared shapes
+    /// against the payload length (a mismatch is a protocol error).
+    /// Every dimension must be nonzero and the element count is computed
+    /// with checked multiplication — a hostile frame must not be able to
+    /// wrap the product to `data.len()` in release builds and smuggle a
+    /// lying shape past this check into a worker thread.
+    pub fn into_batch(self) -> Result<Batch, String> {
+        match self {
+            WireBatch::Images { n, h, w, c, data } => {
+                if n == 0 || h == 0 || w == 0 || c == 0 {
+                    return Err(format!("image batch shape {n}x{h}x{w}x{c} has a zero dimension"));
+                }
+                let want = (n as usize)
+                    .checked_mul(h as usize)
+                    .and_then(|v| v.checked_mul(w as usize))
+                    .and_then(|v| v.checked_mul(c as usize))
+                    .ok_or_else(|| format!("image batch shape {n}x{h}x{w}x{c} overflows"))?;
+                if want != data.len() {
+                    return Err(format!(
+                        "image batch shape {n}x{h}x{w}x{c} wants {want} f32s, got {}",
+                        data.len()
+                    ));
+                }
+                Ok(Batch::Images(Nhwc::from_vec(n as usize, h as usize, w as usize, c as usize, data)))
+            }
+            WireBatch::Tokens { batch, seq, tokens } => {
+                if batch == 0 || seq == 0 {
+                    return Err(format!("token batch {batch}x{seq} has a zero dimension"));
+                }
+                let want = (batch as usize)
+                    .checked_mul(seq as usize)
+                    .ok_or_else(|| format!("token batch {batch}x{seq} overflows"))?;
+                if want != tokens.len() {
+                    return Err(format!(
+                        "token batch {batch}x{seq} wants {want} tokens, got {}",
+                        tokens.len()
+                    ));
+                }
+                Ok(Batch::Tokens { tokens, batch: batch as usize, seq: seq as usize })
+            }
+        }
+    }
+}
+
+/// One protocol frame (either direction).  `id` is the client-chosen
+/// request id, echoed in the matching reply.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    // requests
+    Ping { id: u64 },
+    Infer { id: u64, model: String, input: WireBatch },
+    LoadModel { id: u64, model: String },
+    UnloadModel { id: u64, model: String },
+    Stats { id: u64 },
+    Shutdown { id: u64 },
+    // replies
+    Pong { id: u64 },
+    InferOk { id: u64, rows: u32, cols: u32, logits: Vec<f32>, faults_detected: u64, worker: u32 },
+    Error { id: u64, code: ErrorCode, message: String },
+    StatsReport { id: u64, text: String },
+    Ack { id: u64, info: String },
+}
+
+const KIND_PING: u8 = 1;
+const KIND_INFER: u8 = 2;
+const KIND_LOAD: u8 = 3;
+const KIND_UNLOAD: u8 = 4;
+const KIND_STATS: u8 = 5;
+const KIND_SHUTDOWN: u8 = 6;
+const KIND_PONG: u8 = 129;
+const KIND_INFER_OK: u8 = 130;
+const KIND_ERROR: u8 = 131;
+const KIND_STATS_REPORT: u8 = 132;
+const KIND_ACK: u8 = 133;
+
+const BATCH_IMAGES: u8 = 0;
+const BATCH_TOKENS: u8 = 1;
+
+/// Wire-level failure reading a frame.
+#[derive(Debug)]
+pub enum WireError {
+    /// Clean close at a frame boundary (EOF before any length byte).
+    Eof,
+    /// Socket-level failure (includes read timeouts and resets).
+    Io(std::io::Error),
+    /// Malformed frame: bad length, bad checksum, truncated payload,
+    /// unknown kind.  The session cannot resynchronize after this.
+    Protocol(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+/// FNV-1a over the frame body — cheap, dependency-free corruption check
+/// (this is an integrity checksum, not an authenticator).
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+// --- encoding -------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= MAX_NAME_LEN);
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_text(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_i64s(out: &mut Vec<u8>, xs: &[i64]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_batch(out: &mut Vec<u8>, b: &WireBatch) {
+    match b {
+        WireBatch::Images { n, h, w, c, data } => {
+            out.push(BATCH_IMAGES);
+            put_u32(out, *n);
+            put_u32(out, *h);
+            put_u32(out, *w);
+            put_u32(out, *c);
+            put_f32s(out, data);
+        }
+        WireBatch::Tokens { batch, seq, tokens } => {
+            out.push(BATCH_TOKENS);
+            put_u32(out, *batch);
+            put_u32(out, *seq);
+            put_i64s(out, tokens);
+        }
+    }
+}
+
+impl Frame {
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Ping { id }
+            | Frame::Infer { id, .. }
+            | Frame::LoadModel { id, .. }
+            | Frame::UnloadModel { id, .. }
+            | Frame::Stats { id }
+            | Frame::Shutdown { id }
+            | Frame::Pong { id }
+            | Frame::InferOk { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::StatsReport { id, .. }
+            | Frame::Ack { id, .. } => *id,
+        }
+    }
+
+    /// Serialize to full wire bytes: length prefix + body + checksum.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(32);
+        match self {
+            Frame::Ping { id } => {
+                body.push(KIND_PING);
+                put_u64(&mut body, *id);
+            }
+            Frame::Infer { id, model, input } => {
+                body.push(KIND_INFER);
+                put_u64(&mut body, *id);
+                put_str(&mut body, model);
+                put_batch(&mut body, input);
+            }
+            Frame::LoadModel { id, model } => {
+                body.push(KIND_LOAD);
+                put_u64(&mut body, *id);
+                put_str(&mut body, model);
+            }
+            Frame::UnloadModel { id, model } => {
+                body.push(KIND_UNLOAD);
+                put_u64(&mut body, *id);
+                put_str(&mut body, model);
+            }
+            Frame::Stats { id } => {
+                body.push(KIND_STATS);
+                put_u64(&mut body, *id);
+            }
+            Frame::Shutdown { id } => {
+                body.push(KIND_SHUTDOWN);
+                put_u64(&mut body, *id);
+            }
+            Frame::Pong { id } => {
+                body.push(KIND_PONG);
+                put_u64(&mut body, *id);
+            }
+            Frame::InferOk { id, rows, cols, logits, faults_detected, worker } => {
+                body.push(KIND_INFER_OK);
+                put_u64(&mut body, *id);
+                put_u32(&mut body, *rows);
+                put_u32(&mut body, *cols);
+                put_u64(&mut body, *faults_detected);
+                put_u32(&mut body, *worker);
+                put_f32s(&mut body, logits);
+            }
+            Frame::Error { id, code, message } => {
+                body.push(KIND_ERROR);
+                put_u64(&mut body, *id);
+                put_u16(&mut body, code.to_u16());
+                put_text(&mut body, message);
+            }
+            Frame::StatsReport { id, text } => {
+                body.push(KIND_STATS_REPORT);
+                put_u64(&mut body, *id);
+                put_text(&mut body, text);
+            }
+            Frame::Ack { id, info } => {
+                body.push(KIND_ACK);
+                put_u64(&mut body, *id);
+                put_text(&mut body, info);
+            }
+        }
+        assert!(body.len() <= MAX_FRAME_LEN, "frame exceeds MAX_FRAME_LEN");
+        let mut out = Vec::with_capacity(body.len() + 8);
+        put_u32(&mut out, body.len() as u32);
+        let sum = checksum(&body);
+        out.extend_from_slice(&body);
+        put_u32(&mut out, sum);
+        out
+    }
+
+    /// Read one frame from `r`.  Distinguishes a clean close at a frame
+    /// boundary (`Eof`) from mid-frame truncation (`Io`) and malformed
+    /// contents (`Protocol`).
+    pub fn read_from(r: &mut impl Read) -> Result<Frame, WireError> {
+        let mut len_buf = [0u8; 4];
+        // first byte by hand so a close between frames is a clean Eof,
+        // not an UnexpectedEof error
+        match r.read(&mut len_buf[..1]) {
+            Ok(0) => return Err(WireError::Eof),
+            Ok(_) => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+        r.read_exact(&mut len_buf[1..]).map_err(WireError::Io)?;
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(WireError::Protocol(format!(
+                "frame body {len} bytes exceeds the {MAX_FRAME_LEN}-byte bound"
+            )));
+        }
+        if len < MIN_FRAME_LEN {
+            return Err(WireError::Protocol(format!("frame body {len} bytes is too short")));
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).map_err(WireError::Io)?;
+        let mut sum_buf = [0u8; 4];
+        r.read_exact(&mut sum_buf).map_err(WireError::Io)?;
+        let want = u32::from_le_bytes(sum_buf);
+        let got = checksum(&body);
+        if want != got {
+            return Err(WireError::Protocol(format!(
+                "checksum mismatch (got {got:#010x}, frame says {want:#010x})"
+            )));
+        }
+        Frame::decode_body(&body).map_err(WireError::Protocol)
+    }
+
+    fn decode_body(body: &[u8]) -> Result<Frame, String> {
+        let mut cur = Cursor { buf: body, pos: 0 };
+        let kind = cur.u8()?;
+        let id = cur.u64()?;
+        let frame = match kind {
+            KIND_PING => Frame::Ping { id },
+            KIND_INFER => {
+                let model = cur.name()?;
+                let input = cur.batch()?;
+                Frame::Infer { id, model, input }
+            }
+            KIND_LOAD => Frame::LoadModel { id, model: cur.name()? },
+            KIND_UNLOAD => Frame::UnloadModel { id, model: cur.name()? },
+            KIND_STATS => Frame::Stats { id },
+            KIND_SHUTDOWN => Frame::Shutdown { id },
+            KIND_PONG => Frame::Pong { id },
+            KIND_INFER_OK => {
+                let rows = cur.u32()?;
+                let cols = cur.u32()?;
+                let faults_detected = cur.u64()?;
+                let worker = cur.u32()?;
+                let logits = cur.f32s()?;
+                if (rows as usize) * (cols as usize) != logits.len() {
+                    return Err(format!(
+                        "InferOk {rows}x{cols} wants {} f32s, got {}",
+                        (rows as usize) * (cols as usize),
+                        logits.len()
+                    ));
+                }
+                Frame::InferOk { id, rows, cols, logits, faults_detected, worker }
+            }
+            KIND_ERROR => {
+                let code_raw = cur.u16()?;
+                let code = ErrorCode::from_u16(code_raw)
+                    .ok_or_else(|| format!("unknown error code {code_raw}"))?;
+                let message = cur.text()?;
+                Frame::Error { id, code, message }
+            }
+            KIND_STATS_REPORT => Frame::StatsReport { id, text: cur.text()? },
+            KIND_ACK => Frame::Ack { id, info: cur.text()? },
+            other => return Err(format!("unknown frame kind {other}")),
+        };
+        cur.done()?;
+        Ok(frame)
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated frame: wanted {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn name(&mut self) -> Result<String, String> {
+        let len = self.u16()? as usize;
+        if len > MAX_NAME_LEN {
+            return Err(format!("name length {len} exceeds {MAX_NAME_LEN}"));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "name is not utf-8".to_string())
+    }
+
+    fn text(&mut self) -> Result<String, String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?; // bounded by body length (<= MAX_FRAME_LEN)
+        String::from_utf8(bytes.to_vec()).map_err(|_| "text is not utf-8".to_string())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(4).ok_or("f32 count overflow")?)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn i64s(&mut self) -> Result<Vec<i64>, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n.checked_mul(8).ok_or("i64 count overflow")?)?;
+        Ok(bytes.chunks_exact(8).map(|c| i64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn batch(&mut self) -> Result<WireBatch, String> {
+        match self.u8()? {
+            BATCH_IMAGES => {
+                let n = self.u32()?;
+                let h = self.u32()?;
+                let w = self.u32()?;
+                let c = self.u32()?;
+                let data = self.f32s()?;
+                Ok(WireBatch::Images { n, h, w, c, data })
+            }
+            BATCH_TOKENS => {
+                let batch = self.u32()?;
+                let seq = self.u32()?;
+                let tokens = self.i64s()?;
+                Ok(WireBatch::Tokens { batch, seq, tokens })
+            }
+            other => Err(format!("unknown batch tag {other}")),
+        }
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.pos != self.buf.len() {
+            return Err(format!(
+                "{} trailing bytes after the frame payload",
+                self.buf.len() - self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let bytes = f.encode();
+        let got = Frame::read_from(&mut &bytes[..]).expect("decode");
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips() {
+        roundtrip(Frame::Ping { id: 7 });
+        roundtrip(Frame::Pong { id: 7 });
+        roundtrip(Frame::Stats { id: 1 });
+        roundtrip(Frame::Shutdown { id: 2 });
+        roundtrip(Frame::LoadModel { id: 3, model: "mlp".into() });
+        roundtrip(Frame::UnloadModel { id: 4, model: "bert".into() });
+        roundtrip(Frame::Infer {
+            id: 5,
+            model: "synthetic-mlp".into(),
+            input: WireBatch::Images { n: 1, h: 2, w: 2, c: 1, data: vec![0.5, -1.0, 0.0, 2.5] },
+        });
+        roundtrip(Frame::Infer {
+            id: 6,
+            model: "bert".into(),
+            input: WireBatch::Tokens { batch: 2, seq: 3, tokens: vec![1, 2, 3, 4, 5, 6] },
+        });
+        roundtrip(Frame::InferOk {
+            id: 9,
+            rows: 1,
+            cols: 3,
+            logits: vec![1.0, -2.0, 3.5],
+            faults_detected: 11,
+            worker: 2,
+        });
+        roundtrip(Frame::Error { id: 10, code: ErrorCode::Overloaded, message: "full".into() });
+        roundtrip(Frame::Error { id: 13, code: ErrorCode::Unauthorized, message: "admin".into() });
+        roundtrip(Frame::StatsReport { id: 11, text: "requests=1\n".into() });
+        roundtrip(Frame::Ack { id: 12, info: "unloaded".into() });
+    }
+
+    #[test]
+    fn checksum_corruption_is_a_protocol_error() {
+        let mut bytes = Frame::Ping { id: 1 }.encode();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF; // flip checksum
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+        let mut bytes = Frame::Ping { id: 1 }.encode();
+        bytes[5] ^= 0x01; // flip a body byte, checksum untouched
+        assert!(matches!(Frame::read_from(&mut &bytes[..]), Err(WireError::Protocol(_))));
+    }
+
+    #[test]
+    fn oversized_and_undersized_lengths_are_rejected() {
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(Frame::read_from(&mut &bytes[..]), Err(WireError::Protocol(_))));
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(Frame::read_from(&mut &bytes[..]), Err(WireError::Protocol(_))));
+    }
+
+    #[test]
+    fn truncation_and_clean_close_are_distinguished() {
+        let mut empty: &[u8] = &[];
+        assert!(matches!(Frame::read_from(&mut empty), Err(WireError::Eof)));
+        let bytes = Frame::Ping { id: 3 }.encode();
+        let cut = &bytes[..bytes.len() - 2];
+        assert!(matches!(Frame::read_from(&mut &cut[..]), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn unknown_kind_and_trailing_bytes_are_protocol_errors() {
+        // hand-build a frame with kind 99
+        let mut body = vec![99u8];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        let sum = checksum(&body);
+        bytes.extend_from_slice(&body);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("unknown frame kind"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+        // a valid Ping with junk appended inside the body
+        let mut body = vec![KIND_PING];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.push(0xAA);
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        let sum = checksum(&body);
+        bytes.extend_from_slice(&body);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(WireError::Protocol(m)) => assert!(m.contains("trailing"), "{m}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_batch_shape_validation() {
+        let bad = WireBatch::Images { n: 2, h: 2, w: 2, c: 1, data: vec![0.0; 7] };
+        assert!(bad.into_batch().is_err());
+        let bad = WireBatch::Tokens { batch: 2, seq: 4, tokens: vec![0; 7] };
+        assert!(bad.into_batch().is_err());
+        // zero dimensions and wrapping products must be rejected, not
+        // smuggled past the length check into a worker thread
+        let bad = WireBatch::Images { n: 1, h: 0, w: 0, c: 0, data: vec![] };
+        assert!(bad.into_batch().unwrap_err().contains("zero dimension"));
+        let bad = WireBatch::Tokens { batch: 3, seq: 0, tokens: vec![] };
+        assert!(bad.into_batch().unwrap_err().contains("zero dimension"));
+        // 2^16 in every dim wraps to 0 under u32/usize-32 wrapping mul;
+        // with checked math it is an overflow (or a length mismatch on
+        // 64-bit, where the true product exceeds any real payload)
+        let bad = WireBatch::Images { n: 65536, h: 65536, w: 65536, c: 65536, data: vec![] };
+        assert!(bad.into_batch().is_err());
+        let ok = WireBatch::Images { n: 1, h: 2, w: 2, c: 1, data: vec![0.0; 4] };
+        match ok.into_batch().unwrap() {
+            Batch::Images(t) => assert_eq!((t.n, t.h, t.w, t.c), (1, 2, 2, 1)),
+            _ => panic!(),
+        }
+        let b = Batch::Tokens { tokens: vec![1, 2], batch: 1, seq: 2 };
+        assert_eq!(WireBatch::from_batch(&b).into_batch().unwrap().len(), 1);
+    }
+}

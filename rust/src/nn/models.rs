@@ -467,8 +467,18 @@ impl Model for TinyBert {
     }
 }
 
-/// Load any zoo model by name from `artifacts/models/<name>.rt`.
+/// Seeded synthetic model names servable without `make artifacts`
+/// (loopback gateway tests, CI smoke traffic, benches).  `SYNTHETIC_MLP`
+/// loads `Mlp::synthetic(1)` through the normal registry path, so it
+/// batches, warms plans, and unloads exactly like a trained model.
+pub const SYNTHETIC_MLP: &str = "synthetic-mlp";
+
+/// Load any zoo model by name from `artifacts/models/<name>.rt`
+/// (`SYNTHETIC_MLP` is generated in-process instead).
 pub fn load_model(artifacts_dir: &str, name: &str) -> Result<Box<dyn Model>, String> {
+    if name == SYNTHETIC_MLP {
+        return Ok(Box::new(Mlp::synthetic(1)));
+    }
     let path = format!("{artifacts_dir}/models/{name}.rt");
     let store = crate::nn::store::load(&path).map_err(|e| e.to_string())?;
     match name {

@@ -85,7 +85,7 @@ fn batcher_aggregates_under_load() {
     }
     let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, &artifacts_dir());
     cfg.workers = 1;
-    cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(50) };
+    cfg.batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(50), ..Default::default() };
     let coord = Coordinator::start(cfg);
     for _ in 0..32 {
         coord.submit("mlp", img(1));

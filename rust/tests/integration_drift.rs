@@ -8,7 +8,7 @@
 //!
 //! Uses `Mlp::synthetic` so no `make artifacts` step is needed.
 
-use rns_analog::analog::{FaultStats, RnsCore, RnsCoreConfig};
+use rns_analog::analog::{FaultStats, InjectionSite, RnsCore, RnsCoreConfig};
 use rns_analog::nn::models::{Batch, Mlp, Model};
 use rns_analog::rns::inject::FaultSpec;
 use rns_analog::tensor::{MatF, Nhwc};
@@ -30,7 +30,17 @@ fn forward_with(
     spec: Option<(FaultSpec, u64)>,
     attempts: u32,
 ) -> (MatF, FaultStats) {
-    let mut cfg = RnsCoreConfig::for_bits(8, 128).with_rrns(2, attempts);
+    forward_at(model, input, spec, attempts, InjectionSite::Capture)
+}
+
+fn forward_at(
+    model: &Mlp,
+    input: &Batch,
+    spec: Option<(FaultSpec, u64)>,
+    attempts: u32,
+    site: InjectionSite,
+) -> (MatF, FaultStats) {
+    let mut cfg = RnsCoreConfig::for_bits(8, 128).with_rrns(2, attempts).with_fault_site(site);
     if let Some((s, seed)) = spec {
         cfg = cfg.with_fault_injection(s, seed);
     }
@@ -109,4 +119,65 @@ fn retry_loop_recovers_detected_bursts() {
         no_retry.exhausted, no_retry.detections,
         "attempts=1: every detection exhausts into best-effort decode"
     );
+}
+
+/// Array-side drift replays bit-for-bit from `(spec, seed)` exactly like
+/// the capture-side campaigns, and a different seed lands elsewhere.
+#[test]
+fn array_side_campaign_is_seed_deterministic() {
+    let model = synth_mlp();
+    let input = eval_batch(4);
+    let spec = FaultSpec::TemporalBurst { tiles: 3, elems: 6, width: 2 };
+    let (la, sa) = forward_at(&model, &input, Some((spec, 11)), 3, InjectionSite::Array);
+    let (lb, sb) = forward_at(&model, &input, Some((spec, 11)), 3, InjectionSite::Array);
+    assert_eq!(bits_of(&la), bits_of(&lb), "same (spec, seed): bit-identical logits");
+    assert_eq!(sa, sb, "same (spec, seed): identical fault counters");
+    assert!(sa.detections > 0, "the array burst must actually corrupt decodes");
+    let (lc, sc) = forward_at(&model, &input, Some((spec, 12)), 3, InjectionSite::Array);
+    assert!(bits_of(&la) != bits_of(&lc) || sa != sc, "a different seed must differ");
+}
+
+/// Array-side drift within the correction radius is still absorbed bit
+/// exactly — the code corrects a width ≤ t burst wherever it lands.
+#[test]
+fn array_side_correctable_burst_is_absorbed() {
+    let model = synth_mlp();
+    let input = eval_batch(4);
+    let (clean, _) = forward_with(&model, &input, None, 1);
+    let spec = FaultSpec::TemporalBurst { tiles: 4, elems: 8, width: 1 };
+    let (drifted, stats) = forward_at(&model, &input, Some((spec, 5)), 1, InjectionSite::Array);
+    assert!(stats.corrected > 0);
+    assert_eq!(stats.exhausted, 0, "width 1 <= t never exhausts, array-side or not");
+    assert_eq!(bits_of(&clean), bits_of(&drifted), "corrected campaign bit-equals clean");
+}
+
+/// The array-side satellite claim: a burst wider than t corrupts the
+/// *recomputed* dot product too, so retries re-detect the same fault and
+/// `max_attempts` exhausts — the capture-side path recovers the very
+/// same `(spec, seed)` campaign with one retry.
+#[test]
+fn array_side_bursts_exhaust_where_capture_side_recovers() {
+    let model = synth_mlp();
+    let input = eval_batch(4);
+    let spec = FaultSpec::TemporalBurst { tiles: 2, elems: 6, width: 2 };
+
+    let (_, capture) = forward_at(&model, &input, Some((spec, 9)), 3, InjectionSite::Capture);
+    assert!(capture.detections > 0);
+    assert_eq!(capture.exhausted, 0, "capture-side: clean recompute recovers everything");
+
+    let (arr_logits, array) = forward_at(&model, &input, Some((spec, 9)), 3, InjectionSite::Array);
+    assert!(array.exhausted > 0, "array-side: retries re-read the corruption and exhaust");
+    // every element that started voting re-detects on every one of its
+    // 3 attempts (noise is None, so the recompute is identical), so
+    // detections = attempts x exhausted
+    assert_eq!(array.detections, 3 * array.exhausted);
+    // and raising attempts cannot help while the event persists
+    let (_, array1) = forward_at(&model, &input, Some((spec, 9)), 1, InjectionSite::Array);
+    assert_eq!(
+        array1.exhausted, array.exhausted,
+        "attempts budget does not change how many elements stay corrupt"
+    );
+    // exhausted elements decode best-effort: the forward must still
+    // complete with finite logits
+    assert!(arr_logits.data.iter().all(|v| v.is_finite()));
 }

@@ -1,0 +1,400 @@
+//! TCP gateway integration tests (loopback): concurrent clients are
+//! bit-identical to the in-process coordinator path (outputs, fault
+//! counters, converter counts), admission control rejects overload with
+//! a typed frame, malformed/truncated/oversized frames earn a typed
+//! protocol error without hurting the server, graceful shutdown drains
+//! every accepted request, and `GET /metrics` serves the live
+//! `ServingMetrics` report with the new `gateway:` lines on top of the
+//! unchanged PR-2 global lines.
+//!
+//! Every test serves `synthetic-mlp` (seeded in-process weights), so no
+//! `make artifacts` step is needed anywhere.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use rns_analog::analog::NoiseModel;
+use rns_analog::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use rns_analog::net::protocol::{checksum, ErrorCode, Frame, WireBatch, MAGIC, MAX_FRAME_LEN, VERSION};
+use rns_analog::net::{Client, Gateway, GatewayConfig};
+use rns_analog::nn::models::{Batch, SYNTHETIC_MLP};
+use rns_analog::tensor::Nhwc;
+use rns_analog::util::rng::Rng;
+
+fn rns_cfg(workers: usize) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(
+        BackendKind::Rns { bits: 8, redundant: 2, attempts: 2, noise: NoiseModel::None },
+        "/nonexistent",
+    );
+    cfg.workers = workers;
+    cfg.seed = 7;
+    cfg
+}
+
+fn gw_cfg(max_sessions: usize) -> GatewayConfig {
+    GatewayConfig {
+        listen_addr: "127.0.0.1:0".into(),
+        max_sessions,
+        idle_timeout: Duration::from_secs(10),
+    }
+}
+
+/// Deterministic single-sample input #i.
+fn input(i: u64) -> Batch {
+    let mut rng = Rng::seed_from(0xBEEF ^ i);
+    Batch::Images(Nhwc::from_vec(
+        1,
+        28,
+        28,
+        1,
+        (0..28 * 28).map(|_| rng.uniform_f32(0.0, 1.0)).collect(),
+    ))
+}
+
+fn line_with<'a>(report: &'a str, prefix: &str) -> &'a str {
+    report
+        .lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no `{prefix}` line in report:\n{report}"))
+}
+
+/// The headline acceptance test: 8 concurrent loopback clients receive
+/// results bit-identical to the in-process `Coordinator` path — same
+/// logits, same decode/fault counters, same data-converter counts, same
+/// plan adoptions — on an RRNS backend.
+#[test]
+fn concurrent_clients_are_bit_identical_to_in_process() {
+    const N_CLIENTS: u64 = 8;
+    const PER_CLIENT: u64 = 2;
+    const TOTAL: u64 = N_CLIENTS * PER_CLIENT;
+
+    // in-process reference (1 worker: adoption/energy totals are exact)
+    let coord = Coordinator::start(rns_cfg(1));
+    let mut ids = Vec::new();
+    for i in 0..TOTAL {
+        ids.push(coord.submit(SYNTHETIC_MLP, input(i)));
+    }
+    let resps = coord.collect(TOTAL as usize);
+    let mut want: Vec<Vec<u32>> = vec![Vec::new(); TOTAL as usize];
+    for r in &resps {
+        let idx = ids.iter().position(|&id| id == r.id).expect("known id");
+        let logits = r.result.as_ref().expect("in-process ok");
+        assert_eq!((logits.rows, logits.cols), (1, 10));
+        want[idx] = logits.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(r.faults_detected, 0, "clean RRNS run");
+    }
+    let want = Arc::new(want);
+    let inproc_report = coord.shutdown();
+
+    // gateway path: same backend config, N concurrent TCP clients
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1)), gw_cfg(16)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+    let mut threads = Vec::new();
+    for c in 0..N_CLIENTS {
+        let addr = addr.clone();
+        let want = Arc::clone(&want);
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            for k in 0..PER_CLIENT {
+                let i = c * PER_CLIENT + k;
+                let reply = client.infer(SYNTHETIC_MLP, &input(i)).expect("infer");
+                let got: Vec<u32> = reply.logits.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want[i as usize], "request {i}: gateway == in-process, bit-exact");
+                assert_eq!(reply.faults_detected, 0);
+            }
+            client.close();
+        }));
+    }
+    for t in threads {
+        t.join().expect("client thread");
+    }
+    let gw_report = gw.shutdown();
+
+    // the serving counters agree line for line: decode split, fault
+    // totals, converter counts (energy), plan adoptions
+    for prefix in ["decode: ", "faults: ", "energy: ", "layer plans built="] {
+        assert_eq!(
+            line_with(&inproc_report, prefix),
+            line_with(&gw_report, prefix),
+            "`{prefix}` line must match between paths\n--- in-process:\n{inproc_report}\n\
+             --- gateway:\n{gw_report}"
+        );
+    }
+    assert!(gw_report.contains(&format!("requests={TOTAL}")), "{gw_report}");
+    assert!(gw_report.contains("failures=0"), "{gw_report}");
+    assert!(line_with(&gw_report, "gateway: ").contains("sessions=8"), "{gw_report}");
+}
+
+#[test]
+fn overload_beyond_max_sessions_is_rejected_with_typed_frame() {
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1)), gw_cfg(2)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let mut c1 = Client::connect(&addr).expect("first session");
+    let c2 = Client::connect(&addr).expect("second session");
+    let refused = Client::connect(&addr);
+    let err = refused.err().expect("third session must be refused");
+    assert!(err.contains("Overloaded"), "typed overload status in: {err}");
+    assert!(err.contains("capacity (2 sessions)"), "server's reason in: {err}");
+
+    // admitted sessions still work at the cap
+    c1.ping().expect("admitted session alive");
+    // freeing a slot re-admits: close one, retry until the session
+    // thread's guard releases the slot
+    c2.close();
+    let mut readmitted = None;
+    for _ in 0..100 {
+        match Client::connect(&addr) {
+            Ok(c) => {
+                readmitted = Some(c);
+                break;
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    let mut c4 = readmitted.expect("slot frees after a session closes");
+    c4.ping().expect("readmitted session alive");
+    c1.close();
+    c4.close();
+
+    let report = gw.shutdown();
+    let gw_line = line_with(&report, "gateway: ");
+    let rejects: u64 = gw_line
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("rejects=").and_then(|v| v.parse().ok()))
+        .expect("rejects counter");
+    assert!(rejects >= 1, "{report}");
+}
+
+/// Raw-socket handshake helper for the fuzz cases.
+fn raw_handshake(addr: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut hello = Vec::new();
+    hello.extend_from_slice(&MAGIC);
+    hello.extend_from_slice(&VERSION.to_le_bytes());
+    s.write_all(&hello).unwrap();
+    let mut reply = [0u8; 7];
+    s.read_exact(&mut reply).unwrap();
+    assert_eq!(&reply[..4], &MAGIC);
+    assert_eq!(reply[6], 0, "hello status ok");
+    s
+}
+
+fn expect_protocol_error(s: &mut TcpStream) {
+    match Frame::read_from(s).expect("typed reply before close") {
+        Frame::Error { code, .. } => assert_eq!(code, ErrorCode::Protocol),
+        other => panic!("expected protocol error, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_server_stays_healthy() {
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1)), gw_cfg(8)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    // oversized declared length: typed error, session closes (nothing
+    // beyond the length is written — the server closes with no unread
+    // bytes, so the error frame is not raced by a TCP reset)
+    {
+        let mut s = raw_handshake(&addr);
+        s.write_all(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes()).unwrap();
+        expect_protocol_error(&mut s);
+        let mut rest = Vec::new();
+        assert_eq!(s.read_to_end(&mut rest).unwrap_or(0), 0, "session closed after the error");
+    }
+    // corrupted checksum
+    {
+        let mut s = raw_handshake(&addr);
+        let mut bytes = Frame::Ping { id: 1 }.encode();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0xFF;
+        s.write_all(&bytes).unwrap();
+        expect_protocol_error(&mut s);
+    }
+    // unknown frame kind (valid length + checksum)
+    {
+        let mut s = raw_handshake(&addr);
+        let mut body = vec![99u8];
+        body.extend_from_slice(&1u64.to_le_bytes());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        let sum = checksum(&body);
+        bytes.extend_from_slice(&body);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        s.write_all(&bytes).unwrap();
+        expect_protocol_error(&mut s);
+    }
+    // a reply kind sent to the server
+    {
+        let mut s = raw_handshake(&addr);
+        s.write_all(&Frame::Pong { id: 4 }.encode()).unwrap();
+        expect_protocol_error(&mut s);
+    }
+    // truncated frame then hard close: no reply owed, server survives
+    {
+        let mut s = raw_handshake(&addr);
+        let bytes = Frame::Ping { id: 5 }.encode();
+        s.write_all(&bytes[..bytes.len() - 3]).unwrap();
+        drop(s);
+    }
+    // declared batch shape contradicting the payload: typed error but
+    // the framing is intact, so the *same session* keeps working
+    {
+        let mut s = raw_handshake(&addr);
+        let frame = Frame::Infer {
+            id: 6,
+            model: SYNTHETIC_MLP.into(),
+            input: WireBatch::Images { n: 2, h: 28, w: 28, c: 1, data: vec![0.0; 13] },
+        };
+        s.write_all(&frame.encode()).unwrap();
+        expect_protocol_error(&mut s);
+        s.write_all(&Frame::Ping { id: 7 }.encode()).unwrap();
+        match Frame::read_from(&mut s).expect("session survived the shape error") {
+            Frame::Pong { id } => assert_eq!(id, 7),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // after all that abuse a normal client still gets served
+    let mut client = Client::connect(&addr).expect("healthy server");
+    client.ping().expect("ping");
+    let reply = client.infer(SYNTHETIC_MLP, &input(0)).expect("infer");
+    assert_eq!((reply.logits.rows, reply.logits.cols), (1, 10));
+    client.close();
+
+    let report = gw.shutdown();
+    let gw_line = line_with(&report, "gateway: ");
+    let errors: u64 = gw_line
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("protocol-errors=").and_then(|v| v.parse().ok()))
+        .expect("protocol-errors counter");
+    assert!(errors >= 5, "every fuzz case counted: {report}");
+    assert!(report.contains("failures=0"), "{report}");
+}
+
+/// Graceful shutdown loses zero accepted requests: clients pipeline a
+/// burst, prove the server has read every frame (a reply to the last
+/// submitted id — the session reader is sequential), then shutdown races
+/// the remaining in-flight replies.  Every accepted request must still
+/// be answered.
+#[test]
+fn graceful_shutdown_drains_every_accepted_request() {
+    const N_CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 8;
+
+    let gw = Gateway::start(Coordinator::start(rns_cfg(2)), gw_cfg(8)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+    let barrier = Arc::new(Barrier::new(N_CLIENTS + 1));
+
+    let mut threads = Vec::new();
+    for c in 0..N_CLIENTS {
+        let addr = addr.clone();
+        let barrier = Arc::clone(&barrier);
+        threads.push(std::thread::spawn(move || -> usize {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut ids = Vec::new();
+            for k in 0..PER_CLIENT {
+                ids.push(client.submit(SYNTHETIC_MLP, &input((c * PER_CLIENT + k) as u64)).unwrap());
+            }
+            let last = *ids.last().unwrap();
+            let mut got = Vec::new();
+            // any reply to `last` proves the reader consumed all frames
+            while !got.contains(&last) {
+                let r = client.recv_infer().expect("reply before shutdown");
+                assert_eq!(r.logits.cols, 10);
+                got.push(r.id);
+            }
+            barrier.wait(); // main now starts the shutdown race
+            while got.len() < PER_CLIENT {
+                let r = client.recv_infer().expect("reply owed by the drain");
+                got.push(r.id);
+            }
+            got.sort_unstable();
+            let mut want = ids;
+            want.sort_unstable();
+            assert_eq!(got, want, "every accepted request answered exactly once");
+            got.len()
+        }));
+    }
+
+    barrier.wait();
+    let report = gw.shutdown();
+    let mut answered = 0usize;
+    for t in threads {
+        answered += t.join().expect("client thread");
+    }
+    assert_eq!(answered, N_CLIENTS * PER_CLIENT, "zero lost replies");
+    assert!(report.contains(&format!("requests={}", N_CLIENTS * PER_CLIENT)), "{report}");
+    assert!(report.contains("failures=0"), "{report}");
+}
+
+#[test]
+fn http_metrics_scrape_serves_live_report() {
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1)), gw_cfg(4)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    // some traffic first so the report is non-trivial
+    let mut client = Client::connect(&addr).expect("connect");
+    client.infer(SYNTHETIC_MLP, &input(1)).expect("infer");
+
+    let scrape = |path: &str| -> String {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("response");
+        out
+    };
+
+    let ok = scrape("/metrics");
+    assert!(ok.starts_with("HTTP/1.1 200 OK"), "{ok}");
+    assert!(ok.contains("Content-Type: text/plain"), "{ok}");
+    // PR-2 global lines unchanged for old parsers...
+    assert!(ok.contains("requests=1"), "{ok}");
+    assert!(ok.contains("decode: fast-path="), "{ok}");
+    assert!(ok.contains("faults: detected=0 corrected=0"), "{ok}");
+    // ...plus the new gateway block
+    assert!(ok.contains("gateway: sessions=1 active=1"), "{ok}");
+    assert!(ok.contains("gateway latency: p50="), "{ok}");
+
+    let missing = scrape("/nope");
+    assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+
+    // scrapes are exempt from admission and counted separately
+    client.close();
+    let report = gw.shutdown();
+    assert!(line_with(&report, "gateway: ").contains("scrapes=2"), "{report}");
+}
+
+#[test]
+fn admin_frames_stats_load_unload_shutdown_roundtrip() {
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1)), gw_cfg(4)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).expect("connect");
+    client.ping().expect("ping");
+    // load before traffic, serve, then proactively unload
+    let info = client.load_model(SYNTHETIC_MLP).expect("load");
+    assert!(info.contains("loaded"), "{info}");
+    assert!(client.load_model("no-such-model").is_err(), "unknown model load must fail typed");
+    client.infer(SYNTHETIC_MLP, &input(3)).expect("infer");
+    let info = client.unload_model(SYNTHETIC_MLP).expect("unload");
+    assert!(info.contains("unloaded"), "{info}");
+    // a request after the unload reloads transparently
+    client.infer(SYNTHETIC_MLP, &input(4)).expect("infer after unload");
+    let stats = client.stats().expect("stats");
+    assert!(stats.contains("requests=2"), "{stats}");
+    assert!(stats.contains("unloads: proactive=1"), "{stats}");
+    assert!(stats.contains("gateway: sessions=1"), "{stats}");
+
+    // remote shutdown request: acked, then the server-side wait fires
+    let info = client.shutdown_server().expect("shutdown frame");
+    assert!(info.contains("draining"), "{info}");
+    assert!(gw.wait_shutdown(Some(Duration::from_secs(10))), "shutdown signal received");
+    client.close();
+    let report = gw.shutdown();
+    assert!(report.contains("failures=0"), "{report}");
+}

@@ -217,6 +217,7 @@ fn prop_batcher_conserves_requests_and_order_within_model() {
         let mut batcher = DynamicBatcher::new(BatcherConfig {
             max_batch,
             max_wait: Duration::from_secs(3600),
+            ..Default::default()
         });
         let n_req = 1 + rng.gen_range(30) as usize;
         let mut submitted: Vec<(u64, String)> = Vec::new();

@@ -49,6 +49,16 @@ HEADLINES = [
         "micro/pool prepared 4x784x256 x4ch scoped-spawn",
         "micro/pool prepared 4x784x256 x4ch shared-fabric",
     ),
+    # gateway: the same 24-request synthetic-MLP stream in-process vs over
+    # loopback TCP.  Ratio < 1 is expected (the wire adds work); the CI
+    # gate (gateway >= 0.2) bounds the overhead at 5x, catching a
+    # pathological protocol/session regression without flaking on runner
+    # jitter.
+    (
+        "gateway",
+        "serve/coordinator 24 reqs synthetic-mlp rns-b6 in-process",
+        "serve/gateway loopback 24 reqs synthetic-mlp rns-b6",
+    ),
 ]
 
 
