@@ -9,12 +9,19 @@
 //!   cargo run --release --example gateway_client -- \
 //!       --addr=127.0.0.1:7171 --requests=24 --clients=4 --shutdown
 //!
+//! With `--retries=N` each client runs through the supervision-aware
+//! `RetryClient` (sequential round trips instead of pipelining):
+//! connection drops and transient errors are retried with seeded
+//! backoff, which is what the chaos smoke job leans on.  `--token=` sets
+//! the admin token for the final stats/shutdown session, and
+//! `--deadline-ms=` attaches a per-request deadline to every `Infer`.
+//!
 //! The default model is `synthetic-mlp` (seeded in-process weights), so
 //! the pair works without `make artifacts`.
 
 use std::time::Instant;
 
-use rns_analog::net::Client;
+use rns_analog::net::{Client, RetryClient, RetryPolicy};
 use rns_analog::nn::models::{Batch, SYNTHETIC_MLP};
 use rns_analog::tensor::Nhwc;
 use rns_analog::util::cli::Args;
@@ -26,6 +33,9 @@ fn main() {
     let requests = args.get_parsed::<usize>("requests", 24).unwrap();
     let clients = args.get_parsed::<usize>("clients", 4).unwrap().max(1);
     let model = args.get_or("model", SYNTHETIC_MLP);
+    let retries = args.get_parsed::<u32>("retries", 0).unwrap();
+    let deadline_ms = args.get_parsed::<u32>("deadline-ms", 0).unwrap();
+    let token = args.get_or("token", "");
     let shutdown = args.flag("shutdown");
     if let Err(e) = args.check_unknown() {
         eprintln!("{e}");
@@ -42,18 +52,43 @@ fn main() {
         let addr = addr.clone();
         let model = model.clone();
         threads.push(std::thread::spawn(move || -> Result<usize, String> {
-            let mut client = Client::connect(&addr)?;
             let mut rng = Rng::seed_from(42 + c as u64);
-            // pipeline: submit everything, then drain the replies
-            for _ in 0..per_client {
-                let img = Nhwc::from_vec(
+            let mut next_input = move || {
+                Batch::Images(Nhwc::from_vec(
                     1,
                     28,
                     28,
                     1,
                     (0..28 * 28).map(|_| rng.uniform_f32(0.0, 1.0)).collect(),
-                );
-                client.submit(&model, &Batch::Images(img))?;
+                ))
+            };
+            if retries > 0 {
+                // crash-tolerant path: sequential round trips with
+                // reconnect + seeded-backoff retry (per-client seed so
+                // simultaneous retriers spread out)
+                let policy = RetryPolicy { retries, seed: 42 + c as u64, ..RetryPolicy::default() };
+                let mut client = RetryClient::new(&addr, policy);
+                client.set_deadline_ms(deadline_ms);
+                let mut ok = 0usize;
+                for _ in 0..per_client {
+                    let reply = client.infer(&model, &next_input()).map_err(|e| e.to_string())?;
+                    assert_eq!(reply.logits.rows, 1, "one sample in, one logit row out");
+                    ok += 1;
+                }
+                if client.retries > 0 || client.reconnects > 0 {
+                    println!(
+                        "client {c}: {} retried attempt(s), {} reconnect(s)",
+                        client.retries, client.reconnects
+                    );
+                }
+                client.close();
+                return Ok(ok);
+            }
+            let mut client = Client::connect(&addr)?;
+            client.set_deadline_ms(deadline_ms);
+            // pipeline: submit everything, then drain the replies
+            for _ in 0..per_client {
+                client.submit(&model, &next_input())?;
             }
             let mut ok = 0usize;
             for _ in 0..per_client {
@@ -85,10 +120,14 @@ fn main() {
 
     // one admin session: liveness, a stats peek, optional drain request
     let mut admin = Client::connect(&addr).expect("admin connect");
+    admin.set_admin_token(&token);
     admin.ping().expect("ping");
     let stats = admin.stats().expect("stats");
-    let gw_line = stats.lines().find(|l| l.starts_with("gateway:")).unwrap_or("");
-    println!("server: {gw_line}");
+    for prefix in ["gateway:", "supervision:"] {
+        if let Some(line) = stats.lines().find(|l| l.starts_with(prefix)) {
+            println!("server: {}", line.trim());
+        }
+    }
     if shutdown {
         let info = admin.shutdown_server().expect("shutdown request");
         println!("shutdown requested ({info})");

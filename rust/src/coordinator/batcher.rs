@@ -49,6 +49,10 @@ pub struct FormedBatch {
     pub model: String,
     pub input: Batch,
     pub members: Vec<(InferenceRequest, usize)>, // (request, sample offset)
+    /// How many workers this batch has crashed so far.  Incremented by
+    /// the supervisor on each redispatch; at `poison_threshold` the batch
+    /// is quarantined (typed `Poisoned` reject) instead of redispatched.
+    pub crashes: u32,
 }
 
 /// One model's FIFO slot (created on first sight of a model; removed
@@ -166,7 +170,31 @@ impl DynamicBatcher {
             mq.empty_since = Some(now); // compaction countdown starts now
         }
         let input = concat_inputs(members.iter().map(|(r, _)| &r.input));
-        Some(FormedBatch { model, input, members })
+        Some(FormedBatch { model, input, members, crashes: 0 })
+    }
+
+    /// Remove and return every queued request whose deadline has already
+    /// passed — the dispatcher fails these with a typed
+    /// `DeadlineExceeded` instead of spending analog-core time on
+    /// answers nobody is waiting for.
+    pub fn expire(&mut self, now: Instant) -> Vec<InferenceRequest> {
+        let mut expired = Vec::new();
+        for mq in &mut self.queues {
+            let before = mq.q.len();
+            let mut kept = VecDeque::with_capacity(before);
+            for req in mq.q.drain(..) {
+                if req.expired(now) {
+                    expired.push(req);
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            mq.q = kept;
+            if before > 0 && mq.q.is_empty() {
+                mq.empty_since = Some(now);
+            }
+        }
+        expired
     }
 }
 
@@ -348,6 +376,22 @@ mod tests {
         let fb = b.pop_ready(Instant::now(), false).unwrap();
         assert_eq!(fb.members.len(), 1);
         assert_eq!(fb.input.len(), 5);
+    }
+
+    #[test]
+    fn expire_removes_only_past_deadline_requests() {
+        let mut b = DynamicBatcher::new(cfg(100, Duration::from_secs(3600)));
+        let now = Instant::now();
+        b.push(img_req(0, "mlp", 1).with_deadline(Some(now + Duration::from_millis(5))));
+        b.push(img_req(1, "mlp", 1)); // no deadline: never expires
+        b.push(img_req(2, "cnn", 1).with_deadline(Some(now + Duration::from_secs(60))));
+        assert!(b.expire(now).is_empty(), "nothing expired yet");
+        let expired = b.expire(now + Duration::from_millis(10));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 0);
+        assert_eq!(b.pending(), 2, "unexpired requests stay queued");
+        let later = now + Duration::from_millis(11);
+        assert_eq!(b.pop_ready(later, true).unwrap().members[0].0.id, 1);
     }
 
     #[test]

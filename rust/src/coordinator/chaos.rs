@@ -1,0 +1,280 @@
+//! Deterministic process-level chaos injection for the serving stack.
+//!
+//! The residue-level `FaultSpec`/`FaultInjector` (rns/inject.rs) makes
+//! every *arithmetic* fault regime reproducible; `ChaosSpec` is the same
+//! idea one level up, for *process* faults: worker panics, worker stalls,
+//! and gateway connection drops.  Where `FaultSpec` draws channel indices
+//! from a seeded RNG, chaos events here are **positional** — "the 3rd
+//! batch worker 1 picks up", "the 2nd frame of accepted session 0" — which
+//! is stronger than seeded randomness for supervision tests: the scenario
+//! is readable in the spec string and replays identically regardless of
+//! thread scheduling, because each counter is owned by exactly one
+//! injection site.
+//!
+//! Spec grammar (comma-separated events):
+//!   * `panic@w{W}:b{N}`        — worker slot W panics on the Nth batch it
+//!     picks up (1-based, counted across respawns of that slot);
+//!   * `stall@w{W}:b{N}:{MS}ms` — worker slot W sleeps MS milliseconds
+//!     mid-batch on its Nth batch (heartbeat goes stale → supervisor
+//!     declares a stall if MS exceeds the stall timeout);
+//!   * `poison@{model}`         — every batch of `model` panics the worker
+//!     serving it: the crash-loop regime the poison quarantine must bound;
+//!   * `drop@s{S}:f{N}`         — the gateway severs accepted session S
+//!     (0-based admission order) after reading its Nth frame, exercising
+//!     client reconnect + retry.
+//!
+//! Worker-side counters live in one `Arc<Mutex<WorkerChaos>>` per worker
+//! *slot*, created at coordinator start and handed to every (re)spawned
+//! thread of that slot — so `panic@w0:b3` fires exactly once even though
+//! the replacement worker runs the same loop.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One injected process-fault event (see module docs for the grammar).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChaosEvent {
+    /// Worker slot `worker` panics on the `nth` batch it picks up.
+    PanicAtBatch { worker: usize, nth: u64 },
+    /// Worker slot `worker` sleeps `ms` mid-batch on its `nth` batch.
+    StallAtBatch { worker: usize, nth: u64, ms: u64 },
+    /// Any worker serving `model` panics on every batch of it.
+    PanicOnModel { model: String },
+    /// Gateway drops accepted session `session` after `frames` frames.
+    DropSession { session: u64, frames: u64 },
+}
+
+/// A full chaos scenario: the parsed event list, shared by the
+/// coordinator (worker events) and the gateway (session drops).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub events: Vec<ChaosEvent>,
+}
+
+/// What a worker should do before serving the current batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Panic (caught at the worker loop boundary; supervisor respawns).
+    Panic,
+    /// Sleep this long mid-batch (stall; heartbeat goes stale).
+    Stall(Duration),
+}
+
+impl ChaosSpec {
+    /// Parse the spec grammar; `""` is the empty (chaos-free) spec.
+    pub fn parse(spec: &str) -> Result<ChaosSpec, String> {
+        let mut events = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| format!("chaos event `{part}` missing `@`"))?;
+            let ev = match kind {
+                "panic" => {
+                    let (w, b) = parse_wb(rest)?;
+                    ChaosEvent::PanicAtBatch { worker: w, nth: b }
+                }
+                "stall" => {
+                    let mut it = rest.split(':');
+                    let w = parse_tag(it.next().unwrap_or(""), 'w')? as usize;
+                    let b = parse_tag(it.next().unwrap_or(""), 'b')?;
+                    let ms = it
+                        .next()
+                        .and_then(|s| s.strip_suffix("ms"))
+                        .and_then(|s| s.parse::<u64>().ok())
+                        .ok_or_else(|| format!("stall event `{part}` needs `:NNNms`"))?;
+                    if it.next().is_some() {
+                        return Err(format!("stall event `{part}` has trailing fields"));
+                    }
+                    ChaosEvent::StallAtBatch { worker: w, nth: b, ms }
+                }
+                "poison" => {
+                    if rest.is_empty() {
+                        return Err("poison event needs a model name".to_string());
+                    }
+                    ChaosEvent::PanicOnModel { model: rest.to_string() }
+                }
+                "drop" => {
+                    let mut it = rest.split(':');
+                    let s = parse_tag(it.next().unwrap_or(""), 's')?;
+                    let f = parse_tag(it.next().unwrap_or(""), 'f')?;
+                    if it.next().is_some() {
+                        return Err(format!("drop event `{part}` has trailing fields"));
+                    }
+                    ChaosEvent::DropSession { session: s, frames: f }
+                }
+                other => return Err(format!("unknown chaos event kind `{other}`")),
+            };
+            if let ChaosEvent::PanicAtBatch { nth, .. }
+            | ChaosEvent::StallAtBatch { nth, .. }
+            | ChaosEvent::DropSession { frames: nth, .. } = &ev
+            {
+                if *nth == 0 {
+                    return Err(format!("chaos event `{part}`: counts are 1-based"));
+                }
+            }
+            events.push(ev);
+        }
+        Ok(ChaosSpec { events })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The per-slot injection state for worker `wid` — one shared handle
+    /// per slot, surviving respawns so positional counts never reset.
+    pub fn for_worker(&self, wid: usize) -> Arc<Mutex<WorkerChaos>> {
+        let mut panic_at = Vec::new();
+        let mut stall_at = Vec::new();
+        let mut poison_models = Vec::new();
+        for ev in &self.events {
+            match ev {
+                ChaosEvent::PanicAtBatch { worker, nth } if *worker == wid => {
+                    panic_at.push(*nth);
+                }
+                ChaosEvent::StallAtBatch { worker, nth, ms } if *worker == wid => {
+                    stall_at.push((*nth, *ms));
+                }
+                ChaosEvent::PanicOnModel { model } => poison_models.push(model.clone()),
+                _ => {}
+            }
+        }
+        Arc::new(Mutex::new(WorkerChaos { panic_at, stall_at, poison_models, batches_seen: 0 }))
+    }
+
+    /// After how many frames should accepted session `session` be severed?
+    pub fn session_drop(&self, session: u64) -> Option<u64> {
+        self.events.iter().find_map(|ev| match ev {
+            ChaosEvent::DropSession { session: s, frames } if *s == session => Some(*frames),
+            _ => None,
+        })
+    }
+}
+
+fn parse_tag(s: &str, tag: char) -> Result<u64, String> {
+    s.strip_prefix(tag)
+        .and_then(|v| v.parse::<u64>().ok())
+        .ok_or_else(|| format!("expected `{tag}NNN`, got `{s}`"))
+}
+
+fn parse_wb(rest: &str) -> Result<(usize, u64), String> {
+    let (w, b) = rest
+        .split_once(':')
+        .ok_or_else(|| format!("expected `wW:bN`, got `{rest}`"))?;
+    Ok((parse_tag(w, 'w')? as usize, parse_tag(b, 'b')?))
+}
+
+/// One worker slot's chaos state: which of its batches to kill or stall.
+/// `before_batch` is called (under the slot's mutex) by whichever thread
+/// currently owns the slot, immediately before the forward pass.
+#[derive(Debug)]
+pub struct WorkerChaos {
+    panic_at: Vec<u64>,
+    stall_at: Vec<(u64, u64)>,
+    poison_models: Vec<String>,
+    batches_seen: u64,
+}
+
+impl WorkerChaos {
+    /// True when no event can ever fire for this slot (skip the lock).
+    pub fn is_inert(&self) -> bool {
+        self.panic_at.is_empty() && self.stall_at.is_empty() && self.poison_models.is_empty()
+    }
+
+    /// Advance the slot's batch counter and report what (if anything) to
+    /// inject for this batch.  Panic wins over stall when both match.
+    pub fn before_batch(&mut self, model: &str) -> Option<ChaosAction> {
+        self.batches_seen += 1;
+        if self.poison_models.iter().any(|m| m == model) {
+            return Some(ChaosAction::Panic);
+        }
+        let n = self.batches_seen;
+        if self.panic_at.contains(&n) {
+            return Some(ChaosAction::Panic);
+        }
+        if let Some(&(_, ms)) = self.stall_at.iter().find(|(b, _)| *b == n) {
+            return Some(ChaosAction::Stall(Duration::from_millis(ms)));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_event_kind() {
+        let spec =
+            ChaosSpec::parse("panic@w0:b3, stall@w1:b2:150ms,poison@bad-model,drop@s0:f3").unwrap();
+        assert_eq!(
+            spec.events,
+            vec![
+                ChaosEvent::PanicAtBatch { worker: 0, nth: 3 },
+                ChaosEvent::StallAtBatch { worker: 1, nth: 2, ms: 150 },
+                ChaosEvent::PanicOnModel { model: "bad-model".to_string() },
+                ChaosEvent::DropSession { session: 0, frames: 3 },
+            ]
+        );
+        assert!(ChaosSpec::parse("").unwrap().is_empty());
+        assert!(ChaosSpec::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "panic@w0",          // missing batch
+            "panic@0:3",         // missing tags
+            "stall@w0:b1",       // missing duration
+            "stall@w0:b1:150",   // missing ms suffix
+            "panic@w0:b0",       // counts are 1-based
+            "drop@s0",           // missing frame count
+            "explode@w0:b1",     // unknown kind
+            "poison@",           // empty model
+            "panic",             // no @
+        ] {
+            assert!(ChaosSpec::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn worker_counters_are_positional_and_slot_scoped() {
+        let spec = ChaosSpec::parse("panic@w0:b2,stall@w1:b1:50ms").unwrap();
+        let w0 = spec.for_worker(0);
+        let w1 = spec.for_worker(1);
+        let w2 = spec.for_worker(2);
+        assert!(w2.lock().unwrap().is_inert());
+        {
+            let mut c = w0.lock().unwrap();
+            assert_eq!(c.before_batch("m"), None);
+            assert_eq!(c.before_batch("m"), Some(ChaosAction::Panic));
+            assert_eq!(c.before_batch("m"), None, "fires exactly once");
+        }
+        {
+            let mut c = w1.lock().unwrap();
+            assert_eq!(
+                c.before_batch("m"),
+                Some(ChaosAction::Stall(Duration::from_millis(50)))
+            );
+            assert_eq!(c.before_batch("m"), None);
+        }
+    }
+
+    #[test]
+    fn poison_model_fires_on_every_batch_of_that_model() {
+        let spec = ChaosSpec::parse("poison@pill").unwrap();
+        let w = spec.for_worker(0);
+        let mut c = w.lock().unwrap();
+        assert_eq!(c.before_batch("healthy"), None);
+        assert_eq!(c.before_batch("pill"), Some(ChaosAction::Panic));
+        assert_eq!(c.before_batch("pill"), Some(ChaosAction::Panic));
+        assert_eq!(c.before_batch("healthy"), None);
+    }
+
+    #[test]
+    fn session_drop_lookup() {
+        let spec = ChaosSpec::parse("drop@s2:f5").unwrap();
+        assert_eq!(spec.session_drop(2), Some(5));
+        assert_eq!(spec.session_drop(0), None);
+    }
+}

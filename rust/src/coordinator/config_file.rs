@@ -21,12 +21,21 @@
 //! listen_addr = "127.0.0.1:7070"  # TCP gateway (omit to stay in-process)
 //! max_sessions = 64               # gateway admission cap
 //! idle_timeout_ms = 30000         # per-session read/write timeout
+//! admin_token = "s3cret"          # shared secret for load/unload/shutdown
+//!                                 # (empty/unset = loopback-only fallback;
+//!                                 # env RNS_ADMIN_TOKEN overrides)
+//! stall_timeout_ms = 30000        # supervisor heartbeat stall threshold
+//! poison_threshold = 2            # crashes before a batch is quarantined
+//! default_deadline_ms = 0         # server-side request deadline (0 = none)
+//! chaos = ""                      # seeded fault injection, e.g.
+//!                                 # "panic@w0:b3,drop@s1:f2" (tests/CI only)
 //! ```
 
 use std::time::Duration;
 
 use crate::analog::NoiseModel;
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::chaos::ChaosSpec;
 use crate::coordinator::router::RoutingKind;
 use crate::coordinator::server::{BackendKind, CoordinatorConfig};
 use crate::net::gateway::GatewayConfig;
@@ -91,7 +100,48 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
         return Err("serve.fabric_threads must be >= 0 (0 = auto)".into());
     }
     out.fabric_threads = fabric_threads as usize;
+    let stall_ms = cfg.int_or("serve.stall_timeout_ms", 30_000);
+    if stall_ms < 1 {
+        return Err("serve.stall_timeout_ms must be >= 1".into());
+    }
+    out.stall_timeout = Duration::from_millis(stall_ms as u64);
+    let poison = cfg.int_or("serve.poison_threshold", 2);
+    if poison < 1 {
+        return Err("serve.poison_threshold must be >= 1".into());
+    }
+    out.poison_threshold = poison as u32;
+    let deadline_ms = cfg.int_or("serve.default_deadline_ms", 0);
+    if deadline_ms < 0 {
+        return Err("serve.default_deadline_ms must be >= 0 (0 = none)".into());
+    }
+    if deadline_ms > 0 {
+        out.default_deadline = Some(Duration::from_millis(deadline_ms as u64));
+    }
+    out.chaos = chaos_from_config(cfg)?;
     Ok(out)
+}
+
+/// The `serve.chaos` spec, if any (shared by coordinator + gateway so
+/// one string drives worker faults and session drops together).
+fn chaos_from_config(cfg: &Config) -> Result<ChaosSpec, String> {
+    let spec = cfg.str_or("serve.chaos", "");
+    if spec.is_empty() {
+        return Ok(ChaosSpec::default());
+    }
+    ChaosSpec::parse(&spec).map_err(|e| format!("serve.chaos: {e}"))
+}
+
+/// Resolve the admin token: env `RNS_ADMIN_TOKEN` wins, then
+/// `serve.admin_token`; empty/unset means no token (loopback-only
+/// fallback for admin frames).
+pub fn admin_token_from_config(cfg: &Config) -> Option<String> {
+    let from_env = std::env::var("RNS_ADMIN_TOKEN").unwrap_or_default();
+    let token = if from_env.is_empty() { cfg.str_or("serve.admin_token", "") } else { from_env };
+    if token.is_empty() {
+        None
+    } else {
+        Some(token)
+    }
 }
 
 /// Load from a file path.
@@ -119,6 +169,8 @@ pub fn gateway_from_config(cfg: &Config) -> Result<Option<GatewayConfig>, String
         listen_addr,
         max_sessions: max_sessions as usize,
         idle_timeout: Duration::from_millis(idle_ms as u64),
+        admin_token: admin_token_from_config(cfg),
+        chaos: chaos_from_config(cfg)?,
     }))
 }
 
@@ -179,6 +231,27 @@ fabric_threads = 6
         assert_eq!(cc.workers, 2);
         assert_eq!(cc.routing, RoutingKind::RoundRobin);
         assert_eq!(cc.plan_store_capacity, crate::store::DEFAULT_UNTAGGED_CAPACITY);
+        assert_eq!(cc.stall_timeout, Duration::from_secs(30));
+        assert_eq!(cc.poison_threshold, 2);
+        assert!(cc.default_deadline.is_none());
+        assert!(cc.chaos.is_empty());
+    }
+
+    #[test]
+    fn supervision_block_parses() {
+        let cfg = Config::parse(
+            "[serve]\nstall_timeout_ms = 250\npoison_threshold = 1\n\
+             default_deadline_ms = 40\nchaos = \"panic@w0:b3, stall@w1:b2:50ms\"\n",
+        )
+        .unwrap();
+        let cc = from_config(&cfg, "/tmp/a").unwrap();
+        assert_eq!(cc.stall_timeout, Duration::from_millis(250));
+        assert_eq!(cc.poison_threshold, 1);
+        assert_eq!(cc.default_deadline, Some(Duration::from_millis(40)));
+        assert_eq!(cc.chaos.events.len(), 2);
+        // a malformed chaos spec is a config error, not a silent no-op
+        let bad = Config::parse("[serve]\nchaos = \"panic@nonsense\"\n").unwrap();
+        assert!(from_config(&bad, "/tmp/a").is_err());
     }
 
     #[test]
@@ -203,6 +276,9 @@ fabric_threads = 6
             "[serve]\nrouting = \"random\"",
             "[serve]\nplan_store_capacity = 0",
             "[serve]\nfabric_threads = -1",
+            "[serve]\nstall_timeout_ms = 0",
+            "[serve]\npoison_threshold = 0",
+            "[serve]\ndefault_deadline_ms = -5",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(from_config(&cfg, "/tmp/a").is_err(), "{bad}");
@@ -229,6 +305,17 @@ fabric_threads = 6
         assert_eq!(gw.listen_addr, "0.0.0.0:9000");
         assert_eq!(gw.max_sessions, 8);
         assert_eq!(gw.idle_timeout, Duration::from_millis(1500));
+        assert!(gw.admin_token.is_none(), "unset token means loopback-only fallback");
+        // admin token + session-drop chaos flow into the gateway block
+        let cfg = Config::parse(
+            "[serve]\nlisten_addr = \"127.0.0.1:7070\"\nadmin_token = \"s3cret\"\n\
+             chaos = \"drop@s1:f2\"\n",
+        )
+        .unwrap();
+        let gw = gateway_from_config(&cfg).unwrap().expect("gateway");
+        assert_eq!(gw.admin_token.as_deref(), Some("s3cret"));
+        assert_eq!(gw.chaos.session_drop(1), Some(2));
+        assert_eq!(gw.chaos.session_drop(0), None);
         // bad values
         for bad in [
             "[serve]\nlisten_addr = \"x\"\nmax_sessions = 0",

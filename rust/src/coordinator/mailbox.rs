@@ -1,0 +1,186 @@
+//! Condvar'd worker mailbox: one wait for both batches and control.
+//!
+//! Before PR 6 each worker owned two mpsc receivers (batches, control)
+//! and — std mpsc having no `select` — polled the control channel every
+//! 20 ms while blocking on batches.  Unload acks and shutdown paid that
+//! polling tax, and a supervisor would have paid it on every respawn.
+//! The mailbox replaces both channels with a single mutex + condvar:
+//! `recv` sleeps until *either* kind of message arrives, control drains
+//! first (unload/shutdown must not queue behind a deep batch backlog),
+//! and wakeups are edge-triggered instead of polled.
+//!
+//! The mailbox is also the supervisor's respawn primitive.  Mailboxes
+//! are per-*slot*, not per-thread: the dispatcher and the control plane
+//! address slot `w` forever, while the thread consuming slot `w` may be
+//! replaced after a crash or stall.  Each consumer thread is stamped
+//! with the slot's `generation` at spawn; `bump_generation` (called by
+//! the supervisor when it replaces the thread) makes every `recv` from
+//! the old thread return `Mail::Superseded`, so a stalled-but-alive
+//! zombie finishes its in-flight batch, observes it lost the slot, and
+//! exits without touching the queue the replacement now owns.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// What `recv` produced, in delivery-priority order.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Mail<B, C> {
+    /// A control message (always delivered before queued batches).
+    Control(C),
+    /// The next queued batch.
+    Batch(B),
+    /// The slot was handed to a newer thread; the caller must exit
+    /// without consuming anything further.
+    Superseded,
+}
+
+struct State<B, C> {
+    batches: VecDeque<B>,
+    control: VecDeque<C>,
+}
+
+/// One worker slot's inbox (see module docs).
+pub struct Mailbox<B, C> {
+    state: Mutex<State<B, C>>,
+    available: Condvar,
+    generation: AtomicU64,
+}
+
+impl<B, C> Default for Mailbox<B, C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<B, C> Mailbox<B, C> {
+    pub fn new() -> Self {
+        Mailbox {
+            state: Mutex::new(State { batches: VecDeque::new(), control: VecDeque::new() }),
+            available: Condvar::new(),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// The generation a freshly spawned consumer should pass to `recv`.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Retire the current consumer: every subsequent `recv`/`try_pop`
+    /// from the old generation returns `Superseded`/`None`.  Returns the
+    /// new generation to stamp the replacement thread with.
+    pub fn bump_generation(&self) -> u64 {
+        // take the lock so the store cannot interleave inside another
+        // thread's locked check-then-wait (no missed wakeup)
+        let _guard = self.state.lock().unwrap();
+        let next = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        self.available.notify_all();
+        next
+    }
+
+    pub fn push_batch(&self, batch: B) {
+        self.state.lock().unwrap().batches.push_back(batch);
+        self.available.notify_all();
+    }
+
+    pub fn push_control(&self, msg: C) {
+        self.state.lock().unwrap().control.push_back(msg);
+        self.available.notify_all();
+    }
+
+    /// Queued batches not yet picked up (dispatcher routing signal).
+    pub fn queued_batches(&self) -> usize {
+        self.state.lock().unwrap().batches.len()
+    }
+
+    /// Block until a message is available for generation `my_gen`.
+    /// Control messages outrank batches; a bumped generation outranks
+    /// both.
+    pub fn recv(&self, my_gen: u64) -> Mail<B, C> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if self.generation.load(Ordering::SeqCst) != my_gen {
+                return Mail::Superseded;
+            }
+            if let Some(c) = st.control.pop_front() {
+                return Mail::Control(c);
+            }
+            if let Some(b) = st.batches.pop_front() {
+                return Mail::Batch(b);
+            }
+            st = self.available.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking batch pop for the post-shutdown drain: hand back the
+    /// next queued batch, or `None` when the queue is empty *or* the
+    /// caller no longer owns the slot.
+    pub fn try_pop_batch(&self, my_gen: u64) -> Option<B> {
+        if self.generation.load(Ordering::SeqCst) != my_gen {
+            return None;
+        }
+        self.state.lock().unwrap().batches.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    type TestBox = Mailbox<u32, &'static str>;
+
+    #[test]
+    fn control_outranks_batches() {
+        let mb = TestBox::new();
+        mb.push_batch(1);
+        mb.push_batch(2);
+        mb.push_control("unload");
+        let g = mb.generation();
+        assert_eq!(mb.recv(g), Mail::Control("unload"));
+        assert_eq!(mb.recv(g), Mail::Batch(1));
+        assert_eq!(mb.recv(g), Mail::Batch(2));
+        assert_eq!(mb.queued_batches(), 0);
+    }
+
+    #[test]
+    fn recv_blocks_until_push() {
+        let mb = Arc::new(TestBox::new());
+        let g = mb.generation();
+        let m2 = Arc::clone(&mb);
+        let h = std::thread::spawn(move || m2.recv(g));
+        std::thread::sleep(Duration::from_millis(20));
+        mb.push_batch(7);
+        assert_eq!(h.join().unwrap(), Mail::Batch(7));
+    }
+
+    #[test]
+    fn bump_supersedes_old_generation() {
+        let mb = Arc::new(TestBox::new());
+        let old = mb.generation();
+        // a blocked old-generation consumer wakes up superseded
+        let m2 = Arc::clone(&mb);
+        let h = std::thread::spawn(move || m2.recv(old));
+        std::thread::sleep(Duration::from_millis(20));
+        let new = mb.bump_generation();
+        assert_eq!(h.join().unwrap(), Mail::Superseded);
+        assert_ne!(old, new);
+        // queued work is preserved for the replacement
+        mb.push_batch(9);
+        assert_eq!(mb.try_pop_batch(old), None, "old gen cannot drain");
+        assert_eq!(mb.try_pop_batch(new), Some(9));
+    }
+
+    #[test]
+    fn try_pop_drains_in_order() {
+        let mb = TestBox::new();
+        mb.push_batch(1);
+        mb.push_batch(2);
+        let g = mb.generation();
+        assert_eq!(mb.try_pop_batch(g), Some(1));
+        assert_eq!(mb.try_pop_batch(g), Some(2));
+        assert_eq!(mb.try_pop_batch(g), None);
+    }
+}

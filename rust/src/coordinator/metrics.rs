@@ -8,7 +8,13 @@ use std::time::Duration;
 
 use crate::runtime::fabric::FabricStats;
 use crate::store::{ModelPlanStats, StoreStats};
-use crate::util::stats::Percentiles;
+use crate::util::stats::Reservoir;
+
+/// Latency/queue/batch-size samples kept for percentile estimation.
+/// Algorithm-R reservoirs bound the memory of a long-running server (the
+/// PR-2 `Percentiles` vectors grew one entry per request forever); 4096
+/// samples keep p99 well inside a percent of the exact value.
+const RESERVOIR_CAP: usize = 4096;
 
 /// Decode / fault / plan counters attributed to one model's batches.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -24,7 +30,6 @@ pub struct ModelServingStats {
     pub plans_adopted: u64,
 }
 
-#[derive(Default)]
 pub struct ServingMetrics {
     pub requests: u64,
     pub samples: u64,
@@ -52,6 +57,15 @@ pub struct ServingMetrics {
     /// never held the model acks without a release).
     pub unload_requests: u64,
     pub proactive_releases: u64,
+    /// Supervision counters (PR 6): worker threads replaced (crash or
+    /// stall), stalls among them, crashed in-flight batches replayed on a
+    /// healthy slot, batches quarantined at the poison threshold, and
+    /// requests failed with the typed `DeadlineExceeded`.
+    pub respawns: u64,
+    pub stalls: u64,
+    pub redispatched: u64,
+    pub poisoned: u64,
+    pub deadline_exceeded: u64,
     /// Same counters keyed by model (BTreeMap: stable report order).
     per_model: BTreeMap<String, ModelServingStats>,
     /// Plan-store snapshot attached at shutdown.
@@ -62,9 +76,43 @@ pub struct ServingMetrics {
     /// TCP gateway snapshot (sessions/frames/latency), attached by the
     /// gateway before it renders a live or shutdown report.
     gateway: Option<GatewayReport>,
-    latency_us: Percentiles,
-    queue_us: Percentiles,
-    batch_sizes: Percentiles,
+    latency_us: Reservoir,
+    queue_us: Reservoir,
+    batch_sizes: Reservoir,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        ServingMetrics {
+            requests: 0,
+            samples: 0,
+            batches: 0,
+            failures: 0,
+            faults_detected: 0,
+            faults_corrected: 0,
+            decode_fast_path: 0,
+            decode_voted: 0,
+            plans_built: 0,
+            energy_dac_conversions: 0,
+            energy_adc_conversions: 0,
+            unload_requests: 0,
+            proactive_releases: 0,
+            respawns: 0,
+            stalls: 0,
+            redispatched: 0,
+            poisoned: 0,
+            deadline_exceeded: 0,
+            per_model: BTreeMap::new(),
+            plan_store: None,
+            fabric: None,
+            gateway: None,
+            // fixed seeds: replacement decisions must not depend on how
+            // many samples a previous run saw
+            latency_us: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A7),
+            queue_us: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A8),
+            batch_sizes: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A9),
+        }
+    }
 }
 
 /// The TCP serving gateway's counters, rendered as `gateway:` report
@@ -204,6 +252,11 @@ impl ServingMetrics {
             "\nunloads: proactive={} worker-releases={}",
             self.unload_requests, self.proactive_releases,
         ));
+        out.push_str(&format!(
+            "\nsupervision: respawns={} stalls={} redispatched={} poisoned={} \
+             deadline-exceeded={}",
+            self.respawns, self.stalls, self.redispatched, self.poisoned, self.deadline_exceeded,
+        ));
         for (model, s) in &self.per_model {
             out.push_str(&format!(
                 "\nmodel={model}: batches={} decode fast-path={} voted={} \
@@ -273,6 +326,28 @@ mod tests {
         let rep = m.report(Duration::from_secs(1));
         assert!(rep.contains("requests=2"));
         assert!(rep.contains("throughput=6.0"));
+        // the supervision line renders even when nothing went wrong
+        assert!(
+            rep.contains(
+                "supervision: respawns=0 stalls=0 redispatched=0 poisoned=0 deadline-exceeded=0"
+            ),
+            "{rep}"
+        );
+    }
+
+    #[test]
+    fn latency_samples_are_bounded_by_the_reservoir() {
+        // a long-running server must not grow a vector per request: the
+        // reservoir caps retained samples while percentiles stay sane
+        let mut m = ServingMetrics::default();
+        for i in 0..100_000u64 {
+            m.record_response(1, Duration::from_micros(i), Duration::from_micros(i / 2), true);
+        }
+        let p50 = m.latency_percentile_us(50.0);
+        assert!((20_000.0..=80_000.0).contains(&p50), "p50 ={p50}");
+        let p99 = m.latency_percentile_us(99.0);
+        assert!(p99 > p50, "p99 {p99} above p50 {p50}");
+        assert!(m.queue_percentile_us(50.0) < p50);
     }
 
     #[test]
@@ -312,11 +387,24 @@ mod tests {
             latency_p50_us: 1000.0,
             latency_p99_us: 9000.0,
         });
+        m.respawns = 3;
+        m.stalls = 1;
+        m.redispatched = 2;
+        m.poisoned = 1;
+        m.deadline_exceeded = 4;
         let rep = m.report(Duration::from_secs(1));
         // global decode line precedes per-model lines (report parsers key
         // on the first `fast-path=` occurrence)
         assert!(rep.find("decode: fast-path=0").unwrap() < rep.find("model=bert").unwrap());
         assert!(rep.contains("unloads: proactive=1 worker-releases=2"), "{rep}");
+        assert!(
+            rep.contains(
+                "supervision: respawns=3 stalls=1 redispatched=2 poisoned=1 deadline-exceeded=4"
+            ),
+            "{rep}"
+        );
+        // supervision renders with the global block, before per-model lines
+        assert!(rep.find("supervision: respawns=").unwrap() < rep.find("model=bert").unwrap());
         assert!(
             rep.contains("fabric: threads=8 helpers=7 workers=4 budget=2 jobs=11 tasks=120"),
             "{rep}"

@@ -6,14 +6,17 @@
 //! serving report.
 
 pub mod batcher;
+pub mod chaos;
 pub mod config_file;
+pub mod mailbox;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use chaos::{ChaosAction, ChaosEvent, ChaosSpec};
 pub use metrics::{GatewayReport, ServingMetrics};
 pub use router::{RoutingKind, RoutingPolicy};
-pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use request::{InferenceRequest, InferenceResponse, RequestId, ServeError, ServeErrorKind};
 pub use server::{BackendKind, Coordinator, CoordinatorConfig, CoordinatorHandle};

@@ -1,5 +1,7 @@
-//! Request/response types for the serving coordinator.
+//! Request/response types for the serving coordinator, including the
+//! typed serving error the supervision layer and the wire protocol share.
 
+use std::fmt;
 use std::time::{Duration, Instant};
 
 use crate::nn::models::Batch;
@@ -8,6 +10,59 @@ use crate::tensor::MatF;
 /// Monotonically increasing request id.
 pub type RequestId = u64;
 
+/// Why a request failed, in terms a client can act on (see the README
+/// failure-modes table): `Model`/`Poisoned`/`DeadlineExceeded` are
+/// permanent for the same request, `Internal` is retryable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeErrorKind {
+    /// Unknown model, shape mismatch, or load failure — fix the request.
+    Model,
+    /// Worker-side failure (backend construction, crash during an
+    /// unrelated batch) — safe to retry, inference is pure.
+    Internal,
+    /// The request's deadline passed before a result was produced.
+    DeadlineExceeded,
+    /// The batch crashed workers `poison_threshold` times and was
+    /// quarantined instead of being redispatched again.
+    Poisoned,
+}
+
+/// A typed serving failure: the kind drives client retry policy and the
+/// wire error code; the message carries the human-readable detail.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeError {
+    pub kind: ServeErrorKind,
+    pub message: String,
+}
+
+impl ServeError {
+    pub fn new(kind: ServeErrorKind, message: impl Into<String>) -> Self {
+        ServeError { kind, message: message.into() }
+    }
+
+    pub fn model(message: impl Into<String>) -> Self {
+        Self::new(ServeErrorKind::Model, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self::new(ServeErrorKind::Internal, message)
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let kind = match self.kind {
+            ServeErrorKind::Model => "model",
+            ServeErrorKind::Internal => "internal",
+            ServeErrorKind::DeadlineExceeded => "deadline-exceeded",
+            ServeErrorKind::Poisoned => "poisoned",
+        };
+        write!(f, "{kind}: {}", self.message)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// One inference request: a (possibly multi-sample) input for a zoo model.
 #[derive(Debug)]
 pub struct InferenceRequest {
@@ -15,15 +70,35 @@ pub struct InferenceRequest {
     pub model: String,
     pub input: Batch,
     pub submitted_at: Instant,
+    /// Absolute completion deadline; `None` means no limit.  Resolved at
+    /// submit time (per-request wire field, else the server default) so
+    /// queue time counts against it.
+    pub deadline: Option<Instant>,
 }
 
 impl InferenceRequest {
     pub fn new(id: RequestId, model: &str, input: Batch) -> Self {
-        InferenceRequest { id, model: model.to_string(), input, submitted_at: Instant::now() }
+        InferenceRequest {
+            id,
+            model: model.to_string(),
+            input,
+            submitted_at: Instant::now(),
+            deadline: None,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
+        self.deadline = deadline;
+        self
     }
 
     pub fn num_samples(&self) -> usize {
         self.input.len()
+    }
+
+    /// True once the request can no longer be answered in time.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
@@ -31,8 +106,8 @@ impl InferenceRequest {
 #[derive(Debug)]
 pub struct InferenceResponse {
     pub id: RequestId,
-    /// Logits (num_samples, num_classes), or the failure message.
-    pub result: Result<MatF, String>,
+    /// Logits (num_samples, num_classes), or the typed failure.
+    pub result: Result<MatF, ServeError>,
     /// Time spent queued before a worker picked the batch up.
     pub queue_time: Duration,
     /// End-to-end latency (submit -> response).
@@ -53,5 +128,24 @@ mod tests {
         let r = InferenceRequest::new(1, "mlp", Batch::Images(Nhwc::zeros(3, 28, 28, 1)));
         assert_eq!(r.num_samples(), 3);
         assert_eq!(r.model, "mlp");
+        assert_eq!(r.deadline, None);
+        assert!(!r.expired(Instant::now()));
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let now = Instant::now();
+        let r = InferenceRequest::new(2, "mlp", Batch::Images(Nhwc::zeros(1, 28, 28, 1)))
+            .with_deadline(Some(now + Duration::from_millis(5)));
+        assert!(!r.expired(now));
+        assert!(r.expired(now + Duration::from_millis(5)));
+        assert!(r.expired(now + Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn serve_error_display_includes_kind() {
+        let e = ServeError::new(ServeErrorKind::DeadlineExceeded, "late by 3ms");
+        assert_eq!(e.to_string(), "deadline-exceeded: late by 3ms");
+        assert_eq!(ServeError::model("no such model").to_string(), "model: no such model");
     }
 }

@@ -16,26 +16,69 @@
 //! into the serving metrics — globally and per model — and the plan
 //! store's and fabric's counters land in the shutdown report.
 //!
-//! **Control plane.**  Alongside each worker's batch channel runs a
-//! control channel (std mpsc has no select, so workers poll it between
-//! batches and while idle-waiting).  `Coordinator::unload_model` uses it
-//! to *proactively* release worker-held state — each worker drops its
-//! cached `Arc<dyn Model>` and stale plan adoptions and acks, so an
-//! unloaded model's memory is freed even if no worker ever sees the name
-//! again — and `shutdown` drains workers through the same channel (a
-//! `Shutdown` control message; queued batches still complete first).
+//! **Control plane.**  Each worker *slot* owns a condvar'd `Mailbox`
+//! carrying both its batch stream and its control stream (one wait, no
+//! polling; control outranks batches).  `Coordinator::unload_model` uses
+//! it to *proactively* release worker-held state — each worker drops its
+//! cached `Arc<dyn Model>` and stale plan adoptions and acks — and
+//! `shutdown` drains workers through the same mailbox (a `Shutdown`
+//! control message; queued batches still complete first).
+//!
+//! **Supervision (PR 6).**  The paper's detect→retry→recover story,
+//! lifted from residue channels to worker threads.  A supervisor thread
+//! watches for two failure shapes:
+//!
+//!   * **death** — a panic anywhere in the batch path is caught at the
+//!     worker loop boundary and reported as `WorkerDown` together with
+//!     the in-flight batch;
+//!   * **stall** — each worker heartbeats around its forward pass; a
+//!     busy worker whose heartbeat goes stale past `stall_timeout` is
+//!     declared stalled.
+//!
+//! Recovery is the same for both: the slot's mailbox generation is
+//! bumped (retiring the old thread — a stalled-but-alive zombie finishes
+//! its batch, delivers it exactly once, and exits on the next `recv`)
+//! and a replacement thread is spawned **on the same mailbox**, so
+//! queued batches and control messages carry over untouched.  The
+//! replacement re-warms plans through the build-once `PlanStore` (cheap:
+//! warms are store hits that only adopt).  A dead worker's in-flight
+//! batch is **redispatched** to a healthy slot — inference is pure, so
+//! the replay is bit-identical under `NoiseModel::None` — unless it has
+//! already crashed `poison_threshold` workers, in which case it is
+//! quarantined with a typed `Poisoned` reject instead of fueling a crash
+//! loop.  Requests may carry a **deadline** (per-request or the server
+//! default): expired requests are failed with a typed
+//! `DeadlineExceeded` — in the dispatcher queue, at batch pickup, or at
+//! delivery — instead of burning analog-core time on answers nobody is
+//! waiting for.  All of it is driven deterministically by the seeded
+//! positional `ChaosSpec` (chaos.rs) and surfaced in the report's
+//! `supervision:` line.
+//!
+//! Counter discipline under crashes: a worker flushes its per-batch
+//! counter deltas into the shared metrics only *after* a batch
+//! completes, so a crashed worker's partial forward never lands — the
+//! redispatched replay is counted exactly once and `decode:`/`faults:`/
+//! adc-conversion totals stay bit-identical to a crash-free run.  (DAC
+//! conversions and plan adoptions differ: the replacement's re-warm
+//! legitimately recharges the weight DACs.)
 
+use std::any::Any;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::analog::{FixedPointCore, Fp32Backend, GemmBackend, NoiseModel, RnsCore, RnsCoreConfig};
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
+use crate::coordinator::chaos::{ChaosAction, ChaosSpec, WorkerChaos};
+use crate::coordinator::mailbox::{Mail, Mailbox};
 use crate::coordinator::metrics::{GatewayReport, ServingMetrics};
-use crate::coordinator::request::{InferenceRequest, InferenceResponse, RequestId};
+use crate::coordinator::request::{
+    InferenceRequest, InferenceResponse, RequestId, ServeError, ServeErrorKind,
+};
 use crate::coordinator::router::RoutingKind;
 use crate::nn::models::{Batch, Model, ModelRegistry};
 use crate::runtime::fabric::{ExecutionFabric, FabricHandle};
@@ -74,6 +117,16 @@ pub struct CoordinatorConfig {
     /// Total thread budget for the shared execution fabric (native RNS
     /// backends): 0 = auto (`RNS_NATIVE_THREADS`, else core count).
     pub fabric_threads: usize,
+    /// Injected process faults (tests / chaos smoke); empty = none.
+    pub chaos: ChaosSpec,
+    /// Heartbeat staleness after which a *busy* worker is declared
+    /// stalled and its slot handed to a replacement thread.
+    pub stall_timeout: Duration,
+    /// Worker crashes a single batch may cause before it is quarantined
+    /// with a typed `Poisoned` reject instead of being redispatched.
+    pub poison_threshold: u32,
+    /// Deadline applied to requests that carry none; `None` = unlimited.
+    pub default_deadline: Option<Duration>,
 }
 
 impl CoordinatorConfig {
@@ -88,14 +141,13 @@ impl CoordinatorConfig {
             routing: RoutingKind::default(),
             plan_store_capacity: DEFAULT_UNTAGGED_CAPACITY,
             fabric_threads: 0,
+            chaos: ChaosSpec::default(),
+            stall_timeout: Duration::from_secs(30),
+            poison_threshold: 2,
+            default_deadline: None,
         }
     }
 }
-
-/// How often an idle worker re-checks its control channel while blocked
-/// waiting for batches (std mpsc has no select; 20 ms bounds proactive-
-/// unload latency without measurable idle cost).
-const CONTROL_POLL: Duration = Duration::from_millis(20);
 
 /// How long `unload_model` waits for each worker's release ack before
 /// giving up (a worker mid-forward acks after its current batch).
@@ -116,10 +168,20 @@ struct UnloadAck {
     dropped: bool,
 }
 
-/// What the message pump hands the worker's event handler.
-enum WorkerEvent {
-    Batch(FormedBatch),
-    Unload { model: String, ack: Sender<UnloadAck> },
+/// One worker slot's inbox: batches + control through a single condvar.
+type WorkerBox = Mailbox<FormedBatch, ControlMsg>;
+
+/// Messages from worker threads (and `shutdown`) to the supervisor.
+enum SupervisorMsg {
+    /// A worker thread died.  `gen` is the sender's mailbox generation —
+    /// a stale `gen` means a superseded zombie died, whose slot already
+    /// has a live owner (its batch still needs a fate; the slot does
+    /// not).  `batch` is the in-flight batch, if it died holding one.
+    WorkerDown { wid: usize, gen: u64, batch: Option<FormedBatch>, error: String },
+    /// Shutdown barrier: reply once every earlier message is processed.
+    Sync(Sender<()>),
+    /// Exit the supervisor loop.
+    Stop,
 }
 
 /// Per-request response routing callback (registered by
@@ -153,6 +215,117 @@ impl Responder {
     }
 }
 
+/// One worker slot's supervision state.  The mailbox and chaos counters
+/// are per-*slot* (they survive respawns: queued work carries over and
+/// positional chaos counts never reset); the health snapshot is
+/// per-*thread* (swapped on respawn so a zombie's late heartbeats are
+/// invisible).
+struct WorkerSlot {
+    mailbox: Arc<WorkerBox>,
+    health: Mutex<Arc<WorkerHealth>>,
+    chaos: Arc<Mutex<WorkerChaos>>,
+}
+
+/// One worker thread's liveness signal: a microsecond heartbeat plus a
+/// busy flag.  Only a *busy* worker can stall — an idle worker parks on
+/// its mailbox condvar without beating, which is healthy.
+struct WorkerHealth {
+    epoch: Instant,
+    beat_us: AtomicU64,
+    busy: AtomicBool,
+}
+
+impl WorkerHealth {
+    fn fresh() -> Arc<Self> {
+        let h = WorkerHealth {
+            epoch: Instant::now(),
+            beat_us: AtomicU64::new(0),
+            busy: AtomicBool::new(false),
+        };
+        h.beat();
+        Arc::new(h)
+    }
+
+    fn beat(&self) {
+        self.beat_us.store(self.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    fn set_busy(&self, busy: bool) {
+        self.busy.store(busy, Ordering::Relaxed);
+        self.beat();
+    }
+
+    fn stalled(&self, timeout: Duration) -> bool {
+        if !self.busy.load(Ordering::Relaxed) {
+            return false;
+        }
+        let last = Duration::from_micros(self.beat_us.load(Ordering::Relaxed));
+        self.epoch.elapsed().saturating_sub(last) > timeout
+    }
+}
+
+/// Everything needed to (re)spawn a worker thread on a slot — held by
+/// `Coordinator::start` for the initial fleet and by the supervisor for
+/// replacements.
+#[derive(Clone)]
+struct WorkerSpawner {
+    cfg: CoordinatorConfig,
+    store: Arc<PlanStore>,
+    registry: Arc<ModelRegistry>,
+    responder: Responder,
+    done_tx: Sender<usize>,
+    metrics: Arc<Mutex<ServingMetrics>>,
+    fabric: Option<Arc<ExecutionFabric>>,
+    slots: Arc<Vec<WorkerSlot>>,
+    sup_tx: Sender<SupervisorMsg>,
+}
+
+impl WorkerSpawner {
+    /// Spawn a worker thread owning slot `wid` at mailbox generation
+    /// `gen`, installing a fresh health snapshot for it.  Panics
+    /// anywhere in the thread are caught at this boundary and reported
+    /// to the supervisor (batch-path panics are caught closer in, with
+    /// the in-flight batch attached).
+    fn spawn(&self, wid: usize, gen: u64) -> JoinHandle<()> {
+        let health = WorkerHealth::fresh();
+        *self.slots[wid].health.lock().unwrap() = Arc::clone(&health);
+        let sh = WorkerShared {
+            cfg: self.cfg.clone(),
+            store: Arc::clone(&self.store),
+            registry: Arc::clone(&self.registry),
+            responder: self.responder.clone(),
+            done_tx: self.done_tx.clone(),
+            metrics: Arc::clone(&self.metrics),
+            fabric: self.fabric.as_ref().map(|f| f.handle()),
+            sup_tx: self.sup_tx.clone(),
+            mailbox: Arc::clone(&self.slots[wid].mailbox),
+            chaos: Arc::clone(&self.slots[wid].chaos),
+            health,
+        };
+        let sup_tx = self.sup_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("rns-worker-{wid}"))
+            .spawn(move || {
+                if let Err(payload) =
+                    panic::catch_unwind(AssertUnwindSafe(move || worker_loop(wid, gen, sh)))
+                {
+                    // a panic outside the batch path (control handling,
+                    // backend teardown): no batch to salvage, but the
+                    // slot still needs a replacement
+                    sup_tx
+                        .send(SupervisorMsg::WorkerDown {
+                            wid,
+                            gen,
+                            batch: None,
+                            error: panic_text(payload.as_ref()),
+                        })
+                        .ok();
+                }
+            })
+            .expect("spawn worker")
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
     /// Shared with every `CoordinatorHandle`; `shutdown` takes the inner
@@ -163,11 +336,17 @@ pub struct Coordinator {
     next_id: Arc<AtomicU64>,
     routes: ResponseRoutes,
     dispatcher: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
-    /// Per-worker control channels (proactive unload + shutdown drain).
-    /// Behind a mutex so `CoordinatorHandle` (shared across gateway
-    /// session threads) stays `Sync` on every supported toolchain.
-    control_txs: Arc<Mutex<Vec<Sender<ControlMsg>>>>,
+    supervisor: Option<JoinHandle<()>>,
+    sup_tx: Sender<SupervisorMsg>,
+    /// Worker thread handles; the supervisor appends replacements here,
+    /// so `shutdown` joins in a take-all loop instead of a single pass.
+    worker_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    slots: Arc<Vec<WorkerSlot>>,
+    /// Set by `shutdown` before the control fan-out; the supervisor
+    /// redispatches crashed batches to the crashed slot itself during a
+    /// drain (other slots may already have exited).
+    shutting_down: Arc<AtomicBool>,
+    default_deadline: Option<Duration>,
     metrics: Arc<Mutex<ServingMetrics>>,
     /// Shared read-only plan store (one `RnsPlan` per layer across all
     /// workers); its counters land in the shutdown report.
@@ -185,6 +364,7 @@ impl Coordinator {
         let (submit_tx, submit_rx) = mpsc::channel::<InferenceRequest>();
         let (resp_tx, resp_rx) = mpsc::channel::<InferenceResponse>();
         let (done_tx, done_rx) = mpsc::channel::<usize>();
+        let (sup_tx, sup_rx) = mpsc::channel::<SupervisorMsg>();
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
         // built once at startup, handed to every worker: the store is the
         // cross-worker plan memory, the registry the cross-worker
@@ -205,38 +385,56 @@ impl Coordinator {
         let routes: ResponseRoutes = Arc::new(Mutex::new(HashMap::new()));
         let responder = Responder { default_tx: resp_tx, routes: Arc::clone(&routes) };
 
-        let mut worker_txs = Vec::new();
-        let mut control_txs = Vec::new();
-        let mut workers = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
-            let (tx, rx) = mpsc::channel::<FormedBatch>();
-            let (ctrl_tx, ctrl_rx) = mpsc::channel::<ControlMsg>();
-            worker_txs.push(tx);
-            control_txs.push(ctrl_tx);
-            let shared = WorkerShared {
-                cfg: cfg.clone(),
-                store: Arc::clone(&store),
-                registry: Arc::clone(&registry),
-                responder: responder.clone(),
-                done_tx: done_tx.clone(),
-                metrics: Arc::clone(&metrics),
-                fabric: fabric.as_ref().map(|f| f.handle()),
-            };
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("rns-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, shared, rx, ctrl_rx))
-                    .expect("spawn worker"),
-            );
+        let nworkers = cfg.workers.max(1);
+        let slots: Arc<Vec<WorkerSlot>> = Arc::new(
+            (0..nworkers)
+                .map(|wid| WorkerSlot {
+                    mailbox: Arc::new(WorkerBox::new()),
+                    health: Mutex::new(WorkerHealth::fresh()),
+                    chaos: cfg.chaos.for_worker(wid),
+                })
+                .collect(),
+        );
+        let spawner = WorkerSpawner {
+            cfg: cfg.clone(),
+            store: Arc::clone(&store),
+            registry: Arc::clone(&registry),
+            responder: responder.clone(),
+            done_tx,
+            metrics: Arc::clone(&metrics),
+            fabric: fabric.as_ref().map(Arc::clone),
+            slots: Arc::clone(&slots),
+            sup_tx: sup_tx.clone(),
+        };
+        let worker_handles = Arc::new(Mutex::new(Vec::new()));
+        {
+            let mut handles = worker_handles.lock().unwrap();
+            for wid in 0..nworkers {
+                handles.push(spawner.spawn(wid, slots[wid].mailbox.generation()));
+            }
         }
 
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let sup_ctx = SupervisorCtx {
+            spawner,
+            worker_handles: Arc::clone(&worker_handles),
+            shutting_down: Arc::clone(&shutting_down),
+        };
+        let supervisor = std::thread::Builder::new()
+            .name("rns-supervisor".into())
+            .spawn(move || supervisor_loop(sup_ctx, sup_rx))
+            .expect("spawn supervisor");
+
+        let mailboxes: Vec<Arc<WorkerBox>> =
+            slots.iter().map(|s| Arc::clone(&s.mailbox)).collect();
         let batcher_cfg = cfg.batcher;
         let routing = cfg.routing;
         let metrics_d = Arc::clone(&metrics);
+        let responder_d = responder.clone();
         let dispatcher = std::thread::Builder::new()
             .name("rns-dispatcher".into())
             .spawn(move || {
-                dispatcher_loop(submit_rx, worker_txs, batcher_cfg, routing, done_rx, metrics_d)
+                dispatcher_loop(submit_rx, mailboxes, batcher_cfg, routing, done_rx, metrics_d, responder_d)
             })
             .expect("spawn dispatcher");
 
@@ -246,8 +444,12 @@ impl Coordinator {
             next_id: Arc::new(AtomicU64::new(1)),
             routes,
             dispatcher: Some(dispatcher),
-            workers,
-            control_txs: Arc::new(Mutex::new(control_txs)),
+            supervisor: Some(supervisor),
+            sup_tx,
+            worker_handles,
+            slots,
+            shutting_down,
+            default_deadline: cfg.default_deadline,
             metrics,
             store,
             registry,
@@ -270,7 +472,8 @@ impl Coordinator {
             store: Arc::clone(&self.store),
             registry: Arc::clone(&self.registry),
             fabric: self.fabric.as_ref().map(Arc::clone),
-            control_txs: Arc::clone(&self.control_txs),
+            slots: Arc::clone(&self.slots),
+            default_deadline: self.default_deadline,
             started: self.started,
         }
     }
@@ -308,13 +511,26 @@ impl Coordinator {
     /// out the name stays draining — the conservative pre-control-plane
     /// behavior.  Returns how many plans were evicted.
     pub fn unload_model(&self, name: &str) -> usize {
-        unload_model_via(&self.store, &self.registry, &self.control_txs, &self.metrics, name)
+        unload_model_via(&self.store, &self.registry, &self.slots, &self.metrics, name)
     }
 
-    /// Submit a request; returns its id immediately.
+    /// Submit a request; returns its id immediately.  The server default
+    /// deadline applies, if one is configured.
     pub fn submit(&self, model: &str, input: Batch) -> RequestId {
+        self.submit_with_deadline(model, input, None)
+    }
+
+    /// Submit with an explicit deadline budget (`None` falls back to the
+    /// configured server default).
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        input: Batch,
+        deadline: Option<Duration>,
+    ) -> RequestId {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = InferenceRequest::new(id, model, input);
+        let deadline = deadline.or(self.default_deadline).map(|d| Instant::now() + d);
+        let req = InferenceRequest::new(id, model, input).with_deadline(deadline);
         self.submit_tx
             .lock()
             .unwrap()
@@ -341,7 +557,9 @@ impl Coordinator {
 
     /// Stop accepting requests, drain workers through the control plane,
     /// and return the final report (plan store, fabric, and per-model
-    /// counters included).
+    /// counters included).  Crashes *during* the drain are still
+    /// recovered: the join loop below re-checks for replacement threads
+    /// (and syncs with the supervisor) until the fleet is truly quiet.
     pub fn shutdown(mut self) -> String {
         // taking the shared Option drops the one real sender, so every
         // CoordinatorHandle clone is closed too and the dispatcher sees
@@ -351,12 +569,35 @@ impl Coordinator {
             d.join().ok();
         }
         // every batch is now queued at some worker: drain via the control
-        // plane (workers finish their queues before exiting)
-        for tx in self.control_txs.lock().unwrap().iter() {
-            tx.send(ControlMsg::Shutdown).ok();
+        // plane (workers finish their queues before exiting).  The flag
+        // goes first so any concurrent respawn drains its slot too.
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for slot in self.slots.iter() {
+            slot.mailbox.push_control(ControlMsg::Shutdown);
         }
-        for w in self.workers.drain(..) {
-            w.join().ok();
+        loop {
+            let handles: Vec<JoinHandle<()>> =
+                self.worker_handles.lock().unwrap().drain(..).collect();
+            if handles.is_empty() {
+                // every joined thread sent its WorkerDown (if any) before
+                // exiting; the sync barrier makes the supervisor process
+                // them — any replacement it spawned is visible after it
+                let (ack_tx, ack_rx) = mpsc::channel();
+                if self.sup_tx.send(SupervisorMsg::Sync(ack_tx)).is_ok() {
+                    ack_rx.recv_timeout(Duration::from_secs(10)).ok();
+                }
+                if self.worker_handles.lock().unwrap().is_empty() {
+                    break;
+                }
+            } else {
+                for h in handles {
+                    h.join().ok();
+                }
+            }
+        }
+        self.sup_tx.send(SupervisorMsg::Stop).ok();
+        if let Some(s) = self.supervisor.take() {
+            s.join().ok();
         }
         let wall = self.started.elapsed();
         let mut m = self.metrics.lock().unwrap();
@@ -365,6 +606,30 @@ impl Coordinator {
             m.set_fabric(f.stats());
         }
         m.report(wall)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // `shutdown(self)` already ran if both threads were taken; a
+        // plain drop must still unpark the fleet (mailbox waits don't
+        // end with a channel disconnect the way mpsc receivers did)
+        if self.dispatcher.is_none() && self.supervisor.is_none() {
+            return;
+        }
+        self.submit_tx.lock().unwrap().take();
+        if let Some(d) = self.dispatcher.take() {
+            d.join().ok();
+        }
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for slot in self.slots.iter() {
+            slot.mailbox.push_control(ControlMsg::Shutdown);
+        }
+        self.sup_tx.send(SupervisorMsg::Stop).ok();
+        if let Some(s) = self.supervisor.take() {
+            s.join().ok();
+        }
+        // workers drain in the background; their handles drop detached
     }
 }
 
@@ -382,7 +647,8 @@ pub struct CoordinatorHandle {
     store: Arc<PlanStore>,
     registry: Arc<ModelRegistry>,
     fabric: Option<Arc<ExecutionFabric>>,
-    control_txs: Arc<Mutex<Vec<Sender<ControlMsg>>>>,
+    slots: Arc<Vec<WorkerSlot>>,
+    default_deadline: Option<Duration>,
     started: Instant,
 }
 
@@ -398,10 +664,26 @@ impl CoordinatorHandle {
         input: Batch,
         deliver: impl FnOnce(InferenceResponse) + Send + 'static,
     ) -> Result<RequestId, String> {
+        self.submit_routed_with_deadline(model, input, None, deliver)
+    }
+
+    /// `submit_routed` with an explicit deadline budget (`None` falls
+    /// back to the configured server default) — the gateway's Infer
+    /// path, carrying the frame's `deadline_ms` field.
+    pub fn submit_routed_with_deadline(
+        &self,
+        model: &str,
+        input: Batch,
+        deadline: Option<Duration>,
+        deliver: impl FnOnce(InferenceResponse) + Send + 'static,
+    ) -> Result<RequestId, String> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.routes.lock().unwrap().insert(id, Box::new(deliver));
+        let deadline = deadline.or(self.default_deadline).map(|d| Instant::now() + d);
         let sent = match self.submit_tx.lock().unwrap().as_ref() {
-            Some(tx) => tx.send(InferenceRequest::new(id, model, input)).is_ok(),
+            Some(tx) => {
+                tx.send(InferenceRequest::new(id, model, input).with_deadline(deadline)).is_ok()
+            }
             None => false,
         };
         if !sent {
@@ -421,7 +703,7 @@ impl CoordinatorHandle {
     /// Proactive model unload through the worker control plane; see
     /// `Coordinator::unload_model`.  Returns evicted plan count.
     pub fn unload_model(&self, name: &str) -> usize {
-        unload_model_via(&self.store, &self.registry, &self.control_txs, &self.metrics, name)
+        unload_model_via(&self.store, &self.registry, &self.slots, &self.metrics, name)
     }
 
     /// Render the live metrics report (same shape as the shutdown
@@ -447,11 +729,13 @@ impl CoordinatorHandle {
 /// Shared implementation of the proactive unload (used by the owning
 /// `Coordinator` and by every `CoordinatorHandle`): store unload first
 /// (the name starts draining), then registry, then the control fan-out,
-/// then end the draining state once every worker acked.
+/// then end the draining state once every worker acked.  Mailboxes are
+/// per-slot, so an unload racing a respawn still lands: the replacement
+/// thread inherits the queued `Unload` and acks it.
 fn unload_model_via(
     store: &Arc<PlanStore>,
     registry: &Arc<ModelRegistry>,
-    control_txs: &Arc<Mutex<Vec<Sender<ControlMsg>>>>,
+    slots: &Arc<Vec<WorkerSlot>>,
     metrics: &Arc<Mutex<ServingMetrics>>,
     name: &str,
 ) -> usize {
@@ -459,10 +743,10 @@ fn unload_model_via(
     registry.unload(name);
     let (ack_tx, ack_rx) = mpsc::channel();
     let mut sent = 0usize;
-    for tx in control_txs.lock().unwrap().iter() {
-        if tx.send(ControlMsg::Unload { model: name.to_string(), ack: ack_tx.clone() }).is_ok() {
-            sent += 1;
-        }
+    for slot in slots.iter() {
+        slot.mailbox
+            .push_control(ControlMsg::Unload { model: name.to_string(), ack: ack_tx.clone() });
+        sent += 1;
     }
     drop(ack_tx);
     let mut acked = 0usize;
@@ -492,13 +776,143 @@ fn unload_model_via(
     evicted
 }
 
+/// The supervisor's working set: how to respawn, where the thread
+/// handles live, and whether a drain is in progress.
+struct SupervisorCtx {
+    spawner: WorkerSpawner,
+    worker_handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    shutting_down: Arc<AtomicBool>,
+}
+
+/// Detect → respawn → redispatch.  Death arrives as `WorkerDown` (the
+/// panic boundary around the batch path sends it with the in-flight
+/// batch attached); stalls are found by scanning heartbeats on the
+/// receive timeout, which doubles as the scan cadence.
+fn supervisor_loop(ctx: SupervisorCtx, sup_rx: Receiver<SupervisorMsg>) {
+    let stall_timeout = ctx.spawner.cfg.stall_timeout;
+    let poll = (stall_timeout / 4).clamp(Duration::from_millis(10), Duration::from_secs(1));
+    loop {
+        match sup_rx.recv_timeout(poll) {
+            Ok(SupervisorMsg::WorkerDown { wid, gen, batch, error }) => {
+                handle_worker_down(&ctx, wid, gen, batch, error);
+            }
+            Ok(SupervisorMsg::Sync(ack)) => {
+                ack.send(()).ok();
+            }
+            Ok(SupervisorMsg::Stop) | Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => scan_for_stalls(&ctx, stall_timeout),
+        }
+    }
+}
+
+/// A worker thread died.  Retire its generation, decide its in-flight
+/// batch's fate (redispatch vs quarantine), and bring up a replacement
+/// on the same mailbox.  A stale `gen` means the sender was an already-
+/// superseded zombie: its batch still needs a fate, but the slot already
+/// has a live owner, so no respawn.
+fn handle_worker_down(
+    ctx: &SupervisorCtx,
+    wid: usize,
+    gen: u64,
+    batch: Option<FormedBatch>,
+    error: String,
+) {
+    let slots = &ctx.spawner.slots;
+    let draining = ctx.shutting_down.load(Ordering::SeqCst);
+    let current = slots[wid].mailbox.generation() == gen;
+    crate::log_warn!(
+        "supervisor",
+        "worker {wid} died{}: {error}",
+        if current { "" } else { " (superseded zombie)" }
+    );
+    // decide the batch's fate first, so a same-slot redispatch is queued
+    // before the replacement starts consuming
+    if let Some(mut batch) = batch {
+        batch.crashes += 1;
+        if batch.crashes >= ctx.spawner.cfg.poison_threshold {
+            crate::log_warn!(
+                "supervisor",
+                "batch for `{}` crashed {} workers; quarantined",
+                batch.model,
+                batch.crashes
+            );
+            ctx.spawner.metrics.lock().unwrap().poisoned += 1;
+            let err = ServeError::new(
+                ServeErrorKind::Poisoned,
+                format!(
+                    "batch quarantined after crashing {} workers (last error: {error})",
+                    batch.crashes
+                ),
+            );
+            fail_batch(wid, &batch, err, &ctx.spawner.responder, &ctx.spawner.metrics);
+        } else {
+            // inference is pure: replaying the batch on a healthy slot
+            // is bit-identical (under NoiseModel::None).  During a drain
+            // the batch goes back to the *crashed* slot — other slots
+            // may already have drained and exited, while this slot is
+            // guaranteed a replacement (and a Shutdown) below.
+            let target = if !draining && slots.len() > 1 { (wid + 1) % slots.len() } else { wid };
+            crate::log_warn!(
+                "supervisor",
+                "redispatching crashed batch for `{}` to worker {target} (crash {})",
+                batch.model,
+                batch.crashes
+            );
+            ctx.spawner.metrics.lock().unwrap().redispatched += 1;
+            slots[target].mailbox.push_batch(batch);
+        }
+    }
+    if current {
+        let next_gen = slots[wid].mailbox.bump_generation();
+        ctx.spawner.metrics.lock().unwrap().respawns += 1;
+        let handle = ctx.spawner.spawn(wid, next_gen);
+        ctx.worker_handles.lock().unwrap().push(handle);
+        if draining {
+            // the dead thread may already have consumed its Shutdown;
+            // make sure the replacement drains too (extras are harmless)
+            slots[wid].mailbox.push_control(ControlMsg::Shutdown);
+        }
+    }
+}
+
+/// Declare stalled any busy worker whose heartbeat went stale, and hand
+/// its slot to a replacement.  The stalled thread is *not* killed (Rust
+/// threads can't be) and its batch is *not* redispatched: if it ever
+/// wakes it delivers exactly once, then exits on the generation check.
+/// A thread that never wakes is covered by request deadlines.
+fn scan_for_stalls(ctx: &SupervisorCtx, stall_timeout: Duration) {
+    let slots = &ctx.spawner.slots;
+    for (wid, slot) in slots.iter().enumerate() {
+        let health = Arc::clone(&slot.health.lock().unwrap());
+        if !health.stalled(stall_timeout) {
+            continue;
+        }
+        crate::log_warn!(
+            "supervisor",
+            "worker {wid} stalled (busy, no heartbeat for >{stall_timeout:?}); respawning"
+        );
+        let next_gen = slot.mailbox.bump_generation();
+        {
+            let mut m = ctx.spawner.metrics.lock().unwrap();
+            m.stalls += 1;
+            m.respawns += 1;
+        }
+        let handle = ctx.spawner.spawn(wid, next_gen);
+        ctx.worker_handles.lock().unwrap().push(handle);
+        if ctx.shutting_down.load(Ordering::SeqCst) {
+            slot.mailbox.push_control(ControlMsg::Shutdown);
+        }
+    }
+}
+
 fn dispatcher_loop(
     submit_rx: Receiver<InferenceRequest>,
-    worker_txs: Vec<Sender<FormedBatch>>,
+    mailboxes: Vec<Arc<WorkerBox>>,
     batcher_cfg: BatcherConfig,
     routing: RoutingKind,
     done_rx: Receiver<usize>,
     metrics: Arc<Mutex<ServingMetrics>>,
+    responder: Responder,
 ) {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
     let mut policy = routing.build();
@@ -515,16 +929,46 @@ fn dispatcher_loop(
         while let Ok(wid) = done_rx.try_recv() {
             policy.on_complete(wid);
         }
+        // requests whose deadline passed while queued: typed fail now,
+        // before they waste a batch slot
+        for req in batcher.expire(Instant::now()) {
+            fail_expired_request(req, &responder, &metrics);
+        }
         let force = !open;
         while let Some(batch) = batcher.pop_ready(Instant::now(), force) {
             metrics.lock().unwrap().record_batch(batch.input.len());
-            let wid = policy.pick(worker_txs.len());
+            let wid = policy.pick(mailboxes.len());
             policy.on_dispatch(wid);
-            worker_txs[wid].send(batch).ok();
+            mailboxes[wid].push_batch(batch);
         }
     }
-    // dropping worker_txs closes the batch channels; the coordinator's
+    // queued batches now live in worker mailboxes; the coordinator's
     // shutdown (or teardown) ends the workers through the control plane
+}
+
+/// Fail one request whose deadline expired in the dispatcher queue.
+fn fail_expired_request(
+    req: InferenceRequest,
+    responder: &Responder,
+    metrics: &Arc<Mutex<ServingMetrics>>,
+) {
+    let latency = req.submitted_at.elapsed();
+    {
+        let mut m = metrics.lock().unwrap();
+        m.record_response(req.num_samples(), latency, latency, false);
+        m.deadline_exceeded += 1;
+    }
+    responder.deliver(InferenceResponse {
+        id: req.id,
+        result: Err(ServeError::new(
+            ServeErrorKind::DeadlineExceeded,
+            format!("deadline passed after {latency:?} in queue"),
+        )),
+        queue_time: latency,
+        latency,
+        worker: usize::MAX,
+        faults_detected: 0,
+    });
 }
 
 /// Construct the configured backend with a private plan store (the CLI /
@@ -605,11 +1049,16 @@ struct WorkerShared {
     done_tx: Sender<usize>,
     metrics: Arc<Mutex<ServingMetrics>>,
     fabric: Option<FabricHandle>,
+    sup_tx: Sender<SupervisorMsg>,
+    mailbox: Arc<WorkerBox>,
+    chaos: Arc<Mutex<WorkerChaos>>,
+    health: Arc<WorkerHealth>,
 }
 
 /// Per-worker cumulative-counter snapshots, so each batch reports deltas
 /// into the shared metrics (multi-worker totals sum instead of
-/// last-writer-wins).
+/// last-writer-wins).  A crashed worker's unflushed partials die with
+/// its thread — the redispatched replay flushes exactly once.
 #[derive(Default)]
 struct WorkerCounters {
     faults: u64,
@@ -621,58 +1070,18 @@ struct WorkerCounters {
     adc: u64,
 }
 
-/// Interleave one worker's batch stream with its control stream: control
-/// messages (proactive unload, shutdown) are handled between batches —
-/// ahead of any queued batches — and a `Shutdown` still drains every
-/// batch already accepted before the pump returns.
-fn worker_message_pump(
-    rx: &Receiver<FormedBatch>,
-    ctrl_rx: &Receiver<ControlMsg>,
-    mut on_event: impl FnMut(WorkerEvent),
-) {
-    let mut batches_open = true;
-    loop {
-        match ctrl_rx.try_recv() {
-            Ok(ControlMsg::Shutdown) => break,
-            Ok(ControlMsg::Unload { model, ack }) => {
-                on_event(WorkerEvent::Unload { model, ack });
-                continue; // drain all pending control before the next batch
-            }
-            Err(TryRecvError::Empty) => {}
-            Err(TryRecvError::Disconnected) => {
-                if !batches_open {
-                    break; // both channels gone: coordinator dropped
-                }
-            }
-        }
-        if batches_open {
-            match rx.recv_timeout(CONTROL_POLL) {
-                Ok(batch) => on_event(WorkerEvent::Batch(batch)),
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => batches_open = false,
-            }
-        } else {
-            // dispatcher gone: only control traffic remains, block on it
-            match ctrl_rx.recv() {
-                Ok(ControlMsg::Shutdown) | Err(_) => break,
-                Ok(ControlMsg::Unload { model, ack }) => {
-                    on_event(WorkerEvent::Unload { model, ack });
-                }
-            }
-        }
-    }
-    // a shutdown must not drop batches the dispatcher already handed us
-    while let Ok(batch) = rx.try_recv() {
-        on_event(WorkerEvent::Batch(batch));
+/// Extract a printable message from a caught panic payload.
+fn panic_text(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
     }
 }
 
-fn worker_loop(
-    wid: usize,
-    sh: WorkerShared,
-    rx: Receiver<FormedBatch>,
-    ctrl_rx: Receiver<ControlMsg>,
-) {
+fn worker_loop(wid: usize, gen: u64, sh: WorkerShared) {
     // Backend is constructed in-thread (PJRT state is !Send), but borrows
     // the shared plan store + fabric; models come as shared Arcs from the
     // registry.
@@ -687,37 +1096,103 @@ fn worker_loop(
                 // no backend: fail every batch with the construction
                 // error, but keep serving the control plane so
                 // unload_model never hangs on a dead worker
-                worker_message_pump(&rx, &ctrl_rx, |ev| match ev {
-                    WorkerEvent::Batch(batch) => {
-                        fail_batch(wid, batch, &e, &sh.responder, &sh.metrics)
+                loop {
+                    sh.health.beat();
+                    match sh.mailbox.recv(gen) {
+                        Mail::Superseded => return,
+                        Mail::Control(ControlMsg::Shutdown) => break,
+                        Mail::Control(ControlMsg::Unload { ack, .. }) => {
+                            ack.send(UnloadAck { dropped: false }).ok();
+                        }
+                        Mail::Batch(batch) => fail_batch(
+                            wid,
+                            &batch,
+                            ServeError::internal(&e),
+                            &sh.responder,
+                            &sh.metrics,
+                        ),
                     }
-                    WorkerEvent::Unload { ack, .. } => {
-                        ack.send(UnloadAck { dropped: false }).ok();
-                    }
-                });
+                }
+                while let Some(batch) = sh.mailbox.try_pop_batch(gen) {
+                    fail_batch(wid, &batch, ServeError::internal(&e), &sh.responder, &sh.metrics);
+                }
                 return;
             }
         };
     let mut models: HashMap<String, Arc<dyn Model>> = HashMap::new();
     let mut counters = WorkerCounters::default();
-    worker_message_pump(&rx, &ctrl_rx, |ev| match ev {
-        WorkerEvent::Batch(batch) => {
-            serve_batch(wid, &sh, backend.as_mut(), &mut models, &mut counters, batch)
+    loop {
+        sh.health.beat();
+        match sh.mailbox.recv(gen) {
+            Mail::Superseded => return, // a replacement owns the slot now
+            Mail::Control(ControlMsg::Shutdown) => break,
+            Mail::Control(ControlMsg::Unload { model, ack }) => {
+                // proactive release: drop the shared-instance clone now
+                // (the registry and store were already unloaded by the
+                // coordinator), and let the backend forget its per-model
+                // state — no request for the name is needed anymore
+                let dropped = models.remove(&model).is_some();
+                backend.release_model(&model);
+                crate::log_debug!(
+                    "worker",
+                    "worker {wid}: control unload `{model}` (held instance: {dropped})"
+                );
+                ack.send(UnloadAck { dropped }).ok();
+            }
+            Mail::Batch(batch) => {
+                if !serve_guarded(wid, gen, &sh, backend.as_mut(), &mut models, &mut counters, batch)
+                {
+                    return; // panicked: supervisor notified, thread is done
+                }
+            }
         }
-        WorkerEvent::Unload { model, ack } => {
-            // proactive release: drop the shared-instance clone now (the
-            // registry and store were already unloaded by the
-            // coordinator), and let the backend forget its per-model
-            // state — no request for the name is needed anymore
-            let dropped = models.remove(&model).is_some();
-            backend.release_model(&model);
-            crate::log_debug!(
-                "worker",
-                "worker {wid}: control unload `{model}` (held instance: {dropped})"
-            );
-            ack.send(UnloadAck { dropped }).ok();
+    }
+    // a shutdown must not drop batches the dispatcher already handed us
+    while let Some(batch) = sh.mailbox.try_pop_batch(gen) {
+        if !serve_guarded(wid, gen, &sh, backend.as_mut(), &mut models, &mut counters, batch) {
+            return;
         }
-    });
+    }
+}
+
+/// Serve one batch behind the panic boundary, with chaos injection and
+/// heartbeat accounting.  Returns `false` when the thread must exit
+/// because the batch path panicked (the supervisor has the batch).
+fn serve_guarded(
+    wid: usize,
+    gen: u64,
+    sh: &WorkerShared,
+    backend: &mut dyn GemmBackend,
+    models: &mut HashMap<String, Arc<dyn Model>>,
+    counters: &mut WorkerCounters,
+    batch: FormedBatch,
+) -> bool {
+    // take the injected action out under the slot lock, act after: a
+    // chaos stall must not hold the lock the replacement will need
+    let action = sh.chaos.lock().unwrap().before_batch(&batch.model);
+    sh.health.set_busy(true);
+    let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+        match action {
+            Some(ChaosAction::Panic) => {
+                panic!("chaos: injected panic (worker {wid}, model `{}`)", batch.model)
+            }
+            Some(ChaosAction::Stall(d)) => std::thread::sleep(d),
+            None => {}
+        }
+        serve_batch(wid, sh, backend, models, counters, &batch);
+    }));
+    sh.health.set_busy(false);
+    match outcome {
+        Ok(()) => true,
+        Err(payload) => {
+            let error = panic_text(payload.as_ref());
+            crate::log_error!("worker", "worker {wid} died serving `{}`: {error}", batch.model);
+            sh.sup_tx
+                .send(SupervisorMsg::WorkerDown { wid, gen, batch: Some(batch), error })
+                .ok();
+            false
+        }
+    }
 }
 
 fn serve_batch(
@@ -726,8 +1201,20 @@ fn serve_batch(
     backend: &mut dyn GemmBackend,
     models: &mut HashMap<String, Arc<dyn Model>>,
     counters: &mut WorkerCounters,
-    batch: FormedBatch,
+    batch: &FormedBatch,
 ) {
+    let picked_up = Instant::now();
+    // every member already past its deadline: skip the forward entirely
+    if batch.members.iter().all(|(req, _)| req.expired(picked_up)) {
+        fail_batch(
+            wid,
+            batch,
+            ServeError::new(ServeErrorKind::DeadlineExceeded, "deadline passed before pickup"),
+            &sh.responder,
+            &sh.metrics,
+        );
+        return;
+    }
     // tag plan lookups with the model for per-model store counters
     // (and so served plans are pinned until model unload)
     backend.set_model_tag(&batch.model);
@@ -740,7 +1227,7 @@ fn serve_batch(
         Ok(m) => m,
         Err(e) => {
             crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
-            fail_batch(wid, batch, &e, &sh.responder, &sh.metrics);
+            fail_batch(wid, batch, ServeError::model(e), &sh.responder, &sh.metrics);
             return;
         }
     };
@@ -754,7 +1241,9 @@ fn serve_batch(
         // warm the per-layer RNS plans: the shared store deduplicates,
         // so W workers warming the same model build each plan exactly
         // once — the other W-1 warms are store hits that only adopt
-        // (and charge their core's one-time weight-DAC energy)
+        // (and charge their core's one-time weight-DAC energy).  A
+        // respawned worker re-warms through the same path: store hits,
+        // no rebuilds.
         model.warm(backend);
         crate::log_debug!(
             "worker",
@@ -766,7 +1255,6 @@ fn serve_batch(
         // unloaded instance, releasing its share of the old weights
         models.insert(batch.model.clone(), Arc::clone(&model));
     }
-    let picked_up = Instant::now();
     let logits = model.forward(&batch.input, backend);
     // fault counters from the RRNS core, per batch
     let (detected, corrected, fast_path, voted) = backend_fault_counts(backend);
@@ -817,14 +1305,31 @@ fn serve_batch(
             plans_delta,
         );
     }
-    for (req, offset) in batch.members {
+    for (req, offset) in &batch.members {
         let n = req.num_samples();
         let latency = req.submitted_at.elapsed();
         let queue_time = picked_up.duration_since(req.submitted_at);
-        sh.metrics.lock().unwrap().record_response(n, latency, queue_time, true);
+        // a member whose deadline passed during the forward gets the
+        // typed error — its client stopped waiting at the deadline
+        let expired = req.expired(Instant::now());
+        {
+            let mut m = sh.metrics.lock().unwrap();
+            m.record_response(n, latency, queue_time, !expired);
+            if expired {
+                m.deadline_exceeded += 1;
+            }
+        }
+        let result = if expired {
+            Err(ServeError::new(
+                ServeErrorKind::DeadlineExceeded,
+                format!("completed after the deadline ({latency:?} end-to-end)"),
+            ))
+        } else {
+            Ok(split_logits(&logits, *offset, n))
+        };
         sh.responder.deliver(InferenceResponse {
             id: req.id,
-            result: Ok(split_logits(&logits, offset, n)),
+            result,
             queue_time,
             latency,
             worker: wid,
@@ -843,17 +1348,23 @@ fn backend_fault_counts(backend: &dyn GemmBackend) -> (u64, u64, u64, u64) {
 
 fn fail_batch(
     wid: usize,
-    batch: FormedBatch,
-    err: &str,
+    batch: &FormedBatch,
+    err: ServeError,
     responder: &Responder,
     metrics: &Arc<Mutex<ServingMetrics>>,
 ) {
-    for (req, _) in batch.members {
+    for (req, _) in &batch.members {
         let latency = req.submitted_at.elapsed();
-        metrics.lock().unwrap().record_response(req.num_samples(), latency, latency, false);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_response(req.num_samples(), latency, latency, false);
+            if err.kind == ServeErrorKind::DeadlineExceeded {
+                m.deadline_exceeded += 1;
+            }
+        }
         responder.deliver(InferenceResponse {
             id: req.id,
-            result: Err(err.to_string()),
+            result: Err(err.clone()),
             queue_time: latency,
             latency,
             worker: wid,
@@ -877,6 +1388,13 @@ mod tests {
 
     fn have_artifacts() -> bool {
         std::path::Path::new(&format!("{}/models/mlp.rt", artifacts_dir())).exists()
+    }
+
+    /// The built-in synthetic model: servable without artifacts.
+    const SYN: &str = "synthetic-mlp";
+
+    fn syn_input(n: usize) -> Batch {
+        Batch::Images(Nhwc::zeros(n, 28, 28, 1))
     }
 
     #[test]
@@ -936,7 +1454,8 @@ mod tests {
         let coord = Coordinator::start(cfg);
         coord.submit("nope", Batch::Images(Nhwc::zeros(1, 2, 2, 1)));
         let r = coord.recv_timeout(Duration::from_secs(5)).expect("response");
-        assert!(r.result.is_err());
+        let err = r.result.unwrap_err();
+        assert_eq!(err.kind, ServeErrorKind::Model, "{err}");
         coord.shutdown();
     }
 
@@ -971,5 +1490,101 @@ mod tests {
         assert!(coord.recv_timeout(Duration::from_secs(5)).is_some());
         let report = coord.shutdown();
         assert!(report.contains("unloads: proactive=1 worker-releases=0"), "{report}");
+    }
+
+    #[test]
+    fn crashed_worker_respawns_and_batch_redispatches() {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent");
+        cfg.workers = 2;
+        cfg.chaos = ChaosSpec::parse("panic@w0:b1").unwrap();
+        let coord = Coordinator::start(cfg);
+        // four sequential round-trips: the first batch lands on worker 0
+        // (round-robin) and panics; its redispatch must still answer
+        for i in 0..4u64 {
+            let id = coord.submit(SYN, syn_input(1));
+            let r = coord.recv_timeout(Duration::from_secs(10)).expect("response");
+            assert_eq!(r.id, id, "request {i}");
+            assert!(r.result.is_ok(), "request {i}: {:?}", r.result.as_ref().err());
+        }
+        let report = coord.shutdown();
+        assert!(report.contains("requests=4"), "{report}");
+        assert!(report.contains("failures=0"), "{report}");
+        assert!(
+            report.contains("supervision: respawns=1 stalls=0 redispatched=1 poisoned=0"),
+            "{report}"
+        );
+    }
+
+    #[test]
+    fn poison_batch_is_quarantined_not_crash_looped() {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent");
+        cfg.workers = 2;
+        cfg.poison_threshold = 2;
+        cfg.chaos = ChaosSpec::parse(&format!("poison@{SYN}")).unwrap();
+        let coord = Coordinator::start(cfg);
+        coord.submit(SYN, syn_input(1));
+        let r = coord.recv_timeout(Duration::from_secs(10)).expect("response");
+        let err = r.result.unwrap_err();
+        assert_eq!(err.kind, ServeErrorKind::Poisoned, "{err}");
+        assert!(err.message.contains("quarantined"), "{err}");
+        // the coordinator survived and still serves the control plane
+        let report = coord.shutdown();
+        assert!(
+            report.contains("supervision: respawns=2 stalls=0 redispatched=1 poisoned=1"),
+            "respawn loop must stop at the quarantine bound: {report}"
+        );
+    }
+
+    #[test]
+    fn stalled_worker_is_superseded_and_zombie_still_delivers() {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent");
+        cfg.workers = 1;
+        cfg.stall_timeout = Duration::from_millis(60);
+        cfg.chaos = ChaosSpec::parse("stall@w0:b1:400ms").unwrap();
+        let coord = Coordinator::start(cfg);
+        let id = coord.submit(SYN, syn_input(1));
+        // the zombie wakes after 400 ms and delivers exactly once
+        let r = coord.recv_timeout(Duration::from_secs(10)).expect("response");
+        assert_eq!(r.id, id);
+        assert!(r.result.is_ok());
+        // the replacement thread owns the slot now and serves new traffic
+        let id2 = coord.submit(SYN, syn_input(1));
+        let r2 = coord.recv_timeout(Duration::from_secs(10)).expect("response");
+        assert_eq!(r2.id, id2);
+        assert!(r2.result.is_ok());
+        let report = coord.shutdown();
+        assert!(report.contains("failures=0"), "{report}");
+        assert!(report.contains("stalls=1"), "{report}");
+        assert!(report.contains("deadline-exceeded=0"), "{report}");
+    }
+
+    #[test]
+    fn deadline_exceeded_is_typed_and_counted() {
+        let mut cfg = CoordinatorConfig::new(BackendKind::Fp32, "/nonexistent");
+        cfg.workers = 1;
+        // first batch holds the only worker for 300 ms (stall_timeout
+        // stays at its generous default: no respawn, just a slow batch)
+        cfg.chaos = ChaosSpec::parse("stall@w0:b1:300ms").unwrap();
+        let coord = Coordinator::start(cfg);
+        let slow = coord.submit(SYN, syn_input(1));
+        std::thread::sleep(Duration::from_millis(30)); // separate the batches
+        let doomed = coord.submit_with_deadline(SYN, syn_input(1), Some(Duration::from_millis(20)));
+        let mut ok_ids = Vec::new();
+        let mut deadline_ids = Vec::new();
+        for _ in 0..2 {
+            let r = coord.recv_timeout(Duration::from_secs(10)).expect("response");
+            match &r.result {
+                Ok(_) => ok_ids.push(r.id),
+                Err(e) => {
+                    assert_eq!(e.kind, ServeErrorKind::DeadlineExceeded, "{e}");
+                    deadline_ids.push(r.id);
+                }
+            }
+        }
+        assert_eq!(ok_ids, vec![slow]);
+        assert_eq!(deadline_ids, vec![doomed]);
+        let report = coord.shutdown();
+        assert!(report.contains("deadline-exceeded=1"), "{report}");
+        assert!(report.contains("failures=1"), "{report}");
     }
 }

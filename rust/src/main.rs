@@ -59,6 +59,11 @@ fn usage() {
              [--listen=127.0.0.1:7070] [--max-sessions=64] [--idle-timeout-ms=30000]\n\
              [--serve-seconds=N]   (gateway mode: serve TCP clients instead of a\n\
               synthetic stream; drains on a client Shutdown frame, or after N seconds)\n\
+             [--admin-token=SECRET]  (require this token on load/unload/shutdown\n\
+              frames; unset = loopback-only; env RNS_ADMIN_TOKEN also works)\n\
+             [--stall-timeout-ms=30000] [--poison-threshold=2] [--default-deadline-ms=0]\n\
+             [--chaos=SPEC]  (seeded fault injection, e.g. \"panic@w0:b3,\n\
+              stall@w1:b2:50ms,poison@mlp,drop@s1:f2\" — tests/CI only)\n\
          pjrt-demo [--bits=6]"
     );
 }
@@ -282,7 +287,60 @@ fn cmd_serve(args: &mut Args) -> i32 {
         g.listen_addr = addr;
         gw_cfg = Some(g);
     }
+    // supervision + chaos flags override whatever the config file said
+    let mut cfg = cfg;
+    if let Some(spec) = args.get("chaos") {
+        match rns_analog::coordinator::ChaosSpec::parse(&spec) {
+            Ok(parsed) => {
+                cfg.chaos = parsed.clone();
+                if let Some(g) = &mut gw_cfg {
+                    g.chaos = parsed;
+                }
+            }
+            Err(e) => {
+                eprintln!("--chaos: {e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(ms) = args.get("stall-timeout-ms") {
+        match ms.parse::<u64>() {
+            Ok(v) if v >= 1 => cfg.stall_timeout = std::time::Duration::from_millis(v),
+            _ => {
+                eprintln!("--stall-timeout-ms={ms}: want an integer >= 1");
+                return 2;
+            }
+        }
+    }
+    if let Some(n) = args.get("poison-threshold") {
+        match n.parse::<u32>() {
+            Ok(v) if v >= 1 => cfg.poison_threshold = v,
+            _ => {
+                eprintln!("--poison-threshold={n}: want an integer >= 1");
+                return 2;
+            }
+        }
+    }
+    if let Some(ms) = args.get("default-deadline-ms") {
+        match ms.parse::<u64>() {
+            Ok(0) => cfg.default_deadline = None,
+            Ok(v) => cfg.default_deadline = Some(std::time::Duration::from_millis(v)),
+            _ => {
+                eprintln!("--default-deadline-ms={ms}: want an integer >= 0 (0 = none)");
+                return 2;
+            }
+        }
+    }
     if let Some(g) = &mut gw_cfg {
+        if let Some(token) = args.get("admin-token") {
+            g.admin_token = if token.is_empty() { None } else { Some(token) };
+        } else if g.admin_token.is_none() {
+            if let Ok(token) = std::env::var("RNS_ADMIN_TOKEN") {
+                if !token.is_empty() {
+                    g.admin_token = Some(token);
+                }
+            }
+        }
         if let Some(ms) = args.get("max-sessions") {
             match ms.parse::<usize>() {
                 Ok(v) if v >= 1 => g.max_sessions = v,

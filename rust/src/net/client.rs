@@ -5,14 +5,33 @@
 //! request/response round trip, while `submit` + `recv_infer` pipeline
 //! many requests over one session (the server replies carry the request
 //! id, so out-of-order completion is fine).
+//!
+//! Two layers:
+//!
+//!   * `Client` — one session, no policy.  Errors are typed
+//!     (`ClientError`) so callers can tell a dead socket from a typed
+//!     server reject.
+//!   * `RetryClient` — `Client` plus supervision-aware retry: transient
+//!     failures (connection drops, `Overloaded`, `Internal`) are retried
+//!     with seeded exponential backoff + jitter, reconnecting as needed;
+//!     permanent rejects (`Model`, `Unauthorized`, `DeadlineExceeded`,
+//!     `Poisoned`, protocol errors) fail fast.  Inference is pure, so a
+//!     retried request that was secretly served twice is harmless — the
+//!     logits are bit-identical.
+//!
+//! Admin frames (load/unload/shutdown) carry the client's configured
+//! admin token (`set_admin_token`); inference frames carry the
+//! configured per-request deadline (`set_deadline_ms`, 0 = server
+//! default).
 
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
 use std::time::Duration;
 
 use crate::nn::models::Batch;
-use crate::net::protocol::{Frame, HelloStatus, WireBatch, WireError, MAGIC, VERSION};
+use crate::net::protocol::{ErrorCode, Frame, HelloStatus, WireBatch, WireError, MAGIC, VERSION};
 use crate::tensor::MatF;
+use crate::util::rng::Rng;
 
 /// One completed inference over the wire.
 #[derive(Clone, Debug)]
@@ -25,9 +44,48 @@ pub struct InferReply {
     pub worker: u32,
 }
 
+/// Why a client call failed — the split that drives the retry policy.
+#[derive(Clone, Debug)]
+pub enum ClientError {
+    /// The transport died: connect failure, mid-frame close, timeout.
+    /// Always worth a reconnect + retry (the request may or may not have
+    /// executed; inference is pure, so a double execution is harmless).
+    Transport(String),
+    /// The server replied with a typed error frame.  Retryability
+    /// follows `ErrorCode::is_retryable`.
+    Server { code: ErrorCode, message: String },
+    /// Local misuse (oversized name, unexpected reply kind) — never
+    /// retried.
+    Other(String),
+}
+
+impl ClientError {
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            ClientError::Transport(_) => true,
+            ClientError::Server { code, .. } => code.is_retryable(),
+            ClientError::Other(_) => false,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Transport(m) => write!(f, "transport: {m}"),
+            ClientError::Server { code, message } => write!(f, "{code:?}: {message}"),
+            ClientError::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
 pub struct Client {
     stream: TcpStream,
     next_id: u64,
+    /// Sent in every admin frame; empty = none.
+    admin_token: String,
+    /// Sent in every `Infer` frame; 0 = server default.
+    deadline_ms: u32,
 }
 
 impl Client {
@@ -35,36 +93,58 @@ impl Client {
     /// version mismatch) surfaces the server's typed reason as the
     /// error string.
     pub fn connect(addr: &str) -> Result<Client, String> {
-        let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        Self::connect_typed(addr).map_err(|e| e.to_string())
+    }
+
+    /// `connect` with the typed error split (used by `RetryClient`).
+    pub fn connect_typed(addr: &str) -> Result<Client, ClientError> {
+        let mut stream = TcpStream::connect(addr)
+            .map_err(|e| ClientError::Transport(format!("connect {addr}: {e}")))?;
         stream.set_nodelay(true).ok();
         let mut hello = Vec::with_capacity(6);
         hello.extend_from_slice(&MAGIC);
         hello.extend_from_slice(&VERSION.to_le_bytes());
-        stream.write_all(&hello).map_err(|e| format!("handshake write: {e}"))?;
+        stream
+            .write_all(&hello)
+            .map_err(|e| ClientError::Transport(format!("handshake write: {e}")))?;
         let mut reply = [0u8; 7];
         std::io::Read::read_exact(&mut stream, &mut reply)
-            .map_err(|e| format!("handshake read: {e}"))?;
+            .map_err(|e| ClientError::Transport(format!("handshake read: {e}")))?;
         if reply[..4] != MAGIC {
-            return Err("not an rns-analog gateway (bad magic)".into());
+            return Err(ClientError::Other("not an rns-analog gateway (bad magic)".into()));
         }
         let version = u16::from_le_bytes([reply[4], reply[5]]);
         let status = HelloStatus::from_byte(reply[6])
-            .ok_or_else(|| format!("unknown hello status {}", reply[6]))?;
+            .ok_or_else(|| ClientError::Other(format!("unknown hello status {}", reply[6])))?;
         if status != HelloStatus::Ok {
             // the refusal is followed by one typed Error frame with the
             // human-readable reason
-            let reason = match Frame::read_from(&mut stream) {
-                Ok(Frame::Error { message, .. }) => message,
-                _ => format!("{status:?}"),
+            let (code, reason) = match Frame::read_from(&mut stream) {
+                Ok(Frame::Error { code, message, .. }) => (code, message),
+                _ => (ErrorCode::Internal, format!("{status:?}")),
             };
-            return Err(format!("session refused (v{version} {status:?}): {reason}"));
+            return Err(ClientError::Server {
+                code,
+                message: format!("session refused (v{version} {status:?}): {reason}"),
+            });
         }
-        Ok(Client { stream, next_id: 1 })
+        Ok(Client { stream, next_id: 1, admin_token: String::new(), deadline_ms: 0 })
     }
 
     /// Per-call read timeout (`None` blocks indefinitely).
     pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<(), String> {
         self.stream.set_read_timeout(timeout).map_err(|e| e.to_string())
+    }
+
+    /// Shared secret sent in every admin frame (load/unload/shutdown).
+    pub fn set_admin_token(&mut self, token: &str) {
+        self.admin_token = token.to_string();
+    }
+
+    /// Per-request deadline attached to every `Infer` frame; 0 = the
+    /// server default.
+    pub fn set_deadline_ms(&mut self, deadline_ms: u32) {
+        self.deadline_ms = deadline_ms;
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -73,22 +153,25 @@ impl Client {
         id
     }
 
-    fn send(&mut self, frame: &Frame) -> Result<(), String> {
-        self.stream.write_all(&frame.encode()).map_err(|e| format!("send: {e}"))
+    fn send(&mut self, frame: &Frame) -> Result<(), ClientError> {
+        self.stream
+            .write_all(&frame.encode())
+            .map_err(|e| ClientError::Transport(format!("send: {e}")))
     }
 
-    fn recv(&mut self) -> Result<Frame, String> {
+    fn recv(&mut self) -> Result<Frame, ClientError> {
         Frame::read_from(&mut self.stream).map_err(|e| match e {
-            WireError::Eof => "server closed the session".to_string(),
-            other => other.to_string(),
+            WireError::Eof => ClientError::Transport("server closed the session".to_string()),
+            WireError::Io(e) => ClientError::Transport(format!("io error: {e}")),
+            WireError::Protocol(m) => ClientError::Other(format!("protocol error: {m}")),
         })
     }
 
     /// Round-trip liveness probe.
     pub fn ping(&mut self) -> Result<(), String> {
         let id = self.fresh_id();
-        self.send(&Frame::Ping { id })?;
-        match self.recv()? {
+        self.send(&Frame::Ping { id }).map_err(|e| e.to_string())?;
+        match self.recv().map_err(|e| e.to_string())? {
             Frame::Pong { id: got } if got == id => Ok(()),
             Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
             other => Err(format!("unexpected reply to ping: {other:?}")),
@@ -98,9 +181,17 @@ impl Client {
     /// Submit without waiting (pipelining); returns the request id the
     /// eventual `InferOk`/`Error` reply will carry.
     pub fn submit(&mut self, model: &str, input: &Batch) -> Result<u64, String> {
+        self.submit_typed(model, input).map_err(|e| e.to_string())
+    }
+
+    fn submit_typed(&mut self, model: &str, input: &Batch) -> Result<u64, ClientError> {
         let id = self.fresh_id();
-        let frame =
-            Frame::Infer { id, model: to_name(model)?, input: WireBatch::from_batch(input) };
+        let frame = Frame::Infer {
+            id,
+            model: to_name(model)?,
+            deadline_ms: self.deadline_ms,
+            input: WireBatch::from_batch(input),
+        };
         self.send(&frame)?;
         Ok(id)
     }
@@ -108,6 +199,11 @@ impl Client {
     /// Receive the next inference reply (any id).  A typed `Error` reply
     /// becomes `Err` with the server's code + message.
     pub fn recv_infer(&mut self) -> Result<InferReply, String> {
+        self.recv_infer_typed().map_err(|e| e.to_string())
+    }
+
+    /// `recv_infer` with the typed error split.
+    pub fn recv_infer_typed(&mut self) -> Result<InferReply, ClientError> {
         match self.recv()? {
             Frame::InferOk { id, rows, cols, logits, faults_detected, worker } => Ok(InferReply {
                 id,
@@ -116,18 +212,26 @@ impl Client {
                 worker,
             }),
             Frame::Error { id, code, message } => {
-                Err(format!("request {id} failed ({code:?}): {message}"))
+                Err(ClientError::Server { code, message: format!("request {id}: {message}") })
             }
-            other => Err(format!("unexpected reply: {other:?}")),
+            other => Err(ClientError::Other(format!("unexpected reply: {other:?}"))),
         }
     }
 
     /// One blocking inference round trip.
     pub fn infer(&mut self, model: &str, input: &Batch) -> Result<InferReply, String> {
-        let id = self.submit(model, input)?;
-        let reply = self.recv_infer()?;
+        self.infer_typed(model, input).map_err(|e| e.to_string())
+    }
+
+    /// `infer` with the typed error split (used by `RetryClient`).
+    pub fn infer_typed(&mut self, model: &str, input: &Batch) -> Result<InferReply, ClientError> {
+        let id = self.submit_typed(model, input)?;
+        let reply = self.recv_infer_typed()?;
         if reply.id != id {
-            return Err(format!("reply id {} does not match request id {id}", reply.id));
+            return Err(ClientError::Other(format!(
+                "reply id {} does not match request id {id}",
+                reply.id
+            )));
         }
         Ok(reply)
     }
@@ -135,8 +239,8 @@ impl Client {
     /// Fetch the live `ServingMetrics` report.
     pub fn stats(&mut self) -> Result<String, String> {
         let id = self.fresh_id();
-        self.send(&Frame::Stats { id })?;
-        match self.recv()? {
+        self.send(&Frame::Stats { id }).map_err(|e| e.to_string())?;
+        match self.recv().map_err(|e| e.to_string())? {
             Frame::StatsReport { text, .. } => Ok(text),
             Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
             other => Err(format!("unexpected reply to stats: {other:?}")),
@@ -146,7 +250,9 @@ impl Client {
     /// Load a model into the server's shared registry now.
     pub fn load_model(&mut self, model: &str) -> Result<String, String> {
         let id = self.fresh_id();
-        self.send(&Frame::LoadModel { id, model: to_name(model)? })?;
+        let model = to_name(model).map_err(|e| e.to_string())?;
+        let frame = Frame::LoadModel { id, model, token: self.admin_token.clone() };
+        self.send(&frame).map_err(|e| e.to_string())?;
         self.expect_ack(id)
     }
 
@@ -154,19 +260,22 @@ impl Client {
     /// worker-held state).
     pub fn unload_model(&mut self, model: &str) -> Result<String, String> {
         let id = self.fresh_id();
-        self.send(&Frame::UnloadModel { id, model: to_name(model)? })?;
+        let model = to_name(model).map_err(|e| e.to_string())?;
+        let frame = Frame::UnloadModel { id, model, token: self.admin_token.clone() };
+        self.send(&frame).map_err(|e| e.to_string())?;
         self.expect_ack(id)
     }
 
     /// Ask the server to drain and exit (admin).
     pub fn shutdown_server(&mut self) -> Result<String, String> {
         let id = self.fresh_id();
-        self.send(&Frame::Shutdown { id })?;
+        let frame = Frame::Shutdown { id, token: self.admin_token.clone() };
+        self.send(&frame).map_err(|e| e.to_string())?;
         self.expect_ack(id)
     }
 
     fn expect_ack(&mut self, id: u64) -> Result<String, String> {
-        match self.recv()? {
+        match self.recv().map_err(|e| e.to_string())? {
             Frame::Ack { id: got, info } if got == id => Ok(info),
             Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
             other => Err(format!("unexpected reply: {other:?}")),
@@ -178,9 +287,223 @@ impl Client {
     }
 }
 
-fn to_name(model: &str) -> Result<String, String> {
+fn to_name(model: &str) -> Result<String, ClientError> {
     if model.len() > crate::net::protocol::MAX_NAME_LEN {
-        return Err(format!("model name longer than {} bytes", crate::net::protocol::MAX_NAME_LEN));
+        return Err(ClientError::Other(format!(
+            "model name longer than {} bytes",
+            crate::net::protocol::MAX_NAME_LEN
+        )));
     }
     Ok(model.to_string())
+}
+
+/// Retry/backoff knobs for `RetryClient`.  Backoff for attempt *k*
+/// (0-based) is `min(max, base · factor^k)` scaled by a jitter factor in
+/// `[0.5, 1.0)` drawn from a client-seeded RNG — deterministic per seed
+/// (testable), decorrelated across clients (no thundering herd when a
+/// worker crash fails many requests at once).
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (total attempts = retries + 1).
+    pub retries: u32,
+    pub base: Duration,
+    pub factor: f64,
+    pub max: Duration,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            retries: 3,
+            base: Duration::from_millis(20),
+            factor: 2.0,
+            max: Duration::from_secs(1),
+            seed: 0xB0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The deterministic jittered backoff schedule this policy produces.
+    pub fn schedule(&self) -> BackoffSchedule {
+        BackoffSchedule { policy: self.clone(), rng: Rng::seed_from(self.seed), attempt: 0 }
+    }
+}
+
+/// Iterator over a `RetryPolicy`'s jittered delays (one per retry).
+pub struct BackoffSchedule {
+    policy: RetryPolicy,
+    rng: Rng,
+    attempt: u32,
+}
+
+impl Iterator for BackoffSchedule {
+    type Item = Duration;
+
+    fn next(&mut self) -> Option<Duration> {
+        let raw = self.policy.base.as_secs_f64() * self.policy.factor.powi(self.attempt as i32);
+        let capped = raw.min(self.policy.max.as_secs_f64());
+        self.attempt = self.attempt.saturating_add(1);
+        // jitter in [0.5, 1.0): keeps the exponential shape but spreads
+        // simultaneous retriers across half the window
+        let jitter = 0.5 + 0.5 * self.rng.uniform();
+        Some(Duration::from_secs_f64(capped * jitter))
+    }
+}
+
+/// A gateway client with crash-tolerant delivery: reconnects on
+/// transport failure and retries transient errors under the policy's
+/// seeded backoff.  Permanent rejects (`Model`, `Unauthorized`,
+/// `DeadlineExceeded`, `Poisoned`, protocol errors) are returned
+/// immediately.
+pub struct RetryClient {
+    addr: String,
+    policy: RetryPolicy,
+    admin_token: String,
+    deadline_ms: u32,
+    conn: Option<Client>,
+    /// Connections established beyond the first (observability).
+    pub reconnects: u64,
+    /// Retried attempts across all calls (observability).
+    pub retries: u64,
+    connected_once: bool,
+}
+
+impl RetryClient {
+    pub fn new(addr: &str, policy: RetryPolicy) -> Self {
+        RetryClient {
+            addr: addr.to_string(),
+            policy,
+            admin_token: String::new(),
+            deadline_ms: 0,
+            conn: None,
+            reconnects: 0,
+            retries: 0,
+            connected_once: false,
+        }
+    }
+
+    pub fn set_admin_token(&mut self, token: &str) {
+        self.admin_token = token.to_string();
+        if let Some(c) = &mut self.conn {
+            c.set_admin_token(token);
+        }
+    }
+
+    pub fn set_deadline_ms(&mut self, deadline_ms: u32) {
+        self.deadline_ms = deadline_ms;
+        if let Some(c) = &mut self.conn {
+            c.set_deadline_ms(deadline_ms);
+        }
+    }
+
+    fn conn(&mut self) -> Result<&mut Client, ClientError> {
+        if self.conn.is_none() {
+            let mut c = Client::connect_typed(&self.addr)?;
+            c.set_admin_token(&self.admin_token);
+            c.set_deadline_ms(self.deadline_ms);
+            if self.connected_once {
+                self.reconnects += 1;
+            }
+            self.connected_once = true;
+            self.conn = Some(c);
+        }
+        Ok(self.conn.as_mut().expect("connection just established"))
+    }
+
+    /// One inference with reconnect + seeded-backoff retry.  Note a
+    /// transport failure after submit may mean the server already served
+    /// the request; the retry re-executes it, which is safe because
+    /// inference is pure (the replay is bit-identical).
+    pub fn infer(&mut self, model: &str, input: &Batch) -> Result<InferReply, ClientError> {
+        let mut schedule = self.policy.schedule();
+        let mut attempt: u32 = 0;
+        loop {
+            let result = match self.conn() {
+                Ok(c) => c.infer_typed(model, input),
+                Err(e) => Err(e),
+            };
+            let err = match result {
+                Ok(reply) => return Ok(reply),
+                Err(e) => e,
+            };
+            if matches!(err, ClientError::Transport(_)) {
+                // the socket is in an unknown state: drop it so the next
+                // attempt reconnects
+                self.conn = None;
+            }
+            if attempt >= self.policy.retries || !err.is_retryable() {
+                return Err(err);
+            }
+            attempt += 1;
+            self.retries += 1;
+            let delay = schedule.next().expect("schedule is infinite");
+            crate::log_debug!(
+                "client",
+                "retry {attempt}/{} after {delay:?}: {err}",
+                self.policy.retries
+            );
+            std::thread::sleep(delay);
+        }
+    }
+
+    /// Close the current connection (the next call reconnects).
+    pub fn close(&mut self) {
+        if let Some(c) = self.conn.take() {
+            c.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_in_the_seed() {
+        let policy = RetryPolicy { seed: 42, ..RetryPolicy::default() };
+        let a: Vec<Duration> = policy.schedule().take(6).collect();
+        let b: Vec<Duration> = policy.schedule().take(6).collect();
+        assert_eq!(a, b, "same seed, same jitter stream");
+        let other = RetryPolicy { seed: 43, ..RetryPolicy::default() };
+        let c: Vec<Duration> = other.schedule().take(6).collect();
+        assert_ne!(a, c, "different seed, decorrelated jitter");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let policy = RetryPolicy {
+            retries: 8,
+            base: Duration::from_millis(20),
+            factor: 2.0,
+            max: Duration::from_millis(200),
+            seed: 7,
+        };
+        let delays: Vec<Duration> = policy.schedule().take(8).collect();
+        for (k, d) in delays.iter().enumerate() {
+            let cap = (0.02 * 2f64.powi(k as i32)).min(0.2);
+            let lo = cap * 0.5;
+            let secs = d.as_secs_f64();
+            assert!(secs >= lo - 1e-12 && secs < cap + 1e-12, "delay[{k}] = {secs}s, cap {cap}s");
+        }
+        // the cap actually binds on late attempts
+        assert!(delays[7].as_secs_f64() <= 0.2);
+    }
+
+    #[test]
+    fn retryability_split() {
+        assert!(ClientError::Transport("reset".into()).is_retryable());
+        assert!(ClientError::Server { code: ErrorCode::Overloaded, message: String::new() }
+            .is_retryable());
+        assert!(!ClientError::Server { code: ErrorCode::Poisoned, message: String::new() }
+            .is_retryable());
+        assert!(!ClientError::Server {
+            code: ErrorCode::DeadlineExceeded,
+            message: String::new()
+        }
+        .is_retryable());
+        assert!(!ClientError::Other("bug".into()).is_retryable());
+    }
 }

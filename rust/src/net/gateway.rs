@@ -41,14 +41,16 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::chaos::ChaosSpec;
 use crate::coordinator::metrics::GatewayReport;
+use crate::coordinator::request::ServeErrorKind;
 use crate::coordinator::server::{Coordinator, CoordinatorHandle};
 use crate::net::protocol::{ErrorCode, Frame, HelloStatus, WireError, MAGIC, VERSION};
-use crate::util::rng::Rng;
-use crate::util::stats::Percentiles;
+use crate::util::stats::Reservoir;
 
 /// Gateway knobs (config file: `[serve] listen_addr / max_sessions /
-/// idle_timeout_ms`; CLI: `serve --listen=... --max-sessions=...`).
+/// idle_timeout_ms / admin_token`; CLI: `serve --listen=...
+/// --max-sessions=...`).
 #[derive(Clone, Debug)]
 pub struct GatewayConfig {
     /// Bind address; port 0 picks an ephemeral port (tests read it back
@@ -59,6 +61,15 @@ pub struct GatewayConfig {
     /// Per-session read/write timeout: a session idle (or stalled
     /// mid-frame) this long is closed.
     pub idle_timeout: Duration,
+    /// Shared secret for admin frames (load/unload/shutdown).  `Some`:
+    /// every admin frame must carry this token, from any peer.  `None`:
+    /// the loopback-only fallback — admin frames are honored only from
+    /// 127.0.0.1/::1 peers (the pre-v2 rule).
+    pub admin_token: Option<String>,
+    /// Injected connection drops (`drop@s{S}:f{N}` events; tests / chaos
+    /// smoke).  Worker-side events are the coordinator's copy of the
+    /// same spec.
+    pub chaos: ChaosSpec,
 }
 
 impl Default for GatewayConfig {
@@ -67,6 +78,8 @@ impl Default for GatewayConfig {
             listen_addr: "127.0.0.1:7070".into(),
             max_sessions: 64,
             idle_timeout: Duration::from_secs(30),
+            admin_token: None,
+            chaos: ChaosSpec::default(),
         }
     }
 }
@@ -78,50 +91,14 @@ const ACCEPT_POLL: Duration = Duration::from_millis(10);
 /// Bound on a scrape's request head (we only need the path).
 const MAX_HTTP_HEAD: usize = 8 << 10;
 
-/// Sample bound for the gateway's latency percentiles.
+/// Sample bound for the gateway's latency percentiles: the gateway
+/// serves indefinitely, so an unbounded sample vector — and a full sort
+/// of all-time history under the mutex that response-delivery callbacks
+/// need — is not an option.  The shared `util::stats::Reservoir`
+/// (Vitter's Algorithm R; the coordinator's latency metrics use the same
+/// type) keeps p50/p99 tight at 4096 samples while a `/metrics` scrape
+/// sorts a bounded copy.
 const LATENCY_RESERVOIR: usize = 4096;
-
-/// Bounded reservoir (Vitter's Algorithm R) over gateway-side request
-/// latencies: the gateway serves indefinitely, so an unbounded sample
-/// vector — and a full sort of all-time history under the mutex that
-/// response-delivery callbacks need — is not an option.  4096 samples
-/// keep p50/p99 tight while a `/metrics` scrape sorts a bounded copy.
-struct LatencyReservoir {
-    samples: Vec<f64>,
-    seen: u64,
-    rng: Rng,
-}
-
-impl LatencyReservoir {
-    fn new() -> Self {
-        LatencyReservoir {
-            samples: Vec::with_capacity(LATENCY_RESERVOIR),
-            seen: 0,
-            rng: Rng::seed_from(0x6A7E_11A7),
-        }
-    }
-
-    fn add(&mut self, latency_us: f64) {
-        self.seen += 1;
-        if self.samples.len() < LATENCY_RESERVOIR {
-            self.samples.push(latency_us);
-        } else {
-            let j = self.rng.gen_range(self.seen) as usize;
-            if j < LATENCY_RESERVOIR {
-                self.samples[j] = latency_us;
-            }
-        }
-    }
-
-    /// (p50, p99) over the current reservoir (0.0 when empty).
-    fn percentiles(&self) -> (f64, f64) {
-        let mut p = Percentiles::new();
-        for &x in &self.samples {
-            p.add(x);
-        }
-        (p.percentile(50.0), p.percentile(99.0))
-    }
-}
 
 /// State shared by the acceptor, every session thread, and the owning
 /// `Gateway`.
@@ -141,7 +118,7 @@ struct GatewayShared {
     /// so routed delivery callbacks don't capture the whole
     /// `GatewayShared` (which would cycle through the routes map back
     /// to itself).
-    latency_us: Arc<Mutex<LatencyReservoir>>,
+    latency_us: Arc<Mutex<Reservoir>>,
     /// Set during shutdown: new sessions and new `Infer` frames are
     /// refused while in-flight replies drain.
     draining: AtomicBool,
@@ -158,8 +135,21 @@ struct SessionSlot {
 }
 
 impl GatewayShared {
+    /// Is this admin frame authorized?  Token mode when a token is
+    /// configured (constant rule for every peer), loopback-only mode
+    /// otherwise.
+    fn admin_ok(&self, peer_is_loopback: bool, token: &str) -> bool {
+        match &self.cfg.admin_token {
+            Some(expect) => token == expect,
+            None => peer_is_loopback,
+        }
+    }
+
     fn gateway_report(&self) -> GatewayReport {
-        let (latency_p50_us, latency_p99_us) = self.latency_us.lock().unwrap().percentiles();
+        let (latency_p50_us, latency_p99_us) = {
+            let r = self.latency_us.lock().unwrap();
+            (r.percentile(50.0), r.percentile(99.0))
+        };
         GatewayReport {
             sessions_accepted: self.accepted.load(Ordering::Relaxed),
             sessions_active: self.active.load(Ordering::Relaxed) as u64,
@@ -226,7 +216,7 @@ impl Gateway {
             frames_out: AtomicU64::new(0),
             protocol_errors: AtomicU64::new(0),
             scrapes: AtomicU64::new(0),
-            latency_us: Arc::new(Mutex::new(LatencyReservoir::new())),
+            latency_us: Arc::new(Mutex::new(Reservoir::new(LATENCY_RESERVOIR, 0x6A7E_11A7))),
             draining: AtomicBool::new(false),
             shutdown_tx: Mutex::new(Some(shutdown_tx)),
             sessions: Mutex::new(Vec::new()),
@@ -409,20 +399,29 @@ fn session_entry(mut stream: TcpStream, peer: SocketAddr, shared: Arc<GatewaySha
         return;
     }
     let _guard = ActiveGuard(Arc::clone(&shared));
-    shared.accepted.fetch_add(1, Ordering::Relaxed);
+    // the pre-increment value is this session's 0-based admission index —
+    // the `s{S}` coordinate of `drop@s{S}:f{N}` chaos events
+    let session_idx = shared.accepted.fetch_add(1, Ordering::Relaxed);
     if write_hello(&mut stream, HelloStatus::Ok).is_err() {
         return;
     }
-    // admin frames (load/unload/shutdown) are loopback-only: the wire
-    // protocol carries no credentials, so a non-loopback bind must not
-    // hand every peer the power to drop models or drain the server
-    let admin_ok = peer.ip().is_loopback();
-    crate::log_debug!("gateway", "session open from {peer}");
-    run_session(stream, admin_ok, &shared);
+    // admin frames (load/unload/shutdown) need authorization: a matching
+    // shared-secret token when one is configured, else loopback-only —
+    // a non-loopback bind must not hand every peer the power to drop
+    // models or drain the server
+    let peer_is_loopback = peer.ip().is_loopback();
+    let chaos_drop = shared.cfg.chaos.session_drop(session_idx);
+    crate::log_debug!("gateway", "session {session_idx} open from {peer}");
+    run_session(stream, peer_is_loopback, chaos_drop, &shared);
     crate::log_debug!("gateway", "session from {peer} closed");
 }
 
-fn run_session(stream: TcpStream, admin_ok: bool, shared: &Arc<GatewayShared>) {
+fn run_session(
+    stream: TcpStream,
+    peer_is_loopback: bool,
+    chaos_drop: Option<u64>,
+    shared: &Arc<GatewayShared>,
+) {
     let write_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -437,11 +436,26 @@ fn run_session(stream: TcpStream, admin_ok: bool, shared: &Arc<GatewayShared>) {
         Err(_) => return,
     };
     let mut reader = stream;
+    let mut frames_read: u64 = 0;
     loop {
         match Frame::read_from(&mut reader) {
             Ok(frame) => {
                 shared.frames_in.fetch_add(1, Ordering::Relaxed);
-                if !handle_frame(frame, admin_ok, shared, &reply_tx) {
+                frames_read += 1;
+                let keep = handle_frame(frame, peer_is_loopback, shared, &reply_tx);
+                // injected connection drop: sever abruptly *after* the
+                // Nth frame was accepted, exactly like a peer vanishing
+                // mid-conversation — the client's reconnect/retry path
+                // must recover (in-flight replies die with the socket)
+                if chaos_drop == Some(frames_read) {
+                    crate::log_warn!(
+                        "gateway",
+                        "chaos: dropping session after frame {frames_read}"
+                    );
+                    reader.shutdown(Shutdown::Both).ok();
+                    break;
+                }
+                if !keep {
                     break;
                 }
             }
@@ -463,19 +477,34 @@ fn run_session(stream: TcpStream, admin_ok: bool, shared: &Arc<GatewayShared>) {
     writer.join().ok();
 }
 
-/// Reply to an admin frame from a non-loopback peer.
-fn deny_admin(id: u64, reply_tx: &Sender<Frame>) {
-    let message = "admin frames (load/unload/shutdown) are loopback-only".to_string();
+/// Reply to an unauthorized admin frame with the reason that applies.
+fn deny_admin(id: u64, token_mode: bool, reply_tx: &Sender<Frame>) {
+    let message = if token_mode {
+        "admin frames (load/unload/shutdown) require the configured admin token".to_string()
+    } else {
+        "admin frames (load/unload/shutdown) are loopback-only".to_string()
+    };
     reply_tx.send(Frame::Error { id, code: ErrorCode::Unauthorized, message }).ok();
+}
+
+/// The wire error code for a typed coordinator failure.
+fn wire_code(kind: ServeErrorKind) -> ErrorCode {
+    match kind {
+        ServeErrorKind::Model => ErrorCode::Model,
+        ServeErrorKind::Internal => ErrorCode::Internal,
+        ServeErrorKind::DeadlineExceeded => ErrorCode::DeadlineExceeded,
+        ServeErrorKind::Poisoned => ErrorCode::Poisoned,
+    }
 }
 
 /// Handle one request frame; returns whether the session continues.
 fn handle_frame(
     frame: Frame,
-    admin_ok: bool,
+    peer_is_loopback: bool,
     shared: &Arc<GatewayShared>,
     reply_tx: &Sender<Frame>,
 ) -> bool {
+    let token_mode = shared.cfg.admin_token.is_some();
     match frame {
         Frame::Ping { id } => {
             reply_tx.send(Frame::Pong { id }).ok();
@@ -484,9 +513,9 @@ fn handle_frame(
             let text = shared.report();
             reply_tx.send(Frame::StatsReport { id, text }).ok();
         }
-        Frame::LoadModel { id, model } => {
-            if !admin_ok {
-                deny_admin(id, reply_tx);
+        Frame::LoadModel { id, model, token } => {
+            if !shared.admin_ok(peer_is_loopback, &token) {
+                deny_admin(id, token_mode, reply_tx);
                 return true;
             }
             match shared.handle.load_model(&model) {
@@ -498,24 +527,24 @@ fn handle_frame(
                 }
             }
         }
-        Frame::UnloadModel { id, model } => {
-            if !admin_ok {
-                deny_admin(id, reply_tx);
+        Frame::UnloadModel { id, model, token } => {
+            if !shared.admin_ok(peer_is_loopback, &token) {
+                deny_admin(id, token_mode, reply_tx);
                 return true;
             }
             let evicted = shared.handle.unload_model(&model);
             let info = format!("unloaded `{model}`: {evicted} plans evicted");
             reply_tx.send(Frame::Ack { id, info }).ok();
         }
-        Frame::Shutdown { id } => {
-            if !admin_ok {
-                deny_admin(id, reply_tx);
+        Frame::Shutdown { id, token } => {
+            if !shared.admin_ok(peer_is_loopback, &token) {
+                deny_admin(id, token_mode, reply_tx);
                 return true;
             }
             reply_tx.send(Frame::Ack { id, info: "draining".into() }).ok();
             shared.signal_shutdown();
         }
-        Frame::Infer { id, model, input } => {
+        Frame::Infer { id, model, deadline_ms, input } => {
             if shared.draining.load(Ordering::SeqCst) {
                 let message = "gateway is draining".to_string();
                 reply_tx.send(Frame::Error { id, code: ErrorCode::Draining, message }).ok();
@@ -534,21 +563,27 @@ fn handle_frame(
             let tx = reply_tx.clone();
             let latency = Arc::clone(&shared.latency_us);
             let t0 = Instant::now();
-            let submitted = shared.handle.submit_routed(&model, batch, move |resp| {
-                latency.lock().unwrap().add(t0.elapsed().as_secs_f64() * 1e6);
-                let frame = match resp.result {
-                    Ok(logits) => Frame::InferOk {
-                        id,
-                        rows: logits.rows as u32,
-                        cols: logits.cols as u32,
-                        logits: logits.data,
-                        faults_detected: resp.faults_detected,
-                        worker: resp.worker as u32,
-                    },
-                    Err(e) => Frame::Error { id, code: ErrorCode::Model, message: e },
-                };
-                tx.send(frame).ok();
-            });
+            // 0 = no per-request deadline (the server default applies)
+            let deadline =
+                (deadline_ms > 0).then(|| Duration::from_millis(u64::from(deadline_ms)));
+            let submitted =
+                shared.handle.submit_routed_with_deadline(&model, batch, deadline, move |resp| {
+                    latency.lock().unwrap().add(t0.elapsed().as_secs_f64() * 1e6);
+                    let frame = match resp.result {
+                        Ok(logits) => Frame::InferOk {
+                            id,
+                            rows: logits.rows as u32,
+                            cols: logits.cols as u32,
+                            logits: logits.data,
+                            faults_detected: resp.faults_detected,
+                            worker: resp.worker as u32,
+                        },
+                        Err(e) => {
+                            Frame::Error { id, code: wire_code(e.kind), message: e.message }
+                        }
+                    };
+                    tx.send(frame).ok();
+                });
             if let Err(e) = submitted {
                 reply_tx.send(Frame::Error { id, code: ErrorCode::Internal, message: e }).ok();
             }

@@ -10,6 +10,6 @@ pub mod client;
 pub mod gateway;
 pub mod protocol;
 
-pub use client::{Client, InferReply};
+pub use client::{Client, ClientError, InferReply, RetryClient, RetryPolicy};
 pub use gateway::{Gateway, GatewayConfig};
 pub use protocol::{ErrorCode, Frame, HelloStatus, WireBatch, WireError};

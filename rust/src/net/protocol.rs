@@ -23,10 +23,19 @@
 //! whole correlation story, which is what makes per-session pipelining
 //! safe.  Ids are per-session; sessions cannot see each other's frames.
 //!
-//! Request kinds: `Ping`, `Infer { model, batch }`, `LoadModel`,
-//! `UnloadModel`, `Stats`, `Shutdown` (admin: ask the server to drain
-//! and exit).  Reply kinds: `Pong`, `InferOk { logits, faults, worker }`,
-//! `Error { code, message }`, `StatsReport { text }`, `Ack { info }`.
+//! Request kinds: `Ping`, `Infer { model, deadline_ms, batch }`,
+//! `LoadModel`, `UnloadModel`, `Stats`, `Shutdown` (admin: ask the
+//! server to drain and exit).  Reply kinds: `Pong`, `InferOk { logits,
+//! faults, worker }`, `Error { code, message }`, `StatsReport { text }`,
+//! `Ack { info }`.
+//!
+//! **Version 2** adds `deadline_ms` to `Infer` (0 = use the server
+//! default) and a `token` string to the admin frames (`LoadModel`,
+//! `UnloadModel`, `Shutdown`; empty = none).  When `serve.admin_token`
+//! is configured the gateway requires the matching token on every admin
+//! frame from any peer; when it is not, the pre-v2 loopback-only rule
+//! stands.  The token is a shared secret over a trusted transport, not
+//! cryptographic authentication.
 
 use std::io::Read;
 
@@ -39,7 +48,8 @@ use crate::tensor::Nhwc;
 pub const MAGIC: [u8; 4] = *b"RNSG";
 
 /// Wire protocol version; bumped on any incompatible frame change.
-pub const VERSION: u16 = 1;
+/// v2: `Infer.deadline_ms` + admin-frame `token` (PR 6).
+pub const VERSION: u16 = 2;
 
 /// Upper bound on one frame's body (kind + id + payload).  16 MiB holds
 /// a ~2000-sample MNIST batch; anything larger is a protocol error, not
@@ -98,8 +108,15 @@ pub enum ErrorCode {
     Internal,
     /// The gateway is draining; the request was not accepted.
     Draining,
-    /// Admin frame (load/unload/shutdown) from a non-loopback peer.
+    /// Admin frame (load/unload/shutdown) without valid authorization:
+    /// bad/missing token when one is configured, or a non-loopback peer
+    /// under the loopback-only fallback.
     Unauthorized,
+    /// The request's deadline passed before a result was produced.
+    DeadlineExceeded,
+    /// The request's batch crashed workers repeatedly and was
+    /// quarantined; do not retry the same input.
+    Poisoned,
 }
 
 impl ErrorCode {
@@ -111,6 +128,8 @@ impl ErrorCode {
             ErrorCode::Internal => 4,
             ErrorCode::Draining => 5,
             ErrorCode::Unauthorized => 6,
+            ErrorCode::DeadlineExceeded => 7,
+            ErrorCode::Poisoned => 8,
         }
     }
 
@@ -122,8 +141,17 @@ impl ErrorCode {
             4 => Some(ErrorCode::Internal),
             5 => Some(ErrorCode::Draining),
             6 => Some(ErrorCode::Unauthorized),
+            7 => Some(ErrorCode::DeadlineExceeded),
+            8 => Some(ErrorCode::Poisoned),
             _ => None,
         }
+    }
+
+    /// Is a retry of the *same* request ever useful?  Drives the client
+    /// retry policy (see the README failure-modes table): transient
+    /// conditions may clear; the rest are permanent for this request.
+    pub fn is_retryable(self) -> bool {
+        matches!(self, ErrorCode::Overloaded | ErrorCode::Internal)
     }
 }
 
@@ -202,11 +230,15 @@ impl WireBatch {
 pub enum Frame {
     // requests
     Ping { id: u64 },
-    Infer { id: u64, model: String, input: WireBatch },
-    LoadModel { id: u64, model: String },
-    UnloadModel { id: u64, model: String },
+    /// `deadline_ms` = this request's completion budget from gateway
+    /// receipt; 0 = use the server default (which may be unlimited).
+    Infer { id: u64, model: String, deadline_ms: u32, input: WireBatch },
+    /// Admin frames carry a shared-secret `token` (empty = none); see
+    /// the module docs for the authorization rule.
+    LoadModel { id: u64, model: String, token: String },
+    UnloadModel { id: u64, model: String, token: String },
     Stats { id: u64 },
-    Shutdown { id: u64 },
+    Shutdown { id: u64, token: String },
     // replies
     Pong { id: u64 },
     InferOk { id: u64, rows: u32, cols: u32, logits: Vec<f32>, faults_detected: u64, worker: u32 },
@@ -346,29 +378,33 @@ impl Frame {
                 body.push(KIND_PING);
                 put_u64(&mut body, *id);
             }
-            Frame::Infer { id, model, input } => {
+            Frame::Infer { id, model, deadline_ms, input } => {
                 body.push(KIND_INFER);
                 put_u64(&mut body, *id);
                 put_str(&mut body, model);
+                put_u32(&mut body, *deadline_ms);
                 put_batch(&mut body, input);
             }
-            Frame::LoadModel { id, model } => {
+            Frame::LoadModel { id, model, token } => {
                 body.push(KIND_LOAD);
                 put_u64(&mut body, *id);
                 put_str(&mut body, model);
+                put_str(&mut body, token);
             }
-            Frame::UnloadModel { id, model } => {
+            Frame::UnloadModel { id, model, token } => {
                 body.push(KIND_UNLOAD);
                 put_u64(&mut body, *id);
                 put_str(&mut body, model);
+                put_str(&mut body, token);
             }
             Frame::Stats { id } => {
                 body.push(KIND_STATS);
                 put_u64(&mut body, *id);
             }
-            Frame::Shutdown { id } => {
+            Frame::Shutdown { id, token } => {
                 body.push(KIND_SHUTDOWN);
                 put_u64(&mut body, *id);
+                put_str(&mut body, token);
             }
             Frame::Pong { id } => {
                 body.push(KIND_PONG);
@@ -453,13 +489,14 @@ impl Frame {
             KIND_PING => Frame::Ping { id },
             KIND_INFER => {
                 let model = cur.name()?;
+                let deadline_ms = cur.u32()?;
                 let input = cur.batch()?;
-                Frame::Infer { id, model, input }
+                Frame::Infer { id, model, deadline_ms, input }
             }
-            KIND_LOAD => Frame::LoadModel { id, model: cur.name()? },
-            KIND_UNLOAD => Frame::UnloadModel { id, model: cur.name()? },
+            KIND_LOAD => Frame::LoadModel { id, model: cur.name()?, token: cur.name()? },
+            KIND_UNLOAD => Frame::UnloadModel { id, model: cur.name()?, token: cur.name()? },
             KIND_STATS => Frame::Stats { id },
-            KIND_SHUTDOWN => Frame::Shutdown { id },
+            KIND_SHUTDOWN => Frame::Shutdown { id, token: cur.name()? },
             KIND_PONG => Frame::Pong { id },
             KIND_INFER_OK => {
                 let rows = cur.u32()?;
@@ -601,17 +638,20 @@ mod tests {
         roundtrip(Frame::Ping { id: 7 });
         roundtrip(Frame::Pong { id: 7 });
         roundtrip(Frame::Stats { id: 1 });
-        roundtrip(Frame::Shutdown { id: 2 });
-        roundtrip(Frame::LoadModel { id: 3, model: "mlp".into() });
-        roundtrip(Frame::UnloadModel { id: 4, model: "bert".into() });
+        roundtrip(Frame::Shutdown { id: 2, token: String::new() });
+        roundtrip(Frame::Shutdown { id: 2, token: "hunter2".into() });
+        roundtrip(Frame::LoadModel { id: 3, model: "mlp".into(), token: String::new() });
+        roundtrip(Frame::UnloadModel { id: 4, model: "bert".into(), token: "sekrit".into() });
         roundtrip(Frame::Infer {
             id: 5,
             model: "synthetic-mlp".into(),
+            deadline_ms: 0,
             input: WireBatch::Images { n: 1, h: 2, w: 2, c: 1, data: vec![0.5, -1.0, 0.0, 2.5] },
         });
         roundtrip(Frame::Infer {
             id: 6,
             model: "bert".into(),
+            deadline_ms: 1500,
             input: WireBatch::Tokens { batch: 2, seq: 3, tokens: vec![1, 2, 3, 4, 5, 6] },
         });
         roundtrip(Frame::InferOk {
@@ -624,8 +664,30 @@ mod tests {
         });
         roundtrip(Frame::Error { id: 10, code: ErrorCode::Overloaded, message: "full".into() });
         roundtrip(Frame::Error { id: 13, code: ErrorCode::Unauthorized, message: "admin".into() });
+        roundtrip(Frame::Error {
+            id: 14,
+            code: ErrorCode::DeadlineExceeded,
+            message: "too late".into(),
+        });
+        roundtrip(Frame::Error { id: 15, code: ErrorCode::Poisoned, message: "quarantined".into() });
         roundtrip(Frame::StatsReport { id: 11, text: "requests=1\n".into() });
         roundtrip(Frame::Ack { id: 12, info: "unloaded".into() });
+    }
+
+    #[test]
+    fn retryability_follows_the_failure_modes_table() {
+        assert!(ErrorCode::Overloaded.is_retryable());
+        assert!(ErrorCode::Internal.is_retryable());
+        for permanent in [
+            ErrorCode::Protocol,
+            ErrorCode::Model,
+            ErrorCode::Draining,
+            ErrorCode::Unauthorized,
+            ErrorCode::DeadlineExceeded,
+            ErrorCode::Poisoned,
+        ] {
+            assert!(!permanent.is_retryable(), "{permanent:?}");
+        }
     }
 
     #[test]

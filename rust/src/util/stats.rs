@@ -1,5 +1,8 @@
 //! Small statistics helpers used by the experiment harness and the bench
-//! harness: summaries, histograms, and percentile estimation.
+//! harness: summaries, histograms, and percentile estimation — plus the
+//! bounded `Reservoir` the serving stack uses for all-time percentiles.
+
+use crate::util::rng::Rng;
 
 /// Streaming summary of a sample (count / mean / min / max / variance via
 /// Welford's algorithm).
@@ -97,6 +100,71 @@ impl Percentiles {
     }
 }
 
+/// Bounded percentile estimator: Vitter's Algorithm R over a fixed-size
+/// reservoir, seeded for reproducibility.  Long-lived servers feed every
+/// latency sample through this instead of an unbounded `Percentiles`
+/// vector — memory stays O(capacity) forever while each of the first
+/// `seen` samples still had an equal chance of being retained.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+    capacity: usize,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(capacity: usize, seed: u64) -> Self {
+        assert!(capacity > 0, "reservoir capacity must be positive");
+        Reservoir { samples: Vec::new(), capacity, seen: 0, rng: Rng::seed_from(seed) }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.capacity {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.gen_range(self.seen) as usize;
+            if j < self.capacity {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    /// Total samples offered (not just the retained subset).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Linear-interpolated percentile over the retained sample, `q` in
+    /// [0, 100]; exact until `capacity` samples, an unbiased estimate after.
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q / 100.0 * (xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            xs[lo]
+        } else {
+            let frac = pos - lo as f64;
+            xs[lo] * (1.0 - frac) + xs[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
 /// Fixed-bin histogram over `[lo, hi)`; out-of-range values clamp to the
 /// edge bins (used for the Fig. 3 error-distribution plots).
 #[derive(Clone, Debug)]
@@ -187,5 +255,44 @@ mod tests {
         assert_eq!(s.min(), 0.0);
         let mut p = Percentiles::new();
         assert_eq!(p.median(), 0.0);
+        let r = Reservoir::new(8, 0);
+        assert_eq!(r.median(), 0.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        let mut r = Reservoir::new(100, 1);
+        for x in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            r.add(x);
+        }
+        assert_eq!(r.seen(), 5);
+        assert_eq!(r.median(), 30.0);
+        assert_eq!(r.percentile(0.0), 10.0);
+        assert_eq!(r.percentile(100.0), 50.0);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_estimates_percentiles() {
+        let mut r = Reservoir::new(256, 2);
+        for i in 0..100_000u64 {
+            r.add(i as f64);
+        }
+        assert_eq!(r.seen(), 100_000);
+        // the retained sample stays at capacity; the median of a uniform
+        // 0..100k stream should land near 50k
+        let med = r.median();
+        assert!((30_000.0..70_000.0).contains(&med), "median {med}");
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_in_seed() {
+        let mut a = Reservoir::new(64, 7);
+        let mut b = Reservoir::new(64, 7);
+        for i in 0..10_000u64 {
+            a.add((i % 977) as f64);
+            b.add((i % 977) as f64);
+        }
+        assert_eq!(a.percentile(95.0), b.percentile(95.0));
     }
 }

@@ -38,6 +38,7 @@ fn gw_cfg(max_sessions: usize) -> GatewayConfig {
         listen_addr: "127.0.0.1:0".into(),
         max_sessions,
         idle_timeout: Duration::from_secs(10),
+        ..GatewayConfig::default()
     }
 }
 
@@ -247,6 +248,7 @@ fn malformed_frames_get_typed_errors_and_server_stays_healthy() {
         let frame = Frame::Infer {
             id: 6,
             model: SYNTHETIC_MLP.into(),
+            deadline_ms: 0,
             input: WireBatch::Images { n: 2, h: 28, w: 28, c: 1, data: vec![0.0; 13] },
         };
         s.write_all(&frame.encode()).unwrap();
@@ -394,6 +396,40 @@ fn admin_frames_stats_load_unload_shutdown_roundtrip() {
     let info = client.shutdown_server().expect("shutdown frame");
     assert!(info.contains("draining"), "{info}");
     assert!(gw.wait_shutdown(Some(Duration::from_secs(10))), "shutdown signal received");
+    client.close();
+    let report = gw.shutdown();
+    assert!(report.contains("failures=0"), "{report}");
+}
+
+/// With `admin_token` configured, admin frames need the token even from
+/// loopback; inference never does.  Wrong/missing tokens earn a typed
+/// `Unauthorized` and the session stays usable.
+#[test]
+fn admin_frames_require_the_configured_token() {
+    let mut cfg = gw_cfg(4);
+    cfg.admin_token = Some("hunter2".into());
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1)), cfg).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).expect("connect");
+    // no token: typed reject, even from loopback
+    let err = client.load_model(SYNTHETIC_MLP).expect_err("load without token");
+    assert!(err.contains("Unauthorized"), "typed code in: {err}");
+    let err = client.shutdown_server().expect_err("shutdown without token");
+    assert!(err.contains("Unauthorized"), "{err}");
+    // wrong token: same reject
+    client.set_admin_token("wrong");
+    let err = client.unload_model(SYNTHETIC_MLP).expect_err("unload with wrong token");
+    assert!(err.contains("Unauthorized"), "{err}");
+    // inference needs no token, and the session survived the rejects
+    client.infer(SYNTHETIC_MLP, &input(9)).expect("infer without token");
+    // right token: admin frames work
+    client.set_admin_token("hunter2");
+    let info = client.load_model(SYNTHETIC_MLP).expect("load with token");
+    assert!(info.contains("loaded"), "{info}");
+    let info = client.shutdown_server().expect("shutdown with token");
+    assert!(info.contains("draining"), "{info}");
+    assert!(gw.wait_shutdown(Some(Duration::from_secs(10))));
     client.close();
     let report = gw.shutdown();
     assert!(report.contains("failures=0"), "{report}");

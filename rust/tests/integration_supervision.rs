@@ -1,0 +1,207 @@
+//! Supervised-serving integration tests over the TCP gateway: seeded
+//! chaos kills workers mid-stream and every accepted request is still
+//! answered with logits bit-identical to a crash-free run (inference is
+//! pure under `NoiseModel::None`); poison batches earn a typed
+//! `Poisoned` reject that the retry client does NOT retry; injected
+//! connection drops are survived by the retry client's
+//! reconnect-and-retry path; and per-request wire deadlines come back as
+//! typed `DeadlineExceeded`.
+//!
+//! Every test serves `synthetic-mlp` (seeded in-process weights), so no
+//! `make artifacts` step is needed anywhere.
+
+use std::time::Duration;
+
+use rns_analog::analog::NoiseModel;
+use rns_analog::coordinator::{BackendKind, ChaosSpec, Coordinator, CoordinatorConfig};
+use rns_analog::net::{Client, ClientError, Gateway, GatewayConfig, RetryClient, RetryPolicy};
+use rns_analog::nn::models::{Batch, SYNTHETIC_MLP};
+use rns_analog::tensor::Nhwc;
+use rns_analog::util::rng::Rng;
+
+fn rns_cfg(workers: usize, chaos: &str) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(
+        BackendKind::Rns { bits: 8, redundant: 2, attempts: 2, noise: NoiseModel::None },
+        "/nonexistent",
+    );
+    cfg.workers = workers;
+    cfg.seed = 7;
+    cfg.chaos = ChaosSpec::parse(chaos).expect("valid chaos spec");
+    cfg
+}
+
+fn gw_cfg() -> GatewayConfig {
+    GatewayConfig {
+        listen_addr: "127.0.0.1:0".into(),
+        max_sessions: 16,
+        idle_timeout: Duration::from_secs(10),
+        ..GatewayConfig::default()
+    }
+}
+
+/// Deterministic single-sample input #i.
+fn input(i: u64) -> Batch {
+    let mut rng = Rng::seed_from(0xBEEF ^ i);
+    Batch::Images(Nhwc::from_vec(
+        1,
+        28,
+        28,
+        1,
+        (0..28 * 28).map(|_| rng.uniform_f32(0.0, 1.0)).collect(),
+    ))
+}
+
+fn line_with<'a>(report: &'a str, prefix: &str) -> &'a str {
+    report
+        .lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no `{prefix}` line in report:\n{report}"))
+}
+
+/// Serve `n` sequential round trips over the gateway, returning the
+/// logits bit patterns per request plus the final report.
+fn run_gateway(workers: usize, chaos: &str, n: u64) -> (Vec<Vec<u32>>, String) {
+    let mut gcfg = gw_cfg();
+    gcfg.chaos = ChaosSpec::parse(chaos).expect("valid chaos spec");
+    let gw = Gateway::start(Coordinator::start(rns_cfg(workers, chaos)), gcfg).expect("gateway");
+    let addr = gw.local_addr().to_string();
+    let mut client = Client::connect(&addr).expect("connect");
+    let mut out = Vec::new();
+    for i in 0..n {
+        let reply = client.infer(SYNTHETIC_MLP, &input(i)).expect("infer");
+        assert_eq!((reply.logits.rows, reply.logits.cols), (1, 10));
+        out.push(reply.logits.data.iter().map(|v| v.to_bits()).collect());
+    }
+    client.close();
+    (out, gw.shutdown())
+}
+
+/// The headline chaos test: with W=4 workers and an injected panic on
+/// worker 0's first batch, the supervisor respawns the worker and
+/// redispatches the dead worker's batch — every request is answered,
+/// zero failures, and the logits (plus the RRNS decode/fault counters)
+/// are bit-identical to the crash-free run.
+#[test]
+fn crashed_worker_chaos_run_is_bit_identical_to_clean_run() {
+    const N: u64 = 8; // two round-robin laps over 4 workers
+    let (want, clean_report) = run_gateway(4, "", N);
+    let (got, chaos_report) = run_gateway(4, "panic@w0:b1", N);
+    for i in 0..N as usize {
+        assert_eq!(got[i], want[i], "request {i}: chaos run == clean run, bit-exact");
+    }
+    // crash-free path: nothing supervised
+    assert!(
+        clean_report.contains("respawns=0 stalls=0 redispatched=0 poisoned=0"),
+        "{clean_report}"
+    );
+    // chaos path: exactly one crash, one respawn, one redispatch — and
+    // the client never saw any of it
+    let sup = line_with(&chaos_report, "supervision: ");
+    assert!(sup.contains("respawns=1"), "{chaos_report}");
+    assert!(sup.contains("stalls=0"), "{chaos_report}");
+    assert!(sup.contains("redispatched=1"), "{chaos_report}");
+    assert!(sup.contains("poisoned=0"), "{chaos_report}");
+    assert!(chaos_report.contains(&format!("requests={N}")), "{chaos_report}");
+    assert!(chaos_report.contains("failures=0"), "{chaos_report}");
+    // the analog accounting the paper cares about is also unchanged by
+    // the crash: the partial forward on the dead worker never lands in
+    // the counters (per-batch delta flush), so the RRNS decode split and
+    // fault totals agree line for line.  (DAC counts legitimately differ:
+    // the respawned worker re-warms its weight DACs.)
+    for prefix in ["decode: ", "faults: "] {
+        assert_eq!(
+            line_with(&clean_report, prefix),
+            line_with(&chaos_report, prefix),
+            "`{prefix}` line must match\n--- clean:\n{clean_report}\n--- chaos:\n{chaos_report}"
+        );
+    }
+}
+
+/// A batch that crashes every worker it touches is quarantined after
+/// `poison_threshold` crashes and rejected with the typed `Poisoned`
+/// code — and the retry client fails fast instead of hammering it.
+#[test]
+fn poison_batch_is_rejected_typed_and_not_retried() {
+    let mut cfg = rns_cfg(2, "poison@synthetic-mlp");
+    cfg.poison_threshold = 2;
+    let gw = Gateway::start(Coordinator::start(cfg), gw_cfg()).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let policy = RetryPolicy { base: Duration::from_millis(1), ..RetryPolicy::default() };
+    let mut client = RetryClient::new(&addr, policy);
+    let err = client.infer(SYNTHETIC_MLP, &input(0)).expect_err("poisoned batch must fail");
+    match &err {
+        ClientError::Server { code, message } => {
+            assert_eq!(format!("{code:?}"), "Poisoned");
+            assert!(message.contains("quarantined"), "{message}");
+        }
+        other => panic!("expected a typed Poisoned reject, got {other:?}"),
+    }
+    assert!(!err.is_retryable(), "poison is permanent for this input");
+    assert_eq!(client.retries, 0, "fail-fast: no retry budget burned");
+    client.close();
+
+    let report = gw.shutdown();
+    let sup = line_with(&report, "supervision: ");
+    assert!(sup.contains("poisoned=1"), "{report}");
+    assert!(sup.contains("respawns=2"), "two crashes before quarantine: {report}");
+    assert!(report.contains("failures=1"), "{report}");
+}
+
+/// An injected connection drop (`drop@s0:f1`: session 0 severed right
+/// after its first frame) is survived by the retry client: it
+/// reconnects and re-executes, and the replies are bit-identical to a
+/// drop-free run (inference is pure).
+#[test]
+fn connection_drop_is_survived_by_the_retry_client() {
+    let (want, _) = run_gateway(1, "", 2);
+
+    let mut gcfg = gw_cfg();
+    gcfg.chaos = ChaosSpec::parse("drop@s0:f1").unwrap();
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1, "")), gcfg).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let policy =
+        RetryPolicy { retries: 4, base: Duration::from_millis(1), ..RetryPolicy::default() };
+    let mut client = RetryClient::new(&addr, policy);
+    for i in 0..2u64 {
+        let reply = client.infer(SYNTHETIC_MLP, &input(i)).expect("retry client recovers");
+        let got: Vec<u32> = reply.logits.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want[i as usize], "request {i}: recovered run == clean run, bit-exact");
+    }
+    // session 0 was severed by chaos, so at least one reconnect happened
+    // (whether the first reply escaped the drop is a race; the recovery
+    // is what's under test)
+    assert!(client.reconnects >= 1, "the drop forced a reconnect");
+    client.close();
+    gw.shutdown();
+}
+
+/// A per-request deadline travels the wire (`Infer.deadline_ms`), is
+/// enforced server-side during an injected stall, and comes back as the
+/// typed `DeadlineExceeded` code — which the client treats as permanent.
+#[test]
+fn wire_deadline_is_enforced_and_typed() {
+    // one worker whose first batch stalls 200 ms; the stall timeout
+    // stays at its 30 s default so the supervisor leaves it alone
+    let gw =
+        Gateway::start(Coordinator::start(rns_cfg(1, "stall@w0:b1:200ms")), gw_cfg()).expect("gw");
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).expect("connect");
+    client.set_deadline_ms(30);
+    let err = client.infer(SYNTHETIC_MLP, &input(0)).expect_err("deadline must fire");
+    assert!(err.contains("DeadlineExceeded"), "typed code in: {err}");
+    // the next request (no stall, no deadline) is served normally on the
+    // same session
+    client.set_deadline_ms(0);
+    let reply = client.infer(SYNTHETIC_MLP, &input(1)).expect("infer after the deadline miss");
+    assert_eq!((reply.logits.rows, reply.logits.cols), (1, 10));
+    client.close();
+
+    let report = gw.shutdown();
+    let sup = line_with(&report, "supervision: ");
+    assert!(sup.contains("deadline-exceeded=1"), "{report}");
+    assert!(sup.contains("respawns=0"), "a stall below the timeout is not a crash: {report}");
+    assert!(report.contains("failures=1"), "{report}");
+}
