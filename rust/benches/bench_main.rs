@@ -290,6 +290,31 @@ fn micro_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
             core.gemm_quantized(&xf, &wf)
         });
     }
+    if want("micro/sparse") {
+        // 50% zero sample rows: the sparse-capture path should win by
+        // skipping DAC forward, ADC capture, and CRT decode for them
+        let (mut xf, wf) = random_gemm_pair(&mut rng, 16, 128, 64, 1.0);
+        for r in (0..xf.rows).step_by(2) {
+            xf.row_mut(r).fill(0.0);
+        }
+        let cfg = RnsCoreConfig::for_bits(8, 128).with_rrns(2, 2);
+        let mut dense = RnsCore::new(cfg.clone()).unwrap();
+        dense.prepare_weights(&wf);
+        b.bench_with_rate(
+            "micro/sparse rns gemm 16x128x64 50pct-zero dense-capture",
+            (16 * 128 * 64 * 5) as f64,
+            "MAC/s",
+            || dense.gemm_quantized(&xf, &wf),
+        );
+        let mut sparse = RnsCore::new(cfg.with_sparse_capture(true)).unwrap();
+        sparse.prepare_weights(&wf);
+        b.bench_with_rate(
+            "micro/sparse rns gemm 16x128x64 50pct-zero sparse-capture",
+            (16 * 128 * 64 * 5) as f64,
+            "MAC/s",
+            || sparse.gemm_quantized(&xf, &wf),
+        );
+    }
     if want("micro/pjrt_engine") {
         let artifacts = default_artifacts_dir();
         if let Ok(rt) = PjrtRuntime::cpu() {

@@ -29,10 +29,17 @@ pub fn adc_energy(enob: u32) -> f64 {
 }
 
 /// Running energy/conversion counters for one simulated core.
+///
+/// `skipped_dac` / `skipped_adc` count conversions that sparse capture
+/// proved unnecessary (zero activations / structurally-zero output rows)
+/// and therefore never performed nor charged — the converter-activation
+/// savings RedPIM-style execution buys on top of low ENOB.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EnergyMeter {
     pub dac_conversions: u64,
     pub adc_conversions: u64,
+    pub skipped_dac: u64,
+    pub skipped_adc: u64,
     pub dac_joules: f64,
     pub adc_joules: f64,
     pub digital_joules: f64,
@@ -53,6 +60,16 @@ impl EnergyMeter {
         self.digital_joules += count as f64 * E_CRT_DIGITAL;
     }
 
+    /// Count DAC conversions avoided by sparse capture (no energy charged).
+    pub fn record_skipped_dac(&mut self, count: u64) {
+        self.skipped_dac += count;
+    }
+
+    /// Count ADC conversions avoided by sparse capture (no energy charged).
+    pub fn record_skipped_adc(&mut self, count: u64) {
+        self.skipped_adc += count;
+    }
+
     pub fn total_joules(&self) -> f64 {
         self.dac_joules + self.adc_joules + self.digital_joules
     }
@@ -60,6 +77,8 @@ impl EnergyMeter {
     pub fn merge(&mut self, other: &EnergyMeter) {
         self.dac_conversions += other.dac_conversions;
         self.adc_conversions += other.adc_conversions;
+        self.skipped_dac += other.skipped_dac;
+        self.skipped_adc += other.skipped_adc;
         self.dac_joules += other.dac_joules;
         self.adc_joules += other.adc_joules;
         self.digital_joules += other.digital_joules;
@@ -113,6 +132,22 @@ mod tests {
         assert!(m2.total_joules() > 0.0);
         m2.reset();
         assert_eq!(m2.total_joules(), 0.0);
+    }
+
+    #[test]
+    fn skipped_conversions_count_but_cost_nothing() {
+        let mut m = EnergyMeter::default();
+        m.record_skipped_dac(7);
+        m.record_skipped_adc(3);
+        assert_eq!((m.skipped_dac, m.skipped_adc), (7, 3));
+        assert_eq!((m.dac_conversions, m.adc_conversions), (0, 0));
+        assert_eq!(m.total_joules(), 0.0);
+        let mut m2 = EnergyMeter::default();
+        m2.record_skipped_adc(1);
+        m2.merge(&m);
+        assert_eq!((m2.skipped_dac, m2.skipped_adc), (7, 4));
+        m2.reset();
+        assert_eq!((m2.skipped_dac, m2.skipped_adc), (0, 0));
     }
 
     #[test]

@@ -99,7 +99,14 @@ impl FixedPointMvmUnit {
         }
         let b_out = required_output_bits(self.bits, self.bits, self.h);
         let dropped = b_out.saturating_sub(self.adc_bits);
-        if dropped > 0 {
+        if dropped >= 63 {
+            // the truncation step 2^dropped exceeds i64: every
+            // representable |y| < 2^63 truncates to 0, so a tiny ADC on a
+            // huge array reads all zeros instead of overflowing the shift
+            for v in y.data.iter_mut() {
+                *v = 0;
+            }
+        } else if dropped > 0 {
             let scale = 1i64 << dropped;
             for v in y.data.iter_mut() {
                 *v = v.signum() * (v.abs() / scale) * scale;
@@ -179,6 +186,22 @@ mod tests {
         let mut meter = EnergyMeter::default();
         let y = unit.execute(&x, &w, &mut rng, &mut meter);
         assert_eq!(y.data, gemm_i64(&x, &w).data);
+    }
+
+    #[test]
+    fn extreme_truncation_zeroes_instead_of_overflowing() {
+        // wide array + tiny ADC: b_out = 31+31+3-1 = 64, adc=1 -> dropped
+        // = 63.  `1i64 << 63` would overflow (debug panic); the clamp must
+        // zero the output instead — every |y| < 2^63 truncates to 0.
+        let unit = FixedPointMvmUnit::new(31, 1, 8, NoiseModel::None);
+        assert_eq!(required_output_bits(31, 31, 8).saturating_sub(1), 63);
+        let x = MatI::from_vec(1, 8, vec![1000; 8]);
+        let w = MatI::from_vec(8, 2, vec![-1000; 16]);
+        let mut rng = Rng::seed_from(6);
+        let mut meter = EnergyMeter::default();
+        let y = unit.execute(&x, &w, &mut rng, &mut meter);
+        assert!(y.data.iter().all(|&v| v == 0), "{:?}", y.data);
+        assert_eq!(meter.adc_conversions, 2);
     }
 
     #[test]

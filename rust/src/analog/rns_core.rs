@@ -60,7 +60,7 @@ use crate::rns::moduli::{extend_moduli, required_output_bits, select_moduli};
 use crate::rns::rrns::{Decode, RrnsCode};
 use crate::rns::RnsContext;
 use crate::runtime::engine::{ModularGemmEngine, NativeEngine};
-use crate::runtime::plan::{forward_residues, PreparedWeights, RnsPlan};
+use crate::runtime::plan::{forward_residues, forward_residues_sparse, PreparedWeights, RnsPlan};
 use crate::store::{PlanKey, PlanStore};
 use crate::tensor::{MatF, MatI};
 use crate::util::rng::Rng;
@@ -107,6 +107,19 @@ pub struct RnsCoreConfig {
     ///   that exhausts `max_attempts` whenever the burst width exceeds
     ///   the correction radius t.
     pub fault_site: InjectionSite,
+    /// Conversion-avoiding sparse execution (RedPIM-style): charge
+    /// activation-DAC only for nonzero activation elements, and skip ADC
+    /// capture, noise draws, and CRT decode for output rows whose dot
+    /// product is structurally zero (the activation slice row is all
+    /// zeros, so every channel's clean output row is exactly 0 — the
+    /// forward-conversion offset is a multiple of each modulus).
+    ///
+    /// Default **off**: with a noise model active, skipping rows
+    /// legitimately changes the RNG stream, so the knob is opt-in to keep
+    /// bit/RNG-stream compatibility for existing seeds.  Under
+    /// `NoiseModel::None` with no fault injector, sparse output is
+    /// bit-identical to dense on every decode path.
+    pub sparse_capture: bool,
 }
 
 /// Where `RnsCoreConfig::fault_injection` corrupts a tile (see the
@@ -133,6 +146,7 @@ impl RnsCoreConfig {
             reference_decode: false,
             fault_injection: None,
             fault_site: InjectionSite::default(),
+            sparse_capture: false,
         }
     }
 
@@ -172,6 +186,12 @@ impl RnsCoreConfig {
         self.fault_site = site;
         self
     }
+
+    /// Enable conversion-avoiding sparse execution (see `sparse_capture`).
+    pub fn with_sparse_capture(mut self, sparse: bool) -> Self {
+        self.sparse_capture = sparse;
+        self
+    }
 }
 
 /// Fault-tolerance counters (per core lifetime).
@@ -197,6 +217,11 @@ pub struct FaultStats {
     /// `fast_path_elems + voted_elems == decoded` for every RRNS core;
     /// under `reference_decode` every element counts here.
     pub voted_elems: u64,
+    /// Output rows sparse capture proved structurally zero and never
+    /// captured nor decoded (their elements appear in *no* other counter:
+    /// not `decoded`, not `fast_path_elems`).  Always 0 with
+    /// `sparse_capture` off.
+    pub skipped_rows: u64,
 }
 
 pub struct RnsCore {
@@ -460,35 +485,71 @@ impl RnsCore {
     /// output).  Only activations are converted here; the weight side
     /// comes pre-staged from the plan.
     fn tile_mvm_prepared(&mut self, xt: &MatI, wt: &PreparedWeights) -> MatI {
-        let moduli = &self.all_ctx.moduli;
-        let xr: Vec<MatI> =
-            moduli.iter().map(|&m| forward_residues(xt, m, self.cfg.bits)).collect();
-        for u in &self.units {
-            self.meter.record_dac((xt.rows * xt.cols) as u64, u.enob);
-        }
+        let (xr, zero_rows) = self.forward_activations(xt);
         // clean channel outputs (the engine is the ideal analog array)
         let clean = self.engine.matmul_mod_prepared(&xr, wt);
-        self.capture_and_decode(clean)
+        self.capture_and_decode(clean, zero_rows)
     }
 
     /// One unprepared tile: forward-converts both operands (reference path).
     fn tile_mvm_unprepared(&mut self, xt: &MatI, wt: &MatI) -> MatI {
+        let (xr, zero_rows) = self.forward_activations(xt);
         let moduli = &self.all_ctx.moduli;
-        let xr: Vec<MatI> =
-            moduli.iter().map(|&m| forward_residues(xt, m, self.cfg.bits)).collect();
         let wr: Vec<MatI> =
             moduli.iter().map(|&m| forward_residues(wt, m, self.cfg.bits)).collect();
-        for u in &self.units {
-            self.meter.record_dac((xt.rows * xt.cols) as u64, u.enob);
-        }
         let clean = self.engine.matmul_mod(&xr, &wr, moduli);
-        self.capture_and_decode(clean)
+        self.capture_and_decode(clean, zero_rows)
+    }
+
+    /// Forward-convert one activation tile into every channel and charge
+    /// the activation-DAC.  Dense: every element, every channel.  Sparse
+    /// capture: only nonzero elements are converted/charged (a zero
+    /// activation's residue is 0 in every channel, so no DAC needs to
+    /// fire); the remainder is counted as `skipped_dac`.  Also returns
+    /// the per-row all-zero mask (`None` when dense) that
+    /// `capture_and_decode` uses to skip structurally-zero output rows.
+    fn forward_activations(&mut self, xt: &MatI) -> (Vec<MatI>, Option<Vec<bool>>) {
+        let moduli = &self.all_ctx.moduli;
+        if !self.cfg.sparse_capture {
+            let xr: Vec<MatI> =
+                moduli.iter().map(|&m| forward_residues(xt, m, self.cfg.bits)).collect();
+            for u in &self.units {
+                self.meter.record_dac((xt.rows * xt.cols) as u64, u.enob);
+            }
+            return (xr, None);
+        }
+        let mut zero_rows = vec![true; xt.rows];
+        let mut nnz = 0u64;
+        for (r, flag) in zero_rows.iter_mut().enumerate() {
+            for &v in xt.row(r) {
+                if v != 0 {
+                    *flag = false;
+                    nnz += 1;
+                }
+            }
+        }
+        let xr: Vec<MatI> = moduli
+            .iter()
+            .map(|&m| forward_residues_sparse(xt, m, self.cfg.bits))
+            .collect();
+        for u in &self.units {
+            self.meter.record_dac(nnz, u.enob);
+        }
+        let zeros = (xt.rows * xt.cols) as u64 - nnz;
+        let channels = self.units.len() as u64;
+        self.meter.record_skipped_dac(zeros * channels);
+        (xr, Some(zero_rows))
     }
 
     /// ADC capture with noise, per channel, then decode.  Serial on purpose:
     /// all rng draws happen here in channel-major order, so outputs are
     /// identical whatever the engine's parallel schedule was.
-    fn capture_and_decode(&mut self, mut clean: Vec<MatI>) -> MatI {
+    ///
+    /// `zero_rows` (sparse capture only) marks activation rows that were
+    /// all zeros; after array-side injection the candidates are verified
+    /// against the clean channel outputs and the surviving rows bypass
+    /// capture and decode entirely (see `capture_and_decode_masked`).
+    fn capture_and_decode(&mut self, mut clean: Vec<MatI>, zero_rows: Option<Vec<bool>>) -> MatI {
         // array-side drift corrupts the channel outputs *before* capture:
         // the retry loop recomputes from the same corrupted values, so a
         // burst wider than t exhausts `max_attempts` instead of being
@@ -496,6 +557,20 @@ impl RnsCore {
         if self.cfg.fault_site == InjectionSite::Array {
             if let Some(inj) = &mut self.injector {
                 inj.corrupt_tile(&mut clean, &self.all_ctx.moduli);
+            }
+        }
+        if let Some(mut skip) = zero_rows {
+            // a row is skippable only while every channel's clean output
+            // row is still exactly 0 — array-side injection can corrupt a
+            // structurally-zero row, and a corrupted row must be captured
+            // and decoded like any other so detection/voting still sees it
+            for (r, flag) in skip.iter_mut().enumerate() {
+                if *flag && !clean.iter().all(|ch| ch.row(r).iter().all(|&v| v == 0)) {
+                    *flag = false;
+                }
+            }
+            if skip.iter().any(|&z| z) {
+                return self.capture_and_decode_masked(clean, &skip);
             }
         }
         let mut captured: Vec<MatI> = Vec::with_capacity(clean.len());
@@ -511,6 +586,54 @@ impl RnsCore {
             }
         }
         self.decode_tile(&clean, captured)
+    }
+
+    /// Sparse capture with at least one verified structurally-zero row:
+    /// compact the kept rows, run the unmodified capture → inject →
+    /// decode pipeline on the compacted tile, and scatter the decoded
+    /// rows back around true zeros.
+    ///
+    /// The ADCs never see the skipped rows, so noise draws, retry loops,
+    /// and CRT charges all operate on kept rows only — in the same
+    /// row-major order dense capture visits them — and skipped rows are
+    /// counted in none of `decoded`/`fast_path_elems`/`voted_elems`.
+    /// Under `NoiseModel::None` (no draws at all) this is bit-identical
+    /// to the dense path: a structurally-zero row decodes to exactly 0.
+    fn capture_and_decode_masked(&mut self, clean: Vec<MatI>, skip: &[bool]) -> MatI {
+        let (rows, cols) = (clean[0].rows, clean[0].cols);
+        let kept: Vec<usize> = (0..rows).filter(|&r| !skip[r]).collect();
+        let skipped = rows - kept.len();
+        let channels = self.units.len() as u64;
+        self.meter.record_skipped_adc((skipped * cols) as u64 * channels);
+        self.stats.skipped_rows += skipped as u64;
+        if kept.is_empty() {
+            // whole tile structurally zero: no capture, no decode, no
+            // RNG draws, zero ADC conversions, zero CRT charges
+            return MatI::zeros(rows, cols);
+        }
+        let compact = |ch: &MatI| {
+            let mut out = MatI::zeros(kept.len(), cols);
+            for (dst, &src) in kept.iter().enumerate() {
+                out.row_mut(dst).copy_from_slice(ch.row(src));
+            }
+            out
+        };
+        let clean_kept: Vec<MatI> = clean.iter().map(compact).collect();
+        let mut captured: Vec<MatI> = Vec::with_capacity(clean_kept.len());
+        for (u, ch) in self.units.iter().zip(&clean_kept) {
+            captured.push(u.recapture(ch, &mut self.rng, &mut self.meter));
+        }
+        if self.cfg.fault_site == InjectionSite::Capture {
+            if let Some(inj) = &mut self.injector {
+                inj.corrupt_tile(&mut captured, &self.all_ctx.moduli);
+            }
+        }
+        let decoded = self.decode_tile(&clean_kept, captured);
+        let mut out = MatI::zeros(rows, cols);
+        for (src, &dst) in kept.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(decoded.row(src));
+        }
+        out
     }
 
     /// Decode every output element of one tile.
@@ -955,5 +1078,170 @@ mod tests {
         let ya = a.gemm_quantized(&x, &w);
         let yb = b.gemm_quantized_unprepared(&x, &w);
         assert_eq!(ya.data, yb.data, "prepared path must be bit-identical");
+    }
+
+    /// ~50%-sparse ReLU-style batch with two all-zero sample rows.
+    fn sparse_batch(seed: u64, rows: usize, k: usize) -> MatF {
+        let mut rng = Rng::seed_from(seed);
+        let mut x = MatF::from_vec(
+            rows,
+            k,
+            (0..rows * k).map(|_| rng.uniform_f32(-1.0, 1.0).max(0.0)).collect(),
+        );
+        for r in [1, rows - 2] {
+            for v in x.row_mut(r) {
+                *v = 0.0;
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn sparse_capture_bit_identical_and_cheaper_all_decode_paths() {
+        // the tentpole contract: under NoiseModel::None with no injector,
+        // sparse capture is bit-identical to dense on every decode path
+        // (plain CRT, RRNS batched, RRNS reference) with strictly fewer
+        // DAC/ADC conversions on a 50%-sparse ReLU workload
+        let x = sparse_batch(60, 6, 256);
+        let w = rand_mat(61, 256, 8, 0.5);
+        let configs: Vec<(&str, RnsCoreConfig)> = vec![
+            ("plain", RnsCoreConfig::for_bits(6, 128)),
+            ("rrns-batched", RnsCoreConfig::for_bits(8, 128).with_rrns(2, 2)),
+            (
+                "rrns-reference",
+                RnsCoreConfig::for_bits(8, 128).with_rrns(2, 2).with_reference_decode(true),
+            ),
+        ];
+        for (name, cfg) in configs {
+            let mut dense = RnsCore::new(cfg.clone()).unwrap();
+            let mut sparse = RnsCore::new(cfg.with_sparse_capture(true)).unwrap();
+            let yd = dense.gemm_quantized(&x, &w);
+            let ys = sparse.gemm_quantized(&x, &w);
+            assert_eq!(yd.data, ys.data, "{name}: sparse output must be bit-identical");
+            assert!(
+                sparse.meter.dac_conversions < dense.meter.dac_conversions,
+                "{name}: dac {} !< {}",
+                sparse.meter.dac_conversions,
+                dense.meter.dac_conversions
+            );
+            assert!(
+                sparse.meter.adc_conversions < dense.meter.adc_conversions,
+                "{name}: adc {} !< {}",
+                sparse.meter.adc_conversions,
+                dense.meter.adc_conversions
+            );
+            assert!(sparse.meter.total_joules() < dense.meter.total_joules(), "{name}");
+            assert!(sparse.meter.skipped_dac > 0 && sparse.meter.skipped_adc > 0, "{name}");
+            assert_eq!(dense.meter.skipped_dac, 0, "{name}: dense never skips");
+            assert_eq!(dense.meter.skipped_adc, 0, "{name}: dense never skips");
+            // 2 zero sample rows x 2 K-tiles
+            assert_eq!(sparse.stats.skipped_rows, 4, "{name}");
+            // skipped rows appear in no decode counter
+            assert_eq!(
+                sparse.stats.decoded,
+                dense.stats.decoded - sparse.stats.skipped_rows * w.cols as u64,
+                "{name}"
+            );
+            // conservation: performed + skipped == the dense totals
+            assert_eq!(
+                sparse.meter.dac_conversions + sparse.meter.skipped_dac,
+                dense.meter.dac_conversions,
+                "{name}"
+            );
+            assert_eq!(
+                sparse.meter.adc_conversions + sparse.meter.skipped_adc,
+                dense.meter.adc_conversions,
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_capture_all_zero_tile_converts_nothing() {
+        // exactness: an all-zero input performs zero activation-DAC, zero
+        // ADC conversions, and zero CRT charges — only the one-time
+        // weight-DAC plan charge remains
+        let x = MatF::zeros(3, 128);
+        let w = rand_mat(62, 128, 5, 0.5);
+        let cfg = RnsCoreConfig::for_bits(6, 128).with_sparse_capture(true);
+        let mut core = RnsCore::new(cfg).unwrap();
+        let y = core.gemm_quantized(&x, &w);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+        let n = core.n_channels() as u64;
+        assert_eq!(core.meter.adc_conversions, 0);
+        assert_eq!(core.meter.digital_joules, 0.0, "no CRT charges");
+        assert_eq!(core.meter.dac_conversions, n * 128 * 5, "weight-DAC only");
+        assert_eq!(core.meter.skipped_dac, n * 3 * 128);
+        assert_eq!(core.meter.skipped_adc, n * 3 * 5);
+        assert_eq!(core.stats.skipped_rows, 3);
+        assert_eq!(core.stats.decoded, 0);
+        // dense reference on the same input agrees bit-for-bit
+        let mut dense = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        assert_eq!(dense.gemm_quantized(&x, &w).data, y.data);
+    }
+
+    #[test]
+    fn sparse_capture_unprepared_path_matches_dense() {
+        let x = sparse_batch(63, 5, 300);
+        let w = rand_mat(64, 300, 7, 0.5);
+        let mut dense = RnsCore::new(RnsCoreConfig::for_bits(6, 128)).unwrap();
+        let mut sparse =
+            RnsCore::new(RnsCoreConfig::for_bits(6, 128).with_sparse_capture(true)).unwrap();
+        let yd = dense.gemm_quantized_unprepared(&x, &w);
+        let ys = sparse.gemm_quantized_unprepared(&x, &w);
+        assert_eq!(yd.data, ys.data);
+        assert!(sparse.meter.adc_conversions < dense.meter.adc_conversions);
+        assert!(sparse.stats.skipped_rows > 0);
+    }
+
+    #[test]
+    fn sparse_capture_array_injected_zero_rows_are_not_skipped() {
+        // array-side drift can corrupt a structurally-zero row; such a row
+        // must be captured and decoded like any other.  With the same
+        // injector seed and no noise, dense and sparse see the identical
+        // full-size clean tile at injection time, so outputs must agree
+        // bit-for-bit: corrupted zero rows decode identically, untouched
+        // zero rows are emitted as true zeros.
+        let x = MatF::zeros(4, 128);
+        let w = rand_mat(65, 128, 6, 0.5);
+        let base = RnsCoreConfig::for_bits(8, 128)
+            .with_rrns(2, 2)
+            .with_fault_injection(FaultSpec::Burst { elems: 3, width: 1 }, 77)
+            .with_fault_site(InjectionSite::Array);
+        let mut dense = RnsCore::new(base.clone()).unwrap();
+        let mut sparse = RnsCore::new(base.with_sparse_capture(true)).unwrap();
+        let yd = dense.gemm_quantized(&x, &w);
+        let ys = sparse.gemm_quantized(&x, &w);
+        assert_eq!(yd.data, ys.data);
+        // the burst hit at least one element, so at least one of the 4
+        // candidate rows was rescued from skipping
+        assert!(sparse.stats.skipped_rows < 4, "corrupted rows must not be skipped");
+        assert!(sparse.stats.skipped_rows > 0, "untouched rows still skip");
+    }
+
+    #[test]
+    fn sparse_capture_noise_is_seeded_deterministic() {
+        // with noise active the RNG stream legitimately differs from
+        // dense — pin seeded determinism instead, and the counter
+        // relations that must hold regardless
+        let x = sparse_batch(66, 6, 256);
+        let w = rand_mat(67, 256, 8, 0.5);
+        let cfg = RnsCoreConfig::for_bits(8, 128)
+            .with_rrns(2, 3)
+            .with_noise(NoiseModel::ResidueFlip { p: 0.05 })
+            .with_seed(9)
+            .with_sparse_capture(true);
+        let mut a = RnsCore::new(cfg.clone()).unwrap();
+        let mut b = RnsCore::new(cfg).unwrap();
+        let ya = a.gemm_quantized(&x, &w);
+        let yb = b.gemm_quantized(&x, &w);
+        assert_eq!(ya.data, yb.data, "same seed, same sparse output");
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.meter.adc_conversions, b.meter.adc_conversions);
+        // skipped rows never land in decoded / fast_path / voted
+        assert_eq!(a.stats.fast_path_elems + a.stats.voted_elems, a.stats.decoded);
+        assert_eq!(a.stats.skipped_rows, 4);
+        let total_elems = 2 * (x.rows * w.cols) as u64; // 2 K-tiles
+        assert_eq!(a.stats.decoded, total_elems - a.stats.skipped_rows * w.cols as u64);
     }
 }

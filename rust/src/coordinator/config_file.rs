@@ -9,6 +9,10 @@
 //! redundant = 0
 //! attempts = 1
 //! noise_p = 0.0
+//! sparse_capture = false # conversion-avoiding sparse execution: skip
+//!                        # DAC/ADC/CRT work for zero activations
+//!                        # (reported as skipped-dac=/skipped-adc= on
+//!                        # the `energy:` metrics line)
 //!
 //! [serve]
 //! workers = 2
@@ -90,6 +94,7 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
     };
     out.seed = cfg.int_or("core.seed", 0) as u64;
     out.routing = routing;
+    out.sparse_capture = cfg.bool_or("core.sparse_capture", false);
     let cap = cfg.int_or("serve.plan_store_capacity", crate::store::DEFAULT_UNTAGGED_CAPACITY as i64);
     if cap < 1 {
         return Err("serve.plan_store_capacity must be >= 1".into());
@@ -193,6 +198,7 @@ redundant = 2
 attempts = 3
 noise_p = 0.01
 seed = 7
+sparse_capture = true
 [serve]
 workers = 3
 max_batch = 16
@@ -222,6 +228,7 @@ fabric_threads = 6
         assert_eq!(cc.seed, 7);
         assert_eq!(cc.plan_store_capacity, 32);
         assert_eq!(cc.fabric_threads, 6);
+        assert!(cc.sparse_capture);
     }
 
     #[test]
@@ -235,6 +242,7 @@ fabric_threads = 6
         assert_eq!(cc.poison_threshold, 2);
         assert!(cc.default_deadline.is_none());
         assert!(cc.chaos.is_empty());
+        assert!(!cc.sparse_capture, "sparse capture defaults off");
     }
 
     #[test]

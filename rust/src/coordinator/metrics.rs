@@ -52,6 +52,11 @@ pub struct ServingMetrics {
     /// against the in-process path down to the converter count).
     pub energy_dac_conversions: u64,
     pub energy_adc_conversions: u64,
+    /// Conversions sparse capture proved unnecessary and skipped (zero
+    /// activations / structurally-zero output rows); always 0 unless the
+    /// backend runs with `sparse_capture` on.
+    pub energy_skipped_dac: u64,
+    pub energy_skipped_adc: u64,
     /// Proactive unloads issued through the worker control plane, and
     /// how many worker-held model instances they released (a worker that
     /// never held the model acks without a release).
@@ -95,6 +100,8 @@ impl Default for ServingMetrics {
             plans_built: 0,
             energy_dac_conversions: 0,
             energy_adc_conversions: 0,
+            energy_skipped_dac: 0,
+            energy_skipped_adc: 0,
             unload_requests: 0,
             proactive_releases: 0,
             respawns: 0,
@@ -244,9 +251,14 @@ impl ServingMetrics {
             self.decode_fast_path,
             self.decode_voted,
         );
+        // skipped-* appended after the PR-5 keys so parsers keyed on the
+        // first dac-/adc-conversions occurrence keep working
         out.push_str(&format!(
-            "\nenergy: dac-conversions={} adc-conversions={}",
-            self.energy_dac_conversions, self.energy_adc_conversions,
+            "\nenergy: dac-conversions={} adc-conversions={} skipped-dac={} skipped-adc={}",
+            self.energy_dac_conversions,
+            self.energy_adc_conversions,
+            self.energy_skipped_dac,
+            self.energy_skipped_adc,
         ));
         out.push_str(&format!(
             "\nunloads: proactive={} worker-releases={}",
@@ -376,6 +388,8 @@ mod tests {
         });
         m.energy_dac_conversions = 500;
         m.energy_adc_conversions = 700;
+        m.energy_skipped_dac = 60;
+        m.energy_skipped_adc = 40;
         m.set_gateway(GatewayReport {
             sessions_accepted: 9,
             sessions_active: 2,
@@ -414,7 +428,12 @@ mod tests {
         assert!(rep.contains("model=mlp: batches=2 decode fast-path=150 voted=4"));
         assert!(rep.contains("plan store: resident=16 bytes=4096 builds=16 hits=48 evicted=0"));
         assert!(rep.contains("plan store model=mlp: resident=3 bytes=1024 hits=9 misses=3"));
-        assert!(rep.contains("energy: dac-conversions=500 adc-conversions=700"), "{rep}");
+        assert!(
+            rep.contains(
+                "energy: dac-conversions=500 adc-conversions=700 skipped-dac=60 skipped-adc=40"
+            ),
+            "{rep}"
+        );
         assert!(
             rep.contains(
                 "gateway: sessions=9 active=2 rejects=1 frames-in=40 frames-out=41 \

@@ -24,9 +24,17 @@ pub struct RoundRobin {
 
 impl RoutingPolicy for RoundRobin {
     fn pick(&mut self, workers: usize) -> usize {
-        let w = self.next % workers.max(1);
-        self.next = self.next.wrapping_add(1);
-        w
+        // the cursor is kept in [0, workers) and advanced modulo the
+        // worker count: a `wrapping_add` cursor would skip a slot when
+        // it wraps at usize::MAX for counts that don't divide 2^64 (and
+        // a shrinking worker set re-clamps instead of jumping)
+        let w = workers.max(1);
+        if self.next >= w {
+            self.next %= w;
+        }
+        let pick = self.next;
+        self.next = (self.next + 1) % w;
+        pick
     }
     fn on_dispatch(&mut self, _worker: usize) {}
     fn on_complete(&mut self, _worker: usize) {}
@@ -99,6 +107,34 @@ mod tests {
         let mut rr = RoundRobin::default();
         let picks: Vec<usize> = (0..6).map(|_| rr.pick(3)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_has_no_seam_at_usize_max() {
+        // 3 and 7 don't divide 2^64, so the old wrapping cursor skipped a
+        // slot (or repeated one) when it wrapped; the rotation must stay
+        // gap-free from any cursor value
+        for workers in [3usize, 7] {
+            let mut rr = RoundRobin { next: usize::MAX };
+            let mut prev = rr.pick(workers);
+            assert!(prev < workers);
+            for _ in 0..3 * workers {
+                let cur = rr.pick(workers);
+                assert_eq!(cur, (prev + 1) % workers, "workers={workers}");
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_reclamps_when_worker_set_shrinks() {
+        let mut rr = RoundRobin::default();
+        for _ in 0..5 {
+            rr.pick(6);
+        }
+        // cursor is at 5; shrinking to 2 workers must clamp, not jump
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick(2)).collect();
+        assert_eq!(picks, vec![1, 0, 1, 0]);
     }
 
     #[test]

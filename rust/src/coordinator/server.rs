@@ -127,6 +127,11 @@ pub struct CoordinatorConfig {
     pub poison_threshold: u32,
     /// Deadline applied to requests that carry none; `None` = unlimited.
     pub default_deadline: Option<Duration>,
+    /// Conversion-avoiding sparse execution on RNS backends (see
+    /// `RnsCoreConfig::sparse_capture`): skip DAC/ADC/CRT work for zero
+    /// activations and report it as `skipped-dac=`/`skipped-adc=` on the
+    /// `energy:` metrics line.  Default off for RNG-stream compatibility.
+    pub sparse_capture: bool,
 }
 
 impl CoordinatorConfig {
@@ -145,6 +150,7 @@ impl CoordinatorConfig {
             stall_timeout: Duration::from_secs(30),
             poison_threshold: 2,
             default_deadline: None,
+            sparse_capture: false,
         }
     }
 }
@@ -1014,7 +1020,8 @@ pub fn build_backend_with_runtime(
                 RnsCoreConfig::for_bits(*bits, cfg.h)
                     .with_noise(*noise)
                     .with_rrns(*redundant, *attempts)
-                    .with_seed(seed),
+                    .with_seed(seed)
+                    .with_sparse_capture(cfg.sparse_capture),
                 engine,
                 store,
             )?;
@@ -1027,7 +1034,8 @@ pub fn build_backend_with_runtime(
                 RnsCoreConfig::for_bits(*bits, cfg.h)
                     .with_noise(*noise)
                     .with_rrns(*redundant, *attempts)
-                    .with_seed(seed),
+                    .with_seed(seed)
+                    .with_sparse_capture(cfg.sparse_capture),
                 Box::new(engine),
                 store,
             )?;
@@ -1068,6 +1076,8 @@ struct WorkerCounters {
     voted: u64,
     dac: u64,
     adc: u64,
+    skipped_dac: u64,
+    skipped_adc: u64,
 }
 
 /// Extract a printable message from a caught panic payload.
@@ -1278,12 +1288,18 @@ fn serve_batch(
     // data-converter activity, same delta discipline (deterministic
     // integer counts, so a served stream is exactly comparable to the
     // in-process path — the gateway bit-identity test relies on it)
-    let (dac_now, adc_now) =
-        backend.meter().map(|m| (m.dac_conversions, m.adc_conversions)).unwrap_or((0, 0));
+    let (dac_now, adc_now, skipped_dac_now, skipped_adc_now) = backend
+        .meter()
+        .map(|m| (m.dac_conversions, m.adc_conversions, m.skipped_dac, m.skipped_adc))
+        .unwrap_or((0, 0, 0, 0));
     let dac_delta = dac_now.saturating_sub(counters.dac);
     counters.dac = dac_now;
     let adc_delta = adc_now.saturating_sub(counters.adc);
     counters.adc = adc_now;
+    let skipped_dac_delta = skipped_dac_now.saturating_sub(counters.skipped_dac);
+    counters.skipped_dac = skipped_dac_now;
+    let skipped_adc_delta = skipped_adc_now.saturating_sub(counters.skipped_adc);
+    counters.skipped_adc = skipped_adc_now;
     {
         let mut m = sh.metrics.lock().unwrap();
         m.faults_detected += batch_faults;
@@ -1293,6 +1309,8 @@ fn serve_batch(
         m.plans_built += plans_delta;
         m.energy_dac_conversions += dac_delta;
         m.energy_adc_conversions += adc_delta;
+        m.energy_skipped_dac += skipped_dac_delta;
+        m.energy_skipped_adc += skipped_adc_delta;
         // the same deltas, attributed to the model this batch ran — a
         // worker serves one batch (= one model) at a time, so the
         // counter deltas since the previous batch belong to it

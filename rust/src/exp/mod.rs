@@ -10,6 +10,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod report;
+pub mod sparsity;
 pub mod table1;
 
 pub use report::Report;

@@ -50,7 +50,7 @@ fn usage() {
     eprintln!(
         "usage: rns-analog <subcommand> [flags]\n\
          \n\
-         exp <table1|fig1|fig3|fig4|fig5|fig6|fig7|headline|ablation|all>\n\
+         exp <table1|fig1|fig3|fig4|fig5|fig6|fig7|headline|ablation|sparsity|all>\n\
              [--samples=N] [--pairs=N] [--trials=N] [--h=128] [--save-dir=results]\n\
          infer --model=<mlp|cnn|resnet|bert> [--backend=fp32|fixed|rns|rns-pjrt]\n\
              [--bits=6] [--redundant=0] [--attempts=1] [--noise-p=0] [--samples=N]\n\
@@ -64,6 +64,9 @@ fn usage() {
              [--stall-timeout-ms=30000] [--poison-threshold=2] [--default-deadline-ms=0]\n\
              [--chaos=SPEC]  (seeded fault injection, e.g. \"panic@w0:b3,\n\
               stall@w1:b2:50ms,poison@mlp,drop@s1:f2\" — tests/CI only)\n\
+             [--sparse-capture]  (conversion-avoiding sparse execution on RNS\n\
+              backends; skipped conversions show as skipped-dac=/skipped-adc=\n\
+              on the energy: metrics line)\n\
          pjrt-demo [--bits=6]"
     );
 }
@@ -125,13 +128,20 @@ fn cmd_exp(args: &mut Args) -> i32 {
                 cfg.samples = samples;
                 save_and_print(&exp::fig4::headline(&cfg)?, &save_dir, "headline");
             }
+            "sparsity" => {
+                let cfg = exp::sparsity::SparsityConfig { h, ..Default::default() };
+                save_and_print(&exp::sparsity::run(&cfg), &save_dir, "sparsity");
+            }
             other => return Err(format!("unknown experiment `{other}`")),
         }
         Ok(())
     };
 
     let ids: Vec<&str> = if which == "all" {
-        vec!["table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "headline", "ablation"]
+        vec![
+            "table1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "headline", "ablation",
+            "sparsity",
+        ]
     } else {
         vec![which.as_str()]
     };
@@ -150,13 +160,20 @@ fn cmd_exp(args: &mut Args) -> i32 {
 /// Backend + coordinator config from --config=<file> or individual flags.
 fn parse_coordinator_config(args: &mut Args, artifacts: &str) -> Result<CoordinatorConfig, String> {
     if let Some(path) = args.get("config") {
-        return rns_analog::coordinator::config_file::from_file(&path, artifacts);
+        let mut cfg = rns_analog::coordinator::config_file::from_file(&path, artifacts)?;
+        // the flag composes with a config file (CI enables sparse capture
+        // on top of a stock config)
+        if args.flag("sparse-capture") {
+            cfg.sparse_capture = true;
+        }
+        return Ok(cfg);
     }
     let backend = parse_backend(args)?;
     let mut cfg = CoordinatorConfig::new(backend, artifacts);
     cfg.workers = args.get_parsed::<usize>("workers", 2)?;
     cfg.batcher =
         BatcherConfig { max_batch: args.get_parsed::<usize>("max-batch", 8)?, ..Default::default() };
+    cfg.sparse_capture = args.flag("sparse-capture");
     Ok(cfg)
 }
 
@@ -289,6 +306,9 @@ fn cmd_serve(args: &mut Args) -> i32 {
     }
     // supervision + chaos flags override whatever the config file said
     let mut cfg = cfg;
+    if args.flag("sparse-capture") {
+        cfg.sparse_capture = true;
+    }
     if let Some(spec) = args.get("chaos") {
         match rns_analog::coordinator::ChaosSpec::parse(&spec) {
             Ok(parsed) => {

@@ -38,6 +38,20 @@ pub fn forward_residues(mat: &MatI, m: u64, bits: u32) -> MatI {
     mat.map(|v| red.reduce((v + offset as i64) as u64) as i64)
 }
 
+/// Zero-skipping variant of [`forward_residues`] for sparse capture.
+///
+/// `offset` is a multiple of `m`, so a quantized 0 reduces to residue 0
+/// in every channel — the short-circuit is bit-identical to the dense
+/// conversion, it just skips the Barrett math (the digital analogue of
+/// not firing the DAC for a zero activation).
+pub fn forward_residues_sparse(mat: &MatI, m: u64, bits: u32) -> MatI {
+    let red = BarrettReducer::new(m);
+    let qm = qmax(bits).unsigned_abs();
+    let offset = (qm / m + 1) * m;
+    debug_assert!(mat.data.iter().all(|&v| v.unsigned_abs() <= qm));
+    mat.map(|v| if v == 0 { 0 } else { red.reduce((v + offset as i64) as u64) as i64 })
+}
+
 /// One K-tile of weights, forward-converted and staged for every channel.
 pub struct PreparedWeights {
     /// Tile height (dot-product length of this tile).
@@ -155,6 +169,24 @@ mod tests {
             let got = forward_residues(&mat, m, bits);
             let want = mat.map(|v| v.rem_euclid(m as i64));
             assert_eq!(got.data, want.data, "m={m}");
+        }
+    }
+
+    #[test]
+    fn sparse_forward_matches_dense_with_zeros() {
+        let mut rng = Rng::seed_from(3);
+        let bits = 8u32;
+        let qm = qmax(bits);
+        // ~half the entries zeroed, ReLU-style
+        let mat = MatI::from_vec(
+            5,
+            11,
+            (0..55).map(|_| rng.gen_range_i64(-qm, qm).max(0)).collect(),
+        );
+        for &m in paper_table1(bits).unwrap() {
+            let dense = forward_residues(&mat, m, bits);
+            let sparse = forward_residues_sparse(&mat, m, bits);
+            assert_eq!(dense.data, sparse.data, "m={m}");
         }
     }
 

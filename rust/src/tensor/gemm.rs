@@ -84,9 +84,19 @@ const GEMM_MOD_COL_BLOCK: usize = 256;
 /// partial sums stay below 2^32 + m.
 pub fn gemm_mod_staged(x: &MatI, w32: &[u32], n_cols: usize, m: u64) -> MatI {
     assert_eq!(w32.len(), x.cols * n_cols, "staged weight shape mismatch");
+    // even a block of one product must fit on top of a reduced residual:
+    // residual + product <= (m-1) + (m-1)^2 = m(m-1), which must stay
+    // inside BarrettReducer::reduce's exact domain (x < 2^63).  Largest
+    // admissible modulus: 3037000499 (~2^31.5).
+    assert!(
+        m.checked_mul(m.saturating_sub(1)).is_some_and(|p| p < (1 << 63)),
+        "modulus {m} too large for the staged kernel (residual + one product must stay < 2^63)"
+    );
     let red = BarrettReducer::new(m);
-    // residue products < m^2; accumulate `block` of them below 2^63
-    let block = ((u64::MAX >> 1) / (m * m).max(1)).min(1 << 20).max(1) as usize;
+    // residue products < m^2, and a mid-stream reduction leaves a
+    // residual < m in the accumulator — so size the block for the budget
+    // left *after* that residual, not the full 2^63
+    let block = (((u64::MAX >> 1) - m) / (m * m).max(1)).min(1 << 20).max(1) as usize;
     let mut y = MatI::zeros(x.rows, n_cols);
     let mut acc = [0u64; GEMM_MOD_COL_BLOCK];
     for i in 0..x.rows {
@@ -207,6 +217,52 @@ mod tests {
                 &format!("m={m} n={n}"),
             )
         });
+    }
+
+    #[test]
+    fn gemm_mod_staged_large_moduli_force_mid_block_reduction() {
+        // moduli near 2^31 size the reduction block to 1-2 products, so
+        // any K >= 3 forces mid-stream reductions whose residual < m is
+        // carried into the next block — the case the block sizing must
+        // budget for.  gemm_i64 would overflow here; the reference
+        // accumulates in u128.
+        run_prop("gemm_mod_staged large moduli", 25, |rng| {
+            let m = [2_147_483_647u64, (1 << 31) + 11, 3_037_000_499][rng.gen_range(3) as usize];
+            let b = 1 + rng.gen_range(2) as usize;
+            let k = 3 + rng.gen_range(20) as usize;
+            let n = 1 + rng.gen_range(6) as usize;
+            // residues biased into the top of [0, m) to maximize the
+            // accumulator (uniform draws would rarely stress the bound)
+            let top = |rng: &mut Rng| (m - 1 - rng.gen_range(1 << 8)) as i64;
+            let x = MatI::from_vec(b, k, (0..b * k).map(|_| top(rng)).collect());
+            let w = MatI::from_vec(k, n, (0..k * n).map(|_| top(rng)).collect());
+            let mut want = vec![0i64; b * n];
+            for i in 0..b {
+                for j in 0..n {
+                    let mut acc = 0u128;
+                    for kk in 0..k {
+                        acc = (acc + x.at(i, kk) as u128 * w.at(kk, j) as u128) % m as u128;
+                    }
+                    want[i * n + j] = acc as i64;
+                }
+            }
+            let staged = stage_weights_u32(&w, m);
+            prop_assert_eq(
+                gemm_mod_staged(&x, &staged, n, m).data,
+                want,
+                &format!("m={m} k={k} n={n}"),
+            )
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "too large for the staged kernel")]
+    fn gemm_mod_staged_rejects_oversized_modulus() {
+        // 3037000500^2 > 2^63: even a single product overflows the exact
+        // Barrett domain, so the kernel must refuse loudly
+        let m = 3_037_000_500u64;
+        let x = MatI::from_vec(1, 1, vec![1]);
+        gemm_mod_staged(&x, &[1u32], 1, m);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 use crate::util::rng::Rng;
 
 /// Streaming summary of a sample (count / mean / min / max / variance via
-/// Welford's algorithm).
+/// Welford's algorithm).  NaN inputs are skipped and counted rather than
+/// folded in: a NaN would poison mean/m2 forever while min/max silently
+/// dropped it (f64::min/max ignore NaN), leaving the summary self-
+/// inconsistent.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     n: u64,
@@ -13,14 +16,19 @@ pub struct Summary {
     m2: f64,
     min: f64,
     max: f64,
+    nans: u64,
 }
 
 impl Summary {
     pub fn new() -> Self {
-        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, nans: 0 }
     }
 
     pub fn add(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nans += 1;
+            return;
+        }
         self.n += 1;
         let delta = x - self.mean;
         self.mean += delta / self.n as f64;
@@ -31,6 +39,11 @@ impl Summary {
 
     pub fn count(&self) -> u64 {
         self.n
+    }
+
+    /// NaN samples rejected by `add` (not part of `count`).
+    pub fn nan_count(&self) -> u64 {
+        self.nans
     }
     pub fn mean(&self) -> f64 {
         self.mean
@@ -166,21 +179,29 @@ impl Reservoir {
 }
 
 /// Fixed-bin histogram over `[lo, hi)`; out-of-range values clamp to the
-/// edge bins (used for the Fig. 3 error-distribution plots).
+/// edge bins (used for the Fig. 3 error-distribution plots).  NaN samples
+/// are skipped and counted — the float-to-int cast used to misfile them
+/// into bin 0 (`NaN as i64 == 0`), silently inflating the first bin.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     pub lo: f64,
     pub hi: f64,
     pub bins: Vec<u64>,
+    /// NaN samples rejected by `add` (not in any bin nor `total`).
+    pub nans: u64,
 }
 
 impl Histogram {
     pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
         assert!(hi > lo && nbins > 0);
-        Histogram { lo, hi, bins: vec![0; nbins] }
+        Histogram { lo, hi, bins: vec![0; nbins], nans: 0 }
     }
 
     pub fn add(&mut self, x: f64) {
+        if x.is_nan() {
+            self.nans += 1;
+            return;
+        }
         let nb = self.bins.len();
         let t = (x - self.lo) / (self.hi - self.lo);
         let idx = ((t * nb as f64).floor() as i64).clamp(0, nb as i64 - 1) as usize;
@@ -247,6 +268,30 @@ mod tests {
         assert_eq!(h.bins[0], 2);
         assert_eq!(h.bins[9], 2);
         assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn summary_skips_and_counts_nan() {
+        let mut s = Summary::new();
+        s.add(1.0);
+        s.add(f64::NAN);
+        s.add(3.0);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.nan_count(), 1);
+        assert!((s.mean() - 2.0).abs() < 1e-12, "mean must not be poisoned");
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!(s.variance().is_finite());
+    }
+
+    #[test]
+    fn histogram_skips_and_counts_nan() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(f64::NAN);
+        h.add(0.5);
+        assert_eq!(h.bins[0], 1, "NaN must not be misfiled into bin 0");
+        assert_eq!(h.total(), 1);
+        assert_eq!(h.nans, 1);
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! End-to-end tests for conversion-avoiding sparse capture through the
+//! serving stack: a coordinator built with `sparse_capture = true` must
+//! produce logits bit-identical to a dense-capture coordinator under
+//! `NoiseModel::None`, while its shutdown report's `energy:` line shows
+//! nonzero `skipped-dac=` / `skipped-adc=` and strictly fewer performed
+//! conversions on a sparse workload.
+//!
+//! Serves `synthetic-mlp` (seeded in-process weights), so no artifacts.
+
+use std::collections::BTreeMap;
+
+use rns_analog::analog::NoiseModel;
+use rns_analog::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use rns_analog::nn::models::{Batch, SYNTHETIC_MLP};
+use rns_analog::tensor::{MatF, Nhwc};
+use rns_analog::util::rng::Rng;
+
+fn cfg(sparse: bool) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(
+        BackendKind::Rns { bits: 6, redundant: 0, attempts: 1, noise: NoiseModel::None },
+        "/nonexistent",
+    );
+    cfg.workers = 2;
+    cfg.seed = 11;
+    cfg.sparse_capture = sparse;
+    cfg
+}
+
+/// Request #i: even ids are all-zero images (whole-row ADC skips), odd
+/// ids are dense uniform(0,1) pixels.
+fn input(i: u64) -> Batch {
+    if i % 2 == 0 {
+        return Batch::Images(Nhwc::zeros(1, 28, 28, 1));
+    }
+    let mut rng = Rng::seed_from(0xFACE ^ i);
+    Batch::Images(Nhwc::from_vec(
+        1,
+        28,
+        28,
+        1,
+        (0..28 * 28).map(|_| rng.uniform_f32(0.0, 1.0)).collect(),
+    ))
+}
+
+/// Serve the standard 16-request mixed workload; logits keyed by request
+/// id plus the final report.
+fn run(sparse: bool) -> (BTreeMap<u64, MatF>, String) {
+    let coord = Coordinator::start(cfg(sparse));
+    let n = 16u64;
+    let ids: Vec<u64> = (0..n).map(|i| coord.submit(SYNTHETIC_MLP, input(i))).collect();
+    let mut by_id = BTreeMap::new();
+    for resp in coord.collect(n as usize) {
+        by_id.insert(resp.id, resp.result.expect("request must succeed"));
+    }
+    assert_eq!(by_id.len(), ids.len());
+    (by_id, coord.shutdown())
+}
+
+/// Pull `key=<u64>` off the report's `energy:` line.
+fn energy_metric(report: &str, key: &str) -> u64 {
+    let line = report
+        .lines()
+        .find(|l| l.starts_with("energy: "))
+        .unwrap_or_else(|| panic!("no energy: line in report:\n{report}"));
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&format!("{key}=")))
+        .unwrap_or_else(|| panic!("no {key}= on energy line: {line}"))
+        .parse()
+        .unwrap_or_else(|_| panic!("unparsable {key}= on energy line: {line}"))
+}
+
+#[test]
+fn sparse_serving_is_bit_identical_and_reports_skips() {
+    let (dense_logits, dense_report) = run(false);
+    let (sparse_logits, sparse_report) = run(true);
+
+    // logits bit-identical request-by-request (NoiseModel::None: sparse
+    // capture may not change a single ulp)
+    for (id, d) in &dense_logits {
+        let s = &sparse_logits[id];
+        assert_eq!(d.data, s.data, "request {id}: logits diverged under sparse capture");
+    }
+
+    // the sparse run skipped real work and says so on the energy line
+    let skipped_dac = energy_metric(&sparse_report, "skipped-dac");
+    let skipped_adc = energy_metric(&sparse_report, "skipped-adc");
+    assert!(skipped_dac > 0, "zero-image workload must skip DACs:\n{sparse_report}");
+    assert!(skipped_adc > 0, "all-zero rows must skip ADC capture:\n{sparse_report}");
+
+    // dense mode never skips
+    assert_eq!(energy_metric(&dense_report, "skipped-dac"), 0);
+    assert_eq!(energy_metric(&dense_report, "skipped-adc"), 0);
+
+    // strictly fewer conversions actually performed on the sparse run,
+    // and the skips account exactly for the difference
+    let dense_dac = energy_metric(&dense_report, "dac-conversions");
+    let dense_adc = energy_metric(&dense_report, "adc-conversions");
+    let sparse_dac = energy_metric(&sparse_report, "dac-conversions");
+    let sparse_adc = energy_metric(&sparse_report, "adc-conversions");
+    assert!(sparse_dac < dense_dac, "dac {sparse_dac} !< {dense_dac}");
+    assert!(sparse_adc < dense_adc, "adc {sparse_adc} !< {dense_adc}");
+    assert_eq!(sparse_dac + skipped_dac, dense_dac, "dac skips must account for the gap");
+    assert_eq!(sparse_adc + skipped_adc, dense_adc, "adc skips must account for the gap");
+}
+
+#[test]
+fn dense_traffic_through_sparse_capture_is_safe() {
+    // all-dense workload (the chaos-smoke shape): sparse capture must be
+    // a correctness no-op; element-level DAC skips may still occur from
+    // hidden-layer ReLU zeros, but no row may be wrongly dropped
+    let coord_dense = Coordinator::start(cfg(false));
+    let coord_sparse = Coordinator::start(cfg(true));
+    for i in 0..6u64 {
+        let img = input(2 * i + 1); // odd ids: dense uniform pixels
+        coord_dense.submit(SYNTHETIC_MLP, img);
+        coord_sparse.submit(SYNTHETIC_MLP, input(2 * i + 1));
+    }
+    let mut d: Vec<_> = coord_dense.collect(6).into_iter().map(|r| (r.id, r.result.unwrap())).collect();
+    let mut s: Vec<_> = coord_sparse.collect(6).into_iter().map(|r| (r.id, r.result.unwrap())).collect();
+    d.sort_by_key(|(id, _)| *id);
+    s.sort_by_key(|(id, _)| *id);
+    for ((di, dm), (si, sm)) in d.iter().zip(&s) {
+        assert_eq!(di, si);
+        assert_eq!(dm.data, sm.data, "request {di}: dense traffic diverged");
+    }
+    coord_dense.shutdown();
+    coord_sparse.shutdown();
+}

@@ -177,6 +177,79 @@ fn pool_gemm_bit_identical_to_serial_scoped_and_fabric() {
     assert!(fabric.stats().jobs > 0, "fabric cores must route fan-outs through the fabric");
 }
 
+/// Sparse capture must not disturb the engine-equivalence contract: the
+/// serial, persistent-pool, and shared-fabric engines run the identical
+/// skip logic (the mask is computed from clean channel outputs, which
+/// all engines produce bit-identically), so outputs, energy meters —
+/// including `skipped_dac` / `skipped_adc` — and fault stats — including
+/// `skipped_rows` — must agree exactly on a seeded 50%-zero-row workload.
+#[test]
+fn sparse_skip_counters_identical_across_engines_and_decode_paths() {
+    let mut rng = Rng::seed_from(4);
+    let mut x = rand_mat(&mut rng, 16, 256, 1.0);
+    let w = rand_mat(&mut rng, 256, 64, 0.5);
+    // zero half the sample rows so whole-row ADC skips actually fire
+    for r in (0..x.rows).step_by(2) {
+        x.row_mut(r).fill(0.0);
+    }
+    let fabric = Arc::new(ExecutionFabric::with_threads(4, 2));
+    let mk_cfg = || {
+        RnsCoreConfig::for_bits(8, 128)
+            .with_noise(NoiseModel::ResidueFlip { p: 0.03 })
+            .with_rrns(2, 3)
+            .with_seed(77)
+            .with_sparse_capture(true)
+    };
+    let mut serial = RnsCore::with_engine(mk_cfg(), Box::new(NativeEngine::serial())).unwrap();
+    let mut pooled =
+        RnsCore::with_engine(mk_cfg(), Box::new(NativeEngine::with_spawn_mode(4, SpawnMode::Pool)))
+            .unwrap();
+    let mut fabbed =
+        RnsCore::with_engine(mk_cfg(), Box::new(NativeEngine::with_fabric(fabric.handle())))
+            .unwrap();
+    let ys = serial.gemm_quantized(&x, &w);
+    let yp = pooled.gemm_quantized(&x, &w);
+    let yf = fabbed.gemm_quantized(&x, &w);
+    assert_eq!(
+        ys.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        yp.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "sparse capture: pool must be bit-identical to serial"
+    );
+    assert_eq!(
+        yp.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        yf.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "sparse capture: fabric must be bit-identical to pool"
+    );
+    assert_eq!(serial.stats, pooled.stats);
+    assert_eq!(serial.stats, fabbed.stats);
+    assert!(serial.stats.skipped_rows > 0, "the zero rows must actually be skipped");
+    assert!(serial.meter.skipped_adc > 0);
+    assert!(serial.meter.skipped_dac > 0);
+    for other in [&pooled.meter, &fabbed.meter] {
+        assert_eq!(serial.meter.dac_conversions, other.dac_conversions);
+        assert_eq!(serial.meter.adc_conversions, other.adc_conversions);
+        assert_eq!(serial.meter.skipped_dac, other.skipped_dac);
+        assert_eq!(serial.meter.skipped_adc, other.skipped_adc);
+        assert_eq!(serial.meter.total_joules().to_bits(), other.total_joules().to_bits());
+    }
+
+    // decode-path identity: the batched two-tier RRNS decode and the
+    // per-element reference decoder must perform (and skip) the same
+    // conversions on the same sparse workload — conversion counts are a
+    // capture-time property, decided before decode runs
+    let clean = || RnsCoreConfig::for_bits(8, 128).with_rrns(2, 2).with_sparse_capture(true);
+    let mut batched = RnsCore::new(clean()).unwrap();
+    let mut reference = RnsCore::new(clean().with_reference_decode(true)).unwrap();
+    let yb = batched.gemm_quantized(&x, &w);
+    let yr = reference.gemm_quantized(&x, &w);
+    assert_eq!(yb.data, yr.data, "decode paths must agree on sparse input");
+    assert_eq!(batched.meter.dac_conversions, reference.meter.dac_conversions);
+    assert_eq!(batched.meter.adc_conversions, reference.meter.adc_conversions);
+    assert_eq!(batched.meter.skipped_dac, reference.meter.skipped_dac);
+    assert_eq!(batched.meter.skipped_adc, reference.meter.skipped_adc);
+    assert_eq!(batched.stats.skipped_rows, reference.stats.skipped_rows);
+}
+
 /// Cores with different moduli configurations can share one store
 /// without collisions, and gemm through a store-shared plan matches a
 /// private-store core exactly.

@@ -59,6 +59,15 @@ HEADLINES = [
         "serve/coordinator 24 reqs synthetic-mlp rns-b6 in-process",
         "serve/gateway loopback 24 reqs synthetic-mlp rns-b6",
     ),
+    # sparse: conversion-avoiding capture on a 50%-zero-row workload must
+    # beat dense capture (it skips DAC forward + ADC recapture + CRT decode
+    # for the zero rows); the CI gate (sparse >= 1.05) catches the skip
+    # machinery silently degrading into pure overhead.
+    (
+        "sparse",
+        "micro/sparse rns gemm 16x128x64 50pct-zero dense-capture",
+        "micro/sparse rns gemm 16x128x64 50pct-zero sparse-capture",
+    ),
 ]
 
 
