@@ -37,6 +37,7 @@ fn main() {
     let deadline_ms = args.get_parsed::<u32>("deadline-ms", 0).unwrap();
     let token = args.get_or("token", "");
     let shutdown = args.flag("shutdown");
+    let traces = args.flag("traces");
     if let Err(e) = args.check_unknown() {
         eprintln!("{e}");
         std::process::exit(2);
@@ -125,6 +126,12 @@ fn main() {
     let stats = admin.stats().expect("stats");
     for prefix in ["gateway:", "supervision:"] {
         if let Some(line) = stats.lines().find(|l| l.starts_with(prefix)) {
+            println!("server: {}", line.trim());
+        }
+    }
+    if traces {
+        let report = admin.traces().expect("traces");
+        for line in report.lines() {
             println!("server: {}", line.trim());
         }
     }

@@ -18,6 +18,28 @@ pub use rns_core::{FaultStats, InjectionSite, RnsCore, RnsCoreConfig};
 use crate::tensor::gemm::gemm_f32;
 use crate::tensor::MatF;
 
+/// Cumulative wall-clock microseconds a backend has spent in each
+/// pipeline stage of the analog dataflow (DAC forward conversion →
+/// analog modular GEMM → ADC capture → decode).  The serving tier reads
+/// this per batch, takes deltas, and feeds the per-stage latency
+/// histograms — the same delta discipline `EnergyMeter`/`FaultStats`
+/// already follow, so a crashed partial forward never lands.
+///
+/// Decode time includes tier-2 voting retries (their ADC recompute
+/// draws happen inside the decode loop, and splitting them out would
+/// cost one `Instant::now()` per retried element on the hot path).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageMicros {
+    /// Activation (and unprepared-path weight) forward conversion.
+    pub dac_forward_us: u64,
+    /// Modular MVM across all residue channels (the engine call).
+    pub analog_gemm_us: u64,
+    /// ADC recapture of the channel outputs (noise application).
+    pub adc_capture_us: u64,
+    /// CRT / RRNS two-tier decode, incl. voting retries.
+    pub decode_us: u64,
+}
+
 /// A GEMM execution backend: the FP32 reference, the fixed-point analog
 /// core, or the RNS analog core.  The nn layer routes every GEMM in a
 /// model through one of these, which is how the accuracy experiments swap
@@ -52,6 +74,11 @@ pub trait GemmBackend {
     }
     /// RRNS fault counters, if this backend runs the fault-tolerant core.
     fn fault_stats(&self) -> Option<rns_core::FaultStats> {
+        None
+    }
+    /// Cumulative per-stage wall-clock timers, if this backend times its
+    /// pipeline stages (the RNS core does; stateless backends don't).
+    fn stage_micros(&self) -> Option<StageMicros> {
         None
     }
 }

@@ -49,11 +49,12 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Weak};
+use std::time::Instant;
 
 use crate::analog::energy::EnergyMeter;
 use crate::analog::mvm_unit::RnsMvmUnit;
 use crate::analog::noise::NoiseModel;
-use crate::analog::GemmBackend;
+use crate::analog::{GemmBackend, StageMicros};
 use crate::quant::{dequantize, quantize_activations, quantize_weights};
 use crate::rns::inject::{FaultInjector, FaultSpec};
 use crate::rns::moduli::{extend_moduli, required_output_bits, select_moduli};
@@ -68,6 +69,13 @@ use crate::util::rng::Rng;
 /// `adopted` map size below which dead-entry purging is skipped (keeps
 /// the amortized purge from thrashing on small models).
 const ADOPTED_PURGE_FLOOR: usize = 64;
+
+/// Whole microseconds since `t0` (saturating cast; a stage timer that
+/// somehow exceeds u64 µs has bigger problems than truncation).
+#[inline]
+fn elapsed_us(t0: Instant) -> u64 {
+    t0.elapsed().as_micros() as u64
+}
 
 /// Configuration for one RNS-based core instance.
 #[derive(Clone, Debug)]
@@ -234,6 +242,10 @@ pub struct RnsCore {
     engine: Box<dyn ModularGemmEngine>,
     pub meter: EnergyMeter,
     pub stats: FaultStats,
+    /// Cumulative per-stage wall-clock timers (DAC forward, analog GEMM,
+    /// ADC capture, decode) — the serving tier reads batch deltas the
+    /// same way it reads `meter`/`stats` deltas.
+    pub stage_us: StageMicros,
     rng: Rng,
     /// Shared (or private) read-only plan store this core borrows from.
     store: Arc<PlanStore>,
@@ -318,6 +330,7 @@ impl RnsCore {
             engine,
             meter: EnergyMeter::default(),
             stats: FaultStats::default(),
+            stage_us: StageMicros::default(),
             rng,
             store,
             adopted: HashMap::new(),
@@ -485,19 +498,27 @@ impl RnsCore {
     /// output).  Only activations are converted here; the weight side
     /// comes pre-staged from the plan.
     fn tile_mvm_prepared(&mut self, xt: &MatI, wt: &PreparedWeights) -> MatI {
+        let t0 = Instant::now();
         let (xr, zero_rows) = self.forward_activations(xt);
+        self.stage_us.dac_forward_us += elapsed_us(t0);
         // clean channel outputs (the engine is the ideal analog array)
+        let t1 = Instant::now();
         let clean = self.engine.matmul_mod_prepared(&xr, wt);
+        self.stage_us.analog_gemm_us += elapsed_us(t1);
         self.capture_and_decode(clean, zero_rows)
     }
 
     /// One unprepared tile: forward-converts both operands (reference path).
     fn tile_mvm_unprepared(&mut self, xt: &MatI, wt: &MatI) -> MatI {
+        let t0 = Instant::now();
         let (xr, zero_rows) = self.forward_activations(xt);
         let moduli = &self.all_ctx.moduli;
         let wr: Vec<MatI> =
             moduli.iter().map(|&m| forward_residues(wt, m, self.cfg.bits)).collect();
+        self.stage_us.dac_forward_us += elapsed_us(t0);
+        let t1 = Instant::now();
         let clean = self.engine.matmul_mod(&xr, &wr, moduli);
+        self.stage_us.analog_gemm_us += elapsed_us(t1);
         self.capture_and_decode(clean, zero_rows)
     }
 
@@ -573,10 +594,12 @@ impl RnsCore {
                 return self.capture_and_decode_masked(clean, &skip);
             }
         }
+        let t0 = Instant::now();
         let mut captured: Vec<MatI> = Vec::with_capacity(clean.len());
         for (u, ch) in self.units.iter().zip(&clean) {
             captured.push(u.recapture(ch, &mut self.rng, &mut self.meter));
         }
+        self.stage_us.adc_capture_us += elapsed_us(t0);
         // capture-side drift corrupts the captured residues only: the
         // retry loop recomputes from `clean` (plus the noise model), so
         // a detected injected fault is recoverable by recompute
@@ -585,7 +608,10 @@ impl RnsCore {
                 inj.corrupt_tile(&mut captured, &self.all_ctx.moduli);
             }
         }
-        self.decode_tile(&clean, captured)
+        let t1 = Instant::now();
+        let out = self.decode_tile(&clean, captured);
+        self.stage_us.decode_us += elapsed_us(t1);
+        out
     }
 
     /// Sparse capture with at least one verified structurally-zero row:
@@ -619,16 +645,20 @@ impl RnsCore {
             out
         };
         let clean_kept: Vec<MatI> = clean.iter().map(compact).collect();
+        let t0 = Instant::now();
         let mut captured: Vec<MatI> = Vec::with_capacity(clean_kept.len());
         for (u, ch) in self.units.iter().zip(&clean_kept) {
             captured.push(u.recapture(ch, &mut self.rng, &mut self.meter));
         }
+        self.stage_us.adc_capture_us += elapsed_us(t0);
         if self.cfg.fault_site == InjectionSite::Capture {
             if let Some(inj) = &mut self.injector {
                 inj.corrupt_tile(&mut captured, &self.all_ctx.moduli);
             }
         }
+        let t1 = Instant::now();
         let decoded = self.decode_tile(&clean_kept, captured);
+        self.stage_us.decode_us += elapsed_us(t1);
         let mut out = MatI::zeros(rows, cols);
         for (src, &dst) in kept.iter().enumerate() {
             out.row_mut(dst).copy_from_slice(decoded.row(src));
@@ -789,6 +819,9 @@ impl GemmBackend for RnsCore {
     }
     fn fault_stats(&self) -> Option<FaultStats> {
         Some(self.stats)
+    }
+    fn stage_micros(&self) -> Option<StageMicros> {
+        Some(self.stage_us)
     }
 }
 

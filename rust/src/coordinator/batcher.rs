@@ -53,6 +53,11 @@ pub struct FormedBatch {
     /// the supervisor on each redispatch; at `poison_threshold` the batch
     /// is quarantined (typed `Poisoned` reject) instead of redispatched.
     pub crashes: u32,
+    /// When `pop_ready` formed this batch: the boundary between a
+    /// member's `queue` stage (submit → formation) and the batch's
+    /// `batch_form` stage (formation → worker pickup) in the per-stage
+    /// latency histograms and request traces.
+    pub formed_at: Instant,
 }
 
 /// One model's FIFO slot (created on first sight of a model; removed
@@ -170,7 +175,7 @@ impl DynamicBatcher {
             mq.empty_since = Some(now); // compaction countdown starts now
         }
         let input = concat_inputs(members.iter().map(|(r, _)| &r.input));
-        Some(FormedBatch { model, input, members, crashes: 0 })
+        Some(FormedBatch { model, input, members, crashes: 0, formed_at: now })
     }
 
     /// Remove and return every queued request whose deadline has already

@@ -31,6 +31,8 @@
 //! stall_timeout_ms = 30000        # supervisor heartbeat stall threshold
 //! poison_threshold = 2            # crashes before a batch is quarantined
 //! default_deadline_ms = 0         # server-side request deadline (0 = none)
+//! trace_slots = 16                # slowest-request trace ring size
+//!                                 # (0 = tracing off)
 //! chaos = ""                      # seeded fault injection, e.g.
 //!                                 # "panic@w0:b3,drop@s1:f2" (tests/CI only)
 //! ```
@@ -123,6 +125,11 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
         out.default_deadline = Some(Duration::from_millis(deadline_ms as u64));
     }
     out.chaos = chaos_from_config(cfg)?;
+    let trace_slots = cfg.int_or("serve.trace_slots", out.trace_slots as i64);
+    if trace_slots < 0 {
+        return Err("serve.trace_slots must be >= 0 (0 = tracing off)".into());
+    }
+    out.trace_slots = trace_slots as usize;
     Ok(out)
 }
 
@@ -241,6 +248,7 @@ fabric_threads = 6
         assert_eq!(cc.stall_timeout, Duration::from_secs(30));
         assert_eq!(cc.poison_threshold, 2);
         assert!(cc.default_deadline.is_none());
+        assert_eq!(cc.trace_slots, crate::coordinator::metrics::DEFAULT_TRACE_SLOTS);
         assert!(cc.chaos.is_empty());
         assert!(!cc.sparse_capture, "sparse capture defaults off");
     }
@@ -249,13 +257,15 @@ fabric_threads = 6
     fn supervision_block_parses() {
         let cfg = Config::parse(
             "[serve]\nstall_timeout_ms = 250\npoison_threshold = 1\n\
-             default_deadline_ms = 40\nchaos = \"panic@w0:b3, stall@w1:b2:50ms\"\n",
+             default_deadline_ms = 40\ntrace_slots = 4\n\
+             chaos = \"panic@w0:b3, stall@w1:b2:50ms\"\n",
         )
         .unwrap();
         let cc = from_config(&cfg, "/tmp/a").unwrap();
         assert_eq!(cc.stall_timeout, Duration::from_millis(250));
         assert_eq!(cc.poison_threshold, 1);
         assert_eq!(cc.default_deadline, Some(Duration::from_millis(40)));
+        assert_eq!(cc.trace_slots, 4);
         assert_eq!(cc.chaos.events.len(), 2);
         // a malformed chaos spec is a config error, not a silent no-op
         let bad = Config::parse("[serve]\nchaos = \"panic@nonsense\"\n").unwrap();
@@ -287,6 +297,7 @@ fabric_threads = 6
             "[serve]\nstall_timeout_ms = 0",
             "[serve]\npoison_threshold = 0",
             "[serve]\ndefault_deadline_ms = -5",
+            "[serve]\ntrace_slots = -1",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(from_config(&cfg, "/tmp/a").is_err(), "{bad}");

@@ -2,12 +2,28 @@
 //! globally and per model — plus the shared plan store's hit/miss and
 //! residency counters, the execution fabric's utilization, and the
 //! control plane's proactive-unload counters in the shutdown report.
+//!
+//! Since PR 8 the counters themselves live in a typed
+//! [`MetricRegistry`](crate::util::metrics::MetricRegistry): every
+//! `ServingMetrics` field is an `Arc<Counter>` handle into one shared
+//! registry, the human-readable report reads those same atomics, and
+//! the gateway's `/metrics?format=prometheus` endpoint renders the same
+//! registry as text exposition — one source of truth, so the exposition
+//! and every PR-2..PR-7 report-line parser agree exactly.
+//!
+//! The registry also carries the per-stage pipeline latency histograms
+//! (`rns_stage_latency_us{stage=...}`: admission → queue → batch-form →
+//! DAC forward → analog GEMM → ADC capture → decode → delivery) and a
+//! bounded ring of the slowest request traces (`trace:` report lines,
+//! queryable over the wire via the `Traces` frame).
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::runtime::fabric::FabricStats;
 use crate::store::{ModelPlanStats, StoreStats};
+use crate::util::metrics::{Counter, Gauge, Histogram, MetricRegistry, LATENCY_BUCKETS_US};
 use crate::util::stats::Reservoir;
 
 /// Latency/queue/batch-size samples kept for percentile estimation.
@@ -15,6 +31,21 @@ use crate::util::stats::Reservoir;
 /// PR-2 `Percentiles` vectors grew one entry per request forever); 4096
 /// samples keep p99 well inside a percent of the exact value.
 const RESERVOIR_CAP: usize = 4096;
+
+/// Slowest-request traces kept by default (`serve.trace_slots`).
+pub const DEFAULT_TRACE_SLOTS: usize = 16;
+
+/// The per-stage latency histogram family (shared with the gateway,
+/// which observes the `admission` stage into the same family).
+pub const STAGE_FAMILY: &str = "rns_stage_latency_us";
+const STAGE_HELP: &str = "Pipeline stage latency in microseconds";
+
+/// Get-or-register the stage histogram for one pipeline stage.  One
+/// function so the gateway (admission) and the workers (everything
+/// else) land in the same family with the same buckets.
+pub fn stage_histogram(registry: &MetricRegistry, stage: &str) -> Arc<Histogram> {
+    registry.histogram_labeled(STAGE_FAMILY, STAGE_HELP, "stage", stage, &LATENCY_BUCKETS_US)
+}
 
 /// Decode / fault / plan counters attributed to one model's batches.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -30,49 +61,226 @@ pub struct ModelServingStats {
     pub plans_adopted: u64,
 }
 
+/// Registry-backed per-model counters (label-bounded: model names).
+struct ModelCounters {
+    batches: Arc<Counter>,
+    faults_detected: Arc<Counter>,
+    faults_corrected: Arc<Counter>,
+    decode_fast_path: Arc<Counter>,
+    decode_voted: Arc<Counter>,
+    plans_adopted: Arc<Counter>,
+}
+
+impl ModelCounters {
+    fn register(registry: &MetricRegistry, model: &str) -> Self {
+        let c = |name: &str, help: &str| registry.counter_labeled(name, help, "model", model);
+        ModelCounters {
+            batches: c("rns_model_batches_total", "Batches served per model"),
+            faults_detected: c("rns_model_faults_detected_total", "RRNS detections per model"),
+            faults_corrected: c("rns_model_faults_corrected_total", "RRNS corrections per model"),
+            decode_fast_path: c(
+                "rns_model_decode_fast_path_total",
+                "Fast-path decoded elements per model",
+            ),
+            decode_voted: c("rns_model_decode_voted_total", "Voted decoded elements per model"),
+            plans_adopted: c("rns_model_plans_adopted_total", "Plan adoptions per model"),
+        }
+    }
+
+    fn snapshot(&self) -> ModelServingStats {
+        ModelServingStats {
+            batches: self.batches.get(),
+            faults_detected: self.faults_detected.get(),
+            faults_corrected: self.faults_corrected.get(),
+            decode_fast_path: self.decode_fast_path.get(),
+            decode_voted: self.decode_voted.get(),
+            plans_adopted: self.plans_adopted.get(),
+        }
+    }
+}
+
+/// Per-stage latency histograms the workers/dispatcher observe into
+/// (the gateway adds the `admission` stage from its side).
+pub struct StageHistograms {
+    pub queue: Arc<Histogram>,
+    pub batch_form: Arc<Histogram>,
+    pub dac_forward: Arc<Histogram>,
+    pub analog_gemm: Arc<Histogram>,
+    pub adc_capture: Arc<Histogram>,
+    pub decode: Arc<Histogram>,
+    pub delivery: Arc<Histogram>,
+}
+
+impl StageHistograms {
+    fn register(registry: &MetricRegistry) -> Self {
+        StageHistograms {
+            queue: stage_histogram(registry, "queue"),
+            batch_form: stage_histogram(registry, "batch_form"),
+            dac_forward: stage_histogram(registry, "dac_forward"),
+            analog_gemm: stage_histogram(registry, "analog_gemm"),
+            adc_capture: stage_histogram(registry, "adc_capture"),
+            decode: stage_histogram(registry, "decode"),
+            delivery: stage_histogram(registry, "delivery"),
+        }
+    }
+}
+
+/// One request's per-stage timing breakdown (microseconds).  Batch-wide
+/// stages (form, DAC, GEMM, ADC, decode, delivery) are attributed to
+/// every member of the batch — the trace answers "what did this request
+/// wait on", and it waited on its whole batch.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RequestTrace {
+    pub id: u64,
+    pub model: String,
+    pub samples: usize,
+    pub worker: usize,
+    /// Submit → delivery, the request's full latency.
+    pub total_us: u64,
+    pub queue_us: u64,
+    pub batch_form_us: u64,
+    pub dac_us: u64,
+    pub gemm_us: u64,
+    pub adc_us: u64,
+    pub decode_us: u64,
+    pub delivery_us: u64,
+}
+
+impl RequestTrace {
+    fn render(&self) -> String {
+        format!(
+            "trace: id={} model={} samples={} worker={} total={}µs queue={}µs form={}µs \
+             dac={}µs gemm={}µs adc={}µs decode={}µs delivery={}µs",
+            self.id,
+            self.model,
+            self.samples,
+            self.worker,
+            self.total_us,
+            self.queue_us,
+            self.batch_form_us,
+            self.dac_us,
+            self.gemm_us,
+            self.adc_us,
+            self.decode_us,
+            self.delivery_us,
+        )
+    }
+}
+
+/// Bounded keep-the-slowest ring: offers replace the current fastest
+/// entry once the ring is full, so memory is O(cap) however long the
+/// server runs and the retained set is always the slowest-N seen.
+pub struct TraceRing {
+    cap: usize,
+    slots: Vec<RequestTrace>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing { cap, slots: Vec::with_capacity(cap.min(64)) }
+    }
+
+    pub fn offer(&mut self, t: RequestTrace) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.slots.len() < self.cap {
+            self.slots.push(t);
+            return;
+        }
+        let (idx, fastest) = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| s.total_us)
+            .map(|(i, s)| (i, s.total_us))
+            .expect("non-empty ring");
+        if t.total_us > fastest {
+            self.slots[idx] = t;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Slowest-first trace lines, headed by a `slow traces:` summary.
+    pub fn render(&self) -> String {
+        let mut out = format!("slow traces: kept={} cap={}", self.slots.len(), self.cap);
+        let mut sorted: Vec<&RequestTrace> = self.slots.iter().collect();
+        sorted.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.id.cmp(&b.id)));
+        for t in sorted {
+            out.push('\n');
+            out.push_str(&t.render());
+        }
+        out
+    }
+}
+
 pub struct ServingMetrics {
-    pub requests: u64,
-    pub samples: u64,
-    pub batches: u64,
-    pub failures: u64,
-    pub faults_detected: u64,
-    pub faults_corrected: u64,
+    /// The typed registry every counter below lives in; the gateway and
+    /// the Prometheus endpoint render this same registry.
+    registry: Arc<MetricRegistry>,
+    pub requests: Arc<Counter>,
+    pub samples: Arc<Counter>,
+    pub batches: Arc<Counter>,
+    pub failures: Arc<Counter>,
+    pub faults_detected: Arc<Counter>,
+    pub faults_corrected: Arc<Counter>,
     /// RRNS elements decoded by the batched no-fault fast path vs the
     /// per-element voting fallback (two-tier decode; fast/(fast+voted)
     /// near 1.0 is the healthy steady state for clean hardware).
-    pub decode_fast_path: u64,
-    pub decode_voted: u64,
+    pub decode_fast_path: Arc<Counter>,
+    pub decode_voted: Arc<Counter>,
+    /// Elements still undecodable after `max_attempts` (best-effort CRT
+    /// fallback) — the live health signal of the analog array.
+    pub decode_exhausted: Arc<Counter>,
     /// Per-layer RNS plans adopted across all workers (plateaus at
     /// workers × model layers — adoption is per worker; the shared plan
     /// store's `builds` counter shows the deduplicated build count).
-    pub plans_built: u64,
+    pub plans_built: Arc<Counter>,
     /// Data-converter activity summed across workers (exact integer
     /// conversion counts from each core's `EnergyMeter` — deterministic,
     /// which is what lets the gateway tests compare a served stream
     /// against the in-process path down to the converter count).
-    pub energy_dac_conversions: u64,
-    pub energy_adc_conversions: u64,
+    pub energy_dac_conversions: Arc<Counter>,
+    pub energy_adc_conversions: Arc<Counter>,
     /// Conversions sparse capture proved unnecessary and skipped (zero
     /// activations / structurally-zero output rows); always 0 unless the
     /// backend runs with `sparse_capture` on.
-    pub energy_skipped_dac: u64,
-    pub energy_skipped_adc: u64,
+    pub energy_skipped_dac: Arc<Counter>,
+    pub energy_skipped_adc: Arc<Counter>,
     /// Proactive unloads issued through the worker control plane, and
     /// how many worker-held model instances they released (a worker that
     /// never held the model acks without a release).
-    pub unload_requests: u64,
-    pub proactive_releases: u64,
+    pub unload_requests: Arc<Counter>,
+    pub proactive_releases: Arc<Counter>,
     /// Supervision counters (PR 6): worker threads replaced (crash or
     /// stall), stalls among them, crashed in-flight batches replayed on a
     /// healthy slot, batches quarantined at the poison threshold, and
     /// requests failed with the typed `DeadlineExceeded`.
-    pub respawns: u64,
-    pub stalls: u64,
-    pub redispatched: u64,
-    pub poisoned: u64,
-    pub deadline_exceeded: u64,
+    pub respawns: Arc<Counter>,
+    pub stalls: Arc<Counter>,
+    pub redispatched: Arc<Counter>,
+    pub poisoned: Arc<Counter>,
+    pub deadline_exceeded: Arc<Counter>,
+    /// Requests currently queued in the dynamic batcher (set by the
+    /// dispatcher each loop iteration).
+    pub queue_depth: Arc<Gauge>,
+    /// End-to-end request latency histogram (submit → delivery).
+    pub request_latency: Arc<Histogram>,
+    /// Per-stage pipeline latency histograms.
+    pub stage: StageHistograms,
     /// Same counters keyed by model (BTreeMap: stable report order).
-    per_model: BTreeMap<String, ModelServingStats>,
+    per_model: BTreeMap<String, ModelCounters>,
     /// Plan-store snapshot attached at shutdown.
     plan_store: Option<(StoreStats, Vec<ModelPlanStats>)>,
     /// Execution-fabric snapshot attached at shutdown (native RNS
@@ -81,6 +289,8 @@ pub struct ServingMetrics {
     /// TCP gateway snapshot (sessions/frames/latency), attached by the
     /// gateway before it renders a live or shutdown report.
     gateway: Option<GatewayReport>,
+    /// Slowest-N request traces (bounded ring; `trace:` report lines).
+    traces: TraceRing,
     latency_us: Reservoir,
     queue_us: Reservoir,
     batch_sizes: Reservoir,
@@ -88,37 +298,7 @@ pub struct ServingMetrics {
 
 impl Default for ServingMetrics {
     fn default() -> Self {
-        ServingMetrics {
-            requests: 0,
-            samples: 0,
-            batches: 0,
-            failures: 0,
-            faults_detected: 0,
-            faults_corrected: 0,
-            decode_fast_path: 0,
-            decode_voted: 0,
-            plans_built: 0,
-            energy_dac_conversions: 0,
-            energy_adc_conversions: 0,
-            energy_skipped_dac: 0,
-            energy_skipped_adc: 0,
-            unload_requests: 0,
-            proactive_releases: 0,
-            respawns: 0,
-            stalls: 0,
-            redispatched: 0,
-            poisoned: 0,
-            deadline_exceeded: 0,
-            per_model: BTreeMap::new(),
-            plan_store: None,
-            fabric: None,
-            gateway: None,
-            // fixed seeds: replacement decisions must not depend on how
-            // many samples a previous run saw
-            latency_us: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A7),
-            queue_us: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A8),
-            batch_sizes: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A9),
-        }
+        ServingMetrics::with_registry(Arc::new(MetricRegistry::new()))
     }
 }
 
@@ -140,8 +320,97 @@ pub struct GatewayReport {
 }
 
 impl ServingMetrics {
+    /// Build the serving counters inside `registry` (one registry per
+    /// coordinator; `Default` makes a private one for tests/standalone).
+    pub fn with_registry(registry: Arc<MetricRegistry>) -> Self {
+        let c = |name: &str, help: &str| registry.counter(name, help);
+        ServingMetrics {
+            requests: c("rns_requests_total", "Requests answered (ok + failed)"),
+            samples: c("rns_samples_total", "Input samples across all requests"),
+            batches: c("rns_batches_total", "Hardware batches formed"),
+            failures: c("rns_failures_total", "Requests answered with an error"),
+            faults_detected: c("rns_faults_detected_total", "RRNS Case-2 detections"),
+            faults_corrected: c("rns_faults_corrected_total", "RRNS majority corrections"),
+            decode_fast_path: c(
+                "rns_decode_fast_path_total",
+                "Elements decoded by the batched no-fault fast path",
+            ),
+            decode_voted: c(
+                "rns_decode_voted_total",
+                "Elements decoded by the per-element voting fallback",
+            ),
+            decode_exhausted: c(
+                "rns_decode_exhausted_total",
+                "Elements undecodable after max_attempts (best-effort fallback)",
+            ),
+            plans_built: c("rns_plans_built_total", "Per-layer plan adoptions across workers"),
+            energy_dac_conversions: c("rns_dac_conversions_total", "DAC conversions"),
+            energy_adc_conversions: c("rns_adc_conversions_total", "ADC conversions"),
+            energy_skipped_dac: c(
+                "rns_dac_conversions_skipped_total",
+                "DAC conversions skipped by sparse capture",
+            ),
+            energy_skipped_adc: c(
+                "rns_adc_conversions_skipped_total",
+                "ADC conversions skipped by sparse capture",
+            ),
+            unload_requests: c("rns_unloads_total", "Proactive control-plane unloads"),
+            proactive_releases: c(
+                "rns_unload_releases_total",
+                "Worker-held model instances released by unloads",
+            ),
+            respawns: c("rns_supervision_respawns_total", "Worker threads replaced"),
+            stalls: c("rns_supervision_stalls_total", "Stalled workers superseded"),
+            redispatched: c(
+                "rns_supervision_redispatched_total",
+                "Crashed in-flight batches replayed on a healthy slot",
+            ),
+            poisoned: c(
+                "rns_supervision_poisoned_total",
+                "Batches quarantined at the poison threshold",
+            ),
+            deadline_exceeded: c(
+                "rns_deadline_exceeded_total",
+                "Requests failed with DeadlineExceeded",
+            ),
+            queue_depth: registry.gauge("rns_queue_depth", "Requests queued in the batcher"),
+            request_latency: registry.histogram(
+                "rns_request_latency_us",
+                "End-to-end request latency in microseconds",
+                &LATENCY_BUCKETS_US,
+            ),
+            stage: StageHistograms::register(&registry),
+            per_model: BTreeMap::new(),
+            plan_store: None,
+            fabric: None,
+            gateway: None,
+            traces: TraceRing::new(DEFAULT_TRACE_SLOTS),
+            // fixed seeds: replacement decisions must not depend on how
+            // many samples a previous run saw
+            latency_us: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A7),
+            queue_us: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A8),
+            batch_sizes: Reservoir::new(RESERVOIR_CAP, 0x6A7E_11A9),
+            registry,
+        }
+    }
+
+    /// The shared registry (the gateway registers its counters here and
+    /// the Prometheus endpoint renders it).
+    pub fn registry(&self) -> Arc<MetricRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Resize the slow-trace ring (`serve.trace_slots`); existing
+    /// entries are re-offered so shrinking keeps the slowest.
+    pub fn set_trace_capacity(&mut self, cap: usize) {
+        let old = std::mem::replace(&mut self.traces, TraceRing::new(cap));
+        for t in old.slots {
+            self.traces.offer(t);
+        }
+    }
+
     pub fn record_batch(&mut self, batch_samples: usize) {
-        self.batches += 1;
+        self.batches.inc();
         self.batch_sizes.add(batch_samples as f64);
     }
 
@@ -156,17 +425,32 @@ impl ServingMetrics {
         decode_voted: u64,
         plans_adopted: u64,
     ) {
-        let e = self.per_model.entry(model.to_string()).or_default();
-        e.batches += 1;
-        e.faults_detected += faults_detected;
-        e.faults_corrected += faults_corrected;
-        e.decode_fast_path += decode_fast_path;
-        e.decode_voted += decode_voted;
-        e.plans_adopted += plans_adopted;
+        let registry = &self.registry;
+        let e = self
+            .per_model
+            .entry(model.to_string())
+            .or_insert_with(|| ModelCounters::register(registry, model));
+        e.batches.inc();
+        e.faults_detected.add(faults_detected);
+        e.faults_corrected.add(faults_corrected);
+        e.decode_fast_path.add(decode_fast_path);
+        e.decode_voted.add(decode_voted);
+        e.plans_adopted.add(plans_adopted);
     }
 
     pub fn model_stats(&self, model: &str) -> Option<ModelServingStats> {
-        self.per_model.get(model).copied()
+        self.per_model.get(model).map(ModelCounters::snapshot)
+    }
+
+    /// Offer one request's stage breakdown to the slowest-N ring.
+    pub fn record_trace(&mut self, t: RequestTrace) {
+        self.traces.offer(t);
+    }
+
+    /// The `slow traces:` block alone (the `Traces` wire frame's reply;
+    /// also appended to the full report).
+    pub fn traces_report(&self) -> String {
+        self.traces.render()
     }
 
     /// Attach the shared plan store's counters for the shutdown report.
@@ -189,18 +473,20 @@ impl ServingMetrics {
     /// Record one control-plane unload and how many worker-held
     /// instances it released.
     pub fn record_unload(&mut self, released: u64) {
-        self.unload_requests += 1;
-        self.proactive_releases += released;
+        self.unload_requests.inc();
+        self.proactive_releases.add(released);
     }
 
     pub fn record_response(&mut self, samples: usize, latency: Duration, queue: Duration, ok: bool) {
-        self.requests += 1;
-        self.samples += samples as u64;
+        self.requests.inc();
+        self.samples.add(samples as u64);
         if !ok {
-            self.failures += 1;
+            self.failures.inc();
         }
-        self.latency_us.add(latency.as_secs_f64() * 1e6);
+        let latency_us = latency.as_secs_f64() * 1e6;
+        self.latency_us.add(latency_us);
         self.queue_us.add(queue.as_secs_f64() * 1e6);
+        self.request_latency.observe(latency.as_micros() as u64);
     }
 
     pub fn latency_percentile_us(&mut self, q: f64) -> f64 {
@@ -212,15 +498,52 @@ impl ServingMetrics {
     }
 
     pub fn mean_batch_size(&mut self) -> f64 {
-        if self.batches == 0 { 0.0 } else { self.batch_sizes.percentile(50.0) }
+        if self.batches.get() == 0 { 0.0 } else { self.batch_sizes.percentile(50.0) }
+    }
+
+    /// Push the snapshot-sourced blocks (plan store, fabric) into the
+    /// registry so the Prometheus exposition carries them too.  Their
+    /// monotone counters sync via `raise_to` (snapshots are cumulative);
+    /// residency is a gauge.  Called right before rendering exposition.
+    pub fn sync_registry(&self) {
+        if let Some((stats, _)) = &self.plan_store {
+            let r = &self.registry;
+            r.gauge("rns_plan_store_resident_plans", "Plans resident in the shared store")
+                .set(stats.resident_plans as i64);
+            r.gauge("rns_plan_store_resident_bytes", "Bytes resident in the shared store")
+                .set(stats.resident_bytes as i64);
+            r.counter("rns_plan_store_builds_total", "Deduplicated plan builds")
+                .raise_to(stats.builds);
+            r.counter("rns_plan_store_hits_total", "Plan store hits").raise_to(stats.hits);
+            r.counter("rns_plan_store_evicted_total", "Plans evicted from the untagged LRU")
+                .raise_to(stats.evicted);
+        }
+        if let Some(f) = &self.fabric {
+            let r = &self.registry;
+            r.gauge("rns_fabric_threads", "Execution fabric total threads")
+                .set(f.total_threads as i64);
+            r.gauge("rns_fabric_helpers", "Execution fabric helper threads")
+                .set(f.helper_threads as i64);
+            r.counter("rns_fabric_jobs_total", "Jobs run on the fabric").raise_to(f.jobs);
+            r.counter("rns_fabric_tasks_total", "Tasks run on the fabric").raise_to(f.tasks);
+        }
+    }
+
+    /// Render the registry as Prometheus text exposition
+    /// (`text/plain; version=0.0.4`), syncing snapshot blocks first.
+    pub fn render_prometheus(&self) -> String {
+        self.sync_registry();
+        self.registry.render_prometheus()
     }
 
     /// Render a one-screen report (used by `serve` and the e2e example).
     /// Global lines come first and keep their PR-2 shapes (parsers key on
     /// the first occurrence of `fast-path=` etc.); per-model decode lines
-    /// and the plan-store block follow.
+    /// and the plan-store block follow.  Every value is read from the
+    /// registry counters — the same atomics the Prometheus exposition
+    /// renders, which is what keeps the two in exact agreement.
     pub fn report(&mut self, wall: Duration) -> String {
-        let thpt = self.samples as f64 / wall.as_secs_f64().max(1e-9);
+        let thpt = self.samples.get() as f64 / wall.as_secs_f64().max(1e-9);
         let mb = self.mean_batch_size();
         let (p50, p95, p99) = (
             self.latency_percentile_us(50.0),
@@ -234,42 +557,49 @@ impl ServingMetrics {
              latency p50={:.0}µs p95={:.0}µs p99={:.0}µs  queue p50={:.0}µs\n\
              layer plans built={}\n\
              faults: detected={} corrected={}\n\
-             decode: fast-path={} voted={}",
-            self.requests,
-            self.samples,
-            self.batches,
-            self.failures,
+             decode: fast-path={} voted={} exhausted={}",
+            self.requests.get(),
+            self.samples.get(),
+            self.batches.get(),
+            self.failures.get(),
             thpt,
             mb,
             p50,
             p95,
             p99,
             q50,
-            self.plans_built,
-            self.faults_detected,
-            self.faults_corrected,
-            self.decode_fast_path,
-            self.decode_voted,
+            self.plans_built.get(),
+            self.faults_detected.get(),
+            self.faults_corrected.get(),
+            self.decode_fast_path.get(),
+            self.decode_voted.get(),
+            self.decode_exhausted.get(),
         );
         // skipped-* appended after the PR-5 keys so parsers keyed on the
         // first dac-/adc-conversions occurrence keep working
         out.push_str(&format!(
             "\nenergy: dac-conversions={} adc-conversions={} skipped-dac={} skipped-adc={}",
-            self.energy_dac_conversions,
-            self.energy_adc_conversions,
-            self.energy_skipped_dac,
-            self.energy_skipped_adc,
+            self.energy_dac_conversions.get(),
+            self.energy_adc_conversions.get(),
+            self.energy_skipped_dac.get(),
+            self.energy_skipped_adc.get(),
         ));
         out.push_str(&format!(
             "\nunloads: proactive={} worker-releases={}",
-            self.unload_requests, self.proactive_releases,
+            self.unload_requests.get(),
+            self.proactive_releases.get(),
         ));
         out.push_str(&format!(
             "\nsupervision: respawns={} stalls={} redispatched={} poisoned={} \
              deadline-exceeded={}",
-            self.respawns, self.stalls, self.redispatched, self.poisoned, self.deadline_exceeded,
+            self.respawns.get(),
+            self.stalls.get(),
+            self.redispatched.get(),
+            self.poisoned.get(),
+            self.deadline_exceeded.get(),
         ));
         for (model, s) in &self.per_model {
+            let s = s.snapshot();
             out.push_str(&format!(
                 "\nmodel={model}: batches={} decode fast-path={} voted={} \
                  faults detected={} corrected={} plans adopted={}",
@@ -316,6 +646,10 @@ impl ServingMetrics {
                 g.latency_p50_us, g.latency_p99_us,
             ));
         }
+        if !self.traces.is_empty() {
+            out.push('\n');
+            out.push_str(&self.traces.render());
+        }
         out
     }
 }
@@ -330,9 +664,9 @@ mod tests {
         m.record_batch(4);
         m.record_response(4, Duration::from_micros(100), Duration::from_micros(10), true);
         m.record_response(2, Duration::from_micros(300), Duration::from_micros(20), false);
-        assert_eq!(m.requests, 2);
-        assert_eq!(m.samples, 6);
-        assert_eq!(m.failures, 1);
+        assert_eq!(m.requests.get(), 2);
+        assert_eq!(m.samples.get(), 6);
+        assert_eq!(m.failures.get(), 1);
         let p50 = m.latency_percentile_us(50.0);
         assert!((p50 - 200.0).abs() < 1.0);
         let rep = m.report(Duration::from_secs(1));
@@ -386,10 +720,10 @@ mod tests {
             jobs: 11,
             tasks: 120,
         });
-        m.energy_dac_conversions = 500;
-        m.energy_adc_conversions = 700;
-        m.energy_skipped_dac = 60;
-        m.energy_skipped_adc = 40;
+        m.energy_dac_conversions.add(500);
+        m.energy_adc_conversions.add(700);
+        m.energy_skipped_dac.add(60);
+        m.energy_skipped_adc.add(40);
         m.set_gateway(GatewayReport {
             sessions_accepted: 9,
             sessions_active: 2,
@@ -401,11 +735,11 @@ mod tests {
             latency_p50_us: 1000.0,
             latency_p99_us: 9000.0,
         });
-        m.respawns = 3;
-        m.stalls = 1;
-        m.redispatched = 2;
-        m.poisoned = 1;
-        m.deadline_exceeded = 4;
+        m.respawns.add(3);
+        m.stalls.add(1);
+        m.redispatched.add(2);
+        m.poisoned.add(1);
+        m.deadline_exceeded.add(4);
         let rep = m.report(Duration::from_secs(1));
         // global decode line precedes per-model lines (report parsers key
         // on the first `fast-path=` occurrence)
@@ -445,5 +779,109 @@ mod tests {
         // the gateway block renders after the PR-2 global lines, so old
         // parsers keyed on first occurrences are unaffected
         assert!(rep.find("decode: fast-path=0").unwrap() < rep.find("gateway: sessions=").unwrap());
+    }
+
+    #[test]
+    fn report_and_exposition_read_the_same_counters() {
+        let mut m = ServingMetrics::default();
+        m.energy_adc_conversions.add(700);
+        m.energy_dac_conversions.add(500);
+        m.respawns.add(2);
+        let rep = m.report(Duration::from_secs(1));
+        let prom = m.render_prometheus();
+        assert!(rep.contains("adc-conversions=700"), "{rep}");
+        assert!(prom.contains("\nrns_adc_conversions_total 700\n"), "{prom}");
+        assert!(prom.contains("\nrns_dac_conversions_total 500\n"), "{prom}");
+        assert!(prom.contains("\nrns_supervision_respawns_total 2\n"), "{prom}");
+        // decode exhausted is a first-class family and a report key
+        assert!(rep.contains("decode: fast-path=0 voted=0 exhausted=0"), "{rep}");
+        assert!(prom.contains("# TYPE rns_decode_exhausted_total counter"), "{prom}");
+        // snapshot blocks sync into the registry at render time
+        m.set_plan_store(
+            StoreStats { builds: 4, hits: 9, evicted: 1, resident_plans: 3, resident_bytes: 640 },
+            vec![],
+        );
+        let prom = m.render_prometheus();
+        assert!(prom.contains("\nrns_plan_store_builds_total 4\n"), "{prom}");
+        assert!(prom.contains("\nrns_plan_store_resident_bytes 640\n"), "{prom}");
+    }
+
+    #[test]
+    fn trace_ring_keeps_the_slowest_and_renders_in_order() {
+        let mut ring = TraceRing::new(2);
+        let t = |id: u64, total: u64| RequestTrace {
+            id,
+            model: "mlp".into(),
+            samples: 1,
+            total_us: total,
+            ..RequestTrace::default()
+        };
+        ring.offer(t(1, 100));
+        ring.offer(t(2, 50));
+        ring.offer(t(3, 200)); // evicts id=2 (fastest)
+        ring.offer(t(4, 10)); // too fast: dropped
+        assert_eq!(ring.len(), 2);
+        let text = ring.render();
+        assert!(text.starts_with("slow traces: kept=2 cap=2"), "{text}");
+        let id3 = text.find("id=3").expect("slowest kept");
+        let id1 = text.find("id=1").expect("second kept");
+        assert!(id3 < id1, "slowest first: {text}");
+        assert!(!text.contains("id=2"), "{text}");
+        assert!(!text.contains("id=4"), "{text}");
+    }
+
+    #[test]
+    fn traces_append_to_the_report_after_every_existing_block() {
+        let mut m = ServingMetrics::default();
+        m.record_response(1, Duration::from_micros(120), Duration::from_micros(10), true);
+        let before = m.report(Duration::from_secs(1));
+        assert!(!before.contains("slow traces:"), "no trace lines when none recorded");
+        m.record_trace(RequestTrace {
+            id: 7,
+            model: "mlp".into(),
+            samples: 1,
+            worker: 0,
+            total_us: 120,
+            queue_us: 10,
+            batch_form_us: 2,
+            dac_us: 20,
+            gemm_us: 50,
+            adc_us: 20,
+            decode_us: 15,
+            delivery_us: 3,
+        });
+        let rep = m.report(Duration::from_secs(1));
+        assert!(rep.contains("slow traces: kept=1 cap=16"), "{rep}");
+        assert!(
+            rep.contains(
+                "trace: id=7 model=mlp samples=1 worker=0 total=120µs queue=10µs form=2µs \
+                 dac=20µs gemm=50µs adc=20µs decode=15µs delivery=3µs"
+            ),
+            "{rep}"
+        );
+        // appended strictly after the global lines
+        assert!(rep.find("requests=").unwrap() < rep.find("slow traces:").unwrap());
+        // trace capacity is adjustable and survivors persist
+        m.set_trace_capacity(4);
+        assert!(m.traces_report().contains("kept=1 cap=4"));
+    }
+
+    #[test]
+    fn stage_histograms_share_one_family() {
+        let m = ServingMetrics::default();
+        m.stage.queue.observe(5);
+        m.stage.decode.observe(10);
+        // the gateway-side admission stage lands in the same family
+        stage_histogram(&m.registry(), "admission").observe(1);
+        let prom = m.render_prometheus();
+        let type_lines =
+            prom.lines().filter(|l| l.starts_with("# TYPE rns_stage_latency_us ")).count();
+        assert_eq!(type_lines, 1, "one family: {prom}");
+        for stage in ["queue", "decode", "admission"] {
+            assert!(
+                prom.contains(&format!("rns_stage_latency_us_count{{stage=\"{stage}\"}} 1")),
+                "{prom}"
+            );
+        }
     }
 }

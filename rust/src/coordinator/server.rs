@@ -71,11 +71,16 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::analog::{FixedPointCore, Fp32Backend, GemmBackend, NoiseModel, RnsCore, RnsCoreConfig};
+use crate::analog::{
+    FixedPointCore, Fp32Backend, GemmBackend, NoiseModel, RnsCore, RnsCoreConfig, StageMicros,
+};
 use crate::coordinator::batcher::{BatcherConfig, DynamicBatcher, FormedBatch};
 use crate::coordinator::chaos::{ChaosAction, ChaosSpec, WorkerChaos};
 use crate::coordinator::mailbox::{Mail, Mailbox};
-use crate::coordinator::metrics::{GatewayReport, ServingMetrics};
+use crate::coordinator::metrics::{
+    GatewayReport, RequestTrace, ServingMetrics, DEFAULT_TRACE_SLOTS,
+};
+use crate::util::metrics::MetricRegistry;
 use crate::coordinator::request::{
     InferenceRequest, InferenceResponse, RequestId, ServeError, ServeErrorKind,
 };
@@ -132,6 +137,9 @@ pub struct CoordinatorConfig {
     /// activations and report it as `skipped-dac=`/`skipped-adc=` on the
     /// `energy:` metrics line.  Default off for RNG-stream compatibility.
     pub sparse_capture: bool,
+    /// Slowest-request traces kept in the bounded ring (`trace:` report
+    /// lines and the `Traces` wire frame); 0 disables tracing.
+    pub trace_slots: usize,
 }
 
 impl CoordinatorConfig {
@@ -151,6 +159,7 @@ impl CoordinatorConfig {
             poison_threshold: 2,
             default_deadline: None,
             sparse_capture: false,
+            trace_slots: DEFAULT_TRACE_SLOTS,
         }
     }
 }
@@ -371,7 +380,11 @@ impl Coordinator {
         let (resp_tx, resp_rx) = mpsc::channel::<InferenceResponse>();
         let (done_tx, done_rx) = mpsc::channel::<usize>();
         let (sup_tx, sup_rx) = mpsc::channel::<SupervisorMsg>();
-        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+        let metrics = Arc::new(Mutex::new({
+            let mut m = ServingMetrics::default();
+            m.set_trace_capacity(cfg.trace_slots);
+            m
+        }));
         // built once at startup, handed to every worker: the store is the
         // cross-worker plan memory, the registry the cross-worker
         // weights, the fabric the cross-worker thread budget
@@ -730,6 +743,32 @@ impl CoordinatorHandle {
     pub fn set_gateway_report(&self, g: GatewayReport) {
         self.metrics.lock().unwrap().set_gateway(g);
     }
+
+    /// The coordinator's shared metric registry — the gateway registers
+    /// its own counters here so one registry feeds the report *and* the
+    /// Prometheus exposition.
+    pub fn metric_registry(&self) -> Arc<MetricRegistry> {
+        self.metrics.lock().unwrap().registry()
+    }
+
+    /// Render the registry as Prometheus text exposition
+    /// (`text/plain; version=0.0.4`) — the body of
+    /// `GET /metrics?format=prometheus`.  Snapshot-backed blocks (plan
+    /// store, fabric) are refreshed first, so a quiescent scrape agrees
+    /// exactly with `live_report`'s legacy lines.
+    pub fn prometheus_report(&self) -> String {
+        let mut m = self.metrics.lock().unwrap();
+        m.set_plan_store(self.store.stats(), self.store.model_stats());
+        if let Some(f) = &self.fabric {
+            m.set_fabric(f.stats());
+        }
+        m.render_prometheus()
+    }
+
+    /// The slowest-request trace block (the `Traces` frame's reply).
+    pub fn traces_report(&self) -> String {
+        self.metrics.lock().unwrap().traces_report()
+    }
 }
 
 /// Shared implementation of the proactive unload (used by the owning
@@ -842,7 +881,7 @@ fn handle_worker_down(
                 batch.model,
                 batch.crashes
             );
-            ctx.spawner.metrics.lock().unwrap().poisoned += 1;
+            ctx.spawner.metrics.lock().unwrap().poisoned.inc();
             let err = ServeError::new(
                 ServeErrorKind::Poisoned,
                 format!(
@@ -864,13 +903,13 @@ fn handle_worker_down(
                 batch.model,
                 batch.crashes
             );
-            ctx.spawner.metrics.lock().unwrap().redispatched += 1;
+            ctx.spawner.metrics.lock().unwrap().redispatched.inc();
             slots[target].mailbox.push_batch(batch);
         }
     }
     if current {
         let next_gen = slots[wid].mailbox.bump_generation();
-        ctx.spawner.metrics.lock().unwrap().respawns += 1;
+        ctx.spawner.metrics.lock().unwrap().respawns.inc();
         let handle = ctx.spawner.spawn(wid, next_gen);
         ctx.worker_handles.lock().unwrap().push(handle);
         if draining {
@@ -899,9 +938,9 @@ fn scan_for_stalls(ctx: &SupervisorCtx, stall_timeout: Duration) {
         );
         let next_gen = slot.mailbox.bump_generation();
         {
-            let mut m = ctx.spawner.metrics.lock().unwrap();
-            m.stalls += 1;
-            m.respawns += 1;
+            let m = ctx.spawner.metrics.lock().unwrap();
+            m.stalls.inc();
+            m.respawns.inc();
         }
         let handle = ctx.spawner.spawn(wid, next_gen);
         ctx.worker_handles.lock().unwrap().push(handle);
@@ -922,6 +961,9 @@ fn dispatcher_loop(
 ) {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
     let mut policy = routing.build();
+    // pre-cloned gauge handle: the depth update must not take the
+    // metrics mutex once per loop iteration
+    let queue_depth = Arc::clone(&metrics.lock().unwrap().queue_depth);
     let mut open = true;
     while open || batcher.pending() > 0 {
         if open {
@@ -947,7 +989,9 @@ fn dispatcher_loop(
             policy.on_dispatch(wid);
             mailboxes[wid].push_batch(batch);
         }
+        queue_depth.set(batcher.pending() as i64);
     }
+    queue_depth.set(0);
     // queued batches now live in worker mailboxes; the coordinator's
     // shutdown (or teardown) ends the workers through the control plane
 }
@@ -962,7 +1006,7 @@ fn fail_expired_request(
     {
         let mut m = metrics.lock().unwrap();
         m.record_response(req.num_samples(), latency, latency, false);
-        m.deadline_exceeded += 1;
+        m.deadline_exceeded.inc();
     }
     responder.deliver(InferenceResponse {
         id: req.id,
@@ -1074,10 +1118,13 @@ struct WorkerCounters {
     plans: u64,
     fast: u64,
     voted: u64,
+    exhausted: u64,
     dac: u64,
     adc: u64,
     skipped_dac: u64,
     skipped_adc: u64,
+    /// Cumulative per-stage wall-clock snapshot (same delta discipline).
+    stage: StageMicros,
 }
 
 /// Extract a printable message from a caught panic payload.
@@ -1267,7 +1314,7 @@ fn serve_batch(
     }
     let logits = model.forward(&batch.input, backend);
     // fault counters from the RRNS core, per batch
-    let (detected, corrected, fast_path, voted) = backend_fault_counts(backend);
+    let (detected, corrected, fast_path, voted, exhausted) = backend_fault_counts(backend);
     let batch_faults = detected.saturating_sub(counters.faults);
     counters.faults = detected;
     // all per-worker cumulative counters accumulate into the shared
@@ -1279,6 +1326,21 @@ fn serve_batch(
     counters.fast = fast_path;
     let voted_delta = voted.saturating_sub(counters.voted);
     counters.voted = voted;
+    let exhausted_delta = exhausted.saturating_sub(counters.exhausted);
+    counters.exhausted = exhausted;
+    // per-stage wall-clock deltas from the backend's cumulative timers
+    // (only backends that time their pipeline report them)
+    let stage_now = backend.stage_micros();
+    let stage_delta = stage_now.map(|now| {
+        let d = StageMicros {
+            dac_forward_us: now.dac_forward_us.saturating_sub(counters.stage.dac_forward_us),
+            analog_gemm_us: now.analog_gemm_us.saturating_sub(counters.stage.analog_gemm_us),
+            adc_capture_us: now.adc_capture_us.saturating_sub(counters.stage.adc_capture_us),
+            decode_us: now.decode_us.saturating_sub(counters.stage.decode_us),
+        };
+        counters.stage = now;
+        d
+    });
     // plans adopted since the last batch: warm-time adoptions land in
     // the first delta, and a steady-state delta > 0 means a layer was
     // first seen mid-request (a warm() gap worth fixing)
@@ -1302,15 +1364,16 @@ fn serve_batch(
     counters.skipped_adc = skipped_adc_now;
     {
         let mut m = sh.metrics.lock().unwrap();
-        m.faults_detected += batch_faults;
-        m.faults_corrected += corrected_delta;
-        m.decode_fast_path += fast_delta;
-        m.decode_voted += voted_delta;
-        m.plans_built += plans_delta;
-        m.energy_dac_conversions += dac_delta;
-        m.energy_adc_conversions += adc_delta;
-        m.energy_skipped_dac += skipped_dac_delta;
-        m.energy_skipped_adc += skipped_adc_delta;
+        m.faults_detected.add(batch_faults);
+        m.faults_corrected.add(corrected_delta);
+        m.decode_fast_path.add(fast_delta);
+        m.decode_voted.add(voted_delta);
+        m.decode_exhausted.add(exhausted_delta);
+        m.plans_built.add(plans_delta);
+        m.energy_dac_conversions.add(dac_delta);
+        m.energy_adc_conversions.add(adc_delta);
+        m.energy_skipped_dac.add(skipped_dac_delta);
+        m.energy_skipped_adc.add(skipped_adc_delta);
         // the same deltas, attributed to the model this batch ran — a
         // worker serves one batch (= one model) at a time, so the
         // counter deltas since the previous batch belong to it
@@ -1323,6 +1386,12 @@ fn serve_batch(
             plans_delta,
         );
     }
+    let batch_form_us = picked_up.duration_since(batch.formed_at).as_micros() as u64;
+    // per-member (id, samples, queue µs, total µs) for stage histograms
+    // and traces — recorded after delivery in one metrics lock
+    let mut member_meta: Vec<(RequestId, usize, u64, u64)> =
+        Vec::with_capacity(batch.members.len());
+    let deliver_start = Instant::now();
     for (req, offset) in &batch.members {
         let n = req.num_samples();
         let latency = req.submitted_at.elapsed();
@@ -1334,7 +1403,7 @@ fn serve_batch(
             let mut m = sh.metrics.lock().unwrap();
             m.record_response(n, latency, queue_time, !expired);
             if expired {
-                m.deadline_exceeded += 1;
+                m.deadline_exceeded.inc();
             }
         }
         let result = if expired {
@@ -1345,6 +1414,8 @@ fn serve_batch(
         } else {
             Ok(split_logits(&logits, *offset, n))
         };
+        let queue_us = batch.formed_at.duration_since(req.submitted_at).as_micros() as u64;
+        member_meta.push((req.id, n, queue_us, latency.as_micros() as u64));
         sh.responder.deliver(InferenceResponse {
             id: req.id,
             result,
@@ -1354,14 +1425,47 @@ fn serve_batch(
             faults_detected: batch_faults,
         });
     }
+    let delivery_us = deliver_start.elapsed().as_micros() as u64;
+    {
+        let mut m = sh.metrics.lock().unwrap();
+        m.stage.batch_form.observe(batch_form_us);
+        m.stage.delivery.observe(delivery_us);
+        // compute stages only when the backend actually times them —
+        // zero-filled observations would poison the histograms for
+        // FP32/fixed-point runs
+        if let Some(d) = stage_delta {
+            m.stage.dac_forward.observe(d.dac_forward_us);
+            m.stage.analog_gemm.observe(d.analog_gemm_us);
+            m.stage.adc_capture.observe(d.adc_capture_us);
+            m.stage.decode.observe(d.decode_us);
+        }
+        let d = stage_delta.unwrap_or_default();
+        for (id, n, queue_us, total_us) in member_meta {
+            m.stage.queue.observe(queue_us);
+            m.record_trace(RequestTrace {
+                id,
+                model: batch.model.clone(),
+                samples: n,
+                worker: wid,
+                total_us,
+                queue_us,
+                batch_form_us,
+                dac_us: d.dac_forward_us,
+                gemm_us: d.analog_gemm_us,
+                adc_us: d.adc_capture_us,
+                decode_us: d.decode_us,
+                delivery_us,
+            });
+        }
+    }
     sh.done_tx.send(wid).ok();
 }
 
-fn backend_fault_counts(backend: &dyn GemmBackend) -> (u64, u64, u64, u64) {
+fn backend_fault_counts(backend: &dyn GemmBackend) -> (u64, u64, u64, u64, u64) {
     backend
         .fault_stats()
-        .map(|s| (s.detections, s.corrected, s.fast_path_elems, s.voted_elems))
-        .unwrap_or((0, 0, 0, 0))
+        .map(|s| (s.detections, s.corrected, s.fast_path_elems, s.voted_elems, s.exhausted))
+        .unwrap_or((0, 0, 0, 0, 0))
 }
 
 fn fail_batch(
@@ -1377,7 +1481,7 @@ fn fail_batch(
             let mut m = metrics.lock().unwrap();
             m.record_response(req.num_samples(), latency, latency, false);
             if err.kind == ServeErrorKind::DeadlineExceeded {
-                m.deadline_exceeded += 1;
+                m.deadline_exceeded.inc();
             }
         }
         responder.deliver(InferenceResponse {

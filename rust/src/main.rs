@@ -62,6 +62,8 @@ fn usage() {
              [--admin-token=SECRET]  (require this token on load/unload/shutdown\n\
               frames; unset = loopback-only; env RNS_ADMIN_TOKEN also works)\n\
              [--stall-timeout-ms=30000] [--poison-threshold=2] [--default-deadline-ms=0]\n\
+             [--trace-slots=16]  (slowest-request pipeline trace ring; 0 = off;\n\
+              Prometheus exposition at GET /metrics?format=prometheus)\n\
              [--chaos=SPEC]  (seeded fault injection, e.g. \"panic@w0:b3,\n\
               stall@w1:b2:50ms,poison@mlp,drop@s1:f2\" — tests/CI only)\n\
              [--sparse-capture]  (conversion-avoiding sparse execution on RNS\n\
@@ -341,6 +343,15 @@ fn cmd_serve(args: &mut Args) -> i32 {
             }
         }
     }
+    if let Some(n) = args.get("trace-slots") {
+        match n.parse::<usize>() {
+            Ok(v) => cfg.trace_slots = v,
+            _ => {
+                eprintln!("--trace-slots={n}: want an integer >= 0 (0 = tracing off)");
+                return 2;
+            }
+        }
+    }
     if let Some(ms) = args.get("default-deadline-ms") {
         match ms.parse::<u64>() {
             Ok(0) => cfg.default_deadline = None,
@@ -436,7 +447,8 @@ fn cmd_serve_gateway(cfg: CoordinatorConfig, gw_cfg: GatewayConfig, serve_second
         }
     };
     println!(
-        "[gateway] listening on {} — binary wire protocol + HTTP GET /metrics",
+        "[gateway] listening on {} — binary wire protocol + HTTP GET/HEAD /metrics \
+         (Prometheus: /metrics?format=prometheus)",
         gw.local_addr()
     );
     // flush: smoke scripts poll the log for the listening line before

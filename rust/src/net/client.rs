@@ -247,6 +247,18 @@ impl Client {
         }
     }
 
+    /// Fetch the slowest-request pipeline trace report (one line per
+    /// retained trace; empty until a request has been served).
+    pub fn traces(&mut self) -> Result<String, String> {
+        let id = self.fresh_id();
+        self.send(&Frame::Traces { id }).map_err(|e| e.to_string())?;
+        match self.recv().map_err(|e| e.to_string())? {
+            Frame::TracesReport { text, .. } => Ok(text),
+            Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
+            other => Err(format!("unexpected reply to traces: {other:?}")),
+        }
+    }
+
     /// Load a model into the server's shared registry now.
     pub fn load_model(&mut self, model: &str) -> Result<String, String> {
         let id = self.fresh_id();

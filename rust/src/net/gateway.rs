@@ -3,9 +3,18 @@
 //!
 //! One acceptor thread owns the `TcpListener`; every connection gets a
 //! session thread.  A session sniffs its first four bytes: `b"RNSG"`
-//! starts the binary wire protocol (protocol.rs), `b"GET "` is an
-//! HTTP/1.1 scrape served the live `ServingMetrics` report at
-//! `/metrics` (so the running server is scrapeable with no extra port).
+//! starts the binary wire protocol (protocol.rs), `b"GET "` / `b"HEAD"`
+//! is an HTTP/1.1 scrape (so the running server is scrapeable with no
+//! extra port).  `GET /metrics` serves the live human-readable report;
+//! `GET /metrics?format=prometheus` serves the same registry as
+//! Prometheus text exposition (`text/plain; version=0.0.4`); `HEAD`
+//! returns the headers alone.
+//!
+//! **Counters.**  The gateway's own counters (sessions, frames,
+//! protocol errors, scrapes) are registered into the coordinator's
+//! `MetricRegistry` at start — the `gateway:` report lines and the
+//! `rns_gateway_*` exposition families read the same atomics, so the
+//! two can never disagree.
 //!
 //! **Admission.**  Binary sessions are capped at
 //! `GatewayConfig::max_sessions`: past the cap the handshake reply
@@ -35,17 +44,18 @@
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::chaos::ChaosSpec;
-use crate::coordinator::metrics::GatewayReport;
+use crate::coordinator::metrics::{stage_histogram, GatewayReport};
 use crate::coordinator::request::ServeErrorKind;
 use crate::coordinator::server::{Coordinator, CoordinatorHandle};
 use crate::net::protocol::{ErrorCode, Frame, HelloStatus, WireError, MAGIC, VERSION};
+use crate::util::metrics::{Counter, Gauge, Histogram, LATENCY_BUCKETS_US};
 use crate::util::stats::Reservoir;
 
 /// Gateway knobs (config file: `[serve] listen_addr / max_sessions /
@@ -105,14 +115,27 @@ const LATENCY_RESERVOIR: usize = 4096;
 struct GatewayShared {
     handle: CoordinatorHandle,
     cfg: GatewayConfig,
-    /// Live binary sessions (admission counter).
-    active: AtomicUsize,
-    accepted: AtomicU64,
-    rejected: AtomicU64,
-    frames_in: AtomicU64,
-    frames_out: AtomicU64,
-    protocol_errors: AtomicU64,
-    scrapes: AtomicU64,
+    /// Live binary sessions.  Admission control and the exported
+    /// `rns_gateway_active_sessions` gauge are ONE atomic: the session
+    /// cap is enforced with `Gauge::try_inc_below`, so the count a
+    /// scrape sees is the count admission acted on.
+    active: Arc<Gauge>,
+    accepted: Arc<Counter>,
+    rejected: Arc<Counter>,
+    frames_in: Arc<Counter>,
+    frames_out: Arc<Counter>,
+    protocol_errors: Arc<Counter>,
+    /// Every HTTP request served (hits *and* 404s — the report's
+    /// `scrapes=` key has always counted all of them).
+    scrapes: Arc<Counter>,
+    /// HTTP requests answered 404, separately from `scrapes`.
+    not_found: Arc<Counter>,
+    /// Gateway-side request latency histogram (same samples the
+    /// reservoir percentiles summarize, exported with full buckets).
+    request_latency: Arc<Histogram>,
+    /// The `admission` stage of `rns_stage_latency_us`: frame decode →
+    /// coordinator accept, observed in the Infer path.
+    admission: Arc<Histogram>,
     /// Gateway-side request latency (submit → reply delivery), µs —
     /// bounded reservoir, not all-time history.  Shared as its own Arc
     /// so routed delivery callbacks don't capture the whole
@@ -151,13 +174,13 @@ impl GatewayShared {
             (r.percentile(50.0), r.percentile(99.0))
         };
         GatewayReport {
-            sessions_accepted: self.accepted.load(Ordering::Relaxed),
-            sessions_active: self.active.load(Ordering::Relaxed) as u64,
-            sessions_rejected: self.rejected.load(Ordering::Relaxed),
-            frames_in: self.frames_in.load(Ordering::Relaxed),
-            frames_out: self.frames_out.load(Ordering::Relaxed),
-            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
-            http_scrapes: self.scrapes.load(Ordering::Relaxed),
+            sessions_accepted: self.accepted.get(),
+            sessions_active: self.active.get().max(0) as u64,
+            sessions_rejected: self.rejected.get(),
+            frames_in: self.frames_in.get(),
+            frames_out: self.frames_out.get(),
+            protocol_errors: self.protocol_errors.get(),
+            http_scrapes: self.scrapes.get(),
             latency_p50_us,
             latency_p99_us,
         }
@@ -169,6 +192,12 @@ impl GatewayShared {
         self.handle.live_report()
     }
 
+    /// The registry as Prometheus text exposition — the gateway's own
+    /// counters are registered there, so no snapshot hand-off is needed.
+    fn prometheus_report(&self) -> String {
+        self.handle.prometheus_report()
+    }
+
     fn signal_shutdown(&self) {
         if let Some(tx) = self.shutdown_tx.lock().unwrap().take() {
             tx.send(()).ok();
@@ -176,12 +205,12 @@ impl GatewayShared {
     }
 }
 
-/// Decrements the admission counter when a session ends, however it ends.
+/// Decrements the admission gauge when a session ends, however it ends.
 struct ActiveGuard(Arc<GatewayShared>);
 
 impl Drop for ActiveGuard {
     fn drop(&mut self) {
-        self.0.active.fetch_sub(1, Ordering::SeqCst);
+        self.0.active.add(-1);
     }
 }
 
@@ -206,16 +235,31 @@ impl Gateway {
         // wakeup dance); 10 ms accept latency is noise against a forward
         listener.set_nonblocking(true).map_err(|e| e.to_string())?;
         let (shutdown_tx, shutdown_rx) = mpsc::channel();
+        let handle = coord.handle();
+        // the gateway's counters live in the coordinator's registry:
+        // report lines and exposition families read the same atomics
+        let reg = handle.metric_registry();
         let shared = Arc::new(GatewayShared {
-            handle: coord.handle(),
             cfg,
-            active: AtomicUsize::new(0),
-            accepted: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            frames_in: AtomicU64::new(0),
-            frames_out: AtomicU64::new(0),
-            protocol_errors: AtomicU64::new(0),
-            scrapes: AtomicU64::new(0),
+            active: reg.gauge("rns_gateway_active_sessions", "Live binary sessions"),
+            accepted: reg.counter("rns_gateway_sessions_total", "Binary sessions admitted"),
+            rejected: reg.counter(
+                "rns_gateway_sessions_rejected_total",
+                "Sessions refused (overload, version, draining)",
+            ),
+            frames_in: reg.counter("rns_gateway_frames_in_total", "Request frames received"),
+            frames_out: reg.counter("rns_gateway_frames_out_total", "Reply frames written"),
+            protocol_errors: reg
+                .counter("rns_gateway_protocol_errors_total", "Malformed frames and batches"),
+            scrapes: reg.counter("rns_gateway_http_requests_total", "HTTP requests (hits + 404s)"),
+            not_found: reg.counter("rns_gateway_http_not_found_total", "HTTP requests answered 404"),
+            request_latency: reg.histogram(
+                "rns_gateway_request_latency_us",
+                "Gateway-side request latency in microseconds",
+                &LATENCY_BUCKETS_US,
+            ),
+            admission: stage_histogram(&reg, "admission"),
+            handle,
             latency_us: Arc::new(Mutex::new(Reservoir::new(LATENCY_RESERVOIR, 0x6A7E_11A7))),
             draining: AtomicBool::new(false),
             shutdown_tx: Mutex::new(Some(shutdown_tx)),
@@ -345,13 +389,12 @@ fn session_entry(mut stream: TcpStream, peer: SocketAddr, shared: Arc<GatewaySha
     if stream.read_exact(&mut first).is_err() {
         return;
     }
-    if &first == b"GET " {
-        shared.scrapes.fetch_add(1, Ordering::Relaxed);
-        serve_http(stream, &shared);
+    if &first == b"GET " || &first == b"HEAD" {
+        serve_http(stream, &shared, &first == b"HEAD");
         return;
     }
     if first != MAGIC {
-        shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        shared.protocol_errors.inc();
         stream.shutdown(Shutdown::Both).ok();
         return;
     }
@@ -361,7 +404,7 @@ fn session_entry(mut stream: TcpStream, peer: SocketAddr, shared: Arc<GatewaySha
     }
     let version = u16::from_le_bytes(ver);
     if version != VERSION {
-        shared.rejected.fetch_add(1, Ordering::Relaxed);
+        shared.rejected.inc();
         reject(
             &mut stream,
             HelloStatus::BadVersion,
@@ -371,25 +414,17 @@ fn session_entry(mut stream: TcpStream, peer: SocketAddr, shared: Arc<GatewaySha
         return;
     }
     if shared.draining.load(Ordering::SeqCst) {
-        shared.rejected.fetch_add(1, Ordering::Relaxed);
+        shared.rejected.inc();
         reject(&mut stream, HelloStatus::Draining, ErrorCode::Draining, "gateway is draining");
         return;
     }
     // admission: reserve a live-session slot or refuse with the typed
-    // overload frame (compare-and-increment, so a burst of connects
-    // cannot oversubscribe the cap)
-    let admitted = shared
-        .active
-        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |a| {
-            if a < shared.cfg.max_sessions {
-                Some(a + 1)
-            } else {
-                None
-            }
-        })
-        .is_ok();
+    // overload frame.  The compare-and-increment runs on the exported
+    // gauge itself, so a burst of connects cannot oversubscribe the cap
+    // and a scrape can never see a count admission didn't act on.
+    let admitted = shared.active.try_inc_below(shared.cfg.max_sessions as i64);
     if !admitted {
-        shared.rejected.fetch_add(1, Ordering::Relaxed);
+        shared.rejected.inc();
         reject(
             &mut stream,
             HelloStatus::Overloaded,
@@ -401,7 +436,7 @@ fn session_entry(mut stream: TcpStream, peer: SocketAddr, shared: Arc<GatewaySha
     let _guard = ActiveGuard(Arc::clone(&shared));
     // the pre-increment value is this session's 0-based admission index —
     // the `s{S}` coordinate of `drop@s{S}:f{N}` chaos events
-    let session_idx = shared.accepted.fetch_add(1, Ordering::Relaxed);
+    let session_idx = shared.accepted.inc();
     if write_hello(&mut stream, HelloStatus::Ok).is_err() {
         return;
     }
@@ -440,7 +475,7 @@ fn run_session(
     loop {
         match Frame::read_from(&mut reader) {
             Ok(frame) => {
-                shared.frames_in.fetch_add(1, Ordering::Relaxed);
+                shared.frames_in.inc();
                 frames_read += 1;
                 let keep = handle_frame(frame, peer_is_loopback, shared, &reply_tx);
                 // injected connection drop: sever abruptly *after* the
@@ -464,7 +499,7 @@ fn run_session(
             Err(WireError::Protocol(msg)) => {
                 // reply with the typed protocol error, then close: the
                 // frame boundary is unknown, resync is impossible
-                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                shared.protocol_errors.inc();
                 reply_tx.send(Frame::Error { id: 0, code: ErrorCode::Protocol, message: msg }).ok();
                 break;
             }
@@ -513,6 +548,10 @@ fn handle_frame(
             let text = shared.report();
             reply_tx.send(Frame::StatsReport { id, text }).ok();
         }
+        Frame::Traces { id } => {
+            let text = shared.handle.traces_report();
+            reply_tx.send(Frame::TracesReport { id, text }).ok();
+        }
         Frame::LoadModel { id, model, token } => {
             if !shared.admin_ok(peer_is_loopback, &token) {
                 deny_admin(id, token_mode, reply_tx);
@@ -555,13 +594,14 @@ fn handle_frame(
                 Err(e) => {
                     // declared-shape mismatch: framing is intact, so the
                     // session survives — reply typed and keep reading
-                    shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    shared.protocol_errors.inc();
                     reply_tx.send(Frame::Error { id, code: ErrorCode::Protocol, message: e }).ok();
                     return true;
                 }
             };
             let tx = reply_tx.clone();
             let latency = Arc::clone(&shared.latency_us);
+            let latency_hist = Arc::clone(&shared.request_latency);
             let t0 = Instant::now();
             // 0 = no per-request deadline (the server default applies)
             let deadline =
@@ -569,6 +609,7 @@ fn handle_frame(
             let submitted =
                 shared.handle.submit_routed_with_deadline(&model, batch, deadline, move |resp| {
                     latency.lock().unwrap().add(t0.elapsed().as_secs_f64() * 1e6);
+                    latency_hist.observe(t0.elapsed().as_micros() as u64);
                     let frame = match resp.result {
                         Ok(logits) => Frame::InferOk {
                             id,
@@ -584,13 +625,16 @@ fn handle_frame(
                     };
                     tx.send(frame).ok();
                 });
+            // the `admission` pipeline stage: batch validation through
+            // coordinator accept (queueing starts after this)
+            shared.admission.observe(t0.elapsed().as_micros() as u64);
             if let Err(e) = submitted {
                 reply_tx.send(Frame::Error { id, code: ErrorCode::Internal, message: e }).ok();
             }
         }
         // a reply kind arriving at the server is a client bug
         other => {
-            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            shared.protocol_errors.inc();
             let message = "reply frame sent to server".to_string();
             reply_tx
                 .send(Frame::Error { id: other.id(), code: ErrorCode::Protocol, message })
@@ -610,14 +654,17 @@ fn writer_loop(mut stream: TcpStream, reply_rx: Receiver<Frame>, shared: Arc<Gat
             while reply_rx.recv().is_ok() {}
             return;
         }
-        shared.frames_out.fetch_add(1, Ordering::Relaxed);
+        shared.frames_out.inc();
     }
 }
 
-/// Minimal HTTP/1.1 responder for metrics scrapes.  `b"GET "` has
-/// already been consumed; everything up to the blank line is read
-/// (bounded) and only the path matters.
-fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>) {
+/// Minimal HTTP/1.1 responder for metrics scrapes.  The 4-byte method
+/// sniff (`b"GET "` / `b"HEAD"`) has already been consumed; everything
+/// up to the blank line is read (bounded) and only the request target
+/// matters.  `HEAD` writes the status line + headers and no body.
+fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>, is_head: bool) {
+    // every HTTP request counts as a scrape, hit or miss, GET or HEAD
+    shared.scrapes.inc();
     let mut head = Vec::new();
     let mut tmp = [0u8; 512];
     while !head.windows(4).any(|w| w == b"\r\n\r\n") {
@@ -629,18 +676,37 @@ fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>) {
             Ok(n) => head.extend_from_slice(&tmp[..n]),
         }
     }
+    // the 4-byte method sniff already consumed "GET " / "HEAD", so the
+    // remaining head starts at (or just before) the request target
     let text = String::from_utf8_lossy(&head);
-    let path = text.split_whitespace().next().unwrap_or("");
-    let (status, body) = if path == "/metrics" {
-        ("200 OK", format!("{}\n", shared.report()))
+    let target = text.split_whitespace().next().unwrap_or("");
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let (status, content_type, body) = if path == "/metrics" {
+        if query.split('&').any(|kv| kv == "format=prometheus") {
+            // Prometheus text exposition format 0.0.4
+            ("200 OK", "text/plain; version=0.0.4", shared.prometheus_report())
+        } else {
+            ("200 OK", "text/plain; charset=utf-8", format!("{}\n", shared.report()))
+        }
     } else {
-        ("404 Not Found", format!("no such path `{path}` (try /metrics)\n"))
+        shared.not_found.inc();
+        (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            format!("no such path `{path}` (try /metrics)\n"),
+        )
     };
     let resp = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: text/plain; charset=utf-8\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
     stream.write_all(resp.as_bytes()).ok();
+    if !is_head {
+        stream.write_all(body.as_bytes()).ok();
+    }
     stream.shutdown(Shutdown::Both).ok();
 }

@@ -25,9 +25,12 @@
 //!
 //! Request kinds: `Ping`, `Infer { model, deadline_ms, batch }`,
 //! `LoadModel`, `UnloadModel`, `Stats`, `Shutdown` (admin: ask the
-//! server to drain and exit).  Reply kinds: `Pong`, `InferOk { logits,
-//! faults, worker }`, `Error { code, message }`, `StatsReport { text }`,
-//! `Ack { info }`.
+//! server to drain and exit), `Traces` (the slowest-request trace
+//! block).  Reply kinds: `Pong`, `InferOk { logits, faults, worker }`,
+//! `Error { code, message }`, `StatsReport { text }`, `Ack { info }`,
+//! `TracesReport { text }`.  `Traces`/`TracesReport` are an additive
+//! kind pair: a v2 peer that has never heard of them simply never sends
+//! them, so the version stays 2.
 //!
 //! **Version 2** adds `deadline_ms` to `Infer` (0 = use the server
 //! default) and a `token` string to the admin frames (`LoadModel`,
@@ -239,12 +242,15 @@ pub enum Frame {
     UnloadModel { id: u64, model: String, token: String },
     Stats { id: u64 },
     Shutdown { id: u64, token: String },
+    /// The slowest-request trace block (per-stage timing breakdowns).
+    Traces { id: u64 },
     // replies
     Pong { id: u64 },
     InferOk { id: u64, rows: u32, cols: u32, logits: Vec<f32>, faults_detected: u64, worker: u32 },
     Error { id: u64, code: ErrorCode, message: String },
     StatsReport { id: u64, text: String },
     Ack { id: u64, info: String },
+    TracesReport { id: u64, text: String },
 }
 
 const KIND_PING: u8 = 1;
@@ -253,11 +259,13 @@ const KIND_LOAD: u8 = 3;
 const KIND_UNLOAD: u8 = 4;
 const KIND_STATS: u8 = 5;
 const KIND_SHUTDOWN: u8 = 6;
+const KIND_TRACES: u8 = 7;
 const KIND_PONG: u8 = 129;
 const KIND_INFER_OK: u8 = 130;
 const KIND_ERROR: u8 = 131;
 const KIND_STATS_REPORT: u8 = 132;
 const KIND_ACK: u8 = 133;
+const KIND_TRACES_REPORT: u8 = 134;
 
 const BATCH_IMAGES: u8 = 0;
 const BATCH_TOKENS: u8 = 1;
@@ -362,11 +370,13 @@ impl Frame {
             | Frame::UnloadModel { id, .. }
             | Frame::Stats { id }
             | Frame::Shutdown { id }
+            | Frame::Traces { id }
             | Frame::Pong { id }
             | Frame::InferOk { id, .. }
             | Frame::Error { id, .. }
             | Frame::StatsReport { id, .. }
-            | Frame::Ack { id, .. } => *id,
+            | Frame::Ack { id, .. }
+            | Frame::TracesReport { id, .. } => *id,
         }
     }
 
@@ -399,6 +409,10 @@ impl Frame {
             }
             Frame::Stats { id } => {
                 body.push(KIND_STATS);
+                put_u64(&mut body, *id);
+            }
+            Frame::Traces { id } => {
+                body.push(KIND_TRACES);
                 put_u64(&mut body, *id);
             }
             Frame::Shutdown { id, token } => {
@@ -434,6 +448,11 @@ impl Frame {
                 body.push(KIND_ACK);
                 put_u64(&mut body, *id);
                 put_text(&mut body, info);
+            }
+            Frame::TracesReport { id, text } => {
+                body.push(KIND_TRACES_REPORT);
+                put_u64(&mut body, *id);
+                put_text(&mut body, text);
             }
         }
         assert!(body.len() <= MAX_FRAME_LEN, "frame exceeds MAX_FRAME_LEN");
@@ -497,6 +516,7 @@ impl Frame {
             KIND_UNLOAD => Frame::UnloadModel { id, model: cur.name()?, token: cur.name()? },
             KIND_STATS => Frame::Stats { id },
             KIND_SHUTDOWN => Frame::Shutdown { id, token: cur.name()? },
+            KIND_TRACES => Frame::Traces { id },
             KIND_PONG => Frame::Pong { id },
             KIND_INFER_OK => {
                 let rows = cur.u32()?;
@@ -522,6 +542,7 @@ impl Frame {
             }
             KIND_STATS_REPORT => Frame::StatsReport { id, text: cur.text()? },
             KIND_ACK => Frame::Ack { id, info: cur.text()? },
+            KIND_TRACES_REPORT => Frame::TracesReport { id, text: cur.text()? },
             other => return Err(format!("unknown frame kind {other}")),
         };
         cur.done()?;
@@ -672,6 +693,8 @@ mod tests {
         roundtrip(Frame::Error { id: 15, code: ErrorCode::Poisoned, message: "quarantined".into() });
         roundtrip(Frame::StatsReport { id: 11, text: "requests=1\n".into() });
         roundtrip(Frame::Ack { id: 12, info: "unloaded".into() });
+        roundtrip(Frame::Traces { id: 16 });
+        roundtrip(Frame::TracesReport { id: 16, text: "slow traces: kept=0 cap=16".into() });
     }
 
     #[test]

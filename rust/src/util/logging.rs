@@ -3,6 +3,11 @@
 //! APIs).  Level comes from `RNS_LOG` (error|warn|info|debug|trace),
 //! default `info`.  Output goes to stderr with a monotonic timestamp so
 //! serving logs interleave meaningfully across threads.
+//!
+//! `RNS_LOG_FORMAT=json` switches every line to one self-contained JSON
+//! object (`{"ts":…,"level":…,"target":…,"msg":…}`) so fleet log
+//! ingestion doesn't re-parse the human format; the default human format
+//! is unchanged.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -39,18 +44,44 @@ impl Level {
             Level::Trace => "TRACE",
         }
     }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Output format: human-readable bracketed lines (default) or one JSON
+/// object per line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Format {
+    Human = 0,
+    Json = 1,
 }
 
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static FORMAT: AtomicU8 = AtomicU8::new(0); // Human
 static EPOCH: OnceLock<Instant> = OnceLock::new();
 static INIT: OnceLock<()> = OnceLock::new();
 
-/// Initialize from `RNS_LOG` (idempotent; called lazily by `enabled`).
+/// Initialize from `RNS_LOG` / `RNS_LOG_FORMAT` (idempotent; called
+/// lazily by `enabled`).
 pub fn init() {
     INIT.get_or_init(|| {
         if let Ok(v) = std::env::var("RNS_LOG") {
             if let Some(l) = Level::parse(&v) {
                 MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+            }
+        }
+        if let Ok(v) = std::env::var("RNS_LOG_FORMAT") {
+            if v.eq_ignore_ascii_case("json") {
+                FORMAT.store(Format::Json as u8, Ordering::Relaxed);
             }
         }
         EPOCH.get_or_init(Instant::now);
@@ -61,6 +92,12 @@ pub fn init() {
 pub fn set_level(level: Level) {
     init();
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Override the output format programmatically (tests, CLI flags).
+pub fn set_format(format: Format) {
+    init();
+    FORMAT.store(format as u8, Ordering::Relaxed);
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -74,7 +111,37 @@ pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
         return;
     }
     let t = EPOCH.get_or_init(Instant::now).elapsed();
-    eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), level.tag(), target, msg);
+    if FORMAT.load(Ordering::Relaxed) == Format::Json as u8 {
+        eprintln!(
+            "{{\"ts\":{:.3},\"level\":\"{}\",\"target\":\"{}\",\"msg\":\"{}\"}}",
+            t.as_secs_f64(),
+            level.name(),
+            json_escape(target),
+            json_escape(&msg.to_string()),
+        );
+    } else {
+        eprintln!("[{:>9.3}s {} {}] {}", t.as_secs_f64(), level.tag(), target, msg);
+    }
+}
+
+/// Minimal JSON string escaping (hand-rolled; no serde in the image):
+/// backslash, quote, and control characters.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[macro_export]
@@ -114,5 +181,21 @@ mod tests {
         set_level(Level::Info);
         emit(Level::Info, "test", format_args!("hello {}", 42));
         emit(Level::Trace, "test", format_args!("filtered"));
+    }
+
+    #[test]
+    fn json_escaping_covers_specials_and_controls() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("line\nfeed\ttab\rret"), "line\\nfeed\\ttab\\rret");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn json_emit_does_not_panic_and_restores_format() {
+        set_level(Level::Info);
+        set_format(Format::Json);
+        emit(Level::Info, "gate\"way", format_args!("msg with \"quotes\" and \\slashes\\"));
+        set_format(Format::Human);
     }
 }

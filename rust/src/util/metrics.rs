@@ -1,0 +1,511 @@
+//! Typed metric registry: the process-wide single source of truth for
+//! serving observability.
+//!
+//! Zero-dep by construction (no prometheus crate in the offline image):
+//! three instrument types over plain atomics —
+//!
+//! - [`Counter`]: monotone u64 (requests, conversions, respawns).
+//! - [`Gauge`]: signed level (queue depth, active sessions).
+//! - [`Histogram`]: fixed log-scale buckets over integer microseconds
+//!   (per-stage pipeline latency).  Buckets are chosen at registration
+//!   and never resize, so `observe` is lock-free.
+//!
+//! Instruments are owned by a [`MetricRegistry`] keyed by family name +
+//! one optional label pair.  Handles are `Arc`s: the serving tier holds
+//! its handle and bumps atomics on the hot path; the registry walks the
+//! same atomics at scrape time to render Prometheus text exposition
+//! (`text/plain; version=0.0.4`).  The legacy human-readable report
+//! (`ServingMetrics::report`) reads the *same* counters, which is what
+//! keeps the exposition and the report-line parsers in exact agreement.
+//!
+//! Label cardinality is bounded by design: labels are only ever model /
+//! worker / stage names, and a family caps its children at
+//! [`MAX_SERIES_PER_FAMILY`] — past the cap, new label values collapse
+//! into one shared `"_overflow"` series instead of growing without
+//! bound (a gateway fed garbage model names must not OOM the scrape).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Hard cap on distinct label values per family; the overflow series
+/// absorbs the rest.
+pub const MAX_SERIES_PER_FAMILY: usize = 64;
+
+/// Label value used once a family hits [`MAX_SERIES_PER_FAMILY`].
+pub const OVERFLOW_LABEL: &str = "_overflow";
+
+/// Log-scale (powers of 4) bucket bounds in microseconds: 1 µs … ~16.8 s.
+/// Shared by every latency histogram so stage timings are comparable.
+pub const LATENCY_BUCKETS_US: [u64; 13] = [
+    1,
+    4,
+    16,
+    64,
+    256,
+    1_024,
+    4_096,
+    16_384,
+    65_536,
+    262_144,
+    1_048_576,
+    4_194_304,
+    16_777_216,
+];
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by one, returning the pre-increment value (a free
+    /// 0-based admission/sequence index for callers that want one).
+    pub fn inc(&self) -> u64 {
+        self.v.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// Raise the counter to `target` if it is currently below it — the
+    /// sync primitive for sources that publish cumulative snapshots
+    /// (plan store, fabric) rather than incrementing per event.
+    pub fn raise_to(&self, target: u64) {
+        self.v.fetch_max(target, Ordering::Relaxed);
+    }
+}
+
+/// Signed level gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: i64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.v.fetch_add(d, Ordering::SeqCst);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::SeqCst)
+    }
+
+    /// Atomically increment iff the current value is below `cap`.
+    /// Returns whether the increment happened — this is the gateway's
+    /// admission-control compare-and-increment, kept on the gauge so
+    /// the admission count and the exported `active` series are one
+    /// atomic, not two that can disagree.
+    pub fn try_inc_below(&self, cap: i64) -> bool {
+        self.v
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| (n < cap).then_some(n + 1))
+            .is_ok()
+    }
+}
+
+/// Fixed-bucket histogram over integer values (microseconds by
+/// convention).  Bucket counts are per-bucket (not cumulative) in
+/// memory; rendering accumulates.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    buckets: Vec<AtomicU64>, // bounds.len() + 1, last = overflow (+Inf)
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn with_bounds(bounds: &[u64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must be strictly increasing");
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, value: u64) {
+        let idx = self.bounds.partition_point(|&b| b < value);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative counts per upper bound, ending with the +Inf bucket
+    /// (`None` bound) — exactly the exposition's `_bucket` series.
+    pub fn cumulative(&self) -> Vec<(Option<u64>, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.buckets.len());
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            out.push((self.bounds.get(i).copied(), acc));
+        }
+        out
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Child {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Family {
+    help: String,
+    kind: Kind,
+    /// The one label key this family uses (`None` = unlabeled family).
+    /// Bounded-cardinality rule: a family is either unlabeled or keyed
+    /// by exactly one of model/worker/stage — never free-form pairs.
+    label_key: Option<String>,
+    bounds: Vec<u64>, // histograms only
+    children: BTreeMap<String, Child>,
+}
+
+/// The process-wide registry.  One per coordinator (tests get isolated
+/// registries for free); every component registers its families here
+/// and keeps the returned `Arc` handle.
+#[derive(Default)]
+pub struct MetricRegistry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        MetricRegistry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        match self.child(name, help, Kind::Counter, None, &[]) {
+            Child::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn counter_labeled(&self, name: &str, help: &str, key: &str, value: &str) -> Arc<Counter> {
+        match self.child(name, help, Kind::Counter, Some((key, value)), &[]) {
+            Child::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        match self.child(name, help, Kind::Gauge, None, &[]) {
+            Child::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn gauge_labeled(&self, name: &str, help: &str, key: &str, value: &str) -> Arc<Gauge> {
+        match self.child(name, help, Kind::Gauge, Some((key, value)), &[]) {
+            Child::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[u64]) -> Arc<Histogram> {
+        match self.child(name, help, Kind::Histogram, None, bounds) {
+            Child::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    pub fn histogram_labeled(
+        &self,
+        name: &str,
+        help: &str,
+        key: &str,
+        value: &str,
+        bounds: &[u64],
+    ) -> Arc<Histogram> {
+        match self.child(name, help, Kind::Histogram, Some((key, value)), bounds) {
+            Child::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get-or-register: same (name, label) always returns the same
+    /// handle.  Re-registering a name with a different kind or label
+    /// key is a programming error and panics loudly.
+    fn child(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        label: Option<(&str, &str)>,
+        bounds: &[u64],
+    ) -> Child {
+        let mut families = self.families.lock().unwrap();
+        let fam = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            label_key: label.map(|(k, _)| k.to_string()),
+            bounds: bounds.to_vec(),
+            children: BTreeMap::new(),
+        });
+        assert_eq!(fam.kind, kind, "metric family `{name}` re-registered as a different kind");
+        assert_eq!(
+            fam.label_key.as_deref(),
+            label.map(|(k, _)| k),
+            "metric family `{name}` re-registered with a different label key"
+        );
+        let mut value = label.map(|(_, v)| v).unwrap_or("").to_string();
+        if fam.children.len() >= MAX_SERIES_PER_FAMILY && !fam.children.contains_key(&value) {
+            value = OVERFLOW_LABEL.to_string(); // bounded cardinality
+        }
+        let fam_bounds = fam.bounds.clone();
+        fam.children
+            .entry(value)
+            .or_insert_with(|| match kind {
+                Kind::Counter => Child::Counter(Arc::new(Counter::default())),
+                Kind::Gauge => Child::Gauge(Arc::new(Gauge::default())),
+                Kind::Histogram => Child::Histogram(Arc::new(Histogram::with_bounds(&fam_bounds))),
+            })
+            .clone()
+    }
+
+    /// Render the whole registry as Prometheus text exposition
+    /// (`text/plain; version=0.0.4`): `# HELP` / `# TYPE` per family,
+    /// cumulative `_bucket{le=...}` + `_sum`/`_count` for histograms,
+    /// `le="+Inf"` terminal.
+    pub fn render_prometheus(&self) -> String {
+        let families = self.families.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in families.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", escape_help(&fam.help));
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind.name());
+            for (value, child) in &fam.children {
+                let label = fam
+                    .label_key
+                    .as_deref()
+                    .map(|k| format!("{k}=\"{}\"", escape_label(value)))
+                    .unwrap_or_default();
+                match child {
+                    Child::Counter(c) => {
+                        let _ = writeln!(out, "{name}{} {}", braced(&label), c.get());
+                    }
+                    Child::Gauge(g) => {
+                        let _ = writeln!(out, "{name}{} {}", braced(&label), g.get());
+                    }
+                    Child::Histogram(h) => {
+                        for (bound, cum) in h.cumulative() {
+                            let le = match bound {
+                                Some(b) => format!("le=\"{b}\""),
+                                None => "le=\"+Inf\"".to_string(),
+                            };
+                            let labels = if label.is_empty() {
+                                le
+                            } else {
+                                format!("{label},{le}")
+                            };
+                            let _ = writeln!(out, "{name}_bucket{{{labels}}} {cum}");
+                        }
+                        let _ = writeln!(out, "{name}_sum{} {}", braced(&label), h.sum());
+                        let _ = writeln!(out, "{name}_count{} {}", braced(&label), h.count());
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn braced(label: &str) -> String {
+    if label.is_empty() {
+        String::new()
+    } else {
+        format!("{{{label}}}")
+    }
+}
+
+/// Label-value escaping per the exposition format: backslash, double
+/// quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// HELP text escaping: backslash and newline only (quotes are legal).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let reg = MetricRegistry::new();
+        let c = reg.counter("rns_requests_total", "requests");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name returns the same underlying atomic
+        let c2 = reg.counter("rns_requests_total", "requests");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        c.raise_to(10);
+        assert_eq!(c.get(), 10);
+        c.raise_to(3); // never goes backwards
+        assert_eq!(c.get(), 10);
+
+        let g = reg.gauge("rns_queue_depth", "queued requests");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+    }
+
+    #[test]
+    fn gauge_admission_compare_and_increment() {
+        let g = Gauge::default();
+        assert!(g.try_inc_below(2));
+        assert!(g.try_inc_below(2));
+        assert!(!g.try_inc_below(2), "at cap: refused");
+        assert_eq!(g.get(), 2);
+        g.add(-1);
+        assert!(g.try_inc_below(2), "freed slot re-admits");
+    }
+
+    #[test]
+    fn histogram_buckets_fill_and_accumulate() {
+        let h = Histogram::with_bounds(&[10, 100, 1000]);
+        h.observe(5); // <= 10
+        h.observe(10); // <= 10 (bounds are inclusive upper edges)
+        h.observe(99); // <= 100
+        h.observe(5000); // +Inf overflow
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 5 + 10 + 99 + 5000);
+        let cum = h.cumulative();
+        assert_eq!(cum, vec![(Some(10), 2), (Some(100), 3), (Some(1000), 3), (None, 4)]);
+    }
+
+    #[test]
+    fn latency_bucket_bounds_are_strictly_increasing() {
+        assert!(LATENCY_BUCKETS_US.windows(2).all(|w| w[0] < w[1]));
+        let h = Histogram::with_bounds(&LATENCY_BUCKETS_US);
+        h.observe(0);
+        h.observe(u64::MAX / 2);
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn labeled_children_are_distinct_and_bounded() {
+        let reg = MetricRegistry::new();
+        let a = reg.counter_labeled("rns_model_batches_total", "per-model", "model", "mlp");
+        let b = reg.counter_labeled("rns_model_batches_total", "per-model", "model", "bert");
+        a.inc();
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        assert_eq!(b.get(), 1);
+        // cardinality cap: values beyond MAX_SERIES_PER_FAMILY share the
+        // overflow series
+        for i in 0..(MAX_SERIES_PER_FAMILY * 2) {
+            reg.counter_labeled("rns_model_batches_total", "per-model", "model", &format!("m{i}"))
+                .inc();
+        }
+        let text = reg.render_prometheus();
+        let series = text.lines().filter(|l| l.starts_with("rns_model_batches_total{")).count();
+        assert!(series <= MAX_SERIES_PER_FAMILY, "{series} series rendered");
+        assert!(text.contains(&format!("model=\"{OVERFLOW_LABEL}\"")), "{text}");
+    }
+
+    #[test]
+    fn prometheus_rendering_grammar() {
+        let reg = MetricRegistry::new();
+        reg.counter("rns_adc_conversions_total", "ADC conversions").add(700);
+        reg.gauge("rns_queue_depth", "queued requests").set(-3);
+        let h = reg.histogram_labeled(
+            "rns_stage_latency_us",
+            "per-stage latency",
+            "stage",
+            "decode",
+            &[10, 100],
+        );
+        h.observe(7);
+        h.observe(50);
+        h.observe(900);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# HELP rns_adc_conversions_total ADC conversions\n"), "{text}");
+        assert!(text.contains("# TYPE rns_adc_conversions_total counter\n"), "{text}");
+        assert!(text.contains("\nrns_adc_conversions_total 700\n"), "{text}");
+        assert!(text.contains("\nrns_queue_depth -3\n"), "{text}");
+        assert!(text.contains("# TYPE rns_stage_latency_us histogram\n"), "{text}");
+        assert!(text.contains("rns_stage_latency_us_bucket{stage=\"decode\",le=\"10\"} 1\n"));
+        assert!(text.contains("rns_stage_latency_us_bucket{stage=\"decode\",le=\"100\"} 2\n"));
+        assert!(text.contains("rns_stage_latency_us_bucket{stage=\"decode\",le=\"+Inf\"} 3\n"));
+        assert!(text.contains("rns_stage_latency_us_sum{stage=\"decode\"} 957\n"), "{text}");
+        assert!(text.contains("rns_stage_latency_us_count{stage=\"decode\"} 3\n"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = MetricRegistry::new();
+        reg.counter_labeled("rns_model_batches_total", "h", "model", "a\"b\\c\nd").inc();
+        let text = reg.render_prometheus();
+        assert!(text.contains("model=\"a\\\"b\\\\c\\nd\""), "{text}");
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let reg = MetricRegistry::new();
+        reg.counter("rns_thing", "h");
+        reg.gauge("rns_thing", "h");
+    }
+}

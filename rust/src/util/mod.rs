@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod config;
 pub mod logging;
+pub mod metrics;
 pub mod prop;
 pub mod rng;
 pub mod stats;

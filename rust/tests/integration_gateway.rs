@@ -342,16 +342,17 @@ fn http_metrics_scrape_serves_live_report() {
     let mut client = Client::connect(&addr).expect("connect");
     client.infer(SYNTHETIC_MLP, &input(1)).expect("infer");
 
-    let scrape = |path: &str| -> String {
+    let scrape = |method: &str, path: &str| -> String {
         let mut s = TcpStream::connect(&addr).expect("connect");
         s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
-        write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+        write!(s, "{method} {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+            .unwrap();
         let mut out = String::new();
         s.read_to_string(&mut out).expect("response");
         out
     };
 
-    let ok = scrape("/metrics");
+    let ok = scrape("GET", "/metrics");
     assert!(ok.starts_with("HTTP/1.1 200 OK"), "{ok}");
     assert!(ok.contains("Content-Type: text/plain"), "{ok}");
     // PR-2 global lines unchanged for old parsers...
@@ -362,13 +363,27 @@ fn http_metrics_scrape_serves_live_report() {
     assert!(ok.contains("gateway: sessions=1 active=1"), "{ok}");
     assert!(ok.contains("gateway latency: p50="), "{ok}");
 
-    let missing = scrape("/nope");
+    // query-string routing: same path, Prometheus exposition body
+    let prom = scrape("GET", "/metrics?format=prometheus");
+    assert!(prom.starts_with("HTTP/1.1 200 OK"), "{prom}");
+    assert!(prom.contains("Content-Type: text/plain; version=0.0.4"), "{prom}");
+    assert!(prom.contains("# TYPE rns_requests_total counter"), "{prom}");
+
+    // HEAD: status + headers only, no body after the blank line
+    let head = scrape("HEAD", "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+    let (headers, body) = head.split_once("\r\n\r\n").expect("header terminator");
+    assert!(headers.contains("Content-Length: "), "{head}");
+    assert!(body.is_empty(), "HEAD must carry no body: {head}");
+
+    let missing = scrape("GET", "/nope");
     assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
 
-    // scrapes are exempt from admission and counted separately
+    // scrapes are exempt from admission and counted separately —
+    // every HTTP request counts, hit or miss, GET or HEAD
     client.close();
     let report = gw.shutdown();
-    assert!(line_with(&report, "gateway: ").contains("scrapes=2"), "{report}");
+    assert!(line_with(&report, "gateway: ").contains("scrapes=4"), "{report}");
 }
 
 #[test]

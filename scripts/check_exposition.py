@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-exposition (0.0.4) scrape.
+
+CI scrapes the live gateway at `/metrics?format=prometheus` during the
+smoke/chaos runs and pipes the body through this script, which fails on
+malformed exposition rather than trusting a 200 status: every sample
+line must parse, every sampled family must have been announced by
+`# HELP` + `# TYPE` lines first, histogram buckets must be cumulative
+and monotone with a terminal `le="+Inf"` bucket equal to `_count`, and
+counters must not be negative.
+
+Gate mode: `--require-nonzero FAMILY` (repeatable) additionally asserts
+that the named family has at least one sample with value > 0 — the
+chaos job uses this to pin `rns_supervision_respawns_total`, proving the
+scrape happened *after* the injected faults were survived, not against
+an idle server.
+
+Usage:
+    python3 scripts/check_exposition.py metrics.txt
+    curl -s "$URL" | python3 scripts/check_exposition.py -
+    python3 scripts/check_exposition.py metrics.txt \
+        --require-nonzero rns_supervision_respawns_total
+"""
+
+import argparse
+import re
+import sys
+
+# sample line: name{labels} value  — labels optional, value is a float
+SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{([^}]*)\})?\s+(-?[0-9.eE+]+|[+-]Inf|NaN)$"
+)
+LABEL_RE = re.compile(r'^([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"$')
+NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+# sample suffixes that belong to the announced base family
+TYPE_SUFFIXES = {
+    "histogram": ("_bucket", "_sum", "_count"),
+    "summary": ("_sum", "_count"),
+    "counter": (),
+    "gauge": (),
+    "untyped": (),
+}
+
+
+def base_family(name, types):
+    """Map a sample name back to its announced family, if any."""
+    if name in types:
+        return name
+    for fam, kind in types.items():
+        for suffix in TYPE_SUFFIXES.get(kind, ()):
+            if name == fam + suffix:
+                return fam
+    return None
+
+
+def parse_labels(raw):
+    labels = {}
+    if not raw:
+        return labels
+    for part in split_label_pairs(raw):
+        m = LABEL_RE.match(part)
+        if m is None:
+            raise ValueError(f"bad label pair `{part}`")
+        labels[m.group(1)] = m.group(2)
+    return labels
+
+
+def split_label_pairs(raw):
+    """Split `a="x",b="y"` on commas outside quoted values."""
+    parts, cur, in_quotes, escaped = [], "", False, False
+    for ch in raw:
+        if escaped:
+            cur += ch
+            escaped = False
+        elif ch == "\\":
+            cur += ch
+            escaped = True
+        elif ch == '"':
+            cur += ch
+            in_quotes = not in_quotes
+        elif ch == "," and not in_quotes:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur:
+        parts.append(cur)
+    return parts
+
+
+def check(text, require_nonzero):
+    errors = []
+    types = {}  # family -> type
+    helped = set()
+    # (family, non-le labels) -> [(le, value)], plus _count per series
+    buckets = {}
+    counts = {}
+    family_max = {}  # family -> max sample value seen
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line or line.isspace():
+            continue
+        if line.startswith("# HELP "):
+            rest = line[len("# HELP ") :]
+            fam = rest.split(" ", 1)[0]
+            if not NAME_RE.match(fam):
+                errors.append(f"line {lineno}: bad HELP family name `{fam}`")
+            elif fam in helped:
+                errors.append(f"line {lineno}: duplicate HELP for `{fam}`")
+            helped.add(fam)
+            continue
+        if line.startswith("# TYPE "):
+            rest = line[len("# TYPE ") :].split()
+            if len(rest) != 2 or rest[1] not in TYPE_SUFFIXES:
+                errors.append(f"line {lineno}: bad TYPE line `{line}`")
+                continue
+            fam, kind = rest
+            if fam in types:
+                errors.append(f"line {lineno}: duplicate TYPE for `{fam}`")
+            if fam not in helped:
+                errors.append(f"line {lineno}: TYPE for `{fam}` before its HELP")
+            types[fam] = kind
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment
+        m = SAMPLE_RE.match(line)
+        if m is None:
+            errors.append(f"line {lineno}: unparseable sample `{line}`")
+            continue
+        name, _, rawlabels, rawvalue = m.groups()
+        try:
+            labels = parse_labels(rawlabels)
+        except ValueError as e:
+            errors.append(f"line {lineno}: {e}")
+            continue
+        value = float(rawvalue.replace("Inf", "inf"))
+        fam = base_family(name, types)
+        if fam is None:
+            errors.append(f"line {lineno}: sample `{name}` has no HELP/TYPE")
+            continue
+        kind = types[fam]
+        if kind == "counter" and value < 0:
+            errors.append(f"line {lineno}: counter `{name}` is negative")
+        family_max[fam] = max(family_max.get(fam, float("-inf")), value)
+        if kind == "histogram":
+            rest_labels = tuple(
+                sorted((k, v) for k, v in labels.items() if k != "le")
+            )
+            series = (fam, rest_labels)
+            if name == fam + "_bucket":
+                if "le" not in labels:
+                    errors.append(f"line {lineno}: bucket without `le` label")
+                    continue
+                le = float(labels["le"].replace("Inf", "inf"))
+                buckets.setdefault(series, []).append((le, value, lineno))
+            elif name == fam + "_count":
+                counts[series] = (value, lineno)
+
+    for series, bs in buckets.items():
+        fam, labels = series
+        where = f"`{fam}`" + (f" {dict(labels)}" if labels else "")
+        prev = -1.0
+        for le, value, lineno in bs:
+            if value < prev:
+                errors.append(
+                    f"line {lineno}: {where} bucket le={le} not cumulative "
+                    f"({value} < {prev})"
+                )
+            prev = value
+        les = [le for le, _, _ in bs]
+        if les != sorted(les):
+            errors.append(f"{where}: bucket `le` bounds out of order")
+        if not les or les[-1] != float("inf"):
+            errors.append(f"{where}: missing terminal le=\"+Inf\" bucket")
+        elif series in counts and bs[-1][1] != counts[series][0]:
+            errors.append(
+                f"{where}: +Inf bucket {bs[-1][1]} != _count {counts[series][0]}"
+            )
+        if series not in counts:
+            errors.append(f"{where}: histogram without a _count sample")
+
+    for fam in require_nonzero:
+        if fam not in types:
+            errors.append(f"--require-nonzero: family `{fam}` not exposed")
+        elif family_max.get(fam, 0) <= 0:
+            errors.append(f"--require-nonzero: `{fam}` has no sample > 0")
+
+    n_samples = sum(1 for l in text.splitlines() if l and not l.startswith("#"))
+    return errors, len(types), n_samples
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="exposition file, or `-` for stdin")
+    ap.add_argument(
+        "--require-nonzero",
+        action="append",
+        default=[],
+        metavar="FAMILY",
+        help="fail unless FAMILY has a sample with value > 0 (repeatable)",
+    )
+    args = ap.parse_args()
+    if args.path == "-":
+        text = sys.stdin.read()
+    else:
+        with open(args.path) as f:
+            text = f.read()
+    errors, n_families, n_samples = check(text, args.require_nonzero)
+    if errors:
+        for e in errors:
+            print(f"exposition error: {e}", file=sys.stderr)
+        sys.exit(1)
+    if n_families == 0:
+        print("exposition error: no metric families found", file=sys.stderr)
+        sys.exit(1)
+    print(f"exposition OK: {n_families} families, {n_samples} samples")
+
+
+if __name__ == "__main__":
+    main()
