@@ -625,11 +625,14 @@ fn handle_frame(
                     };
                     tx.send(frame).ok();
                 });
-            // the `admission` pipeline stage: batch validation through
-            // coordinator accept (queueing starts after this)
-            shared.admission.observe(t0.elapsed().as_micros() as u64);
-            if let Err(e) = submitted {
-                reply_tx.send(Frame::Error { id, code: ErrorCode::Internal, message: e }).ok();
+            match submitted {
+                // the `admission` pipeline stage: batch validation through
+                // coordinator accept (queueing starts after this); rejected
+                // submissions don't count as admitted
+                Ok(_) => shared.admission.observe(t0.elapsed().as_micros() as u64),
+                Err(e) => {
+                    reply_tx.send(Frame::Error { id, code: ErrorCode::Internal, message: e }).ok();
+                }
             }
         }
         // a reply kind arriving at the server is a client bug

@@ -29,11 +29,12 @@ use std::fmt::Write as _;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Hard cap on distinct label values per family; the overflow series
-/// absorbs the rest.
+/// Hard cap on total series per family, overflow series included: up to
+/// `MAX_SERIES_PER_FAMILY - 1` regular label values, then the overflow
+/// series absorbs the rest.
 pub const MAX_SERIES_PER_FAMILY: usize = 64;
 
-/// Label value used once a family hits [`MAX_SERIES_PER_FAMILY`].
+/// Label value that absorbs new values once a family reaches its cap.
 pub const OVERFLOW_LABEL: &str = "_overflow";
 
 /// Log-scale (powers of 4) bucket bounds in microseconds: 1 µs … ~16.8 s.
@@ -288,8 +289,10 @@ impl MetricRegistry {
             "metric family `{name}` re-registered with a different label key"
         );
         let mut value = label.map(|(_, v)| v).unwrap_or("").to_string();
-        if fam.children.len() >= MAX_SERIES_PER_FAMILY && !fam.children.contains_key(&value) {
-            value = OVERFLOW_LABEL.to_string(); // bounded cardinality
+        // bounded cardinality: the overflow series counts toward the cap,
+        // so at most MAX_SERIES_PER_FAMILY - 1 regular series + `_overflow`
+        if fam.children.len() >= MAX_SERIES_PER_FAMILY - 1 && !fam.children.contains_key(&value) {
+            value = OVERFLOW_LABEL.to_string();
         }
         let fam_bounds = fam.bounds.clone();
         fam.children
