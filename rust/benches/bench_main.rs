@@ -405,7 +405,7 @@ fn serve_shaped_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
 /// gates gateway >= 0.2x in-process (bench_trend.py `gateway`) — the
 /// wire must never cost more than the serving math.
 fn gateway_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
-    if !want("serve/gateway") && !want("serve/coordinator 24") {
+    if !want("serve/gateway") && !want("serve/coordinator 24") && !want("serve/loadgen") {
         return;
     }
     use rns_analog::net::{Client, Gateway, GatewayConfig};
@@ -465,6 +465,38 @@ fn gateway_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool) {
             gw.shutdown()
         },
     );
+    // the PR-9 sustained-RPS headline: the same 24-request stream driven
+    // by the loadgen harness (closed-loop, bounded window) through the
+    // event-driven session layer.  bench_trend.py tracks this bench's
+    // absolute rate as the `rps` headline and CI gates it — serving
+    // throughput, not just kernel microbenches.
+    if want("serve/loadgen") {
+        b.bench_with_rate(
+            "serve/loadgen 24 reqs synthetic-mlp rns-b6 event-loop",
+            REQS as f64,
+            "req/s",
+            || {
+                let gw_cfg = GatewayConfig {
+                    listen_addr: "127.0.0.1:0".into(),
+                    loop_threads: 2,
+                    ..Default::default()
+                };
+                let gw = Gateway::start(Coordinator::start(mk_cfg()), gw_cfg).expect("gateway");
+                let lg = rns_analog::net::LoadgenConfig {
+                    addr: gw.local_addr().to_string(),
+                    conns: CLIENTS,
+                    requests: REQS as u64,
+                    window: 8,
+                    duration: std::time::Duration::from_secs(60),
+                    ..rns_analog::net::LoadgenConfig::default()
+                };
+                let report = rns_analog::net::loadgen::run(&lg).expect("loadgen");
+                assert_eq!(report.failures, 0, "loadgen bench must complete cleanly");
+                gw.shutdown();
+                report.ok
+            },
+        );
+    }
 }
 
 fn figure_benches(b: &mut Bencher, want: &dyn Fn(&str) -> bool, quick: bool) {

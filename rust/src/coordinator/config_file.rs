@@ -24,7 +24,10 @@
 //!                                 # RNS_NATIVE_THREADS, else core count)
 //! listen_addr = "127.0.0.1:7070"  # TCP gateway (omit to stay in-process)
 //! max_sessions = 64               # gateway admission cap
-//! idle_timeout_ms = 30000         # per-session read/write timeout
+//! idle_timeout_ms = 30000         # per-session idle timeout
+//! loop_threads = 1                # readiness-loop threads for the
+//!                                 # event-driven session layer (sessions
+//!                                 # cost slab entries, not thread pairs)
 //! admin_token = "s3cret"          # shared secret for load/unload/shutdown
 //!                                 # (empty/unset = loopback-only fallback;
 //!                                 # env RNS_ADMIN_TOKEN overrides)
@@ -177,10 +180,15 @@ pub fn gateway_from_config(cfg: &Config) -> Result<Option<GatewayConfig>, String
     if idle_ms < 1 {
         return Err("serve.idle_timeout_ms must be >= 1".into());
     }
+    let loop_threads = cfg.int_or("serve.loop_threads", defaults.loop_threads as i64);
+    if loop_threads < 1 {
+        return Err("serve.loop_threads must be >= 1".into());
+    }
     Ok(Some(GatewayConfig {
         listen_addr,
         max_sessions: max_sessions as usize,
         idle_timeout: Duration::from_millis(idle_ms as u64),
+        loop_threads: loop_threads as usize,
         admin_token: admin_token_from_config(cfg),
         chaos: chaos_from_config(cfg)?,
     }))
@@ -315,15 +323,18 @@ fabric_threads = 6
         assert_eq!(gw.listen_addr, "127.0.0.1:7070");
         assert_eq!(gw.max_sessions, GatewayConfig::default().max_sessions);
         assert_eq!(gw.idle_timeout, GatewayConfig::default().idle_timeout);
+        assert_eq!(gw.loop_threads, GatewayConfig::default().loop_threads);
         // full block
         let cfg = Config::parse(
-            "[serve]\nlisten_addr = \"0.0.0.0:9000\"\nmax_sessions = 8\nidle_timeout_ms = 1500\n",
+            "[serve]\nlisten_addr = \"0.0.0.0:9000\"\nmax_sessions = 8\nidle_timeout_ms = 1500\n\
+             loop_threads = 2\n",
         )
         .unwrap();
         let gw = gateway_from_config(&cfg).unwrap().expect("gateway");
         assert_eq!(gw.listen_addr, "0.0.0.0:9000");
         assert_eq!(gw.max_sessions, 8);
         assert_eq!(gw.idle_timeout, Duration::from_millis(1500));
+        assert_eq!(gw.loop_threads, 2);
         assert!(gw.admin_token.is_none(), "unset token means loopback-only fallback");
         // admin token + session-drop chaos flow into the gateway block
         let cfg = Config::parse(
@@ -339,6 +350,7 @@ fabric_threads = 6
         for bad in [
             "[serve]\nlisten_addr = \"x\"\nmax_sessions = 0",
             "[serve]\nlisten_addr = \"x\"\nidle_timeout_ms = 0",
+            "[serve]\nlisten_addr = \"x\"\nloop_threads = 0",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(gateway_from_config(&cfg).is_err(), "{bad}");

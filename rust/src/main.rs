@@ -5,6 +5,9 @@
 //!               fig5, fig6, fig7, headline, all)
 //!   infer       run one model through a chosen core and report accuracy
 //!   serve       run the serving coordinator on a synthetic request stream
+//!   loadgen     drive a serving gateway with a composable workload blend
+//!               (open-loop arrivals, Zipf model popularity) and report
+//!               sustained RPS + latency percentiles
 //!   pjrt-demo   prove the AOT path: run the pallas-kernel artifact via PJRT
 //!               and check it against the native engine bit-for-bit
 
@@ -32,6 +35,7 @@ fn main() {
         Some("exp") => cmd_exp(&mut args),
         Some("infer") => cmd_infer(&mut args),
         Some("serve") => cmd_serve(&mut args),
+        Some("loadgen") => cmd_loadgen(&mut args),
         Some("pjrt-demo") => cmd_pjrt_demo(&mut args),
         Some(other) => {
             eprintln!("unknown subcommand `{other}`");
@@ -57,6 +61,8 @@ fn usage() {
          serve [--config=configs/rns_b6.toml | --backend=...]\n\
              [--requests=64] [--workers=2] [--max-batch=8]\n\
              [--listen=127.0.0.1:7070] [--max-sessions=64] [--idle-timeout-ms=30000]\n\
+             [--loop-threads=1]  (readiness-loop threads for the event-driven\n\
+              session layer; sessions cost slab entries, not threads)\n\
              [--serve-seconds=N]   (gateway mode: serve TCP clients instead of a\n\
               synthetic stream; drains on a client Shutdown frame, or after N seconds)\n\
              [--admin-token=SECRET]  (require this token on load/unload/shutdown\n\
@@ -69,6 +75,13 @@ fn usage() {
              [--sparse-capture]  (conversion-avoiding sparse execution on RNS\n\
               backends; skipped conversions show as skipped-dac=/skipped-adc=\n\
               on the energy: metrics line)\n\
+         loadgen --addr=127.0.0.1:7070 [--workload=infer:0.9,stats:0.1]\n\
+             [--models=synthetic-mlp] [--zipf-s=1.1] [--conns=4] [--seconds=10]\n\
+             [--rate=0]  (open-loop arrivals in req/s across all connections;\n\
+              0 = closed-loop with --window=32 requests in flight per conn)\n\
+             [--requests=0] [--deadline-ms=0] [--seed=42] [--p99-budget-ms=0]\n\
+             [--token=SECRET]  (admin token for load/unload ops in the blend;\n\
+              env RNS_ADMIN_TOKEN also works)\n\
          pjrt-demo [--bits=6]"
     );
 }
@@ -390,6 +403,15 @@ fn cmd_serve(args: &mut Args) -> i32 {
                 }
             }
         }
+        if let Some(n) = args.get("loop-threads") {
+            match n.parse::<usize>() {
+                Ok(v) if v >= 1 => g.loop_threads = v,
+                _ => {
+                    eprintln!("--loop-threads={n}: want an integer >= 1");
+                    return 2;
+                }
+            }
+        }
     }
     // 0 = serve until a client Shutdown frame; a typo must not silently
     // become "forever", so parse errors are fatal like the other flags
@@ -464,6 +486,71 @@ fn cmd_serve_gateway(cfg: CoordinatorConfig, gw_cfg: GatewayConfig, serve_second
     let report = gw.shutdown();
     println!("[gateway] clean shutdown\n--- final report ---\n{report}");
     0
+}
+
+/// Drive a running gateway with a composable workload blend and print
+/// the one-line load report (`failures=`, `rps=`, `p99_us=` are the
+/// greppable fields CI and the bench trend consume).
+fn cmd_loadgen(args: &mut Args) -> i32 {
+    use rns_analog::net::{DataSet, LoadgenConfig, Workload};
+    let workload = match Workload::parse(&args.get_or("workload", "infer")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("--workload: {e}");
+            return 2;
+        }
+    };
+    let models: Vec<String> = args
+        .get_or("models", "synthetic-mlp")
+        .split(',')
+        .filter(|m| !m.trim().is_empty())
+        .map(|m| m.trim().to_string())
+        .collect();
+    let admin_token = match args.get("token") {
+        Some(t) => t,
+        None => std::env::var("RNS_ADMIN_TOKEN").unwrap_or_default(),
+    };
+    let parsed = (|| -> Result<LoadgenConfig, String> {
+        Ok(LoadgenConfig {
+            addr: args.get_or("addr", "127.0.0.1:7070"),
+            workload,
+            data: DataSet::default(),
+            models,
+            zipf_s: args.get_parsed::<f64>("zipf-s", 1.1)?,
+            rate: args.get_parsed::<f64>("rate", 0.0)?,
+            conns: args.get_parsed::<usize>("conns", 4)?,
+            duration: std::time::Duration::from_secs(args.get_parsed::<u64>("seconds", 10)?),
+            requests: args.get_parsed::<u64>("requests", 0)?,
+            window: args.get_parsed::<usize>("window", 32)?,
+            deadline_ms: args.get_parsed::<u32>("deadline-ms", 0)?,
+            admin_token,
+            seed: args.get_parsed::<u64>("seed", 42)?,
+            p99_budget_us: args.get_parsed::<f64>("p99-budget-ms", 0.0)? * 1000.0,
+        })
+    })();
+    let cfg = match parsed {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let report = match rns_analog::net::loadgen::run(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loadgen: {e}");
+            return 1;
+        }
+    };
+    println!("{report}");
+    if let Some(err) = &report.last_error {
+        eprintln!("loadgen: last failure: {err}");
+    }
+    if report.failures > 0 || report.p99_within_budget == Some(false) {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_pjrt_demo(args: &mut Args) -> i32 {

@@ -1,20 +1,24 @@
 //! The TCP serving gateway: the network edge in front of the
 //! `Coordinator`.
 //!
-//! One acceptor thread owns the `TcpListener`; every connection gets a
-//! session thread.  A session sniffs its first four bytes: `b"RNSG"`
-//! starts the binary wire protocol (protocol.rs), `b"GET "` / `b"HEAD"`
-//! is an HTTP/1.1 scrape (so the running server is scrapeable with no
-//! extra port).  `GET /metrics` serves the live human-readable report;
+//! One acceptor thread owns the `TcpListener` and hands every accepted
+//! connection to one of `GatewayConfig::loop_threads` **readiness
+//! loops** (`net/poll.rs`, round-robin) — sessions cost loop slab
+//! entries, not OS threads, so the thread count is flat in session
+//! count.  A connection's first four bytes are sniffed on the loop:
+//! `b"RNSG"` starts the binary wire protocol (protocol.rs), `b"GET "` /
+//! `b"HEAD"` is an HTTP/1.1 scrape handed to a short-lived responder
+//! thread (so the running server is scrapeable with no extra port).
+//! `GET /metrics` serves the live human-readable report;
 //! `GET /metrics?format=prometheus` serves the same registry as
 //! Prometheus text exposition (`text/plain; version=0.0.4`); `HEAD`
 //! returns the headers alone.
 //!
 //! **Counters.**  The gateway's own counters (sessions, frames,
-//! protocol errors, scrapes) are registered into the coordinator's
-//! `MetricRegistry` at start — the `gateway:` report lines and the
-//! `rns_gateway_*` exposition families read the same atomics, so the
-//! two can never disagree.
+//! protocol errors, scrapes, per-loop busy time) are registered into
+//! the coordinator's `MetricRegistry` at start — the `gateway:` report
+//! lines and the `rns_gateway_*` exposition families read the same
+//! atomics, so the two can never disagree.
 //!
 //! **Admission.**  Binary sessions are capped at
 //! `GatewayConfig::max_sessions`: past the cap the handshake reply
@@ -23,24 +27,24 @@
 //! Metrics scrapes are exempt — observability must work *especially*
 //! under overload.
 //!
-//! **Sessions.**  A session runs two threads: the reader (the session
-//! thread itself) parses frames and pipelines `Infer` requests straight
-//! into the coordinator via `CoordinatorHandle::submit_routed`, and a
-//! writer serializes replies from a channel.  Responses correlate by the
-//! client-chosen request id — the routed delivery callback carries the
-//! id into the reply frame — so a client may keep many requests in
-//! flight and the `DynamicBatcher` sees them all.  The writer exits when
-//! every reply sender is gone: the reader's own clone (dropped at
-//! reader exit) plus one clone inside each in-flight request's delivery
-//! callback — which is exactly the "no accepted request loses its
-//! reply" invariant.
+//! **Sessions.**  A session lives entirely on its readiness loop:
+//! incremental frame reassembly (`FrameAssembler`) turns nonblocking
+//! reads into frames, `Infer` requests pipeline straight into the
+//! coordinator via `CoordinatorHandle::submit_routed_with_deadline`,
+//! and the routed delivery callback enqueues the reply back to the loop
+//! through its wakeup pipe (generation-fenced token, so a reused slot
+//! never receives a dead session's reply).  Responses correlate by the
+//! client-chosen request id, so a client may keep many requests in
+//! flight and the `DynamicBatcher` sees them all.
 //!
-//! **Shutdown.**  `Gateway::shutdown` stops the acceptor, then calls
-//! `TcpStream::shutdown(Read)` on every live session: readers see EOF
-//! and stop accepting frames, writers still deliver every in-flight
-//! reply, sessions close.  Only then does the coordinator drain through
-//! its own `ControlMsg` path (queued batches complete before workers
-//! exit).  A client can request this remotely with a `Shutdown` frame.
+//! **Shutdown.**  `Gateway::shutdown` stops the acceptor, then sends
+//! every loop a drain message: loops half-close each session's read
+//! side (peers see EOF, no new frames) and keep flushing until every
+//! in-flight reply has been delivered — the "no accepted request loses
+//! its reply" invariant, now tracked as a per-connection in-flight
+//! count.  Only then does the coordinator drain through its own
+//! `ControlMsg` path (queued batches complete before workers exit).  A
+//! client can request all this remotely with a `Shutdown` frame.
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -54,13 +58,14 @@ use crate::coordinator::chaos::ChaosSpec;
 use crate::coordinator::metrics::{stage_histogram, GatewayReport};
 use crate::coordinator::request::ServeErrorKind;
 use crate::coordinator::server::{Coordinator, CoordinatorHandle};
-use crate::net::protocol::{ErrorCode, Frame, HelloStatus, WireError, MAGIC, VERSION};
+use crate::net::poll::{spawn_loop, LoopHandle, LoopMsg, ReplyRoute};
+use crate::net::protocol::{ErrorCode, Frame, HelloStatus, MAGIC, VERSION};
 use crate::util::metrics::{Counter, Gauge, Histogram, LATENCY_BUCKETS_US};
 use crate::util::stats::Reservoir;
 
 /// Gateway knobs (config file: `[serve] listen_addr / max_sessions /
-/// idle_timeout_ms / admin_token`; CLI: `serve --listen=...
-/// --max-sessions=...`).
+/// idle_timeout_ms / loop_threads / admin_token`; CLI: `serve
+/// --listen=... --max-sessions=... --loop-threads=...`).
 #[derive(Clone, Debug)]
 pub struct GatewayConfig {
     /// Bind address; port 0 picks an ephemeral port (tests read it back
@@ -68,9 +73,13 @@ pub struct GatewayConfig {
     pub listen_addr: String,
     /// Admission cap on concurrent binary sessions.
     pub max_sessions: usize,
-    /// Per-session read/write timeout: a session idle (or stalled
-    /// mid-frame) this long is closed.
+    /// Per-session idle timeout: a session with no read or write
+    /// progress this long is closed.
     pub idle_timeout: Duration,
+    /// Readiness loops serving sessions (sessions hash round-robin at
+    /// accept).  One loop drives hundreds of sessions; more loops help
+    /// once frame decode/dispatch itself saturates a core.
+    pub loop_threads: usize,
     /// Shared secret for admin frames (load/unload/shutdown).  `Some`:
     /// every admin frame must carry this token, from any peer.  `None`:
     /// the loopback-only fallback — admin frames are honored only from
@@ -88,6 +97,7 @@ impl Default for GatewayConfig {
             listen_addr: "127.0.0.1:7070".into(),
             max_sessions: 64,
             idle_timeout: Duration::from_secs(30),
+            loop_threads: 1,
             admin_token: None,
             chaos: ChaosSpec::default(),
         }
@@ -110,51 +120,42 @@ const MAX_HTTP_HEAD: usize = 8 << 10;
 /// sorts a bounded copy.
 const LATENCY_RESERVOIR: usize = 4096;
 
-/// State shared by the acceptor, every session thread, and the owning
-/// `Gateway`.
-struct GatewayShared {
-    handle: CoordinatorHandle,
-    cfg: GatewayConfig,
+/// State shared by the acceptor, the readiness loops, scrape threads,
+/// and the owning `Gateway`.
+pub(crate) struct GatewayShared {
+    pub(crate) handle: CoordinatorHandle,
+    pub(crate) cfg: GatewayConfig,
     /// Live binary sessions.  Admission control and the exported
     /// `rns_gateway_active_sessions` gauge are ONE atomic: the session
     /// cap is enforced with `Gauge::try_inc_below`, so the count a
     /// scrape sees is the count admission acted on.
-    active: Arc<Gauge>,
-    accepted: Arc<Counter>,
-    rejected: Arc<Counter>,
-    frames_in: Arc<Counter>,
-    frames_out: Arc<Counter>,
-    protocol_errors: Arc<Counter>,
+    pub(crate) active: Arc<Gauge>,
+    pub(crate) accepted: Arc<Counter>,
+    pub(crate) rejected: Arc<Counter>,
+    pub(crate) frames_in: Arc<Counter>,
+    pub(crate) frames_out: Arc<Counter>,
+    pub(crate) protocol_errors: Arc<Counter>,
     /// Every HTTP request served (hits *and* 404s — the report's
     /// `scrapes=` key has always counted all of them).
-    scrapes: Arc<Counter>,
+    pub(crate) scrapes: Arc<Counter>,
     /// HTTP requests answered 404, separately from `scrapes`.
-    not_found: Arc<Counter>,
+    pub(crate) not_found: Arc<Counter>,
     /// Gateway-side request latency histogram (same samples the
     /// reservoir percentiles summarize, exported with full buckets).
-    request_latency: Arc<Histogram>,
+    pub(crate) request_latency: Arc<Histogram>,
     /// The `admission` stage of `rns_stage_latency_us`: frame decode →
     /// coordinator accept, observed in the Infer path.
-    admission: Arc<Histogram>,
+    pub(crate) admission: Arc<Histogram>,
     /// Gateway-side request latency (submit → reply delivery), µs —
     /// bounded reservoir, not all-time history.  Shared as its own Arc
     /// so routed delivery callbacks don't capture the whole
-    /// `GatewayShared` (which would cycle through the routes map back
-    /// to itself).
-    latency_us: Arc<Mutex<Reservoir>>,
+    /// `GatewayShared`.
+    pub(crate) latency_us: Arc<Mutex<Reservoir>>,
     /// Set during shutdown: new sessions and new `Infer` frames are
     /// refused while in-flight replies drain.
-    draining: AtomicBool,
+    pub(crate) draining: AtomicBool,
     /// Signals `Gateway::wait_shutdown` when a client sends `Shutdown`.
-    shutdown_tx: Mutex<Option<Sender<()>>>,
-    /// Live session bookkeeping: a stream clone (for the drain-time
-    /// read-shutdown) plus the session thread's handle.
-    sessions: Mutex<Vec<SessionSlot>>,
-}
-
-struct SessionSlot {
-    stream: TcpStream,
-    thread: JoinHandle<()>,
+    pub(crate) shutdown_tx: Mutex<Option<Sender<()>>>,
 }
 
 impl GatewayShared {
@@ -205,15 +206,6 @@ impl GatewayShared {
     }
 }
 
-/// Decrements the admission gauge when a session ends, however it ends.
-struct ActiveGuard(Arc<GatewayShared>);
-
-impl Drop for ActiveGuard {
-    fn drop(&mut self) {
-        self.0.active.add(-1);
-    }
-}
-
 /// A running gateway.  Owns the `Coordinator`; `shutdown` drains the
 /// network tier first, then the coordinator, and returns the final
 /// report (gateway lines included).
@@ -223,6 +215,8 @@ pub struct Gateway {
     local_addr: SocketAddr,
     stop_accepting: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    loops: Vec<LoopHandle>,
+    loop_joins: Vec<JoinHandle<usize>>,
     shutdown_rx: Receiver<()>,
 }
 
@@ -239,6 +233,7 @@ impl Gateway {
         // the gateway's counters live in the coordinator's registry:
         // report lines and exposition families read the same atomics
         let reg = handle.metric_registry();
+        let loop_threads = cfg.loop_threads.max(1);
         let shared = Arc::new(GatewayShared {
             cfg,
             active: reg.gauge("rns_gateway_active_sessions", "Live binary sessions"),
@@ -263,20 +258,30 @@ impl Gateway {
             latency_us: Arc::new(Mutex::new(Reservoir::new(LATENCY_RESERVOIR, 0x6A7E_11A7))),
             draining: AtomicBool::new(false),
             shutdown_tx: Mutex::new(Some(shutdown_tx)),
-            sessions: Mutex::new(Vec::new()),
         });
+        // session threads are gone: the thread budget is the acceptor +
+        // this fixed loop pool, independent of session count
+        reg.gauge("rns_gateway_loop_threads", "Readiness-loop threads serving binary sessions")
+            .set(loop_threads as i64);
+        let mut loops = Vec::with_capacity(loop_threads);
+        let mut loop_joins = Vec::with_capacity(loop_threads);
+        for i in 0..loop_threads {
+            let (h, j) = spawn_loop(Arc::clone(&shared), i)?;
+            loops.push(h);
+            loop_joins.push(j);
+        }
         let stop = Arc::new(AtomicBool::new(false));
         let acceptor = {
-            let shared = Arc::clone(&shared);
+            let loops = loops.clone();
             let stop = Arc::clone(&stop);
             std::thread::Builder::new()
                 .name("rns-gw-acceptor".into())
-                .spawn(move || acceptor_loop(listener, shared, stop))
+                .spawn(move || acceptor_loop(listener, loops, stop))
                 .map_err(|e| e.to_string())?
         };
         crate::log_info!(
             "gateway",
-            "listening on {local_addr} (max {} sessions)",
+            "listening on {local_addr} (max {} sessions, {loop_threads} loop thread(s))",
             shared.cfg.max_sessions
         );
         Ok(Gateway {
@@ -285,6 +290,8 @@ impl Gateway {
             local_addr,
             stop_accepting: stop,
             acceptor: Some(acceptor),
+            loops,
+            loop_joins,
             shutdown_rx,
         })
     }
@@ -313,16 +320,15 @@ impl Gateway {
             a.join().ok();
         }
         self.shared.draining.store(true, Ordering::SeqCst);
-        // half-close every live session's read side: its reader sees EOF
-        // and stops accepting frames, while its writer still delivers
-        // every reply already owed — zero accepted requests are lost
-        let slots: Vec<SessionSlot> = self.shared.sessions.lock().unwrap().drain(..).collect();
-        for s in &slots {
-            s.stream.shutdown(Shutdown::Read).ok();
+        // each loop half-closes its sessions' read sides (peers see EOF,
+        // no new frames) and exits once every owed reply is flushed —
+        // zero accepted requests are lost
+        for l in &self.loops {
+            l.send(LoopMsg::Drain);
         }
-        let n_sessions = slots.len();
-        for s in slots {
-            s.thread.join().ok();
+        let mut n_sessions = 0usize;
+        for j in self.loop_joins.drain(..) {
+            n_sessions += j.join().unwrap_or(0);
         }
         crate::log_info!("gateway", "drained {n_sessions} session(s); stopping coordinator");
         let coord = self.coord.take().expect("gateway owns the coordinator");
@@ -331,25 +337,15 @@ impl Gateway {
     }
 }
 
-fn acceptor_loop(listener: TcpListener, shared: Arc<GatewayShared>, stop: Arc<AtomicBool>) {
+fn acceptor_loop(listener: TcpListener, loops: Vec<LoopHandle>, stop: Arc<AtomicBool>) {
+    let mut next = 0usize;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, peer)) => {
-                let slot_stream = match stream.try_clone() {
-                    Ok(c) => c,
-                    Err(_) => continue,
-                };
-                let sshared = Arc::clone(&shared);
-                let spawned = std::thread::Builder::new()
-                    .name("rns-gw-session".into())
-                    .spawn(move || session_entry(stream, peer, sshared));
-                if let Ok(thread) = spawned {
-                    let mut sessions = shared.sessions.lock().unwrap();
-                    // reap finished sessions so the slot list tracks live
-                    // connections, not connection history
-                    sessions.retain(|s| !s.thread.is_finished());
-                    sessions.push(SessionSlot { stream: slot_stream, thread });
-                }
+                // round-robin across the loop pool; the loop does the
+                // sniff/handshake/admission work on its own thread
+                loops[next % loops.len()].send(LoopMsg::Conn(stream, peer));
+                next = next.wrapping_add(1);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
@@ -359,167 +355,34 @@ fn acceptor_loop(listener: TcpListener, shared: Arc<GatewayShared>, stop: Arc<At
     }
 }
 
-/// Write the 7-byte server hello: MAGIC + VERSION + status.
-fn write_hello(stream: &mut TcpStream, status: HelloStatus) -> std::io::Result<()> {
-    let mut hello = Vec::with_capacity(7);
-    hello.extend_from_slice(&MAGIC);
-    hello.extend_from_slice(&VERSION.to_le_bytes());
-    hello.push(status.to_byte());
-    stream.write_all(&hello)
+/// The 7-byte server hello: MAGIC + VERSION + status.
+pub(crate) fn hello_bytes(status: HelloStatus) -> [u8; 7] {
+    let mut hello = [0u8; 7];
+    hello[..4].copy_from_slice(&MAGIC);
+    hello[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    hello[6] = status.to_byte();
+    hello
 }
 
-/// Refuse a session: non-ok hello status, one typed `Error` frame with
-/// the reason, close.
-fn reject(stream: &mut TcpStream, status: HelloStatus, code: ErrorCode, msg: &str) {
-    if write_hello(stream, status).is_ok() {
+/// Refuse a session on a blocking stream: non-ok hello status, one typed
+/// `Error` frame with the reason, close.  (The readiness loops queue the
+/// same byte sequence through their write buffers instead.)
+pub(crate) fn reject(stream: &mut TcpStream, status: HelloStatus, code: ErrorCode, msg: &str) {
+    if stream.write_all(&hello_bytes(status)).is_ok() {
         let frame = Frame::Error { id: 0, code, message: msg.to_string() };
         stream.write_all(&frame.encode()).ok();
     }
     stream.shutdown(Shutdown::Both).ok();
 }
 
-fn session_entry(mut stream: TcpStream, peer: SocketAddr, shared: Arc<GatewayShared>) {
-    // the listener is nonblocking for the acceptor's stop-flag poll; the
-    // session itself is blocking I/O (inheritance is platform-dependent)
-    stream.set_nonblocking(false).ok();
-    stream.set_read_timeout(Some(shared.cfg.idle_timeout)).ok();
-    stream.set_write_timeout(Some(shared.cfg.idle_timeout)).ok();
-    stream.set_nodelay(true).ok();
-    let mut first = [0u8; 4];
-    if stream.read_exact(&mut first).is_err() {
-        return;
-    }
-    if &first == b"GET " || &first == b"HEAD" {
-        serve_http(stream, &shared, &first == b"HEAD");
-        return;
-    }
-    if first != MAGIC {
-        shared.protocol_errors.inc();
-        stream.shutdown(Shutdown::Both).ok();
-        return;
-    }
-    let mut ver = [0u8; 2];
-    if stream.read_exact(&mut ver).is_err() {
-        return;
-    }
-    let version = u16::from_le_bytes(ver);
-    if version != VERSION {
-        shared.rejected.inc();
-        reject(
-            &mut stream,
-            HelloStatus::BadVersion,
-            ErrorCode::Protocol,
-            &format!("server speaks protocol v{VERSION}, client sent v{version}"),
-        );
-        return;
-    }
-    if shared.draining.load(Ordering::SeqCst) {
-        shared.rejected.inc();
-        reject(&mut stream, HelloStatus::Draining, ErrorCode::Draining, "gateway is draining");
-        return;
-    }
-    // admission: reserve a live-session slot or refuse with the typed
-    // overload frame.  The compare-and-increment runs on the exported
-    // gauge itself, so a burst of connects cannot oversubscribe the cap
-    // and a scrape can never see a count admission didn't act on.
-    let admitted = shared.active.try_inc_below(shared.cfg.max_sessions as i64);
-    if !admitted {
-        shared.rejected.inc();
-        reject(
-            &mut stream,
-            HelloStatus::Overloaded,
-            ErrorCode::Overloaded,
-            &format!("gateway at capacity ({} sessions)", shared.cfg.max_sessions),
-        );
-        return;
-    }
-    let _guard = ActiveGuard(Arc::clone(&shared));
-    // the pre-increment value is this session's 0-based admission index —
-    // the `s{S}` coordinate of `drop@s{S}:f{N}` chaos events
-    let session_idx = shared.accepted.inc();
-    if write_hello(&mut stream, HelloStatus::Ok).is_err() {
-        return;
-    }
-    // admin frames (load/unload/shutdown) need authorization: a matching
-    // shared-secret token when one is configured, else loopback-only —
-    // a non-loopback bind must not hand every peer the power to drop
-    // models or drain the server
-    let peer_is_loopback = peer.ip().is_loopback();
-    let chaos_drop = shared.cfg.chaos.session_drop(session_idx);
-    crate::log_debug!("gateway", "session {session_idx} open from {peer}");
-    run_session(stream, peer_is_loopback, chaos_drop, &shared);
-    crate::log_debug!("gateway", "session from {peer} closed");
-}
-
-fn run_session(
-    stream: TcpStream,
-    peer_is_loopback: bool,
-    chaos_drop: Option<u64>,
-    shared: &Arc<GatewayShared>,
-) {
-    let write_half = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let (reply_tx, reply_rx) = mpsc::channel::<Frame>();
-    let wshared = Arc::clone(shared);
-    let writer = match std::thread::Builder::new()
-        .name("rns-gw-writer".into())
-        .spawn(move || writer_loop(write_half, reply_rx, wshared))
-    {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = stream;
-    let mut frames_read: u64 = 0;
-    loop {
-        match Frame::read_from(&mut reader) {
-            Ok(frame) => {
-                shared.frames_in.inc();
-                frames_read += 1;
-                let keep = handle_frame(frame, peer_is_loopback, shared, &reply_tx);
-                // injected connection drop: sever abruptly *after* the
-                // Nth frame was accepted, exactly like a peer vanishing
-                // mid-conversation — the client's reconnect/retry path
-                // must recover (in-flight replies die with the socket)
-                if chaos_drop == Some(frames_read) {
-                    crate::log_warn!(
-                        "gateway",
-                        "chaos: dropping session after frame {frames_read}"
-                    );
-                    reader.shutdown(Shutdown::Both).ok();
-                    break;
-                }
-                if !keep {
-                    break;
-                }
-            }
-            // clean close, idle timeout, or the drain-time read-shutdown
-            Err(WireError::Eof) | Err(WireError::Io(_)) => break,
-            Err(WireError::Protocol(msg)) => {
-                // reply with the typed protocol error, then close: the
-                // frame boundary is unknown, resync is impossible
-                shared.protocol_errors.inc();
-                reply_tx.send(Frame::Error { id: 0, code: ErrorCode::Protocol, message: msg }).ok();
-                break;
-            }
-        }
-    }
-    // reader done: once every in-flight request's delivery callback has
-    // fired (each holds a reply sender), the writer's channel closes and
-    // it exits having written every owed reply
-    drop(reply_tx);
-    writer.join().ok();
-}
-
 /// Reply to an unauthorized admin frame with the reason that applies.
-fn deny_admin(id: u64, token_mode: bool, reply_tx: &Sender<Frame>) {
+fn deny_admin(id: u64, token_mode: bool, sync: &mut Vec<Frame>) {
     let message = if token_mode {
         "admin frames (load/unload/shutdown) require the configured admin token".to_string()
     } else {
         "admin frames (load/unload/shutdown) are loopback-only".to_string()
     };
-    reply_tx.send(Frame::Error { id, code: ErrorCode::Unauthorized, message }).ok();
+    sync.push(Frame::Error { id, code: ErrorCode::Unauthorized, message });
 }
 
 /// The wire error code for a typed coordinator failure.
@@ -532,62 +395,72 @@ fn wire_code(kind: ServeErrorKind) -> ErrorCode {
     }
 }
 
-/// Handle one request frame; returns whether the session continues.
-fn handle_frame(
+/// What one dispatched frame did to its session.
+pub(crate) struct FrameOutcome {
+    /// Keep reading from this session (false: protocol violation, close
+    /// after the queued replies flush).
+    pub(crate) keep: bool,
+    /// An `Infer` was accepted by the coordinator: a routed delivery
+    /// callback now owes the session exactly one reply frame.
+    pub(crate) submitted: bool,
+}
+
+/// Handle one request frame.  Synchronous replies are pushed onto
+/// `sync` (the loop queues them on the connection's write buffer);
+/// `Infer` replies arrive later through `route` when the coordinator
+/// delivers.
+pub(crate) fn handle_frame(
     frame: Frame,
     peer_is_loopback: bool,
     shared: &Arc<GatewayShared>,
-    reply_tx: &Sender<Frame>,
-) -> bool {
+    sync: &mut Vec<Frame>,
+    route: &ReplyRoute,
+) -> FrameOutcome {
     let token_mode = shared.cfg.admin_token.is_some();
     match frame {
         Frame::Ping { id } => {
-            reply_tx.send(Frame::Pong { id }).ok();
+            sync.push(Frame::Pong { id });
         }
         Frame::Stats { id } => {
             let text = shared.report();
-            reply_tx.send(Frame::StatsReport { id, text }).ok();
+            sync.push(Frame::StatsReport { id, text });
         }
         Frame::Traces { id } => {
             let text = shared.handle.traces_report();
-            reply_tx.send(Frame::TracesReport { id, text }).ok();
+            sync.push(Frame::TracesReport { id, text });
         }
         Frame::LoadModel { id, model, token } => {
             if !shared.admin_ok(peer_is_loopback, &token) {
-                deny_admin(id, token_mode, reply_tx);
-                return true;
+                deny_admin(id, token_mode, sync);
+                return FrameOutcome { keep: true, submitted: false };
             }
             match shared.handle.load_model(&model) {
-                Ok(()) => {
-                    reply_tx.send(Frame::Ack { id, info: format!("loaded `{model}`") }).ok();
-                }
-                Err(e) => {
-                    reply_tx.send(Frame::Error { id, code: ErrorCode::Model, message: e }).ok();
-                }
+                Ok(()) => sync.push(Frame::Ack { id, info: format!("loaded `{model}`") }),
+                Err(e) => sync.push(Frame::Error { id, code: ErrorCode::Model, message: e }),
             }
         }
         Frame::UnloadModel { id, model, token } => {
             if !shared.admin_ok(peer_is_loopback, &token) {
-                deny_admin(id, token_mode, reply_tx);
-                return true;
+                deny_admin(id, token_mode, sync);
+                return FrameOutcome { keep: true, submitted: false };
             }
             let evicted = shared.handle.unload_model(&model);
             let info = format!("unloaded `{model}`: {evicted} plans evicted");
-            reply_tx.send(Frame::Ack { id, info }).ok();
+            sync.push(Frame::Ack { id, info });
         }
         Frame::Shutdown { id, token } => {
             if !shared.admin_ok(peer_is_loopback, &token) {
-                deny_admin(id, token_mode, reply_tx);
-                return true;
+                deny_admin(id, token_mode, sync);
+                return FrameOutcome { keep: true, submitted: false };
             }
-            reply_tx.send(Frame::Ack { id, info: "draining".into() }).ok();
+            sync.push(Frame::Ack { id, info: "draining".into() });
             shared.signal_shutdown();
         }
         Frame::Infer { id, model, deadline_ms, input } => {
             if shared.draining.load(Ordering::SeqCst) {
                 let message = "gateway is draining".to_string();
-                reply_tx.send(Frame::Error { id, code: ErrorCode::Draining, message }).ok();
-                return true;
+                sync.push(Frame::Error { id, code: ErrorCode::Draining, message });
+                return FrameOutcome { keep: true, submitted: false };
             }
             let batch = match input.into_batch() {
                 Ok(b) => b,
@@ -595,11 +468,11 @@ fn handle_frame(
                     // declared-shape mismatch: framing is intact, so the
                     // session survives — reply typed and keep reading
                     shared.protocol_errors.inc();
-                    reply_tx.send(Frame::Error { id, code: ErrorCode::Protocol, message: e }).ok();
-                    return true;
+                    sync.push(Frame::Error { id, code: ErrorCode::Protocol, message: e });
+                    return FrameOutcome { keep: true, submitted: false };
                 }
             };
-            let tx = reply_tx.clone();
+            let route = route.clone();
             let latency = Arc::clone(&shared.latency_us);
             let latency_hist = Arc::clone(&shared.request_latency);
             let t0 = Instant::now();
@@ -623,15 +496,18 @@ fn handle_frame(
                             Frame::Error { id, code: wire_code(e.kind), message: e.message }
                         }
                     };
-                    tx.send(frame).ok();
+                    route.deliver(frame);
                 });
             match submitted {
                 // the `admission` pipeline stage: batch validation through
                 // coordinator accept (queueing starts after this); rejected
                 // submissions don't count as admitted
-                Ok(_) => shared.admission.observe(t0.elapsed().as_micros() as u64),
+                Ok(_) => {
+                    shared.admission.observe(t0.elapsed().as_micros() as u64);
+                    return FrameOutcome { keep: true, submitted: true };
+                }
                 Err(e) => {
-                    reply_tx.send(Frame::Error { id, code: ErrorCode::Internal, message: e }).ok();
+                    sync.push(Frame::Error { id, code: ErrorCode::Internal, message: e });
                 }
             }
         }
@@ -639,33 +515,18 @@ fn handle_frame(
         other => {
             shared.protocol_errors.inc();
             let message = "reply frame sent to server".to_string();
-            reply_tx
-                .send(Frame::Error { id: other.id(), code: ErrorCode::Protocol, message })
-                .ok();
-            return false;
+            sync.push(Frame::Error { id: other.id(), code: ErrorCode::Protocol, message });
+            return FrameOutcome { keep: false, submitted: false };
         }
     }
-    true
-}
-
-fn writer_loop(mut stream: TcpStream, reply_rx: Receiver<Frame>, shared: Arc<GatewayShared>) {
-    while let Ok(frame) = reply_rx.recv() {
-        if stream.write_all(&frame.encode()).is_err() {
-            // peer gone: kick the reader out of its blocking read, then
-            // drain silently so routed deliveries never block on us
-            stream.shutdown(Shutdown::Both).ok();
-            while reply_rx.recv().is_ok() {}
-            return;
-        }
-        shared.frames_out.inc();
-    }
+    FrameOutcome { keep: true, submitted: false }
 }
 
 /// Minimal HTTP/1.1 responder for metrics scrapes.  The 4-byte method
 /// sniff (`b"GET "` / `b"HEAD"`) has already been consumed; everything
 /// up to the blank line is read (bounded) and only the request target
 /// matters.  `HEAD` writes the status line + headers and no body.
-fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>, is_head: bool) {
+pub(crate) fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>, is_head: bool) {
     // every HTTP request counts as a scrape, hit or miss, GET or HEAD
     shared.scrapes.inc();
     let mut head = Vec::new();

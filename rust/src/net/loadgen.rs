@@ -1,0 +1,621 @@
+//! Composable load-generation harness for the TCP gateway (the
+//! `loadgen` subcommand).
+//!
+//! Modeled on compositional load-harness designs: a **workload** is a
+//! value — a leaf operation or a weighted blend of workloads — sampled
+//! per request, and the **data set** (what an `Infer` carries) is a
+//! separate value, so the same blend can run over different payloads.
+//! Model popularity is drawn from a **Zipf** distribution over the
+//! model list (rank 1 most popular), matching the skew real serving
+//! fleets see.  Arrivals are **open-loop**: requests are injected on a
+//! Poisson schedule at a fixed rate regardless of completions, so
+//! queueing delay shows up as latency (closed-loop harnesses hide it by
+//! slowing the offered load down to the service rate).  `rate = 0`
+//! switches to closed-loop with a bounded in-flight window — the
+//! throughput-probe mode the `serve/loadgen` bench uses.
+//!
+//! Each connection runs a paced sender thread and a reply-reader
+//! thread over the same pipelined wire session the reference client
+//! speaks; replies correlate by request id.  The report line is
+//! greppable (`failures=0`, `rps=`, `p99_us=`) — CI's loadgen-smoke job
+//! and the `rps` bench headline both consume it.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::net::protocol::{Frame, HelloStatus, WireBatch, MAGIC, VERSION};
+use crate::util::rng::Rng;
+use crate::util::stats::Reservoir;
+
+/// A leaf operation, after sampling a workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Infer,
+    Stats,
+    Load,
+    Unload,
+}
+
+const OP_KINDS: usize = 4;
+
+impl Op {
+    fn index(self) -> usize {
+        match self {
+            Op::Infer => 0,
+            Op::Stats => 1,
+            Op::Load => 2,
+            Op::Unload => 3,
+        }
+    }
+}
+
+/// A workload as a compositional value: leaves are wire operations,
+/// `Blend` mixes sub-workloads by weight.  Blends nest, so e.g. a 90/10
+/// read/admin split whose admin half is itself a load/unload blend is
+/// one value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Workload {
+    Infer,
+    Stats,
+    Load,
+    Unload,
+    Blend(Vec<(f64, Workload)>),
+}
+
+impl Workload {
+    /// Parse a blend spec: comma-separated `name:weight` terms, e.g.
+    /// `infer:0.92,stats:0.04,load:0.02,unload:0.02` (a bare `infer`
+    /// weighs 1).  Weights are relative, not required to sum to 1.
+    pub fn parse(spec: &str) -> Result<Workload, String> {
+        let mut terms = Vec::new();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, weight) = match part.split_once(':') {
+                Some((n, w)) => {
+                    let w: f64 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("workload `{part}`: weight is not a number"))?;
+                    (n.trim(), w)
+                }
+                None => (part.trim(), 1.0),
+            };
+            if !weight.is_finite() || weight <= 0.0 {
+                return Err(format!("workload `{part}`: weight must be > 0"));
+            }
+            let leaf = match name {
+                "infer" => Workload::Infer,
+                "stats" => Workload::Stats,
+                "load" => Workload::Load,
+                "unload" => Workload::Unload,
+                other => {
+                    return Err(format!(
+                        "unknown workload `{other}` (expected infer/stats/load/unload)"
+                    ))
+                }
+            };
+            terms.push((weight, leaf));
+        }
+        match terms.len() {
+            0 => Err("empty workload spec".into()),
+            1 => Ok(terms.pop().unwrap().1),
+            _ => Ok(Workload::Blend(terms)),
+        }
+    }
+
+    /// Sample one leaf operation.
+    pub fn sample(&self, rng: &mut Rng) -> Op {
+        match self {
+            Workload::Infer => Op::Infer,
+            Workload::Stats => Op::Stats,
+            Workload::Load => Op::Load,
+            Workload::Unload => Op::Unload,
+            Workload::Blend(terms) => {
+                let total: f64 = terms.iter().map(|(w, _)| w).sum();
+                let mut u = rng.uniform() * total;
+                for (w, sub) in terms {
+                    u -= w;
+                    if u <= 0.0 {
+                        return sub.sample(rng);
+                    }
+                }
+                // float drift: fall through to the last term
+                terms.last().expect("non-empty blend").1.sample(rng)
+            }
+        }
+    }
+}
+
+/// What an `Infer` request carries — separate from the workload, so the
+/// same blend runs over any payload shape.
+#[derive(Clone, Debug)]
+pub enum DataSet {
+    /// Fresh seeded-uniform NHWC images each draw (the shape the
+    /// in-tree image models eat; 28×28×1 matches `synthetic-mlp`).
+    SyntheticImages { h: u32, w: u32, c: u32 },
+}
+
+impl Default for DataSet {
+    fn default() -> Self {
+        DataSet::SyntheticImages { h: 28, w: 28, c: 1 }
+    }
+}
+
+impl DataSet {
+    /// Draw one single-sample wire batch.
+    pub fn draw(&self, rng: &mut Rng) -> WireBatch {
+        match self {
+            DataSet::SyntheticImages { h, w, c } => {
+                let len = (h * w * c) as usize;
+                let data = (0..len).map(|_| rng.uniform_f32(0.0, 1.0)).collect();
+                WireBatch::Images { n: 1, h: *h, w: *w, c: *c, data }
+            }
+        }
+    }
+}
+
+/// Zipf(s) sampler over ranks `0..n` (rank 0 most popular): CDF table +
+/// binary search on a uniform draw.  `s = 0` degenerates to uniform.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf over an empty set");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Everything one `loadgen` run needs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub workload: Workload,
+    pub data: DataSet,
+    /// Models to target; popularity is Zipf-ranked in list order.
+    pub models: Vec<String>,
+    pub zipf_s: f64,
+    /// Open-loop arrival rate, requests/second across all connections.
+    /// `0` = closed-loop: each connection keeps up to `window` requests
+    /// in flight (throughput probe).
+    pub rate: f64,
+    pub conns: usize,
+    /// Wall-clock budget for the run (senders stop at the deadline).
+    pub duration: Duration,
+    /// Total request budget; `0` = until `duration` elapses.
+    pub requests: u64,
+    /// Closed-loop in-flight cap per connection (`rate = 0` mode).
+    pub window: usize,
+    pub deadline_ms: u32,
+    /// Token for admin ops in the blend (load/unload); empty relies on
+    /// the gateway's loopback-only fallback.
+    pub admin_token: String,
+    pub seed: u64,
+    /// Flag the run if p99 exceeds this budget (µs); `0` disables.
+    pub p99_budget_us: f64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7070".into(),
+            workload: Workload::Infer,
+            data: DataSet::default(),
+            models: vec!["synthetic-mlp".into()],
+            zipf_s: 1.1,
+            rate: 0.0,
+            conns: 4,
+            duration: Duration::from_secs(10),
+            requests: 0,
+            window: 32,
+            deadline_ms: 0,
+            admin_token: String::new(),
+            seed: 42,
+            p99_budget_us: 0.0,
+        }
+    }
+}
+
+/// Aggregated outcome of a run.  `Display` renders the greppable
+/// one-line summary.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub failures: u64,
+    pub elapsed: Duration,
+    /// Sustained completion rate: ok replies / elapsed.
+    pub rps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Per-op completed counts, indexed like `Op::index`.
+    pub ops: [u64; OP_KINDS],
+    /// `Some(false)` when a p99 budget was set and blown.
+    pub p99_within_budget: Option<bool>,
+    pub last_error: Option<String>,
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "loadgen: sent={} ok={} failures={} elapsed_s={:.2} rps={:.1} \
+             p50_us={:.0} p99_us={:.0} infer={} stats={} load={} unload={}",
+            self.sent,
+            self.ok,
+            self.failures,
+            self.elapsed.as_secs_f64(),
+            self.rps,
+            self.p50_us,
+            self.p99_us,
+            self.ops[0],
+            self.ops[1],
+            self.ops[2],
+            self.ops[3],
+        )?;
+        if let Some(within) = self.p99_within_budget {
+            write!(f, " p99_budget={}", if within { "ok" } else { "EXCEEDED" })?;
+        }
+        Ok(())
+    }
+}
+
+/// Counters shared across every connection's threads.
+struct Totals {
+    sent: AtomicU64,
+    ok: AtomicU64,
+    failures: AtomicU64,
+    ops: [AtomicU64; OP_KINDS],
+    latency_us: Mutex<Reservoir>,
+    last_error: Mutex<Option<String>>,
+}
+
+/// Per-connection shared state between its sender and receiver.
+struct ConnShared {
+    /// id → (send time, op) for in-flight requests.
+    pending: Mutex<HashMap<u64, (Instant, Op)>>,
+    outstanding: AtomicUsize,
+    done_sending: AtomicBool,
+}
+
+/// Handshake mirror of `Client::connect`: client hello, 7-byte server
+/// hello, status check.
+fn connect(addr: &str) -> Result<TcpStream, String> {
+    let mut stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.set_nodelay(true).ok();
+    let mut hello = Vec::with_capacity(6);
+    hello.extend_from_slice(&MAGIC);
+    hello.extend_from_slice(&VERSION.to_le_bytes());
+    stream.write_all(&hello).map_err(|e| format!("handshake write: {e}"))?;
+    let mut reply = [0u8; 7];
+    std::io::Read::read_exact(&mut stream, &mut reply)
+        .map_err(|e| format!("handshake read: {e}"))?;
+    if reply[..4] != MAGIC {
+        return Err("server hello: bad magic".into());
+    }
+    match HelloStatus::from_byte(reply[6]) {
+        Some(HelloStatus::Ok) => Ok(stream),
+        Some(other) => Err(format!("server refused session: {other:?}")),
+        None => Err(format!("server hello: unknown status byte {}", reply[6])),
+    }
+}
+
+/// Run one load-generation campaign; blocks until every connection
+/// finishes.  Errors only on setup failure (bad spec, no connection) —
+/// mid-run transport errors count as request failures in the report.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    if cfg.models.is_empty() {
+        return Err("loadgen needs at least one model".into());
+    }
+    if cfg.conns == 0 {
+        return Err("loadgen needs at least one connection".into());
+    }
+    let totals = Arc::new(Totals {
+        sent: AtomicU64::new(0),
+        ok: AtomicU64::new(0),
+        failures: AtomicU64::new(0),
+        ops: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+        latency_us: Mutex::new(Reservoir::new(8192, cfg.seed ^ 0x10AD_6E11)),
+        last_error: Mutex::new(None),
+    });
+    let zipf = Arc::new(Zipf::new(cfg.models.len(), cfg.zipf_s));
+    let t0 = Instant::now();
+    let deadline = t0 + cfg.duration;
+    let mut threads = Vec::new();
+    for ci in 0..cfg.conns {
+        let stream = connect(&cfg.addr)?;
+        let read_half = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+        let shared = Arc::new(ConnShared {
+            pending: Mutex::new(HashMap::new()),
+            outstanding: AtomicUsize::new(0),
+            done_sending: AtomicBool::new(false),
+        });
+        // split a total-request budget evenly, remainder to low conns
+        let quota = if cfg.requests == 0 {
+            u64::MAX
+        } else {
+            cfg.requests / cfg.conns as u64
+                + u64::from((ci as u64) < cfg.requests % cfg.conns as u64)
+        };
+        let cfg_c = cfg.clone();
+        let totals_c = Arc::clone(&totals);
+        let shared_c = Arc::clone(&shared);
+        let zipf_c = Arc::clone(&zipf);
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-tx{ci}"))
+                .spawn(move || sender(stream, ci, quota, deadline, cfg_c, totals_c, shared_c, zipf_c))
+                .map_err(|e| e.to_string())?,
+        );
+        let totals_c = Arc::clone(&totals);
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-rx{ci}"))
+                .spawn(move || receiver(read_half, totals_c, shared))
+                .map_err(|e| e.to_string())?,
+        );
+    }
+    for t in threads {
+        t.join().map_err(|_| "loadgen thread panicked".to_string())?;
+    }
+    let elapsed = t0.elapsed();
+    let ok = totals.ok.load(Ordering::SeqCst);
+    let (p50_us, p99_us) = {
+        let r = totals.latency_us.lock().unwrap();
+        (r.percentile(50.0), r.percentile(99.0))
+    };
+    let p99_within_budget = (cfg.p99_budget_us > 0.0).then(|| p99_us <= cfg.p99_budget_us);
+    Ok(LoadReport {
+        sent: totals.sent.load(Ordering::SeqCst),
+        ok,
+        failures: totals.failures.load(Ordering::SeqCst),
+        elapsed,
+        rps: ok as f64 / elapsed.as_secs_f64().max(1e-9),
+        p50_us,
+        p99_us,
+        ops: [
+            totals.ops[0].load(Ordering::SeqCst),
+            totals.ops[1].load(Ordering::SeqCst),
+            totals.ops[2].load(Ordering::SeqCst),
+            totals.ops[3].load(Ordering::SeqCst),
+        ],
+        p99_within_budget,
+        last_error: totals.last_error.lock().unwrap().clone(),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sender(
+    mut stream: TcpStream,
+    conn_index: usize,
+    quota: u64,
+    deadline: Instant,
+    cfg: LoadgenConfig,
+    totals: Arc<Totals>,
+    shared: Arc<ConnShared>,
+    zipf: Arc<Zipf>,
+) {
+    let mut rng = Rng::seed_from(cfg.seed.wrapping_add(conn_index as u64 * 0x9E37_79B9));
+    let per_conn_rate = cfg.rate / cfg.conns as f64;
+    let mut next_arrival = Instant::now();
+    let mut id: u64 = 0;
+    let mut sent: u64 = 0;
+    while sent < quota && Instant::now() < deadline {
+        if cfg.rate > 0.0 {
+            // open-loop Poisson arrivals: exponential inter-arrival at
+            // the per-connection rate, independent of completions
+            let gap = -(1.0 - rng.uniform()).ln() / per_conn_rate;
+            next_arrival += Duration::from_secs_f64(gap);
+            let now = Instant::now();
+            if next_arrival > now {
+                std::thread::sleep(next_arrival - now);
+            }
+        } else {
+            // closed-loop: cap in-flight per connection
+            while shared.outstanding.load(Ordering::SeqCst) >= cfg.window {
+                if Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(100));
+            }
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        let op = cfg.workload.sample(&mut rng);
+        let model = cfg.models[zipf.sample(&mut rng)].clone();
+        id += 1;
+        let frame = match op {
+            Op::Infer => Frame::Infer {
+                id,
+                model,
+                deadline_ms: cfg.deadline_ms,
+                input: cfg.data.draw(&mut rng),
+            },
+            Op::Stats => Frame::Stats { id },
+            Op::Load => Frame::LoadModel { id, model, token: cfg.admin_token.clone() },
+            Op::Unload => Frame::UnloadModel { id, model, token: cfg.admin_token.clone() },
+        };
+        shared.pending.lock().unwrap().insert(id, (Instant::now(), op));
+        shared.outstanding.fetch_add(1, Ordering::SeqCst);
+        if stream.write_all(&frame.encode()).is_err() {
+            // transport gone: the receiver will account the in-flight
+            // loss; stop offering
+            shared.pending.lock().unwrap().remove(&id);
+            shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+            break;
+        }
+        sent += 1;
+        totals.sent.fetch_add(1, Ordering::SeqCst);
+    }
+    shared.done_sending.store(true, Ordering::SeqCst);
+    // Wait for in-flight replies (bounded grace past the deadline),
+    // then shut the socket down: that is what unblocks the receiver —
+    // a read timeout instead could fire mid-frame and desync framing.
+    let grace = deadline + Duration::from_secs(10);
+    while shared.outstanding.load(Ordering::SeqCst) > 0 && Instant::now() < grace {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    stream.shutdown(std::net::Shutdown::Both).ok();
+}
+
+fn receiver(mut stream: TcpStream, totals: Arc<Totals>, shared: Arc<ConnShared>) {
+    loop {
+        let frame = match Frame::read_from(&mut stream) {
+            Ok(f) => f,
+            Err(_) => {
+                // EOF or error: clean if the sender finished and every
+                // reply came back, otherwise the in-flight ones are lost
+                let lost = shared.outstanding.swap(0, Ordering::SeqCst) as u64;
+                if lost > 0 {
+                    totals.failures.fetch_add(lost, Ordering::SeqCst);
+                    let mut last = totals.last_error.lock().unwrap();
+                    *last = Some("connection lost with requests in flight".into());
+                }
+                return;
+            }
+        };
+        let id = frame.id();
+        let Some((t_sent, op)) = shared.pending.lock().unwrap().remove(&id) else {
+            continue; // unsolicited (e.g. server error with id 0)
+        };
+        shared.outstanding.fetch_sub(1, Ordering::SeqCst);
+        totals.latency_us.lock().unwrap().add(t_sent.elapsed().as_secs_f64() * 1e6);
+        match frame {
+            Frame::Error { message, code, .. } => {
+                totals.failures.fetch_add(1, Ordering::SeqCst);
+                let mut last = totals.last_error.lock().unwrap();
+                *last = Some(format!("{code:?}: {message}"));
+            }
+            _ => {
+                totals.ok.fetch_add(1, Ordering::SeqCst);
+                totals.ops[op.index()].fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_parse_roundtrips_blends() {
+        let w = Workload::parse("infer:0.9,stats:0.05,load:0.03,unload:0.02").unwrap();
+        let Workload::Blend(terms) = &w else { panic!("expected blend") };
+        assert_eq!(terms.len(), 4);
+        assert_eq!(Workload::parse("infer").unwrap(), Workload::Infer);
+        assert!(Workload::parse("").is_err());
+        assert!(Workload::parse("infer:nope").is_err());
+        assert!(Workload::parse("mystery:1").is_err());
+        assert!(Workload::parse("infer:0").is_err());
+    }
+
+    #[test]
+    fn workload_sampling_tracks_weights() {
+        let w = Workload::parse("infer:0.9,stats:0.1").unwrap();
+        let mut rng = Rng::seed_from(7);
+        let mut counts = [0u32; OP_KINDS];
+        for _ in 0..10_000 {
+            counts[w.sample(&mut rng).index()] += 1;
+        }
+        assert!(counts[Op::Infer.index()] > 8_500, "{counts:?}");
+        assert!(counts[Op::Stats.index()] > 500, "{counts:?}");
+        assert_eq!(counts[Op::Load.index()], 0);
+    }
+
+    #[test]
+    fn nested_blends_sample_leaves() {
+        let w = Workload::Blend(vec![
+            (0.5, Workload::Infer),
+            (0.5, Workload::Blend(vec![(1.0, Workload::Load), (1.0, Workload::Unload)])),
+        ]);
+        let mut rng = Rng::seed_from(11);
+        let mut counts = [0u32; OP_KINDS];
+        for _ in 0..4_000 {
+            counts[w.sample(&mut rng).index()] += 1;
+        }
+        assert!(counts[Op::Infer.index()] > 1_500, "{counts:?}");
+        assert!(counts[Op::Load.index()] > 500, "{counts:?}");
+        assert!(counts[Op::Unload.index()] > 500, "{counts:?}");
+    }
+
+    #[test]
+    fn zipf_rank_zero_dominates_and_covers_all_ranks() {
+        let z = Zipf::new(8, 1.1);
+        let mut rng = Rng::seed_from(3);
+        let mut counts = [0u32; 8];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 0, "rank {i} never sampled: {counts:?}");
+        }
+        assert!(counts[0] > counts[3] && counts[3] > counts[7], "{counts:?}");
+        // s = 0 degenerates to uniform-ish
+        let z = Zipf::new(4, 0.0);
+        let mut counts = [0u32; 4];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 3_500, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn dataset_draws_are_seed_deterministic() {
+        let ds = DataSet::default();
+        let a = ds.draw(&mut Rng::seed_from(9));
+        let b = ds.draw(&mut Rng::seed_from(9));
+        let (WireBatch::Images { data: da, h, w, c, .. }, WireBatch::Images { data: db, .. }) =
+            (a, b)
+        else {
+            panic!("expected images")
+        };
+        assert_eq!((h, w, c), (28, 28, 1));
+        assert_eq!(da.len(), 28 * 28);
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn report_line_is_greppable() {
+        let rep = LoadReport {
+            sent: 10,
+            ok: 10,
+            failures: 0,
+            elapsed: Duration::from_secs(2),
+            rps: 5.0,
+            p50_us: 900.0,
+            p99_us: 4200.0,
+            ops: [8, 2, 0, 0],
+            p99_within_budget: Some(true),
+            last_error: None,
+        };
+        let line = rep.to_string();
+        assert!(line.contains("failures=0"), "{line}");
+        assert!(line.contains("rps=5.0"), "{line}");
+        assert!(line.contains("p99_us=4200"), "{line}");
+        assert!(line.contains("p99_budget=ok"), "{line}");
+    }
+}

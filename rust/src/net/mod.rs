@@ -1,15 +1,23 @@
 //! The network tier: a std-only TCP serving gateway over the L3
 //! coordinator (versioned binary wire protocol, session admission,
-//! graceful drain, and an HTTP `GET /metrics` responder) plus the
-//! blocking reference client.
+//! graceful drain, and an HTTP `GET /metrics` responder), the
+//! event-driven session layer behind it (`poll`: readiness loops over
+//! nonblocking sockets — sessions cost slab entries, not threads), the
+//! blocking reference client, and the composable load-generation
+//! harness (`loadgen`: workload blends, Zipf model popularity,
+//! open-loop arrivals).
 //!
-//! See DESIGN.md §6b for the ownership diagram (who owns sessions, how
-//! the drain composes with the coordinator's control plane).
+//! See DESIGN.md §6b for the gateway ownership diagram and §6e for the
+//! readiness-loop session layer (wakeup-pipe delivery, backpressure,
+//! timer wheel).
 
 pub mod client;
 pub mod gateway;
+pub mod loadgen;
+pub(crate) mod poll;
 pub mod protocol;
 
 pub use client::{Client, ClientError, InferReply, RetryClient, RetryPolicy};
 pub use gateway::{Gateway, GatewayConfig};
-pub use protocol::{ErrorCode, Frame, HelloStatus, WireBatch, WireError};
+pub use loadgen::{DataSet, LoadReport, LoadgenConfig, Workload, Zipf};
+pub use protocol::{ErrorCode, Frame, FrameAssembler, HelloStatus, WireBatch, WireError};

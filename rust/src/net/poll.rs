@@ -1,0 +1,847 @@
+//! Event-driven session layer: readiness loops over nonblocking sockets.
+//!
+//! The pre-PR-9 gateway spent two OS threads per TCP session (blocking
+//! reader + writer).  This module replaces the pair with a small fixed
+//! pool of **readiness loops** (`GatewayConfig::loop_threads`, default
+//! 1), each owning a slab of nonblocking connections — session count no
+//! longer moves the thread count at all.  std has no `epoll`/`kqueue`
+//! surface, so readiness is hand-rolled: each loop sweeps its
+//! connections with nonblocking reads/writes, then parks on a **wakeup
+//! socketpair** with a bounded timeout.
+//!
+//! ## Ownership
+//!
+//! ```text
+//!  acceptor ──LoopMsg::Conn──▶ loop 0 ─┬─ conn slab [token → Conn]
+//!                (round-robin)  loop 1 ─┤    state: Sniff → Active
+//!                                  …    │    FrameAssembler (reads)
+//!                                       │    WriteBuf       (writes)
+//!  coordinator delivery callbacks       │    in_flight, deadline
+//!     └─LoopMsg::Reply{token,gen}──▶────┘
+//!            + 1 byte on the wakeup socketpair
+//! ```
+//!
+//! A connection is owned by exactly one loop for its whole life; no
+//! lock is ever taken on a per-session basis.  Delivery callbacks from
+//! the coordinator run on worker threads, so they cannot touch the slab
+//! directly: they enqueue a `LoopMsg::Reply` on the loop's channel and
+//! write one byte to the wakeup pipe, which pops the loop out of its
+//! idle park immediately (replies never wait for the sweep tick).
+//! Tokens are generation-fenced: a reply for a connection that died and
+//! whose slot was reused is dropped, never cross-delivered.
+//!
+//! ## Backpressure + timeouts
+//!
+//! Writes go through a per-connection buffer flushed opportunistically
+//! until `WouldBlock`.  A peer that stops reading grows its buffer; past
+//! `WRITE_BACKPRESSURE` bytes the loop stops *reading* from that
+//! connection (no new requests → no new replies) until the buffer
+//! drains.  A lazy timer wheel enforces the idle timeout: every
+//! connection keeps one wheel entry; firing re-checks the live deadline
+//! (refreshed on any read or write progress) and either reschedules or
+//! severs the connection.
+//!
+//! ## Latency/CPU trade
+//!
+//! Without kernel readiness, inbound bytes on an otherwise idle loop are
+//! only seen on the next sweep, so the park timeout bounds added request
+//! latency.  The timeout adapts to the slab: ~1 ms up to 256 connections
+//! (latency-first), growing to 8 ms at several thousand (CPU-first —
+//! a full sweep of N sockets costs N nonblocking reads), and 10 ms for
+//! an empty loop.  A busy loop never parks: any progress re-sweeps
+//! immediately, so under load the added latency is ~0 and throughput is
+//! bounded by the work, not the tick.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::net::gateway::{handle_frame, hello_bytes, reject, serve_http, GatewayShared};
+use crate::net::protocol::{ErrorCode, Frame, FrameAssembler, HelloStatus, MAGIC, VERSION};
+use crate::util::metrics::Counter;
+
+/// Stop reading from a connection whose un-flushed reply bytes exceed
+/// this (resume when the peer drains its socket).
+const WRITE_BACKPRESSURE: usize = 4 << 20;
+
+/// Per-connection, per-sweep read bound: after this many bytes the loop
+/// moves on (fairness); leftover socket data re-sweeps immediately.
+const READ_QUANTUM: usize = 64 << 10;
+
+/// Park-timeout shape (see module doc): min / max with live sessions,
+/// and the relaxed tick for a loop with nothing connected.
+const PARK_MIN: Duration = Duration::from_millis(1);
+const PARK_MAX: Duration = Duration::from_millis(8);
+const PARK_EMPTY: Duration = Duration::from_millis(10);
+
+/// Timer-wheel geometry: 128 slots; the slot width scales with the idle
+/// timeout so one rotation comfortably covers it (entries further out
+/// simply re-check and reschedule — the wheel is lazy).
+const WHEEL_SLOTS: usize = 128;
+
+/// Work sent to a readiness loop (always paired with a wakeup byte).
+pub(crate) enum LoopMsg {
+    /// A freshly accepted connection, pre-handshake.
+    Conn(TcpStream, SocketAddr),
+    /// A coordinator reply for session `token` (dropped unless `gen`
+    /// still matches — slots are reused).
+    Reply { token: usize, gen: u64, frame: Frame },
+    /// Graceful drain: stop reading, deliver every owed reply, exit.
+    Drain,
+}
+
+/// Write end of a loop's wakeup socketpair.  Nonblocking: if the socket
+/// buffer is full a wakeup is already pending, so `WouldBlock` is a
+/// success.
+struct WakeHalf {
+    stream: TcpStream,
+}
+
+impl WakeHalf {
+    fn wake(&self) {
+        (&self.stream).write_all(&[1u8]).ok();
+    }
+}
+
+/// Cheap clonable address of one readiness loop; the acceptor and every
+/// delivery callback hold one.
+#[derive(Clone)]
+pub(crate) struct LoopHandle {
+    tx: Sender<LoopMsg>,
+    wake: Arc<WakeHalf>,
+}
+
+impl LoopHandle {
+    pub(crate) fn send(&self, msg: LoopMsg) {
+        if self.tx.send(msg).is_ok() {
+            self.wake.wake();
+        }
+    }
+}
+
+/// Where a routed delivery callback sends its reply frame: loop +
+/// generation-fenced slot.
+#[derive(Clone)]
+pub(crate) struct ReplyRoute {
+    pub(crate) handle: LoopHandle,
+    pub(crate) token: usize,
+    pub(crate) gen: u64,
+}
+
+impl ReplyRoute {
+    pub(crate) fn deliver(&self, frame: Frame) {
+        self.handle.send(LoopMsg::Reply { token: self.token, gen: self.gen, frame });
+    }
+}
+
+/// A loopback socketpair: std exposes no `pipe(2)`, so the wakeup
+/// channel is a connected TCP pair on 127.0.0.1 (write end nonblocking,
+/// read end blocking — the loop parks on it with a read timeout).
+fn socketpair() -> std::io::Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let writer = TcpStream::connect(addr)?;
+    let (reader, _) = listener.accept()?;
+    writer.set_nonblocking(true)?;
+    writer.set_nodelay(true).ok();
+    reader.set_nodelay(true).ok();
+    Ok((writer, reader))
+}
+
+/// Absolute-tick lazy timer wheel.  Each connection keeps at most one
+/// entry; firing verifies against the connection's live deadline and
+/// reschedules when the deadline moved (activity refreshes it).
+struct TimerWheel {
+    slots: Vec<Vec<(usize, u64)>>,
+    tick: Duration,
+    epoch: Instant,
+    /// Next absolute tick to fire (everything below already fired).
+    cursor: u64,
+}
+
+impl TimerWheel {
+    fn new(idle_timeout: Duration, epoch: Instant) -> TimerWheel {
+        // one rotation ≈ 2× the idle timeout, floored at 5 ms slots
+        let tick_ms = (2 * idle_timeout.as_millis() as u64 / WHEEL_SLOTS as u64).clamp(5, 1000);
+        TimerWheel {
+            slots: vec![Vec::new(); WHEEL_SLOTS],
+            tick: Duration::from_millis(tick_ms),
+            epoch,
+            cursor: 1,
+        }
+    }
+
+    fn abs_tick(&self, t: Instant) -> u64 {
+        let ms = t.saturating_duration_since(self.epoch).as_millis() as u64;
+        ms / self.tick.as_millis() as u64
+    }
+
+    /// Insert `(token, gen)` to fire at (or after) `deadline`.
+    fn schedule(&mut self, token: usize, gen: u64, deadline: Instant) {
+        // +1: round up so an entry never fires before its deadline tick
+        let tick = (self.abs_tick(deadline) + 1).max(self.cursor);
+        self.slots[(tick % WHEEL_SLOTS as u64) as usize].push((token, gen));
+    }
+
+    /// Pop every entry whose slot has come due by `now`.
+    fn expired(&mut self, now: Instant) -> Vec<(usize, u64)> {
+        let now_tick = self.abs_tick(now);
+        let mut out = Vec::new();
+        while self.cursor <= now_tick {
+            let slot = (self.cursor % WHEEL_SLOTS as u64) as usize;
+            out.append(&mut self.slots[slot]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Buffered nonblocking writes for one connection.
+struct WriteBuf {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl WriteBuf {
+    fn new() -> WriteBuf {
+        WriteBuf { buf: Vec::new(), pos: 0 }
+    }
+
+    fn queue(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Write until `WouldBlock` or empty.  `Ok(true)` = made progress.
+    fn flush(&mut self, stream: &mut TcpStream) -> std::io::Result<bool> {
+        let mut progress = false;
+        while self.pos < self.buf.len() {
+            match stream.write(&self.buf[self.pos..]) {
+                Ok(0) => return Err(ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.pos += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > (1 << 20) {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(progress)
+    }
+}
+
+enum ConnState {
+    /// Accumulating the first ≤6 bytes: HTTP method sniff, then the
+    /// binary hello (magic + version) and the admission decision.
+    Sniff,
+    /// Handshake accepted (or typed-reject queued with
+    /// `close_after_flush`); frames flow.
+    Active,
+}
+
+struct Conn {
+    stream: TcpStream,
+    peer: SocketAddr,
+    gen: u64,
+    state: ConnState,
+    sniff: Vec<u8>,
+    assembler: FrameAssembler,
+    write_buf: WriteBuf,
+    /// Admitted `Infer` submissions whose delivery callback has not yet
+    /// enqueued a reply — the drain invariant ("no accepted request
+    /// loses its reply") closes a connection only at zero.
+    in_flight: usize,
+    /// Holds an `active` gauge slot (decremented exactly once on close).
+    admitted: bool,
+    session_idx: u64,
+    peer_is_loopback: bool,
+    chaos_drop: Option<u64>,
+    frames_read: u64,
+    read_closed: bool,
+    close_after_flush: bool,
+    deadline: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: SocketAddr, gen: u64, idle_timeout: Duration) -> Conn {
+        Conn {
+            stream,
+            peer,
+            gen,
+            state: ConnState::Sniff,
+            sniff: Vec::with_capacity(6),
+            assembler: FrameAssembler::new(),
+            write_buf: WriteBuf::new(),
+            in_flight: 0,
+            admitted: false,
+            session_idx: 0,
+            peer_is_loopback: peer.ip().is_loopback(),
+            chaos_drop: None,
+            frames_read: 0,
+            read_closed: false,
+            close_after_flush: false,
+            deadline: Instant::now() + idle_timeout,
+        }
+    }
+}
+
+/// One readiness loop: slab of connections + control channel + wakeup
+/// pair + timer wheel.
+struct EventLoop {
+    shared: Arc<GatewayShared>,
+    rx: Receiver<LoopMsg>,
+    /// This loop's own address (delivery callbacks route through it).
+    handle: LoopHandle,
+    wake_rx: TcpStream,
+    wake_timeout: Option<Duration>,
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    next_gen: u64,
+    live: usize,
+    wheel: TimerWheel,
+    draining: bool,
+    /// Admitted sessions alive when `Drain` arrived (the loop's return
+    /// value, summed into the "drained N session(s)" log line).
+    drained_sessions: usize,
+    busy_us: Arc<Counter>,
+    wakeups: Arc<Counter>,
+}
+
+/// Spawn one readiness loop thread; returns its handle and the join
+/// handle (joined at gateway shutdown, yields the drained-session
+/// count).
+pub(crate) fn spawn_loop(
+    shared: Arc<GatewayShared>,
+    index: usize,
+) -> Result<(LoopHandle, JoinHandle<usize>), String> {
+    let (wake_tx, wake_rx) = socketpair().map_err(|e| format!("wakeup socketpair: {e}"))?;
+    let (tx, rx) = mpsc::channel();
+    let handle = LoopHandle { tx, wake: Arc::new(WakeHalf { stream: wake_tx }) };
+    let reg = shared.handle.metric_registry();
+    let label = index.to_string();
+    let busy_us = reg.counter_labeled(
+        "rns_gateway_loop_busy_us",
+        "Readiness-loop time spent sweeping/processing (vs parked), microseconds",
+        "loop",
+        &label,
+    );
+    let wakeups = reg.counter_labeled(
+        "rns_gateway_loop_wakeups_total",
+        "Times the readiness loop was woken through its wakeup pipe",
+        "loop",
+        &label,
+    );
+    let epoch = Instant::now();
+    let wheel = TimerWheel::new(shared.cfg.idle_timeout, epoch);
+    let mut ev = EventLoop {
+        shared,
+        rx,
+        handle: handle.clone(),
+        wake_rx,
+        wake_timeout: None,
+        conns: Vec::new(),
+        free: Vec::new(),
+        next_gen: 1,
+        live: 0,
+        wheel,
+        draining: false,
+        drained_sessions: 0,
+        busy_us,
+        wakeups,
+    };
+    let join = std::thread::Builder::new()
+        .name(format!("rns-gw-loop{index}"))
+        .spawn(move || ev.run())
+        .map_err(|e| e.to_string())?;
+    Ok((handle, join))
+}
+
+impl EventLoop {
+    fn run(&mut self) -> usize {
+        loop {
+            let t0 = Instant::now();
+            let mut progress = self.drain_msgs();
+            for t in 0..self.conns.len() {
+                if self.conns[t].is_some() {
+                    progress |= self.sweep_conn(t);
+                }
+            }
+            progress |= self.fire_timers();
+            self.busy_us.add(t0.elapsed().as_micros() as u64);
+            if self.draining && self.live == 0 {
+                return self.drained_sessions;
+            }
+            if !progress {
+                self.park();
+            }
+        }
+    }
+
+    /// Park on the wakeup pipe; a delivery callback's wakeup byte ends
+    /// the park immediately, otherwise the timeout bounds how long
+    /// inbound socket data can sit unseen.
+    fn park(&mut self) {
+        let timeout = if self.live == 0 {
+            PARK_EMPTY
+        } else {
+            // scale the tick with slab size: sweeping N sockets costs N
+            // nonblocking reads, so huge slabs trade a little latency
+            // for a lot of idle CPU
+            let scaled = Duration::from_millis(1 + self.live as u64 / 256);
+            scaled.clamp(PARK_MIN, PARK_MAX)
+        };
+        if self.wake_timeout != Some(timeout) {
+            self.wake_rx.set_read_timeout(Some(timeout)).ok();
+            self.wake_timeout = Some(timeout);
+        }
+        let mut buf = [0u8; 64];
+        match self.wake_rx.read(&mut buf) {
+            Ok(n) if n > 0 => self.wakeups.inc(),
+            _ => {} // park timeout elapsed (or spurious) — just re-sweep
+        }
+    }
+
+    fn drain_msgs(&mut self) -> bool {
+        let mut progress = false;
+        loop {
+            match self.rx.try_recv() {
+                Ok(LoopMsg::Conn(stream, peer)) => {
+                    progress = true;
+                    self.add_conn(stream, peer);
+                }
+                Ok(LoopMsg::Reply { token, gen, frame }) => {
+                    progress = true;
+                    self.deliver_reply(token, gen, frame);
+                }
+                Ok(LoopMsg::Drain) => {
+                    progress = true;
+                    self.begin_drain();
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        progress
+    }
+
+    fn add_conn(&mut self, mut stream: TcpStream, peer: SocketAddr) {
+        if self.draining {
+            // drain race: the acceptor stopped first, but this one was
+            // already in the channel — refuse with the typed reject
+            self.shared.rejected.inc();
+            stream.set_nonblocking(false).ok();
+            reject(&mut stream, HelloStatus::Draining, ErrorCode::Draining, "gateway is draining");
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let conn = Conn::new(stream, peer, gen, self.shared.cfg.idle_timeout);
+        let token = match self.free.pop() {
+            Some(t) => {
+                self.conns[t] = Some(conn);
+                t
+            }
+            None => {
+                self.conns.push(Some(conn));
+                self.conns.len() - 1
+            }
+        };
+        self.live += 1;
+        let deadline = self.conns[token].as_ref().unwrap().deadline;
+        self.wheel.schedule(token, gen, deadline);
+    }
+
+    fn deliver_reply(&mut self, token: usize, gen: u64, frame: Frame) {
+        let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else {
+            return; // connection died before its reply — dropped, as
+                    // the old writer did after a peer vanished
+        };
+        if conn.gen != gen {
+            return; // slot reused: never cross-deliver
+        }
+        conn.in_flight = conn.in_flight.saturating_sub(1);
+        self.shared.frames_out.inc();
+        conn.write_buf.queue(&frame.encode());
+    }
+
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        for token in 0..self.conns.len() {
+            let Some(conn) = self.conns[token].as_mut() else { continue };
+            if conn.admitted {
+                self.drained_sessions += 1;
+                // half-close the read side: the peer sees EOF where its
+                // next request would have gone, while every owed reply
+                // still flows out
+                conn.stream.shutdown(Shutdown::Read).ok();
+                conn.read_closed = true;
+                conn.close_after_flush = true;
+            } else {
+                // pre-handshake: nothing owed
+                self.free_conn(token);
+            }
+        }
+    }
+
+    /// One sweep of one connection: read (unless closed/backpressured),
+    /// flush writes, retire if done.  Returns whether progress was made.
+    fn sweep_conn(&mut self, token: usize) -> bool {
+        let mut progress = false;
+        // read phase
+        let (read_closed, is_sniff, backpressured) = {
+            let conn = self.conns[token].as_ref().unwrap();
+            (
+                conn.read_closed,
+                matches!(conn.state, ConnState::Sniff),
+                conn.write_buf.pending() > WRITE_BACKPRESSURE,
+            )
+        };
+        if !read_closed && !backpressured {
+            progress |= if is_sniff { self.read_sniff(token) } else { self.read_active(token) };
+        }
+        let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else {
+            return true; // freed (or handed to HTTP) during the read phase
+        };
+        // write phase
+        if conn.write_buf.pending() > 0 {
+            match conn.write_buf.flush(&mut conn.stream) {
+                Ok(wrote) => {
+                    if wrote {
+                        progress = true;
+                        conn.deadline = Instant::now() + self.shared.cfg.idle_timeout;
+                    }
+                }
+                Err(_) => {
+                    self.free_conn(token);
+                    return true;
+                }
+            }
+        }
+        // retire phase: graceful close once nothing is owed
+        let conn = self.conns[token].as_mut().unwrap();
+        let done_reading = conn.read_closed || conn.close_after_flush;
+        if done_reading && conn.in_flight == 0 && conn.write_buf.pending() == 0 {
+            self.free_conn(token);
+            return true;
+        }
+        progress
+    }
+
+    /// Sniff-state read: accumulate the first 4 bytes (HTTP vs binary),
+    /// then 2 more (version), then admit/reject.  Returns progress.
+    fn read_sniff(&mut self, token: usize) -> bool {
+        {
+            let conn = self.conns[token].as_mut().unwrap();
+            let want =
+                if conn.sniff.len() < 4 { 4 - conn.sniff.len() } else { 6 - conn.sniff.len() };
+            let mut tmp = [0u8; 6];
+            match conn.stream.read(&mut tmp[..want]) {
+                Ok(0) => {
+                    self.free_conn(token);
+                    return true;
+                }
+                Ok(n) => {
+                    conn.sniff.extend_from_slice(&tmp[..n]);
+                    conn.deadline = Instant::now() + self.shared.cfg.idle_timeout;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == ErrorKind::Interrupted => return false,
+                Err(_) => {
+                    self.free_conn(token);
+                    return true;
+                }
+            }
+        }
+        let conn = self.conns[token].as_mut().unwrap();
+        if conn.sniff.len() == 4 {
+            let first: [u8; 4] = conn.sniff[..4].try_into().unwrap();
+            if &first == b"GET " || &first == b"HEAD" {
+                // HTTP scrape: hand the socket to a short-lived blocking
+                // responder thread (scrapes are rare, bounded, and must
+                // work *especially* when the loops are saturated)
+                let conn = self.conns[token].take().unwrap();
+                self.live -= 1;
+                self.free.push(token);
+                let shared = Arc::clone(&self.shared);
+                let stream = conn.stream;
+                stream.set_nonblocking(false).ok();
+                stream.set_read_timeout(Some(shared.cfg.idle_timeout)).ok();
+                stream.set_write_timeout(Some(shared.cfg.idle_timeout)).ok();
+                std::thread::Builder::new()
+                    .name("rns-gw-http".into())
+                    .spawn(move || serve_http(stream, &shared, &first == b"HEAD"))
+                    .ok();
+                return true;
+            }
+            if first != MAGIC {
+                self.shared.protocol_errors.inc();
+                self.free_conn(token);
+                return true;
+            }
+            return true; // magic ok: wait for the 2 version bytes
+        }
+        if conn.sniff.len() < 6 {
+            return true; // partial read; more next sweep
+        }
+        // full 6-byte hello: version check, then admission
+        let version = u16::from_le_bytes(conn.sniff[4..6].try_into().unwrap());
+        conn.state = ConnState::Active;
+        if version != VERSION {
+            self.shared.rejected.inc();
+            self.queue_reject(
+                token,
+                HelloStatus::BadVersion,
+                ErrorCode::Protocol,
+                format!("server speaks protocol v{VERSION}, client sent v{version}"),
+            );
+            return true;
+        }
+        if self.shared.draining.load(Ordering::SeqCst) {
+            self.shared.rejected.inc();
+            self.queue_reject(
+                token,
+                HelloStatus::Draining,
+                ErrorCode::Draining,
+                "gateway is draining".into(),
+            );
+            return true;
+        }
+        // admission: compare-and-increment on the exported gauge itself,
+        // so a connect burst cannot oversubscribe the cap
+        if !self.shared.active.try_inc_below(self.shared.cfg.max_sessions as i64) {
+            self.shared.rejected.inc();
+            let max = self.shared.cfg.max_sessions;
+            self.queue_reject(
+                token,
+                HelloStatus::Overloaded,
+                ErrorCode::Overloaded,
+                format!("gateway at capacity ({max} sessions)"),
+            );
+            return true;
+        }
+        let conn = self.conns[token].as_mut().unwrap();
+        conn.admitted = true;
+        // the pre-increment value is this session's 0-based admission
+        // index — the `s{S}` coordinate of `drop@s{S}:f{N}` chaos events
+        conn.session_idx = self.shared.accepted.inc();
+        conn.chaos_drop = self.shared.cfg.chaos.session_drop(conn.session_idx);
+        conn.write_buf.queue(&hello_bytes(HelloStatus::Ok));
+        crate::log_debug!("gateway", "session {} open from {}", conn.session_idx, conn.peer);
+        true
+    }
+
+    /// Queue a non-ok hello + one typed `Error` frame, then close once
+    /// both are flushed (the refused peer reads the reason, as before).
+    fn queue_reject(&mut self, token: usize, status: HelloStatus, code: ErrorCode, msg: String) {
+        let conn = self.conns[token].as_mut().unwrap();
+        conn.write_buf.queue(&hello_bytes(status));
+        conn.write_buf.queue(&Frame::Error { id: 0, code, message: msg }.encode());
+        conn.read_closed = true;
+        conn.close_after_flush = true;
+    }
+
+    /// Active-state read: nonblocking read quantum → assembler → frame
+    /// dispatch.  Returns progress.
+    fn read_active(&mut self, token: usize) -> bool {
+        let mut tmp = [0u8; 16 << 10];
+        let mut total = 0;
+        let mut progress = false;
+        loop {
+            let conn = self.conns[token].as_mut().unwrap();
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    // clean close (or the drain-time read-shutdown):
+                    // stop reading, still deliver every owed reply
+                    conn.read_closed = true;
+                    return true;
+                }
+                Ok(n) => {
+                    progress = true;
+                    total += n;
+                    conn.assembler.push(&tmp[..n]);
+                    conn.deadline = Instant::now() + self.shared.cfg.idle_timeout;
+                    if !self.pump_frames(token) {
+                        return true; // conn freed or closed
+                    }
+                    if total >= READ_QUANTUM {
+                        return true; // fairness: next sweep continues
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return progress,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.free_conn(token);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Dispatch every complete frame the assembler holds.  Returns
+    /// false when the connection was freed or stopped reading.
+    fn pump_frames(&mut self, token: usize) -> bool {
+        loop {
+            let conn = self.conns[token].as_mut().unwrap();
+            let frame = match conn.assembler.next_frame() {
+                Ok(Some(f)) => f,
+                Ok(None) => return true,
+                Err(msg) => {
+                    // typed protocol error, then close: the frame
+                    // boundary is unknown, resync is impossible
+                    self.shared.protocol_errors.inc();
+                    self.shared.frames_out.inc();
+                    let err = Frame::Error { id: 0, code: ErrorCode::Protocol, message: msg };
+                    conn.write_buf.queue(&err.encode());
+                    conn.read_closed = true;
+                    conn.close_after_flush = true;
+                    return false;
+                }
+            };
+            self.shared.frames_in.inc();
+            conn.frames_read += 1;
+            let frames_read = conn.frames_read;
+            let chaos_drop = conn.chaos_drop;
+            let peer_is_loopback = conn.peer_is_loopback;
+            let gen = conn.gen;
+            let route = ReplyRoute { handle: self.handle.clone(), token, gen };
+            let mut sync = Vec::new();
+            let out = handle_frame(frame, peer_is_loopback, &self.shared, &mut sync, &route);
+            let conn = self.conns[token].as_mut().unwrap();
+            if out.submitted {
+                conn.in_flight += 1;
+            }
+            for f in sync {
+                self.shared.frames_out.inc();
+                conn.write_buf.queue(&f.encode());
+            }
+            // injected connection drop: sever abruptly *after* the Nth
+            // frame was accepted, exactly like a peer vanishing
+            // mid-conversation (in-flight replies die with the socket)
+            if chaos_drop == Some(frames_read) {
+                crate::log_warn!("gateway", "chaos: dropping session after frame {frames_read}");
+                self.free_conn(token);
+                return false;
+            }
+            if !out.keep {
+                let conn = self.conns[token].as_mut().unwrap();
+                conn.read_closed = true;
+                conn.close_after_flush = true;
+                return false;
+            }
+        }
+    }
+
+    fn fire_timers(&mut self) -> bool {
+        let now = Instant::now();
+        let mut progress = false;
+        for (token, gen) in self.wheel.expired(now) {
+            let Some(conn) = self.conns.get_mut(token).and_then(|c| c.as_mut()) else {
+                continue;
+            };
+            if conn.gen != gen {
+                continue;
+            }
+            if now >= conn.deadline {
+                crate::log_debug!("gateway", "session from {} timed out", conn.peer);
+                self.free_conn(token);
+                progress = true;
+            } else {
+                // activity moved the deadline since this entry was
+                // scheduled: lazy wheel, re-arm at the live deadline
+                let deadline = conn.deadline;
+                self.wheel.schedule(token, gen, deadline);
+            }
+        }
+        progress
+    }
+
+    /// Tear a connection down now (abrupt paths and post-flush closes
+    /// both end here; the admission gauge slot is released exactly
+    /// once).
+    fn free_conn(&mut self, token: usize) {
+        if let Some(conn) = self.conns[token].take() {
+            conn.stream.shutdown(Shutdown::Both).ok();
+            if conn.admitted {
+                self.shared.active.add(-1);
+                crate::log_debug!("gateway", "session from {} closed", conn.peer);
+            }
+            self.live -= 1;
+            self.free.push(token);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn socketpair_wakeup_roundtrip() {
+        let (tx, rx) = socketpair().expect("socketpair");
+        let wake = WakeHalf { stream: tx };
+        rx.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        wake.wake();
+        let mut buf = [0u8; 8];
+        let n = (&rx).read(&mut buf).expect("wakeup byte");
+        assert!(n >= 1);
+        // a storm of wakeups never blocks the waker, even unread
+        for _ in 0..100_000 {
+            wake.wake();
+        }
+    }
+
+    #[test]
+    fn timer_wheel_fires_at_or_after_deadline_only() {
+        let epoch = Instant::now();
+        let mut wheel = TimerWheel::new(Duration::from_millis(640), epoch);
+        let tick = wheel.tick;
+        wheel.schedule(3, 7, epoch + 10 * tick);
+        // well before the deadline: nothing fires
+        assert!(wheel.expired(epoch + 5 * tick).is_empty());
+        // after: the entry pops exactly once
+        let fired = wheel.expired(epoch + 12 * tick);
+        assert_eq!(fired, vec![(3, 7)]);
+        assert!(wheel.expired(epoch + 20 * tick).is_empty());
+    }
+
+    #[test]
+    fn timer_wheel_entries_beyond_one_rotation_still_fire() {
+        let epoch = Instant::now();
+        let mut wheel = TimerWheel::new(Duration::from_millis(640), epoch);
+        let tick = wheel.tick;
+        // 3 rotations out: lands in a slot that comes up early, but the
+        // caller re-checks the live deadline and reschedules (lazy);
+        // here we only assert it *does* surface by the deadline passing
+        let far = 3 * WHEEL_SLOTS as u32 + 5;
+        wheel.schedule(1, 1, epoch + far * tick);
+        let fired = wheel.expired(epoch + (far + 2) * tick);
+        assert!(fired.contains(&(1, 1)));
+    }
+
+    #[test]
+    fn write_buf_tracks_pending_and_compacts() {
+        let mut wb = WriteBuf::new();
+        assert_eq!(wb.pending(), 0);
+        wb.queue(&[1, 2, 3]);
+        wb.queue(&[4]);
+        assert_eq!(wb.pending(), 4);
+    }
+}

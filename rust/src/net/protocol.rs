@@ -644,6 +644,87 @@ impl<'a> Cursor<'a> {
     }
 }
 
+/// Incremental frame decoder for nonblocking reads.
+///
+/// `Frame::read_from` owns a blocking stream and can loop on
+/// `read_exact`; a readiness loop cannot — bytes arrive in whatever
+/// chunks the kernel hands over, so a frame may be split across any
+/// number of reads or several frames may land coalesced in one.  The
+/// assembler buffers pushed bytes and yields complete frames as they
+/// become decodable, enforcing exactly the bounds and checksum rules of
+/// `read_from` (same error messages, so both paths report identically).
+///
+/// A protocol error is terminal for the stream: the frame boundary is
+/// unknown and resync is impossible, so callers must close (the same
+/// rule the blocking reader applies).
+#[derive(Debug, Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (drained lazily to amortize the memmove).
+    pos: usize,
+}
+
+impl FrameAssembler {
+    pub fn new() -> FrameAssembler {
+        FrameAssembler { buf: Vec::new(), pos: 0 }
+    }
+
+    /// Append freshly-read bytes; call `next_frame` until it returns
+    /// `Ok(None)` to drain every frame they complete.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a decoded frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Decode the next complete frame, if the buffer holds one.
+    /// `Ok(None)` means "need more bytes"; `Err` is a protocol error
+    /// (bad length, checksum mismatch, malformed body).
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, String> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            self.compact();
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(avail[..4].try_into().unwrap()) as usize;
+        if len > MAX_FRAME_LEN {
+            return Err(format!("frame body {len} bytes exceeds the {MAX_FRAME_LEN}-byte bound"));
+        }
+        if len < MIN_FRAME_LEN {
+            return Err(format!("frame body {len} bytes is too short"));
+        }
+        if avail.len() < 4 + len + 4 {
+            self.compact();
+            return Ok(None);
+        }
+        let body = &avail[4..4 + len];
+        let want = u32::from_le_bytes(avail[4 + len..4 + len + 4].try_into().unwrap());
+        let got = checksum(body);
+        if want != got {
+            return Err(format!("checksum mismatch (got {got:#010x}, frame says {want:#010x})"));
+        }
+        let frame = Frame::decode_body(body)?;
+        self.pos += 4 + len + 4;
+        self.compact();
+        Ok(Some(frame))
+    }
+
+    /// Reclaim the consumed prefix once it dominates the buffer (or the
+    /// buffer is fully drained, which makes the drain free).
+    fn compact(&mut self) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 4096 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -801,5 +882,126 @@ mod tests {
         }
         let b = Batch::Tokens { tokens: vec![1, 2], batch: 1, seq: 2 };
         assert_eq!(WireBatch::from_batch(&b).into_batch().unwrap().len(), 1);
+    }
+
+    /// A mixed bag of frames covering every payload shape the assembler
+    /// has to reslice (names, text, f32 payloads, batches).
+    fn assembler_fixture() -> Vec<Frame> {
+        vec![
+            Frame::Ping { id: 1 },
+            Frame::Infer {
+                id: 2,
+                model: "synthetic-mlp".into(),
+                deadline_ms: 250,
+                input: WireBatch::Images { n: 1, h: 2, w: 2, c: 1, data: vec![0.5; 4] },
+            },
+            Frame::InferOk {
+                id: 2,
+                rows: 1,
+                cols: 3,
+                logits: vec![0.1, -0.2, 0.3],
+                faults_detected: 4,
+                worker: 1,
+            },
+            Frame::Error { id: 3, code: ErrorCode::Overloaded, message: "busy".into() },
+            Frame::StatsReport { id: 4, text: "requests=9\n".into() },
+        ]
+    }
+
+    #[test]
+    fn assembler_handles_one_byte_at_a_time() {
+        let frames = assembler_fixture();
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(&f.encode());
+        }
+        let mut asm = FrameAssembler::new();
+        let mut got = Vec::new();
+        for &b in &wire {
+            asm.push(&[b]);
+            while let Some(f) = asm.next_frame().expect("clean stream") {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames);
+        assert_eq!(asm.buffered(), 0, "nothing left over");
+    }
+
+    #[test]
+    fn assembler_handles_coalesced_frames_in_one_push() {
+        let frames = assembler_fixture();
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(&f.encode());
+        }
+        let mut asm = FrameAssembler::new();
+        asm.push(&wire);
+        let mut got = Vec::new();
+        while let Some(f) = asm.next_frame().expect("clean stream") {
+            got.push(f);
+        }
+        assert_eq!(got, frames);
+        assert_eq!(asm.buffered(), 0);
+    }
+
+    #[test]
+    fn assembler_handles_every_split_point() {
+        // two frames, cut into (prefix, suffix) at every byte boundary:
+        // each half arrives as its own push, both frames must decode
+        let frames = vec![Frame::Ping { id: 42 }, Frame::Pong { id: 43 }];
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(&f.encode());
+        }
+        for cut in 0..=wire.len() {
+            let mut asm = FrameAssembler::new();
+            let mut got = Vec::new();
+            for chunk in [&wire[..cut], &wire[cut..]] {
+                asm.push(chunk);
+                while let Some(f) = asm.next_frame().expect("clean stream") {
+                    got.push(f);
+                }
+            }
+            assert_eq!(got, frames, "split at byte {cut}");
+        }
+    }
+
+    #[test]
+    fn assembler_rejects_bad_lengths_and_checksums() {
+        // oversized declared length
+        let mut asm = FrameAssembler::new();
+        asm.push(&(MAX_FRAME_LEN as u32 + 1).to_le_bytes());
+        assert!(asm.next_frame().unwrap_err().contains("exceeds"));
+        // undersized declared length
+        let mut asm = FrameAssembler::new();
+        asm.push(&3u32.to_le_bytes());
+        assert!(asm.next_frame().unwrap_err().contains("too short"));
+        // corrupted checksum
+        let mut wire = Frame::Ping { id: 9 }.encode();
+        let last = wire.len() - 1;
+        wire[last] ^= 0xFF;
+        let mut asm = FrameAssembler::new();
+        asm.push(&wire);
+        assert!(asm.next_frame().unwrap_err().contains("checksum mismatch"));
+    }
+
+    #[test]
+    fn assembler_agrees_with_blocking_reader() {
+        // the incremental and blocking decoders accept the same bytes
+        // and yield equal frames — the loop and the client cannot drift
+        let frames = assembler_fixture();
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(&f.encode());
+        }
+        let mut reader = &wire[..];
+        let mut asm = FrameAssembler::new();
+        asm.push(&wire);
+        for want in &frames {
+            let blocking = Frame::read_from(&mut reader).expect("blocking decode");
+            let incremental = asm.next_frame().expect("incremental decode").expect("frame ready");
+            assert_eq!(&blocking, want);
+            assert_eq!(&incremental, want);
+        }
     }
 }

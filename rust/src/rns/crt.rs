@@ -5,6 +5,7 @@
 //! `M < 2^25`, and even RRNS-extended sets stay far below `2^64`, so the
 //! headroom is enormous).
 
+use super::barrett::BarrettReducer;
 use super::moduli::pairwise_coprime;
 use crate::tensor::MatI;
 
@@ -46,6 +47,22 @@ struct FastCrt {
     coeff: Vec<u64>,
     big_m: u64,
     half: u64,
+    /// Barrett constants for the final `mod M` — `Some` iff `M < 2^32`
+    /// (every Table-I set).  The fast-path bound only guarantees the
+    /// accumulator fits `2^63`, not that `M` fits the Barrett sizing
+    /// (e.g. `[2^20, 2^20 - 1]` has `M ≈ 2^40`), so keep a `%` fallback.
+    red: Option<BarrettReducer>,
+}
+
+impl FastCrt {
+    /// Exact `x mod M`, division-free on the Barrett path.
+    #[inline(always)]
+    fn reduce(&self, x: u64) -> u64 {
+        match self.red {
+            Some(r) => r.reduce(x),
+            None => x % self.big_m,
+        }
+    }
 }
 
 impl RnsContext {
@@ -73,6 +90,7 @@ impl RnsContext {
                 coeff: crt_coeff.iter().map(|&c| c as u64).collect(),
                 big_m: big_m as u64,
                 half: (big_m / 2) as u64,
+                red: (big_m < (1u128 << 32)).then(|| BarrettReducer::new(big_m as u64)),
             })
         } else {
             None
@@ -117,7 +135,7 @@ impl RnsContext {
                 debug_assert!(r < m, "fast CRT requires reduced residues");
                 acc += r * c;
             }
-            return (acc % fast.big_m) as u128;
+            return fast.reduce(acc) as u128;
         }
         let mut acc: u128 = 0;
         for (&r, &c) in residues.iter().zip(&self.crt_coeff) {
@@ -133,7 +151,7 @@ impl RnsContext {
             for (&r, &c) in residues.iter().zip(&fast.coeff) {
                 acc += r * c;
             }
-            let v = acc % fast.big_m;
+            let v = fast.reduce(acc);
             return if v > fast.half {
                 v as i128 - fast.big_m as i128
             } else {
@@ -178,7 +196,7 @@ impl RnsContext {
                 }
             }
             for (o, &a) in out.data.iter_mut().zip(&acc) {
-                let v = a % fast.big_m;
+                let v = fast.reduce(a);
                 *o = if v > fast.half { v as i64 - fast.big_m as i64 } else { v as i64 };
             }
             return out;
@@ -277,8 +295,14 @@ mod tests {
     #[test]
     fn crt_signed_tile_matches_per_element() {
         use crate::util::rng::Rng;
-        // fast path (Table-I set) and wide path (big moduli, no fast CRT)
-        for moduli in [vec![63u64, 62, 61, 59], vec![4294967291u64, 4294967279]] {
+        // fast path with Barrett (Table-I set), fast path with `%`
+        // fallback (M ≈ 2^40 ≥ 2^32, accumulator still < 2^63), and
+        // wide path (big moduli, no fast CRT)
+        for moduli in [
+            vec![63u64, 62, 61, 59],
+            vec![1048576u64, 1048575],
+            vec![4294967291u64, 4294967279],
+        ] {
             let ctx = RnsContext::new(&moduli).unwrap();
             let mut rng = Rng::seed_from(11);
             let (rows, cols) = (5usize, 7usize);

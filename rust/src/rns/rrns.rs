@@ -19,6 +19,7 @@
 //! `RrnsCode::new` computes and exposes it; users must keep dot-product
 //! outputs inside this range (checked in debug builds).
 
+use super::barrett::BarrettReducer;
 use super::crt::RnsContext;
 use crate::tensor::MatI;
 
@@ -84,6 +85,10 @@ pub struct RrnsCode {
     pub k: usize,
     groups: Vec<Vec<usize>>,
     group_ctxs: Vec<RnsContext>,
+    /// Barrett constants for the redundant moduli (`moduli[k..]`), used by
+    /// `precheck_tile`'s re-encode sweep; `None` where a modulus is too
+    /// large for the Barrett sizing (`>= 2^32`).
+    redundant_red: Vec<Option<BarrettReducer>>,
     /// min over k-subset products: values must lie in (-range/2, range/2].
     pub legitimate_range: u128,
 }
@@ -104,7 +109,11 @@ impl RrnsCode {
             legit = legit.min(ctx.big_m);
             group_ctxs.push(ctx);
         }
-        Ok(RrnsCode { full, k, groups, group_ctxs, legitimate_range: legit })
+        let redundant_red = moduli[k..]
+            .iter()
+            .map(|&m| (m < (1u64 << 32)).then(|| BarrettReducer::new(m)))
+            .collect();
+        Ok(RrnsCode { full, k, groups, group_ctxs, redundant_red, legitimate_range: legit })
     }
 
     pub fn n(&self) -> usize {
@@ -174,10 +183,30 @@ impl RrnsCode {
             let v = v as i128;
             *o = v <= half && v >= -(half - 1);
         }
-        for (j, ch) in (self.k..self.n()).zip(&channels[self.k..]) {
+        for ((j, ch), red) in (self.k..self.n()).zip(&channels[self.k..]).zip(&self.redundant_red) {
             let m = self.full.moduli[j] as i64;
-            for ((o, &v), &r) in ok.iter_mut().zip(&values.data).zip(&ch.data) {
-                *o &= v.rem_euclid(m) == r;
+            match red {
+                // division-free re-encode: |v| mod m via Barrett, then the
+                // signed fold `m - a` for negatives (a = 0 stays 0)
+                Some(red) => {
+                    for ((o, &v), &r) in ok.iter_mut().zip(&values.data).zip(&ch.data) {
+                        let va = v.unsigned_abs();
+                        let enc = if va < (1u64 << 63) {
+                            let a = red.reduce(va);
+                            if v >= 0 || a == 0 { a as i64 } else { (red.m - a) as i64 }
+                        } else {
+                            // i64::MIN: unsigned_abs is 2^63, outside the
+                            // Barrett exactness bound
+                            v.rem_euclid(m)
+                        };
+                        *o &= enc == r;
+                    }
+                }
+                None => {
+                    for ((o, &v), &r) in ok.iter_mut().zip(&values.data).zip(&ch.data) {
+                        *o &= v.rem_euclid(m) == r;
+                    }
+                }
             }
         }
         let fallback = ok.iter().enumerate().filter(|&(_, &o)| !o).map(|(e, _)| e).collect();
@@ -432,6 +461,24 @@ mod tests {
             5,
             (0..15).map(|_| rng.gen_range_i64(-(half - 1), half)).collect(),
         );
+        let channels = code.encode_tile(&values);
+        let pre = code.precheck_tile(&channels);
+        assert!(pre.fallback.is_empty());
+        assert_eq!(pre.values.data, values.data);
+    }
+
+    #[test]
+    fn precheck_barrett_reencode_matches_rem_euclid() {
+        // the redundant-channel sweep re-encodes signed reconstructions
+        // with Barrett constants; the signed fold (m - |v| mod m for
+        // negatives) must agree with rem_euclid everywhere, including
+        // zero, sign flips, and the legitimate-range extremes
+        let code = code_b8(2);
+        let half = (code.legitimate_range / 2) as i64;
+        let mut probe: Vec<i64> = vec![0, 1, -1, half, -(half - 1), half / 2, -(half / 2)];
+        let mut rng = Rng::seed_from(23);
+        probe.extend((0..57).map(|_| rng.gen_range_i64(-(half - 1), half)));
+        let values = MatI::from_vec(8, 8, probe);
         let channels = code.encode_tile(&values);
         let pre = code.precheck_tile(&channels);
         assert!(pre.fallback.is_empty());

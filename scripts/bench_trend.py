@@ -27,7 +27,10 @@ import os
 
 # Headline pairs tracked across PRs: (label, numerator bench, denominator
 # bench) — ratio = numerator median_ns / denominator median_ns, so >1 is
-# a win for the denominator side.
+# a win for the denominator side.  A denominator of None marks an
+# absolute-rate headline instead: the value is the numerator bench's own
+# "rate" field (requests/sec etc.), printed and gated without the `x`
+# suffix.
 HEADLINES = [
     (
         "decode",
@@ -68,6 +71,17 @@ HEADLINES = [
         "micro/sparse rns gemm 16x128x64 50pct-zero dense-capture",
         "micro/sparse rns gemm 16x128x64 50pct-zero sparse-capture",
     ),
+    # rps: sustained closed-loop requests/sec through the event-driven
+    # gateway session layer, measured by the loadgen harness (4 conns,
+    # window 8, 24 requests).  Absolute rate, not a ratio — the CI gate
+    # (rps >= 5.0) is a floor far below any healthy runner, catching the
+    # readiness loop wedging (stalled wakeups, lost replies) rather than
+    # benchmarking the machine.
+    (
+        "rps",
+        "serve/loadgen 24 reqs synthetic-mlp rns-b6 event-loop",
+        None,
+    ),
 ]
 
 
@@ -87,8 +101,10 @@ def load_trend(path):
 
 def ratio(bench_map, num, den):
     try:
+        if den is None:
+            return float(bench_map[num]["rate"])
         return bench_map[num]["median_ns"] / bench_map[den]["median_ns"]
-    except (KeyError, TypeError, ZeroDivisionError):
+    except (KeyError, TypeError, ValueError, ZeroDivisionError):
         return None
 
 
@@ -123,13 +139,15 @@ def main():
             num, den = headlines[label]
             v = ratio(bench_map, num, den)
             if v is None:
-                failures.append(f"{label}: bench pair missing ({num} / {den})")
+                what = f"rate missing ({num})" if den is None else f"bench pair missing ({num} / {den})"
+                failures.append(f"{label}: {what}")
                 continue
             need = float(min_s)
             ok = v >= need
-            print(f"gate {label}: {v:.2f}x (need >= {need:.2f}x) {'ok' if ok else 'FAIL'}")
+            unit = "" if den is None else "x"
+            print(f"gate {label}: {v:.2f}{unit} (need >= {need:.2f}{unit}) {'ok' if ok else 'FAIL'}")
             if not ok:
-                failures.append(f"{label}: {v:.2f}x < {need:.2f}x")
+                failures.append(f"{label}: {v:.2f}{unit} < {need:.2f}{unit}")
         if failures:
             for msg in failures:
                 print(f"FAIL: {msg}")
@@ -156,7 +174,8 @@ def main():
         cells = []
         for label, num, den in HEADLINES:
             v = ratio(bench_map, num, den)
-            cells.append(f"{label} {v:.2f}x" if v is not None else f"{label} -")
+            unit = "" if den is None else "x"
+            cells.append(f"{label} {v:.2f}{unit}" if v is not None else f"{label} -")
         print(f"  {str(r.get('commit'))[:9]:>9}  " + "  ".join(cells))
 
 
