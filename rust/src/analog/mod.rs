@@ -40,6 +40,26 @@ pub struct StageMicros {
     pub decode_us: u64,
 }
 
+impl StageMicros {
+    /// This cumulative snapshot minus `prev`, per field (saturating) —
+    /// the serving tier's per-batch delta, feeding both the stage
+    /// histograms and the per-request span traces from one value.
+    pub fn delta_since(&self, prev: &StageMicros) -> StageMicros {
+        StageMicros {
+            dac_forward_us: self.dac_forward_us.saturating_sub(prev.dac_forward_us),
+            analog_gemm_us: self.analog_gemm_us.saturating_sub(prev.analog_gemm_us),
+            adc_capture_us: self.adc_capture_us.saturating_sub(prev.adc_capture_us),
+            decode_us: self.decode_us.saturating_sub(prev.decode_us),
+        }
+    }
+
+    /// Sum of all four stage timers (each stage is timed disjointly, so
+    /// the total can never exceed the forward's wall clock).
+    pub fn total_us(&self) -> u64 {
+        self.dac_forward_us + self.analog_gemm_us + self.adc_capture_us + self.decode_us
+    }
+}
+
 /// A GEMM execution backend: the FP32 reference, the fixed-point analog
 /// core, or the RNS analog core.  The nn layer routes every GEMM in a
 /// model through one of these, which is how the accuracy experiments swap
@@ -99,6 +119,21 @@ impl GemmBackend for Fp32Backend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stage_micros_delta_and_total() {
+        let prev =
+            StageMicros { dac_forward_us: 10, analog_gemm_us: 20, adc_capture_us: 5, decode_us: 1 };
+        let now =
+            StageMicros { dac_forward_us: 15, analog_gemm_us: 26, adc_capture_us: 5, decode_us: 3 };
+        let d = now.delta_since(&prev);
+        assert_eq!(
+            d,
+            StageMicros { dac_forward_us: 5, analog_gemm_us: 6, adc_capture_us: 0, decode_us: 2 }
+        );
+        assert_eq!(d.total_us(), 13);
+        assert_eq!(StageMicros::default().delta_since(&now).total_us(), 0, "deltas saturate");
+    }
 
     #[test]
     fn fp32_backend_is_exact_gemm() {

@@ -243,8 +243,11 @@ pub struct RnsCore {
     pub meter: EnergyMeter,
     pub stats: FaultStats,
     /// Cumulative per-stage wall-clock timers (DAC forward, analog GEMM,
-    /// ADC capture, decode) — the serving tier reads batch deltas the
-    /// same way it reads `meter`/`stats` deltas.
+    /// ADC capture, decode) — the serving tier reads batch deltas
+    /// (`StageMicros::delta_since`) the same way it reads
+    /// `meter`/`stats` deltas, and those single delta values feed both
+    /// the `rns_stage_latency_us` histograms and per-request span
+    /// traces, so the two views can never disagree.
     pub stage_us: StageMicros,
     rng: Rng,
     /// Shared (or private) read-only plan store this core borrows from.

@@ -45,6 +45,11 @@ impl Default for BatcherConfig {
 
 /// A formed batch: the concatenated input plus the member requests and
 /// their sample offsets (for splitting the logits back).
+///
+/// Each member carries its own `InferenceRequest::trace` id, so a
+/// sampled request keeps its span-trace identity across batch formation
+/// — the worker attributes per-stage spans back to every traced member
+/// with `batch`/`member` args marking the shared execution.
 pub struct FormedBatch {
     pub model: String,
     pub input: Batch,

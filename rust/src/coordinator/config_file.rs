@@ -36,6 +36,10 @@
 //! default_deadline_ms = 0         # server-side request deadline (0 = none)
 //! trace_slots = 16                # slowest-request trace ring size
 //!                                 # (0 = tracing off)
+//! trace_sample = 0.0              # span-trace sampling probability for
+//!                                 # requests that don't carry their own
+//!                                 # trace id (0 = only client-chosen /
+//!                                 # forced traces are recorded)
 //! chaos = ""                      # seeded fault injection, e.g.
 //!                                 # "panic@w0:b3,drop@s1:f2" (tests/CI only)
 //! ```
@@ -133,6 +137,11 @@ pub fn from_config(cfg: &Config, artifacts_dir: &str) -> Result<CoordinatorConfi
         return Err("serve.trace_slots must be >= 0 (0 = tracing off)".into());
     }
     out.trace_slots = trace_slots as usize;
+    let trace_sample = cfg.float_or("serve.trace_sample", out.trace_sample);
+    if !(0.0..=1.0).contains(&trace_sample) {
+        return Err(format!("serve.trace_sample = {trace_sample} not a probability"));
+    }
+    out.trace_sample = trace_sample;
     Ok(out)
 }
 
@@ -257,6 +266,7 @@ fabric_threads = 6
         assert_eq!(cc.poison_threshold, 2);
         assert!(cc.default_deadline.is_none());
         assert_eq!(cc.trace_slots, crate::coordinator::metrics::DEFAULT_TRACE_SLOTS);
+        assert_eq!(cc.trace_sample, 0.0, "span sampling defaults off");
         assert!(cc.chaos.is_empty());
         assert!(!cc.sparse_capture, "sparse capture defaults off");
     }
@@ -265,7 +275,7 @@ fabric_threads = 6
     fn supervision_block_parses() {
         let cfg = Config::parse(
             "[serve]\nstall_timeout_ms = 250\npoison_threshold = 1\n\
-             default_deadline_ms = 40\ntrace_slots = 4\n\
+             default_deadline_ms = 40\ntrace_slots = 4\ntrace_sample = 0.25\n\
              chaos = \"panic@w0:b3, stall@w1:b2:50ms\"\n",
         )
         .unwrap();
@@ -274,6 +284,7 @@ fabric_threads = 6
         assert_eq!(cc.poison_threshold, 1);
         assert_eq!(cc.default_deadline, Some(Duration::from_millis(40)));
         assert_eq!(cc.trace_slots, 4);
+        assert!((cc.trace_sample - 0.25).abs() < 1e-12);
         assert_eq!(cc.chaos.events.len(), 2);
         // a malformed chaos spec is a config error, not a silent no-op
         let bad = Config::parse("[serve]\nchaos = \"panic@nonsense\"\n").unwrap();
@@ -306,6 +317,8 @@ fabric_threads = 6
             "[serve]\npoison_threshold = 0",
             "[serve]\ndefault_deadline_ms = -5",
             "[serve]\ntrace_slots = -1",
+            "[serve]\ntrace_sample = -0.1",
+            "[serve]\ntrace_sample = 1.5",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(from_config(&cfg, "/tmp/a").is_err(), "{bad}");

@@ -831,6 +831,53 @@ mod tests {
     }
 
     #[test]
+    fn trace_ring_interleaved_offers_retain_exactly_the_slowest_n() {
+        let mut ring = TraceRing::new(4);
+        let t = |id: u64, total: u64| RequestTrace {
+            id,
+            model: "mlp".into(),
+            samples: 1,
+            total_us: total,
+            ..RequestTrace::default()
+        };
+        // slow and fast offers interleaved, ids deliberately unordered:
+        // the retained set must be the 4 largest totals regardless of
+        // arrival order or how often eviction ran
+        for (id, total) in
+            [(9, 70), (1, 500), (5, 30), (2, 400), (8, 60), (3, 300), (7, 20), (4, 200), (6, 10)]
+        {
+            ring.offer(t(id, total));
+        }
+        assert_eq!(ring.len(), 4);
+        let text = ring.render();
+        for kept in ["id=1", "id=2", "id=3", "id=4"] {
+            assert!(text.contains(kept), "{text}");
+        }
+        for dropped in ["id=5", "id=6", "id=7", "id=8", "id=9"] {
+            assert!(!text.contains(dropped), "{text}");
+        }
+        // slowest-first render order
+        let pos = |needle: &str| text.find(needle).unwrap();
+        assert!(pos("id=1") < pos("id=2") && pos("id=2") < pos("id=3"));
+        assert!(pos("id=3") < pos("id=4"));
+    }
+
+    #[test]
+    fn trace_ring_cap_zero_disables_cleanly() {
+        let mut ring = TraceRing::new(0);
+        ring.offer(RequestTrace {
+            id: 1,
+            model: "mlp".into(),
+            samples: 1,
+            total_us: 1_000_000,
+            ..RequestTrace::default()
+        });
+        assert!(ring.is_empty());
+        assert_eq!(ring.capacity(), 0);
+        assert_eq!(ring.render(), "slow traces: kept=0 cap=0");
+    }
+
+    #[test]
     fn traces_append_to_the_report_after_every_existing_block() {
         let mut m = ServingMetrics::default();
         m.record_response(1, Duration::from_micros(120), Duration::from_micros(10), true);

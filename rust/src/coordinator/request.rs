@@ -74,6 +74,10 @@ pub struct InferenceRequest {
     /// submit time (per-request wire field, else the server default) so
     /// queue time counts against it.
     pub deadline: Option<Instant>,
+    /// Trace id when this request is sampled for span tracing; 0 (the
+    /// overwhelmingly common case) means unsampled.  Carried through the
+    /// batcher so workers can attribute per-stage spans.
+    pub trace: u64,
 }
 
 impl InferenceRequest {
@@ -84,11 +88,17 @@ impl InferenceRequest {
             input,
             submitted_at: Instant::now(),
             deadline: None,
+            trace: 0,
         }
     }
 
     pub fn with_deadline(mut self, deadline: Option<Instant>) -> Self {
         self.deadline = deadline;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: u64) -> Self {
+        self.trace = trace;
         self
     }
 

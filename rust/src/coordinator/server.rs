@@ -81,6 +81,7 @@ use crate::coordinator::metrics::{
     GatewayReport, RequestTrace, ServingMetrics, DEFAULT_TRACE_SLOTS,
 };
 use crate::util::metrics::MetricRegistry;
+use crate::util::trace::{self, Span, SpanBuffer, TraceCollector};
 use crate::coordinator::request::{
     InferenceRequest, InferenceResponse, RequestId, ServeError, ServeErrorKind,
 };
@@ -138,8 +139,15 @@ pub struct CoordinatorConfig {
     /// `energy:` metrics line.  Default off for RNG-stream compatibility.
     pub sparse_capture: bool,
     /// Slowest-request traces kept in the bounded ring (`trace:` report
-    /// lines and the `Traces` wire frame); 0 disables tracing.
+    /// lines and the `Traces` wire frame); 0 disables tracing — both the
+    /// one-line ring summaries and the span trees below.
     pub trace_slots: usize,
+    /// Fraction of requests sampled into full span trees (see
+    /// `util::trace::TraceCollector`), decided by a seeded hash so runs
+    /// are reproducible.  0 (the default) records spans only for
+    /// requests that arrive with a client-chosen trace id or fail with
+    /// `DeadlineExceeded`/`Poisoned`.
+    pub trace_sample: f64,
 }
 
 impl CoordinatorConfig {
@@ -160,6 +168,7 @@ impl CoordinatorConfig {
             default_deadline: None,
             sparse_capture: false,
             trace_slots: DEFAULT_TRACE_SLOTS,
+            trace_sample: 0.0,
         }
     }
 }
@@ -293,6 +302,7 @@ struct WorkerSpawner {
     fabric: Option<Arc<ExecutionFabric>>,
     slots: Arc<Vec<WorkerSlot>>,
     sup_tx: Sender<SupervisorMsg>,
+    collector: Arc<TraceCollector>,
 }
 
 impl WorkerSpawner {
@@ -316,6 +326,7 @@ impl WorkerSpawner {
             mailbox: Arc::clone(&self.slots[wid].mailbox),
             chaos: Arc::clone(&self.slots[wid].chaos),
             health,
+            collector: Arc::clone(&self.collector),
         };
         let sup_tx = self.sup_tx.clone();
         std::thread::Builder::new()
@@ -371,6 +382,9 @@ pub struct Coordinator {
     /// Shared execution fabric (native RNS backends only): one pool of
     /// fan-out threads for all workers, with per-worker budgets.
     fabric: Option<Arc<ExecutionFabric>>,
+    /// End-to-end span-trace assembly (sampled requests + forced
+    /// failures); shared by every tier through handles.
+    collector: Arc<TraceCollector>,
     started: Instant,
 }
 
@@ -403,6 +417,10 @@ impl Coordinator {
 
         let routes: ResponseRoutes = Arc::new(Mutex::new(HashMap::new()));
         let responder = Responder { default_tx: resp_tx, routes: Arc::clone(&routes) };
+        // span-trace assembly shares the ring's slot budget: trace_slots=0
+        // disables both views, and both keep the slowest N
+        let collector =
+            Arc::new(TraceCollector::new(cfg.trace_slots, cfg.trace_sample, cfg.seed));
 
         let nworkers = cfg.workers.max(1);
         let slots: Arc<Vec<WorkerSlot>> = Arc::new(
@@ -424,6 +442,7 @@ impl Coordinator {
             fabric: fabric.as_ref().map(Arc::clone),
             slots: Arc::clone(&slots),
             sup_tx: sup_tx.clone(),
+            collector: Arc::clone(&collector),
         };
         let worker_handles = Arc::new(Mutex::new(Vec::new()));
         {
@@ -450,10 +469,20 @@ impl Coordinator {
         let routing = cfg.routing;
         let metrics_d = Arc::clone(&metrics);
         let responder_d = responder.clone();
+        let collector_d = Arc::clone(&collector);
         let dispatcher = std::thread::Builder::new()
             .name("rns-dispatcher".into())
             .spawn(move || {
-                dispatcher_loop(submit_rx, mailboxes, batcher_cfg, routing, done_rx, metrics_d, responder_d)
+                dispatcher_loop(
+                    submit_rx,
+                    mailboxes,
+                    batcher_cfg,
+                    routing,
+                    done_rx,
+                    metrics_d,
+                    responder_d,
+                    collector_d,
+                )
             })
             .expect("spawn dispatcher");
 
@@ -473,6 +502,7 @@ impl Coordinator {
             store,
             registry,
             fabric,
+            collector,
             started: Instant::now(),
         }
     }
@@ -492,9 +522,16 @@ impl Coordinator {
             registry: Arc::clone(&self.registry),
             fabric: self.fabric.as_ref().map(Arc::clone),
             slots: Arc::clone(&self.slots),
+            collector: Arc::clone(&self.collector),
             default_deadline: self.default_deadline,
             started: self.started,
         }
+    }
+
+    /// The span-trace collector (tests and in-process tooling; the
+    /// gateway reaches it through its `CoordinatorHandle`).
+    pub fn trace_collector(&self) -> Arc<TraceCollector> {
+        Arc::clone(&self.collector)
     }
 
     /// The shared plan store (one `Arc<RnsPlan>` per layer across all
@@ -667,6 +704,7 @@ pub struct CoordinatorHandle {
     registry: Arc<ModelRegistry>,
     fabric: Option<Arc<ExecutionFabric>>,
     slots: Arc<Vec<WorkerSlot>>,
+    collector: Arc<TraceCollector>,
     default_deadline: Option<Duration>,
     started: Instant,
 }
@@ -696,12 +734,29 @@ impl CoordinatorHandle {
         deadline: Option<Duration>,
         deliver: impl FnOnce(InferenceResponse) + Send + 'static,
     ) -> Result<RequestId, String> {
+        self.submit_routed_traced(model, input, deadline, 0, deliver)
+    }
+
+    /// `submit_routed_with_deadline` carrying a span-trace id (0 =
+    /// unsampled): the request's queue and per-stage spans are recorded
+    /// against it by the dispatcher and the serving worker.
+    pub fn submit_routed_traced(
+        &self,
+        model: &str,
+        input: Batch,
+        deadline: Option<Duration>,
+        trace: u64,
+        deliver: impl FnOnce(InferenceResponse) + Send + 'static,
+    ) -> Result<RequestId, String> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.routes.lock().unwrap().insert(id, Box::new(deliver));
         let deadline = deadline.or(self.default_deadline).map(|d| Instant::now() + d);
         let sent = match self.submit_tx.lock().unwrap().as_ref() {
             Some(tx) => {
-                tx.send(InferenceRequest::new(id, model, input).with_deadline(deadline)).is_ok()
+                let req = InferenceRequest::new(id, model, input)
+                    .with_deadline(deadline)
+                    .with_trace(trace);
+                tx.send(req).is_ok()
             }
             None => false,
         };
@@ -710,6 +765,18 @@ impl CoordinatorHandle {
             return Err("coordinator is shut down".into());
         }
         Ok(id)
+    }
+
+    /// Whether the coordinator still accepts submissions (`/readyz`):
+    /// false once `Coordinator::shutdown` has taken the submit door.
+    pub fn is_serving(&self) -> bool {
+        self.submit_tx.lock().unwrap().is_some()
+    }
+
+    /// The shared span-trace collector (gateway sampling, `/trace`
+    /// rendering, the `TraceSpans` wire frame).
+    pub fn trace_collector(&self) -> Arc<TraceCollector> {
+        Arc::clone(&self.collector)
     }
 
     /// Load a model into the shared registry now (workers still warm
@@ -768,6 +835,12 @@ impl CoordinatorHandle {
     /// The slowest-request trace block (the `Traces` frame's reply).
     pub fn traces_report(&self) -> String {
         self.metrics.lock().unwrap().traces_report()
+    }
+
+    /// The span-trace summary block (the `TraceSpans` frame's reply):
+    /// greppable `span-trace:` lines, slowest first.
+    pub fn trace_spans_report(&self) -> String {
+        self.collector.summary()
     }
 }
 
@@ -889,7 +962,14 @@ fn handle_worker_down(
                     batch.crashes
                 ),
             );
-            fail_batch(wid, &batch, err, &ctx.spawner.responder, &ctx.spawner.metrics);
+            fail_batch(
+                wid,
+                &batch,
+                err,
+                &ctx.spawner.responder,
+                &ctx.spawner.metrics,
+                &ctx.spawner.collector,
+            );
         } else {
             // inference is pure: replaying the batch on a healthy slot
             // is bit-identical (under NoiseModel::None).  During a drain
@@ -950,6 +1030,7 @@ fn scan_for_stalls(ctx: &SupervisorCtx, stall_timeout: Duration) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     submit_rx: Receiver<InferenceRequest>,
     mailboxes: Vec<Arc<WorkerBox>>,
@@ -958,6 +1039,7 @@ fn dispatcher_loop(
     done_rx: Receiver<usize>,
     metrics: Arc<Mutex<ServingMetrics>>,
     responder: Responder,
+    collector: Arc<TraceCollector>,
 ) {
     let mut batcher = DynamicBatcher::new(batcher_cfg);
     let mut policy = routing.build();
@@ -980,7 +1062,7 @@ fn dispatcher_loop(
         // requests whose deadline passed while queued: typed fail now,
         // before they waste a batch slot
         for req in batcher.expire(Instant::now()) {
-            fail_expired_request(req, &responder, &metrics);
+            fail_expired_request(req, &responder, &metrics, &collector);
         }
         let force = !open;
         while let Some(batch) = batcher.pop_ready(Instant::now(), force) {
@@ -1001,12 +1083,27 @@ fn fail_expired_request(
     req: InferenceRequest,
     responder: &Responder,
     metrics: &Arc<Mutex<ServingMetrics>>,
+    collector: &TraceCollector,
 ) {
     let latency = req.submitted_at.elapsed();
     {
         let mut m = metrics.lock().unwrap();
         m.record_response(req.num_samples(), latency, latency, false);
         m.deadline_exceeded.inc();
+    }
+    // deadline failures are always trace-worthy: force-complete a tree
+    // (merging gateway-recorded spans when the request was sampled) whose
+    // only server span is the queue time that ate the budget
+    if collector.enabled() {
+        let start_us = trace::us_since_epoch(req.submitted_at);
+        let end_us = trace::now_us();
+        let queue = Span::new(
+            trace::SPAN_QUEUE,
+            trace::BATCHER_TID,
+            start_us,
+            end_us.saturating_sub(start_us),
+        );
+        collector.force(req.trace, &req.model, start_us, end_us, vec![queue]);
     }
     responder.deliver(InferenceResponse {
         id: req.id,
@@ -1105,6 +1202,7 @@ struct WorkerShared {
     mailbox: Arc<WorkerBox>,
     chaos: Arc<Mutex<WorkerChaos>>,
     health: Arc<WorkerHealth>,
+    collector: Arc<TraceCollector>,
 }
 
 /// Per-worker cumulative-counter snapshots, so each batch reports deltas
@@ -1167,11 +1265,19 @@ fn worker_loop(wid: usize, gen: u64, sh: WorkerShared) {
                             ServeError::internal(&e),
                             &sh.responder,
                             &sh.metrics,
+                            &sh.collector,
                         ),
                     }
                 }
                 while let Some(batch) = sh.mailbox.try_pop_batch(gen) {
-                    fail_batch(wid, &batch, ServeError::internal(&e), &sh.responder, &sh.metrics);
+                    fail_batch(
+                        wid,
+                        &batch,
+                        ServeError::internal(&e),
+                        &sh.responder,
+                        &sh.metrics,
+                        &sh.collector,
+                    );
                 }
                 return;
             }
@@ -1269,6 +1375,7 @@ fn serve_batch(
             ServeError::new(ServeErrorKind::DeadlineExceeded, "deadline passed before pickup"),
             &sh.responder,
             &sh.metrics,
+            &sh.collector,
         );
         return;
     }
@@ -1284,7 +1391,7 @@ fn serve_batch(
         Ok(m) => m,
         Err(e) => {
             crate::log_warn!("worker", "worker {wid}: model `{}` failed to load: {e}", batch.model);
-            fail_batch(wid, batch, ServeError::model(e), &sh.responder, &sh.metrics);
+            fail_batch(wid, batch, ServeError::model(e), &sh.responder, &sh.metrics, &sh.collector);
             return;
         }
     };
@@ -1332,12 +1439,7 @@ fn serve_batch(
     // (only backends that time their pipeline report them)
     let stage_now = backend.stage_micros();
     let stage_delta = stage_now.map(|now| {
-        let d = StageMicros {
-            dac_forward_us: now.dac_forward_us.saturating_sub(counters.stage.dac_forward_us),
-            analog_gemm_us: now.analog_gemm_us.saturating_sub(counters.stage.analog_gemm_us),
-            adc_capture_us: now.adc_capture_us.saturating_sub(counters.stage.adc_capture_us),
-            decode_us: now.decode_us.saturating_sub(counters.stage.decode_us),
-        };
+        let d = now.delta_since(&counters.stage);
         counters.stage = now;
         d
     });
@@ -1392,6 +1494,75 @@ fn serve_batch(
     let mut member_meta: Vec<(RequestId, usize, u64, u64)> =
         Vec::with_capacity(batch.members.len());
     let deliver_start = Instant::now();
+    // span-trace attribution, recorded *before* delivery so a reply
+    // flushed (and completed) by the gateway loop mid-fan-out can never
+    // outrun its own spans.  Stage durations are the exact u64 values
+    // the stage histograms observe below, laid out sequentially from
+    // pickup (their sum cannot exceed the forward wall time, so the
+    // stage spans nest inside the batch span by construction); members
+    // that expired during the forward are force-completed here because
+    // no reply flush will ever complete them.
+    let mut traced: Vec<u64> = Vec::new();
+    if sh.collector.enabled() {
+        let formed_us = trace::us_since_epoch(batch.formed_at);
+        let picked_up_us = trace::us_since_epoch(picked_up);
+        let forward_end_us = trace::us_since_epoch(deliver_start);
+        let d = stage_delta.unwrap_or_default();
+        let wtid = trace::WORKER_TID_BASE + wid as u32;
+        let nmembers = batch.members.len() as u64;
+        let mut buf = SpanBuffer::new();
+        for (i, (req, _)) in batch.members.iter().enumerate() {
+            let expired = req.expired(deliver_start);
+            if req.trace == 0 && !expired {
+                continue;
+            }
+            let queue_us = batch.formed_at.duration_since(req.submitted_at).as_micros() as u64;
+            let tags = [("batch", nmembers), ("member", i as u64)];
+            let mut spans = vec![
+                Span::new(
+                    trace::SPAN_QUEUE,
+                    trace::BATCHER_TID,
+                    formed_us.saturating_sub(queue_us),
+                    queue_us,
+                ),
+                Span::new(trace::SPAN_BATCH_FORM, trace::BATCHER_TID, formed_us, batch_form_us),
+                Span::new(
+                    trace::SPAN_BATCH,
+                    wtid,
+                    picked_up_us,
+                    forward_end_us.saturating_sub(picked_up_us),
+                )
+                .with_args(&tags),
+            ];
+            if stage_delta.is_some() {
+                let mut at = picked_up_us;
+                for (name, dur) in [
+                    (trace::SPAN_DAC_FORWARD, d.dac_forward_us),
+                    (trace::SPAN_ANALOG_GEMM, d.analog_gemm_us),
+                    (trace::SPAN_ADC_CAPTURE, d.adc_capture_us),
+                    (trace::SPAN_DECODE, d.decode_us),
+                ] {
+                    spans.push(Span::new(name, wtid, at, dur).with_args(&tags));
+                    at = at.saturating_add(dur);
+                }
+            }
+            if expired {
+                sh.collector.force(
+                    req.trace,
+                    &batch.model,
+                    formed_us.saturating_sub(queue_us),
+                    forward_end_us,
+                    spans,
+                );
+            } else {
+                traced.push(req.trace);
+                for s in spans {
+                    buf.push(req.trace, s);
+                }
+            }
+        }
+        buf.flush(&sh.collector);
+    }
     for (req, offset) in &batch.members {
         let n = req.num_samples();
         let latency = req.submitted_at.elapsed();
@@ -1426,6 +1597,16 @@ fn serve_batch(
         });
     }
     let delivery_us = deliver_start.elapsed().as_micros() as u64;
+    // the fan-out span arrives after the fact by necessity; a trace whose
+    // reply already flushed (and completed) drops it silently, which is
+    // the accepted race — every compute span was recorded pre-delivery
+    if !traced.is_empty() {
+        let deliver_start_us = trace::us_since_epoch(deliver_start);
+        let wtid = trace::WORKER_TID_BASE + wid as u32;
+        sh.collector.record_batch(traced.iter().map(|&id| {
+            (id, Span::new(trace::SPAN_DELIVERY, wtid, deliver_start_us, delivery_us))
+        }));
+    }
     {
         let mut m = sh.metrics.lock().unwrap();
         m.stage.batch_form.observe(batch_form_us);
@@ -1474,7 +1655,10 @@ fn fail_batch(
     err: ServeError,
     responder: &Responder,
     metrics: &Arc<Mutex<ServingMetrics>>,
+    collector: &TraceCollector,
 ) {
+    let force_trace =
+        matches!(err.kind, ServeErrorKind::DeadlineExceeded | ServeErrorKind::Poisoned);
     for (req, _) in &batch.members {
         let latency = req.submitted_at.elapsed();
         {
@@ -1483,6 +1667,19 @@ fn fail_batch(
             if err.kind == ServeErrorKind::DeadlineExceeded {
                 m.deadline_exceeded.inc();
             }
+        }
+        // deadline/poison failures force a span tree even when unsampled
+        // (the gateway completes sampled traces for other error kinds)
+        if force_trace && collector.enabled() {
+            let start_us = trace::us_since_epoch(req.submitted_at);
+            let end_us = trace::now_us();
+            let queue = Span::new(
+                trace::SPAN_QUEUE,
+                trace::BATCHER_TID,
+                start_us,
+                trace::us_since_epoch(batch.formed_at).saturating_sub(start_us),
+            );
+            collector.force(req.trace, &batch.model, start_us, end_us, vec![queue]);
         }
         responder.deliver(InferenceResponse {
             id: req.id,

@@ -70,6 +70,10 @@ fn usage() {
              [--stall-timeout-ms=30000] [--poison-threshold=2] [--default-deadline-ms=0]\n\
              [--trace-slots=16]  (slowest-request pipeline trace ring; 0 = off;\n\
               Prometheus exposition at GET /metrics?format=prometheus)\n\
+             [--trace-sample=0.0]  (span-trace sampling probability for requests\n\
+              without a client-chosen trace id; span trees at GET /trace, Chrome\n\
+              trace-event JSON at /trace?format=chrome; health at /healthz,\n\
+              readiness at /readyz)\n\
              [--chaos=SPEC]  (seeded fault injection, e.g. \"panic@w0:b3,\n\
               stall@w1:b2:50ms,poison@mlp,drop@s1:f2\" — tests/CI only)\n\
              [--sparse-capture]  (conversion-avoiding sparse execution on RNS\n\
@@ -80,6 +84,9 @@ fn usage() {
              [--rate=0]  (open-loop arrivals in req/s across all connections;\n\
               0 = closed-loop with --window=32 requests in flight per conn)\n\
              [--requests=0] [--deadline-ms=0] [--seed=42] [--p99-budget-ms=0]\n\
+             [--trace-sample=0]  (fraction of infer ops sent with a trace id;\n\
+              the report joins client latency with server span trees in a\n\
+              `slowest:` section)\n\
              [--token=SECRET]  (admin token for load/unload ops in the blend;\n\
               env RNS_ADMIN_TOKEN also works)\n\
          pjrt-demo [--bits=6]"
@@ -365,6 +372,15 @@ fn cmd_serve(args: &mut Args) -> i32 {
             }
         }
     }
+    if let Some(p) = args.get("trace-sample") {
+        match p.parse::<f64>() {
+            Ok(v) if (0.0..=1.0).contains(&v) => cfg.trace_sample = v,
+            _ => {
+                eprintln!("--trace-sample={p}: want a probability in [0, 1]");
+                return 2;
+            }
+        }
+    }
     if let Some(ms) = args.get("default-deadline-ms") {
         match ms.parse::<u64>() {
             Ok(0) => cfg.default_deadline = None,
@@ -470,7 +486,8 @@ fn cmd_serve_gateway(cfg: CoordinatorConfig, gw_cfg: GatewayConfig, serve_second
     };
     println!(
         "[gateway] listening on {} — binary wire protocol + HTTP GET/HEAD /metrics \
-         (Prometheus: /metrics?format=prometheus)",
+         (Prometheus: /metrics?format=prometheus), /trace (?format=chrome), \
+         /healthz, /readyz",
         gw.local_addr()
     );
     // flush: smoke scripts poll the log for the listening line before
@@ -526,6 +543,13 @@ fn cmd_loadgen(args: &mut Args) -> i32 {
             admin_token,
             seed: args.get_parsed::<u64>("seed", 42)?,
             p99_budget_us: args.get_parsed::<f64>("p99-budget-ms", 0.0)? * 1000.0,
+            trace_sample: {
+                let p = args.get_parsed::<f64>("trace-sample", 0.0)?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("--trace-sample={p}: want a probability in [0, 1]"));
+                }
+                p
+            },
         })
     })();
     let cfg = match parsed {

@@ -42,6 +42,11 @@ pub struct InferReply {
     pub faults_detected: u64,
     /// Worker that executed the batch.
     pub worker: u32,
+    /// Span-trace id this request was recorded under (echoed from the
+    /// request, or assigned by server-side sampling); 0 = untraced.
+    /// Join against the server's `trace_spans` report to attribute this
+    /// request's latency to pipeline stages.
+    pub trace_id: u64,
 }
 
 /// Why a client call failed — the split that drives the retry policy.
@@ -184,13 +189,36 @@ impl Client {
         self.submit_typed(model, input).map_err(|e| e.to_string())
     }
 
+    /// `submit` with a caller-chosen span-trace id: a nonzero `trace_id`
+    /// asks the server to record this request's span tree under that id
+    /// regardless of its sampling rate (the id comes back in `InferOk`
+    /// and in the `trace_spans` report).
+    pub fn submit_traced(
+        &mut self,
+        model: &str,
+        input: &Batch,
+        trace_id: u64,
+    ) -> Result<u64, String> {
+        self.submit_traced_typed(model, input, trace_id).map_err(|e| e.to_string())
+    }
+
     fn submit_typed(&mut self, model: &str, input: &Batch) -> Result<u64, ClientError> {
+        self.submit_traced_typed(model, input, 0)
+    }
+
+    fn submit_traced_typed(
+        &mut self,
+        model: &str,
+        input: &Batch,
+        trace_id: u64,
+    ) -> Result<u64, ClientError> {
         let id = self.fresh_id();
         let frame = Frame::Infer {
             id,
             model: to_name(model)?,
             deadline_ms: self.deadline_ms,
             input: WireBatch::from_batch(input),
+            trace_id,
         };
         self.send(&frame)?;
         Ok(id)
@@ -205,12 +233,15 @@ impl Client {
     /// `recv_infer` with the typed error split.
     pub fn recv_infer_typed(&mut self) -> Result<InferReply, ClientError> {
         match self.recv()? {
-            Frame::InferOk { id, rows, cols, logits, faults_detected, worker } => Ok(InferReply {
-                id,
-                logits: MatF::from_vec(rows as usize, cols as usize, logits),
-                faults_detected,
-                worker,
-            }),
+            Frame::InferOk { id, rows, cols, logits, faults_detected, worker, trace_id } => {
+                Ok(InferReply {
+                    id,
+                    logits: MatF::from_vec(rows as usize, cols as usize, logits),
+                    faults_detected,
+                    worker,
+                    trace_id,
+                })
+            }
             Frame::Error { id, code, message } => {
                 Err(ClientError::Server { code, message: format!("request {id}: {message}") })
             }
@@ -256,6 +287,19 @@ impl Client {
             Frame::TracesReport { text, .. } => Ok(text),
             Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
             other => Err(format!("unexpected reply to traces: {other:?}")),
+        }
+    }
+
+    /// Fetch the span-trace report (`TraceCollector::summary`): one
+    /// header line plus one `span-trace:` line per retained tree —
+    /// parseable with `trace::parse_summary_line`.
+    pub fn trace_spans(&mut self) -> Result<String, String> {
+        let id = self.fresh_id();
+        self.send(&Frame::TraceSpans { id }).map_err(|e| e.to_string())?;
+        match self.recv().map_err(|e| e.to_string())? {
+            Frame::TraceSpansReport { text, .. } => Ok(text),
+            Frame::Error { code, message, .. } => Err(format!("{code:?}: {message}")),
+            other => Err(format!("unexpected reply to trace_spans: {other:?}")),
         }
     }
 

@@ -60,8 +60,10 @@ use crate::coordinator::request::ServeErrorKind;
 use crate::coordinator::server::{Coordinator, CoordinatorHandle};
 use crate::net::poll::{spawn_loop, LoopHandle, LoopMsg, ReplyRoute};
 use crate::net::protocol::{ErrorCode, Frame, HelloStatus, MAGIC, VERSION};
+use crate::util::logging::{emit_fields, FieldValue, Level};
 use crate::util::metrics::{Counter, Gauge, Histogram, LATENCY_BUCKETS_US};
 use crate::util::stats::Reservoir;
+use crate::util::trace::{self, Span, TraceCollector};
 
 /// Gateway knobs (config file: `[serve] listen_addr / max_sessions /
 /// idle_timeout_ms / loop_threads / admin_token`; CLI: `serve
@@ -152,10 +154,13 @@ pub(crate) struct GatewayShared {
     /// `GatewayShared`.
     pub(crate) latency_us: Arc<Mutex<Reservoir>>,
     /// Set during shutdown: new sessions and new `Infer` frames are
-    /// refused while in-flight replies drain.
+    /// refused while in-flight replies drain (`/readyz` reads it too).
     pub(crate) draining: AtomicBool,
     /// Signals `Gateway::wait_shutdown` when a client sends `Shutdown`.
     pub(crate) shutdown_tx: Mutex<Option<Sender<()>>>,
+    /// End-to-end span traces: sampling decisions, span recording, and
+    /// the `/trace` endpoint all go through the coordinator's collector.
+    pub(crate) collector: Arc<TraceCollector>,
 }
 
 impl GatewayShared {
@@ -254,6 +259,7 @@ impl Gateway {
                 &LATENCY_BUCKETS_US,
             ),
             admission: stage_histogram(&reg, "admission"),
+            collector: handle.trace_collector(),
             handle,
             latency_us: Arc::new(Mutex::new(Reservoir::new(LATENCY_RESERVOIR, 0x6A7E_11A7))),
             draining: AtomicBool::new(false),
@@ -408,13 +414,15 @@ pub(crate) struct FrameOutcome {
 /// Handle one request frame.  Synchronous replies are pushed onto
 /// `sync` (the loop queues them on the connection's write buffer);
 /// `Infer` replies arrive later through `route` when the coordinator
-/// delivers.
+/// delivers.  `read_start_us` is when this frame's read burst began
+/// (epoch µs) — the start of a sampled request's `assemble` span.
 pub(crate) fn handle_frame(
     frame: Frame,
     peer_is_loopback: bool,
     shared: &Arc<GatewayShared>,
     sync: &mut Vec<Frame>,
     route: &ReplyRoute,
+    read_start_us: u64,
 ) -> FrameOutcome {
     let token_mode = shared.cfg.admin_token.is_some();
     match frame {
@@ -428,6 +436,10 @@ pub(crate) fn handle_frame(
         Frame::Traces { id } => {
             let text = shared.handle.traces_report();
             sync.push(Frame::TracesReport { id, text });
+        }
+        Frame::TraceSpans { id } => {
+            let text = shared.handle.trace_spans_report();
+            sync.push(Frame::TraceSpansReport { id, text });
         }
         Frame::LoadModel { id, model, token } => {
             if !shared.admin_ok(peer_is_loopback, &token) {
@@ -454,9 +466,13 @@ pub(crate) fn handle_frame(
                 return FrameOutcome { keep: true, submitted: false };
             }
             sync.push(Frame::Ack { id, info: "draining".into() });
+            // flip readiness immediately: `/readyz` reports 503 from the
+            // moment the drain was requested, not from when the owning
+            // process gets around to calling `Gateway::shutdown`
+            shared.draining.store(true, Ordering::SeqCst);
             shared.signal_shutdown();
         }
-        Frame::Infer { id, model, deadline_ms, input } => {
+        Frame::Infer { id, model, deadline_ms, input, trace_id } => {
             if shared.draining.load(Ordering::SeqCst) {
                 let message = "gateway is draining".to_string();
                 sync.push(Frame::Error { id, code: ErrorCode::Draining, message });
@@ -472,15 +488,30 @@ pub(crate) fn handle_frame(
                     return FrameOutcome { keep: true, submitted: false };
                 }
             };
+            // trace resolution: a client-chosen wire id wins, otherwise
+            // the seeded sampler decides.  A nonzero trace opens the
+            // pending tree here, with the read/assemble work as its
+            // first span (ending at this dispatch).
+            let trace = if trace_id != 0 { trace_id } else { shared.collector.sample() };
+            let t0 = Instant::now();
+            if trace != 0 {
+                let t0_us = trace::us_since_epoch(t0);
+                let start = read_start_us.min(t0_us);
+                shared.collector.begin(trace, &model, start);
+                shared.collector.record(
+                    trace,
+                    Span::new(trace::SPAN_ASSEMBLE, trace::GATEWAY_TID, start, t0_us - start),
+                );
+            }
             let route = route.clone();
             let latency = Arc::clone(&shared.latency_us);
             let latency_hist = Arc::clone(&shared.request_latency);
-            let t0 = Instant::now();
+            let collector = Arc::clone(&shared.collector);
             // 0 = no per-request deadline (the server default applies)
             let deadline =
                 (deadline_ms > 0).then(|| Duration::from_millis(u64::from(deadline_ms)));
             let submitted =
-                shared.handle.submit_routed_with_deadline(&model, batch, deadline, move |resp| {
+                shared.handle.submit_routed_traced(&model, batch, deadline, trace, move |resp| {
                     latency.lock().unwrap().add(t0.elapsed().as_secs_f64() * 1e6);
                     latency_hist.observe(t0.elapsed().as_micros() as u64);
                     let frame = match resp.result {
@@ -491,8 +522,20 @@ pub(crate) fn handle_frame(
                             logits: logits.data,
                             faults_detected: resp.faults_detected,
                             worker: resp.worker as u32,
+                            trace_id: trace,
                         },
                         Err(e) => {
+                            // deadline/poison failures were force-completed
+                            // server-side; other errors close the trace
+                            // here (no reply flush will)
+                            if trace != 0
+                                && !matches!(
+                                    e.kind,
+                                    ServeErrorKind::DeadlineExceeded | ServeErrorKind::Poisoned
+                                )
+                            {
+                                collector.complete(trace, trace::now_us());
+                            }
                             Frame::Error { id, code: wire_code(e.kind), message: e.message }
                         }
                     };
@@ -501,12 +544,28 @@ pub(crate) fn handle_frame(
             match submitted {
                 // the `admission` pipeline stage: batch validation through
                 // coordinator accept (queueing starts after this); rejected
-                // submissions don't count as admitted
+                // submissions don't count as admitted.  The admission span
+                // is recorded from the very value the histogram observes.
                 Ok(_) => {
-                    shared.admission.observe(t0.elapsed().as_micros() as u64);
+                    let admission_us = t0.elapsed().as_micros() as u64;
+                    shared.admission.observe(admission_us);
+                    if trace != 0 {
+                        shared.collector.record(
+                            trace,
+                            Span::new(
+                                trace::SPAN_ADMISSION,
+                                trace::GATEWAY_TID,
+                                trace::us_since_epoch(t0),
+                                admission_us,
+                            ),
+                        );
+                    }
                     return FrameOutcome { keep: true, submitted: true };
                 }
                 Err(e) => {
+                    if trace != 0 {
+                        shared.collector.complete(trace, trace::now_us());
+                    }
                     sync.push(Frame::Error { id, code: ErrorCode::Internal, message: e });
                 }
             }
@@ -522,13 +581,26 @@ pub(crate) fn handle_frame(
     FrameOutcome { keep: true, submitted: false }
 }
 
-/// Minimal HTTP/1.1 responder for metrics scrapes.  The 4-byte method
-/// sniff (`b"GET "` / `b"HEAD"`) has already been consumed; everything
-/// up to the blank line is read (bounded) and only the request target
-/// matters.  `HEAD` writes the status line + headers and no body.
+/// Minimal HTTP/1.1 responder for metrics scrapes and health probes.
+/// The 4-byte method sniff (`b"GET "` / `b"HEAD"`) has already been
+/// consumed; everything up to the blank line is read (bounded) and only
+/// the request target matters.  `HEAD` writes the status line + headers
+/// and no body.  Every request emits one structured access-log line
+/// (path, status, bytes, micros — JSON-native under
+/// `RNS_LOG_FORMAT=json`).
+///
+/// Paths (all admission-exempt — observability must work *especially*
+/// under overload):
+///   * `/metrics` — live report; `?format=prometheus` for exposition
+///   * `/healthz` — liveness: 200 while the process serves HTTP at all
+///   * `/readyz` — readiness: 503 while draining or after coordinator
+///     shutdown, 200 otherwise
+///   * `/trace` — span-trace summary; `?format=chrome` for Chrome
+///     trace-event JSON (load in Perfetto / `chrome://tracing`)
 pub(crate) fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>, is_head: bool) {
     // every HTTP request counts as a scrape, hit or miss, GET or HEAD
     shared.scrapes.inc();
+    let t0 = Instant::now();
     let mut head = Vec::new();
     let mut tmp = [0u8; 512];
     while !head.windows(4).any(|w| w == b"\r\n\r\n") {
@@ -548,23 +620,42 @@ pub(crate) fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>, is_
         Some((p, q)) => (p, q),
         None => (target, ""),
     };
-    let (status, content_type, body) = if path == "/metrics" {
-        if query.split('&').any(|kv| kv == "format=prometheus") {
-            // Prometheus text exposition format 0.0.4
-            ("200 OK", "text/plain; version=0.0.4", shared.prometheus_report())
-        } else {
-            ("200 OK", "text/plain; charset=utf-8", format!("{}\n", shared.report()))
+    let chrome = query.split('&').any(|kv| kv == "format=chrome");
+    let (status, content_type, body) = match path {
+        "/metrics" => {
+            if query.split('&').any(|kv| kv == "format=prometheus") {
+                // Prometheus text exposition format 0.0.4
+                (200, "text/plain; version=0.0.4", shared.prometheus_report())
+            } else {
+                (200, "text/plain; charset=utf-8", format!("{}\n", shared.report()))
+            }
         }
-    } else {
-        shared.not_found.inc();
-        (
-            "404 Not Found",
-            "text/plain; charset=utf-8",
-            format!("no such path `{path}` (try /metrics)\n"),
-        )
+        "/healthz" => (200, "text/plain; charset=utf-8", "ok\n".to_string()),
+        "/readyz" => {
+            if shared.draining.load(Ordering::SeqCst) || !shared.handle.is_serving() {
+                (503, "text/plain; charset=utf-8", "draining\n".to_string())
+            } else {
+                (200, "text/plain; charset=utf-8", "ready\n".to_string())
+            }
+        }
+        "/trace" if chrome => (200, "application/json", shared.collector.chrome_json()),
+        "/trace" => (200, "text/plain; charset=utf-8", shared.collector.summary()),
+        _ => {
+            shared.not_found.inc();
+            (
+                404,
+                "text/plain; charset=utf-8",
+                format!("no such path `{path}` (try /metrics, /healthz, /readyz, /trace)\n"),
+            )
+        }
+    };
+    let reason = match status {
+        200 => "200 OK",
+        503 => "503 Service Unavailable",
+        _ => "404 Not Found",
     };
     let resp = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+        "HTTP/1.1 {reason}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
@@ -573,4 +664,15 @@ pub(crate) fn serve_http(mut stream: TcpStream, shared: &Arc<GatewayShared>, is_
         stream.write_all(body.as_bytes()).ok();
     }
     stream.shutdown(Shutdown::Both).ok();
+    emit_fields(
+        Level::Info,
+        "gateway",
+        "http",
+        &[
+            ("path", FieldValue::Text(path.to_string())),
+            ("status", FieldValue::Num(status)),
+            ("bytes", FieldValue::Num(body.len() as u64)),
+            ("micros", FieldValue::Num(t0.elapsed().as_micros() as u64)),
+        ],
+    );
 }

@@ -30,6 +30,15 @@ use std::time::{Duration, Instant};
 use crate::net::protocol::{Frame, HelloStatus, WireBatch, MAGIC, VERSION};
 use crate::util::rng::Rng;
 use crate::util::stats::Reservoir;
+use crate::util::trace::parse_summary_line;
+
+/// Cap on client-side (trace_id, latency) samples retained for the
+/// post-run span join — matches the server's own keep-slowest bound in
+/// spirit: enough for a tail, not a transcript.
+const MAX_SAMPLED: usize = 512;
+
+/// Rows in the report's `slowest:` section.
+const SLOWEST_ROWS: usize = 5;
 
 /// A leaf operation, after sampling a workload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -213,6 +222,11 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// Flag the run if p99 exceeds this budget (µs); `0` disables.
     pub p99_budget_us: f64,
+    /// Fraction of `Infer` requests sent with a client-chosen span-trace
+    /// id (`0` = none).  Traced replies are joined with the server's
+    /// span report after the run to attribute tail latency to pipeline
+    /// stages (`slowest:` report lines).
+    pub trace_sample: f64,
 }
 
 impl Default for LoadgenConfig {
@@ -232,6 +246,7 @@ impl Default for LoadgenConfig {
             admin_token: String::new(),
             seed: 42,
             p99_budget_us: 0.0,
+            trace_sample: 0.0,
         }
     }
 }
@@ -250,9 +265,28 @@ pub struct LoadReport {
     pub p99_us: f64,
     /// Per-op completed counts, indexed like `Op::index`.
     pub ops: [u64; OP_KINDS],
+    /// Per-op latency percentiles (µs), indexed like `Op::index`.
+    pub op_p50_us: [f64; OP_KINDS],
+    pub op_p99_us: [f64; OP_KINDS],
     /// `Some(false)` when a p99 budget was set and blown.
     pub p99_within_budget: Option<bool>,
     pub last_error: Option<String>,
+    /// Slowest traced requests joined with the server's span report —
+    /// client latency next to the dominant server-side span.
+    pub slowest: Vec<SlowTrace>,
+}
+
+/// One row of the `slowest:` section: a traced request's client-observed
+/// latency joined with the server's span tree for the same trace id.
+#[derive(Clone, Debug)]
+pub struct SlowTrace {
+    pub trace_id: u64,
+    /// Client-observed latency (send → reply), µs.
+    pub client_us: f64,
+    /// Server-side span-tree total, µs.
+    pub server_us: u64,
+    /// Widest non-structural span in the tree (where the time went).
+    pub dominant: String,
 }
 
 impl std::fmt::Display for LoadReport {
@@ -276,6 +310,23 @@ impl std::fmt::Display for LoadReport {
         if let Some(within) = self.p99_within_budget {
             write!(f, " p99_budget={}", if within { "ok" } else { "EXCEEDED" })?;
         }
+        const OP_NAMES: [&str; OP_KINDS] = ["infer", "stats", "load", "unload"];
+        for i in 0..OP_KINDS {
+            if self.ops[i] > 0 {
+                write!(
+                    f,
+                    "\nloadgen-op: op={} count={} p50_us={:.0} p99_us={:.0}",
+                    OP_NAMES[i], self.ops[i], self.op_p50_us[i], self.op_p99_us[i]
+                )?;
+            }
+        }
+        for s in &self.slowest {
+            write!(
+                f,
+                "\nslowest: id={:#018x} client_us={:.0} server_us={} dominant={}",
+                s.trace_id, s.client_us, s.server_us, s.dominant
+            )?;
+        }
         Ok(())
     }
 }
@@ -287,6 +338,11 @@ struct Totals {
     failures: AtomicU64,
     ops: [AtomicU64; OP_KINDS],
     latency_us: Mutex<Reservoir>,
+    /// Per-op latency reservoirs, indexed like `Op::index`.
+    op_latency_us: Mutex<Vec<Reservoir>>,
+    /// Completed traced requests: `(trace_id, client latency µs)`,
+    /// bounded at `MAX_SAMPLED`.
+    sampled: Mutex<Vec<(u64, f64)>>,
     last_error: Mutex<Option<String>>,
 }
 
@@ -336,6 +392,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         failures: AtomicU64::new(0),
         ops: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
         latency_us: Mutex::new(Reservoir::new(8192, cfg.seed ^ 0x10AD_6E11)),
+        op_latency_us: Mutex::new(
+            (0..OP_KINDS).map(|i| Reservoir::new(2048, cfg.seed ^ (0xD15C0 + i as u64))).collect(),
+        ),
+        sampled: Mutex::new(Vec::new()),
         last_error: Mutex::new(None),
     });
     let zipf = Arc::new(Zipf::new(cfg.models.len(), cfg.zipf_s));
@@ -385,6 +445,18 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         (r.percentile(50.0), r.percentile(99.0))
     };
     let p99_within_budget = (cfg.p99_budget_us > 0.0).then(|| p99_us <= cfg.p99_budget_us);
+    let (op_p50_us, op_p99_us) = {
+        let rs = totals.op_latency_us.lock().unwrap();
+        let mut p50 = [0.0; OP_KINDS];
+        let mut p99 = [0.0; OP_KINDS];
+        for i in 0..OP_KINDS {
+            p50[i] = rs[i].percentile(50.0);
+            p99[i] = rs[i].percentile(99.0);
+        }
+        (p50, p99)
+    };
+    let sampled = totals.sampled.lock().unwrap().clone();
+    let slowest = join_slowest(&cfg.addr, &sampled);
     Ok(LoadReport {
         sent: totals.sent.load(Ordering::SeqCst),
         ok,
@@ -399,9 +471,50 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
             totals.ops[2].load(Ordering::SeqCst),
             totals.ops[3].load(Ordering::SeqCst),
         ],
+        op_p50_us,
+        op_p99_us,
         p99_within_budget,
         last_error: totals.last_error.lock().unwrap().clone(),
+        slowest,
     })
+}
+
+/// Join the client-observed latencies of traced requests with the
+/// server's span-trace report (one extra session, post-run): the
+/// slowest few come back with the server-side total and dominant span,
+/// so the tail is attributed, not just measured.
+fn join_slowest(addr: &str, sampled: &[(u64, f64)]) -> Vec<SlowTrace> {
+    if sampled.is_empty() {
+        return Vec::new();
+    }
+    let Ok(mut client) = crate::net::client::Client::connect(addr) else {
+        return Vec::new();
+    };
+    let report = match client.trace_spans() {
+        Ok(text) => text,
+        Err(_) => return Vec::new(),
+    };
+    client.close();
+    let mut by_id = HashMap::new();
+    for line in report.lines() {
+        if let Some(entry) = parse_summary_line(line) {
+            by_id.insert(entry.id, entry);
+        }
+    }
+    let mut rows: Vec<SlowTrace> = sampled
+        .iter()
+        .filter_map(|&(id, client_us)| {
+            by_id.get(&id).map(|e| SlowTrace {
+                trace_id: id,
+                client_us,
+                server_us: e.total_us,
+                dominant: e.dominant.clone().unwrap_or_else(|| "-".into()),
+            })
+        })
+        .collect();
+    rows.sort_by(|a, b| b.client_us.partial_cmp(&a.client_us).unwrap_or(std::cmp::Ordering::Equal));
+    rows.truncate(SLOWEST_ROWS);
+    rows
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -446,12 +559,24 @@ fn sender(
         let model = cfg.models[zipf.sample(&mut rng)].clone();
         id += 1;
         let frame = match op {
-            Op::Infer => Frame::Infer {
-                id,
-                model,
-                deadline_ms: cfg.deadline_ms,
-                input: cfg.data.draw(&mut rng),
-            },
+            Op::Infer => {
+                // derived id: connection in the high half, sequence in
+                // the low — unique across the whole run, join key for
+                // the post-run span report (&& short-circuits the draw,
+                // so trace_sample=0 leaves the rng stream untouched)
+                let trace_id = if cfg.trace_sample > 0.0 && rng.uniform() < cfg.trace_sample {
+                    ((conn_index as u64 + 1) << 32) | id
+                } else {
+                    0
+                };
+                Frame::Infer {
+                    id,
+                    model,
+                    deadline_ms: cfg.deadline_ms,
+                    input: cfg.data.draw(&mut rng),
+                    trace_id,
+                }
+            }
             Op::Stats => Frame::Stats { id },
             Op::Load => Frame::LoadModel { id, model, token: cfg.admin_token.clone() },
             Op::Unload => Frame::UnloadModel { id, model, token: cfg.admin_token.clone() },
@@ -500,16 +625,26 @@ fn receiver(mut stream: TcpStream, totals: Arc<Totals>, shared: Arc<ConnShared>)
             continue; // unsolicited (e.g. server error with id 0)
         };
         shared.outstanding.fetch_sub(1, Ordering::SeqCst);
-        totals.latency_us.lock().unwrap().add(t_sent.elapsed().as_secs_f64() * 1e6);
+        let lat_us = t_sent.elapsed().as_secs_f64() * 1e6;
+        totals.latency_us.lock().unwrap().add(lat_us);
+        totals.op_latency_us.lock().unwrap()[op.index()].add(lat_us);
         match frame {
             Frame::Error { message, code, .. } => {
                 totals.failures.fetch_add(1, Ordering::SeqCst);
                 let mut last = totals.last_error.lock().unwrap();
                 *last = Some(format!("{code:?}: {message}"));
             }
-            _ => {
+            other => {
                 totals.ok.fetch_add(1, Ordering::SeqCst);
                 totals.ops[op.index()].fetch_add(1, Ordering::SeqCst);
+                if let Frame::InferOk { trace_id, .. } = other {
+                    if trace_id != 0 {
+                        let mut s = totals.sampled.lock().unwrap();
+                        if s.len() < MAX_SAMPLED {
+                            s.push((trace_id, lat_us));
+                        }
+                    }
+                }
             }
         }
     }
@@ -609,13 +744,29 @@ mod tests {
             p50_us: 900.0,
             p99_us: 4200.0,
             ops: [8, 2, 0, 0],
+            op_p50_us: [850.0, 120.0, 0.0, 0.0],
+            op_p99_us: [4100.0, 300.0, 0.0, 0.0],
             p99_within_budget: Some(true),
             last_error: None,
+            slowest: vec![SlowTrace {
+                trace_id: 0x1_0000_0007,
+                client_us: 4180.0,
+                server_us: 3900,
+                dominant: "analog_gemm".into(),
+            }],
         };
-        let line = rep.to_string();
-        assert!(line.contains("failures=0"), "{line}");
-        assert!(line.contains("rps=5.0"), "{line}");
-        assert!(line.contains("p99_us=4200"), "{line}");
-        assert!(line.contains("p99_budget=ok"), "{line}");
+        let text = rep.to_string();
+        let headline = text.lines().next().unwrap();
+        assert!(headline.contains("failures=0"), "{headline}");
+        assert!(headline.contains("rps=5.0"), "{headline}");
+        assert!(headline.contains("p99_us=4200"), "{headline}");
+        assert!(headline.contains("p99_budget=ok"), "{headline}");
+        // per-op breakdown only for ops that completed
+        assert!(text.contains("loadgen-op: op=infer count=8 p50_us=850 p99_us=4100"), "{text}");
+        assert!(text.contains("loadgen-op: op=stats count=2"), "{text}");
+        assert!(!text.contains("op=load"), "{text}");
+        // slowest section attributes the tail to the dominant span
+        assert!(text.contains("slowest: id=0x0000000100000007 client_us=4180"), "{text}");
+        assert!(text.contains("server_us=3900 dominant=analog_gemm"), "{text}");
     }
 }

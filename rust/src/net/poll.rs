@@ -63,6 +63,7 @@ use std::time::{Duration, Instant};
 use crate::net::gateway::{handle_frame, hello_bytes, reject, serve_http, GatewayShared};
 use crate::net::protocol::{ErrorCode, Frame, FrameAssembler, HelloStatus, MAGIC, VERSION};
 use crate::util::metrics::Counter;
+use crate::util::trace::{self, Span};
 
 /// Stop reading from a connection whose un-flushed reply bytes exceed
 /// this (resume when the peer drains its socket).
@@ -275,7 +276,20 @@ struct Conn {
     read_closed: bool,
     close_after_flush: bool,
     deadline: Instant,
+    /// Monotonic µs when the first byte of the frame currently being
+    /// assembled arrived; 0 between frames.  Feeds the traced `assemble`
+    /// span (wire read → complete frame).
+    read_start_us: u64,
+    /// Traced `InferOk` replies queued in `write_buf` but not yet
+    /// flushed: `(trace_id, enqueue_us)`.  When the buffer drains the
+    /// loop records one `write_flush` span per entry and completes the
+    /// trace — the span tree's true end-to-end edge.
+    traced_replies: Vec<(u64, u64)>,
 }
+
+/// Bound on per-connection traced replies awaiting flush; beyond this a
+/// trace completes at enqueue time (losing only its write_flush span).
+const MAX_TRACED_REPLIES: usize = 32;
 
 impl Conn {
     fn new(stream: TcpStream, peer: SocketAddr, gen: u64, idle_timeout: Duration) -> Conn {
@@ -296,6 +310,8 @@ impl Conn {
             read_closed: false,
             close_after_flush: false,
             deadline: Instant::now() + idle_timeout,
+            read_start_us: 0,
+            traced_replies: Vec::new(),
         }
     }
 }
@@ -479,6 +495,17 @@ impl EventLoop {
         }
         conn.in_flight = conn.in_flight.saturating_sub(1);
         self.shared.frames_out.inc();
+        if let Frame::InferOk { trace_id, .. } = &frame {
+            if *trace_id != 0 && self.shared.collector.enabled() {
+                if conn.traced_replies.len() < MAX_TRACED_REPLIES {
+                    conn.traced_replies.push((*trace_id, trace::now_us()));
+                } else {
+                    // pathological pile-up: finish the trace now rather
+                    // than grow unboundedly (only write_flush is lost)
+                    self.shared.collector.complete(*trace_id, trace::now_us());
+                }
+            }
+        }
         conn.write_buf.queue(&frame.encode());
     }
 
@@ -534,6 +561,19 @@ impl EventLoop {
                     return true;
                 }
             }
+        }
+        // traced replies ride the write buffer: once it fully drains the
+        // reply bytes reached the kernel, so stamp each write_flush span
+        // and complete the trace (its true end-to-end edge)
+        if conn.write_buf.pending() == 0 && !conn.traced_replies.is_empty() {
+            let now = trace::now_us();
+            for (id, enq) in conn.traced_replies.drain(..) {
+                let dur = now.saturating_sub(enq);
+                let span = Span::new(trace::SPAN_WRITE_FLUSH, trace::GATEWAY_TID, enq, dur);
+                self.shared.collector.record(id, span);
+                self.shared.collector.complete(id, now);
+            }
+            progress = true;
         }
         // retire phase: graceful close once nothing is owed
         let conn = self.conns[token].as_mut().unwrap();
@@ -676,6 +716,9 @@ impl EventLoop {
                 Ok(n) => {
                     progress = true;
                     total += n;
+                    if conn.read_start_us == 0 {
+                        conn.read_start_us = trace::now_us();
+                    }
                     conn.assembler.push(&tmp[..n]);
                     conn.deadline = Instant::now() + self.shared.cfg.idle_timeout;
                     if !self.pump_frames(token) {
@@ -702,7 +745,12 @@ impl EventLoop {
             let conn = self.conns[token].as_mut().unwrap();
             let frame = match conn.assembler.next_frame() {
                 Ok(Some(f)) => f,
-                Ok(None) => return true,
+                Ok(None) => {
+                    // all buffered frames dispatched; the next read
+                    // starts (or continues into) a fresh frame
+                    conn.read_start_us = 0;
+                    return true;
+                }
                 Err(msg) => {
                     // typed protocol error, then close: the frame
                     // boundary is unknown, resync is impossible
@@ -721,9 +769,18 @@ impl EventLoop {
             let chaos_drop = conn.chaos_drop;
             let peer_is_loopback = conn.peer_is_loopback;
             let gen = conn.gen;
+            let read_start_us =
+                if conn.read_start_us != 0 { conn.read_start_us } else { trace::now_us() };
             let route = ReplyRoute { handle: self.handle.clone(), token, gen };
             let mut sync = Vec::new();
-            let out = handle_frame(frame, peer_is_loopback, &self.shared, &mut sync, &route);
+            let out = handle_frame(
+                frame,
+                peer_is_loopback,
+                &self.shared,
+                &mut sync,
+                &route,
+                read_start_us,
+            );
             let conn = self.conns[token].as_mut().unwrap();
             if out.submitted {
                 conn.in_flight += 1;
@@ -779,6 +836,14 @@ impl EventLoop {
     fn free_conn(&mut self, token: usize) {
         if let Some(conn) = self.conns[token].take() {
             conn.stream.shutdown(Shutdown::Both).ok();
+            if !conn.traced_replies.is_empty() {
+                // the socket died before the buffered reply flushed:
+                // close the trace without a write_flush span
+                let now = trace::now_us();
+                for (id, _) in &conn.traced_replies {
+                    self.shared.collector.complete(*id, now);
+                }
+            }
             if conn.admitted {
                 self.shared.active.add(-1);
                 crate::log_debug!("gateway", "session from {} closed", conn.peer);

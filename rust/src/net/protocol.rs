@@ -26,11 +26,22 @@
 //! Request kinds: `Ping`, `Infer { model, deadline_ms, batch }`,
 //! `LoadModel`, `UnloadModel`, `Stats`, `Shutdown` (admin: ask the
 //! server to drain and exit), `Traces` (the slowest-request trace
-//! block).  Reply kinds: `Pong`, `InferOk { logits, faults, worker }`,
-//! `Error { code, message }`, `StatsReport { text }`, `Ack { info }`,
-//! `TracesReport { text }`.  `Traces`/`TracesReport` are an additive
-//! kind pair: a v2 peer that has never heard of them simply never sends
-//! them, so the version stays 2.
+//! block), `TraceSpans` (the sampled span-tree summary).  Reply kinds:
+//! `Pong`, `InferOk { logits, faults, worker }`, `Error { code,
+//! message }`, `StatsReport { text }`, `Ack { info }`, `TracesReport
+//! { text }`, `TraceSpansReport { text }`.  `Traces`/`TracesReport` and
+//! `TraceSpans`/`TraceSpansReport` are additive kind pairs: a v2 peer
+//! that has never heard of them simply never sends them, so the version
+//! stays 2.
+//!
+//! **Trace context.**  `Infer` and `InferOk` carry an *optional trailing*
+//! `trace_id: u64`: encoded only when nonzero, decoded as 0 when the
+//! body ends before it.  A pre-tracing v2 peer therefore interoperates
+//! in both directions, and an unsampled request's frames are
+//! byte-identical to the pre-tracing encoding.  A nonzero id asks the
+//! server to record a span tree for this request and is echoed in the
+//! reply so the client can join its observed latency with the
+//! server-side spans (see `util::trace`).
 //!
 //! **Version 2** adds `deadline_ms` to `Infer` (0 = use the server
 //! default) and a `token` string to the admin frames (`LoadModel`,
@@ -235,7 +246,9 @@ pub enum Frame {
     Ping { id: u64 },
     /// `deadline_ms` = this request's completion budget from gateway
     /// receipt; 0 = use the server default (which may be unlimited).
-    Infer { id: u64, model: String, deadline_ms: u32, input: WireBatch },
+    /// `trace_id` nonzero = the client requests span sampling for this
+    /// request (optional trailing field; 0 = not encoded).
+    Infer { id: u64, model: String, deadline_ms: u32, input: WireBatch, trace_id: u64 },
     /// Admin frames carry a shared-secret `token` (empty = none); see
     /// the module docs for the authorization rule.
     LoadModel { id: u64, model: String, token: String },
@@ -244,13 +257,26 @@ pub enum Frame {
     Shutdown { id: u64, token: String },
     /// The slowest-request trace block (per-stage timing breakdowns).
     Traces { id: u64 },
+    /// The sampled span-tree summary (`util::trace` collector text).
+    TraceSpans { id: u64 },
     // replies
     Pong { id: u64 },
-    InferOk { id: u64, rows: u32, cols: u32, logits: Vec<f32>, faults_detected: u64, worker: u32 },
+    /// `trace_id` echoes the request's effective trace id (0 = this
+    /// request was not sampled; optional trailing field like `Infer`'s).
+    InferOk {
+        id: u64,
+        rows: u32,
+        cols: u32,
+        logits: Vec<f32>,
+        faults_detected: u64,
+        worker: u32,
+        trace_id: u64,
+    },
     Error { id: u64, code: ErrorCode, message: String },
     StatsReport { id: u64, text: String },
     Ack { id: u64, info: String },
     TracesReport { id: u64, text: String },
+    TraceSpansReport { id: u64, text: String },
 }
 
 const KIND_PING: u8 = 1;
@@ -260,12 +286,14 @@ const KIND_UNLOAD: u8 = 4;
 const KIND_STATS: u8 = 5;
 const KIND_SHUTDOWN: u8 = 6;
 const KIND_TRACES: u8 = 7;
+const KIND_TRACE_SPANS: u8 = 8;
 const KIND_PONG: u8 = 129;
 const KIND_INFER_OK: u8 = 130;
 const KIND_ERROR: u8 = 131;
 const KIND_STATS_REPORT: u8 = 132;
 const KIND_ACK: u8 = 133;
 const KIND_TRACES_REPORT: u8 = 134;
+const KIND_TRACE_SPANS_REPORT: u8 = 135;
 
 const BATCH_IMAGES: u8 = 0;
 const BATCH_TOKENS: u8 = 1;
@@ -371,12 +399,14 @@ impl Frame {
             | Frame::Stats { id }
             | Frame::Shutdown { id }
             | Frame::Traces { id }
+            | Frame::TraceSpans { id }
             | Frame::Pong { id }
             | Frame::InferOk { id, .. }
             | Frame::Error { id, .. }
             | Frame::StatsReport { id, .. }
             | Frame::Ack { id, .. }
-            | Frame::TracesReport { id, .. } => *id,
+            | Frame::TracesReport { id, .. }
+            | Frame::TraceSpansReport { id, .. } => *id,
         }
     }
 
@@ -388,12 +418,17 @@ impl Frame {
                 body.push(KIND_PING);
                 put_u64(&mut body, *id);
             }
-            Frame::Infer { id, model, deadline_ms, input } => {
+            Frame::Infer { id, model, deadline_ms, input, trace_id } => {
                 body.push(KIND_INFER);
                 put_u64(&mut body, *id);
                 put_str(&mut body, model);
                 put_u32(&mut body, *deadline_ms);
                 put_batch(&mut body, input);
+                // optional trailing trace context: an unsampled request
+                // stays byte-identical to the pre-tracing encoding
+                if *trace_id != 0 {
+                    put_u64(&mut body, *trace_id);
+                }
             }
             Frame::LoadModel { id, model, token } => {
                 body.push(KIND_LOAD);
@@ -415,6 +450,10 @@ impl Frame {
                 body.push(KIND_TRACES);
                 put_u64(&mut body, *id);
             }
+            Frame::TraceSpans { id } => {
+                body.push(KIND_TRACE_SPANS);
+                put_u64(&mut body, *id);
+            }
             Frame::Shutdown { id, token } => {
                 body.push(KIND_SHUTDOWN);
                 put_u64(&mut body, *id);
@@ -424,7 +463,7 @@ impl Frame {
                 body.push(KIND_PONG);
                 put_u64(&mut body, *id);
             }
-            Frame::InferOk { id, rows, cols, logits, faults_detected, worker } => {
+            Frame::InferOk { id, rows, cols, logits, faults_detected, worker, trace_id } => {
                 body.push(KIND_INFER_OK);
                 put_u64(&mut body, *id);
                 put_u32(&mut body, *rows);
@@ -432,6 +471,9 @@ impl Frame {
                 put_u64(&mut body, *faults_detected);
                 put_u32(&mut body, *worker);
                 put_f32s(&mut body, logits);
+                if *trace_id != 0 {
+                    put_u64(&mut body, *trace_id);
+                }
             }
             Frame::Error { id, code, message } => {
                 body.push(KIND_ERROR);
@@ -451,6 +493,11 @@ impl Frame {
             }
             Frame::TracesReport { id, text } => {
                 body.push(KIND_TRACES_REPORT);
+                put_u64(&mut body, *id);
+                put_text(&mut body, text);
+            }
+            Frame::TraceSpansReport { id, text } => {
+                body.push(KIND_TRACE_SPANS_REPORT);
                 put_u64(&mut body, *id);
                 put_text(&mut body, text);
             }
@@ -510,13 +557,15 @@ impl Frame {
                 let model = cur.name()?;
                 let deadline_ms = cur.u32()?;
                 let input = cur.batch()?;
-                Frame::Infer { id, model, deadline_ms, input }
+                let trace_id = cur.trailing_u64()?;
+                Frame::Infer { id, model, deadline_ms, input, trace_id }
             }
             KIND_LOAD => Frame::LoadModel { id, model: cur.name()?, token: cur.name()? },
             KIND_UNLOAD => Frame::UnloadModel { id, model: cur.name()?, token: cur.name()? },
             KIND_STATS => Frame::Stats { id },
             KIND_SHUTDOWN => Frame::Shutdown { id, token: cur.name()? },
             KIND_TRACES => Frame::Traces { id },
+            KIND_TRACE_SPANS => Frame::TraceSpans { id },
             KIND_PONG => Frame::Pong { id },
             KIND_INFER_OK => {
                 let rows = cur.u32()?;
@@ -531,7 +580,8 @@ impl Frame {
                         logits.len()
                     ));
                 }
-                Frame::InferOk { id, rows, cols, logits, faults_detected, worker }
+                let trace_id = cur.trailing_u64()?;
+                Frame::InferOk { id, rows, cols, logits, faults_detected, worker, trace_id }
             }
             KIND_ERROR => {
                 let code_raw = cur.u16()?;
@@ -543,6 +593,7 @@ impl Frame {
             KIND_STATS_REPORT => Frame::StatsReport { id, text: cur.text()? },
             KIND_ACK => Frame::Ack { id, info: cur.text()? },
             KIND_TRACES_REPORT => Frame::TracesReport { id, text: cur.text()? },
+            KIND_TRACE_SPANS_REPORT => Frame::TraceSpansReport { id, text: cur.text()? },
             other => return Err(format!("unknown frame kind {other}")),
         };
         cur.done()?;
@@ -584,6 +635,16 @@ impl<'a> Cursor<'a> {
 
     fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Optional trailing `u64`: 0 when the body ends here (a frame from
+    /// an encoder that predates the field), otherwise the decoded value.
+    /// A partial trailer is still a truncation error via `take`.
+    fn trailing_u64(&mut self) -> Result<u64, String> {
+        if self.pos == self.buf.len() {
+            return Ok(0);
+        }
+        self.u64()
     }
 
     fn name(&mut self) -> Result<String, String> {
@@ -749,12 +810,14 @@ mod tests {
             model: "synthetic-mlp".into(),
             deadline_ms: 0,
             input: WireBatch::Images { n: 1, h: 2, w: 2, c: 1, data: vec![0.5, -1.0, 0.0, 2.5] },
+            trace_id: 0,
         });
         roundtrip(Frame::Infer {
             id: 6,
             model: "bert".into(),
             deadline_ms: 1500,
             input: WireBatch::Tokens { batch: 2, seq: 3, tokens: vec![1, 2, 3, 4, 5, 6] },
+            trace_id: 0xDEAD_BEEF_0101,
         });
         roundtrip(Frame::InferOk {
             id: 9,
@@ -763,6 +826,16 @@ mod tests {
             logits: vec![1.0, -2.0, 3.5],
             faults_detected: 11,
             worker: 2,
+            trace_id: 0,
+        });
+        roundtrip(Frame::InferOk {
+            id: 9,
+            rows: 1,
+            cols: 1,
+            logits: vec![4.0],
+            faults_detected: 0,
+            worker: 0,
+            trace_id: 0x1234_5678_9ABC_DEF1,
         });
         roundtrip(Frame::Error { id: 10, code: ErrorCode::Overloaded, message: "full".into() });
         roundtrip(Frame::Error { id: 13, code: ErrorCode::Unauthorized, message: "admin".into() });
@@ -776,6 +849,53 @@ mod tests {
         roundtrip(Frame::Ack { id: 12, info: "unloaded".into() });
         roundtrip(Frame::Traces { id: 16 });
         roundtrip(Frame::TracesReport { id: 16, text: "slow traces: kept=0 cap=16".into() });
+        roundtrip(Frame::TraceSpans { id: 17 });
+        roundtrip(Frame::TraceSpansReport { id: 17, text: "trace spans: kept=0 cap=16".into() });
+    }
+
+    #[test]
+    fn trace_id_is_an_optional_trailing_field() {
+        // a zero trace id is not encoded: the wire bytes are identical
+        // to the pre-tracing encoding (hand-built legacy body below)
+        let infer = Frame::Infer {
+            id: 5,
+            model: "mlp".into(),
+            deadline_ms: 250,
+            input: WireBatch::Images { n: 1, h: 1, w: 2, c: 1, data: vec![0.25, 0.75] },
+            trace_id: 0,
+        };
+        let mut legacy_body = vec![KIND_INFER];
+        legacy_body.extend_from_slice(&5u64.to_le_bytes());
+        legacy_body.extend_from_slice(&3u16.to_le_bytes());
+        legacy_body.extend_from_slice(b"mlp");
+        legacy_body.extend_from_slice(&250u32.to_le_bytes());
+        legacy_body.push(BATCH_IMAGES);
+        for dim in [1u32, 1, 2, 1] {
+            legacy_body.extend_from_slice(&dim.to_le_bytes());
+        }
+        legacy_body.extend_from_slice(&2u32.to_le_bytes());
+        legacy_body.extend_from_slice(&0.25f32.to_le_bytes());
+        legacy_body.extend_from_slice(&0.75f32.to_le_bytes());
+        let mut legacy_wire = (legacy_body.len() as u32).to_le_bytes().to_vec();
+        let sum = checksum(&legacy_body);
+        legacy_wire.extend_from_slice(&legacy_body);
+        legacy_wire.extend_from_slice(&sum.to_le_bytes());
+        assert_eq!(infer.encode(), legacy_wire, "trace_id=0 must not change the wire bytes");
+        // a legacy frame (no trailing field) decodes with trace_id = 0
+        assert_eq!(Frame::read_from(&mut &legacy_wire[..]).expect("legacy decode"), infer);
+        // and a sampled frame costs exactly 8 more body bytes
+        let sampled = Frame::Infer {
+            id: 5,
+            model: "mlp".into(),
+            deadline_ms: 250,
+            input: WireBatch::Images { n: 1, h: 1, w: 2, c: 1, data: vec![0.25, 0.75] },
+            trace_id: 42,
+        };
+        assert_eq!(sampled.encode().len(), infer.encode().len() + 8);
+        // a partial trailer is a truncation error, not a silent zero
+        let mut body = legacy_body.clone();
+        body.extend_from_slice(&[1, 2, 3]); // 3 of 8 trailing bytes
+        assert!(Frame::decode_body(&body).unwrap_err().contains("truncated"));
     }
 
     #[test]
@@ -894,6 +1014,7 @@ mod tests {
                 model: "synthetic-mlp".into(),
                 deadline_ms: 250,
                 input: WireBatch::Images { n: 1, h: 2, w: 2, c: 1, data: vec![0.5; 4] },
+                trace_id: 0x51,
             },
             Frame::InferOk {
                 id: 2,
@@ -902,6 +1023,7 @@ mod tests {
                 logits: vec![0.1, -0.2, 0.3],
                 faults_detected: 4,
                 worker: 1,
+                trace_id: 0,
             },
             Frame::Error { id: 3, code: ErrorCode::Overloaded, message: "busy".into() },
             Frame::StatsReport { id: 4, text: "requests=9\n".into() },

@@ -124,6 +124,53 @@ pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     }
 }
 
+/// A typed value for [`emit_fields`]: numbers stay unquoted in JSON
+/// output so ingestion pipelines can aggregate without re-parsing.
+pub enum FieldValue {
+    Num(u64),
+    Text(String),
+}
+
+/// Structured emit: the message plus typed key/value fields.  In JSON
+/// mode the fields land as native object members next to `msg`; in
+/// human mode they render as trailing `key=value` tokens.  This is the
+/// gateway access-log path (`path`/`status`/`bytes`/`micros` per HTTP
+/// request).
+pub fn emit_fields(level: Level, target: &str, msg: &str, fields: &[(&str, FieldValue)]) {
+    if !enabled(level) {
+        return;
+    }
+    let t = EPOCH.get_or_init(Instant::now).elapsed();
+    if FORMAT.load(Ordering::Relaxed) == Format::Json as u8 {
+        let mut line = format!(
+            "{{\"ts\":{:.3},\"level\":\"{}\",\"target\":\"{}\",\"msg\":\"{}\"",
+            t.as_secs_f64(),
+            level.name(),
+            json_escape(target),
+            json_escape(msg),
+        );
+        for (k, v) in fields {
+            match v {
+                FieldValue::Num(n) => line.push_str(&format!(",\"{}\":{n}", json_escape(k))),
+                FieldValue::Text(s) => {
+                    line.push_str(&format!(",\"{}\":\"{}\"", json_escape(k), json_escape(s)))
+                }
+            }
+        }
+        line.push('}');
+        eprintln!("{line}");
+    } else {
+        let mut tail = String::new();
+        for (k, v) in fields {
+            match v {
+                FieldValue::Num(n) => tail.push_str(&format!(" {k}={n}")),
+                FieldValue::Text(s) => tail.push_str(&format!(" {k}={s}")),
+            }
+        }
+        eprintln!("[{:>9.3}s {} {}] {}{}", t.as_secs_f64(), level.tag(), target, msg, tail);
+    }
+}
+
 /// Minimal JSON string escaping (hand-rolled; no serde in the image):
 /// backslash, quote, and control characters.
 fn json_escape(s: &str) -> String {
@@ -197,5 +244,22 @@ mod tests {
         set_format(Format::Json);
         emit(Level::Info, "gate\"way", format_args!("msg with \"quotes\" and \\slashes\\"));
         set_format(Format::Human);
+    }
+
+    #[test]
+    fn emit_fields_renders_in_both_formats() {
+        set_level(Level::Info);
+        let fields = [
+            ("path", FieldValue::Text("/metrics".into())),
+            ("status", FieldValue::Num(200)),
+            ("bytes", FieldValue::Num(1234)),
+            ("micros", FieldValue::Num(87)),
+        ];
+        emit_fields(Level::Info, "gateway", "http", &fields);
+        set_format(Format::Json);
+        emit_fields(Level::Info, "gateway", "http", &fields);
+        set_format(Format::Human);
+        // gated out entirely below the level threshold
+        emit_fields(Level::Trace, "gateway", "filtered", &fields);
     }
 }

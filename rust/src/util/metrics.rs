@@ -118,6 +118,11 @@ impl Gauge {
 /// Fixed-bucket histogram over integer values (microseconds by
 /// convention).  Bucket counts are per-bucket (not cumulative) in
 /// memory; rendering accumulates.
+///
+/// The serving tier observes one measured value per pipeline stage and
+/// feeds the *same* u64 into both this histogram and the request's span
+/// trace (`util::trace`), so the aggregate and per-request views are
+/// two projections of one measurement, never two clocks.
 #[derive(Debug)]
 pub struct Histogram {
     bounds: Vec<u64>,

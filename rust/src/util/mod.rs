@@ -9,6 +9,7 @@ pub mod metrics;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod trace;
 
 /// Format a `f64` in engineering notation with an SI-ish suffix
 /// (used by the energy reports: fJ/pJ/nJ/µJ).

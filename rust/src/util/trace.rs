@@ -1,0 +1,772 @@
+//! End-to-end request tracing: sampled, bounded span trees that follow a
+//! single request across every serving tier.
+//!
+//! A sampled request carries a nonzero **trace id** on the wire (additive
+//! v2 `Infer`/`InferOk` field): either the client requested sampling by
+//! sending one, or the gateway drew one from the seeded [`TraceCollector`]
+//! sampler at admission. Each tier then records typed [`Span`]s — epoch-
+//! relative monotonic timestamps in microseconds — against that id:
+//!
+//! | tier         | spans                                          | track |
+//! |--------------|------------------------------------------------|-------|
+//! | gateway loop | `assemble`, `admission`, `write_flush`, `session` (root) | 0 |
+//! | batcher      | `queue`, `batch_form`                          | 1     |
+//! | worker *w*   | `batch`, `dac_forward`, `analog_gemm`, `adc_capture`, `decode`, `delivery` | 10+*w* |
+//!
+//! The stage spans are recorded from the **same** computed values the
+//! `rns_stage_latency_us` histograms observe (see `serve_batch`), so the
+//! histogram and span views can never disagree about a request.
+//!
+//! Memory is bounded everywhere: at most [`TraceCollector::MAX_PENDING`]
+//! in-flight traces (drop-oldest), [`TraceCollector::MAX_SPANS`] spans per
+//! trace, and `slots` completed trees kept slowest-first — the same
+//! keep-the-slowest-N policy as the `TraceRing` line summaries, which the
+//! span trees complement rather than replace (the ring summarizes every
+//! slow request in one line; the collector keeps full trees for sampled
+//! ones). Requests that fail with `DeadlineExceeded`/`Poisoned` are
+//! force-completed into trees even when unsampled.
+//!
+//! See DESIGN.md §6f for the ownership diagram and the sampling /
+//! bounded-memory invariants.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Span names. The pipeline-stage names are byte-identical to the
+/// `rns_stage_latency_us{stage=...}` labels so dashboards and traces
+/// speak one vocabulary.
+pub const SPAN_SESSION: &str = "session";
+pub const SPAN_ASSEMBLE: &str = "assemble";
+pub const SPAN_ADMISSION: &str = "admission";
+pub const SPAN_QUEUE: &str = "queue";
+pub const SPAN_BATCH_FORM: &str = "batch_form";
+pub const SPAN_BATCH: &str = "batch";
+pub const SPAN_DAC_FORWARD: &str = "dac_forward";
+pub const SPAN_ANALOG_GEMM: &str = "analog_gemm";
+pub const SPAN_ADC_CAPTURE: &str = "adc_capture";
+pub const SPAN_DECODE: &str = "decode";
+pub const SPAN_DELIVERY: &str = "delivery";
+pub const SPAN_WRITE_FLUSH: &str = "write_flush";
+
+/// Chrome-trace thread tracks: the gateway readiness loops share track 0,
+/// the batcher/dispatcher is track 1, worker `w` is `WORKER_TID_BASE + w`.
+pub const GATEWAY_TID: u32 = 0;
+pub const BATCHER_TID: u32 = 1;
+pub const WORKER_TID_BASE: u32 = 10;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-wide monotonic epoch every span timestamp is relative to.
+/// Anchored eagerly by [`TraceCollector::new`] (i.e. at coordinator
+/// startup) so request instants are always at or after it.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds elapsed since the trace epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Convert a captured `Instant` to epoch-relative microseconds
+/// (saturating to 0 for instants predating the epoch).
+pub fn us_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// One timed unit of work attributed to a trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub name: &'static str,
+    /// Chrome-trace thread track (which serving tier ran this span).
+    pub tid: u32,
+    /// Epoch-relative start, microseconds.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Extra numeric annotations (e.g. batch size / member index).
+    pub args: Vec<(&'static str, u64)>,
+}
+
+impl Span {
+    pub fn new(name: &'static str, tid: u32, start_us: u64, dur_us: u64) -> Self {
+        Span { name, tid, start_us, dur_us, args: Vec::new() }
+    }
+
+    pub fn with_args(mut self, args: &[(&'static str, u64)]) -> Self {
+        self.args = args.to_vec();
+        self
+    }
+
+    /// Exclusive end of the span on the shared epoch clock.
+    pub fn end_us(&self) -> u64 {
+        self.start_us.saturating_add(self.dur_us)
+    }
+}
+
+/// A completed, assembled span tree for one request.
+#[derive(Clone, Debug)]
+pub struct TraceTree {
+    pub id: u64,
+    pub model: String,
+    pub start_us: u64,
+    pub total_us: u64,
+    /// True when completion was forced (deadline exceeded / poisoned)
+    /// rather than observed at reply flush.
+    pub forced: bool,
+    /// All recorded spans; the first is the synthesized `session` root,
+    /// which contains every other span by construction.
+    pub spans: Vec<Span>,
+}
+
+impl TraceTree {
+    /// The non-container span with the largest duration — where this
+    /// request actually spent its time. Container spans (`session`,
+    /// `batch`) are excluded.
+    pub fn dominant(&self) -> Option<&Span> {
+        self.spans
+            .iter()
+            .filter(|s| s.name != SPAN_SESSION && s.name != SPAN_BATCH)
+            .max_by_key(|s| s.dur_us)
+    }
+}
+
+/// Counters describing collector activity (exported as `rns_trace_*`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    pub sampled: u64,
+    pub forced: u64,
+    pub dropped: u64,
+    pub kept: usize,
+    pub pending: usize,
+}
+
+struct PendingTrace {
+    model: String,
+    start_us: u64,
+    spans: Vec<Span>,
+}
+
+struct Inner {
+    pending: HashMap<u64, PendingTrace>,
+    /// Insertion order of pending ids, for drop-oldest eviction.
+    order: VecDeque<u64>,
+    /// Completed trees, unordered; keep-slowest-N by `total_us`.
+    done: Vec<TraceTree>,
+}
+
+/// Process-wide trace assembly: seeded sampling, bounded pending state,
+/// keep-slowest-N completed trees, Chrome-trace / text rendering.
+pub struct TraceCollector {
+    slots: usize,
+    sample_rate: f64,
+    seed: u64,
+    /// Sampling threshold on a 64-bit hash; 0 = never, `u64::MAX` = always.
+    threshold: u64,
+    draws: AtomicU64,
+    forced_ids: AtomicU64,
+    sampled: AtomicU64,
+    forced: AtomicU64,
+    dropped: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl TraceCollector {
+    /// In-flight (begun, not completed) traces retained; oldest dropped.
+    pub const MAX_PENDING: usize = 128;
+    /// Spans retained per trace; extras are dropped, not reallocated.
+    pub const MAX_SPANS: usize = 64;
+
+    /// `slots` completed trees kept (0 disables the collector entirely),
+    /// `sample` in `[0, 1]` is the fraction of requests drawn by
+    /// [`sample`](Self::sample), decided by a seeded hash so runs are
+    /// reproducible.
+    pub fn new(slots: usize, sample: f64, seed: u64) -> Self {
+        epoch(); // anchor before any request timestamps exist
+        let rate = sample.clamp(0.0, 1.0);
+        let threshold = if rate >= 1.0 {
+            u64::MAX
+        } else if rate <= 0.0 {
+            0
+        } else {
+            (rate * (u64::MAX as f64)) as u64
+        };
+        TraceCollector {
+            slots,
+            sample_rate: rate,
+            seed,
+            threshold,
+            draws: AtomicU64::new(0),
+            forced_ids: AtomicU64::new(0),
+            sampled: AtomicU64::new(0),
+            forced: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                pending: HashMap::new(),
+                order: VecDeque::new(),
+                done: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots
+    }
+
+    pub fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
+    /// False when `slots == 0`: every operation is a no-op and
+    /// [`sample`](Self::sample) always returns 0.
+    pub fn enabled(&self) -> bool {
+        self.slots > 0
+    }
+
+    /// Draw the sampling decision for one request: a fresh nonzero trace
+    /// id when sampled, 0 otherwise. Deterministic in (seed, draw index);
+    /// the unsampled fast path (`sample = 0`) touches no shared state.
+    pub fn sample(&self) -> u64 {
+        if self.threshold == 0 || !self.enabled() {
+            return 0;
+        }
+        let n = self.draws.fetch_add(1, Ordering::Relaxed);
+        let h = splitmix64(self.seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1));
+        if self.threshold == u64::MAX || h < self.threshold {
+            self.sampled.fetch_add(1, Ordering::Relaxed);
+            h | 1
+        } else {
+            0
+        }
+    }
+
+    /// A synthesized id for force-completed traces of unsampled requests
+    /// (high bit set so they are visually distinct from sampled hashes).
+    pub fn forced_id(&self) -> u64 {
+        (1u64 << 63) | self.forced_ids.fetch_add(1, Ordering::Relaxed).wrapping_add(1)
+    }
+
+    /// Open a pending trace. Idempotent for an already-open id; evicts
+    /// the oldest pending trace at [`MAX_PENDING`](Self::MAX_PENDING).
+    pub fn begin(&self, id: u64, model: &str, start_us: u64) {
+        if id == 0 || !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.pending.contains_key(&id) {
+            return;
+        }
+        while inner.pending.len() >= Self::MAX_PENDING {
+            match inner.order.pop_front() {
+                Some(old) => {
+                    if inner.pending.remove(&old).is_some() {
+                        self.dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+        inner.order.push_back(id);
+        inner.pending.insert(
+            id,
+            PendingTrace { model: model.to_string(), start_us, spans: Vec::new() },
+        );
+    }
+
+    /// Append one span to a pending trace (no-op if the id is unknown —
+    /// e.g. evicted, or never sampled).
+    pub fn record(&self, id: u64, span: Span) {
+        self.record_batch(std::iter::once((id, span)));
+    }
+
+    /// Append several spans to one pending trace under a single lock.
+    pub fn record_all(&self, id: u64, spans: &[Span]) {
+        self.record_batch(spans.iter().map(|s| (id, s.clone())));
+    }
+
+    /// Append (id, span) pairs — possibly for different ids — under a
+    /// single lock. This is what [`SpanBuffer::flush`] calls.
+    pub fn record_batch<I: IntoIterator<Item = (u64, Span)>>(&self, entries: I) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for (id, span) in entries {
+            if let Some(p) = inner.pending.get_mut(&id) {
+                if p.spans.len() < Self::MAX_SPANS {
+                    p.spans.push(span);
+                } else {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Close a pending trace at `end_us`: synthesize the `session` root
+    /// span covering every recorded span and move the tree into the
+    /// keep-slowest-N set. Returns false if the id was not pending.
+    pub fn complete(&self, id: u64, end_us: u64) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let Some(p) = inner.pending.remove(&id) else {
+            return false;
+        };
+        let tree = assemble(id, p.model, p.start_us, end_us, p.spans, false);
+        self.keep_slowest(&mut inner, tree);
+        true
+    }
+
+    /// Force-complete a trace that failed (deadline exceeded, poisoned):
+    /// merges with any pending state for `id`, accepts `id == 0` for
+    /// unsampled requests (a [`forced_id`](Self::forced_id) is drawn),
+    /// and returns the id actually used (0 when disabled).
+    pub fn force(
+        &self,
+        id: u64,
+        model: &str,
+        start_us: u64,
+        end_us: u64,
+        spans: Vec<Span>,
+    ) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let id = if id == 0 { self.forced_id() } else { id };
+        self.forced.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let (model, start_us, all) = match inner.pending.remove(&id) {
+            Some(mut p) => {
+                p.spans.extend(spans);
+                p.spans.truncate(Self::MAX_SPANS);
+                (p.model, p.start_us.min(start_us), p.spans)
+            }
+            None => (model.to_string(), start_us, spans),
+        };
+        let tree = assemble(id, model, start_us, end_us, all, true);
+        self.keep_slowest(&mut inner, tree);
+        id
+    }
+
+    fn keep_slowest(&self, inner: &mut Inner, tree: TraceTree) {
+        if self.slots == 0 {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if inner.done.len() < self.slots {
+            inner.done.push(tree);
+            return;
+        }
+        // full: replace the current fastest only if this one is slower
+        let (idx, fastest) = inner
+            .done
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, t)| t.total_us)
+            .map(|(i, t)| (i, t.total_us))
+            .expect("done is non-empty when full");
+        if tree.total_us > fastest {
+            inner.done[idx] = tree;
+        }
+        self.dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Completed trees, slowest first.
+    pub fn trees(&self) -> Vec<TraceTree> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = inner.done.clone();
+        out.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        out
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        let inner = self.inner.lock().unwrap();
+        TraceStats {
+            sampled: self.sampled.load(Ordering::Relaxed),
+            forced: self.forced.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            kept: inner.done.len(),
+            pending: inner.pending.len(),
+        }
+    }
+
+    /// Greppable key=value text: one header line plus one `span-trace:`
+    /// line per kept tree, slowest first. Parse lines back with
+    /// [`parse_summary_line`].
+    pub fn summary(&self) -> String {
+        let stats = self.stats();
+        let trees = self.trees();
+        let mut out = format!(
+            "trace spans: kept={} cap={} sample={:.4} sampled={} forced={} dropped={}\n",
+            stats.kept, self.slots, self.sample_rate, stats.sampled, stats.forced, stats.dropped,
+        );
+        for t in &trees {
+            out.push_str(&format!(
+                "span-trace: id={:#018x} model={} forced={} total={}µs",
+                t.id,
+                t.model,
+                u8::from(t.forced),
+                t.total_us
+            ));
+            for s in &t.spans {
+                if s.name == SPAN_SESSION {
+                    continue;
+                }
+                out.push_str(&format!(" {}={}µs", s.name, s.dur_us));
+            }
+            if let Some(d) = t.dominant() {
+                out.push_str(&format!(" dominant={}", d.name));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (load in Perfetto / `chrome://tracing`):
+    /// a flat array of `"ph":"X"` complete events (µs timestamps) plus
+    /// `"ph":"M"` thread-name metadata, one pid, tids per serving tier.
+    pub fn chrome_json(&self) -> String {
+        let trees = self.trees();
+        let mut tids: Vec<u32> = Vec::new();
+        for t in &trees {
+            for s in &t.spans {
+                if !tids.contains(&s.tid) {
+                    tids.push(s.tid);
+                }
+            }
+        }
+        tids.sort_unstable();
+        let mut events: Vec<String> = Vec::new();
+        for tid in &tids {
+            let name = match *tid {
+                GATEWAY_TID => "gateway-loop".to_string(),
+                BATCHER_TID => "batcher".to_string(),
+                w => format!("worker-{}", w - WORKER_TID_BASE),
+            };
+            events.push(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                tid,
+                json_escape(&name)
+            ));
+        }
+        for t in &trees {
+            for s in &t.spans {
+                let mut args = format!(
+                    "\"trace\":\"{:#018x}\",\"model\":\"{}\",\"forced\":{}",
+                    t.id,
+                    json_escape(&t.model),
+                    u8::from(t.forced)
+                );
+                for (k, v) in &s.args {
+                    args.push_str(&format!(",\"{k}\":{v}"));
+                }
+                events.push(format!(
+                    "{{\"name\":\"{}\",\"cat\":\"rns\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                     \"pid\":1,\"tid\":{},\"args\":{{{}}}}}",
+                    s.name, s.start_us, s.dur_us, s.tid, args
+                ));
+            }
+        }
+        format!("[{}]", events.join(",\n"))
+    }
+}
+
+/// Build the completed tree: the synthesized `session` root is widened to
+/// contain every recorded span, so nesting holds by construction even
+/// when a tier's clock reading straddled the nominal end.
+fn assemble(
+    id: u64,
+    model: String,
+    start_us: u64,
+    end_us: u64,
+    spans: Vec<Span>,
+    forced: bool,
+) -> TraceTree {
+    let lo = spans.iter().map(|s| s.start_us).min().unwrap_or(start_us).min(start_us);
+    let hi = spans.iter().map(|s| s.end_us()).max().unwrap_or(end_us).max(end_us).max(lo);
+    let mut all = Vec::with_capacity(spans.len() + 1);
+    all.push(Span::new(SPAN_SESSION, GATEWAY_TID, lo, hi - lo));
+    all.extend(spans);
+    TraceTree { id, model, start_us: lo, total_us: hi - lo, forced, spans: all }
+}
+
+/// A per-thread bounded staging buffer: tiers push spans locally and
+/// flush them to the collector in one lock acquisition at hand-off
+/// boundaries (end of a readiness-loop sweep, end of a batch).
+pub struct SpanBuffer {
+    entries: Vec<(u64, Span)>,
+}
+
+impl SpanBuffer {
+    /// Spans staged before overflow drops the excess.
+    pub const CAP: usize = 256;
+
+    pub fn new() -> Self {
+        SpanBuffer { entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, id: u64, span: Span) {
+        if id != 0 && self.entries.len() < Self::CAP {
+            self.entries.push((id, span));
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn flush(&mut self, collector: &TraceCollector) {
+        if !self.entries.is_empty() {
+            collector.record_batch(self.entries.drain(..));
+        }
+    }
+}
+
+impl Default for SpanBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One `span-trace:` summary line, parsed back (the loadgen report joins
+/// client-observed latency with these).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SummaryEntry {
+    pub id: u64,
+    pub total_us: u64,
+    pub forced: bool,
+    pub dominant: Option<String>,
+}
+
+/// Parse one line of [`TraceCollector::summary`] output; returns `None`
+/// for the header and anything else that is not a `span-trace:` line.
+pub fn parse_summary_line(line: &str) -> Option<SummaryEntry> {
+    let rest = line.trim().strip_prefix("span-trace: ")?;
+    let mut id = None;
+    let mut total_us = None;
+    let mut forced = false;
+    let mut dominant = None;
+    for tok in rest.split_whitespace() {
+        if let Some(v) = tok.strip_prefix("id=0x") {
+            id = u64::from_str_radix(v, 16).ok();
+        } else if let Some(v) = tok.strip_prefix("total=") {
+            total_us = v.strip_suffix("µs").and_then(|n| n.parse::<u64>().ok());
+        } else if let Some(v) = tok.strip_prefix("forced=") {
+            forced = v == "1";
+        } else if let Some(v) = tok.strip_prefix("dominant=") {
+            dominant = Some(v.to_string());
+        }
+    }
+    Some(SummaryEntry { id: id?, total_us: total_us?, forced, dominant })
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &'static str, tid: u32, start: u64, dur: u64) -> Span {
+        Span::new(name, tid, start, dur)
+    }
+
+    #[test]
+    fn sampling_is_seeded_and_deterministic() {
+        let a = TraceCollector::new(8, 0.5, 42);
+        let b = TraceCollector::new(8, 0.5, 42);
+        let da: Vec<u64> = (0..64).map(|_| a.sample()).collect();
+        let db: Vec<u64> = (0..64).map(|_| b.sample()).collect();
+        assert_eq!(da, db, "same seed, same draws");
+        let hits = da.iter().filter(|&&id| id != 0).count();
+        assert!(hits > 8 && hits < 56, "p=0.5 over 64 draws, got {hits}");
+        let c = TraceCollector::new(8, 0.5, 43);
+        let dc: Vec<u64> = (0..64).map(|_| c.sample()).collect();
+        assert_ne!(da, dc, "different seed, different draws");
+    }
+
+    #[test]
+    fn sample_rate_edges() {
+        let off = TraceCollector::new(8, 0.0, 1);
+        assert!((0..100).all(|_| off.sample() == 0), "rate 0 never samples");
+        let on = TraceCollector::new(8, 1.0, 1);
+        assert!((0..100).all(|_| on.sample() != 0), "rate 1 always samples");
+        let disabled = TraceCollector::new(0, 1.0, 1);
+        assert_eq!(disabled.sample(), 0, "slots=0 disables sampling too");
+        assert!(!disabled.enabled());
+    }
+
+    #[test]
+    fn complete_synthesizes_a_containing_session_root() {
+        let c = TraceCollector::new(4, 0.0, 7);
+        c.begin(9, "mlp", 100);
+        c.record(9, span(SPAN_ADMISSION, GATEWAY_TID, 110, 5));
+        c.record(9, span(SPAN_QUEUE, BATCHER_TID, 120, 40));
+        assert!(c.complete(9, 150));
+        assert!(!c.complete(9, 150), "already completed");
+        let trees = c.trees();
+        assert_eq!(trees.len(), 1);
+        let t = &trees[0];
+        assert_eq!(t.id, 9);
+        assert_eq!(t.model, "mlp");
+        assert!(!t.forced);
+        assert_eq!(t.spans[0].name, SPAN_SESSION);
+        // queue ends at 160 > nominal end 150: root widens to contain it
+        assert_eq!(t.spans[0].start_us, 100);
+        assert_eq!(t.spans[0].dur_us, 60);
+        assert_eq!(t.total_us, 60);
+        for s in &t.spans {
+            assert!(s.start_us >= t.spans[0].start_us);
+            assert!(s.end_us() <= t.spans[0].end_us());
+        }
+        assert_eq!(t.dominant().unwrap().name, SPAN_QUEUE);
+    }
+
+    #[test]
+    fn keep_slowest_n_under_interleaved_completion() {
+        let c = TraceCollector::new(3, 0.0, 7);
+        for (id, dur) in [(1u64, 50u64), (2, 500), (3, 10), (4, 300), (5, 80), (6, 400)] {
+            c.begin(id, "m", 0);
+            assert!(c.complete(id, dur));
+        }
+        let totals: Vec<u64> = c.trees().iter().map(|t| t.total_us).collect();
+        assert_eq!(totals, vec![500, 400, 300], "slowest three, slowest first");
+        assert_eq!(c.stats().dropped, 3);
+    }
+
+    #[test]
+    fn slots_zero_disables_cleanly() {
+        let c = TraceCollector::new(0, 1.0, 7);
+        c.begin(1, "m", 0);
+        c.record(1, span(SPAN_QUEUE, BATCHER_TID, 0, 5));
+        assert!(!c.complete(1, 10));
+        assert_eq!(c.force(0, "m", 0, 10, vec![]), 0);
+        assert!(c.trees().is_empty());
+        assert_eq!(c.stats().pending, 0);
+    }
+
+    #[test]
+    fn pending_is_bounded_drop_oldest() {
+        let c = TraceCollector::new(4, 0.0, 7);
+        for id in 1..=(TraceCollector::MAX_PENDING as u64 + 8) {
+            c.begin(id, "m", id);
+        }
+        assert_eq!(c.stats().pending, TraceCollector::MAX_PENDING);
+        // the oldest 8 were evicted; completing them is a no-op
+        assert!(!c.complete(1, 100));
+        assert!(c.complete(9, 100));
+    }
+
+    #[test]
+    fn spans_per_trace_are_bounded() {
+        let c = TraceCollector::new(4, 0.0, 7);
+        c.begin(1, "m", 0);
+        for i in 0..(TraceCollector::MAX_SPANS as u64 + 10) {
+            c.record(1, span(SPAN_QUEUE, BATCHER_TID, i, 1));
+        }
+        assert!(c.complete(1, 1000));
+        // +1 for the synthesized session root
+        assert_eq!(c.trees()[0].spans.len(), TraceCollector::MAX_SPANS + 1);
+    }
+
+    #[test]
+    fn force_merges_pending_and_marks_forced() {
+        let c = TraceCollector::new(4, 0.0, 7);
+        c.begin(5, "mlp", 10);
+        c.record(5, span(SPAN_ADMISSION, GATEWAY_TID, 11, 2));
+        let used = c.force(5, "ignored", 20, 90, vec![span(SPAN_QUEUE, BATCHER_TID, 20, 70)]);
+        assert_eq!(used, 5);
+        let t = &c.trees()[0];
+        assert!(t.forced);
+        assert_eq!(t.model, "mlp", "pending metadata wins");
+        assert_eq!(t.spans.len(), 3);
+        assert_eq!(t.start_us, 10);
+        // unsampled request: an id is synthesized, high bit set
+        let synth = c.force(0, "mlp", 0, 5, vec![]);
+        assert!(synth & (1 << 63) != 0);
+        assert_eq!(c.stats().forced, 2);
+    }
+
+    #[test]
+    fn summary_round_trips_through_the_parser() {
+        let c = TraceCollector::new(4, 0.25, 7);
+        c.begin(0xabc, "synthetic-mlp", 0);
+        c.record(0xabc, span(SPAN_QUEUE, BATCHER_TID, 5, 40));
+        c.record(0xabc, span(SPAN_DECODE, WORKER_TID_BASE, 50, 9));
+        c.complete(0xabc, 60);
+        let text = c.summary();
+        assert!(text.starts_with("trace spans: kept=1 cap=4 sample=0.2500"), "{text}");
+        let entry = text.lines().find_map(parse_summary_line).expect("one span-trace line");
+        assert_eq!(
+            entry,
+            SummaryEntry {
+                id: 0xabc,
+                total_us: 60,
+                forced: false,
+                dominant: Some("queue".to_string()),
+            }
+        );
+        assert!(parse_summary_line("trace spans: kept=1 cap=4").is_none());
+    }
+
+    #[test]
+    fn chrome_json_is_an_event_array_with_nested_spans() {
+        let c = TraceCollector::new(4, 0.0, 7);
+        c.begin(3, "mlp\"quoted", 0);
+        c.record(
+            3,
+            span(SPAN_BATCH, WORKER_TID_BASE + 1, 10, 50).with_args(&[("batch", 4), ("member", 0)]),
+        );
+        c.complete(3, 70);
+        let json = c.chrome_json();
+        assert!(json.starts_with('[') && json.ends_with(']'), "{json}");
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"M\""));
+        assert!(json.contains("\"tid\":11"));
+        assert!(json.contains("\"name\":\"worker-1\""));
+        assert!(json.contains("\"batch\":4"));
+        assert!(json.contains("\\\"quoted"));
+        assert!(json.contains("\"trace\":\"0x0000000000000003\""));
+        // no trailing comma before the closing bracket
+        assert!(!json.contains(",]"));
+    }
+
+    #[test]
+    fn span_buffer_stages_and_flushes_in_one_batch() {
+        let c = TraceCollector::new(4, 0.0, 7);
+        c.begin(2, "m", 0);
+        let mut buf = SpanBuffer::new();
+        buf.push(0, span(SPAN_QUEUE, BATCHER_TID, 0, 1)); // id 0 ignored
+        buf.push(2, span(SPAN_QUEUE, BATCHER_TID, 0, 7));
+        assert!(!buf.is_empty());
+        buf.flush(&c);
+        assert!(buf.is_empty());
+        c.complete(2, 10);
+        let t = &c.trees()[0];
+        assert_eq!(t.spans.iter().filter(|s| s.name == SPAN_QUEUE).count(), 1);
+    }
+}

@@ -250,6 +250,7 @@ fn malformed_frames_get_typed_errors_and_server_stays_healthy() {
             model: SYNTHETIC_MLP.into(),
             deadline_ms: 0,
             input: WireBatch::Images { n: 2, h: 28, w: 28, c: 1, data: vec![0.0; 13] },
+            trace_id: 0,
         };
         s.write_all(&frame.encode()).unwrap();
         expect_protocol_error(&mut s);

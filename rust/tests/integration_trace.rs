@@ -1,0 +1,280 @@
+//! End-to-end span-trace integration tests (loopback gateway): a
+//! sampled request yields a complete span tree whose per-stage
+//! durations are *exactly* the values the `rns_stage_latency_us`
+//! histograms observed (one measurement, two projections — the views
+//! cannot disagree), spans nest (admission inside the session root,
+//! compute stages inside the worker batch span), the `/trace` endpoint
+//! serves both the text summary and Chrome trace-event JSON, the
+//! health endpoints flip correctly across a drain (`/readyz` → 503
+//! while `/healthz` stays 200), and the default trace-off path records
+//! nothing at all.
+//!
+//! Every test serves `synthetic-mlp` (seeded in-process weights), so no
+//! `make artifacts` step is needed anywhere.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use rns_analog::analog::NoiseModel;
+use rns_analog::coordinator::metrics::stage_histogram;
+use rns_analog::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use rns_analog::net::{Client, Gateway, GatewayConfig};
+use rns_analog::nn::models::{Batch, SYNTHETIC_MLP};
+use rns_analog::tensor::Nhwc;
+use rns_analog::util::rng::Rng;
+use rns_analog::util::trace::{self, parse_summary_line, Span, TraceTree};
+
+fn rns_cfg(workers: usize) -> CoordinatorConfig {
+    let mut cfg = CoordinatorConfig::new(
+        BackendKind::Rns { bits: 8, redundant: 2, attempts: 2, noise: NoiseModel::None },
+        "/nonexistent",
+    );
+    cfg.workers = workers;
+    cfg.seed = 7;
+    cfg
+}
+
+fn gw_cfg(max_sessions: usize) -> GatewayConfig {
+    GatewayConfig {
+        listen_addr: "127.0.0.1:0".into(),
+        max_sessions,
+        idle_timeout: Duration::from_secs(10),
+        ..GatewayConfig::default()
+    }
+}
+
+/// Deterministic single-sample input #i.
+fn input(i: u64) -> Batch {
+    let mut rng = Rng::seed_from(0xBEEF ^ i);
+    Batch::Images(Nhwc::from_vec(
+        1,
+        28,
+        28,
+        1,
+        (0..28 * 28).map(|_| rng.uniform_f32(0.0, 1.0)).collect(),
+    ))
+}
+
+fn http_get(addr: &str, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("response");
+    let (headers, body) = out.split_once("\r\n\r\n").expect("header terminator");
+    (headers.to_string(), body.to_string())
+}
+
+fn span<'a>(tree: &'a TraceTree, name: &str) -> &'a Span {
+    tree.spans.iter().find(|s| s.name == name).unwrap_or_else(|| {
+        let names: Vec<&str> = tree.spans.iter().map(|s| s.name).collect();
+        panic!("no `{name}` span; tree has {names:?}")
+    })
+}
+
+/// The headline acceptance test: a client-sampled loopback request comes
+/// back with its trace id echoed, the collector keeps a span tree whose
+/// stage durations equal the histogram observations *exactly* (single
+/// request ⇒ histogram sum == the one sample), the spans nest, and both
+/// the admin frame and the HTTP endpoint serve the same trace.
+#[test]
+fn sampled_request_yields_span_tree_consistent_with_stage_histograms() {
+    const TRACE_ID: u64 = 0xABC;
+
+    let coord = Coordinator::start(rns_cfg(1));
+    let handle = coord.handle();
+    let collector = handle.trace_collector();
+    let registry = handle.metric_registry();
+    let gw = Gateway::start(coord, gw_cfg(4)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).expect("connect");
+    let id = client.submit_traced(SYNTHETIC_MLP, &input(0), TRACE_ID).expect("submit");
+    let reply = client.recv_infer().expect("reply");
+    assert_eq!(reply.id, id);
+    assert_eq!(reply.trace_id, TRACE_ID, "InferOk echoes the wire trace id");
+
+    // completion lands in the gateway sweep that flushed the reply; by
+    // the time the client has read it the tree is kept or microseconds
+    // away — poll briefly rather than assume the race is won
+    let mut waited = Duration::ZERO;
+    while collector.stats().kept == 0 && waited < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+        waited += Duration::from_millis(10);
+    }
+    let trees = collector.trees();
+    let tree = trees.iter().find(|t| t.id == TRACE_ID).expect("sampled tree kept");
+    assert!(!tree.forced, "clean request must not be marked forced");
+    assert_eq!(tree.model, SYNTHETIC_MLP);
+
+    // every tier contributed its spans (delivery is recorded after the
+    // fan-out and may lose the benign race with the reply flush, so it
+    // is deliberately not asserted here)
+    for name in [
+        trace::SPAN_SESSION,
+        trace::SPAN_ASSEMBLE,
+        trace::SPAN_ADMISSION,
+        trace::SPAN_QUEUE,
+        trace::SPAN_BATCH_FORM,
+        trace::SPAN_BATCH,
+        trace::SPAN_DAC_FORWARD,
+        trace::SPAN_ANALOG_GEMM,
+        trace::SPAN_ADC_CAPTURE,
+        trace::SPAN_DECODE,
+        trace::SPAN_WRITE_FLUSH,
+    ] {
+        span(tree, name);
+    }
+
+    // span durations ARE the histogram observations: one request means
+    // each stage histogram holds exactly one sample, and the span was
+    // built from the same u64 that sample observed
+    for (span_name, stage) in [
+        (trace::SPAN_ADMISSION, "admission"),
+        (trace::SPAN_QUEUE, "queue"),
+        (trace::SPAN_BATCH_FORM, "batch_form"),
+        (trace::SPAN_DAC_FORWARD, "dac_forward"),
+        (trace::SPAN_ANALOG_GEMM, "analog_gemm"),
+        (trace::SPAN_ADC_CAPTURE, "adc_capture"),
+        (trace::SPAN_DECODE, "decode"),
+    ] {
+        let h = stage_histogram(&registry, stage);
+        assert_eq!(h.count(), 1, "exactly one `{stage}` observation");
+        assert_eq!(
+            span(tree, span_name).dur_us,
+            h.sum(),
+            "`{span_name}` span duration == `{stage}` histogram sum"
+        );
+    }
+
+    // nesting: the synthesized session root contains every span, and
+    // each compute stage lies inside its worker's batch span
+    let root = &tree.spans[0];
+    assert_eq!(root.name, trace::SPAN_SESSION);
+    assert_eq!(root.start_us, tree.start_us);
+    assert_eq!(root.dur_us, tree.total_us);
+    for s in &tree.spans {
+        assert!(
+            s.start_us >= root.start_us && s.end_us() <= root.end_us(),
+            "`{}` [{}..{}] escapes session [{}..{}]",
+            s.name,
+            s.start_us,
+            s.end_us(),
+            root.start_us,
+            root.end_us()
+        );
+    }
+    let batch = span(tree, trace::SPAN_BATCH).clone();
+    for name in [
+        trace::SPAN_DAC_FORWARD,
+        trace::SPAN_ANALOG_GEMM,
+        trace::SPAN_ADC_CAPTURE,
+        trace::SPAN_DECODE,
+    ] {
+        let s = span(tree, name);
+        assert!(
+            s.start_us >= batch.start_us && s.end_us() <= batch.end_us(),
+            "`{}` [{}..{}] escapes batch [{}..{}]",
+            s.name,
+            s.start_us,
+            s.end_us(),
+            batch.start_us,
+            batch.end_us()
+        );
+    }
+
+    // the admin wire frame serves a summary line the loadgen join parses
+    let text = client.trace_spans().expect("trace spans report");
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("span-trace: "))
+        .unwrap_or_else(|| panic!("no span-trace line in:\n{text}"));
+    let entry = parse_summary_line(line).expect("parseable summary line");
+    assert_eq!(entry.id, TRACE_ID);
+    assert_eq!(entry.total_us, tree.total_us);
+    assert!(!entry.forced);
+    assert!(entry.dominant.is_some(), "a completed tree names its dominant stage");
+
+    // ... and the HTTP endpoint serves the same trace, both renderings
+    let (headers, body) = http_get(&addr, "/trace");
+    assert!(headers.contains("200"), "{headers}");
+    assert!(body.contains("span-trace: id=0x0000000000000abc"), "{body}");
+    let (headers, body) = http_get(&addr, "/trace?format=chrome");
+    assert!(headers.contains("200"), "{headers}");
+    assert!(headers.contains("application/json"), "{headers}");
+    let trimmed = body.trim();
+    assert!(trimmed.starts_with('[') && trimmed.ends_with(']'), "JSON array:\n{body}");
+    assert!(body.contains("\"name\":\"session\""), "{body}");
+    assert!(body.contains("\"ph\":\"X\""), "{body}");
+    assert!(body.contains("\"name\":\"analog_gemm\""), "{body}");
+
+    client.close();
+    let report = gw.shutdown();
+    assert!(report.contains("failures=0"), "{report}");
+}
+
+/// Liveness vs readiness across a drain: `/healthz` answers 200 for as
+/// long as the process serves HTTP at all, while `/readyz` flips to 503
+/// the moment the gateway starts draining.
+#[test]
+fn readyz_flips_to_503_during_drain_while_healthz_stays_200() {
+    let gw = Gateway::start(Coordinator::start(rns_cfg(1)), gw_cfg(4)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let (headers, body) = http_get(&addr, "/healthz");
+    assert!(headers.contains("200"), "{headers}");
+    assert_eq!(body, "ok\n");
+    let (headers, body) = http_get(&addr, "/readyz");
+    assert!(headers.contains("200"), "{headers}");
+    assert_eq!(body, "ready\n");
+    // the hint on unknown paths advertises the health endpoints
+    let (headers, body) = http_get(&addr, "/nope");
+    assert!(headers.contains("404"), "{headers}");
+    assert!(body.contains("/healthz"), "{body}");
+
+    // remote drain: the Shutdown frame sets draining before its Ack is
+    // written, so readiness is already false when the reply lands
+    let mut client = Client::connect(&addr).expect("connect");
+    let info = client.shutdown_server().expect("shutdown frame");
+    assert!(info.contains("draining"), "{info}");
+
+    let (headers, body) = http_get(&addr, "/readyz");
+    assert!(headers.contains("503"), "not ready while draining: {headers}");
+    assert_eq!(body, "draining\n");
+    let (headers, body) = http_get(&addr, "/healthz");
+    assert!(headers.contains("200"), "alive while draining: {headers}");
+    assert_eq!(body, "ok\n");
+
+    assert!(gw.wait_shutdown(Some(Duration::from_secs(10))), "shutdown signal received");
+    client.close();
+    let report = gw.shutdown();
+    assert!(report.contains("failures=0"), "{report}");
+}
+
+/// The default path samples nothing: an untraced request leaves the
+/// collector empty and the reply carries trace id 0 — the trace-off
+/// wire bytes and behavior match the pre-tracing protocol.
+#[test]
+fn trace_off_default_records_nothing() {
+    let coord = Coordinator::start(rns_cfg(1));
+    let handle = coord.handle();
+    let collector = handle.trace_collector();
+    let gw = Gateway::start(coord, gw_cfg(4)).expect("gateway");
+    let addr = gw.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).expect("connect");
+    let reply = client.infer(SYNTHETIC_MLP, &input(1)).expect("infer");
+    assert_eq!(reply.trace_id, 0, "sampling defaults off");
+
+    let stats = collector.stats();
+    assert_eq!(stats.sampled, 0, "no server-side sampling at trace_sample=0");
+    assert_eq!(stats.kept, 0, "no trees kept");
+    assert_eq!(stats.pending, 0, "no trees pending");
+    let text = client.trace_spans().expect("trace spans report");
+    assert!(!text.contains("span-trace: "), "{text}");
+
+    client.close();
+    let report = gw.shutdown();
+    assert!(report.contains("failures=0"), "{report}");
+}

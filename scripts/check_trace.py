@@ -1,0 +1,167 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event export from `GET /trace?format=chrome`.
+
+CI fetches the live gateway's span-trace export mid-run and pipes the
+body through this script, which fails on malformed output rather than
+trusting a 200 status: the body must be a JSON array; every `"ph":"X"`
+complete event must carry numeric `ts`/`dur`, an integer `tid`, a
+non-empty `name`, and an `args.trace` id to group by; within each trace
+the synthesized `session` span must contain every other span, and the
+four compute-stage spans must nest inside their worker `batch` span.
+
+Gate mode: at least `--min-traces` traces (default 1) must carry the
+full serving pipeline — session, assemble, admission, queue,
+batch_form, batch, dac_forward, analog_gemm, adc_capture and decode —
+proving a sampled request actually traversed every tier during the
+smoke run, not just that the endpoint returned syntactically valid
+JSON.  (`delivery` and `write_flush` are deliberately not required:
+both are recorded after the reply is in flight and may lose their
+benign race with trace completion.)
+
+Usage:
+    python3 scripts/check_trace.py trace.json
+    curl -s "$URL/trace?format=chrome" | python3 scripts/check_trace.py -
+"""
+
+import argparse
+import json
+import sys
+
+# every trace that counts toward --min-traces must carry all of these
+PIPELINE_STAGES = (
+    "session",
+    "assemble",
+    "admission",
+    "queue",
+    "batch_form",
+    "batch",
+    "dac_forward",
+    "analog_gemm",
+    "adc_capture",
+    "decode",
+)
+COMPUTE_STAGES = ("dac_forward", "analog_gemm", "adc_capture", "decode")
+
+
+def check_event(i, ev, errors):
+    """Structural checks on one event; returns True if usable as a span."""
+    if not isinstance(ev, dict):
+        errors.append(f"event {i}: not an object")
+        return False
+    ph = ev.get("ph")
+    if ph not in ("X", "M"):
+        errors.append(f"event {i}: unknown phase `{ph}`")
+        return False
+    if not isinstance(ev.get("tid"), int):
+        errors.append(f"event {i}: missing integer `tid`")
+        return False
+    if ph == "M":
+        return False  # thread-name metadata: valid, but not a span
+    name = ev.get("name")
+    if not isinstance(name, str) or not name:
+        errors.append(f"event {i}: X event without a name")
+        return False
+    for key in ("ts", "dur"):
+        v = ev.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+            errors.append(f"event {i} ({name}): bad `{key}` {v!r}")
+            return False
+    trace = ev.get("args", {}).get("trace") if isinstance(ev.get("args"), dict) else None
+    if not isinstance(trace, str) or not trace.startswith("0x"):
+        errors.append(f"event {i} ({name}): missing `args.trace` id")
+        return False
+    return True
+
+
+def within(inner, outer):
+    return (
+        inner["ts"] >= outer["ts"]
+        and inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+    )
+
+
+def check_nesting(trace_id, spans, errors):
+    by_name = {}
+    for s in spans:
+        by_name.setdefault(s["name"], []).append(s)
+    sessions = by_name.get("session", [])
+    if len(sessions) != 1:
+        errors.append(f"trace {trace_id}: {len(sessions)} session roots (want 1)")
+        return
+    root = sessions[0]
+    for s in spans:
+        if not within(s, root):
+            errors.append(
+                f"trace {trace_id}: `{s['name']}` "
+                f"[{s['ts']}..{s['ts'] + s['dur']}] escapes session "
+                f"[{root['ts']}..{root['ts'] + root['dur']}]"
+            )
+    for batch in by_name.get("batch", []):
+        for stage in COMPUTE_STAGES:
+            for s in by_name.get(stage, []):
+                if s["tid"] == batch["tid"] and not within(s, batch):
+                    errors.append(
+                        f"trace {trace_id}: `{stage}` escapes its "
+                        f"worker batch span on tid {s['tid']}"
+                    )
+
+
+def check(text, min_traces):
+    errors = []
+    try:
+        events = json.loads(text)
+    except json.JSONDecodeError as e:
+        return [f"body is not valid JSON: {e}"], 0, 0
+    if not isinstance(events, list):
+        return ["top-level JSON value is not an array"], 0, 0
+
+    traces = {}  # trace id -> [span event]
+    n_spans = 0
+    for i, ev in enumerate(events):
+        if not check_event(i, ev, errors):
+            continue
+        n_spans += 1
+        traces.setdefault(ev["args"]["trace"], []).append(ev)
+
+    complete = 0
+    for trace_id, spans in sorted(traces.items()):
+        check_nesting(trace_id, spans, errors)
+        names = {s["name"] for s in spans}
+        missing = [st for st in PIPELINE_STAGES if st not in names]
+        if not missing:
+            complete += 1
+    if complete < min_traces:
+        errors.append(
+            f"only {complete} trace(s) carry the full pipeline "
+            f"{PIPELINE_STAGES} (want >= {min_traces}); "
+            f"traces seen: {sorted(traces)}"
+        )
+    return errors, len(traces), n_spans
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="chrome trace JSON file, or `-` for stdin")
+    ap.add_argument(
+        "--min-traces",
+        type=int,
+        default=1,
+        metavar="N",
+        help="fail unless N traces carry every pipeline stage (default 1)",
+    )
+    args = ap.parse_args()
+    if args.path == "-":
+        text = sys.stdin.read()
+    else:
+        with open(args.path) as f:
+            text = f.read()
+    errors, n_traces, n_spans = check(text, args.min_traces)
+    if errors:
+        for e in errors:
+            print(f"trace error: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"trace OK: {n_traces} traces, {n_spans} spans")
+
+
+if __name__ == "__main__":
+    main()
